@@ -1,0 +1,71 @@
+//! Experimental-dataset scenario (paper §4.1.1): segment a simulated
+//! beamline geological stack (strata + fractures + inclusions), compare
+//! DPP-PMRF to the reference engine (Fig. 2 protocol — the reference
+//! result is the scoring target), and dump the neighborhood
+//! demographics the paper uses to explain scaling behaviour (§4.3.3).
+//!
+//!     cargo run --release --example experimental_geology
+
+use dpp_pmrf::config::{DatasetConfig, DatasetKind, EngineKind, RunConfig};
+use dpp_pmrf::coordinator::Coordinator;
+use dpp_pmrf::image;
+use dpp_pmrf::metrics::{self, Confusion};
+
+fn main() -> anyhow::Result<()> {
+    let dataset_cfg = DatasetConfig {
+        kind: DatasetKind::Experimental,
+        width: 192,
+        height: 192,
+        slices: 2,
+        ..Default::default()
+    };
+    let ds = image::generate(&dataset_cfg);
+
+    // Demographics of both datasets: the experimental graph must be
+    // denser with a more irregular neighborhood-size distribution.
+    for kind in [DatasetKind::Synthetic, DatasetKind::Experimental] {
+        let cfg = RunConfig {
+            dataset: DatasetConfig { kind, ..dataset_cfg.clone() },
+            ..Default::default()
+        };
+        let d = image::generate(&cfg.dataset);
+        let coord = Coordinator::new(cfg)?;
+        let (seg, model) = coord.build_slice_model(&d.input, 0);
+        let hist = model.hoods.size_histogram(4);
+        println!(
+            "{:<13} regions {:>6}  edges {:>6}  hoods {:>6}  \
+             hood-size mean {:>5.1} max {:>4}  irregularity {:.2}",
+            kind.name(),
+            seg.num_regions,
+            model.graph.num_edges(),
+            model.hoods.num_hoods(),
+            hist.mean(),
+            hist.max,
+            hist.irregularity()
+        );
+    }
+
+    // Reference run (the scoring target), then DPP.
+    let mut outputs = Vec::new();
+    for engine in [EngineKind::Reference, EngineKind::Dpp] {
+        let cfg = RunConfig {
+            dataset: dataset_cfg.clone(),
+            engine,
+            ..Default::default()
+        };
+        let coord = Coordinator::new(cfg)?;
+        let report = coord.run(&ds)?;
+        println!(
+            "{:<10} mean opt {:.3}s  porosity {:.3}",
+            report.engine,
+            report.mean_opt_secs(),
+            report.porosity
+        );
+        outputs.push(report.output);
+    }
+    let c = Confusion::from_volumes(&outputs[1], &outputs[0]);
+    println!("DPP vs reference: {}", metrics::summary(&c));
+    println!("paper (experimental): precision 97.2%  recall 95.2%  \
+              accuracy 96.8%");
+    Ok(())
+}

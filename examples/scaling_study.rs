@@ -1,0 +1,67 @@
+//! Mini strong-scaling study (the interactive cousin of
+//! `benches/fig4_strong_scaling.rs`): reference vs DPP engine across a
+//! thread sweep on one dataset, printed as a speedup table.
+//!
+//!     cargo run --release --example scaling_study [synthetic|experimental]
+
+use dpp_pmrf::bench_support::{prepare_models, thread_sweep, workload, Scale};
+use dpp_pmrf::config::DatasetKind;
+use dpp_pmrf::dpp::Backend;
+use dpp_pmrf::mrf::{dpp::DppEngine, reference::ReferenceEngine,
+                    serial::SerialEngine, Engine};
+use dpp_pmrf::pool::Pool;
+use dpp_pmrf::util::{measure, Timer};
+
+fn main() -> anyhow::Result<()> {
+    let kind = match std::env::args().nth(1).as_deref() {
+        Some("experimental") => DatasetKind::Experimental,
+        _ => DatasetKind::Synthetic,
+    };
+    let scale = Scale::from_env();
+    println!("dataset: {} @ {}x{}x{}", kind.name(), scale.width,
+             scale.height, scale.slices);
+
+    let t = Timer::start();
+    let (ds, cfg) = workload(kind, scale);
+    let models = prepare_models(&ds, &cfg);
+    println!("prepared {} slice models in {:.2}s\n", models.len(),
+             t.elapsed_secs());
+
+    let serial = measure(1, scale.reps, || {
+        for m in &models {
+            SerialEngine.run(m, &cfg.mrf);
+        }
+    });
+    println!("serial baseline: {:.3}s", serial.median);
+    println!("\n{:>8} {:>14} {:>14} {:>9}", "threads", "reference(s)",
+             "dpp(s)", "dpp-gain");
+    for threads in thread_sweep() {
+        let pool = Pool::new(threads);
+        let refeng = ReferenceEngine::new(pool.clone());
+        let r = measure(1, scale.reps, || {
+            for m in &models {
+                refeng.run(m, &cfg.mrf);
+            }
+        });
+        let dppeng = DppEngine::new(if threads == 1 {
+            Backend::Serial
+        } else {
+            Backend::threaded(pool.clone())
+        });
+        let d = measure(1, scale.reps, || {
+            for m in &models {
+                dppeng.run(m, &cfg.mrf);
+            }
+        });
+        println!(
+            "{:>8} {:>10.3} ({:>4.1}x) {:>6.3} ({:>4.1}x) {:>8.2}x",
+            threads,
+            r.median,
+            serial.median / r.median,
+            d.median,
+            serial.median / d.median,
+            r.median / d.median
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,144 @@
+"""AOT bridge: lower the L2 EM step to HLO *text* artifacts.
+
+HLO text — not ``HloModuleProto.serialize()`` — is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids that the
+xla_extension 0.5.1 used by the rust `xla` crate rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+The EM step is shape-monomorphic, so we emit one artifact per size
+*bucket* plus a ``manifest.json`` the rust runtime uses to pick the
+smallest bucket that fits a batch (padding the rest):
+
+    artifacts/
+      em_step_n<elems>_h<hoods>.hlo.txt
+      model.hlo.txt          (alias of the smallest bucket, Makefile dep)
+      manifest.json
+
+Usage: ``python -m compile.aot --out ../artifacts/model.hlo.txt``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import em_loop_fn, em_step_fn
+
+# (elements, hoods) buckets. Elements must be multiples of 1024 (kernel
+# tile); hoods = elements/2 upper-bounds any real batch (every hood has
+# >= 2 member instances). 2x spacing keeps the mean padding waste at
+# ~1.5x (§Perf: padded-lane compute dominates XLA-path cost on CPU).
+BUCKETS = [
+    (4096, 2048),
+    (8192, 4096),
+    (16384, 8192),
+    (32768, 16384),
+    (65536, 32768),
+    (131072, 65536),
+    (262144, 131072),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(n: int, num_hoods: int) -> str:
+    f32 = jnp.float32
+    spec_n = jax.ShapeDtypeStruct((n,), f32)
+    spec_i = jax.ShapeDtypeStruct((n,), jnp.int32)
+    spec_p = jax.ShapeDtypeStruct((5,), f32)
+    lowered = jax.jit(em_step_fn(num_hoods)).lower(
+        spec_n, spec_n, spec_i, spec_n, spec_p
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_loop_bucket(n: int, num_hoods: int, num_verts: int) -> str:
+    """The in-device K-iteration MAP loop (§Perf L2). Vertex capacity
+    equals the element capacity (every vertex owns >= 1 element)."""
+    f32 = jnp.float32
+    spec_n = jax.ShapeDtypeStruct((n,), f32)
+    spec_v = jax.ShapeDtypeStruct((num_verts,), f32)
+    spec_i = jax.ShapeDtypeStruct((n,), jnp.int32)
+    spec_k = jax.ShapeDtypeStruct((1,), jnp.int32)
+    spec_p = jax.ShapeDtypeStruct((5,), f32)
+    lowered = jax.jit(em_loop_fn(num_hoods, num_verts)).lower(
+        spec_n, spec_v, spec_i, spec_i, spec_n, spec_i, spec_i, spec_k,
+        spec_p,
+    )
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="alias path for the smallest bucket artifact")
+    ap.add_argument("--buckets", default=None,
+                    help="comma list of n:h overrides, e.g. 4096:2048")
+    args = ap.parse_args()
+
+    buckets = BUCKETS
+    if args.buckets:
+        buckets = [tuple(int(x) for x in b.split(":"))
+                   for b in args.buckets.split(",")]
+
+    out_dir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"version": 2, "entry": "main", "buckets": [],
+                "loop_buckets": []}
+    first_path = None
+    for n, h in buckets:
+        text = lower_bucket(n, h)
+        name = f"em_step_n{n}_h{h}.hlo.txt"
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["buckets"].append({
+            "elems": n,
+            "hoods": h,
+            "file": name,
+            "outputs": ["new_label[n]", "emin[n]", "hood_energy[h]",
+                        "stats[6]", "total[1]"],
+        })
+        if first_path is None:
+            first_path = path
+        print(f"wrote {path} ({len(text)} chars)")
+
+        v = n  # vertex capacity (see lower_loop_bucket)
+        text = lower_loop_bucket(n, h, v)
+        name = f"em_loop_n{n}_h{h}_v{v}.hlo.txt"
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["loop_buckets"].append({
+            "elems": n,
+            "hoods": h,
+            "verts": v,
+            "file": name,
+            "outputs": ["label_v[v]", "hood_energy[h]", "stats[6]",
+                        "total[1]"],
+        })
+        print(f"wrote {path} ({len(text)} chars)")
+
+    shutil.copyfile(first_path, args.out)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {args.out} (alias) and manifest.json")
+
+
+if __name__ == "__main__":
+    main()

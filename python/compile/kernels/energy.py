@@ -1,0 +1,136 @@
+"""L1 — Pallas kernel for the DPP-PMRF energy hot spot.
+
+The paper's single most compute-heavy DPP is the *Map* that evaluates the
+MRF energy function for every replicated neighborhood vertex, immediately
+followed by the per-vertex minimum over the two class labels (§3.2.2,
+"Compute Energy Function" + "Compute Minimum Vertex and Label Energies").
+In the paper those are separate primitives (Map, then SortByKey +
+ReduceByKey<Min>); on the accelerator path we *fuse* them: one kernel
+computes both label energies in registers and writes only the per-vertex
+minimum energy and argmin label. The label pair never round-trips to HBM.
+
+TPU adaptation (see DESIGN.md §Hardware-Adaptation): the replicated
+vertex array is reshaped to [rows, 128] (lane-aligned) and tiled in
+(8, 128) VMEM blocks over a 1D grid; all per-element operands stream
+through VMEM, while the five scalar parameters (mu0, mu1, sigma0,
+sigma1, beta) ride in a single small block replicated to every tile.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is what the AOT
+bridge ships to the rust runtime.
+
+Energy model (must stay in lockstep with ``rust/src/mrf/energy.rs`` and
+``kernels/ref.py``):
+
+    E(v, l) = (y_v - mu_l)^2 / (2 sigma_l^2) + ln(sigma_l)
+              + beta * disagree(v, l)
+
+where ``disagree(v, l)`` is the number of *other* members of v's
+neighborhood whose current label differs from l:
+
+    disagree(v, 0) = ones_h - label_v
+    disagree(v, 1) = (size_h - ones_h) - (1 - label_v)
+
+with ``ones_h`` = count of members of v's hood currently labeled 1 and
+``size_h`` = member count of v's hood, both gathered per element by L2.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile geometry: TPU-native (sublane, lane) = (8, 128) f32 tile.
+BLOCK_ROWS = 8
+LANES = 128
+BLOCK_ELEMS = BLOCK_ROWS * LANES
+
+
+def _energy_min_kernel(y_ref, label_ref, ones_ref, size_ref, params_ref,
+                       emin_ref, argmin_ref):
+    """Fused energy Map + per-vertex two-label Min for one (8,128) tile."""
+    y = y_ref[...]
+    lbl = label_ref[...]
+    ones_h = ones_ref[...]
+    size_h = size_ref[...]
+
+    mu0 = params_ref[0, 0]
+    mu1 = params_ref[0, 1]
+    sig0 = params_ref[0, 2]
+    sig1 = params_ref[0, 3]
+    beta = params_ref[0, 4]
+
+    # Data term: Gaussian negative log-likelihood per label.
+    d0 = y - mu0
+    d1 = y - mu1
+    e0 = d0 * d0 / (2.0 * sig0 * sig0) + jnp.log(sig0)
+    e1 = d1 * d1 / (2.0 * sig1 * sig1) + jnp.log(sig1)
+
+    # Smoothness (Potts over the hood, self-contribution removed).
+    dis0 = ones_h - lbl
+    dis1 = (size_h - ones_h) - (1.0 - lbl)
+    e0 = e0 + beta * dis0
+    e1 = e1 + beta * dis1
+
+    take1 = e1 < e0
+    emin_ref[...] = jnp.where(take1, e1, e0)
+    argmin_ref[...] = jnp.where(take1, jnp.ones_like(y), jnp.zeros_like(y))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def energy_min(y, label, ones_h, size_h, params):
+    """Run the fused energy/min kernel over flat f32[n] element arrays.
+
+    Args:
+      y:      f32[n]  region mean intensity per hood-member instance.
+      label:  f32[n]  current label (0.0 / 1.0) per instance.
+      ones_h: f32[n]  per-instance gather of its hood's labeled-1 count.
+      size_h: f32[n]  per-instance gather of its hood's member count.
+      params: f32[5]  (mu0, mu1, sigma0, sigma1, beta).
+
+    Returns:
+      (emin f32[n], argmin f32[n]) — per-vertex minimum energy and the
+      label (0.0/1.0) attaining it. ``n`` must be a multiple of 1024.
+    """
+    n = y.shape[0]
+    if n % BLOCK_ELEMS != 0:
+        raise ValueError(f"n={n} must be a multiple of {BLOCK_ELEMS}")
+    rows = n // LANES
+    grid = rows // BLOCK_ROWS
+
+    shape2d = (rows, LANES)
+    y2 = y.reshape(shape2d)
+    l2 = label.reshape(shape2d)
+    o2 = ones_h.reshape(shape2d)
+    s2 = size_h.reshape(shape2d)
+    p2 = params.reshape(1, 5)
+
+    elem_spec = pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))
+    # Whole (tiny) parameter vector visible to every tile.
+    param_spec = pl.BlockSpec((1, 5), lambda i: (0, 0))
+
+    emin, argmin = pl.pallas_call(
+        _energy_min_kernel,
+        grid=(grid,),
+        in_specs=[elem_spec, elem_spec, elem_spec, elem_spec, param_spec],
+        out_specs=[elem_spec, elem_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(shape2d, jnp.float32),
+            jax.ShapeDtypeStruct(shape2d, jnp.float32),
+        ],
+        interpret=True,
+    )(y2, l2, o2, s2, p2)
+    return emin.reshape(n), argmin.reshape(n)
+
+
+def vmem_bytes_per_tile() -> int:
+    """Static VMEM footprint estimate for one grid step (DESIGN.md §Perf).
+
+    4 f32 input tiles + 2 f32 output tiles of (8,128), plus the 5-float
+    parameter block; double-buffered inputs would add another 4 tiles.
+    """
+    tile = BLOCK_ELEMS * 4
+    return 4 * tile + 2 * tile + 5 * 4

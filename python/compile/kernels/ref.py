@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the fused energy/min kernel.
+
+This is the correctness reference the Pallas kernel (``energy.py``) and
+the rust engines (``rust/src/mrf/energy.rs``) are tested against. Keep
+the math literal and boring — no fusion tricks here.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def energy_both(y, label, ones_h, size_h, params):
+    """Energies for both labels; returns (e0 f32[n], e1 f32[n])."""
+    mu0, mu1, sig0, sig1, beta = (params[0], params[1], params[2],
+                                  params[3], params[4])
+    e0 = (y - mu0) ** 2 / (2.0 * sig0 ** 2) + jnp.log(sig0)
+    e1 = (y - mu1) ** 2 / (2.0 * sig1 ** 2) + jnp.log(sig1)
+    dis0 = ones_h - label
+    dis1 = (size_h - ones_h) - (1.0 - label)
+    return e0 + beta * dis0, e1 + beta * dis1
+
+
+def energy_min_ref(y, label, ones_h, size_h, params):
+    """Oracle for ``energy.energy_min``: (emin f32[n], argmin f32[n])."""
+    e0, e1 = energy_both(y, label, ones_h, size_h, params)
+    take1 = e1 < e0
+    emin = jnp.where(take1, e1, e0)
+    argmin = jnp.where(take1, 1.0, 0.0).astype(jnp.float32)
+    return emin, argmin

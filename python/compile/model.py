@@ -1,0 +1,181 @@
+"""L2 — the DPP-PMRF EM/MAP inner step as a single jax computation.
+
+One call of :func:`em_step` performs, for a padded batch of neighborhood
+member instances (the paper's replicated ``hoods`` array, §3.2.2):
+
+  1. per-hood label statistics   (ReduceByKey<Add>  -> segment_sum)
+  2. gather of hood stats back to elements (Gather  -> take)
+  3. fused energy Map + per-vertex two-label Min    (L1 Pallas kernel)
+  4. per-hood minimum-energy sums (ReduceByKey<Add> -> segment_sum)
+  5. global parameter-update statistics per label   (Reduce<Add>)
+
+The function is shape-monomorphic: ``n`` (element count, multiple of
+1024) and ``num_hoods`` are baked into each AOT artifact; the rust
+runtime picks the smallest bucket that fits and pads (see
+``rust/src/runtime/``). Convergence logic (MAP window, EM window) stays
+on the rust side — it is control flow over a handful of scalars.
+
+Inputs
+  y        f32[n]  region mean intensity per hood-member instance
+  label    f32[n]  current label (0/1) per instance
+  hood_id  i32[n]  owning neighborhood id; padding points at num_hoods-1
+  valid    f32[n]  1.0 for real elements, 0.0 for padding
+  params   f32[5]  (mu0, mu1, sigma0, sigma1, beta)
+
+Outputs (a 5-tuple; lowered with return_tuple=True)
+  new_label   f32[n]   argmin-energy label per instance
+  emin        f32[n]   per-instance minimum energy (the rust host needs
+                       it for the cross-hood per-vertex resolution)
+  hood_energy f32[H]   sum of per-instance min energies per hood
+  stats       f32[6]   (count0, sum_y0, sum_y2_0, count1, sum_y1, sum_y2_1)
+                       over instances, for the host-side mu/sigma update
+  total       f32[1]   global energy sum (EM convergence scalar)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import energy as energy_kernel
+
+
+def em_step(y, label, hood_id, valid, params, *, num_hoods: int):
+    """One MAP iteration over a padded element batch. See module docs."""
+    lv = label * valid
+    ones_h = jax.ops.segment_sum(lv, hood_id, num_segments=num_hoods)
+    size_h = jax.ops.segment_sum(valid, hood_id, num_segments=num_hoods)
+
+    # Gather the per-hood stats back to the element lanes.
+    ones_e = jnp.take(ones_h, hood_id)
+    size_e = jnp.take(size_h, hood_id)
+
+    emin, new_label = energy_kernel.energy_min(y, label, ones_e, size_e,
+                                               params)
+
+    emin_v = emin * valid
+    hood_energy = jax.ops.segment_sum(emin_v, hood_id,
+                                      num_segments=num_hoods)
+    total = jnp.sum(emin_v).reshape(1)
+
+    take1 = new_label * valid
+    take0 = (1.0 - new_label) * valid
+    stats = jnp.stack([
+        jnp.sum(take0),
+        jnp.sum(y * take0),
+        jnp.sum(y * y * take0),
+        jnp.sum(take1),
+        jnp.sum(y * take1),
+        jnp.sum(y * y * take1),
+    ])
+    return new_label, emin, hood_energy, stats, total
+
+
+def em_step_fn(num_hoods: int):
+    """Monomorphic closure over ``num_hoods`` suitable for jax.jit/lower."""
+
+    def fn(y, label, hood_id, valid, params):
+        return em_step(y, label, hood_id, valid, params,
+                       num_hoods=num_hoods)
+
+    return fn
+
+
+def em_loop(y, label_v, hood_id, members, valid, vert_elems, vert_seg, k,
+            params, *, num_hoods: int, num_verts: int):
+    """K MAP iterations fully in-device (§Perf L2: one dispatch per EM
+    iteration instead of one per MAP iteration).
+
+    Extra inputs vs :func:`em_step`:
+      label_v     f32[V]  per-VERTEX labels (carried through the loop)
+      members     i32[n]  element -> vertex id (label gather)
+      vert_elems  i32[n]  element ids grouped by vertex
+      vert_seg    i32[n]  vertex id per grouped slot (padding -> V-1)
+      k           i32[1]  MAP iteration count (dynamic fori_loop bound)
+
+    Per iteration: gather labels to elements; per-hood stats; fused
+    Pallas energy/min; per-vertex resolution via two segment_min passes
+    (minimum energy, then minimum label among exact-energy ties — the
+    same deterministic rule as the rust engines); labels update
+    in-device.
+
+    Returns (label_v f32[V], hood_energy f32[H], stats f32[6],
+    total f32[1]) from the final iteration.
+    """
+    n = y.shape[0]
+    size_h = jax.ops.segment_sum(valid, hood_id, num_segments=num_hoods)
+    size_e = jnp.take(size_h, hood_id)
+    # Slots of padded vertices contribute to the sacrificial segment.
+    slot_count = jax.ops.segment_sum(
+        jnp.ones((n,), jnp.float32), vert_seg, num_segments=num_verts)
+    has_elems = slot_count > 0.0
+
+    def body(_, carry):
+        label_v, _he, _stats, _total = carry
+        lbl_e = jnp.take(label_v, members) * valid
+        ones_h = jax.ops.segment_sum(lbl_e, hood_id,
+                                     num_segments=num_hoods)
+        ones_e = jnp.take(ones_h, hood_id)
+        emin, amin = energy_kernel.energy_min(y, lbl_e, ones_e, size_e,
+                                              params)
+        # Per-vertex min-energy resolution (ties -> label 0): pass 1
+        # finds each vertex's minimum energy; pass 2 takes the minimum
+        # label among the slots that attain it exactly.
+        emin_by_vert = jnp.take(emin, vert_elems)
+        amin_by_vert = jnp.take(amin, vert_elems)
+        best_e = jax.ops.segment_min(emin_by_vert, vert_seg,
+                                     num_segments=num_verts)
+        at_min = emin_by_vert == jnp.take(best_e, vert_seg)
+        label_cand = jnp.where(at_min, amin_by_vert, 2.0)
+        resolved = jax.ops.segment_min(label_cand, vert_seg,
+                                       num_segments=num_verts)
+        new_label_v = jnp.where(has_elems, resolved, label_v)
+
+        emin_v = emin * valid
+        hood_energy = jax.ops.segment_sum(emin_v, hood_id,
+                                          num_segments=num_hoods)
+        total = jnp.sum(emin_v).reshape(1)
+        take1 = amin * valid
+        take0 = (1.0 - amin) * valid
+        stats = jnp.stack([
+            jnp.sum(take0), jnp.sum(y * take0), jnp.sum(y * y * take0),
+            jnp.sum(take1), jnp.sum(y * take1), jnp.sum(y * y * take1),
+        ])
+        return new_label_v, hood_energy, stats, total
+
+    init = (
+        label_v,
+        jnp.zeros((num_hoods,), jnp.float32),
+        jnp.zeros((6,), jnp.float32),
+        jnp.zeros((1,), jnp.float32),
+    )
+    return jax.lax.fori_loop(0, k[0], body, init)
+
+
+def em_loop_fn(num_hoods: int, num_verts: int):
+    """Monomorphic closure suitable for jax.jit/lower."""
+
+    def fn(y, label_v, hood_id, members, valid, vert_elems, vert_seg, k,
+           params):
+        return em_loop(y, label_v, hood_id, members, valid, vert_elems,
+                       vert_seg, k, params, num_hoods=num_hoods,
+                       num_verts=num_verts)
+
+    return fn
+
+
+def update_params(stats, sigma_floor: float = 1.0):
+    """Host-side mu/sigma re-estimation from ``stats`` (mirrors rust).
+
+    Exposed in python for the oracle tests; the production path lives in
+    ``rust/src/mrf/params.rs``.
+    """
+    out = []
+    for l in (0, 1):
+        cnt, s, s2 = stats[3 * l], stats[3 * l + 1], stats[3 * l + 2]
+        cnt = jnp.maximum(cnt, 1.0)
+        mu = s / cnt
+        var = jnp.maximum(s2 / cnt - mu * mu, 0.0)
+        sigma = jnp.maximum(jnp.sqrt(var), sigma_floor)
+        out.extend([mu, sigma])
+    return jnp.stack(out)  # (mu0, sigma0, mu1, sigma1)

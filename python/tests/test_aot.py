@@ -1,0 +1,57 @@
+"""AOT bridge sanity: lowering emits HLO text the rust loader can parse.
+
+We cannot run the rust loader from pytest, but we can assert the
+artifact invariants the loader depends on: non-empty HLO text with an
+ENTRY computation, a tupled 4-output root, and the expected parameter
+shapes baked per bucket.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile.aot import BUCKETS, lower_bucket
+
+
+def test_lower_smallest_bucket_shapes():
+    n, h = 2048, 1024  # tiny non-standard bucket keeps the test fast
+    text = lower_bucket(n, h)
+    assert "ENTRY" in text and "ROOT" in text
+    # 5 parameters with the right element counts.
+    assert f"f32[{n}]" in text
+    assert "s32[%d]" % n in text or f"s32[{n}]" in text
+    assert "f32[5]" in text
+    # outputs: label[n], hood_energy[h], stats[6], total[1] in root tuple.
+    assert f"f32[{h}]" in text
+    assert "f32[6]" in text
+    assert "f32[1]" in text
+
+
+def test_bucket_table_is_sane():
+    prev = 0
+    for n, h in BUCKETS:
+        assert n % 1024 == 0, "kernel tile alignment"
+        assert h <= n // 2, "every hood has >= 2 member instances"
+        assert n > prev, "buckets strictly increasing"
+        prev = n
+
+
+@pytest.mark.slow
+def test_aot_main_writes_manifest(tmp_path):
+    out = tmp_path / "model.hlo.txt"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.dirname(os.path.dirname(__file__))
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out),
+         "--buckets", "2048:1024"],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(__file__)),
+        env=env,
+    )
+    assert out.exists()
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    assert man["buckets"][0]["elems"] == 2048
+    assert (tmp_path / man["buckets"][0]["file"]).exists()

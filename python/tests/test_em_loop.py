@@ -1,0 +1,143 @@
+"""em_loop (in-device K-iteration MAP loop) vs an explicit python loop
+over the same per-iteration semantics, including the per-vertex
+min-energy/tie-break resolution the rust engines implement."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.energy import BLOCK_ELEMS
+from compile.kernels.ref import energy_min_ref
+from compile.model import em_loop
+
+
+def np_reference_loop(y, label_v, hood_id, members, valid, vert_elems,
+                      vert_seg, k, params, num_hoods, num_verts):
+    """Literal numpy restatement of one..k MAP iterations."""
+    label_v = label_v.copy()
+    he = np.zeros(num_hoods)
+    stats = np.zeros(6)
+    total = 0.0
+    n = y.shape[0]
+    size_h = np.zeros(num_hoods)
+    for i in range(n):
+        size_h[hood_id[i]] += valid[i]
+    for _ in range(k):
+        lbl_e = label_v[members] * valid
+        ones_h = np.zeros(num_hoods)
+        for i in range(n):
+            ones_h[hood_id[i]] += lbl_e[i]
+        emin, amin = energy_min_ref(
+            jnp.asarray(y), jnp.asarray(lbl_e),
+            jnp.asarray(ones_h[hood_id].astype(np.float32)),
+            jnp.asarray(size_h[hood_id].astype(np.float32)),
+            jnp.asarray(params))
+        emin = np.asarray(emin)
+        amin = np.asarray(amin)
+        # vertex resolution: min energy, tie -> min label
+        new_label = label_v.copy()
+        best_e = np.full(num_verts, np.inf)
+        for s in range(n):
+            v = vert_seg[s]
+            best_e[v] = min(best_e[v], emin[vert_elems[s]])
+        best_l = np.full(num_verts, 2.0)
+        for s in range(n):
+            v = vert_seg[s]
+            if emin[vert_elems[s]] == best_e[v]:
+                best_l[v] = min(best_l[v], amin[vert_elems[s]])
+        for v in range(num_verts):
+            if np.isfinite(best_e[v]):
+                new_label[v] = best_l[v]
+        label_v = new_label
+        he = np.zeros(num_hoods)
+        for i in range(n):
+            he[hood_id[i]] += emin[i] * valid[i]
+        total = float(np.sum(emin * valid))
+        stats = np.zeros(6)
+        for i in range(n):
+            l = int(amin[i])
+            stats[3 * l] += valid[i]
+            stats[3 * l + 1] += y[i] * valid[i]
+            stats[3 * l + 2] += y[i] * y[i] * valid[i]
+    return label_v, he, stats, np.array([total])
+
+
+def _mk_problem(rng, n, num_hoods, num_verts, pad_frac=0.0):
+    y = rng.uniform(0, 255, n).astype(np.float32)
+    label_v = rng.integers(0, 2, num_verts).astype(np.float32)
+    hood_id = rng.integers(0, max(num_hoods - 1, 1), n).astype(np.int32)
+    members = rng.integers(0, max(num_verts - 1, 1), n).astype(np.int32)
+    valid = np.ones(n, np.float32)
+    n_pad = int(n * pad_frac)
+    if n_pad:
+        valid[n - n_pad:] = 0.0
+        hood_id[n - n_pad:] = num_hoods - 1
+    # vertex grouping of the REAL elements; padded slots -> sacrificial
+    # vertex num_verts-1
+    order = np.argsort(members[: n - n_pad], kind="stable")
+    vert_elems = np.concatenate(
+        [order, np.zeros(n_pad, dtype=np.int64)]).astype(np.int32)
+    vert_seg = np.concatenate([
+        members[order],
+        np.full(n_pad, num_verts - 1, dtype=np.int32),
+    ]).astype(np.int32)
+    params = np.array([40.0, 180.0, 12.0, 30.0, 0.5], np.float32)
+    return y, label_v, hood_id, members, valid, vert_elems, vert_seg, params
+
+
+def _run(seed, k, pad_frac=0.0):
+    rng = np.random.default_rng(seed)
+    n, num_hoods, num_verts = BLOCK_ELEMS, 64, 200
+    (y, label_v, hood_id, members, valid, vert_elems, vert_seg,
+     params) = _mk_problem(rng, n, num_hoods, num_verts, pad_frac)
+
+    got = em_loop(
+        jnp.asarray(y), jnp.asarray(label_v), jnp.asarray(hood_id),
+        jnp.asarray(members), jnp.asarray(valid), jnp.asarray(vert_elems),
+        jnp.asarray(vert_seg), jnp.asarray([k], dtype=jnp.int32),
+        jnp.asarray(params), num_hoods=num_hoods, num_verts=num_verts)
+    want = np_reference_loop(y, label_v, hood_id, members, valid,
+                             vert_elems, vert_seg, k, params, num_hoods,
+                             num_verts)
+    gl, ghe, gstats, gtotal = map(np.asarray, got)
+    wl, whe, wstats, wtotal = want
+    # padded slots may have perturbed the sacrificial vertex; ignore it
+    np.testing.assert_array_equal(gl[: num_verts - 1],
+                                  wl[: num_verts - 1])
+    np.testing.assert_allclose(ghe[: num_hoods - 1],
+                               whe[: num_hoods - 1], rtol=1e-4, atol=1e-2)
+    np.testing.assert_allclose(gstats, wstats, rtol=1e-4, atol=1e-1)
+    np.testing.assert_allclose(gtotal, wtotal, rtol=1e-4, atol=1e-1)
+
+
+def test_single_iteration():
+    _run(seed=0, k=1)
+
+
+def test_multi_iteration():
+    _run(seed=1, k=4)
+
+
+def test_with_padding():
+    _run(seed=2, k=3, pad_frac=0.2)
+
+
+def test_k_zero_returns_initial_labels():
+    rng = np.random.default_rng(3)
+    n, nh, nv = BLOCK_ELEMS, 32, 100
+    (y, label_v, hood_id, members, valid, vert_elems, vert_seg,
+     params) = _mk_problem(rng, n, nh, nv)
+    got = em_loop(
+        jnp.asarray(y), jnp.asarray(label_v), jnp.asarray(hood_id),
+        jnp.asarray(members), jnp.asarray(valid), jnp.asarray(vert_elems),
+        jnp.asarray(vert_seg), jnp.asarray([0], dtype=jnp.int32),
+        jnp.asarray(params), num_hoods=nh, num_verts=nv)
+    np.testing.assert_array_equal(np.asarray(got[0]), label_v)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 5),
+       pad=st.floats(0.0, 0.4))
+def test_em_loop_hypothesis(seed, k, pad):
+    _run(seed=seed, k=k, pad_frac=pad)

@@ -1,0 +1,103 @@
+"""L1 correctness: Pallas energy/min kernel vs the pure-jnp oracle.
+
+This is the CORE build-time correctness signal for the kernel that every
+AOT artifact embeds. Hypothesis sweeps sizes, parameter ranges, and
+degenerate label configurations.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.energy import (BLOCK_ELEMS, energy_min,
+                                    vmem_bytes_per_tile)
+from compile.kernels.ref import energy_min_ref
+
+
+def _mk_inputs(rng, n, mu=(40.0, 180.0), sigma=(12.0, 30.0), beta=0.5):
+    y = rng.uniform(0.0, 255.0, n).astype(np.float32)
+    label = rng.integers(0, 2, n).astype(np.float32)
+    size_h = rng.integers(2, 40, n).astype(np.float32)
+    ones_h = np.minimum(rng.integers(0, 40, n).astype(np.float32), size_h)
+    params = np.array([mu[0], mu[1], sigma[0], sigma[1], beta],
+                      dtype=np.float32)
+    return y, label, ones_h, size_h, params
+
+
+def _check(n, seed, **kw):
+    rng = np.random.default_rng(seed)
+    y, label, ones_h, size_h, params = _mk_inputs(rng, n, **kw)
+    emin, amin = energy_min(*map(jnp.asarray, (y, label, ones_h, size_h,
+                                               params)))
+    remin, ramin = energy_min_ref(*map(jnp.asarray,
+                                       (y, label, ones_h, size_h, params)))
+    np.testing.assert_allclose(np.asarray(emin), np.asarray(remin),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(amin), np.asarray(ramin))
+
+
+def test_kernel_matches_ref_smallest():
+    _check(BLOCK_ELEMS, seed=0)
+
+
+def test_kernel_matches_ref_multi_tile():
+    _check(4 * BLOCK_ELEMS, seed=1)
+
+
+def test_kernel_rejects_unaligned():
+    with pytest.raises(ValueError):
+        rng = np.random.default_rng(2)
+        y, label, ones_h, size_h, params = _mk_inputs(rng, 100)
+        energy_min(*map(jnp.asarray, (y, label, ones_h, size_h, params)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    mu0=st.floats(min_value=0.0, max_value=255.0),
+    mu1=st.floats(min_value=0.0, max_value=255.0),
+    sig0=st.floats(min_value=0.5, max_value=100.0),
+    sig1=st.floats(min_value=0.5, max_value=100.0),
+    beta=st.floats(min_value=0.0, max_value=4.0),
+)
+def test_kernel_matches_ref_hypothesis(tiles, seed, mu0, mu1, sig0, sig1,
+                                       beta):
+    _check(tiles * BLOCK_ELEMS, seed=seed, mu=(mu0, mu1),
+           sigma=(sig0, sig1), beta=beta)
+
+
+def test_argmin_ties_prefer_label0():
+    # e1 < e0 strict: on exact ties the kernel must pick label 0,
+    # matching the rust engines' tie-break.
+    n = BLOCK_ELEMS
+    y = jnp.full((n,), 100.0, jnp.float32)
+    label = jnp.zeros((n,), jnp.float32)
+    ones_h = jnp.zeros((n,), jnp.float32)
+    size_h = jnp.full((n,), 2.0, jnp.float32)
+    # mu0 == mu1, sigma0 == sigma1, beta=0 -> exact tie.
+    params = jnp.asarray([100.0, 100.0, 10.0, 10.0, 0.0], jnp.float32)
+    _, amin = energy_min(y, label, ones_h, size_h, params)
+    assert np.all(np.asarray(amin) == 0.0)
+
+
+def test_energy_monotone_in_distance():
+    # With beta=0 the minimum label must be the closer mean.
+    n = BLOCK_ELEMS
+    rng = np.random.default_rng(3)
+    y = rng.uniform(0, 255, n).astype(np.float32)
+    label = np.zeros(n, np.float32)
+    ones_h = np.zeros(n, np.float32)
+    size_h = np.full(n, 2.0, np.float32)
+    params = np.array([50.0, 200.0, 10.0, 10.0, 0.0], np.float32)
+    _, amin = energy_min(*map(jnp.asarray, (y, label, ones_h, size_h,
+                                            params)))
+    expect = (np.abs(y - 200.0) < np.abs(y - 50.0)).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(amin), expect)
+
+
+def test_vmem_budget():
+    # DESIGN.md §Perf: one grid step must fit well under 64 KiB of VMEM.
+    assert vmem_bytes_per_tile() <= 64 * 1024

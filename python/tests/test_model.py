@@ -1,0 +1,115 @@
+"""L2 correctness: em_step vs a literal numpy oracle, incl. padding."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.energy import BLOCK_ELEMS
+from compile.model import em_step, update_params
+
+
+def np_oracle(y, label, hood_id, valid, params, num_hoods):
+    """Straight-line numpy re-statement of the EM step."""
+    mu = [params[0], params[1]]
+    sig = [params[2], params[3]]
+    beta = params[4]
+    n = y.shape[0]
+    ones_h = np.zeros(num_hoods)
+    size_h = np.zeros(num_hoods)
+    for i in range(n):
+        ones_h[hood_id[i]] += label[i] * valid[i]
+        size_h[hood_id[i]] += valid[i]
+    new_label = np.zeros(n, np.float32)
+    emin = np.zeros(n, np.float64)
+    for i in range(n):
+        h = hood_id[i]
+        es = []
+        for l in (0, 1):
+            data = (y[i] - mu[l]) ** 2 / (2 * sig[l] ** 2) + np.log(sig[l])
+            if l == 0:
+                dis = ones_h[h] - label[i]
+            else:
+                dis = (size_h[h] - ones_h[h]) - (1 - label[i])
+            es.append(data + beta * dis)
+        new_label[i] = 1.0 if es[1] < es[0] else 0.0
+        emin[i] = min(es)
+    hood_energy = np.zeros(num_hoods)
+    for i in range(n):
+        hood_energy[hood_id[i]] += emin[i] * valid[i]
+    stats = np.zeros(6)
+    for i in range(n):
+        l = int(new_label[i])
+        stats[3 * l] += valid[i]
+        stats[3 * l + 1] += y[i] * valid[i]
+        stats[3 * l + 2] += y[i] * y[i] * valid[i]
+    return (new_label, emin, hood_energy, stats,
+            np.array([np.sum(emin * valid)]))
+
+
+def _run_case(seed, n, num_hoods, pad_frac):
+    rng = np.random.default_rng(seed)
+    y = rng.uniform(0, 255, n).astype(np.float32)
+    label = rng.integers(0, 2, n).astype(np.float32)
+    hood_id = rng.integers(0, max(num_hoods - 1, 1), n).astype(np.int32)
+    valid = np.ones(n, np.float32)
+    n_pad = int(n * pad_frac)
+    if n_pad:
+        valid[n - n_pad:] = 0.0
+        hood_id[n - n_pad:] = num_hoods - 1
+    params = np.array([40.0, 180.0, 12.0, 30.0, 0.5], np.float32)
+
+    got = em_step(jnp.asarray(y), jnp.asarray(label), jnp.asarray(hood_id),
+                  jnp.asarray(valid), jnp.asarray(params),
+                  num_hoods=num_hoods)
+    want = np_oracle(y, label, hood_id, valid, params, num_hoods)
+
+    nl, emin, he, stats, total = map(np.asarray, got)
+    wnl, wemin, whe, wstats, wtotal = want
+    real = valid > 0
+    np.testing.assert_array_equal(nl[real], wnl[real])
+    np.testing.assert_allclose(emin[real], wemin[real], rtol=1e-5,
+                               atol=1e-4)
+    np.testing.assert_allclose(he, whe, rtol=1e-4, atol=1e-3)
+    # stats include padded lanes' labels with valid=0 weight -> exact match
+    np.testing.assert_allclose(stats, wstats, rtol=1e-4, atol=1e-2)
+    np.testing.assert_allclose(total, wtotal, rtol=1e-4, atol=1e-2)
+
+
+def test_em_step_no_padding():
+    _run_case(seed=0, n=BLOCK_ELEMS, num_hoods=128, pad_frac=0.0)
+
+
+def test_em_step_with_padding():
+    _run_case(seed=1, n=BLOCK_ELEMS, num_hoods=128, pad_frac=0.25)
+
+
+def test_em_step_multi_tile():
+    _run_case(seed=2, n=2 * BLOCK_ELEMS, num_hoods=400, pad_frac=0.1)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       hoods=st.integers(2, 512),
+       pad=st.floats(0.0, 0.5))
+def test_em_step_hypothesis(seed, hoods, pad):
+    _run_case(seed=seed, n=BLOCK_ELEMS, num_hoods=hoods, pad_frac=pad)
+
+
+def test_update_params_matches_closed_form():
+    stats = jnp.asarray([4.0, 40.0, 500.0, 2.0, 300.0, 46000.0], jnp.float32)
+    out = np.asarray(update_params(stats))
+    # label0: mu=10, var=500/4-100=25 -> sigma=5
+    np.testing.assert_allclose(out[0], 10.0, rtol=1e-6)
+    np.testing.assert_allclose(out[1], 5.0, rtol=1e-6)
+    # label1: mu=150, var=23000-22500=500
+    np.testing.assert_allclose(out[2], 150.0, rtol=1e-6)
+    np.testing.assert_allclose(out[3], np.sqrt(500.0), rtol=1e-5)
+
+
+def test_update_params_sigma_floor_and_empty_label():
+    # Empty label bucket must not divide by zero; sigma floored at 1.0.
+    stats = jnp.asarray([0.0, 0.0, 0.0, 3.0, 30.0, 300.0], jnp.float32)
+    out = np.asarray(update_params(stats))
+    assert np.isfinite(out).all()
+    assert out[1] >= 1.0 and out[3] >= 1.0

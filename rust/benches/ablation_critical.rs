@@ -1,0 +1,45 @@
+//! Ablation: the reference implementation's critical section.
+//!
+//! §4.3.3 blames the OpenMP code's sub-linear scaling partly on a
+//! serialized output write-back. Our reference engine reproduces that
+//! mutex faithfully; this bench measures how much it actually costs by
+//! toggling it at increasing concurrency.
+
+use dpp_pmrf::bench_support::{prepare_models, thread_sweep, workload,
+                              Report, Scale};
+use dpp_pmrf::config::DatasetKind;
+use dpp_pmrf::mrf::{reference::ReferenceEngine, Engine};
+use dpp_pmrf::pool::Pool;
+use dpp_pmrf::util::measure;
+
+fn main() {
+    let scale = Scale::from_env();
+    let (ds, cfg) = workload(DatasetKind::Experimental, scale);
+    let models = prepare_models(&ds, &cfg);
+    let mut report = Report::new("ablation_critical");
+
+    for threads in thread_sweep() {
+        let pool = Pool::new(threads);
+        for (variant, engine) in [
+            ("with-critical", ReferenceEngine::new(pool.clone())),
+            (
+                "no-critical",
+                ReferenceEngine::without_critical_section(pool.clone()),
+            ),
+        ] {
+            let stats = measure(scale.warmup, scale.reps, || {
+                for m in &models {
+                    engine.run(m, &cfg.mrf);
+                }
+            });
+            report.add(
+                vec![
+                    ("threads", threads.to_string()),
+                    ("variant", variant.to_string()),
+                ],
+                stats,
+            );
+        }
+    }
+    report.finish();
+}

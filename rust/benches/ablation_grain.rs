@@ -1,0 +1,43 @@
+//! Ablation: DPP chunk ("task") size — §4.1.3's claim that a well
+//! chosen blocking factor is key to the DPP engine's advantage.
+//!
+//! Sweeps the Threaded backend's grain size at max concurrency; the
+//! expected shape is a U-curve (tiny grains pay scheduling overhead,
+//! huge grains under-parallelize), with a wide flat optimum around the
+//! default (4096).
+
+use dpp_pmrf::bench_support::{prepare_models, workload, Report, Scale};
+use dpp_pmrf::config::DatasetKind;
+use dpp_pmrf::dpp::Backend;
+use dpp_pmrf::mrf::{dpp::DppEngine, Engine};
+use dpp_pmrf::pool::Pool;
+use dpp_pmrf::util::measure;
+
+fn main() {
+    let scale = Scale::from_env();
+    let (ds, cfg) = workload(DatasetKind::Experimental, scale);
+    let models = prepare_models(&ds, &cfg);
+    let threads = dpp_pmrf::pool::available_threads();
+    let pool = Pool::new(threads);
+    let mut report = Report::new("ablation_grain");
+
+    for grain in [64usize, 256, 1024, 4096, 16384, 65536, 1 << 20] {
+        let engine = DppEngine::new(Backend::threaded_with_grain(
+            pool.clone(),
+            grain,
+        ));
+        let stats = measure(scale.warmup, scale.reps, || {
+            for m in &models {
+                engine.run(m, &cfg.mrf);
+            }
+        });
+        report.add(
+            vec![
+                ("threads", threads.to_string()),
+                ("grain", grain.to_string()),
+            ],
+            stats,
+        );
+    }
+    report.finish();
+}

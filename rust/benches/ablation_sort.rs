@@ -1,0 +1,85 @@
+//! Ablation: the per-iteration SortByKey.
+//!
+//! (a) Engine level — paper mode (replicate energies, SortByKey to pair
+//!     label copies, ReduceByKey<Min>; §3.2.2) vs fused mode (the L1
+//!     kernel layout: both energies + min in one Map, no sort). This
+//!     quantifies how much of DPP-PMRF's runtime the paper's dominant
+//!     primitive actually costs — the §Perf optimization headroom.
+//! (b) Primitive level — radix SortByKey vs a comparison sort on the
+//!     pair keys the paper sorts (§4.3.3 discusses pair-sort overhead).
+
+use dpp_pmrf::bench_support::{prepare_models, workload, Report, Scale};
+use dpp_pmrf::config::DatasetKind;
+use dpp_pmrf::dpp::{self, Backend};
+use dpp_pmrf::mrf::{dpp::{DppEngine, PairMode}, Engine};
+use dpp_pmrf::pool::Pool;
+use dpp_pmrf::util::{measure, Pcg32};
+
+fn main() {
+    let scale = Scale::from_env();
+    let threads = dpp_pmrf::pool::available_threads();
+    let pool = Pool::new(threads);
+    let mut report = Report::new("ablation_sort");
+
+    // (a) engine level
+    let (ds, cfg) = workload(DatasetKind::Experimental, scale);
+    let models = prepare_models(&ds, &cfg);
+    for mode in [PairMode::Paper, PairMode::Fused] {
+        let engine =
+            DppEngine::with_mode(Backend::threaded(pool.clone()), mode);
+        let stats = measure(scale.warmup, scale.reps, || {
+            for m in &models {
+                engine.run(m, &cfg.mrf);
+            }
+        });
+        report.add(
+            vec![
+                ("level", "engine".to_string()),
+                ("variant", engine.name().to_string()),
+                ("threads", threads.to_string()),
+            ],
+            stats,
+        );
+    }
+
+    // (b) primitive level: sort 2^20 (vertexId, cliqueId)-style pairs.
+    let n = 1 << 20;
+    let mut rng = Pcg32::seeded(1234);
+    let keys0: Vec<u64> = (0..n)
+        .map(|_| dpp::pack_pair(rng.below(1 << 20), rng.below(1 << 20)))
+        .collect();
+    let vals0: Vec<u32> = (0..n as u32).collect();
+
+    for (name, bk) in [
+        ("radix-serial", Backend::Serial),
+        ("radix-threaded", Backend::threaded(pool.clone())),
+    ] {
+        let stats = measure(1, scale.reps.max(3), || {
+            let mut k = keys0.clone();
+            let mut v = vals0.clone();
+            dpp::sort_by_key(&bk, &mut k, &mut v);
+        });
+        report.add(
+            vec![
+                ("level", "primitive".to_string()),
+                ("variant", name.to_string()),
+                ("threads", bk.threads().to_string()),
+            ],
+            stats,
+        );
+    }
+    let stats = measure(1, scale.reps.max(3), || {
+        let mut k = keys0.clone();
+        let mut v = vals0.clone();
+        dpp::sort_pairs_comparison(&mut k, &mut v);
+    });
+    report.add(
+        vec![
+            ("level", "primitive".to_string()),
+            ("variant", "comparison".to_string()),
+            ("threads", "1".to_string()),
+        ],
+        stats,
+    );
+    report.finish();
+}

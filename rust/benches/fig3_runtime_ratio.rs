@@ -1,0 +1,81 @@
+//! Fig. 3 reproduction: DPP-PMRF vs OpenMP-reference runtime ratio at
+//! varying concurrency, for both datasets.
+//!
+//! Each bar of the paper's figure is `T_reference / T_dpp` at one
+//! (platform, dataset, thread-count) triple; bars > 1 mean the DPP code
+//! wins. Paper shape: DPP wins everywhere, 2–7X.
+//!
+//! Output: one row per (dataset, threads, engine) plus the derived
+//! ratio series, persisted to `bench_results/fig3_runtime_ratio.json`.
+
+use dpp_pmrf::bench_support::{prepare_models, thread_sweep, workload,
+                              Report, Scale};
+use dpp_pmrf::config::DatasetKind;
+use dpp_pmrf::dpp::Backend;
+use dpp_pmrf::mrf::{dpp::DppEngine, reference::ReferenceEngine, Engine};
+use dpp_pmrf::pool::Pool;
+use dpp_pmrf::util::measure;
+
+fn main() {
+    let scale = Scale::from_env();
+    let mut report = Report::new("fig3_runtime_ratio");
+
+    for kind in [DatasetKind::Synthetic, DatasetKind::Experimental] {
+        let (ds, cfg) = workload(kind, scale);
+        let models = prepare_models(&ds, &cfg);
+
+        for threads in thread_sweep() {
+            let pool = Pool::new(threads);
+            let engines: Vec<Box<dyn Engine>> = vec![
+                Box::new(ReferenceEngine::new(pool.clone())),
+                Box::new(DppEngine::new(if threads == 1 {
+                    Backend::Serial
+                } else {
+                    Backend::threaded(pool.clone())
+                })),
+            ];
+            for engine in engines {
+                let stats = measure(scale.warmup, scale.reps, || {
+                    for m in &models {
+                        engine.run(m, &cfg.mrf);
+                    }
+                });
+                report.add(
+                    vec![
+                        ("dataset", kind.name().to_string()),
+                        ("threads", threads.to_string()),
+                        ("engine", engine.name().to_string()),
+                    ],
+                    stats,
+                );
+            }
+        }
+    }
+    report.finish();
+
+    // Derived Fig. 3 bars: ratio = T_ref / T_dpp.
+    println!("Fig. 3 bars (T_reference / T_dpp; >1 means DPP wins):");
+    for kind in [DatasetKind::Synthetic, DatasetKind::Experimental] {
+        for threads in thread_sweep() {
+            let t = threads.to_string();
+            let r = report.median(&[
+                ("dataset", kind.name()),
+                ("threads", &t),
+                ("engine", "reference"),
+            ]);
+            let d = report.median(&[
+                ("dataset", kind.name()),
+                ("threads", &t),
+                ("engine", "dpp"),
+            ]);
+            if let (Some(r), Some(d)) = (r, d) {
+                println!(
+                    "  {:<13} {:>3} threads: {:.2}x",
+                    kind.name(),
+                    threads,
+                    r / d
+                );
+            }
+        }
+    }
+}

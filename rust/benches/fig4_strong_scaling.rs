@@ -1,0 +1,89 @@
+//! Fig. 4 reproduction: strong-scaling speedup curves for the OpenMP
+//! reference and DPP-PMRF, on both datasets.
+//!
+//! Speedup S(p) = T*(1) / T(p) with T*(1) the best serial time
+//! (§4.3.1). Paper shape: both sub-linear; the reference scales better
+//! on the synthetic dataset (regular neighborhood demographics) than on
+//! the experimental one; DPP's limiter is SortByKey/ReduceByKey.
+
+use dpp_pmrf::bench_support::{prepare_models, thread_sweep, workload,
+                              Report, Scale};
+use dpp_pmrf::config::DatasetKind;
+use dpp_pmrf::dpp::Backend;
+use dpp_pmrf::mrf::{dpp::DppEngine, reference::ReferenceEngine,
+                    serial::SerialEngine, Engine};
+use dpp_pmrf::pool::Pool;
+use dpp_pmrf::util::measure;
+
+fn main() {
+    let scale = Scale::from_env();
+    let mut report = Report::new("fig4_strong_scaling");
+
+    for kind in [DatasetKind::Synthetic, DatasetKind::Experimental] {
+        let (ds, cfg) = workload(kind, scale);
+        let models = prepare_models(&ds, &cfg);
+
+        // Best serial baseline T*(n).
+        let serial = measure(scale.warmup, scale.reps, || {
+            for m in &models {
+                SerialEngine.run(m, &cfg.mrf);
+            }
+        });
+        report.add(
+            vec![
+                ("dataset", kind.name().to_string()),
+                ("threads", "1".to_string()),
+                ("engine", "serial-baseline".to_string()),
+            ],
+            serial.clone(),
+        );
+
+        for threads in thread_sweep() {
+            let pool = Pool::new(threads);
+            let engines: Vec<Box<dyn Engine>> = vec![
+                Box::new(ReferenceEngine::new(pool.clone())),
+                Box::new(DppEngine::new(if threads == 1 {
+                    Backend::Serial
+                } else {
+                    Backend::threaded(pool.clone())
+                })),
+            ];
+            for engine in engines {
+                let stats = measure(scale.warmup, scale.reps, || {
+                    for m in &models {
+                        engine.run(m, &cfg.mrf);
+                    }
+                });
+                report.add(
+                    vec![
+                        ("dataset", kind.name().to_string()),
+                        ("threads", threads.to_string()),
+                        ("engine", engine.name().to_string()),
+                    ],
+                    stats,
+                );
+            }
+        }
+
+        println!("Fig. 4 speedup curves ({}):", kind.name());
+        for engine in ["reference", "dpp"] {
+            let mut curve = String::new();
+            for threads in thread_sweep() {
+                let t = threads.to_string();
+                if let Some(tp) = report.median(&[
+                    ("dataset", kind.name()),
+                    ("threads", &t),
+                    ("engine", engine),
+                ]) {
+                    curve.push_str(&format!(
+                        " {}→{:.2}x",
+                        threads,
+                        serial.median / tp
+                    ));
+                }
+            }
+            println!("  {engine:<10}{curve}");
+        }
+    }
+    report.finish();
+}

@@ -1,0 +1,70 @@
+//! §4.3.2–4.3.3 analysis reproduction: per-primitive runtime breakdown
+//! of DPP-PMRF (paper mode) at 1 thread vs max threads.
+//!
+//! The paper's finding: SortByKey and ReduceByKey dominate the runtime
+//! and are the scalability limiters (≈5X at 24 cores / ≈11X at 64 on
+//! their machines while the Maps scale near-linearly). This bench
+//! prints the same breakdown for our engine.
+
+use dpp_pmrf::bench_support::{prepare_models, workload, Report, Scale};
+use dpp_pmrf::config::DatasetKind;
+use dpp_pmrf::dpp::{timing, Backend};
+use dpp_pmrf::mrf::{dpp::{DppEngine, PairMode}, Engine};
+use dpp_pmrf::pool::Pool;
+use dpp_pmrf::util::Stats;
+
+fn main() {
+    let scale = Scale::from_env();
+    let (ds, cfg) = workload(DatasetKind::Experimental, scale);
+    let models = prepare_models(&ds, &cfg);
+    let max_threads = dpp_pmrf::pool::available_threads();
+    let mut report = Report::new("per_dpp_breakdown");
+
+    let mut snaps = Vec::new();
+    for threads in [1usize, max_threads] {
+        let backend = if threads == 1 {
+            Backend::Serial
+        } else {
+            Backend::threaded(Pool::new(threads))
+        };
+        let engine = DppEngine::with_mode(backend, PairMode::Paper);
+        timing::reset();
+        timing::set_enabled(true);
+        for m in &models {
+            engine.run(m, &cfg.mrf);
+        }
+        timing::set_enabled(false);
+        let snap = timing::snapshot();
+        println!("--- per-DPP breakdown @ {threads} thread(s) ---");
+        println!("{}", timing::report());
+        for (name, st) in &snap {
+            report.add(
+                vec![
+                    ("threads", threads.to_string()),
+                    ("primitive", name.to_string()),
+                ],
+                Stats::from_samples(&[st.nanos as f64 / 1e9]),
+            );
+        }
+        snaps.push((threads, snap));
+        timing::reset();
+    }
+    report.finish();
+
+    // Per-primitive scaling factor (the paper's SortByKey/ReduceByKey
+    // observation).
+    let (_, ref serial) = snaps[0];
+    let (t, ref par) = snaps[1];
+    println!("per-primitive speedup 1 -> {t} threads:");
+    for (name, s) in serial {
+        if let Some(p) = par.get(name) {
+            if p.nanos > 0 {
+                println!(
+                    "  {:<16} {:>6.2}x",
+                    name,
+                    s.nanos as f64 / p.nanos as f64
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,81 @@
+//! Table 1 reproduction: per-dataset runtimes for the serial CPU
+//! baseline, DPP-PMRF on the multicore CPU (max threads), and DPP-PMRF
+//! on the accelerator path (XLA/PJRT — the paper's GPU stand-in, see
+//! DESIGN.md §Hardware-Adaptation), plus the derived speedup rows.
+//!
+//! Paper shape: accelerator > threaded CPU > serial, with Speedup-GPU
+//! (vs serial) the largest number in the table.
+
+use std::sync::Arc;
+
+use dpp_pmrf::bench_support::{prepare_models, workload, Report, Scale};
+use dpp_pmrf::config::DatasetKind;
+use dpp_pmrf::dpp::Backend;
+use dpp_pmrf::mrf::{dpp::DppEngine, serial::SerialEngine, xla::XlaEngine,
+                    Engine};
+use dpp_pmrf::pool::Pool;
+use dpp_pmrf::runtime::EmRuntime;
+use dpp_pmrf::util::measure;
+
+fn main() {
+    let scale = Scale::from_env();
+    let runtime = Arc::new(
+        EmRuntime::load(std::path::Path::new("artifacts"))
+            .expect("run `make artifacts` first"),
+    );
+    let mut report = Report::new("table1_platforms");
+    let max_threads = dpp_pmrf::pool::available_threads();
+
+    let mut table: Vec<(String, f64, f64, f64)> = Vec::new();
+    for kind in [DatasetKind::Experimental, DatasetKind::Synthetic] {
+        let (ds, cfg) = workload(kind, scale);
+        let models = prepare_models(&ds, &cfg);
+
+        let rows: Vec<(&str, Box<dyn Engine>)> = vec![
+            ("serial-cpu", Box::new(SerialEngine)),
+            (
+                "dpp-cpu",
+                Box::new(DppEngine::new(Backend::threaded(Pool::new(
+                    max_threads,
+                )))),
+            ),
+            ("dpp-xla", Box::new(XlaEngine::new(Arc::clone(&runtime)))),
+        ];
+        let mut medians = Vec::new();
+        for (label, engine) in rows {
+            let stats = measure(scale.warmup, scale.reps, || {
+                for m in &models {
+                    engine.run(m, &cfg.mrf);
+                }
+            });
+            medians.push(stats.median);
+            report.add(
+                vec![
+                    ("dataset", kind.name().to_string()),
+                    ("platform", label.to_string()),
+                ],
+                stats,
+            );
+        }
+        table.push((kind.name().to_string(), medians[0], medians[1],
+                    medians[2]));
+    }
+    report.finish();
+
+    println!("Table 1 (seconds; speedups vs the labeled baseline):");
+    println!("{:<22} {:>13} {:>13}", "Platform / Dataset", "Experimental",
+             "Synthetic");
+    let get = |i: usize, f: fn(&(String, f64, f64, f64)) -> f64| {
+        f(&table[i])
+    };
+    println!("{:<22} {:>13.3} {:>13.3}", "Serial CPU",
+             get(0, |r| r.1), get(1, |r| r.1));
+    println!("{:<22} {:>13.3} {:>13.3}", "DPP-PMRF CPU",
+             get(0, |r| r.2), get(1, |r| r.2));
+    println!("{:<22} {:>13.3} {:>13.3}", "DPP-PMRF XLA",
+             get(0, |r| r.3), get(1, |r| r.3));
+    println!("{:<22} {:>12.1}X {:>12.1}X", "Speedup-CPU (vs serial)",
+             get(0, |r| r.1 / r.2), get(1, |r| r.1 / r.2));
+    println!("{:<22} {:>12.1}X {:>12.1}X", "Speedup-XLA (vs serial)",
+             get(0, |r| r.1 / r.3), get(1, |r| r.1 / r.3));
+}

@@ -1,0 +1,244 @@
+//! Shared benchmark scaffolding: standard workloads, concurrency
+//! sweeps, and table/series output for the paper-reproduction benches
+//! (`rust/benches/`, one per table/figure — see DESIGN.md §4).
+//!
+//! Scale is controlled by `DPP_PMRF_BENCH_SCALE`:
+//!   * `smoke` — tiny, seconds (CI / `make bench` default sanity)
+//!   * `paper` — the shapes used for EXPERIMENTS.md numbers
+//! or any explicit `<width>x<height>x<slices>` triple.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::config::{DatasetConfig, DatasetKind, RunConfig};
+use crate::image::{self, Dataset};
+use crate::util::Stats;
+
+/// Benchmark scale selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Scale {
+    pub width: usize,
+    pub height: usize,
+    pub slices: usize,
+    pub reps: usize,
+    pub warmup: usize,
+}
+
+impl Scale {
+    pub fn from_env() -> Scale {
+        match std::env::var("DPP_PMRF_BENCH_SCALE").as_deref() {
+            Ok("paper") => Scale {
+                width: 256,
+                height: 256,
+                slices: 4,
+                reps: 3,
+                warmup: 1,
+            },
+            Ok(spec) if spec.contains('x') => {
+                let parts: Vec<usize> = spec
+                    .split('x')
+                    .filter_map(|p| p.parse().ok())
+                    .collect();
+                assert_eq!(parts.len(), 3,
+                           "DPP_PMRF_BENCH_SCALE=WxHxS expected");
+                Scale {
+                    width: parts[0],
+                    height: parts[1],
+                    slices: parts[2],
+                    reps: 3,
+                    warmup: 1,
+                }
+            }
+            _ => Scale {
+                width: 96,
+                height: 96,
+                slices: 2,
+                reps: 3,
+                warmup: 1,
+            },
+        }
+    }
+}
+
+/// The two paper datasets at bench scale.
+pub fn workload(kind: DatasetKind, scale: Scale) -> (Dataset, RunConfig) {
+    let dataset = DatasetConfig {
+        kind,
+        width: scale.width,
+        height: scale.height,
+        slices: scale.slices,
+        ..Default::default()
+    };
+    let cfg = RunConfig {
+        dataset: dataset.clone(),
+        // Fixed iteration counts so every engine/concurrency does the
+        // same work — timings become comparable (the paper also fixes
+        // 20 EM iterations, §3.2.2).
+        mrf: crate::config::MrfConfig {
+            em_iters: 5,
+            map_iters: 4,
+            fixed_iters: true,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    (image::generate(&dataset), cfg)
+}
+
+/// Build the per-slice MRF models once (initialization phase) so
+/// benches time exactly what the paper times: the optimization loop.
+pub fn prepare_models(ds: &Dataset, cfg: &RunConfig)
+    -> Vec<crate::mrf::MrfModel> {
+    let pool = crate::pool::Pool::with_default_threads();
+    let bk = crate::dpp::Backend::threaded(pool);
+    (0..ds.input.depth)
+        .map(|z| {
+            let seg = crate::overseg::oversegment(
+                &bk, &ds.input.slice(z), &cfg.overseg,
+            );
+            crate::mrf::build_model(&bk, &seg)
+        })
+        .collect()
+}
+
+/// Thread counts for sweep benches: 1, 2, 4, ... up to the machine.
+pub fn thread_sweep() -> Vec<usize> {
+    let max = crate::pool::available_threads();
+    let mut out = vec![1usize];
+    while *out.last().unwrap() * 2 <= max {
+        out.push(out.last().unwrap() * 2);
+    }
+    if *out.last().unwrap() != max {
+        out.push(max);
+    }
+    out
+}
+
+/// A recorded bench row, serializable to the results JSON.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub labels: Vec<(String, String)>,
+    pub secs: Stats,
+}
+
+/// Collects rows and writes `bench_results/<name>.json` + a text table.
+pub struct Report {
+    name: &'static str,
+    rows: Vec<Row>,
+}
+
+impl Report {
+    pub fn new(name: &'static str) -> Report {
+        Report { name, rows: Vec::new() }
+    }
+
+    pub fn add(&mut self, labels: Vec<(&str, String)>, secs: Stats) {
+        self.rows.push(Row {
+            labels: labels
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+            secs,
+        });
+    }
+
+    pub fn rows(&self) -> &[Row] {
+        &self.rows
+    }
+
+    /// Median seconds of the row matching all given labels.
+    pub fn median(&self, labels: &[(&str, &str)]) -> Option<f64> {
+        self.rows
+            .iter()
+            .find(|r| {
+                labels.iter().all(|(k, v)| {
+                    r.labels.iter().any(|(rk, rv)| rk == k && rv == v)
+                })
+            })
+            .map(|r| r.secs.median)
+    }
+
+    /// Print an aligned table and persist JSON under `bench_results/`.
+    pub fn finish(&self) -> PathBuf {
+        let mut table = String::new();
+        for row in &self.rows {
+            let mut line = String::new();
+            for (k, v) in &row.labels {
+                line.push_str(&format!("{k}={v:<12} "));
+            }
+            line.push_str(&format!(
+                "median {:>10}  (min {:>10}, n={})",
+                crate::util::fmt_secs(row.secs.median),
+                crate::util::fmt_secs(row.secs.min),
+                row.secs.n
+            ));
+            table.push_str(&line);
+            table.push('\n');
+        }
+        println!("== {} ==\n{table}", self.name);
+
+        let dir = Path::new("bench_results");
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join(format!("{}.json", self.name));
+        let rows: Vec<crate::json::Value> = self
+            .rows
+            .iter()
+            .map(|r| {
+                let mut fields: Vec<(&str, crate::json::Value)> = r
+                    .labels
+                    .iter()
+                    .map(|(k, v)| {
+                        (k.as_str(), crate::json::Value::str(v.clone()))
+                    })
+                    .collect();
+                fields.push(("median_secs", r.secs.median.into()));
+                fields.push(("min_secs", r.secs.min.into()));
+                fields.push(("mean_secs", r.secs.mean.into()));
+                crate::json::Value::object(fields)
+            })
+            .collect();
+        let doc = crate::json::Value::object(vec![
+            ("bench", crate::json::Value::str(self.name)),
+            ("rows", crate::json::Value::Array(rows)),
+        ]);
+        if let Ok(mut f) = std::fs::File::create(&path) {
+            let _ = f.write_all(doc.to_pretty().as_bytes());
+        }
+        println!("wrote {}\n", path.display());
+        path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_sweep_monotone_and_capped() {
+        let sweep = thread_sweep();
+        assert_eq!(sweep[0], 1);
+        assert!(sweep.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(*sweep.last().unwrap(), crate::pool::available_threads());
+    }
+
+    #[test]
+    fn workload_is_deterministic() {
+        let s = Scale { width: 32, height: 32, slices: 1, reps: 1,
+                        warmup: 0 };
+        let (a, _) = workload(DatasetKind::Synthetic, s);
+        let (b, _) = workload(DatasetKind::Synthetic, s);
+        assert_eq!(a.input, b.input);
+    }
+
+    #[test]
+    fn report_median_lookup() {
+        let mut r = Report::new("test");
+        r.add(
+            vec![("engine", "dpp".into()), ("threads", "2".into())],
+            Stats::from_samples(&[1.0, 2.0, 3.0]),
+        );
+        assert_eq!(r.median(&[("engine", "dpp"), ("threads", "2")]),
+                   Some(2.0));
+        assert_eq!(r.median(&[("engine", "serial")]), None);
+    }
+}

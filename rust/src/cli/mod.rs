@@ -1,0 +1,253 @@
+//! CLI argument parser substrate (clap stand-in).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with generated `--help` text. Only what the
+//! launcher needs — no derive magic.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Declared option.
+#[derive(Debug, Clone)]
+pub struct Opt {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// A (sub)command spec.
+#[derive(Debug, Clone, Default)]
+pub struct Spec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<Opt>,
+    pub positionals: Vec<(&'static str, &'static str)>,
+}
+
+impl Spec {
+    pub fn new(name: &'static str, about: &'static str) -> Spec {
+        Spec { name, about, opts: Vec::new(), positionals: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Spec {
+        self.opts.push(Opt { name, help, takes_value: false, default: None });
+        self
+    }
+
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        help: &'static str,
+        default: Option<&'static str>,
+    ) -> Spec {
+        self.opts.push(Opt { name, help, takes_value: true, default });
+        self
+    }
+
+    pub fn positional(mut self, name: &'static str, help: &'static str)
+        -> Spec {
+        self.positionals.push((name, help));
+        self
+    }
+
+    fn find(&self, name: &str) -> Option<&Opt> {
+        self.opts.iter().find(|o| o.name == name)
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nUSAGE:\n  {}", self.name,
+                              self.about, self.name);
+        if !self.opts.is_empty() {
+            out.push_str(" [OPTIONS]");
+        }
+        for (p, _) in &self.positionals {
+            out.push_str(&format!(" <{p}>"));
+        }
+        out.push('\n');
+        if !self.positionals.is_empty() {
+            out.push_str("\nARGS:\n");
+            for (p, h) in &self.positionals {
+                out.push_str(&format!("  <{p}>  {h}\n"));
+            }
+        }
+        if !self.opts.is_empty() {
+            out.push_str("\nOPTIONS:\n");
+            for o in &self.opts {
+                let v = if o.takes_value { " <value>" } else { "" };
+                let d = o
+                    .default
+                    .map(|d| format!(" [default: {d}]"))
+                    .unwrap_or_default();
+                out.push_str(&format!("  --{}{v}  {}{d}\n", o.name, o.help));
+            }
+        }
+        out
+    }
+
+    /// Parse a raw argument list against this spec.
+    pub fn parse(&self, args: &[String]) -> Result<Matches, CliError> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut positionals: Vec<String> = Vec::new();
+        let mut it = args.iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(CliError(self.usage()));
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let opt = self.find(name).ok_or_else(|| {
+                    CliError(format!("unknown option --{name}\n\n{}",
+                                     self.usage()))
+                })?;
+                if opt.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| {
+                                CliError(format!("--{name} needs a value"))
+                            })?
+                            .clone(),
+                    };
+                    values.insert(name.to_string(), v);
+                } else {
+                    if inline.is_some() {
+                        return Err(CliError(format!(
+                            "--{name} takes no value")));
+                    }
+                    flags.push(name.to_string());
+                }
+            } else {
+                positionals.push(arg.clone());
+            }
+        }
+        if positionals.len() > self.positionals.len() {
+            return Err(CliError(format!(
+                "unexpected argument `{}`\n\n{}",
+                positionals[self.positionals.len()],
+                self.usage()
+            )));
+        }
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                values.entry(o.name.to_string()).or_insert(d.to_string());
+            }
+        }
+        Ok(Matches { values, flags, positionals })
+    }
+}
+
+/// Parse result.
+#[derive(Debug, Clone, Default)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str)
+        -> Result<Option<T>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s.parse::<T>().map(Some).map_err(|_| {
+                CliError(format!("--{name}: cannot parse `{s}`"))
+            }),
+        }
+    }
+
+    /// Parse with a required default already injected by the spec.
+    pub fn req<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError> {
+        self.get_parse(name)?.ok_or_else(|| {
+            CliError(format!("missing required option --{name}"))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Spec {
+        Spec::new("seg", "segment an image")
+            .opt("threads", "worker threads", Some("4"))
+            .opt("out", "output path", None)
+            .flag("verbose", "chatty logs")
+            .positional("input", "input volume")
+    }
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let m = spec()
+            .parse(&args(&["--threads=8", "vol.raw", "--verbose",
+                           "--out", "seg.raw"]))
+            .unwrap();
+        assert_eq!(m.req::<usize>("threads").unwrap(), 8);
+        assert_eq!(m.get("out"), Some("seg.raw"));
+        assert!(m.flag("verbose"));
+        assert_eq!(m.positional(0), Some("vol.raw"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let m = spec().parse(&args(&[])).unwrap();
+        assert_eq!(m.req::<usize>("threads").unwrap(), 4);
+        assert_eq!(m.get("out"), None);
+    }
+
+    #[test]
+    fn rejects_unknown_and_extra() {
+        assert!(spec().parse(&args(&["--nope"])).is_err());
+        assert!(spec().parse(&args(&["a", "b"])).is_err());
+        assert!(spec().parse(&args(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn help_is_an_error_with_usage() {
+        let e = spec().parse(&args(&["--help"])).unwrap_err();
+        assert!(e.0.contains("USAGE"));
+        assert!(e.0.contains("--threads"));
+    }
+
+    #[test]
+    fn bad_parse_reports_option() {
+        let e = spec()
+            .parse(&args(&["--threads", "lots"]))
+            .unwrap()
+            .req::<usize>("threads")
+            .unwrap_err();
+        assert!(e.0.contains("threads"));
+    }
+}

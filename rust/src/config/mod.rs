@@ -1,0 +1,330 @@
+//! Typed run configuration with JSON load/save (serde stand-in).
+//!
+//! One [`RunConfig`] describes everything a segmentation run needs:
+//! dataset, oversegmentation, MRF optimization, engine selection, and
+//! execution resources. The launcher assembles it from a JSON file plus
+//! CLI overrides; examples and benches build it in code.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::{self, Value};
+
+/// Which dataset generator to use (paper §4.1.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// NGCF-like porous media: homogeneous, many small neighborhoods.
+    Synthetic,
+    /// ALS-like geological sample: heterogeneous, dense irregular graph.
+    Experimental,
+}
+
+impl DatasetKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "synthetic" => Ok(DatasetKind::Synthetic),
+            "experimental" => Ok(DatasetKind::Experimental),
+            _ => bail!("unknown dataset `{s}` (synthetic|experimental)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetKind::Synthetic => "synthetic",
+            DatasetKind::Experimental => "experimental",
+        }
+    }
+}
+
+/// Which MRF optimization engine runs the EM loop (DESIGN.md §3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Single-threaded baseline ("Serial CPU" row of Table 1).
+    Serial,
+    /// Coarse-parallel OpenMP analog (Alg. 1 reference).
+    Reference,
+    /// The paper's contribution: fine-grained DPP pipeline (Alg. 2).
+    Dpp,
+    /// DPP pipeline with the EM inner step on AOT XLA artifacts
+    /// (the accelerator platform of Table 1).
+    Xla,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "serial" => Ok(EngineKind::Serial),
+            "reference" => Ok(EngineKind::Reference),
+            "dpp" => Ok(EngineKind::Dpp),
+            "xla" => Ok(EngineKind::Xla),
+            _ => bail!("unknown engine `{s}` (serial|reference|dpp|xla)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Serial => "serial",
+            EngineKind::Reference => "reference",
+            EngineKind::Dpp => "dpp",
+            EngineKind::Xla => "xla",
+        }
+    }
+}
+
+/// Dataset generation parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetConfig {
+    pub kind: DatasetKind,
+    pub width: usize,
+    pub height: usize,
+    pub slices: usize,
+    pub seed: u64,
+    /// Salt-and-pepper corruption fraction.
+    pub salt_pepper: f64,
+    /// Additive Gaussian sigma on the 8-bit scale (paper: 100).
+    pub gaussian_sigma: f64,
+    /// Ringing artifact amplitude (0 disables).
+    pub ringing: f64,
+}
+
+impl Default for DatasetConfig {
+    fn default() -> Self {
+        DatasetConfig {
+            kind: DatasetKind::Synthetic,
+            width: 128,
+            height: 128,
+            slices: 4,
+            seed: 0x5eed,
+            salt_pepper: 0.02,
+            gaussian_sigma: 100.0,
+            ringing: 12.0,
+        }
+    }
+}
+
+/// Oversegmentation parameters (region-merging superpixels).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OversegConfig {
+    /// Felzenszwalb-style scale constant: larger => larger regions.
+    pub scale: f64,
+    /// Regions smaller than this are merged into a neighbor.
+    pub min_region: usize,
+}
+
+impl Default for OversegConfig {
+    fn default() -> Self {
+        OversegConfig { scale: 64.0, min_region: 8 }
+    }
+}
+
+/// MRF optimization parameters (§3.2.2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MrfConfig {
+    /// Potts smoothness weight.
+    pub beta: f64,
+    /// EM outer iterations (paper: converges within 20).
+    pub em_iters: usize,
+    /// MAP inner iterations per EM iteration.
+    pub map_iters: usize,
+    /// Convergence window length L (paper: 3).
+    pub window: usize,
+    /// Relative energy-change threshold (paper: 1e-4).
+    pub threshold: f64,
+    /// Random init seed for labels/params.
+    pub seed: u64,
+    /// Disable convergence checks (fixed iteration counts) so engines
+    /// are bit-for-bit comparable in tests.
+    pub fixed_iters: bool,
+}
+
+impl Default for MrfConfig {
+    fn default() -> Self {
+        MrfConfig {
+            beta: 0.5,
+            em_iters: 20,
+            map_iters: 10,
+            window: 3,
+            threshold: 1e-4,
+            seed: 0xC0FFEE,
+            fixed_iters: false,
+        }
+    }
+}
+
+/// Everything one run needs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    pub dataset: DatasetConfig,
+    pub overseg: OversegConfig,
+    pub mrf: MrfConfig,
+    pub engine: EngineKind,
+    pub threads: usize,
+    pub grain: usize,
+    pub artifacts_dir: PathBuf,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dataset: DatasetConfig::default(),
+            overseg: OversegConfig::default(),
+            mrf: MrfConfig::default(),
+            engine: EngineKind::Dpp,
+            threads: crate::pool::available_threads(),
+            grain: crate::pool::DEFAULT_GRAIN,
+            artifacts_dir: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+fn get_f64(v: &Value, key: &str, default: f64) -> f64 {
+    v.get(key).and_then(Value::as_f64).unwrap_or(default)
+}
+
+fn get_usize(v: &Value, key: &str, default: usize) -> usize {
+    v.get(key).and_then(Value::as_usize).unwrap_or(default)
+}
+
+fn get_u64(v: &Value, key: &str, default: u64) -> u64 {
+    v.get(key).and_then(Value::as_i64).map(|i| i as u64).unwrap_or(default)
+}
+
+impl RunConfig {
+    /// Load from a JSON file; unknown keys are ignored, missing keys get
+    /// defaults, malformed values are errors.
+    pub fn from_json_file(path: &Path) -> Result<RunConfig> {
+        let v = json::from_file(path)?;
+        Self::from_json(&v)
+            .with_context(|| format!("in config {}", path.display()))
+    }
+
+    pub fn from_json(v: &Value) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        if let Some(d) = v.get("dataset") {
+            if let Some(k) = d.get("kind").and_then(Value::as_str) {
+                cfg.dataset.kind = DatasetKind::parse(k)?;
+            }
+            cfg.dataset.width = get_usize(d, "width", cfg.dataset.width);
+            cfg.dataset.height = get_usize(d, "height", cfg.dataset.height);
+            cfg.dataset.slices = get_usize(d, "slices", cfg.dataset.slices);
+            cfg.dataset.seed = get_u64(d, "seed", cfg.dataset.seed);
+            cfg.dataset.salt_pepper =
+                get_f64(d, "salt_pepper", cfg.dataset.salt_pepper);
+            cfg.dataset.gaussian_sigma =
+                get_f64(d, "gaussian_sigma", cfg.dataset.gaussian_sigma);
+            cfg.dataset.ringing = get_f64(d, "ringing", cfg.dataset.ringing);
+        }
+        if let Some(o) = v.get("overseg") {
+            cfg.overseg.scale = get_f64(o, "scale", cfg.overseg.scale);
+            cfg.overseg.min_region =
+                get_usize(o, "min_region", cfg.overseg.min_region);
+        }
+        if let Some(m) = v.get("mrf") {
+            cfg.mrf.beta = get_f64(m, "beta", cfg.mrf.beta);
+            cfg.mrf.em_iters = get_usize(m, "em_iters", cfg.mrf.em_iters);
+            cfg.mrf.map_iters = get_usize(m, "map_iters", cfg.mrf.map_iters);
+            cfg.mrf.window = get_usize(m, "window", cfg.mrf.window);
+            cfg.mrf.threshold = get_f64(m, "threshold", cfg.mrf.threshold);
+            cfg.mrf.seed = get_u64(m, "seed", cfg.mrf.seed);
+            cfg.mrf.fixed_iters = m
+                .get("fixed_iters")
+                .and_then(Value::as_bool)
+                .unwrap_or(cfg.mrf.fixed_iters);
+        }
+        if let Some(e) = v.get("engine").and_then(Value::as_str) {
+            cfg.engine = EngineKind::parse(e)?;
+        }
+        cfg.threads = get_usize(v, "threads", cfg.threads);
+        cfg.grain = get_usize(v, "grain", cfg.grain);
+        if let Some(p) = v.get("artifacts_dir").and_then(Value::as_str) {
+            cfg.artifacts_dir = PathBuf::from(p);
+        }
+        if cfg.threads == 0 {
+            bail!("threads must be >= 1");
+        }
+        if cfg.mrf.window == 0 {
+            bail!("mrf.window must be >= 1");
+        }
+        Ok(cfg)
+    }
+
+    /// Serialize back to JSON (round-trips through `from_json`).
+    pub fn to_json(&self) -> Value {
+        Value::object(vec![
+            ("dataset", Value::object(vec![
+                ("kind", self.dataset.kind.name().into()),
+                ("width", self.dataset.width.into()),
+                ("height", self.dataset.height.into()),
+                ("slices", self.dataset.slices.into()),
+                ("seed", (self.dataset.seed as usize).into()),
+                ("salt_pepper", self.dataset.salt_pepper.into()),
+                ("gaussian_sigma", self.dataset.gaussian_sigma.into()),
+                ("ringing", self.dataset.ringing.into()),
+            ])),
+            ("overseg", Value::object(vec![
+                ("scale", self.overseg.scale.into()),
+                ("min_region", self.overseg.min_region.into()),
+            ])),
+            ("mrf", Value::object(vec![
+                ("beta", self.mrf.beta.into()),
+                ("em_iters", self.mrf.em_iters.into()),
+                ("map_iters", self.mrf.map_iters.into()),
+                ("window", self.mrf.window.into()),
+                ("threshold", self.mrf.threshold.into()),
+                ("seed", (self.mrf.seed as usize).into()),
+                ("fixed_iters", self.mrf.fixed_iters.into()),
+            ])),
+            ("engine", self.engine.name().into()),
+            ("threads", self.threads.into()),
+            ("grain", self.grain.into()),
+            ("artifacts_dir",
+             self.artifacts_dir.to_string_lossy().as_ref().into()),
+        ])
+    }
+
+    pub fn save_json(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())
+            .with_context(|| format!("write {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_round_trip() {
+        let cfg = RunConfig::default();
+        let v = cfg.to_json();
+        let back = RunConfig::from_json(&v).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn partial_json_gets_defaults() {
+        let v = json::parse(r#"{"engine": "serial", "threads": 2}"#).unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.engine, EngineKind::Serial);
+        assert_eq!(cfg.threads, 2);
+        assert_eq!(cfg.mrf.em_iters, 20);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let v = json::parse(r#"{"engine": "magic"}"#).unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"threads": 0}"#).unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn kinds_parse_and_name() {
+        for k in ["serial", "reference", "dpp", "xla"] {
+            assert_eq!(EngineKind::parse(k).unwrap().name(), k);
+        }
+        for d in ["synthetic", "experimental"] {
+            assert_eq!(DatasetKind::parse(d).unwrap().name(), d);
+        }
+    }
+}

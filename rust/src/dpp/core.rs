@@ -1,0 +1,380 @@
+//! Core primitives: Map, Reduce, Scan, Gather, Scatter.
+//!
+//! All primitives are deterministic for a given input regardless of
+//! backend *except* floating-point Reduce/Scan, whose association order
+//! differs between Serial and Threaded (documented per function). The
+//! MRF engines only compare reductions against convergence thresholds,
+//! so this is benign — and it mirrors the paper's situation exactly
+//! (TBB reductions are unordered too).
+
+use super::timing::timed;
+use super::Backend;
+
+/// Shared mutable output window for disjoint parallel writes.
+///
+/// Safety contract: every index is written by at most one chunk. All
+/// call sites in this module partition indices disjointly.
+pub(crate) struct SharedSlice<T>(*mut T, usize);
+
+unsafe impl<T: Send> Send for SharedSlice<T> {}
+unsafe impl<T: Send> Sync for SharedSlice<T> {}
+
+impl<T> SharedSlice<T> {
+    pub(crate) fn new(s: &mut [T]) -> Self {
+        SharedSlice(s.as_mut_ptr(), s.len())
+    }
+
+    /// Write `v` at `i`. Caller guarantees disjointness across threads.
+    #[inline]
+    pub(crate) unsafe fn write(&self, i: usize, v: T) {
+        debug_assert!(i < self.1);
+        unsafe { *self.0.add(i) = v }
+    }
+}
+
+/// Map: `out[i] = f(&input[i])`.
+pub fn map<T, U, F>(bk: &Backend, input: &[T], f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Copy + Default + Send,
+    F: Fn(&T) -> U + Sync,
+{
+    timed("Map", || {
+        let mut out = vec![U::default(); input.len()];
+        let win = SharedSlice::new(&mut out);
+        bk.for_chunks(input.len(), |s, e| {
+            for i in s..e {
+                unsafe { win.write(i, f(&input[i])) };
+            }
+        });
+        out
+    })
+}
+
+/// Map with the element index: `out[i] = f(i)`.
+pub fn map_indexed<U, F>(bk: &Backend, n: usize, f: F) -> Vec<U>
+where
+    U: Copy + Default + Send,
+    F: Fn(usize) -> U + Sync,
+{
+    timed("Map", || {
+        let mut out = vec![U::default(); n];
+        let win = SharedSlice::new(&mut out);
+        bk.for_chunks(n, |s, e| {
+            for i in s..e {
+                unsafe { win.write(i, f(i)) };
+            }
+        });
+        out
+    })
+}
+
+/// In-place Map over a mutable slice: `data[i] = f(i, data[i])`.
+pub fn map_in_place<T, F>(bk: &Backend, data: &mut [T], f: F)
+where
+    T: Copy + Send + Sync,
+    F: Fn(usize, T) -> T + Sync,
+{
+    timed("Map", || {
+        let n = data.len();
+        let win = SharedSlice::new(data);
+        let src = SharedConst(win.0 as *const T);
+        bk.for_chunks(n, |s, e| {
+            for i in s..e {
+                let v = unsafe { src.read(i) };
+                unsafe { win.write(i, f(i, v)) };
+            }
+        });
+    })
+}
+
+struct SharedConst<T>(*const T);
+unsafe impl<T: Sync> Send for SharedConst<T> {}
+unsafe impl<T: Sync> Sync for SharedConst<T> {}
+
+impl<T: Copy> SharedConst<T> {
+    /// Read index `i`. Caller guarantees no concurrent write to `i`.
+    #[inline]
+    unsafe fn read(&self, i: usize) -> T {
+        unsafe { *self.0.add(i) }
+    }
+}
+
+/// Zip-map: `out[i] = f(&a[i], &b[i])`.
+pub fn zip_map<A, B, U, F>(bk: &Backend, a: &[A], b: &[B], f: F) -> Vec<U>
+where
+    A: Sync,
+    B: Sync,
+    U: Copy + Default + Send,
+    F: Fn(&A, &B) -> U + Sync,
+{
+    assert_eq!(a.len(), b.len(), "zip_map length mismatch");
+    timed("Map", || {
+        let mut out = vec![U::default(); a.len()];
+        let win = SharedSlice::new(&mut out);
+        bk.for_chunks(a.len(), |s, e| {
+            for i in s..e {
+                unsafe { win.write(i, f(&a[i], &b[i])) };
+            }
+        });
+        out
+    })
+}
+
+/// Counting sequence `0..n` (VTK-m's ArrayHandleCounting materialized).
+pub fn iota(bk: &Backend, n: usize) -> Vec<u32> {
+    map_indexed(bk, n, |i| i as u32)
+}
+
+/// Reduce with an associative operation and its identity.
+///
+/// Floating-point note: association order is chunked under the
+/// Threaded backend.
+pub fn reduce<T, F>(bk: &Backend, input: &[T], identity: T, op: F) -> T
+where
+    T: Copy + Default + Send + Sync,
+    F: Fn(T, T) -> T + Sync,
+{
+    timed("Reduce", || {
+        let bounds = bk.chunk_bounds(input.len());
+        let mut partials = vec![identity; bounds.len()];
+        {
+            let win = SharedSlice::new(&mut partials);
+            let bounds_ref = &bounds;
+            bk.for_chunk_ids(bounds_ref.len(), |c| {
+                let (s, e) = bounds_ref[c];
+                let mut acc = identity;
+                for v in &input[s..e] {
+                    acc = op(acc, *v);
+                }
+                unsafe { win.write(c, acc) };
+            });
+        }
+        partials.into_iter().fold(identity, &op)
+    })
+}
+
+/// Exclusive scan (prefix "sum" with `op`); returns (scanned, total).
+pub fn scan_exclusive<T, F>(
+    bk: &Backend,
+    input: &[T],
+    identity: T,
+    op: F,
+) -> (Vec<T>, T)
+where
+    T: Copy + Default + Send + Sync,
+    F: Fn(T, T) -> T + Sync,
+{
+    timed("Scan", || {
+        let n = input.len();
+        let bounds = bk.chunk_bounds(n);
+        // Pass 1: per-chunk totals.
+        let mut partials = vec![identity; bounds.len()];
+        {
+            let win = SharedSlice::new(&mut partials);
+            let bounds_ref = &bounds;
+            bk.for_chunk_ids(bounds_ref.len(), |c| {
+                let (s, e) = bounds_ref[c];
+                let mut acc = identity;
+                for v in &input[s..e] {
+                    acc = op(acc, *v);
+                }
+                unsafe { win.write(c, acc) };
+            });
+        }
+        // Serial scan of chunk totals.
+        let mut offsets = vec![identity; bounds.len()];
+        let mut acc = identity;
+        for (c, p) in partials.iter().enumerate() {
+            offsets[c] = acc;
+            acc = op(acc, *p);
+        }
+        let total = acc;
+        // Pass 2: local exclusive scan + chunk offset.
+        let mut out = vec![identity; n];
+        {
+            let win = SharedSlice::new(&mut out);
+            let bounds_ref = &bounds;
+            let offsets_ref = &offsets;
+            bk.for_chunk_ids(bounds_ref.len(), |c| {
+                let (s, e) = bounds_ref[c];
+                let mut acc = offsets_ref[c];
+                for i in s..e {
+                    unsafe { win.write(i, acc) };
+                    acc = op(acc, input[i]);
+                }
+            });
+        }
+        (out, total)
+    })
+}
+
+/// Inclusive scan; returns the scanned array (last element = total).
+pub fn scan_inclusive<T, F>(bk: &Backend, input: &[T], identity: T, op: F)
+    -> Vec<T>
+where
+    T: Copy + Default + Send + Sync,
+    F: Fn(T, T) -> T + Sync,
+{
+    timed("Scan", || {
+        let n = input.len();
+        let bounds = bk.chunk_bounds(n);
+        let mut partials = vec![identity; bounds.len()];
+        {
+            let win = SharedSlice::new(&mut partials);
+            let bounds_ref = &bounds;
+            bk.for_chunk_ids(bounds_ref.len(), |c| {
+                let (s, e) = bounds_ref[c];
+                let mut acc = identity;
+                for v in &input[s..e] {
+                    acc = op(acc, *v);
+                }
+                unsafe { win.write(c, acc) };
+            });
+        }
+        let mut offsets = vec![identity; bounds.len()];
+        let mut acc = identity;
+        for (c, p) in partials.iter().enumerate() {
+            offsets[c] = acc;
+            acc = op(acc, *p);
+        }
+        let mut out = vec![identity; n];
+        {
+            let win = SharedSlice::new(&mut out);
+            let bounds_ref = &bounds;
+            let offsets_ref = &offsets;
+            bk.for_chunk_ids(bounds_ref.len(), |c| {
+                let (s, e) = bounds_ref[c];
+                let mut acc = offsets_ref[c];
+                for i in s..e {
+                    acc = op(acc, input[i]);
+                    unsafe { win.write(i, acc) };
+                }
+            });
+        }
+        out
+    })
+}
+
+/// Gather: `out[i] = src[idx[i]]`.
+pub fn gather<T>(bk: &Backend, src: &[T], idx: &[u32]) -> Vec<T>
+where
+    T: Copy + Default + Send + Sync,
+{
+    timed("Gather", || {
+        let mut out = vec![T::default(); idx.len()];
+        let win = SharedSlice::new(&mut out);
+        bk.for_chunks(idx.len(), |s, e| {
+            for i in s..e {
+                unsafe { win.write(i, src[idx[i] as usize]) };
+            }
+        });
+        out
+    })
+}
+
+/// Scatter: `out[idx[i]] = src[i]`.
+///
+/// Contract (same as VTK-m's ScatterPermutation): `idx` contains no
+/// duplicates — each output location is written at most once.
+pub fn scatter<T>(bk: &Backend, src: &[T], idx: &[u32], out: &mut [T])
+where
+    T: Copy + Send + Sync,
+{
+    assert_eq!(src.len(), idx.len(), "scatter length mismatch");
+    timed("Scatter", || {
+        let win = SharedSlice::new(out);
+        bk.for_chunks(src.len(), |s, e| {
+            for i in s..e {
+                unsafe { win.write(idx[i] as usize, src[i]) };
+            }
+        });
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pool::Pool;
+
+    fn backends() -> Vec<Backend> {
+        vec![
+            Backend::Serial,
+            Backend::threaded_with_grain(Pool::new(4), 64),
+        ]
+    }
+
+    #[test]
+    fn map_square() {
+        for bk in backends() {
+            let xs: Vec<u32> = (0..10_000).collect();
+            let ys = map(&bk, &xs, |x| x * x);
+            assert!(ys.iter().enumerate().all(|(i, &y)| y == (i * i) as u32));
+        }
+    }
+
+    #[test]
+    fn map_in_place_matches_map() {
+        for bk in backends() {
+            let mut xs: Vec<u32> = (0..5_000).collect();
+            map_in_place(&bk, &mut xs, |i, x| x + i as u32);
+            assert!(xs.iter().enumerate().all(|(i, &x)| x == 2 * i as u32));
+        }
+    }
+
+    #[test]
+    fn reduce_sum_and_min() {
+        for bk in backends() {
+            let xs: Vec<u64> = (1..=10_000).collect();
+            assert_eq!(reduce(&bk, &xs, 0u64, |a, b| a + b), 50_005_000);
+            assert_eq!(reduce(&bk, &xs, u64::MAX, |a, b| a.min(b)), 1);
+        }
+    }
+
+    #[test]
+    fn scans_match_serial_oracle() {
+        for bk in backends() {
+            let xs: Vec<u32> = (0..4_321).map(|i| i % 7).collect();
+            let (ex, total) = scan_exclusive(&bk, &xs, 0u32, |a, b| a + b);
+            let inc = scan_inclusive(&bk, &xs, 0u32, |a, b| a + b);
+            let mut acc = 0;
+            for i in 0..xs.len() {
+                assert_eq!(ex[i], acc, "exclusive @{i}");
+                acc += xs[i];
+                assert_eq!(inc[i], acc, "inclusive @{i}");
+            }
+            assert_eq!(total, acc);
+        }
+    }
+
+    #[test]
+    fn scan_empty() {
+        for bk in backends() {
+            let (ex, total) = scan_exclusive(&bk, &[] as &[u32], 0, |a, b| {
+                a + b
+            });
+            assert!(ex.is_empty());
+            assert_eq!(total, 0);
+        }
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        for bk in backends() {
+            let src: Vec<u32> = (0..1000).map(|i| i * 3).collect();
+            let idx: Vec<u32> = (0..1000).rev().collect();
+            let g = gather(&bk, &src, &idx);
+            assert_eq!(g[0], 999 * 3);
+            let mut out = vec![0u32; 1000];
+            scatter(&bk, &g, &idx, &mut out);
+            assert_eq!(out, src);
+        }
+    }
+
+    #[test]
+    fn iota_counts() {
+        for bk in backends() {
+            assert_eq!(iota(&bk, 5), vec![0, 1, 2, 3, 4]);
+        }
+    }
+}

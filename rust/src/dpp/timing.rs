@@ -1,0 +1,121 @@
+//! Per-primitive timing registry.
+//!
+//! The paper's scaling analysis (§4.3.2–4.3.3) hinges on a per-DPP
+//! runtime breakdown: SortByKey and ReduceByKey are identified as the
+//! scalability limiters. This registry reproduces that instrumentation:
+//! when enabled, every primitive invocation records (calls, nanos) under
+//! its canonical name; `benches/per_dpp_breakdown.rs` dumps the table.
+//!
+//! Disabled by default — the check is a single relaxed atomic load, so
+//! the hot path pays nothing measurable.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PrimStat {
+    pub calls: u64,
+    pub nanos: u64,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static REGISTRY: Mutex<BTreeMap<&'static str, PrimStat>> =
+    Mutex::new(BTreeMap::new());
+
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+pub fn reset() {
+    REGISTRY.lock().unwrap().clear();
+}
+
+/// Snapshot of all recorded primitive stats.
+pub fn snapshot() -> BTreeMap<&'static str, PrimStat> {
+    REGISTRY.lock().unwrap().clone()
+}
+
+/// Record `nanos` against `name` unconditionally (used by the runtime
+/// to report executable dispatch under the same table).
+pub fn record(name: &'static str, nanos: u64) {
+    let mut reg = REGISTRY.lock().unwrap();
+    let st = reg.entry(name).or_default();
+    st.calls += 1;
+    st.nanos += nanos;
+}
+
+/// Time `f` under `name` if profiling is enabled.
+#[inline]
+pub fn timed<R>(name: &'static str, f: impl FnOnce() -> R) -> R {
+    if !enabled() {
+        return f();
+    }
+    let t = Instant::now();
+    let r = f();
+    record(name, t.elapsed().as_nanos() as u64);
+    r
+}
+
+/// Render the registry as an aligned text table sorted by total time.
+pub fn report() -> String {
+    let snap = snapshot();
+    let total: u64 = snap.values().map(|s| s.nanos).sum();
+    let mut rows: Vec<_> = snap.into_iter().collect();
+    rows.sort_by_key(|(_, s)| std::cmp::Reverse(s.nanos));
+    let mut out = String::from(
+        "primitive            calls        total(ms)    share\n");
+    for (name, s) in rows {
+        out.push_str(&format!(
+            "{:<20} {:>8} {:>15.3} {:>8.1}%\n",
+            name,
+            s.calls,
+            s.nanos as f64 / 1e6,
+            if total > 0 { 100.0 * s.nanos as f64 / total as f64 } else { 0.0 }
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_when_enabled() {
+        reset();
+        set_enabled(true);
+        let v = timed("test-prim", || 41 + 1);
+        assert_eq!(v, 42);
+        timed("test-prim", || ());
+        let snap = snapshot();
+        assert_eq!(snap["test-prim"].calls, 2);
+        set_enabled(false);
+        reset();
+    }
+
+    #[test]
+    fn silent_when_disabled() {
+        reset();
+        set_enabled(false);
+        timed("ghost", || ());
+        assert!(snapshot().get("ghost").is_none());
+    }
+
+    #[test]
+    fn report_formats() {
+        reset();
+        set_enabled(true);
+        timed("alpha", || std::thread::sleep(
+            std::time::Duration::from_millis(1)));
+        let rep = report();
+        assert!(rep.contains("alpha"));
+        set_enabled(false);
+        reset();
+    }
+}

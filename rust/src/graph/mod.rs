@@ -1,0 +1,315 @@
+//! Region adjacency graph (RAG) in CSR form (paper §3.1/§3.2.1).
+//!
+//! Vertices are oversegmentation regions; an edge connects two regions
+//! whose pixels touch (4-connectivity). Two builders:
+//!
+//! * [`build_rag_serial`] — HashSet-based reference.
+//! * [`build_rag_dpp`] — the paper's data-parallel construction: Map
+//!   pixel pairs to packed edge keys, SortByKey, Unique, then CSR
+//!   offsets via ReduceByKey/Scan.
+
+use std::collections::BTreeSet;
+
+use crate::dpp::{self, Backend};
+use crate::overseg::Overseg;
+
+/// Compressed-sparse-row undirected graph. Neighbor lists are sorted
+/// ascending; every edge appears in both endpoints' lists.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Csr {
+    pub offsets: Vec<u32>,
+    pub neighbors: Vec<u32>,
+}
+
+impl Csr {
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.neighbors.len() / 2
+    }
+
+    #[inline]
+    pub fn neighbors_of(&self, v: u32) -> &[u32] {
+        &self.neighbors
+            [self.offsets[v as usize] as usize
+                ..self.offsets[v as usize + 1] as usize]
+    }
+
+    pub fn degree(&self, v: u32) -> usize {
+        self.neighbors_of(v).len()
+    }
+
+    /// Binary adjacency test (lists are sorted).
+    #[inline]
+    pub fn adjacent(&self, a: u32, b: u32) -> bool {
+        self.neighbors_of(a).binary_search(&b).is_ok()
+    }
+
+    /// Build from a deduplicated, sorted directed-edge list
+    /// (both directions present).
+    fn from_directed_sorted(n: usize, src: &[u32], dst: &[u32]) -> Csr {
+        let mut offsets = vec![0u32; n + 1];
+        for &s in src {
+            offsets[s as usize + 1] += 1;
+        }
+        for i in 0..n {
+            offsets[i + 1] += offsets[i];
+        }
+        Csr { offsets, neighbors: dst.to_vec() }
+    }
+}
+
+/// Serial RAG builder (reference for tests).
+pub fn build_rag_serial(seg: &Overseg) -> Csr {
+    let (w, h) = (seg.width, seg.height);
+    let mut edges: BTreeSet<(u32, u32)> = BTreeSet::new();
+    for y in 0..h {
+        for x in 0..w {
+            let a = seg.labels[y * w + x];
+            if x + 1 < w {
+                let b = seg.labels[y * w + x + 1];
+                if a != b {
+                    edges.insert((a.min(b), a.max(b)));
+                }
+            }
+            if y + 1 < h {
+                let b = seg.labels[(y + 1) * w + x];
+                if a != b {
+                    edges.insert((a.min(b), a.max(b)));
+                }
+            }
+        }
+    }
+    let mut src = Vec::with_capacity(edges.len() * 2);
+    let mut dst = Vec::with_capacity(edges.len() * 2);
+    let mut directed: Vec<(u32, u32)> = Vec::with_capacity(edges.len() * 2);
+    for &(a, b) in &edges {
+        directed.push((a, b));
+        directed.push((b, a));
+    }
+    directed.sort_unstable();
+    for (a, b) in directed {
+        src.push(a);
+        dst.push(b);
+    }
+    Csr::from_directed_sorted(seg.num_regions, &src, &dst)
+}
+
+/// Data-parallel RAG builder (paper's initialization, §3.2.1).
+pub fn build_rag_dpp(bk: &Backend, seg: &Overseg) -> Csr {
+    let (w, h) = (seg.width, seg.height);
+    let n_px = w * h;
+    let labels = &seg.labels;
+
+    // Map: each pixel emits up to 2 directed boundary-crossing pairs
+    // (right + down), canonicalized (min, max); non-edges emit a
+    // sentinel that sorts last and is trimmed after Unique.
+    const SENTINEL: u64 = u64::MAX;
+    let mk = |a: u32, b: u32| -> u64 {
+        if a == b {
+            SENTINEL
+        } else {
+            dpp::pack_pair(a.min(b), a.max(b))
+        }
+    };
+    let right: Vec<u64> = dpp::map_indexed(bk, n_px, |p| {
+        let (x, y) = (p % w, p / w);
+        if x + 1 < w { mk(labels[p], labels[y * w + x + 1]) } else { SENTINEL }
+    });
+    let down: Vec<u64> = dpp::map_indexed(bk, n_px, |p| {
+        let (x, y) = (p % w, p / w);
+        if y + 1 < h { mk(labels[p], labels[(y + 1) * w + x]) } else {
+            SENTINEL
+        }
+    });
+
+    // Concatenate, SortByKey, Unique, trim sentinels.
+    let mut keys = right;
+    keys.extend_from_slice(&down);
+    dpp::sort_keys(bk, &mut keys);
+    let uniq = dpp::unique(bk, &keys);
+    let m = uniq.partition_point(|&k| k != SENTINEL);
+    let undirected = &uniq[..m];
+
+    // Mirror to directed edges and sort again for CSR grouping.
+    let mut directed: Vec<u64> = Vec::with_capacity(m * 2);
+    directed.extend_from_slice(undirected);
+    directed.extend(undirected.iter().map(|&k| {
+        let (a, b) = dpp::unpack_pair(k);
+        dpp::pack_pair(b, a)
+    }));
+    dpp::sort_keys(bk, &mut directed);
+
+    let src: Vec<u32> = dpp::map(bk, &directed, |&k| dpp::unpack_pair(k).0);
+    let dst: Vec<u32> = dpp::map(bk, &directed, |&k| dpp::unpack_pair(k).1);
+    Csr::from_directed_sorted(seg.num_regions, &src, &dst)
+}
+
+/// 3D region adjacency graph over a volume oversegmentation
+/// ([`crate::overseg::oversegment_3d`]): 6-connectivity voxel pairs
+/// (x+1, y+1, z+1) through the same DPP Sort/Unique pipeline. Part of
+/// the paper's §5 future-work extension.
+pub fn build_rag_3d(
+    bk: &Backend,
+    seg: &Overseg,
+    width: usize,
+    height: usize,
+    depth: usize,
+) -> Csr {
+    assert_eq!(seg.labels.len(), width * height * depth);
+    let labels = &seg.labels;
+    let plane = width * height;
+    const SENTINEL: u64 = u64::MAX;
+    let mk = |a: u32, b: u32| -> u64 {
+        if a == b { SENTINEL } else { dpp::pack_pair(a.min(b), a.max(b)) }
+    };
+    let n_vx = labels.len();
+    let right: Vec<u64> = dpp::map_indexed(bk, n_vx, |p| {
+        if (p % width) + 1 < width { mk(labels[p], labels[p + 1]) } else {
+            SENTINEL
+        }
+    });
+    let down: Vec<u64> = dpp::map_indexed(bk, n_vx, |p| {
+        if (p % plane) / width + 1 < height {
+            mk(labels[p], labels[p + width])
+        } else {
+            SENTINEL
+        }
+    });
+    let deep: Vec<u64> = dpp::map_indexed(bk, n_vx, |p| {
+        if p / plane + 1 < depth { mk(labels[p], labels[p + plane]) } else {
+            SENTINEL
+        }
+    });
+
+    let mut keys = right;
+    keys.extend_from_slice(&down);
+    keys.extend_from_slice(&deep);
+    dpp::sort_keys(bk, &mut keys);
+    let uniq = dpp::unique(bk, &keys);
+    let m = uniq.partition_point(|&k| k != SENTINEL);
+    let undirected = &uniq[..m];
+
+    let mut directed: Vec<u64> = Vec::with_capacity(m * 2);
+    directed.extend_from_slice(undirected);
+    directed.extend(undirected.iter().map(|&k| {
+        let (a, b) = dpp::unpack_pair(k);
+        dpp::pack_pair(b, a)
+    }));
+    dpp::sort_keys(bk, &mut directed);
+    let src: Vec<u32> = dpp::map(bk, &directed, |&k| dpp::unpack_pair(k).0);
+    let dst: Vec<u32> = dpp::map(bk, &directed, |&k| dpp::unpack_pair(k).1);
+    Csr::from_directed_sorted(seg.num_regions, &src, &dst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OversegConfig;
+    use crate::image::synth;
+    use crate::overseg::oversegment;
+    use crate::pool::Pool;
+
+    fn seg_of(seed: u64) -> Overseg {
+        let v = synth::experimental_volume(48, 48, 1, seed);
+        oversegment(
+            &Backend::Serial,
+            &v.slice(0),
+            &OversegConfig { scale: 48.0, min_region: 4 },
+        )
+    }
+
+    #[test]
+    fn dpp_matches_serial() {
+        for seed in [1, 2, 3] {
+            let seg = seg_of(seed);
+            let a = build_rag_serial(&seg);
+            let b = build_rag_dpp(&Backend::Serial, &seg);
+            let c = build_rag_dpp(
+                &Backend::threaded_with_grain(Pool::new(4), 128),
+                &seg,
+            );
+            assert_eq!(a, b, "seed {seed}");
+            assert_eq!(a, c, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn csr_invariants() {
+        let seg = seg_of(4);
+        let g = build_rag_serial(&seg);
+        assert_eq!(g.num_vertices(), seg.num_regions);
+        assert_eq!(*g.offsets.last().unwrap() as usize, g.neighbors.len());
+        for v in 0..g.num_vertices() as u32 {
+            let ns = g.neighbors_of(v);
+            assert!(ns.windows(2).all(|w| w[0] < w[1]), "sorted, no dups");
+            assert!(!ns.contains(&v), "no self loops");
+            for &u in ns {
+                assert!(g.adjacent(u, v), "symmetry {u}<->{v}");
+            }
+        }
+    }
+
+    #[test]
+    fn rag_3d_connects_across_planes() {
+        use crate::image::Volume;
+        // Two flat slabs stacked in z: slab A (z=0), slab B (z=1) with
+        // different intensity -> 2 regions, adjacent only through z.
+        let mut v = Volume::new(4, 4, 2);
+        for y in 0..4 {
+            for x in 0..4 {
+                v.set(x, y, 1, 200);
+            }
+        }
+        let seg = crate::overseg::oversegment_3d(
+            &Backend::Serial,
+            &v,
+            &OversegConfig { scale: 32.0, min_region: 1 },
+        );
+        assert_eq!(seg.num_regions, 2);
+        let g = build_rag_3d(&Backend::Serial, &seg, 4, 4, 2);
+        assert_eq!(g.num_edges(), 1);
+        assert!(g.adjacent(0, 1));
+    }
+
+    #[test]
+    fn rag_3d_on_one_slice_matches_2d() {
+        let v = synth::experimental_volume(32, 32, 1, 8);
+        let seg2 = oversegment(
+            &Backend::Serial,
+            &v.slice(0),
+            &OversegConfig { scale: 48.0, min_region: 4 },
+        );
+        let seg3 = crate::overseg::oversegment_3d(
+            &Backend::Serial,
+            &v,
+            &OversegConfig { scale: 48.0, min_region: 4 },
+        );
+        assert_eq!(seg2.labels, seg3.labels, "single-slice equivalence");
+        let g2 = build_rag_serial(&seg2);
+        let g3 = build_rag_3d(&Backend::Serial, &seg3, 32, 32, 1);
+        assert_eq!(g2, g3);
+    }
+
+    #[test]
+    fn two_region_graph() {
+        use crate::image::Volume;
+        let mut img = Volume::new(8, 8, 1);
+        for y in 0..8 {
+            for x in 4..8 {
+                img.set(x, y, 0, 200);
+            }
+        }
+        let seg = oversegment(
+            &Backend::Serial,
+            &img.slice(0),
+            &OversegConfig { scale: 32.0, min_region: 1 },
+        );
+        assert_eq!(seg.num_regions, 2);
+        let g = build_rag_serial(&seg);
+        assert_eq!(g.num_edges(), 1);
+        assert!(g.adjacent(0, 1));
+    }
+}

@@ -1,0 +1,130 @@
+//! Corruption models applied to the clean volumes (paper §4.1.1):
+//! salt-and-pepper, additive Gaussian (σ = 100 on the 8-bit scale in
+//! the paper), and simulated CT ringing artifacts (concentric
+//! modulation around the slice center, cf. Perciano et al. 2017).
+
+use crate::util::Pcg32;
+
+use super::volume::Volume;
+
+/// Flip a `fraction` of voxels to 0 or 255 (half each, in expectation).
+pub fn salt_and_pepper(vol: &mut Volume, fraction: f64, seed: u64) {
+    let mut rng = Pcg32::seeded(seed ^ 0x5a17);
+    for v in vol.data.iter_mut() {
+        if (rng.f64()) < fraction {
+            *v = if rng.f32() < 0.5 { 0 } else { 255 };
+        }
+    }
+}
+
+/// Additive Gaussian noise with standard deviation `sigma` (8-bit
+/// scale), clamped to [0, 255].
+pub fn additive_gaussian(vol: &mut Volume, sigma: f64, seed: u64) {
+    if sigma <= 0.0 {
+        return;
+    }
+    let mut rng = Pcg32::seeded(seed ^ 0x9a55);
+    for v in vol.data.iter_mut() {
+        let nv = *v as f64 + rng.normal() * sigma;
+        *v = nv.clamp(0.0, 255.0) as u8;
+    }
+}
+
+/// Ring artifacts: concentric sinusoidal intensity modulation around
+/// the slice center, with mild per-ring phase jitter. `amplitude` is in
+/// 8-bit intensity units (0 disables).
+pub fn ringing(vol: &mut Volume, amplitude: f64, seed: u64) {
+    if amplitude <= 0.0 {
+        return;
+    }
+    let mut rng = Pcg32::seeded(seed ^ 0x2177);
+    let cx = vol.width as f64 / 2.0;
+    let cy = vol.height as f64 / 2.0;
+    let wavelength = 7.0;
+    for z in 0..vol.depth {
+        let phase = rng.f64() * std::f64::consts::TAU;
+        for y in 0..vol.height {
+            for x in 0..vol.width {
+                let r = ((x as f64 - cx).powi(2) + (y as f64 - cy).powi(2))
+                    .sqrt();
+                let m = amplitude
+                    * (r / wavelength * std::f64::consts::TAU + phase).sin();
+                let idx = (z * vol.height + y) * vol.width + x;
+                let nv = vol.data[idx] as f64 + m;
+                vol.data[idx] = nv.clamp(0.0, 255.0) as u8;
+            }
+        }
+    }
+}
+
+/// Apply the full corruption stack from a dataset config.
+pub fn corrupt(
+    vol: &mut Volume,
+    salt_pepper: f64,
+    gaussian_sigma: f64,
+    ringing_amp: f64,
+    seed: u64,
+) {
+    ringing(vol, ringing_amp, seed);
+    additive_gaussian(vol, gaussian_sigma, seed);
+    salt_and_pepper(vol, salt_pepper, seed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat(v: u8) -> Volume {
+        Volume::from_data(32, 32, 2, vec![v; 32 * 32 * 2])
+    }
+
+    #[test]
+    fn salt_pepper_flips_expected_fraction() {
+        let mut vol = flat(128);
+        salt_and_pepper(&mut vol, 0.1, 1);
+        let flipped =
+            vol.data.iter().filter(|&&v| v == 0 || v == 255).count();
+        let frac = flipped as f64 / vol.voxels() as f64;
+        assert!((frac - 0.1).abs() < 0.03, "frac={frac}");
+    }
+
+    #[test]
+    fn gaussian_preserves_mean_spreads_values() {
+        let mut vol = flat(128);
+        additive_gaussian(&mut vol, 30.0, 2);
+        let mean: f64 = vol.data.iter().map(|&v| v as f64).sum::<f64>()
+            / vol.voxels() as f64;
+        assert!((mean - 128.0).abs() < 3.0, "mean={mean}");
+        let distinct: std::collections::BTreeSet<u8> =
+            vol.data.iter().copied().collect();
+        assert!(distinct.len() > 30);
+    }
+
+    #[test]
+    fn gaussian_zero_sigma_noop() {
+        let mut vol = flat(100);
+        additive_gaussian(&mut vol, 0.0, 3);
+        assert!(vol.data.iter().all(|&v| v == 100));
+    }
+
+    #[test]
+    fn ringing_produces_radial_bands() {
+        let mut vol = flat(128);
+        ringing(&mut vol, 20.0, 4);
+        // center row should oscillate around 128
+        let row: Vec<i32> = (0..32)
+            .map(|x| vol.at(x, 16, 0) as i32 - 128)
+            .collect();
+        assert!(row.iter().any(|&d| d > 5));
+        assert!(row.iter().any(|&d| d < -5));
+    }
+
+    #[test]
+    fn corrupt_is_deterministic() {
+        let mut a = flat(90);
+        let mut b = flat(90);
+        corrupt(&mut a, 0.05, 50.0, 10.0, 9);
+        corrupt(&mut b, 0.05, 50.0, 10.0, 9);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,258 @@
+//! Procedural dataset generators (paper §4.1.1 substitutes).
+//!
+//! * [`porous_ground_truth`] — stands in for the NGCF Mt. Gambier
+//!   limestone benchmark: a binary (pore/solid) volume from thresholded
+//!   multi-octave value noise. Homogeneous texture => the region graph
+//!   has many small neighborhoods with a bell-shaped size distribution,
+//!   the property §4.3.3 ties to the synthetic dataset's behaviour.
+//! * [`experimental_volume`] — stands in for the ALS beamline 8.3.2
+//!   geological micro-CT scan: layered strata, fractures, and bright
+//!   inclusions => a denser region graph with an irregular
+//!   neighborhood-complexity distribution.
+//!
+//! Both are deterministic in the seed. See DESIGN.md §Substitutions.
+
+use crate::util::{splitmix64, Pcg32};
+
+use super::volume::Volume;
+
+/// Hash lattice point -> f64 in [0,1).
+#[inline]
+fn lattice(seed: u64, x: i64, y: i64, z: i64) -> f64 {
+    let h = splitmix64(
+        seed ^ (x as u64).wrapping_mul(0x9E3779B185EBCA87)
+            ^ (y as u64).wrapping_mul(0xC2B2AE3D27D4EB4F)
+            ^ (z as u64).wrapping_mul(0x165667B19E3779F9),
+    );
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+fn smooth(t: f64) -> f64 {
+    t * t * (3.0 - 2.0 * t)
+}
+
+/// Trilinear value noise at a continuous point.
+fn value_noise(seed: u64, x: f64, y: f64, z: f64) -> f64 {
+    let (xi, yi, zi) = (x.floor() as i64, y.floor() as i64, z.floor() as i64);
+    let (fx, fy, fz) =
+        (smooth(x - xi as f64), smooth(y - yi as f64), smooth(z - zi as f64));
+    let mut acc = 0.0;
+    for (dz, wz) in [(0i64, 1.0 - fz), (1, fz)] {
+        for (dy, wy) in [(0i64, 1.0 - fy), (1, fy)] {
+            for (dx, wx) in [(0i64, 1.0 - fx), (1, fx)] {
+                acc += wx * wy * wz
+                    * lattice(seed, xi + dx, yi + dy, zi + dz);
+            }
+        }
+    }
+    acc
+}
+
+/// Multi-octave fractal value noise in [0,1] (approximately).
+fn fbm(seed: u64, x: f64, y: f64, z: f64, octaves: u32) -> f64 {
+    let mut acc = 0.0;
+    let mut amp = 0.5;
+    let mut freq = 1.0;
+    let mut norm = 0.0;
+    for o in 0..octaves {
+        acc += amp
+            * value_noise(seed.wrapping_add(o as u64), x * freq, y * freq,
+                          z * freq);
+        norm += amp;
+        amp *= 0.5;
+        freq *= 2.0;
+    }
+    acc / norm
+}
+
+/// Binary porous-media ground truth: 0 = void (pore), 255 = solid.
+///
+/// `porosity` sets the target void fraction; the threshold is chosen
+/// from the data's own quantile, so the achieved porosity is within a
+/// percent of the target.
+pub fn porous_ground_truth(
+    width: usize,
+    height: usize,
+    depth: usize,
+    porosity: f64,
+    seed: u64,
+) -> Volume {
+    let feature = 12.0; // lattice cells across the short axis
+    let scale = feature / width.min(height).max(1) as f64;
+    let mut field = Vec::with_capacity(width * height * depth);
+    for z in 0..depth {
+        for y in 0..height {
+            for x in 0..width {
+                field.push(fbm(
+                    seed,
+                    x as f64 * scale,
+                    y as f64 * scale,
+                    z as f64 * scale * 2.0,
+                    4,
+                ));
+            }
+        }
+    }
+    // Quantile threshold for the requested porosity.
+    let mut sorted = field.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = ((sorted.len() as f64 - 1.0) * porosity.clamp(0.0, 1.0)) as usize;
+    let thresh = sorted[q];
+    let data =
+        field.iter().map(|&v| if v <= thresh { 0u8 } else { 255 }).collect();
+    Volume::from_data(width, height, depth, data)
+}
+
+/// Grayscale "experimental" geological volume (no clean ground truth):
+/// depth-warped strata + dark fractures + bright inclusions + a gentle
+/// illumination gradient.
+pub fn experimental_volume(
+    width: usize,
+    height: usize,
+    depth: usize,
+    seed: u64,
+) -> Volume {
+    let mut vol = Volume::new(width, height, depth);
+    let mut rng = Pcg32::seeded(seed);
+
+    // Strata intensity bands.
+    let bands = [60.0f64, 120.0, 90.0, 170.0, 140.0, 200.0];
+    let band_h = (height as f64 / bands.len() as f64).max(1.0);
+
+    for z in 0..depth {
+        for y in 0..height {
+            for x in 0..width {
+                // Warp the band boundary with low-frequency noise.
+                let warp = 18.0
+                    * (fbm(seed ^ 0xA11CE, x as f64 / 48.0, z as f64 / 8.0,
+                           0.0, 3)
+                        - 0.5);
+                let fy = (y as f64 + warp).clamp(0.0, height as f64 - 1.0);
+                let band = ((fy / band_h) as usize).min(bands.len() - 1);
+                let base = bands[band];
+                // Fine texture within a band.
+                let tex = 22.0
+                    * (fbm(seed ^ 0xBEEF, x as f64 / 6.0, y as f64 / 6.0,
+                           z as f64 / 3.0, 3)
+                        - 0.5);
+                // Illumination gradient (common in beamline scans).
+                let grad = 14.0 * (x as f64 / width.max(1) as f64 - 0.5);
+                let v = (base + tex + grad).clamp(0.0, 255.0);
+                vol.set(x, y, z, v as u8);
+            }
+        }
+    }
+
+    // Fractures: dark polylines meandering downward.
+    let n_cracks = (width / 24).max(2);
+    for _ in 0..n_cracks {
+        let mut x = rng.below(width as u32) as f64;
+        let z0 = rng.below(depth as u32) as usize;
+        let z1 = (z0 + 1 + rng.below(depth as u32) as usize).min(depth);
+        for y in 0..height {
+            x += rng.normal() * 0.9;
+            let xi = x.round();
+            if xi < 0.0 || xi >= width as f64 {
+                break;
+            }
+            for z in z0..z1 {
+                let xi = xi as usize;
+                vol.set(xi, y, z, 15);
+                if xi + 1 < width {
+                    vol.set(xi + 1, y, z, 25);
+                }
+            }
+        }
+    }
+
+    // Bright mineral inclusions: small ellipsoids.
+    let n_inc = (width * height / 900).max(4);
+    for _ in 0..n_inc {
+        let cx = rng.below(width as u32) as f64;
+        let cy = rng.below(height as u32) as f64;
+        let cz = rng.below(depth as u32) as f64;
+        let rx = 1.5 + rng.f64() * 4.0;
+        let ry = 1.5 + rng.f64() * 4.0;
+        let rz = 1.0 + rng.f64() * 2.0;
+        let lo_x = (cx - rx).max(0.0) as usize;
+        let hi_x = ((cx + rx) as usize + 1).min(width);
+        let lo_y = (cy - ry).max(0.0) as usize;
+        let hi_y = ((cy + ry) as usize + 1).min(height);
+        let lo_z = (cz - rz).max(0.0) as usize;
+        let hi_z = ((cz + rz) as usize + 1).min(depth);
+        for z in lo_z..hi_z {
+            for y in lo_y..hi_y {
+                for x in lo_x..hi_x {
+                    let d = ((x as f64 - cx) / rx).powi(2)
+                        + ((y as f64 - cy) / ry).powi(2)
+                        + ((z as f64 - cz) / rz).powi(2);
+                    if d <= 1.0 {
+                        vol.set(x, y, z, 235);
+                    }
+                }
+            }
+        }
+    }
+
+    vol
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn porous_hits_target_porosity() {
+        let v = porous_ground_truth(64, 64, 2, 0.4, 7);
+        let p = v.zero_fraction();
+        assert!((p - 0.4).abs() < 0.02, "porosity {p}");
+        // binary output
+        assert!(v.data.iter().all(|&x| x == 0 || x == 255));
+    }
+
+    #[test]
+    fn porous_deterministic_and_seed_sensitive() {
+        let a = porous_ground_truth(32, 32, 2, 0.4, 1);
+        let b = porous_ground_truth(32, 32, 2, 0.4, 1);
+        let c = porous_ground_truth(32, 32, 2, 0.4, 2);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn porous_has_structure_not_salt() {
+        // Neighboring voxels should agree far more often than 50%:
+        // the field is spatially correlated, not pixel noise.
+        let v = porous_ground_truth(64, 64, 1, 0.4, 3);
+        let mut agree = 0usize;
+        let mut total = 0usize;
+        for y in 0..64 {
+            for x in 0..63 {
+                agree += usize::from(v.at(x, y, 0) == v.at(x + 1, y, 0));
+                total += 1;
+            }
+        }
+        assert!(agree as f64 / total as f64 > 0.85);
+    }
+
+    #[test]
+    fn experimental_is_multimodal_grayscale() {
+        let v = experimental_volume(96, 96, 2, 11);
+        let mut hist = [0usize; 256];
+        for &p in &v.data {
+            hist[p as usize] += 1;
+        }
+        // spread across the range, not binary
+        let nonzero_bins = hist.iter().filter(|&&c| c > 0).count();
+        assert!(nonzero_bins > 40, "bins={nonzero_bins}");
+        // contains dark fractures and bright inclusions
+        assert!(hist[15] + hist[25] > 0, "fractures missing");
+        assert!(hist[235] > 0, "inclusions missing");
+    }
+
+    #[test]
+    fn experimental_deterministic() {
+        assert_eq!(experimental_volume(32, 32, 2, 5),
+                   experimental_volume(32, 32, 2, 5));
+    }
+}

@@ -1,0 +1,90 @@
+//! Threshold baselines (the "simple threshold" comparison of Figs. 1d
+//! and 2d): fixed-level and Otsu's method.
+
+use super::volume::Volume;
+
+/// Global histogram of an 8-bit volume.
+pub fn histogram(vol: &Volume) -> [u64; 256] {
+    let mut h = [0u64; 256];
+    for &v in &vol.data {
+        h[v as usize] += 1;
+    }
+    h
+}
+
+/// Otsu's threshold: maximizes between-class variance.
+pub fn otsu_level(vol: &Volume) -> u8 {
+    let hist = histogram(vol);
+    let total: u64 = hist.iter().sum();
+    if total == 0 {
+        return 127;
+    }
+    let sum_all: f64 =
+        hist.iter().enumerate().map(|(i, &c)| i as f64 * c as f64).sum();
+    let mut w0 = 0u64;
+    let mut sum0 = 0.0f64;
+    let mut best = (0.0f64, 127u8);
+    for t in 0..256 {
+        w0 += hist[t];
+        if w0 == 0 {
+            continue;
+        }
+        let w1 = total - w0;
+        if w1 == 0 {
+            break;
+        }
+        sum0 += t as f64 * hist[t] as f64;
+        let m0 = sum0 / w0 as f64;
+        let m1 = (sum_all - sum0) / w1 as f64;
+        let between = w0 as f64 * w1 as f64 * (m0 - m1) * (m0 - m1);
+        if between > best.0 {
+            best = (between, t as u8);
+        }
+    }
+    best.1
+}
+
+/// Binarize: `v > level` -> 255 else 0.
+pub fn apply(vol: &Volume, level: u8) -> Volume {
+    let data =
+        vol.data.iter().map(|&v| if v > level { 255u8 } else { 0 }).collect();
+    Volume::from_data(vol.width, vol.height, vol.depth, data)
+}
+
+/// Otsu-thresholded copy (the paper's "simple threshold" baseline).
+pub fn otsu(vol: &Volume) -> Volume {
+    apply(vol, otsu_level(vol))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn otsu_separates_bimodal() {
+        // Two tight modes at 50 and 200 -> threshold between them.
+        let mut data = vec![50u8; 500];
+        data.extend(vec![200u8; 500]);
+        let v = Volume::from_data(10, 10, 10, data);
+        let t = otsu_level(&v);
+        assert!((50..200).contains(&t), "t={t}");
+        let b = otsu(&v);
+        assert_eq!(b.data.iter().filter(|&&x| x == 255).count(), 500);
+    }
+
+    #[test]
+    fn apply_level_boundary() {
+        let v = Volume::from_data(1, 1, 3, vec![10, 11, 12]);
+        let b = apply(&v, 11);
+        assert_eq!(b.data, vec![0, 0, 255]);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let v = Volume::from_data(1, 1, 4, vec![3, 3, 7, 255]);
+        let h = histogram(&v);
+        assert_eq!(h[3], 2);
+        assert_eq!(h[7], 1);
+        assert_eq!(h[255], 1);
+    }
+}

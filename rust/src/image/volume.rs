@@ -1,0 +1,246 @@
+//! Grayscale image volumes (8-bit), the unit the whole pipeline
+//! consumes. 3D stacks are processed as independent 2D slices, exactly
+//! as the paper does (§4.3.1, §5).
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// An 8-bit grayscale 3D volume stored slice-major (z, then y, then x).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Volume {
+    pub width: usize,
+    pub height: usize,
+    pub depth: usize,
+    pub data: Vec<u8>,
+}
+
+impl Volume {
+    pub fn new(width: usize, height: usize, depth: usize) -> Volume {
+        Volume { width, height, depth, data: vec![0; width * height * depth] }
+    }
+
+    pub fn from_data(width: usize, height: usize, depth: usize,
+                     data: Vec<u8>) -> Volume {
+        assert_eq!(data.len(), width * height * depth);
+        Volume { width, height, depth, data }
+    }
+
+    #[inline]
+    pub fn slice_len(&self) -> usize {
+        self.width * self.height
+    }
+
+    #[inline]
+    pub fn voxels(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Borrow slice `z` as a 2D image view.
+    pub fn slice(&self, z: usize) -> ImageSlice<'_> {
+        let n = self.slice_len();
+        ImageSlice {
+            width: self.width,
+            height: self.height,
+            pixels: &self.data[z * n..(z + 1) * n],
+        }
+    }
+
+    pub fn slice_mut(&mut self, z: usize) -> &mut [u8] {
+        let n = self.slice_len();
+        &mut self.data[z * n..(z + 1) * n]
+    }
+
+    #[inline]
+    pub fn at(&self, x: usize, y: usize, z: usize) -> u8 {
+        self.data[(z * self.height + y) * self.width + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, z: usize, v: u8) {
+        self.data[(z * self.height + y) * self.width + x] = v;
+    }
+
+    /// Fraction of voxels equal to 0 — the porosity metric's raw input
+    /// when 0 encodes void space.
+    pub fn zero_fraction(&self) -> f64 {
+        let zeros = self.data.iter().filter(|&&v| v == 0).count();
+        zeros as f64 / self.voxels() as f64
+    }
+
+    /// Write slice `z` as a binary PGM (P5) file.
+    pub fn write_pgm(&self, z: usize, path: &Path) -> Result<()> {
+        let img = self.slice(z);
+        let mut out = format!("P5\n{} {}\n255\n", img.width, img.height)
+            .into_bytes();
+        out.extend_from_slice(img.pixels);
+        std::fs::write(path, out)
+            .with_context(|| format!("write {}", path.display()))
+    }
+
+    /// Read a single-slice volume from a binary PGM (P5) file.
+    pub fn read_pgm(path: &Path) -> Result<Volume> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        parse_pgm(&bytes)
+    }
+
+    /// Raw dump: u8 voxels, slice-major, with a tiny JSON sidecar for
+    /// dimensions (`<path>.meta.json`).
+    pub fn write_raw(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, &self.data)
+            .with_context(|| format!("write {}", path.display()))?;
+        let meta = crate::json::Value::object(vec![
+            ("width", self.width.into()),
+            ("height", self.height.into()),
+            ("depth", self.depth.into()),
+        ]);
+        std::fs::write(sidecar(path), meta.to_pretty())
+            .with_context(|| format!("write {}", sidecar(path).display()))
+    }
+
+    pub fn read_raw(path: &Path) -> Result<Volume> {
+        let meta = crate::json::from_file(&sidecar(path))?;
+        let (w, h, d) = (
+            meta.get("width").and_then(|v| v.as_usize()),
+            meta.get("height").and_then(|v| v.as_usize()),
+            meta.get("depth").and_then(|v| v.as_usize()),
+        );
+        let (Some(w), Some(h), Some(d)) = (w, h, d) else {
+            bail!("bad sidecar {}", sidecar(path).display());
+        };
+        let data = std::fs::read(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        if data.len() != w * h * d {
+            bail!("raw size {} != {}x{}x{}", data.len(), w, h, d);
+        }
+        Ok(Volume::from_data(w, h, d, data))
+    }
+}
+
+fn sidecar(path: &Path) -> std::path::PathBuf {
+    let mut s = path.as_os_str().to_owned();
+    s.push(".meta.json");
+    std::path::PathBuf::from(s)
+}
+
+fn parse_pgm(bytes: &[u8]) -> Result<Volume> {
+    // Header: "P5" <ws> width <ws> height <ws> maxval <single ws> data
+    let mut pos = 0usize;
+    let mut token = || -> Result<String> {
+        // skip whitespace + comments
+        loop {
+            while pos < bytes.len() && bytes[pos].is_ascii_whitespace() {
+                pos += 1;
+            }
+            if pos < bytes.len() && bytes[pos] == b'#' {
+                while pos < bytes.len() && bytes[pos] != b'\n' {
+                    pos += 1;
+                }
+            } else {
+                break;
+            }
+        }
+        let start = pos;
+        while pos < bytes.len() && !bytes[pos].is_ascii_whitespace() {
+            pos += 1;
+        }
+        if start == pos {
+            bail!("truncated PGM header");
+        }
+        Ok(String::from_utf8_lossy(&bytes[start..pos]).into_owned())
+    };
+    let magic = token()?;
+    if magic != "P5" {
+        bail!("not a binary PGM (magic {magic})");
+    }
+    let w: usize = token()?.parse().context("PGM width")?;
+    let h: usize = token()?.parse().context("PGM height")?;
+    let maxval: usize = token()?.parse().context("PGM maxval")?;
+    if maxval != 255 {
+        bail!("only maxval 255 supported (got {maxval})");
+    }
+    pos += 1; // single whitespace after maxval
+    if bytes.len() < pos + w * h {
+        bail!("PGM data truncated");
+    }
+    Ok(Volume::from_data(w, h, 1, bytes[pos..pos + w * h].to_vec()))
+}
+
+/// Borrowed 2D view of one slice.
+#[derive(Debug, Clone, Copy)]
+pub struct ImageSlice<'a> {
+    pub width: usize,
+    pub height: usize,
+    pub pixels: &'a [u8],
+}
+
+impl<'a> ImageSlice<'a> {
+    #[inline]
+    pub fn at(&self, x: usize, y: usize) -> u8 {
+        self.pixels[y * self.width + x]
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.pixels.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.pixels.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_math() {
+        let mut v = Volume::new(3, 2, 2);
+        v.set(2, 1, 1, 9);
+        assert_eq!(v.at(2, 1, 1), 9);
+        assert_eq!(v.data[(1 * 2 + 1) * 3 + 2], 9);
+        assert_eq!(v.slice(1).at(2, 1), 9);
+    }
+
+    #[test]
+    fn pgm_round_trip() {
+        let dir = std::env::temp_dir().join("dpp_pmrf_pgm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.pgm");
+        let mut v = Volume::new(4, 3, 1);
+        for (i, p) in v.data.iter_mut().enumerate() {
+            *p = (i * 7 % 256) as u8;
+        }
+        v.write_pgm(0, &path).unwrap();
+        let back = Volume::read_pgm(&path).unwrap();
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn raw_round_trip() {
+        let dir = std::env::temp_dir().join("dpp_pmrf_raw_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.raw");
+        let mut v = Volume::new(5, 4, 3);
+        for (i, p) in v.data.iter_mut().enumerate() {
+            *p = (i % 251) as u8;
+        }
+        v.write_raw(&path).unwrap();
+        let back = Volume::read_raw(&path).unwrap();
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn pgm_rejects_bad() {
+        assert!(parse_pgm(b"P6\n1 1\n255\n\x00").is_err());
+        assert!(parse_pgm(b"P5\n4 4\n255\n\x00").is_err()); // truncated
+    }
+
+    #[test]
+    fn zero_fraction() {
+        let v = Volume::from_data(2, 2, 1, vec![0, 255, 0, 255]);
+        assert_eq!(v.zero_fraction(), 0.5);
+    }
+}

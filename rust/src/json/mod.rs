@@ -1,0 +1,59 @@
+//! Minimal JSON substrate (parser + serializer).
+//!
+//! The offline registry has no `serde`; configs, artifact manifests and
+//! benchmark reports all go through this module. It implements the full
+//! JSON grammar (RFC 8259) minus `\u` surrogate-pair edge refinements,
+//! which none of our documents use.
+
+mod parse;
+mod value;
+
+pub use parse::{parse, ParseError};
+pub use value::Value;
+
+/// Convenience: parse a file.
+pub fn from_file(path: &std::path::Path) -> anyhow::Result<Value> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+    parse(&text).map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let src = r#"{"a": [1, 2.5, -3e2], "b": {"c": true, "d": null},
+                      "s": "hi\n\"there\""}"#;
+        let v = parse(src).unwrap();
+        let text = v.to_string();
+        let v2 = parse(&text).unwrap();
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn accessors() {
+        let v = parse(r#"{"n": 3, "xs": [1, 2], "s": "x", "f": false}"#)
+            .unwrap();
+        assert_eq!(v.get("n").and_then(Value::as_i64), Some(3));
+        assert_eq!(v.get("xs").and_then(Value::as_array).map(|a| a.len()),
+                   Some(2));
+        assert_eq!(v.get("s").and_then(Value::as_str), Some("x"));
+        assert_eq!(v.get("f").and_then(Value::as_bool), Some(false));
+        assert!(v.get("missing").is_none());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        for bad in ["", "{", "[1,]", "{\"a\":}", "tru", "\"\\x\"", "1 2"] {
+            assert!(parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn unicode_escape() {
+        let v = parse(r#""Aé""#).unwrap();
+        assert_eq!(v.as_str(), Some("Aé"));
+    }
+}

@@ -1,0 +1,36 @@
+//! # DPP-PMRF
+//!
+//! Reproduction of *“DPP-PMRF: Rethinking Optimization for a
+//! Probabilistic Graphical Model Using Data-Parallel Primitives”*
+//! (Lessley et al., 2018): Markov-Random-Field image segmentation
+//! reformulated entirely in terms of data-parallel primitives, with a
+//! serial baseline, a coarse-parallel "OpenMP" reference engine, the
+//! fine-grained DPP engine, and an AOT-compiled XLA/PJRT accelerator
+//! path (JAX + Pallas at build time, rust-only at run time).
+//!
+//! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the
+//! reproduced tables/figures.
+
+pub mod bench_support;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dpp;
+pub mod graph;
+pub mod image;
+pub mod json;
+pub mod mce;
+pub mod metrics;
+pub mod mrf;
+pub mod overseg;
+pub mod pool;
+pub mod runtime;
+pub mod util;
+
+/// Convenient re-exports for examples and benches.
+pub mod prelude {
+    pub use crate::config::{DatasetKind, EngineKind, RunConfig};
+    pub use crate::dpp::Backend;
+    pub use crate::pool::Pool;
+    pub use crate::util::{Pcg32, Timer};
+}

@@ -1,0 +1,226 @@
+//! `dpp-pmrf` launcher.
+//!
+//! Subcommands:
+//!   generate  — build a synthetic/experimental dataset and save it
+//!   segment   — run the full segmentation pipeline on a dataset
+//!   inspect   — dataset/graph demographics (paper §4.3.3 analysis)
+//!   engines   — list available engines and artifact buckets
+//!
+//! Benchmarks live in `rust/benches/` (`cargo bench`); examples in
+//! `examples/` (`cargo run --release --example quickstart`).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use dpp_pmrf::cli::Spec;
+use dpp_pmrf::config::{DatasetKind, EngineKind, RunConfig};
+use dpp_pmrf::coordinator::Coordinator;
+use dpp_pmrf::image::{self, Dataset, Volume};
+use dpp_pmrf::util::logging::{self, Level};
+use dpp_pmrf::{log_info, metrics};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("{e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        bail!(top_usage());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "generate" => cmd_generate(rest),
+        "segment" => cmd_segment(rest),
+        "inspect" => cmd_inspect(rest),
+        "engines" => cmd_engines(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", top_usage());
+            Ok(())
+        }
+        other => bail!("unknown command `{other}`\n\n{}", top_usage()),
+    }
+}
+
+fn top_usage() -> String {
+    "dpp-pmrf — DPP-based parallel MRF image segmentation \
+     (Lessley et al. 2018 reproduction)\n\nUSAGE:\n  dpp-pmrf \
+     <generate|segment|inspect|engines> [options]\n\nRun a subcommand \
+     with --help for details."
+        .to_string()
+}
+
+/// Shared dataset/config options.
+fn common_spec(spec: Spec) -> Spec {
+    spec.opt("config", "JSON config file (flags override)", None)
+        .opt("dataset", "synthetic|experimental", Some("synthetic"))
+        .opt("width", "slice width", Some("128"))
+        .opt("height", "slice height", Some("128"))
+        .opt("slices", "number of slices", Some("4"))
+        .opt("seed", "dataset seed", Some("24414"))
+        .flag("verbose", "debug logging")
+}
+
+fn load_cfg(m: &dpp_pmrf::cli::Matches) -> Result<RunConfig> {
+    let mut cfg = match m.get("config") {
+        Some(path) => RunConfig::from_json_file(Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    if let Some(d) = m.get("dataset") {
+        cfg.dataset.kind = DatasetKind::parse(d)?;
+    }
+    if let Some(w) = m.get_parse::<usize>("width")? {
+        cfg.dataset.width = w;
+    }
+    if let Some(h) = m.get_parse::<usize>("height")? {
+        cfg.dataset.height = h;
+    }
+    if let Some(s) = m.get_parse::<usize>("slices")? {
+        cfg.dataset.slices = s;
+    }
+    if let Some(s) = m.get_parse::<u64>("seed")? {
+        cfg.dataset.seed = s;
+    }
+    if m.flag("verbose") {
+        logging::set_level(Level::Debug);
+    }
+    Ok(cfg)
+}
+
+fn load_or_generate(m: &dpp_pmrf::cli::Matches, cfg: &RunConfig)
+    -> Result<Dataset> {
+    if let Some(path) = m.get("input") {
+        let input = Volume::read_raw(Path::new(path))?;
+        log_info!("loaded {}: {}x{}x{}", path, input.width, input.height,
+                  input.depth);
+        Ok(Dataset { input, ground_truth: None, name: "file" })
+    } else {
+        log_info!("generating {} dataset ({}x{}x{}, seed {})",
+                  cfg.dataset.kind.name(), cfg.dataset.width,
+                  cfg.dataset.height, cfg.dataset.slices, cfg.dataset.seed);
+        Ok(image::generate(&cfg.dataset))
+    }
+}
+
+fn cmd_generate(args: &[String]) -> Result<()> {
+    let spec = common_spec(Spec::new("dpp-pmrf generate",
+                                     "generate a dataset to disk"))
+        .opt("out", "output raw volume path", Some("dataset.raw"));
+    let m = spec.parse(args)?;
+    let cfg = load_cfg(&m)?;
+    let ds = image::generate(&cfg.dataset);
+    let out = PathBuf::from(m.get("out").unwrap());
+    ds.input.write_raw(&out)?;
+    if let Some(t) = &ds.ground_truth {
+        let mut truth_path = out.as_os_str().to_owned();
+        truth_path.push(".truth");
+        t.write_raw(Path::new(&truth_path))?;
+        log_info!("ground truth porosity {:.3}", metrics::porosity(t));
+    }
+    log_info!("wrote {}", out.display());
+    Ok(())
+}
+
+fn cmd_segment(args: &[String]) -> Result<()> {
+    let spec = common_spec(Spec::new("dpp-pmrf segment",
+                                     "run the segmentation pipeline"))
+        .opt("engine", "serial|reference|dpp|xla", Some("dpp"))
+        .opt("threads", "worker threads (default: all cores)", None)
+        .opt("input", "raw volume to segment instead of generating", None)
+        .opt("out", "write segmented raw volume here", None)
+        .opt("figures", "write PGM figure panels to this directory", None)
+        .opt("report", "write a JSON run report here", None)
+        .opt("artifacts", "XLA artifacts dir", Some("artifacts"));
+    let m = spec.parse(args)?;
+    let mut cfg = load_cfg(&m)?;
+    cfg.engine = EngineKind::parse(m.get("engine").unwrap())?;
+    if let Some(t) = m.get_parse::<usize>("threads")? {
+        cfg.threads = t;
+    }
+    cfg.artifacts_dir = PathBuf::from(m.get("artifacts").unwrap());
+
+    let ds = load_or_generate(&m, &cfg)?;
+    let coord = Coordinator::new(cfg.clone())?;
+    log_info!("engine {} / {} threads", cfg.engine.name(), cfg.threads);
+    let report = coord.run(&ds)?;
+
+    log_info!(
+        "mean per-slice: init {:.3}s, optimization {:.3}s",
+        report.mean_init_secs(),
+        report.mean_opt_secs()
+    );
+    if let Some(c) = &report.confusion {
+        log_info!("{}", metrics::summary(c));
+    }
+    log_info!("porosity {:.3}", report.porosity);
+
+    if let Some(out) = m.get("out") {
+        report.output.write_raw(Path::new(out))?;
+        log_info!("wrote {}", out);
+    }
+    if let Some(dir) = m.get("figures") {
+        coord.save_figure(&ds, &report, 0, Path::new(dir))?;
+        log_info!("wrote figure panels to {}", dir);
+    }
+    if let Some(path) = m.get("report") {
+        std::fs::write(path, report.to_json().to_pretty())?;
+        log_info!("wrote {}", path);
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &[String]) -> Result<()> {
+    let spec = common_spec(Spec::new(
+        "dpp-pmrf inspect",
+        "dataset / graph / neighborhood demographics",
+    ));
+    let m = spec.parse(args)?;
+    let cfg = load_cfg(&m)?;
+    let ds = image::generate(&cfg.dataset);
+    let coord = Coordinator::new(cfg)?;
+    let (seg, model) = coord.build_slice_model(&ds.input, 0);
+    println!("slice 0 of {}:", ds.name);
+    println!("  regions      {}", seg.num_regions);
+    println!("  edges        {}", model.graph.num_edges());
+    println!("  hoods        {}", model.hoods.num_hoods());
+    println!("  elements     {}", model.hoods.num_elements());
+    let hist = model.hoods.size_histogram(4);
+    println!(
+        "  hood size    mean {:.1}, max {}, irregularity {:.2}",
+        hist.mean(),
+        hist.max,
+        hist.irregularity()
+    );
+    println!("{}", hist.render(40));
+    Ok(())
+}
+
+fn cmd_engines(args: &[String]) -> Result<()> {
+    let spec = Spec::new("dpp-pmrf engines",
+                         "list engines and XLA artifact buckets")
+        .opt("artifacts", "XLA artifacts dir", Some("artifacts"));
+    let m = spec.parse(args)?;
+    println!("engines: serial, reference (OpenMP analog), dpp (paper), \
+              dpp-fused, xla (PJRT accelerator path)");
+    let dir = PathBuf::from(m.get("artifacts").unwrap());
+    match dpp_pmrf::runtime::EmRuntime::load(&dir) {
+        Ok(rt) => {
+            println!("artifact buckets in {}:", dir.display());
+            for (n, h) in rt.buckets() {
+                println!("  elems {n:>8}  hoods {h:>8}");
+            }
+        }
+        Err(e) => println!("xla runtime unavailable: {e}"),
+    }
+    let _ = Arc::new(());
+    Ok(())
+}

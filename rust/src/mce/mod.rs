@@ -1,0 +1,363 @@
+//! Maximal clique enumeration (MCE) over the region adjacency graph.
+//!
+//! The MRF neighborhood structure is built from maximal cliques
+//! (paper §3.1–3.2; DPP-based MCE is Lessley et al., LDAV 2017 [23]).
+//! Two implementations:
+//!
+//! * [`enumerate_serial`] — Bron–Kerbosch with pivoting (the classical
+//!   reference; also the correctness oracle).
+//! * [`enumerate_dpp`] — iterative, breadth-first *ordered expansion*
+//!   composed from DPPs: level k holds all k-cliques as a flat array;
+//!   Map counts ascending extensions, Scan allocates, Map fills, Map
+//!   flags maximality, CopyIf compacts the maximal ones. Every clique
+//!   (sorted ascending) is generated exactly once from its prefix, so
+//!   no dedup sort is needed.
+//!
+//! RAGs are near-planar, so cliques are small (≤ 4 in practice) and the
+//! level count stays tiny.
+
+use crate::dpp::{self, Backend};
+use crate::graph::Csr;
+
+/// A set of cliques in ragged CSR-like storage. Each clique's vertices
+/// are sorted ascending.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct CliqueSet {
+    pub offsets: Vec<u32>,
+    pub members: Vec<u32>,
+}
+
+impl CliqueSet {
+    pub fn num_cliques(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    pub fn clique(&self, i: usize) -> &[u32] {
+        &self.members[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+    }
+
+    pub fn push(&mut self, clique: &[u32]) {
+        if self.offsets.is_empty() {
+            self.offsets.push(0);
+        }
+        self.members.extend_from_slice(clique);
+        self.offsets.push(self.members.len() as u32);
+    }
+
+    /// Canonical form for comparisons: cliques sorted lexicographically.
+    pub fn normalized(&self) -> Vec<Vec<u32>> {
+        let mut all: Vec<Vec<u32>> = (0..self.num_cliques())
+            .map(|i| self.clique(i).to_vec())
+            .collect();
+        all.sort();
+        all
+    }
+
+    /// Rebuild in canonical (lexicographic) clique order. Both
+    /// enumerators finish with this so hood numbering is identical no
+    /// matter which backend built the model.
+    fn canonicalize(self) -> CliqueSet {
+        let mut out = CliqueSet::default();
+        out.offsets.push(0);
+        for clique in self.normalized() {
+            out.push(&clique);
+        }
+        out
+    }
+}
+
+/// Bron–Kerbosch with pivoting. Emits cliques with members ascending.
+pub fn enumerate_serial(g: &Csr) -> CliqueSet {
+    let n = g.num_vertices();
+    let mut out = CliqueSet::default();
+    if n == 0 {
+        out.offsets.push(0);
+        return out;
+    }
+    let mut r: Vec<u32> = Vec::new();
+    let p: Vec<u32> = (0..n as u32).collect();
+    let x: Vec<u32> = Vec::new();
+    bron_kerbosch(g, &mut r, p, x, &mut out);
+    if out.offsets.is_empty() {
+        out.offsets.push(0);
+    }
+    out.canonicalize()
+}
+
+fn bron_kerbosch(
+    g: &Csr,
+    r: &mut Vec<u32>,
+    p: Vec<u32>,
+    x: Vec<u32>,
+    out: &mut CliqueSet,
+) {
+    if p.is_empty() && x.is_empty() {
+        let mut clique = r.clone();
+        clique.sort_unstable();
+        out.push(&clique);
+        return;
+    }
+    // Pivot: vertex of P ∪ X with most neighbors in P.
+    let pivot = p
+        .iter()
+        .chain(x.iter())
+        .copied()
+        .max_by_key(|&u| {
+            p.iter().filter(|&&v| g.adjacent(u, v)).count()
+        })
+        .unwrap();
+    let candidates: Vec<u32> =
+        p.iter().copied().filter(|&v| !g.adjacent(pivot, v)).collect();
+    let mut p = p;
+    let mut x = x;
+    for v in candidates {
+        let nv = g.neighbors_of(v);
+        let p2: Vec<u32> =
+            p.iter().copied().filter(|&u| nv.binary_search(&u).is_ok())
+                .collect();
+        let x2: Vec<u32> =
+            x.iter().copied().filter(|&u| nv.binary_search(&u).is_ok())
+                .collect();
+        r.push(v);
+        bron_kerbosch(g, r, p2, x2, out);
+        r.pop();
+        p.retain(|&u| u != v);
+        x.push(v);
+    }
+}
+
+/// Is `w` adjacent to every vertex of `clique`?
+#[inline]
+fn adjacent_to_all(g: &Csr, w: u32, clique: &[u32]) -> bool {
+    clique.iter().all(|&u| g.adjacent(w, u))
+}
+
+/// Does any vertex extend `clique` (i.e. is it NOT maximal)?
+/// Scans the neighbor list of the clique's minimum-degree member.
+fn has_extension(g: &Csr, clique: &[u32]) -> bool {
+    let probe = *clique
+        .iter()
+        .min_by_key(|&&v| g.degree(v))
+        .expect("non-empty clique");
+    g.neighbors_of(probe).iter().any(|&w| {
+        !clique.contains(&w) && adjacent_to_all(g, w, clique)
+    })
+}
+
+/// DPP-based MCE by ordered expansion (see module docs).
+pub fn enumerate_dpp(bk: &Backend, g: &Csr) -> CliqueSet {
+    let n = g.num_vertices();
+    let mut out = CliqueSet::default();
+    out.offsets.push(0);
+    if n == 0 {
+        return out;
+    }
+
+    // Isolated vertices are maximal 1-cliques.
+    let isolated = dpp::select_indices(bk, n, |v| g.degree(v as u32) == 0);
+    for v in &isolated {
+        out.push(&[*v]);
+    }
+
+    // Level 2: every undirected edge (u < v), flattened from CSR by a
+    // CopyIf over the directed neighbor array.
+    let dir_src: Vec<u32> = {
+        // src vertex of each directed CSR entry
+        let mut src = vec![0u32; g.neighbors.len()];
+        for v in 0..n {
+            for i in g.offsets[v] as usize..g.offsets[v + 1] as usize {
+                src[i] = v as u32;
+            }
+        }
+        src
+    };
+    let fwd = dpp::select_indices(bk, g.neighbors.len(), |i| {
+        dir_src[i] < g.neighbors[i]
+    });
+    let mut level: Vec<u32> = Vec::with_capacity(fwd.len() * 2);
+    for &i in &fwd {
+        level.push(dir_src[i as usize]);
+        level.push(g.neighbors[i as usize]);
+    }
+    let mut k = 2usize;
+
+    while !level.is_empty() {
+        let count = level.len() / k;
+        let cliques = &level;
+
+        // Maximality flags (Map over cliques).
+        let maximal: Vec<u32> = dpp::map_indexed(bk, count, |c| {
+            u32::from(!has_extension(g, &cliques[c * k..(c + 1) * k]))
+        });
+        for c in 0..count {
+            if maximal[c] == 1 {
+                out.push(&cliques[c * k..(c + 1) * k]);
+            }
+        }
+
+        // Ascending extensions: w > max(C), adjacent to all of C.
+        // Map: count per clique.
+        let ext_counts: Vec<u32> = dpp::map_indexed(bk, count, |c| {
+            let cl = &cliques[c * k..(c + 1) * k];
+            let max = cl[k - 1];
+            g.neighbors_of(max)
+                .iter()
+                .filter(|&&w| w > max && adjacent_to_all(g, w, &cl[..k - 1]))
+                .count() as u32
+        });
+        // Scan: output offsets.
+        let (offs, total) =
+            dpp::scan_exclusive(bk, &ext_counts, 0u32, |a, b| a + b);
+        if total == 0 {
+            break;
+        }
+        // Map: fill the (k+1)-clique array.
+        let mut next = vec![0u32; total as usize * (k + 1)];
+        {
+            let win = crate::dpp::core::SharedSlice::new(&mut next);
+            let offs_ref = &offs;
+            bk.for_chunks(count, |s, e| {
+                for c in s..e {
+                    let cl = &cliques[c * k..(c + 1) * k];
+                    let max = cl[k - 1];
+                    let mut slot = offs_ref[c] as usize;
+                    for &w in g.neighbors_of(max) {
+                        if w > max && adjacent_to_all(g, w, &cl[..k - 1]) {
+                            let base = slot * (k + 1);
+                            for (j, &u) in cl.iter().enumerate() {
+                                unsafe { win.write(base + j, u) };
+                            }
+                            unsafe { win.write(base + k, w) };
+                            slot += 1;
+                        }
+                    }
+                }
+            });
+        }
+        level = next;
+        k += 1;
+        assert!(k <= 64, "clique size blew up — not a RAG-like graph?");
+    }
+    out.canonicalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pool::Pool;
+    use crate::util::Pcg32;
+
+    /// Build a CSR from an undirected edge list.
+    fn csr(n: usize, edges: &[(u32, u32)]) -> Csr {
+        let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for &(a, b) in edges {
+            adj[a as usize].push(b);
+            adj[b as usize].push(a);
+        }
+        let mut offsets = vec![0u32];
+        let mut neighbors = Vec::new();
+        for l in adj.iter_mut() {
+            l.sort_unstable();
+            l.dedup();
+            neighbors.extend_from_slice(l);
+            offsets.push(neighbors.len() as u32);
+        }
+        Csr { offsets, neighbors }
+    }
+
+    fn backends() -> Vec<Backend> {
+        vec![
+            Backend::Serial,
+            Backend::threaded_with_grain(Pool::new(4), 16),
+        ]
+    }
+
+    #[test]
+    fn triangle_plus_tail() {
+        // 0-1-2 triangle, 2-3 tail: maximal cliques {0,1,2}, {2,3}
+        let g = csr(4, &[(0, 1), (1, 2), (0, 2), (2, 3)]);
+        let want = vec![vec![0, 1, 2], vec![2, 3]];
+        assert_eq!(enumerate_serial(&g).normalized(), want);
+        for bk in backends() {
+            assert_eq!(enumerate_dpp(&bk, &g).normalized(), want);
+        }
+    }
+
+    #[test]
+    fn isolated_vertices_are_cliques() {
+        let g = csr(3, &[(0, 1)]);
+        let want = vec![vec![0, 1], vec![2]];
+        assert_eq!(enumerate_serial(&g).normalized(), want);
+        for bk in backends() {
+            assert_eq!(enumerate_dpp(&bk, &g).normalized(), want);
+        }
+    }
+
+    #[test]
+    fn k4_single_clique() {
+        let g = csr(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)]);
+        let want = vec![vec![0, 1, 2, 3]];
+        assert_eq!(enumerate_serial(&g).normalized(), want);
+        for bk in backends() {
+            assert_eq!(enumerate_dpp(&bk, &g).normalized(), want);
+        }
+    }
+
+    #[test]
+    fn moon_graph_overlapping_cliques() {
+        // Two triangles sharing an edge: {0,1,2}, {1,2,3}
+        let g = csr(4, &[(0, 1), (0, 2), (1, 2), (1, 3), (2, 3)]);
+        let want = vec![vec![0, 1, 2], vec![1, 2, 3]];
+        assert_eq!(enumerate_serial(&g).normalized(), want);
+        for bk in backends() {
+            assert_eq!(enumerate_dpp(&bk, &g).normalized(), want);
+        }
+    }
+
+    #[test]
+    fn random_sparse_graphs_agree() {
+        let mut rng = Pcg32::seeded(99);
+        for trial in 0..10 {
+            let n = 30 + (trial * 7) % 40;
+            let m = n * 2;
+            let mut edges = Vec::new();
+            for _ in 0..m {
+                let a = rng.below(n as u32);
+                let b = rng.below(n as u32);
+                if a != b {
+                    edges.push((a.min(b), a.max(b)));
+                }
+            }
+            let g = csr(n, &edges);
+            let want = enumerate_serial(&g).normalized();
+            for bk in backends() {
+                assert_eq!(enumerate_dpp(&bk, &g).normalized(), want,
+                           "trial {trial}");
+            }
+        }
+    }
+
+    #[test]
+    fn cliques_cover_all_vertices() {
+        // Every vertex appears in at least one maximal clique.
+        let mut rng = Pcg32::seeded(5);
+        let n = 50;
+        let mut edges = Vec::new();
+        for _ in 0..80 {
+            let a = rng.below(n as u32);
+            let b = rng.below(n as u32);
+            if a != b {
+                edges.push((a.min(b), a.max(b)));
+            }
+        }
+        let g = csr(n, &edges);
+        let cs = enumerate_serial(&g);
+        let mut seen = vec![false; n];
+        for i in 0..cs.num_cliques() {
+            for &v in cs.clique(i) {
+                seen[v as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

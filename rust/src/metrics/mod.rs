@@ -1,0 +1,129 @@
+//! Verification metrics (paper §4.2.1): precision, recall, accuracy
+//! from a voxel confusion matrix, plus porosity (void fraction).
+
+use crate::image::Volume;
+
+/// Voxel-level confusion matrix for binary volumes (0 = negative/void,
+/// 255 = positive/solid).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Confusion {
+    pub tp: u64,
+    pub tn: u64,
+    pub fp: u64,
+    pub fn_: u64,
+}
+
+impl Confusion {
+    /// Compare a predicted binary volume against ground truth.
+    pub fn from_volumes(pred: &Volume, truth: &Volume) -> Confusion {
+        assert_eq!(pred.data.len(), truth.data.len(), "shape mismatch");
+        let mut c = Confusion::default();
+        for (&p, &t) in pred.data.iter().zip(truth.data.iter()) {
+            match (p > 127, t > 127) {
+                (true, true) => c.tp += 1,
+                (false, false) => c.tn += 1,
+                (true, false) => c.fp += 1,
+                (false, true) => c.fn_ += 1,
+            }
+        }
+        c
+    }
+
+    pub fn total(&self) -> u64 {
+        self.tp + self.tn + self.fp + self.fn_
+    }
+
+    /// precision = TP / (TP + FP)
+    pub fn precision(&self) -> f64 {
+        ratio(self.tp, self.tp + self.fp)
+    }
+
+    /// recall = TP / (TP + FN)
+    pub fn recall(&self) -> f64 {
+        ratio(self.tp, self.tp + self.fn_)
+    }
+
+    /// accuracy = (TP + TN) / total
+    pub fn accuracy(&self) -> f64 {
+        ratio(self.tp + self.tn, self.total())
+    }
+
+    /// F1 = harmonic mean of precision and recall.
+    pub fn f1(&self) -> f64 {
+        let p = self.precision();
+        let r = self.recall();
+        if p + r == 0.0 { 0.0 } else { 2.0 * p * r / (p + r) }
+    }
+}
+
+fn ratio(num: u64, den: u64) -> f64 {
+    if den == 0 { 0.0 } else { num as f64 / den as f64 }
+}
+
+/// Porosity ρ = V_void / V_total for a binary volume (0 = void).
+pub fn porosity(vol: &Volume) -> f64 {
+    vol.zero_fraction()
+}
+
+/// Pretty one-line metric summary (percentages, paper style).
+pub fn summary(c: &Confusion) -> String {
+    format!(
+        "precision {:.1}%  recall {:.1}%  accuracy {:.1}%  f1 {:.1}%",
+        c.precision() * 100.0,
+        c.recall() * 100.0,
+        c.accuracy() * 100.0,
+        c.f1() * 100.0
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vol(data: Vec<u8>) -> Volume {
+        let n = data.len();
+        Volume::from_data(n, 1, 1, data)
+    }
+
+    #[test]
+    fn perfect_prediction() {
+        let t = vol(vec![0, 255, 255, 0]);
+        let c = Confusion::from_volumes(&t, &t);
+        assert_eq!(c.precision(), 1.0);
+        assert_eq!(c.recall(), 1.0);
+        assert_eq!(c.accuracy(), 1.0);
+        assert_eq!(c.f1(), 1.0);
+    }
+
+    #[test]
+    fn known_confusion_counts() {
+        let truth = vol(vec![255, 255, 0, 0]);
+        let pred = vol(vec![255, 0, 255, 0]);
+        let c = Confusion::from_volumes(&pred, &truth);
+        assert_eq!((c.tp, c.fn_, c.fp, c.tn), (1, 1, 1, 1));
+        assert_eq!(c.precision(), 0.5);
+        assert_eq!(c.recall(), 0.5);
+        assert_eq!(c.accuracy(), 0.5);
+    }
+
+    #[test]
+    fn degenerate_no_positives() {
+        let truth = vol(vec![0, 0]);
+        let pred = vol(vec![0, 0]);
+        let c = Confusion::from_volumes(&pred, &truth);
+        assert_eq!(c.precision(), 0.0); // no positive predictions
+        assert_eq!(c.accuracy(), 1.0);
+    }
+
+    #[test]
+    fn porosity_counts_zeros() {
+        assert_eq!(porosity(&vol(vec![0, 0, 255, 255])), 0.5);
+    }
+
+    #[test]
+    fn summary_formats() {
+        let c = Confusion { tp: 99, tn: 1, fp: 1, fn_: 1 };
+        let s = summary(&c);
+        assert!(s.contains("precision 99.0%"));
+    }
+}

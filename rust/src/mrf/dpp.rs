@@ -1,0 +1,522 @@
+//! DPP-PMRF engine — the paper's contribution (Alg. 2, §3.2.2).
+//!
+//! Every step of the EM/MAP optimization is a composition of the
+//! [`crate::dpp`] primitives over flat element arrays:
+//!
+//! 1. **Gather** current labels to elements.
+//! 2. **ReduceByKey⟨Add⟩** per-hood label-1 counts; **Gather** back.
+//! 3. **Map** the energy function over the label-replicated element
+//!    array (2n entries: label-0 copies then label-1 copies — the
+//!    paper's `testLabel`/`oldIndex` layout, with the replication
+//!    simulated by index arithmetic instead of materialized, as in the
+//!    paper's "memory-free Gather").
+//! 4. **SortByKey** replicated energies by element id to pair the two
+//!    label copies, then **ReduceByKey⟨Min⟩** for per-vertex-instance
+//!    minima (paper mode). The *fused* mode computes both energies and
+//!    the min in one Map — the L1-kernel layout — and skips the sort;
+//!    `benches/ablation_sort.rs` quantifies the difference.
+//! 5. **Gather + ReduceByKey⟨Min⟩** over the static by-vertex grouping
+//!    to resolve each vertex's label (deterministic tie-break).
+//! 6. **ReduceByKey⟨Add⟩** per-hood energy sums; **Map/Reduce** for the
+//!    convergence windows; **Scatter** labels back.
+//! 7. Per-label parameter statistics via chunked **Reduce**.
+
+use crate::config::MrfConfig;
+use crate::dpp::{self, Backend};
+
+use super::energy::{self, Params};
+use super::params::{self, Stats};
+use super::{ConvergenceWindow, Engine, EmResult, HoodWindows, MrfModel};
+
+/// Label-pairing strategy for step 4.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PairMode {
+    /// Paper-literal §3.2.2 pipeline: replicate energies (2n),
+    /// SortByKey by element, ReduceByKey<Min>. Kept for the per-DPP
+    /// breakdown (§4.3.2 reproduces on it) and the sort ablation.
+    Paper,
+    /// Default (§Perf result): fused energy+min Map — the exact layout
+    /// the L1 Pallas kernel uses — over *static* hood/vertex segments,
+    /// with a preallocated workspace (no per-iteration allocation, no
+    /// sort). Bitwise-identical results to Paper mode.
+    #[default]
+    Fused,
+}
+
+pub struct DppEngine {
+    backend: Backend,
+    pub mode: PairMode,
+}
+
+impl DppEngine {
+    pub fn new(backend: Backend) -> Self {
+        DppEngine { backend, mode: PairMode::default() }
+    }
+
+    pub fn with_mode(backend: Backend, mode: PairMode) -> Self {
+        DppEngine { backend, mode }
+    }
+
+    pub fn backend(&self) -> &Backend {
+        &self.backend
+    }
+}
+
+impl Engine for DppEngine {
+    fn name(&self) -> &'static str {
+        match self.mode {
+            PairMode::Paper => "dpp-paper",
+            PairMode::Fused => "dpp",
+        }
+    }
+
+    fn run(&self, model: &MrfModel, cfg: &MrfConfig) -> EmResult {
+        match self.mode {
+            PairMode::Paper => self.run_paper(model, cfg),
+            PairMode::Fused => self.run_fused(model, cfg),
+        }
+    }
+}
+
+impl DppEngine {
+    /// Paper-literal pipeline built from the generic primitives.
+    fn run_paper(&self, model: &MrfModel, cfg: &MrfConfig) -> EmResult {
+        let bk = &self.backend;
+        let h = &model.hoods;
+        let n = h.num_elements();
+        let nh = h.num_hoods();
+        let nv = model.num_vertices();
+
+        // ---- static arrays (built once; Alg. 2 lines 1–5) ----
+        let y_elem: Vec<f32> = dpp::gather(bk, &model.y, &h.members);
+        let size_h: Vec<f32> =
+            dpp::map_indexed(bk, nh, |i| h.hood_size(i) as f32);
+        let size_e: Vec<f32> = dpp::gather(bk, &size_h, &h.hood_id);
+        // Vertex grouping for step 5: keys (grouped by construction)
+        // and the element gather indices.
+        let vert_keys: Vec<u32> = dpp::map_indexed(bk, n, |i| {
+            h.members[h.vert_elems[i] as usize]
+        });
+
+        let (mut prm, mut labels_u8) =
+            params::init_random(nv, cfg.beta as f32, cfg.seed);
+        let mut labels: Vec<f32> =
+            dpp::map(bk, &labels_u8, |&l| l as f32);
+
+        let mut em_window = ConvergenceWindow::new(cfg.window, cfg.threshold);
+        let mut total_map = 0usize;
+        let mut em_iters = 0usize;
+        let mut amin: Vec<u8> = Vec::new();
+
+        for _em in 0..cfg.em_iters {
+            em_iters += 1;
+            let mut hw = HoodWindows::new(nh, cfg.window, cfg.threshold);
+            let mut hood_energy_f64: Vec<f64> = vec![0.0; nh];
+
+            for _map in 0..cfg.map_iters {
+                total_map += 1;
+
+                // (1) Gather labels to elements.
+                let lbl_e: Vec<f32> = dpp::gather(bk, &labels, &h.members);
+                // (2) Per-hood label-1 counts; gather back to elements.
+                let (_, ones_h) = dpp::reduce_by_key(
+                    bk, &h.hood_id, &lbl_e, 0.0f32, |a, b| a + b,
+                );
+                let ones_e: Vec<f32> = dpp::gather(bk, &ones_h, &h.hood_id);
+
+                // (3)+(4) energies and per-instance minima.
+                let (e_min, a_min) = pair_paper(
+                    bk, n, &y_elem, &lbl_e, &ones_e, &size_e, &prm,
+                );
+
+                // (5) Per-vertex resolution over the static grouping.
+                let packed: Vec<u64> = dpp::zip_map(
+                    bk, &e_min, &a_min,
+                    |&e, &a| energy::pack_energy_label(e, a),
+                );
+                let packed_by_vert: Vec<u64> =
+                    dpp::gather(bk, &packed, &h.vert_elems);
+                let (_, best) = dpp::reduce_by_key(
+                    bk, &vert_keys, &packed_by_vert, u64::MAX,
+                    |a, b| a.min(b),
+                );
+                // Scatter resolved labels back to the vertex array.
+                // (vert_keys is ascending-grouped and covers exactly the
+                // vertices that appear in hoods.)
+                let resolved: Vec<f32> =
+                    dpp::map(bk, &best, |&p| energy::unpack_label(p) as f32);
+                let touched = dpp::unique(bk, &vert_keys);
+                dpp::scatter(bk, &resolved, &touched, &mut labels);
+
+                // (6) Per-hood energy sums + convergence.
+                let emin_f64: Vec<f64> =
+                    dpp::map(bk, &e_min, |&e| e as f64);
+                let (_, he) = dpp::reduce_by_key(
+                    bk, &h.hood_id, &emin_f64, 0.0f64, |a, b| a + b,
+                );
+                hood_energy_f64 = he;
+                amin = a_min;
+
+                let done = hw.push_all(&hood_energy_f64);
+                if done && !cfg.fixed_iters {
+                    break;
+                }
+            }
+
+            // (7) Parameter statistics (chunked Reduce in chunk order).
+            let stats = stats_reduce(bk, &amin, &y_elem);
+            prm = params::update(&stats, cfg.beta as f32);
+
+            let total: f64 = hood_energy_f64.iter().sum();
+            em_window.push(total);
+            if em_window.converged() && !cfg.fixed_iters {
+                break;
+            }
+        }
+
+        labels_u8 = dpp::map(bk, &labels, |&l| l as u8);
+        EmResult {
+            labels: labels_u8,
+            em_iters,
+            map_iters: total_map,
+            energy: *em_window.history().last().unwrap_or(&0.0),
+            history: em_window.history().to_vec(),
+            params: prm,
+        }
+    }
+}
+
+/// Paper-mode pairing: replicated energy Map over 2n, SortByKey by
+/// element id, ReduceByKey<Min> (§3.2.2 steps 2–3).
+fn pair_paper(
+    bk: &Backend,
+    n: usize,
+    y: &[f32],
+    lbl: &[f32],
+    ones: &[f32],
+    size: &[f32],
+    prm: &Params,
+) -> (Vec<f32>, Vec<u8>) {
+    // Replicated energies: i < n -> label 0 copy; i >= n -> label 1.
+    // The oldIndex back-gather is index arithmetic (i % n) — the
+    // paper's memory-free Gather.
+    let pp = energy::Prepared::from_params(prm);
+    let e_rep: Vec<f32> = dpp::map_indexed(bk, 2 * n, |i| {
+        let e = i % n;
+        let (e0, e1) =
+            energy::energy_pair_p(y[e], lbl[e], ones[e], size[e], &pp);
+        if i < n { e0 } else { e1 }
+    });
+    // SortByKey: key = element id, payload = replicated index. The
+    // radix sort is stable, so the label-0 copy stays first per key.
+    let mut keys: Vec<u64> =
+        dpp::map_indexed(bk, 2 * n, |i| (i % n) as u64);
+    let mut vals: Vec<u32> = dpp::iota(bk, 2 * n);
+    dpp::sort_by_key(bk, &mut keys, &mut vals);
+    // ReduceByKey<Min-by-energy>: strict '<' keeps the first (label 0)
+    // copy on ties, matching the kernel's tie-break.
+    let e_rep_ref = &e_rep;
+    let (_, win) = dpp::reduce_by_key(
+        bk, &keys, &vals, u32::MAX,
+        |a, b| {
+            if a == u32::MAX {
+                return b;
+            }
+            if b == u32::MAX {
+                return a;
+            }
+            if e_rep_ref[b as usize] < e_rep_ref[a as usize] { b } else { a }
+        },
+    );
+    let emin: Vec<f32> = dpp::map(bk, &win, |&i| e_rep[i as usize]);
+    let amin: Vec<u8> =
+        dpp::map(bk, &win, |&i| u8::from(i as usize >= n));
+    (emin, amin)
+}
+
+impl DppEngine {
+    /// Optimized fused pipeline (§Perf; see `PairMode::Fused`).
+    ///
+    /// Three static-segment passes per MAP iteration, all over
+    /// preallocated workspace (zero per-iteration allocation):
+    ///
+    /// 1. **Map over hoods** (fused ReduceByKey + energy Map — the L1
+    ///    kernel layout): per hood, sum the members' labels (`ones_h`),
+    ///    then compute each member's fused energy-min and the hood's
+    ///    energy sum. Both sweeps stay in cache.
+    /// 2. **ReduceByKey⟨Min⟩ over vertices** (static grouping): resolve
+    ///    each vertex's label from its instances' packed minima.
+    /// 3. Per-label statistics via chunked Reduce (per EM iteration).
+    ///
+    /// Bitwise-identical to the serial engine and to Paper mode (same
+    /// f32 op order within hoods/vertices).
+    fn run_fused(&self, model: &MrfModel, cfg: &MrfConfig) -> EmResult {
+        use crate::dpp::core::SharedSlice;
+        use crate::dpp::timing::timed;
+
+        let bk = &self.backend;
+        let h = &model.hoods;
+        let n = h.num_elements();
+        let nh = h.num_hoods();
+        let nv = model.num_vertices();
+        let y_elem = model.y_elems();
+
+        // Grains in hood/vertex units scaled from the element grain.
+        let elem_grain = match bk {
+            Backend::Serial => usize::MAX,
+            Backend::Threaded { grain, .. } => *grain,
+        };
+        let hood_grain =
+            (elem_grain / (n / nh.max(1)).max(1)).clamp(1, usize::MAX);
+        let vert_grain =
+            (elem_grain / (n / nv.max(1)).max(1)).clamp(1, usize::MAX);
+
+        let (mut prm, mut labels) =
+            params::init_random(nv, cfg.beta as f32, cfg.seed);
+
+        // Workspace (allocated once).
+        let mut emin = vec![0.0f32; n];
+        let mut amin = vec![0u8; n];
+        let mut ones_h = vec![0.0f32; nh];
+        let mut hood_energy = vec![0.0f64; nh];
+
+        let mut em_window = ConvergenceWindow::new(cfg.window, cfg.threshold);
+        let mut total_map = 0usize;
+        let mut em_iters = 0usize;
+
+        for _em in 0..cfg.em_iters {
+            em_iters += 1;
+            let mut hw = HoodWindows::new(nh, cfg.window, cfg.threshold);
+            for _map in 0..cfg.map_iters {
+                total_map += 1;
+
+                // Pass 1: fused per-hood stats + energy map.
+                let pp = energy::Prepared::from_params(&prm);
+                timed("Map", || {
+                    let we = SharedSlice::new(&mut emin);
+                    let wa = SharedSlice::new(&mut amin);
+                    let wo = SharedSlice::new(&mut ones_h);
+                    let wh = SharedSlice::new(&mut hood_energy);
+                    let labels_ref = &labels;
+                    let y_ref = &y_elem;
+                    let prm_ref = &pp;
+                    bk.for_chunks_with(nh, hood_grain, |hs, he| {
+                        for hd in hs..he {
+                            let (s, e) = (
+                                h.offsets[hd] as usize,
+                                h.offsets[hd + 1] as usize,
+                            );
+                            let mut ones = 0.0f32;
+                            for &v in &h.members[s..e] {
+                                ones += labels_ref[v as usize] as f32;
+                            }
+                            let size = (e - s) as f32;
+                            let mut sum = 0.0f64;
+                            for el in s..e {
+                                let lbl = labels_ref
+                                    [h.members[el] as usize]
+                                    as f32;
+                                let (em, am) = energy::energy_min_p(
+                                    y_ref[el], lbl, ones, size, prm_ref,
+                                );
+                                unsafe {
+                                    we.write(el, em);
+                                    wa.write(el, am);
+                                }
+                                sum += em as f64;
+                            }
+                            unsafe {
+                                wo.write(hd, ones);
+                                wh.write(hd, sum);
+                            }
+                        }
+                    });
+                });
+
+                // Pass 2: per-vertex min-energy resolution (static
+                // segmented ReduceByKey<Min>).
+                timed("ReduceByKey", || {
+                    let wl = SharedSlice::new(&mut labels);
+                    let emin_ref = &emin;
+                    let amin_ref = &amin;
+                    bk.for_chunks_with(nv, vert_grain, |vs, ve| {
+                        for v in vs..ve {
+                            let (s, e) = (
+                                h.vert_offsets[v] as usize,
+                                h.vert_offsets[v + 1] as usize,
+                            );
+                            if s == e {
+                                continue;
+                            }
+                            let mut best = u64::MAX;
+                            for &el in &h.vert_elems[s..e] {
+                                best = best.min(energy::pack_energy_label(
+                                    emin_ref[el as usize],
+                                    amin_ref[el as usize],
+                                ));
+                            }
+                            unsafe {
+                                wl.write(v, energy::unpack_label(best))
+                            };
+                        }
+                    });
+                });
+
+                let done = hw.push_all(&hood_energy);
+                if done && !cfg.fixed_iters {
+                    break;
+                }
+            }
+
+            let stats = timed("Reduce", || {
+                stats_reduce(bk, &amin, &y_elem)
+            });
+            prm = params::update(&stats, cfg.beta as f32);
+
+            let total: f64 = hood_energy.iter().sum();
+            em_window.push(total);
+            if em_window.converged() && !cfg.fixed_iters {
+                break;
+            }
+        }
+
+        EmResult {
+            labels,
+            em_iters,
+            map_iters: total_map,
+            energy: *em_window.history().last().unwrap_or(&0.0),
+            history: em_window.history().to_vec(),
+            params: prm,
+        }
+    }
+}
+
+/// Per-label (count, sum, sumsq) via per-chunk accumulation merged in
+/// chunk order (deterministic for a fixed backend).
+fn stats_reduce(bk: &Backend, amin: &[u8], y: &[f32]) -> Stats {
+    let bounds = bk.chunk_bounds(amin.len());
+    let mut partials = vec![Stats::default(); bounds.len()];
+    {
+        let win = crate::dpp::core::SharedSlice::new(&mut partials);
+        let bounds_ref = &bounds;
+        bk.for_chunk_ids(bounds_ref.len(), |c| {
+            let (s, e) = bounds_ref[c];
+            let mut st = Stats::default();
+            for i in s..e {
+                st.add(amin[i], y[i]);
+            }
+            unsafe { win.write(c, st) };
+        });
+    }
+    let mut total = Stats::default();
+    for p in &partials {
+        total.merge(p);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OversegConfig;
+    use crate::overseg::oversegment;
+    use crate::pool::Pool;
+
+    fn small_model(seed: u64) -> MrfModel {
+        let v = crate::image::synth::porous_ground_truth(48, 48, 1, 0.42,
+                                                         seed);
+        let mut input = v.clone();
+        crate::image::noise::additive_gaussian(&mut input, 60.0, seed);
+        let seg = oversegment(
+            &Backend::Serial,
+            &input.slice(0),
+            &OversegConfig { scale: 64.0, min_region: 4 },
+        );
+        crate::mrf::build_model_serial(&seg)
+    }
+
+    fn cfg_fixed() -> MrfConfig {
+        MrfConfig { fixed_iters: true, em_iters: 4, map_iters: 3,
+                    ..Default::default() }
+    }
+
+    #[test]
+    fn dpp_serial_backend_matches_serial_engine_exactly() {
+        let model = small_model(21);
+        let cfg = cfg_fixed();
+        let want = super::super::serial::SerialEngine.run(&model, &cfg);
+        for mode in [PairMode::Paper, PairMode::Fused] {
+            let got = DppEngine::with_mode(Backend::Serial, mode)
+                .run(&model, &cfg);
+            assert_eq!(got.labels, want.labels, "mode {mode:?}");
+            assert_eq!(got.params, want.params, "mode {mode:?}");
+            for (a, b) in got.history.iter().zip(&want.history) {
+                assert!((a - b).abs() < 1e-9 * b.abs().max(1.0),
+                        "mode {mode:?}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_backend_agrees_statistically() {
+        let model = small_model(22);
+        let cfg = cfg_fixed();
+        let want = super::super::serial::SerialEngine.run(&model, &cfg);
+        let bk = Backend::threaded_with_grain(Pool::new(4), 256);
+        for mode in [PairMode::Paper, PairMode::Fused] {
+            let got = DppEngine::with_mode(bk.clone(), mode)
+                .run(&model, &cfg);
+            let agree = got
+                .labels
+                .iter()
+                .zip(&want.labels)
+                .filter(|(a, b)| a == b)
+                .count();
+            let frac = agree as f64 / want.labels.len() as f64;
+            assert!(frac > 0.999, "mode {mode:?}: agreement {frac}");
+            let (a, b) = (got.energy, want.energy);
+            assert!((a - b).abs() < 1e-6 * b.abs().max(1.0),
+                    "energy {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn paper_and_fused_modes_identical() {
+        let model = small_model(23);
+        let cfg = cfg_fixed();
+        let a = DppEngine::with_mode(Backend::Serial, PairMode::Paper)
+            .run(&model, &cfg);
+        let b = DppEngine::with_mode(Backend::Serial, PairMode::Fused)
+            .run(&model, &cfg);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.params, b.params);
+    }
+
+    #[test]
+    fn convergence_mode_runs() {
+        let model = small_model(24);
+        let cfg = MrfConfig::default();
+        let res = DppEngine::new(Backend::Serial).run(&model, &cfg);
+        assert!(res.em_iters <= cfg.em_iters);
+        assert!(res.labels.iter().all(|&l| l <= 1));
+    }
+
+    #[test]
+    fn per_dpp_timing_records_sort_in_paper_mode() {
+        use crate::dpp::timing;
+        let model = small_model(25);
+        let cfg = cfg_fixed();
+        timing::reset();
+        timing::set_enabled(true);
+        DppEngine::with_mode(Backend::Serial, PairMode::Paper)
+            .run(&model, &cfg);
+        let snap = timing::snapshot();
+        timing::set_enabled(false);
+        timing::reset();
+        assert!(snap.contains_key("SortByKey"));
+        assert!(snap.contains_key("ReduceByKey"));
+        assert!(snap.contains_key("Map"));
+        assert!(snap.contains_key("Gather"));
+        assert!(snap.contains_key("Scatter"));
+    }
+}

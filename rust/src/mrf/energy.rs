@@ -1,0 +1,206 @@
+//! The MRF energy function — single source of truth for all engines.
+//!
+//! MUST stay in lockstep with the L1 Pallas kernel
+//! (`python/compile/kernels/energy.py`) and its jnp oracle
+//! (`kernels/ref.py`): same formula, same f32 operations, same strict
+//! `e1 < e0` argmin tie-break (ties pick label 0).
+//!
+//! ```text
+//! E(v, l) = (y_v - mu_l)^2 / (2 sigma_l^2) + ln(sigma_l)
+//!           + beta * disagree(v, l)
+//! disagree(v, 0) = ones_h - label_v
+//! disagree(v, 1) = (size_h - ones_h) - (1 - label_v)
+//! ```
+
+/// Label-model parameters for the binary segmentation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Params {
+    pub mu: [f32; 2],
+    pub sigma: [f32; 2],
+    pub beta: f32,
+}
+
+/// Per-MAP-iteration invariants hoisted out of the element loop
+/// (§Perf): reciprocal of 2σ² and ln σ are computed once per label per
+/// iteration instead of twice per element. Every engine evaluates
+/// energies through this, so results stay engine-identical.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Prepared {
+    pub mu: [f32; 2],
+    /// 1 / (2 sigma_l^2)
+    pub inv2s: [f32; 2],
+    /// ln(sigma_l)
+    pub lns: [f32; 2],
+    pub beta: f32,
+}
+
+impl Prepared {
+    #[inline]
+    pub fn from_params(p: &Params) -> Prepared {
+        Prepared {
+            mu: p.mu,
+            inv2s: [
+                1.0 / (2.0 * p.sigma[0] * p.sigma[0]),
+                1.0 / (2.0 * p.sigma[1] * p.sigma[1]),
+            ],
+            lns: [p.sigma[0].ln(), p.sigma[1].ln()],
+            beta: p.beta,
+        }
+    }
+}
+
+/// Both label energies for one hood-member instance.
+#[inline(always)]
+pub fn energy_pair_p(
+    y: f32,
+    label: f32,
+    ones_h: f32,
+    size_h: f32,
+    p: &Prepared,
+) -> (f32, f32) {
+    let d0 = y - p.mu[0];
+    let d1 = y - p.mu[1];
+    let e0 = d0 * d0 * p.inv2s[0] + p.lns[0];
+    let e1 = d1 * d1 * p.inv2s[1] + p.lns[1];
+    let dis0 = ones_h - label;
+    let dis1 = (size_h - ones_h) - (1.0 - label);
+    (e0 + p.beta * dis0, e1 + p.beta * dis1)
+}
+
+/// Both label energies (convenience over raw [`Params`]).
+#[inline(always)]
+pub fn energy_pair(
+    y: f32,
+    label: f32,
+    ones_h: f32,
+    size_h: f32,
+    p: &Params,
+) -> (f32, f32) {
+    energy_pair_p(y, label, ones_h, size_h, &Prepared::from_params(p))
+}
+
+/// Fused energy + argmin over prepared params: (min_energy, label).
+#[inline(always)]
+pub fn energy_min_p(
+    y: f32,
+    label: f32,
+    ones_h: f32,
+    size_h: f32,
+    p: &Prepared,
+) -> (f32, u8) {
+    let (e0, e1) = energy_pair_p(y, label, ones_h, size_h, p);
+    if e1 < e0 { (e1, 1) } else { (e0, 0) }
+}
+
+/// Fused energy + argmin, the kernel's contract: (min_energy, label).
+#[inline(always)]
+pub fn energy_min(
+    y: f32,
+    label: f32,
+    ones_h: f32,
+    size_h: f32,
+    p: &Params,
+) -> (f32, u8) {
+    let (e0, e1) = energy_pair(y, label, ones_h, size_h, p);
+    if e1 < e0 { (e1, 1) } else { (e0, 0) }
+}
+
+/// Order-preserving map from f32 to u32: `a < b` (as floats, no NaNs)
+/// iff `sortable(a) < sortable(b)`. The standard radix-sort float trick.
+#[inline(always)]
+pub fn sortable_f32(x: f32) -> u32 {
+    let bits = x.to_bits();
+    if bits & 0x8000_0000 != 0 { !bits } else { bits | 0x8000_0000 }
+}
+
+/// Pack (energy, label) so u64-min selects minimum energy, ties -> the
+/// smaller label. Used by the per-vertex resolution ReduceByKey<Min>.
+#[inline(always)]
+pub fn pack_energy_label(energy: f32, label: u8) -> u64 {
+    ((sortable_f32(energy) as u64) << 32) | label as u64
+}
+
+/// Unpack the label from a packed (energy, label) value.
+#[inline(always)]
+pub fn unpack_label(packed: u64) -> u8 {
+    (packed & 1) as u8
+}
+
+/// Unpack the energy.
+#[inline(always)]
+pub fn unpack_energy(packed: u64) -> f32 {
+    let s = (packed >> 32) as u32;
+    let bits = if s & 0x8000_0000 != 0 { s & 0x7fff_ffff } else { !s };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> Params {
+        Params { mu: [40.0, 180.0], sigma: [12.0, 30.0], beta: 0.5 }
+    }
+
+    #[test]
+    fn closer_mean_wins_without_smoothness() {
+        let p = Params { beta: 0.0, ..p() };
+        let (_, l) = energy_min(45.0, 0.0, 0.0, 2.0, &p);
+        assert_eq!(l, 0);
+        let (_, l) = energy_min(190.0, 0.0, 0.0, 2.0, &p);
+        assert_eq!(l, 1);
+    }
+
+    #[test]
+    fn smoothness_pulls_toward_majority() {
+        // y exactly between means & equal sigmas -> data tie; a hood full
+        // of 1-labels must pull the vertex to 1.
+        let p = Params { mu: [100.0, 140.0], sigma: [20.0, 20.0], beta: 1.0 };
+        let (_, l) = energy_min(120.0, 0.0, 10.0, 11.0, &p);
+        assert_eq!(l, 1);
+        let (_, l) = energy_min(120.0, 0.0, 0.0, 11.0, &p);
+        assert_eq!(l, 0);
+    }
+
+    #[test]
+    fn tie_prefers_label_zero() {
+        let p = Params { mu: [100.0, 100.0], sigma: [10.0, 10.0], beta: 0.0 };
+        let (_, l) = energy_min(55.0, 1.0, 3.0, 8.0, &p);
+        assert_eq!(l, 0);
+    }
+
+    #[test]
+    fn sortable_preserves_order() {
+        let xs = [-1000.0f32, -1.5, -0.0, 0.0, 1e-20, 3.14, 2e8];
+        for w in xs.windows(2) {
+            assert!(sortable_f32(w[0]) <= sortable_f32(w[1]),
+                    "{} vs {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn pack_roundtrip_and_min_semantics() {
+        let a = pack_energy_label(1.5, 1);
+        let b = pack_energy_label(2.5, 0);
+        assert!(a < b, "lower energy wins regardless of label");
+        let c = pack_energy_label(1.5, 0);
+        assert!(c < a, "equal energy -> smaller label wins");
+        assert_eq!(unpack_label(a), 1);
+        assert_eq!(unpack_energy(a), 1.5);
+        assert_eq!(unpack_energy(pack_energy_label(-3.25, 0)), -3.25);
+    }
+
+    #[test]
+    fn energy_matches_manual_computation() {
+        let p = p();
+        let (e0, e1) = energy_pair(100.0, 1.0, 3.0, 5.0, &p);
+        let want0 = (100.0f32 - 40.0).powi(2) / (2.0 * 144.0)
+            + 12.0f32.ln()
+            + 0.5 * (3.0 - 1.0);
+        let want1 = (100.0f32 - 180.0).powi(2) / (2.0 * 900.0)
+            + 30.0f32.ln()
+            + 0.5 * ((5.0 - 3.0) - 0.0);
+        assert!((e0 - want0).abs() < 1e-5);
+        assert!((e1 - want1).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,281 @@
+//! k-neighborhood (k=1) construction from maximal cliques (§3.2.1).
+//!
+//! A neighborhood ("hood") is a maximal clique plus every vertex within
+//! one edge of any clique member, deduplicated and sorted by vertex id.
+//! The flattened hood-member array is the element domain the whole EM
+//! pipeline parallelizes over (the paper's `hoods` array).
+//!
+//! Two builders: a HashSet-based serial reference, and the paper's
+//! DPP pipeline — Map (count neighbors), Scan (allocate), Map (fill),
+//! SortByKey + Unique (dedup) — over (hoodId, vertexId) pairs packed
+//! into u64 keys.
+
+use std::collections::BTreeSet;
+
+use crate::dpp::{self, Backend};
+use crate::graph::Csr;
+use crate::mce::CliqueSet;
+
+/// Neighborhood structure + the static index arrays the engines need.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hoods {
+    /// Element ranges per hood (`num_hoods + 1` entries).
+    pub offsets: Vec<u32>,
+    /// Element -> vertex id, hood-major, sorted within each hood.
+    pub members: Vec<u32>,
+    /// Element -> owning hood id (expansion of `offsets`).
+    pub hood_id: Vec<u32>,
+    /// Elements grouped by vertex: ranges into `vert_elems`
+    /// (`num_vertices + 1` entries).
+    pub vert_offsets: Vec<u32>,
+    /// Element ids grouped by vertex, ascending within each vertex.
+    pub vert_elems: Vec<u32>,
+}
+
+impl Hoods {
+    pub fn num_hoods(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn hood_members(&self, h: usize) -> &[u32] {
+        &self.members[self.offsets[h] as usize..self.offsets[h + 1] as usize]
+    }
+
+    pub fn hood_size(&self, h: usize) -> u32 {
+        self.offsets[h + 1] - self.offsets[h]
+    }
+
+    /// Distribution of hood sizes (the paper's neighborhood
+    /// "demographics", §4.3.3).
+    pub fn size_histogram(&self, bin: u32) -> crate::util::Histogram {
+        crate::util::Histogram::from_values(
+            (0..self.num_hoods()).map(|h| self.hood_size(h)),
+            bin,
+        )
+    }
+
+    /// Derive `hood_id` + per-vertex element grouping from
+    /// (offsets, members). Shared by both builders.
+    fn finalize(offsets: Vec<u32>, members: Vec<u32>, num_vertices: usize)
+        -> Hoods {
+        let n = members.len();
+        let mut hood_id = vec![0u32; n];
+        for h in 0..offsets.len() - 1 {
+            for e in offsets[h] as usize..offsets[h + 1] as usize {
+                hood_id[e] = h as u32;
+            }
+        }
+        // Counting sort of elements by vertex (stable -> element ids
+        // ascend within each vertex).
+        let mut counts = vec![0u32; num_vertices + 1];
+        for &v in &members {
+            counts[v as usize + 1] += 1;
+        }
+        for i in 0..num_vertices {
+            counts[i + 1] += counts[i];
+        }
+        let vert_offsets = counts.clone();
+        let mut vert_elems = vec![0u32; n];
+        let mut cursor = counts;
+        for (e, &v) in members.iter().enumerate() {
+            vert_elems[cursor[v as usize] as usize] = e as u32;
+            cursor[v as usize] += 1;
+        }
+        Hoods { offsets, members, hood_id, vert_offsets, vert_elems }
+    }
+}
+
+/// Serial reference builder.
+pub fn build_serial(g: &Csr, cliques: &CliqueSet, num_vertices: usize)
+    -> Hoods {
+    let mut offsets = vec![0u32];
+    let mut members = Vec::new();
+    for c in 0..cliques.num_cliques() {
+        let clique = cliques.clique(c);
+        let mut set: BTreeSet<u32> = clique.iter().copied().collect();
+        for &v in clique {
+            set.extend(g.neighbors_of(v).iter().copied());
+        }
+        members.extend(set.iter().copied());
+        offsets.push(members.len() as u32);
+    }
+    Hoods::finalize(offsets, members, num_vertices)
+}
+
+/// DPP builder (paper §3.2.1 steps 1–4).
+pub fn build_dpp(bk: &Backend, g: &Csr, cliques: &CliqueSet,
+                 num_vertices: usize) -> Hoods {
+    let nc = cliques.num_cliques();
+    if nc == 0 {
+        return Hoods::finalize(vec![0], Vec::new(), num_vertices);
+    }
+    let total_members = cliques.members.len();
+
+    // Step 1 (Map): per clique-member instance, 1 + degree candidate
+    // entries (the vertex itself + all its 1-hop neighbors).
+    let counts: Vec<u32> = dpp::map_indexed(bk, total_members, |i| {
+        1 + g.degree(cliques.members[i]) as u32
+    });
+    // Step 2 (Scan): output offsets.
+    let (offs, total) = dpp::scan_exclusive(bk, &counts, 0u32, |a, b| a + b);
+
+    // Which clique does instance i belong to? Expand clique offsets.
+    let mut inst_clique = vec![0u32; total_members];
+    for c in 0..nc {
+        for i in cliques.offsets[c] as usize..cliques.offsets[c + 1] as usize {
+            inst_clique[i] = c as u32;
+        }
+    }
+
+    // Step 3 (Map): emit (hoodId, vertex) packed pairs.
+    let mut pairs = vec![0u64; total as usize];
+    {
+        let win = crate::dpp::core::SharedSlice::new(&mut pairs);
+        let offs_ref = &offs;
+        let inst_clique_ref = &inst_clique;
+        bk.for_chunks(total_members, |s, e| {
+            for i in s..e {
+                let c = inst_clique_ref[i];
+                let v = cliques.members[i];
+                let mut at = offs_ref[i] as usize;
+                unsafe { win.write(at, dpp::pack_pair(c, v)) };
+                at += 1;
+                for &w in g.neighbors_of(v) {
+                    unsafe { win.write(at, dpp::pack_pair(c, w)) };
+                    at += 1;
+                }
+            }
+        });
+    }
+
+    // Step 4: SortByKey (hoodId, vertexId) then Unique.
+    dpp::sort_keys(bk, &mut pairs);
+    let uniq = dpp::unique(bk, &pairs);
+
+    // CSR-ify: members + offsets per hood. Every clique produces at
+    // least its own members, so all hood ids appear.
+    let members: Vec<u32> = dpp::map(bk, &uniq, |&k| dpp::unpack_pair(k).1);
+    let hood_of: Vec<u32> = dpp::map(bk, &uniq, |&k| dpp::unpack_pair(k).0);
+    let starts = dpp::select_indices(bk, hood_of.len(), |i| {
+        i == 0 || hood_of[i] != hood_of[i - 1]
+    });
+    debug_assert_eq!(starts.len(), nc, "every clique forms a hood");
+    let mut offsets = starts;
+    offsets.push(members.len() as u32);
+
+    Hoods::finalize(offsets, members, num_vertices)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mce;
+    use crate::pool::Pool;
+
+    fn csr(n: usize, edges: &[(u32, u32)]) -> Csr {
+        let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for &(a, b) in edges {
+            adj[a as usize].push(b);
+            adj[b as usize].push(a);
+        }
+        let mut offsets = vec![0u32];
+        let mut neighbors = Vec::new();
+        for l in adj.iter_mut() {
+            l.sort_unstable();
+            l.dedup();
+            neighbors.extend_from_slice(l);
+            offsets.push(neighbors.len() as u32);
+        }
+        Csr { offsets, neighbors }
+    }
+
+    fn backends() -> Vec<Backend> {
+        vec![
+            Backend::Serial,
+            Backend::threaded_with_grain(Pool::new(4), 32),
+        ]
+    }
+
+    #[test]
+    fn hood_is_clique_plus_one_hop() {
+        // path 0-1-2-3 plus triangle 1-2-4
+        let g = csr(5, &[(0, 1), (1, 2), (2, 3), (1, 4), (2, 4)]);
+        let cliques = mce::enumerate_serial(&g);
+        let hoods = build_serial(&g, &cliques, 5);
+        // find the hood of clique {1,2,4}: must contain 0 and 3 too
+        let idx = (0..cliques.num_cliques())
+            .find(|&i| cliques.clique(i) == [1, 2, 4])
+            .unwrap();
+        assert_eq!(hoods.hood_members(idx), &[0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn dpp_matches_serial() {
+        use crate::util::Pcg32;
+        let mut rng = Pcg32::seeded(17);
+        for trial in 0..6 {
+            let n = 25 + trial * 9;
+            let mut edges = Vec::new();
+            for _ in 0..n * 2 {
+                let a = rng.below(n as u32);
+                let b = rng.below(n as u32);
+                if a != b {
+                    edges.push((a.min(b), a.max(b)));
+                }
+            }
+            let g = csr(n, &edges);
+            let cliques = mce::enumerate_serial(&g);
+            let want = build_serial(&g, &cliques, n);
+            for bk in backends() {
+                let got = build_dpp(&bk, &g, &cliques, n);
+                assert_eq!(got, want, "trial {trial}");
+            }
+        }
+    }
+
+    #[test]
+    fn members_sorted_within_hood() {
+        let g = csr(6, &[(0, 1), (1, 2), (0, 2), (2, 3), (3, 4), (4, 5)]);
+        let cliques = mce::enumerate_serial(&g);
+        let hoods = build_serial(&g, &cliques, 6);
+        for h in 0..hoods.num_hoods() {
+            let m = hoods.hood_members(h);
+            assert!(m.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn vertex_grouping_is_inverse_of_members() {
+        let g = csr(6, &[(0, 1), (1, 2), (0, 2), (2, 3), (3, 4), (4, 5)]);
+        let cliques = mce::enumerate_serial(&g);
+        let hoods = build_serial(&g, &cliques, 6);
+        // every element appears exactly once in vert_elems
+        let mut seen = vec![false; hoods.num_elements()];
+        for v in 0..6 {
+            for &e in &hoods.vert_elems[hoods.vert_offsets[v] as usize
+                ..hoods.vert_offsets[v + 1] as usize]
+            {
+                assert_eq!(hoods.members[e as usize], v as u32);
+                assert!(!seen[e as usize]);
+                seen[e as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn hood_id_expands_offsets() {
+        let g = csr(4, &[(0, 1), (2, 3)]);
+        let cliques = mce::enumerate_serial(&g);
+        let hoods = build_serial(&g, &cliques, 4);
+        for h in 0..hoods.num_hoods() {
+            for e in hoods.offsets[h] as usize..hoods.offsets[h + 1] as usize {
+                assert_eq!(hoods.hood_id[e], h as u32);
+            }
+        }
+    }
+}

@@ -1,0 +1,225 @@
+//! MRF model + EM/MAP optimization engines.
+//!
+//! The shared semantics every engine implements (DESIGN.md §5):
+//!
+//! * One **MAP iteration** (Jacobi update): from the current per-vertex
+//!   labels, compute per-hood label-1 counts; evaluate both label
+//!   energies per hood-member instance ([`energy`]); per instance take
+//!   the argmin; resolve each **vertex** to the minimum-energy label
+//!   across its instances (ties -> label 0, deterministic); per-hood
+//!   energy = sum of instance minima.
+//! * A hood/EM quantity is **converged** when it changed by less than
+//!   `threshold * max(|old|, 1)` relative to `window` iterations ago.
+//! * One **EM iteration** = MAP iterations until all hoods converge (or
+//!   `map_iters`), then re-estimate (mu, sigma) from the instance-level
+//!   argmin labels ([`params::update`]).
+//! * The EM loop stops when the total energy converges (or `em_iters`).
+//!   With `fixed_iters` every loop runs its full count — used by tests
+//!   to compare engines exactly.
+//!
+//! Engines: [`serial::SerialEngine`] (baseline),
+//! [`reference::ReferenceEngine`] (coarse-parallel OpenMP analog),
+//! [`dpp::DppEngine`] (the paper's contribution),
+//! [`xla::XlaEngine`] (AOT accelerator path).
+
+pub mod dpp;
+pub mod energy;
+pub mod hoods;
+pub mod params;
+pub mod reference;
+pub mod serial;
+pub mod xla;
+
+pub use energy::Params;
+pub use hoods::Hoods;
+
+use crate::config::MrfConfig;
+use crate::dpp::Backend;
+use crate::graph::Csr;
+use crate::overseg::Overseg;
+
+/// The optimization problem: graph, observations, neighborhoods.
+#[derive(Debug, Clone)]
+pub struct MrfModel {
+    pub graph: Csr,
+    /// Observation per vertex: mean region intensity (0..255).
+    pub y: Vec<f32>,
+    pub hoods: Hoods,
+}
+
+impl MrfModel {
+    pub fn num_vertices(&self) -> usize {
+        self.graph.num_vertices()
+    }
+
+    /// Per-element observation (gather of `y` through hood members).
+    pub fn y_elems(&self) -> Vec<f32> {
+        self.hoods.members.iter().map(|&v| self.y[v as usize]).collect()
+    }
+}
+
+/// Full model construction from an oversegmentation: RAG -> maximal
+/// cliques -> 1-neighborhoods, all through the DPP pipeline.
+pub fn build_model(bk: &Backend, seg: &Overseg) -> MrfModel {
+    let graph = crate::graph::build_rag_dpp(bk, seg);
+    let cliques = crate::mce::enumerate_dpp(bk, &graph);
+    let hoods =
+        hoods::build_dpp(bk, &graph, &cliques, graph.num_vertices());
+    MrfModel { y: seg.mean.clone(), graph, hoods }
+}
+
+/// Serial model construction (test oracle).
+pub fn build_model_serial(seg: &Overseg) -> MrfModel {
+    let graph = crate::graph::build_rag_serial(seg);
+    let cliques = crate::mce::enumerate_serial(&graph);
+    let hoods =
+        hoods::build_serial(&graph, &cliques, graph.num_vertices());
+    MrfModel { y: seg.mean.clone(), graph, hoods }
+}
+
+/// Output of one EM optimization run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EmResult {
+    /// Final label per vertex (0/1).
+    pub labels: Vec<u8>,
+    /// EM iterations actually executed.
+    pub em_iters: usize,
+    /// Total MAP iterations across all EM iterations.
+    pub map_iters: usize,
+    /// Final total energy.
+    pub energy: f64,
+    /// Total energy after each EM iteration.
+    pub history: Vec<f64>,
+    /// Final estimated parameters.
+    pub params: Params,
+}
+
+/// An EM/MAP optimization engine.
+pub trait Engine {
+    fn name(&self) -> &'static str;
+    fn run(&self, model: &MrfModel, cfg: &MrfConfig) -> EmResult;
+}
+
+/// Windowed relative-change convergence test (paper: L=3, 1e-4).
+#[derive(Debug, Clone)]
+pub struct ConvergenceWindow {
+    hist: Vec<f64>,
+    window: usize,
+    threshold: f64,
+}
+
+impl ConvergenceWindow {
+    pub fn new(window: usize, threshold: f64) -> Self {
+        ConvergenceWindow { hist: Vec::new(), window: window.max(1),
+                            threshold }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.hist.push(v);
+    }
+
+    /// Converged iff the latest value moved < threshold (relative)
+    /// versus `window` iterations ago.
+    pub fn converged(&self) -> bool {
+        let n = self.hist.len();
+        if n <= self.window {
+            return false;
+        }
+        let old = self.hist[n - 1 - self.window];
+        let new = self.hist[n - 1];
+        (new - old).abs() < self.threshold * old.abs().max(1.0)
+    }
+
+    pub fn history(&self) -> &[f64] {
+        &self.hist
+    }
+}
+
+/// Flat ring-buffer of per-hood energy histories for the MAP
+/// convergence check — all engines share this exact logic.
+#[derive(Debug, Clone)]
+pub struct HoodWindows {
+    ring: Vec<f64>,
+    num_hoods: usize,
+    window: usize,
+    threshold: f64,
+    iter: usize,
+}
+
+impl HoodWindows {
+    pub fn new(num_hoods: usize, window: usize, threshold: f64) -> Self {
+        let window = window.max(1);
+        HoodWindows {
+            ring: vec![0.0; num_hoods * (window + 1)],
+            num_hoods,
+            window,
+            threshold,
+            iter: 0,
+        }
+    }
+
+    /// Record this iteration's hood energies; returns true when EVERY
+    /// hood satisfies the windowed convergence criterion.
+    pub fn push_all(&mut self, energies: &[f64]) -> bool {
+        assert_eq!(energies.len(), self.num_hoods);
+        let slot = self.iter % (self.window + 1);
+        self.ring[slot * self.num_hoods..(slot + 1) * self.num_hoods]
+            .copy_from_slice(energies);
+        self.iter += 1;
+        if self.iter <= self.window {
+            return false;
+        }
+        // Oldest slot in the ring = iter - window.
+        let old_slot = (self.iter - 1 - self.window) % (self.window + 1);
+        let old = &self.ring
+            [old_slot * self.num_hoods..(old_slot + 1) * self.num_hoods];
+        energies.iter().zip(old).all(|(&new, &old)| {
+            (new - old).abs() < self.threshold * old.abs().max(1.0)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_needs_history() {
+        let mut w = ConvergenceWindow::new(3, 1e-4);
+        for v in [10.0, 10.0, 10.0] {
+            w.push(v);
+            assert!(!w.converged(), "not enough history");
+        }
+        w.push(10.0);
+        assert!(w.converged());
+    }
+
+    #[test]
+    fn window_detects_change() {
+        let mut w = ConvergenceWindow::new(2, 1e-4);
+        for v in [100.0, 90.0, 80.0, 70.0] {
+            w.push(v);
+        }
+        assert!(!w.converged());
+        w.push(80.0 - 80.0 * 1e-5); // within 1e-4 of 2-ago
+        assert!(w.converged());
+    }
+
+    #[test]
+    fn hood_windows_all_must_converge() {
+        let mut hw = HoodWindows::new(2, 1, 1e-3);
+        assert!(!hw.push_all(&[5.0, 7.0]));
+        // hood 0 stable, hood 1 moving
+        assert!(!hw.push_all(&[5.0, 6.0]));
+        // both stable vs previous iteration
+        assert!(hw.push_all(&[5.0, 6.0]));
+    }
+
+    #[test]
+    fn hood_windows_relative_scale() {
+        let mut hw = HoodWindows::new(1, 1, 1e-4);
+        hw.push_all(&[1.0e6]);
+        // 1e-4 relative on 1e6 allows drift of 100
+        assert!(hw.push_all(&[1.0e6 + 50.0]));
+    }
+}

@@ -1,0 +1,137 @@
+//! Label parameter initialization and EM re-estimation.
+//!
+//! Initialization follows the paper (§3.2.2): mu and sigma uniform in
+//! the 8-bit intensity range, labels uniform in {0,1} — all from one
+//! seeded PCG32 stream so every engine starts identically.
+//!
+//! Re-estimation mirrors `compile/model.py::update_params`: per label,
+//! mu = E[y], sigma = sqrt(max(E[y^2]-mu^2, 0)) floored at
+//! [`SIGMA_FLOOR`], over the hood-member instances assigned that label.
+
+use crate::util::Pcg32;
+
+use super::energy::Params;
+
+/// Lower bound on sigma (keeps the Gaussian term finite; same value is
+/// baked into the L2 model).
+pub const SIGMA_FLOOR: f32 = 1.0;
+
+/// Per-label accumulation: (count, sum_y, sum_y2), f64 accumulators.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Stats {
+    pub acc: [[f64; 3]; 2],
+}
+
+impl Stats {
+    #[inline]
+    pub fn add(&mut self, label: u8, y: f32) {
+        let a = &mut self.acc[label as usize];
+        a[0] += 1.0;
+        a[1] += y as f64;
+        a[2] += (y as f64) * (y as f64);
+    }
+
+    #[inline]
+    pub fn merge(&mut self, other: &Stats) {
+        for l in 0..2 {
+            for k in 0..3 {
+                self.acc[l][k] += other.acc[l][k];
+            }
+        }
+    }
+}
+
+/// Random initial parameters + labels (deterministic in the seed).
+pub fn init_random(num_vertices: usize, beta: f32, seed: u64)
+    -> (Params, Vec<u8>) {
+    let mut rng = Pcg32::seeded(seed);
+    let params = Params {
+        mu: [rng.f32() * 255.0, rng.f32() * 255.0],
+        sigma: [
+            SIGMA_FLOOR + rng.f32() * 126.0,
+            SIGMA_FLOOR + rng.f32() * 126.0,
+        ],
+        beta,
+    };
+    let labels =
+        (0..num_vertices).map(|_| (rng.next_u32() & 1) as u8).collect();
+    (params, labels)
+}
+
+/// mu/sigma update from accumulated stats; beta is carried through.
+/// Empty labels keep a well-defined (floored) parameter set.
+pub fn update(stats: &Stats, beta: f32) -> Params {
+    let mut mu = [0.0f32; 2];
+    let mut sigma = [SIGMA_FLOOR; 2];
+    for l in 0..2 {
+        let [cnt, s, s2] = stats.acc[l];
+        let cnt = cnt.max(1.0);
+        let m = s / cnt;
+        let var = (s2 / cnt - m * m).max(0.0);
+        mu[l] = m as f32;
+        sigma[l] = (var.sqrt() as f32).max(SIGMA_FLOOR);
+    }
+    Params { mu, sigma, beta }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_deterministic_in_range() {
+        let (p1, l1) = init_random(100, 0.5, 7);
+        let (p2, l2) = init_random(100, 0.5, 7);
+        assert_eq!(p1, p2);
+        assert_eq!(l1, l2);
+        for l in 0..2 {
+            assert!((0.0..=255.0).contains(&p1.mu[l]));
+            assert!(p1.sigma[l] >= SIGMA_FLOOR);
+        }
+        assert!(l1.iter().all(|&l| l <= 1));
+        assert_ne!(init_random(100, 0.5, 8).1, l1);
+    }
+
+    #[test]
+    fn update_recovers_moments() {
+        let mut st = Stats::default();
+        for y in [5.0f32, 15.0] {
+            st.add(0, y);
+        }
+        for y in [100.0f32, 110.0, 120.0] {
+            st.add(1, y);
+        }
+        let p = update(&st, 0.25);
+        assert!((p.mu[0] - 10.0).abs() < 1e-6);
+        assert!((p.sigma[0] - 5.0).abs() < 1e-5);
+        assert!((p.mu[1] - 110.0).abs() < 1e-5);
+        assert!((p.sigma[1] - (200.0f32 / 3.0).sqrt()).abs() < 1e-3);
+        assert_eq!(p.beta, 0.25);
+    }
+
+    #[test]
+    fn update_floors_sigma_and_survives_empty() {
+        let mut st = Stats::default();
+        st.add(1, 50.0); // single point, var = 0; label 0 empty
+        let p = update(&st, 0.5);
+        assert_eq!(p.sigma[0], SIGMA_FLOOR);
+        assert_eq!(p.sigma[1], SIGMA_FLOOR);
+        assert_eq!(p.mu[1], 50.0);
+        assert!(p.mu[0].is_finite());
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let mut a = Stats::default();
+        let mut b = Stats::default();
+        let mut whole = Stats::default();
+        for i in 0..10 {
+            let y = i as f32 * 3.0;
+            let l = (i % 2) as u8;
+            if i < 5 { a.add(l, y) } else { b.add(l, y) }
+            whole.add(l, y);
+        }
+        a.merge(&b);
+        assert_eq!(a, whole);
+    }
+}

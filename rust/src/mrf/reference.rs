@@ -1,0 +1,229 @@
+//! Reference coarse-parallel engine — the OpenMP PMRF analog (Alg. 1,
+//! §3.1/§4.1.4).
+//!
+//! Structure mirrors the paper's reference implementation:
+//!
+//! * **outer parallelism only**: one task per neighborhood on the
+//!   shared pool (OpenMP `parallel for schedule(dynamic)` analog);
+//! * **serial inner optimization**: each task computes its hood's
+//!   label-1 count, member energies, and argmins in a plain loop;
+//! * the **critical section**: like the paper's code (§4.3.3), each
+//!   task serializes on one mutex to write its results row into the
+//!   shared output buffers — the documented scalability limiter, kept
+//!   deliberately faithful (toggle with [`ReferenceEngine::no_critical`]
+//!   for the ablation bench);
+//! * vertex resolution and parameter updates run serially between MAP
+//!   iterations, exactly as in the serial engine.
+//!
+//! Numerically identical to [`super::serial::SerialEngine`] — the
+//! parallel structure changes, the math and its ordering do not.
+
+use std::sync::Arc;
+use std::sync::Mutex;
+
+use crate::config::MrfConfig;
+use crate::pool::Pool;
+
+use super::energy;
+use super::params::{self, Stats};
+use super::{ConvergenceWindow, Engine, EmResult, HoodWindows, MrfModel};
+
+pub struct ReferenceEngine {
+    pool: Arc<Pool>,
+    /// Disable the output critical section (ablation; default keeps it,
+    /// as in the paper).
+    pub no_critical: bool,
+}
+
+impl ReferenceEngine {
+    pub fn new(pool: Arc<Pool>) -> Self {
+        ReferenceEngine { pool, no_critical: false }
+    }
+
+    pub fn without_critical_section(pool: Arc<Pool>) -> Self {
+        ReferenceEngine { pool, no_critical: true }
+    }
+}
+
+impl Engine for ReferenceEngine {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn run(&self, model: &MrfModel, cfg: &MrfConfig) -> EmResult {
+        let h = &model.hoods;
+        let n = h.num_elements();
+        let nh = h.num_hoods();
+        let nv = model.num_vertices();
+        let y_elem = model.y_elems();
+
+        let (mut prm, mut labels) =
+            params::init_random(nv, cfg.beta as f32, cfg.seed);
+
+        let size_h: Vec<f32> =
+            (0..nh).map(|i| h.hood_size(i) as f32).collect();
+
+        let mut emin = vec![0.0f32; n];
+        let mut amin = vec![0u8; n];
+        let mut hood_energy = vec![0.0f64; nh];
+
+        let mut em_window = ConvergenceWindow::new(cfg.window, cfg.threshold);
+        let mut total_map = 0usize;
+        let mut em_iters = 0usize;
+        let critical = Mutex::new(());
+
+        for _em in 0..cfg.em_iters {
+            em_iters += 1;
+            let mut hw = HoodWindows::new(nh, cfg.window, cfg.threshold);
+            for _map in 0..cfg.map_iters {
+                total_map += 1;
+                let pp = energy::Prepared::from_params(&prm);
+
+                // ---- outer-parallel over neighborhoods ----
+                {
+                    let labels_ref = &labels;
+                    let emin_win =
+                        crate::dpp::core::SharedSlice::new(&mut emin);
+                    let amin_win =
+                        crate::dpp::core::SharedSlice::new(&mut amin);
+                    let he_win =
+                        crate::dpp::core::SharedSlice::new(&mut hood_energy);
+                    let size_h_ref = &size_h;
+                    let y_ref = &y_elem;
+                    let crit = &critical;
+                    self.pool.parallel_tasks(nh, |hood| {
+                        let (s, e) = (
+                            h.offsets[hood] as usize,
+                            h.offsets[hood + 1] as usize,
+                        );
+                        // Serial inner computation on a local row
+                        // (the OpenMP code's per-thread workspace).
+                        let mut ones = 0.0f32;
+                        for &v in &h.members[s..e] {
+                            ones += labels_ref[v as usize] as f32;
+                        }
+                        let mut row_e = Vec::with_capacity(e - s);
+                        let mut row_a = Vec::with_capacity(e - s);
+                        let mut sum = 0.0f64;
+                        for (i, &v) in h.members[s..e].iter().enumerate() {
+                            let lbl = labels_ref[v as usize] as f32;
+                            let (em, am) = energy::energy_min_p(
+                                y_ref[s + i],
+                                lbl,
+                                ones,
+                                size_h_ref[hood],
+                                &pp,
+                            );
+                            row_e.push(em);
+                            row_a.push(am);
+                            sum += em as f64;
+                        }
+                        // The paper's critical section: the write-back
+                        // of the row into the shared ragged output is
+                        // serialized.
+                        let guard = if self.no_critical {
+                            None
+                        } else {
+                            Some(crit.lock().unwrap())
+                        };
+                        for i in 0..row_e.len() {
+                            unsafe {
+                                emin_win.write(s + i, row_e[i]);
+                                amin_win.write(s + i, row_a[i]);
+                            }
+                        }
+                        unsafe { he_win.write(hood, sum) };
+                        drop(guard);
+                    });
+                }
+
+                // ---- serial between-iteration steps (as in Alg. 1) ----
+                super::serial::resolve_vertices_serial(
+                    model, &emin, &amin, &mut labels,
+                );
+                let done = hw.push_all(&hood_energy);
+                if done && !cfg.fixed_iters {
+                    break;
+                }
+            }
+
+            let mut stats = Stats::default();
+            for e in 0..n {
+                stats.add(amin[e], y_elem[e]);
+            }
+            prm = params::update(&stats, cfg.beta as f32);
+
+            let total: f64 = hood_energy.iter().sum();
+            em_window.push(total);
+            if em_window.converged() && !cfg.fixed_iters {
+                break;
+            }
+        }
+
+        EmResult {
+            labels,
+            em_iters,
+            map_iters: total_map,
+            energy: *em_window.history().last().unwrap_or(&0.0),
+            history: em_window.history().to_vec(),
+            params: prm,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OversegConfig;
+    use crate::dpp::Backend;
+    use crate::image::synth;
+    use crate::overseg::oversegment;
+
+    fn small_model(seed: u64) -> MrfModel {
+        let v = synth::porous_ground_truth(48, 48, 1, 0.42, seed);
+        let mut input = v.clone();
+        crate::image::noise::additive_gaussian(&mut input, 60.0, seed);
+        let seg = oversegment(
+            &Backend::Serial,
+            &input.slice(0),
+            &OversegConfig { scale: 64.0, min_region: 4 },
+        );
+        crate::mrf::build_model_serial(&seg)
+    }
+
+    #[test]
+    fn matches_serial_engine_exactly() {
+        let model = small_model(11);
+        let cfg = MrfConfig { fixed_iters: true, em_iters: 4, map_iters: 3,
+                              ..Default::default() };
+        let want = super::super::serial::SerialEngine.run(&model, &cfg);
+        for threads in [1, 4] {
+            let eng = ReferenceEngine::new(Pool::new(threads));
+            let got = eng.run(&model, &cfg);
+            assert_eq!(got.labels, want.labels, "threads={threads}");
+            assert_eq!(got.params, want.params);
+            assert_eq!(got.history, want.history);
+        }
+    }
+
+    #[test]
+    fn no_critical_variant_identical_results() {
+        let model = small_model(12);
+        let cfg = MrfConfig { fixed_iters: true, em_iters: 3, map_iters: 3,
+                              ..Default::default() };
+        let with = ReferenceEngine::new(Pool::new(4)).run(&model, &cfg);
+        let without = ReferenceEngine::without_critical_section(Pool::new(4))
+            .run(&model, &cfg);
+        assert_eq!(with.labels, without.labels);
+        assert_eq!(with.history, without.history);
+    }
+
+    #[test]
+    fn convergence_mode_terminates_early() {
+        let model = small_model(13);
+        let cfg = MrfConfig::default();
+        let res = ReferenceEngine::new(Pool::new(2)).run(&model, &cfg);
+        assert!(res.em_iters <= cfg.em_iters);
+        assert!(res.labels.iter().all(|&l| l <= 1));
+    }
+}

@@ -1,0 +1,235 @@
+//! Serial baseline engine — the "Serial CPU" row of Table 1 and the
+//! numeric oracle for every other engine (straight loops, hood-major
+//! element order everywhere).
+
+use crate::config::MrfConfig;
+
+use super::energy::{self, Params};
+use super::params::{self, Stats};
+use super::{ConvergenceWindow, Engine, EmResult, HoodWindows, MrfModel};
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SerialEngine;
+
+impl Engine for SerialEngine {
+    fn name(&self) -> &'static str {
+        "serial"
+    }
+
+    fn run(&self, model: &MrfModel, cfg: &MrfConfig) -> EmResult {
+        let h = &model.hoods;
+        let n = h.num_elements();
+        let nh = h.num_hoods();
+        let nv = model.num_vertices();
+        let y_elem = model.y_elems();
+
+        let (mut prm, mut labels) =
+            params::init_random(nv, cfg.beta as f32, cfg.seed);
+
+        // Static per-element hood sizes.
+        let size_e: Vec<f32> = (0..n)
+            .map(|e| h.hood_size(h.hood_id[e] as usize) as f32)
+            .collect();
+
+        let mut emin = vec![0.0f32; n];
+        let mut amin = vec![0u8; n];
+        let mut ones_h = vec![0.0f32; nh];
+        let mut hood_energy = vec![0.0f64; nh];
+
+        let mut em_window = ConvergenceWindow::new(cfg.window, cfg.threshold);
+        let mut total_map = 0usize;
+        let mut em_iters = 0usize;
+
+        for _em in 0..cfg.em_iters {
+            em_iters += 1;
+            let mut hw = HoodWindows::new(nh, cfg.window, cfg.threshold);
+            for _map in 0..cfg.map_iters {
+                total_map += 1;
+                map_iteration(
+                    model, &prm, &labels, &y_elem, &size_e, &mut ones_h,
+                    &mut emin, &mut amin, &mut hood_energy,
+                );
+                resolve_vertices(model, &emin, &amin, &mut labels);
+                let done = hw.push_all(&hood_energy);
+                if done && !cfg.fixed_iters {
+                    break;
+                }
+            }
+            // Parameter update from the final MAP iteration's labels.
+            let mut stats = Stats::default();
+            for e in 0..n {
+                stats.add(amin[e], y_elem[e]);
+            }
+            prm = params::update(&stats, cfg.beta as f32);
+
+            let total: f64 = hood_energy.iter().sum();
+            em_window.push(total);
+            if em_window.converged() && !cfg.fixed_iters {
+                break;
+            }
+        }
+
+        EmResult {
+            labels,
+            em_iters,
+            map_iters: total_map,
+            energy: *em_window.history().last().unwrap_or(&0.0),
+            history: em_window.history().to_vec(),
+            params: prm,
+        }
+    }
+}
+
+/// One Jacobi MAP iteration, fully serial. Factored out so the
+/// reference engine can reuse the identical math per hood.
+#[allow(clippy::too_many_arguments)]
+fn map_iteration(
+    model: &MrfModel,
+    prm: &Params,
+    labels: &[u8],
+    y_elem: &[f32],
+    size_e: &[f32],
+    ones_h: &mut [f32],
+    emin: &mut [f32],
+    amin: &mut [u8],
+    hood_energy: &mut [f64],
+) {
+    let h = &model.hoods;
+    let pp = energy::Prepared::from_params(prm);
+    // Per-hood label-1 counts from the current labels.
+    ones_h.fill(0.0);
+    for (e, &v) in h.members.iter().enumerate() {
+        ones_h[h.hood_id[e] as usize] += labels[v as usize] as f32;
+    }
+    // Per-element fused energy + argmin; accumulate hood sums.
+    hood_energy.fill(0.0);
+    for e in 0..h.num_elements() {
+        let hid = h.hood_id[e] as usize;
+        let lbl = labels[h.members[e] as usize] as f32;
+        let (em, am) =
+            energy::energy_min_p(y_elem[e], lbl, ones_h[hid], size_e[e], &pp);
+        emin[e] = em;
+        amin[e] = am;
+        hood_energy[hid] += em as f64;
+    }
+}
+
+/// Per-vertex resolution: minimum-energy label across the vertex's
+/// hood-member instances (ties -> label 0 via the packed encoding).
+pub(crate) fn resolve_vertices(
+    model: &MrfModel,
+    emin: &[f32],
+    amin: &[u8],
+    labels: &mut [u8],
+) {
+    let h = &model.hoods;
+    for v in 0..labels.len() {
+        let (s, e) =
+            (h.vert_offsets[v] as usize, h.vert_offsets[v + 1] as usize);
+        if s == e {
+            continue; // vertex in no hood: keep current label
+        }
+        let mut best = u64::MAX;
+        for &el in &h.vert_elems[s..e] {
+            let packed = energy::pack_energy_label(
+                emin[el as usize],
+                amin[el as usize],
+            );
+            best = best.min(packed);
+        }
+        labels[v] = energy::unpack_label(best);
+    }
+}
+
+// Expose the vertex resolution to sibling engines (same math,
+// different parallel structure).
+pub(crate) use resolve_vertices as resolve_vertices_serial;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OversegConfig;
+    use crate::dpp::Backend;
+    use crate::image::synth;
+    use crate::overseg::oversegment;
+
+    fn small_model(seed: u64) -> MrfModel {
+        let v = synth::porous_ground_truth(48, 48, 1, 0.42, seed);
+        let mut input = v.clone();
+        crate::image::noise::additive_gaussian(&mut input, 60.0, seed);
+        let seg = oversegment(
+            &Backend::Serial,
+            &input.slice(0),
+            &OversegConfig { scale: 64.0, min_region: 4 },
+        );
+        crate::mrf::build_model_serial(&seg)
+    }
+
+    #[test]
+    fn energy_decreases_and_converges() {
+        let model = small_model(3);
+        let cfg = MrfConfig::default();
+        let res = SerialEngine.run(&model, &cfg);
+        assert!(res.em_iters <= cfg.em_iters);
+        assert!(res.history.len() == res.em_iters);
+        // Energy after the final EM iteration should not exceed the
+        // first iteration's energy (EM is monotone up to re-estimation
+        // noise; allow tiny slack).
+        let first = res.history[0];
+        let last = res.energy;
+        assert!(last <= first + first.abs() * 0.05,
+                "first={first} last={last}");
+    }
+
+    #[test]
+    fn labels_binary_and_deterministic() {
+        let model = small_model(4);
+        let cfg = MrfConfig::default();
+        let a = SerialEngine.run(&model, &cfg);
+        let b = SerialEngine.run(&model, &cfg);
+        assert_eq!(a, b);
+        assert!(a.labels.iter().all(|&l| l <= 1));
+        assert_eq!(a.labels.len(), model.num_vertices());
+    }
+
+    #[test]
+    fn segmentation_separates_bimodal_regions() {
+        // Build an easy bimodal model and check the labeling splits it
+        // by intensity.
+        let model = small_model(5);
+        let cfg = MrfConfig { em_iters: 20, ..Default::default() };
+        let res = SerialEngine.run(&model, &cfg);
+        // vertices with y close to each estimated mean should mostly
+        // carry the corresponding label
+        let mut agree = 0usize;
+        let mut total = 0usize;
+        for (v, &l) in res.labels.iter().enumerate() {
+            let y = model.y[v];
+            let d0 = (y - res.params.mu[0]).abs();
+            let d1 = (y - res.params.mu[1]).abs();
+            // only count confident vertices
+            if (d0 - d1).abs() > 20.0 {
+                total += 1;
+                let want = u8::from(d1 < d0);
+                agree += usize::from(l == want);
+            }
+        }
+        assert!(total > 0);
+        assert!(agree as f64 / total as f64 > 0.9,
+                "agree {agree}/{total}");
+    }
+
+    #[test]
+    fn fixed_iters_runs_exact_counts() {
+        let model = small_model(6);
+        let cfg = MrfConfig {
+            em_iters: 3,
+            map_iters: 4,
+            fixed_iters: true,
+            ..Default::default()
+        };
+        let res = SerialEngine.run(&model, &cfg);
+        assert_eq!(res.em_iters, 3);
+        assert_eq!(res.map_iters, 12);
+    }
+}

@@ -1,0 +1,286 @@
+//! XLA engine — DPP-PMRF with the EM inner step executed as an
+//! AOT-compiled XLA program (Table 1's accelerator platform).
+//!
+//! Per MAP iteration the host only: gathers labels to elements,
+//! dispatches one padded batch through [`crate::runtime::EmRuntime`]
+//! (per-hood stats, the fused Pallas energy/min kernel, per-hood energy
+//! sums, and parameter statistics all happen inside the artifact), then
+//! resolves per-vertex labels across hoods and checks convergence.
+//! Python is never involved at run time.
+
+use std::sync::Arc;
+
+use crate::config::MrfConfig;
+use crate::runtime::EmRuntime;
+
+use super::params::{self, Stats};
+use super::{ConvergenceWindow, Engine, EmResult, HoodWindows, MrfModel};
+
+pub struct XlaEngine {
+    runtime: Arc<EmRuntime>,
+}
+
+impl XlaEngine {
+    pub fn new(runtime: Arc<EmRuntime>) -> Self {
+        XlaEngine { runtime }
+    }
+}
+
+impl Engine for XlaEngine {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn run(&self, model: &MrfModel, cfg: &MrfConfig) -> EmResult {
+        if cfg.fixed_iters && self.runtime.has_loop_buckets() {
+            // §Perf L2 fast path: the whole K-iteration MAP loop runs
+            // inside one artifact dispatch per EM iteration.
+            return self.run_fused_loop(model, cfg);
+        }
+        let h = &model.hoods;
+        let n = h.num_elements();
+        let nh = h.num_hoods();
+        let nv = model.num_vertices();
+        let y_elem = model.y_elems();
+
+        let (mut prm, mut labels) =
+            params::init_random(nv, cfg.beta as f32, cfg.seed);
+
+        let mut em_window = ConvergenceWindow::new(cfg.window, cfg.threshold);
+        let mut total_map = 0usize;
+        let mut em_iters = 0usize;
+        let mut lbl_e = vec![0.0f32; n];
+
+        for _em in 0..cfg.em_iters {
+            em_iters += 1;
+            let mut hw = HoodWindows::new(nh, cfg.window, cfg.threshold);
+            let mut last_stats = [0.0f32; 6];
+            let mut hood_energy = vec![0.0f64; nh];
+
+            for _map in 0..cfg.map_iters {
+                total_map += 1;
+                // Host gather: labels -> elements.
+                for (e, &v) in h.members.iter().enumerate() {
+                    lbl_e[e] = labels[v as usize] as f32;
+                }
+                // One AOT dispatch does the whole inner step.
+                let out = self
+                    .runtime
+                    .em_step(&y_elem, &lbl_e, &h.hood_id, nh, &prm)
+                    .expect("EM step dispatch failed");
+
+                // Host: per-vertex resolution across hoods.
+                let amin: Vec<u8> =
+                    out.new_label.iter().map(|&l| l as u8).collect();
+                super::serial::resolve_vertices_serial(
+                    model, &out.emin, &amin, &mut labels,
+                );
+
+                for (dst, &src) in
+                    hood_energy.iter_mut().zip(out.hood_energy.iter())
+                {
+                    *dst = src as f64;
+                }
+                last_stats = out.stats;
+
+                let done = hw.push_all(&hood_energy);
+                if done && !cfg.fixed_iters {
+                    break;
+                }
+            }
+
+            // Parameter update from the artifact's stats.
+            let stats = Stats {
+                acc: [
+                    [
+                        last_stats[0] as f64,
+                        last_stats[1] as f64,
+                        last_stats[2] as f64,
+                    ],
+                    [
+                        last_stats[3] as f64,
+                        last_stats[4] as f64,
+                        last_stats[5] as f64,
+                    ],
+                ],
+            };
+            prm = params::update(&stats, cfg.beta as f32);
+
+            let total: f64 = hood_energy.iter().sum();
+            em_window.push(total);
+            if em_window.converged() && !cfg.fixed_iters {
+                break;
+            }
+        }
+
+        EmResult {
+            labels,
+            em_iters,
+            map_iters: total_map,
+            energy: *em_window.history().last().unwrap_or(&0.0),
+            history: em_window.history().to_vec(),
+            params: prm,
+        }
+    }
+}
+
+impl XlaEngine {
+    /// Fixed-iteration path: one `em_loop` dispatch per EM iteration
+    /// (labels resolve in-device; only params/energy cross the host
+    /// boundary between EM iterations).
+    fn run_fused_loop(&self, model: &MrfModel, cfg: &MrfConfig)
+        -> EmResult {
+        let h = &model.hoods;
+        let nh = h.num_hoods();
+        let nv = model.num_vertices();
+        let y_elem = model.y_elems();
+
+        // Slot -> vertex id for the by-vertex grouping (static).
+        let mut vert_seg = vec![0u32; h.num_elements()];
+        for v in 0..nv {
+            for s in h.vert_offsets[v] as usize
+                ..h.vert_offsets[v + 1] as usize
+            {
+                vert_seg[s] = v as u32;
+            }
+        }
+
+        let (mut prm, labels0) =
+            params::init_random(nv, cfg.beta as f32, cfg.seed);
+        let mut label_v: Vec<f32> =
+            labels0.iter().map(|&l| l as f32).collect();
+
+        let mut em_window = ConvergenceWindow::new(cfg.window, cfg.threshold);
+        let mut total_map = 0usize;
+        let mut em_iters = 0usize;
+
+        for _em in 0..cfg.em_iters {
+            em_iters += 1;
+            total_map += cfg.map_iters;
+            let out = self
+                .runtime
+                .em_loop(
+                    &y_elem, &label_v, &h.hood_id, &h.members,
+                    &h.vert_elems, &vert_seg, nh, cfg.map_iters, &prm,
+                )
+                .expect("em_loop dispatch failed");
+            label_v = out.label_v;
+
+            let stats = Stats {
+                acc: [
+                    [out.stats[0] as f64, out.stats[1] as f64,
+                     out.stats[2] as f64],
+                    [out.stats[3] as f64, out.stats[4] as f64,
+                     out.stats[5] as f64],
+                ],
+            };
+            prm = params::update(&stats, cfg.beta as f32);
+            em_window.push(out.total as f64);
+        }
+
+        EmResult {
+            labels: label_v.iter().map(|&l| l as u8).collect(),
+            em_iters,
+            map_iters: total_map,
+            energy: *em_window.history().last().unwrap_or(&0.0),
+            history: em_window.history().to_vec(),
+            params: prm,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OversegConfig;
+    use crate::dpp::Backend;
+    use crate::overseg::oversegment;
+
+    fn small_model(seed: u64) -> MrfModel {
+        let v = crate::image::synth::porous_ground_truth(48, 48, 1, 0.42,
+                                                         seed);
+        let mut input = v.clone();
+        crate::image::noise::additive_gaussian(&mut input, 60.0, seed);
+        let seg = oversegment(
+            &Backend::Serial,
+            &input.slice(0),
+            &OversegConfig { scale: 64.0, min_region: 4 },
+        );
+        crate::mrf::build_model_serial(&seg)
+    }
+
+    fn runtime() -> Arc<EmRuntime> {
+        Arc::new(
+            EmRuntime::load(std::path::Path::new("artifacts"))
+                .expect("run `make artifacts` first"),
+        )
+    }
+
+    #[test]
+    fn xla_engine_agrees_with_serial() {
+        let model = small_model(31);
+        let cfg = MrfConfig { fixed_iters: true, em_iters: 3, map_iters: 3,
+                              ..Default::default() };
+        let want = super::super::serial::SerialEngine.run(&model, &cfg);
+        let got = XlaEngine::new(runtime()).run(&model, &cfg);
+        let agree = got
+            .labels
+            .iter()
+            .zip(&want.labels)
+            .filter(|(a, b)| a == b)
+            .count();
+        let frac = agree as f64 / want.labels.len() as f64;
+        assert!(frac > 0.995, "agreement {frac}");
+        // energies within f32 dispatch tolerance
+        for (a, b) in got.history.iter().zip(&want.history) {
+            assert!((a - b).abs() < 1e-3 * b.abs().max(1.0),
+                    "{a} vs {b}");
+        }
+        // parameters close
+        for l in 0..2 {
+            assert!((got.params.mu[l] - want.params.mu[l]).abs() < 0.5);
+            assert!((got.params.sigma[l] - want.params.sigma[l]).abs() < 0.5);
+        }
+    }
+
+    #[test]
+    fn fused_loop_path_matches_stepwise_path() {
+        // The in-device K-loop must produce the same labels as the
+        // per-iteration dispatch path on the same model/config.
+        let model = small_model(33);
+        let cfg = MrfConfig { fixed_iters: true, em_iters: 3, map_iters: 3,
+                              ..Default::default() };
+        let rt = runtime();
+        let fused = XlaEngine::new(Arc::clone(&rt)).run(&model, &cfg);
+        // Force the stepwise path by running the same engine in
+        // convergence mode with thresholds that never trigger.
+        let cfg_step = MrfConfig {
+            fixed_iters: false,
+            em_iters: 3,
+            map_iters: 3,
+            threshold: 0.0,
+            ..Default::default()
+        };
+        let step = XlaEngine::new(rt).run(&model, &cfg_step);
+        let agree = fused
+            .labels
+            .iter()
+            .zip(&step.labels)
+            .filter(|(a, b)| a == b)
+            .count();
+        let frac = agree as f64 / step.labels.len() as f64;
+        assert!(frac > 0.999, "agreement {frac}");
+        for (a, b) in fused.history.iter().zip(&step.history) {
+            assert!((a - b).abs() < 1e-3 * b.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn xla_engine_convergence_mode() {
+        let model = small_model(32);
+        let cfg = MrfConfig::default();
+        let res = XlaEngine::new(runtime()).run(&model, &cfg);
+        assert!(res.em_iters <= cfg.em_iters);
+        assert!(res.labels.iter().all(|&l| l <= 1));
+    }
+}

@@ -1,0 +1,275 @@
+//! Oversegmentation: partition a 2D slice into irregular superpixel
+//! regions of statistically similar intensity (paper §3.1).
+//!
+//! Felzenszwalb–Huttenlocher graph-based merging: 4-connected pixel
+//! edges weighted by intensity difference are processed in ascending
+//! weight order; two components merge when the edge weight is within
+//! each component's internal difference plus a size-scaled tolerance
+//! (`scale / |C|`). A final pass absorbs regions smaller than
+//! `min_region`. Edge ordering uses the DPP radix [`sort_by_key`], so
+//! the oversegmentation is itself a DPP client, as in the paper.
+
+mod unionfind;
+
+pub use unionfind::UnionFind;
+
+use crate::config::OversegConfig;
+use crate::dpp::{self, Backend};
+use crate::image::ImageSlice;
+
+/// Result of oversegmenting one slice: a compact region labeling plus
+/// per-region statistics (the MRF's `y` observations).
+#[derive(Debug, Clone)]
+pub struct Overseg {
+    /// Per-pixel region id in `0..num_regions`.
+    pub labels: Vec<u32>,
+    pub num_regions: usize,
+    /// Mean intensity per region.
+    pub mean: Vec<f32>,
+    /// Pixel count per region.
+    pub size: Vec<u32>,
+    pub width: usize,
+    pub height: usize,
+}
+
+/// 4-connectivity pixel edges, weight = |ΔI|, packed for the radix
+/// sort: key = (weight << 40) | edge_index keeps the sort stable and
+/// deterministic without a payload side array.
+fn build_edges(img: &ImageSlice) -> (Vec<u32>, Vec<u32>, Vec<u8>) {
+    let (w, h) = (img.width, img.height);
+    let mut a = Vec::with_capacity(2 * w * h);
+    let mut b = Vec::with_capacity(2 * w * h);
+    let mut wt = Vec::with_capacity(2 * w * h);
+    for y in 0..h {
+        for x in 0..w {
+            let p = (y * w + x) as u32;
+            let ip = img.at(x, y);
+            if x + 1 < w {
+                a.push(p);
+                b.push(p + 1);
+                wt.push(ip.abs_diff(img.at(x + 1, y)));
+            }
+            if y + 1 < h {
+                a.push(p);
+                b.push(p + w as u32);
+                wt.push(ip.abs_diff(img.at(x, y + 1)));
+            }
+        }
+    }
+    (a, b, wt)
+}
+
+/// Oversegment one image slice.
+pub fn oversegment(bk: &Backend, img: &ImageSlice, cfg: &OversegConfig)
+    -> Overseg {
+    let (ea, eb, ew) = build_edges(img);
+    segment_core(bk, img.pixels, &ea, &eb, &ew, img.width, img.height, cfg)
+}
+
+/// Oversegment a full 3D volume directly (the paper's §5 future-work
+/// extension): 6-connectivity voxel edges, one region partition for the
+/// whole stack instead of per-slice partitions. The returned
+/// [`Overseg`] flattens z into the height axis (`height = h * depth`),
+/// which every downstream consumer (RAG, hoods, painting) already
+/// handles since they only read `labels` linearly.
+pub fn oversegment_3d(bk: &Backend, vol: &crate::image::Volume,
+                      cfg: &OversegConfig) -> Overseg {
+    let (w, h, d) = (vol.width, vol.height, vol.depth);
+    let mut a = Vec::with_capacity(3 * vol.voxels());
+    let mut b = Vec::with_capacity(3 * vol.voxels());
+    let mut wt = Vec::with_capacity(3 * vol.voxels());
+    let plane = w * h;
+    for z in 0..d {
+        for y in 0..h {
+            for x in 0..w {
+                let p = z * plane + y * w + x;
+                let ip = vol.data[p];
+                if x + 1 < w {
+                    a.push(p as u32);
+                    b.push((p + 1) as u32);
+                    wt.push(ip.abs_diff(vol.data[p + 1]));
+                }
+                if y + 1 < h {
+                    a.push(p as u32);
+                    b.push((p + w) as u32);
+                    wt.push(ip.abs_diff(vol.data[p + w]));
+                }
+                if z + 1 < d {
+                    a.push(p as u32);
+                    b.push((p + plane) as u32);
+                    wt.push(ip.abs_diff(vol.data[p + plane]));
+                }
+            }
+        }
+    }
+    segment_core(bk, &vol.data, &a, &b, &wt, w, h * d, cfg)
+}
+
+/// Shared Felzenszwalb merging core over an explicit edge list.
+#[allow(clippy::too_many_arguments)]
+fn segment_core(
+    bk: &Backend,
+    intensity: &[u8],
+    ea: &[u32],
+    eb: &[u32],
+    ew: &[u8],
+    width: usize,
+    height: usize,
+    cfg: &OversegConfig,
+) -> Overseg {
+    let n = intensity.len();
+    let m = ea.len();
+
+    // Order edges by weight via SortByKey: key = weight, payload = edge.
+    let mut keys: Vec<u64> = ew.iter().map(|&w| w as u64).collect();
+    let mut order: Vec<u32> = dpp::iota(bk, m);
+    dpp::sort_by_key(bk, &mut keys, &mut order);
+
+    // Sequential merging (union-find is inherently sequential; the
+    // paper's pipeline also builds the graph once per slice).
+    let mut uf = UnionFind::new(n);
+    let mut internal = vec![0.0f64; n]; // max internal edge weight
+    let scale = cfg.scale.max(0.0);
+    for &ei in &order {
+        let (pa, pb, w) =
+            (ea[ei as usize] as usize, eb[ei as usize] as usize,
+             ew[ei as usize] as f64);
+        let ra = uf.find(pa);
+        let rb = uf.find(pb);
+        if ra == rb {
+            continue;
+        }
+        let ta = internal[ra] + scale / uf.size(ra) as f64;
+        let tb = internal[rb] + scale / uf.size(rb) as f64;
+        if w <= ta && w <= tb {
+            let r = uf.union(ra, rb);
+            internal[r] = w.max(internal[ra]).max(internal[rb]);
+        }
+    }
+
+    // Absorb small regions into an arbitrary neighbor (ascending edge
+    // order keeps this deterministic and edge-contrast-aware).
+    if cfg.min_region > 1 {
+        for &ei in &order {
+            let ra = uf.find(ea[ei as usize] as usize);
+            let rb = uf.find(eb[ei as usize] as usize);
+            if ra != rb
+                && (uf.size(ra) < cfg.min_region
+                    || uf.size(rb) < cfg.min_region)
+            {
+                uf.union(ra, rb);
+            }
+        }
+    }
+
+    // Compact labels 0..R-1 (first-appearance order: deterministic).
+    let mut remap = vec![u32::MAX; n];
+    let mut labels = vec![0u32; n];
+    let mut num_regions = 0u32;
+    for p in 0..n {
+        let r = uf.find(p);
+        if remap[r] == u32::MAX {
+            remap[r] = num_regions;
+            num_regions += 1;
+        }
+        labels[p] = remap[r];
+    }
+
+    // Region statistics.
+    let mut sum = vec![0u64; num_regions as usize];
+    let mut size = vec![0u32; num_regions as usize];
+    for (p, &l) in labels.iter().enumerate() {
+        sum[l as usize] += intensity[p] as u64;
+        size[l as usize] += 1;
+    }
+    let mean = sum
+        .iter()
+        .zip(&size)
+        .map(|(&s, &c)| s as f32 / c.max(1) as f32)
+        .collect();
+
+    Overseg {
+        labels,
+        num_regions: num_regions as usize,
+        mean,
+        size,
+        width,
+        height,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::Volume;
+    use crate::pool::Pool;
+
+    fn cfg() -> OversegConfig {
+        OversegConfig { scale: 64.0, min_region: 4 }
+    }
+
+    fn checkerboard_halves() -> Volume {
+        // left half 40, right half 200 -> exactly 2 regions expected
+        let mut v = Volume::new(16, 16, 1);
+        for y in 0..16 {
+            for x in 0..16 {
+                v.set(x, y, 0, if x < 8 { 40 } else { 200 });
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn two_flat_halves_two_regions() {
+        let v = checkerboard_halves();
+        let o = oversegment(&Backend::Serial, &v.slice(0), &cfg());
+        assert_eq!(o.num_regions, 2);
+        assert_eq!(o.labels[0], 0);
+        assert_eq!(o.labels[15], 1);
+        assert!((o.mean[0] - 40.0).abs() < 1e-5);
+        assert!((o.mean[1] - 200.0).abs() < 1e-5);
+        assert_eq!(o.size[0] + o.size[1], 256);
+    }
+
+    #[test]
+    fn labels_are_compact_and_cover() {
+        let v = crate::image::synth::experimental_volume(48, 48, 1, 3);
+        let o = oversegment(&Backend::Serial, &v.slice(0), &cfg());
+        assert!(o.num_regions > 2);
+        let max = *o.labels.iter().max().unwrap() as usize;
+        assert_eq!(max + 1, o.num_regions);
+        assert_eq!(o.size.iter().sum::<u32>() as usize, 48 * 48);
+    }
+
+    #[test]
+    fn min_region_enforced() {
+        let v = crate::image::synth::experimental_volume(48, 48, 1, 5);
+        let o = oversegment(&Backend::Serial, &v.slice(0), &OversegConfig {
+            scale: 16.0,
+            min_region: 8,
+        });
+        assert!(o.size.iter().all(|&s| s >= 8),
+                "min size {:?}", o.size.iter().min());
+    }
+
+    #[test]
+    fn serial_and_threaded_agree() {
+        let v = crate::image::synth::experimental_volume(40, 40, 1, 9);
+        let a = oversegment(&Backend::Serial, &v.slice(0), &cfg());
+        let b = oversegment(
+            &Backend::threaded_with_grain(Pool::new(4), 256),
+            &v.slice(0),
+            &cfg(),
+        );
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.mean, b.mean);
+    }
+
+    #[test]
+    fn flat_image_single_region() {
+        let v = Volume::from_data(8, 8, 1, vec![77; 64]);
+        let o = oversegment(&Backend::Serial, &v.slice(0), &cfg());
+        assert_eq!(o.num_regions, 1);
+        assert_eq!(o.mean[0], 77.0);
+    }
+}

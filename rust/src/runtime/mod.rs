@@ -1,0 +1,444 @@
+//! XLA/PJRT runtime — loads the AOT artifacts produced by
+//! `python/compile/aot.py` and executes the EM inner step from rust.
+//!
+//! Python never runs on this path: `make artifacts` lowers the L2 JAX
+//! model (containing the L1 Pallas kernel) to HLO *text* once; here we
+//! parse that text (`HloModuleProto::from_text_file` — the text parser
+//! reassigns the 64-bit instruction ids jax ≥ 0.5 emits, which
+//! xla_extension 0.5.1 would reject in proto form), compile one PJRT
+//! executable per size bucket, and dispatch padded batches.
+//!
+//! This is the paper's "GPU back end" stand-in (DESIGN.md
+//! §Hardware-Adaptation): the identical code path a TPU/GPU PJRT plugin
+//! would serve, exercised on the CPU client.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::dpp::timing;
+use crate::mrf::Params;
+
+/// One compiled size bucket.
+pub struct Bucket {
+    pub elems: usize,
+    pub hoods: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Outputs of one EM-step dispatch, already trimmed to the real
+/// (unpadded) sizes.
+#[derive(Debug, Clone)]
+pub struct EmStepOut {
+    /// Per-element argmin label (0.0/1.0).
+    pub new_label: Vec<f32>,
+    /// Per-element minimum energy.
+    pub emin: Vec<f32>,
+    /// Per-hood energy sums.
+    pub hood_energy: Vec<f32>,
+    /// (count0, sum0, sumsq0, count1, sum1, sumsq1).
+    pub stats: [f32; 6],
+    /// Global energy sum.
+    pub total: f32,
+}
+
+/// One compiled in-device-loop bucket (§Perf L2: the K-iteration MAP
+/// loop runs inside the artifact — one dispatch per EM iteration).
+pub struct LoopBucket {
+    pub elems: usize,
+    pub hoods: usize,
+    pub verts: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Outputs of one em_loop dispatch (final-iteration values, trimmed).
+#[derive(Debug, Clone)]
+pub struct EmLoopOut {
+    /// Per-vertex labels after K MAP iterations.
+    pub label_v: Vec<f32>,
+    pub hood_energy: Vec<f32>,
+    pub stats: [f32; 6],
+    pub total: f32,
+}
+
+/// The PJRT client plus all compiled buckets, ready to serve EM steps.
+pub struct EmRuntime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    buckets: Vec<Bucket>,
+    loop_buckets: Vec<LoopBucket>,
+    pub dir: PathBuf,
+}
+
+impl EmRuntime {
+    /// Load every bucket listed in `<dir>/manifest.json` and compile it
+    /// on the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<EmRuntime> {
+        let manifest = crate::json::from_file(&dir.join("manifest.json"))
+            .context("artifacts manifest (run `make artifacts`?)")?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        let mut buckets = Vec::new();
+        for b in manifest
+            .get("buckets")
+            .and_then(|v| v.as_array())
+            .ok_or_else(|| anyhow!("manifest missing buckets"))?
+        {
+            let elems = b
+                .get("elems")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("bucket missing elems"))?;
+            let hoods = b
+                .get("hoods")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("bucket missing hoods"))?;
+            let file = b
+                .get("file")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("bucket missing file"))?;
+            let path = dir.join(file);
+            let t = crate::util::Timer::start();
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e}", path.display()))?;
+            crate::log_debug!(
+                "compiled bucket n={elems} h={hoods} in {}",
+                crate::util::fmt_secs(t.elapsed_secs())
+            );
+            buckets.push(Bucket { elems, hoods, exe });
+        }
+        if buckets.is_empty() {
+            bail!("no buckets in manifest");
+        }
+        buckets.sort_by_key(|b| (b.elems, b.hoods));
+
+        // Loop buckets are optional (older artifact sets lack them).
+        let mut loop_buckets = Vec::new();
+        if let Some(list) =
+            manifest.get("loop_buckets").and_then(|v| v.as_array())
+        {
+            for b in list {
+                let (Some(elems), Some(hoods), Some(verts), Some(file)) = (
+                    b.get("elems").and_then(|v| v.as_usize()),
+                    b.get("hoods").and_then(|v| v.as_usize()),
+                    b.get("verts").and_then(|v| v.as_usize()),
+                    b.get("file").and_then(|v| v.as_str()),
+                ) else {
+                    bail!("malformed loop_bucket entry");
+                };
+                let path = dir.join(file);
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client.compile(&comp).map_err(|e| {
+                    anyhow!("compile {}: {e}", path.display())
+                })?;
+                loop_buckets.push(LoopBucket { elems, hoods, verts, exe });
+            }
+            loop_buckets.sort_by_key(|b| (b.elems, b.hoods));
+        }
+        Ok(EmRuntime { client, buckets, loop_buckets, dir: dir.to_path_buf() })
+    }
+
+    /// Smallest loop bucket that fits `(elems, hoods, verts)`.
+    pub fn pick_loop_bucket(&self, elems: usize, hoods: usize, verts: usize)
+        -> Result<&LoopBucket> {
+        self.loop_buckets
+            .iter()
+            .find(|b| b.elems >= elems && b.hoods >= hoods
+                      && b.verts >= verts)
+            .ok_or_else(|| anyhow!(
+                "no loop bucket fits (elems={elems}, hoods={hoods}, \
+                 verts={verts}); re-run `make artifacts`"))
+    }
+
+    pub fn has_loop_buckets(&self) -> bool {
+        !self.loop_buckets.is_empty()
+    }
+
+    /// Execute K MAP iterations in one dispatch. `vert_elems` /
+    /// `vert_seg` describe the by-vertex grouping of elements (see
+    /// `python/compile/model.py::em_loop`). Padding reserves the last
+    /// hood and the last vertex of the bucket as sacrificial targets.
+    #[allow(clippy::too_many_arguments)]
+    pub fn em_loop(
+        &self,
+        y: &[f32],
+        label_v: &[f32],
+        hood_id: &[u32],
+        members: &[u32],
+        vert_elems: &[u32],
+        vert_seg: &[u32],
+        num_hoods: usize,
+        k: usize,
+        prm: &Params,
+    ) -> Result<EmLoopOut> {
+        let n = y.len();
+        let nv = label_v.len();
+        assert_eq!(hood_id.len(), n);
+        assert_eq!(members.len(), n);
+        assert_eq!(vert_elems.len(), n);
+        assert_eq!(vert_seg.len(), n);
+        let bucket = self.pick_loop_bucket(n, num_hoods + 1, nv + 1)?;
+        let (bn, bh, bv) = (bucket.elems, bucket.hoods, bucket.verts);
+
+        let pad_i32 = |src: &[u32], fill: i32| -> Vec<i32> {
+            let mut out = vec![fill; bn];
+            for (dst, &s) in out.iter_mut().zip(src.iter()) {
+                *dst = s as i32;
+            }
+            out
+        };
+        let mut y_p = vec![0.0f32; bn];
+        y_p[..n].copy_from_slice(y);
+        let mut l_p = vec![0.0f32; bv];
+        l_p[..nv].copy_from_slice(label_v);
+        let h_p = pad_i32(hood_id, (bh - 1) as i32);
+        let m_p = pad_i32(members, (bv - 1) as i32);
+        let ve_p = pad_i32(vert_elems, 0);
+        let vs_p = pad_i32(vert_seg, (bv - 1) as i32);
+        let mut v_p = vec![0.0f32; bn];
+        v_p[..n].fill(1.0);
+        let params_v =
+            [prm.mu[0], prm.mu[1], prm.sigma[0], prm.sigma[1], prm.beta];
+        let k_v = [k as i32];
+
+        let t = crate::util::Timer::start();
+        let args = [
+            xla::Literal::vec1(&y_p),
+            xla::Literal::vec1(&l_p),
+            xla::Literal::vec1(&h_p),
+            xla::Literal::vec1(&m_p),
+            xla::Literal::vec1(&v_p),
+            xla::Literal::vec1(&ve_p),
+            xla::Literal::vec1(&vs_p),
+            xla::Literal::vec1(&k_v[..]),
+            xla::Literal::vec1(&params_v[..]),
+        ];
+        let result = bucket
+            .exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("execute em_loop: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e}"))?;
+        let outs = result.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+        timing::record("XlaEmLoop", t.elapsed().as_nanos() as u64);
+        if outs.len() != 4 {
+            bail!("expected 4 outputs, got {}", outs.len());
+        }
+        let mut it = outs.into_iter();
+        let label_out: Vec<f32> =
+            it.next().unwrap().to_vec().map_err(|e| anyhow!("{e}"))?;
+        let hood_energy: Vec<f32> =
+            it.next().unwrap().to_vec().map_err(|e| anyhow!("{e}"))?;
+        let stats_v: Vec<f32> =
+            it.next().unwrap().to_vec().map_err(|e| anyhow!("{e}"))?;
+        let total_v: Vec<f32> =
+            it.next().unwrap().to_vec().map_err(|e| anyhow!("{e}"))?;
+        let mut stats = [0.0f32; 6];
+        stats.copy_from_slice(&stats_v);
+        Ok(EmLoopOut {
+            label_v: label_out[..nv].to_vec(),
+            hood_energy: hood_energy[..num_hoods].to_vec(),
+            stats,
+            total: total_v[0],
+        })
+    }
+
+    /// Smallest bucket that fits `(elems, hoods)`.
+    pub fn pick_bucket(&self, elems: usize, hoods: usize) -> Result<&Bucket> {
+        self.buckets
+            .iter()
+            .find(|b| b.elems >= elems && b.hoods >= hoods)
+            .ok_or_else(|| {
+                anyhow!(
+                    "batch (elems={elems}, hoods={hoods}) exceeds largest \
+                     bucket (elems={}, hoods={})",
+                    self.buckets.last().unwrap().elems,
+                    self.buckets.last().unwrap().hoods
+                )
+            })
+    }
+
+    pub fn buckets(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.buckets.iter().map(|b| (b.elems, b.hoods))
+    }
+
+    /// Execute one EM step. Inputs are the *real* (unpadded) arrays;
+    /// padding to the bucket shape happens here. Padding elements carry
+    /// `valid = 0` and point at the last (sacrificial) hood.
+    pub fn em_step(
+        &self,
+        y: &[f32],
+        label: &[f32],
+        hood_id: &[u32],
+        num_hoods: usize,
+        prm: &Params,
+    ) -> Result<EmStepOut> {
+        let n = y.len();
+        assert_eq!(label.len(), n);
+        assert_eq!(hood_id.len(), n);
+        // Reserve one hood id for padding so real hood energies are
+        // untouched by the padded lanes.
+        let bucket = self.pick_bucket(n, num_hoods + 1)?;
+        let (bn, bh) = (bucket.elems, bucket.hoods);
+
+        let mut y_p = vec![0.0f32; bn];
+        y_p[..n].copy_from_slice(y);
+        let mut l_p = vec![0.0f32; bn];
+        l_p[..n].copy_from_slice(label);
+        let mut h_p = vec![(bh - 1) as i32; bn];
+        for (dst, &src) in h_p.iter_mut().zip(hood_id.iter()) {
+            *dst = src as i32;
+        }
+        let mut v_p = vec![0.0f32; bn];
+        v_p[..n].fill(1.0);
+        let params_v =
+            [prm.mu[0], prm.mu[1], prm.sigma[0], prm.sigma[1], prm.beta];
+
+        let t = crate::util::Timer::start();
+        let lit_y = xla::Literal::vec1(&y_p);
+        let lit_l = xla::Literal::vec1(&l_p);
+        let lit_h = xla::Literal::vec1(&h_p);
+        let lit_v = xla::Literal::vec1(&v_p);
+        let lit_p = xla::Literal::vec1(&params_v[..]);
+
+        let result = bucket
+            .exe
+            .execute::<xla::Literal>(&[lit_y, lit_l, lit_h, lit_v, lit_p])
+            .map_err(|e| anyhow!("execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e}"))?;
+        let outs =
+            result.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+        timing::record("XlaEmStep", t.elapsed().as_nanos() as u64);
+        if outs.len() != 5 {
+            bail!("expected 5 outputs, got {}", outs.len());
+        }
+        let mut it = outs.into_iter();
+        let new_label: Vec<f32> =
+            it.next().unwrap().to_vec().map_err(|e| anyhow!("{e}"))?;
+        let emin: Vec<f32> =
+            it.next().unwrap().to_vec().map_err(|e| anyhow!("{e}"))?;
+        let hood_energy: Vec<f32> =
+            it.next().unwrap().to_vec().map_err(|e| anyhow!("{e}"))?;
+        let stats_v: Vec<f32> =
+            it.next().unwrap().to_vec().map_err(|e| anyhow!("{e}"))?;
+        let total_v: Vec<f32> =
+            it.next().unwrap().to_vec().map_err(|e| anyhow!("{e}"))?;
+
+        let mut stats = [0.0f32; 6];
+        stats.copy_from_slice(&stats_v);
+        Ok(EmStepOut {
+            new_label: new_label[..n].to_vec(),
+            emin: emin[..n].to_vec(),
+            hood_energy: hood_energy[..num_hoods].to_vec(),
+            stats,
+            total: total_v[0],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mrf::energy;
+
+    fn artifacts_dir() -> PathBuf {
+        // Tests run from the crate root.
+        PathBuf::from("artifacts")
+    }
+
+    fn runtime() -> EmRuntime {
+        EmRuntime::load(&artifacts_dir()).expect("run `make artifacts` first")
+    }
+
+    #[test]
+    fn loads_manifest_buckets() {
+        let rt = runtime();
+        let buckets: Vec<_> = rt.buckets().collect();
+        assert!(!buckets.is_empty());
+        assert!(buckets.windows(2).all(|w| w[0].0 <= w[1].0), "sorted");
+    }
+
+    #[test]
+    fn pick_bucket_smallest_fit() {
+        let rt = runtime();
+        let b = rt.pick_bucket(100, 10).unwrap();
+        assert_eq!(b.elems, 4096);
+        let b = rt.pick_bucket(5000, 10).unwrap();
+        assert_eq!(b.elems, 8192);
+        assert!(rt.pick_bucket(usize::MAX / 2, 1).is_err());
+    }
+
+    #[test]
+    fn em_step_matches_rust_energy_math() {
+        let rt = runtime();
+        let prm = Params {
+            mu: [40.0, 180.0],
+            sigma: [12.0, 30.0],
+            beta: 0.5,
+        };
+        // 3 hoods of 4 elements, mixed labels.
+        let n = 12;
+        let y: Vec<f32> =
+            (0..n).map(|i| 20.0 + 18.0 * i as f32).collect();
+        let label: Vec<f32> = (0..n).map(|i| (i % 2) as f32).collect();
+        let hood_id: Vec<u32> = (0..n).map(|i| (i / 4) as u32).collect();
+        let out = rt.em_step(&y, &label, &hood_id, 3, &prm).unwrap();
+
+        // Oracle: the shared rust energy math.
+        let mut ones = [0.0f32; 3];
+        for i in 0..n {
+            ones[hood_id[i] as usize] += label[i];
+        }
+        let mut want_he = [0.0f32; 3];
+        for i in 0..n {
+            let h = hood_id[i] as usize;
+            let (em, am) =
+                energy::energy_min(y[i], label[i], ones[h], 4.0, &prm);
+            assert!(
+                (out.emin[i] - em).abs() < 1e-4,
+                "emin[{i}]: {} vs {em}", out.emin[i]
+            );
+            assert_eq!(out.new_label[i], am as f32, "label[{i}]");
+            want_he[h] += em;
+        }
+        for h in 0..3 {
+            assert!(
+                (out.hood_energy[h] - want_he[h]).abs()
+                    < 1e-3 * want_he[h].abs().max(1.0),
+                "hood {h}: {} vs {}", out.hood_energy[h], want_he[h]
+            );
+        }
+        let want_total: f32 = want_he.iter().sum();
+        assert!((out.total - want_total).abs()
+                < 1e-3 * want_total.abs().max(1.0));
+        // stats counts add up to n
+        assert_eq!((out.stats[0] + out.stats[3]) as usize, n);
+    }
+
+    #[test]
+    fn padding_does_not_leak_into_outputs() {
+        let rt = runtime();
+        let prm = Params {
+            mu: [100.0, 150.0],
+            sigma: [10.0, 10.0],
+            beta: 0.0,
+        };
+        // Tiny batch deep inside the smallest bucket.
+        let y = vec![90.0f32, 160.0, 140.0];
+        let label = vec![0.0f32, 1.0, 0.0];
+        let hood_id = vec![0u32, 0, 1];
+        let out = rt.em_step(&y, &label, &hood_id, 2, &prm).unwrap();
+        assert_eq!(out.new_label.len(), 3);
+        assert_eq!(out.hood_energy.len(), 2);
+        // beta=0: labels decided purely by distance to mu
+        assert_eq!(out.new_label, vec![0.0, 1.0, 1.0]);
+        // stats only count the 3 real elements
+        assert_eq!((out.stats[0] + out.stats[3]) as usize, 3);
+    }
+}

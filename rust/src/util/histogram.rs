@@ -1,0 +1,121 @@
+//! Small integer histogram used for neighborhood-demographics reports
+//! (§4.3.3 of the paper attributes scaling differences to the
+//! neighborhood-size distribution) and for benchmark summaries.
+
+/// Histogram over u32 values with fixed-width bins.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub bin_width: u32,
+    pub counts: Vec<u64>,
+    pub total: u64,
+    pub min: u32,
+    pub max: u32,
+    pub sum: u64,
+}
+
+impl Histogram {
+    pub fn new(bin_width: u32) -> Self {
+        assert!(bin_width > 0);
+        Histogram {
+            bin_width,
+            counts: Vec::new(),
+            total: 0,
+            min: u32::MAX,
+            max: 0,
+            sum: 0,
+        }
+    }
+
+    pub fn add(&mut self, v: u32) {
+        let bin = (v / self.bin_width) as usize;
+        if bin >= self.counts.len() {
+            self.counts.resize(bin + 1, 0);
+        }
+        self.counts[bin] += 1;
+        self.total += 1;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        self.sum += v as u64;
+    }
+
+    pub fn from_values(values: impl IntoIterator<Item = u32>, bin_width: u32)
+        -> Self {
+        let mut h = Histogram::new(bin_width);
+        for v in values {
+            h.add(v);
+        }
+        h
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 { 0.0 } else { self.sum as f64 / self.total as f64 }
+    }
+
+    /// Coefficient of variation of the *bin counts* — a cheap "how
+    /// irregular is this distribution" number used in reports.
+    pub fn irregularity(&self) -> f64 {
+        let nz: Vec<f64> = self
+            .counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| c as f64)
+            .collect();
+        if nz.len() < 2 {
+            return 0.0;
+        }
+        let mean = nz.iter().sum::<f64>() / nz.len() as f64;
+        let var = nz.iter().map(|c| (c - mean) * (c - mean)).sum::<f64>()
+            / nz.len() as f64;
+        var.sqrt() / mean
+    }
+
+    /// ASCII rendering for log output / EXPERIMENTS.md.
+    pub fn render(&self, width: usize) -> String {
+        let peak = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let mut out = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let bar = "#".repeat(((c as f64 / peak as f64) * width as f64)
+                .round() as usize);
+            out.push_str(&format!(
+                "{:>6}-{:<6} | {:<width$} {}\n",
+                i as u32 * self.bin_width,
+                (i as u32 + 1) * self.bin_width - 1,
+                bar,
+                c,
+                width = width
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bins_and_stats() {
+        let h = Histogram::from_values([1, 2, 3, 10, 11, 25], 10);
+        assert_eq!(h.counts, vec![3, 2, 1]);
+        assert_eq!(h.total, 6);
+        assert_eq!(h.min, 1);
+        assert_eq!(h.max, 25);
+        assert!((h.mean() - 52.0 / 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn render_skips_empty_bins() {
+        let h = Histogram::from_values([1, 100], 10);
+        let r = h.render(20);
+        assert_eq!(r.lines().count(), 2);
+    }
+
+    #[test]
+    fn irregularity_zero_for_uniform() {
+        let h = Histogram::from_values([1, 11, 21, 31], 10);
+        assert_eq!(h.irregularity(), 0.0);
+    }
+}

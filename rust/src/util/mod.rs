@@ -1,0 +1,10 @@
+//! Small shared substrates: PRNG, timers, histograms, logging.
+
+pub mod histogram;
+pub mod logging;
+pub mod prng;
+pub mod timer;
+
+pub use histogram::Histogram;
+pub use prng::{splitmix64, Pcg32};
+pub use timer::{fmt_secs, measure, Stats, Timer};

@@ -1,0 +1,114 @@
+//! Timing helpers: scoped wall-clock timers and robust summary stats.
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Summary statistics over repeated timing samples (seconds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stats {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub median: f64,
+    pub stddev: f64,
+}
+
+impl Stats {
+    pub fn from_samples(samples: &[f64]) -> Stats {
+        assert!(!samples.is_empty(), "no samples");
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let var =
+            s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let median = if n % 2 == 1 {
+            s[n / 2]
+        } else {
+            0.5 * (s[n / 2 - 1] + s[n / 2])
+        };
+        Stats { n, min: s[0], max: s[n - 1], mean, median, stddev: var.sqrt() }
+    }
+}
+
+/// Time `f` with `warmup` discarded runs and `reps` measured runs.
+pub fn measure<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Timer::start();
+        f();
+        samples.push(t.elapsed_secs());
+    }
+    Stats::from_samples(&samples)
+}
+
+/// Human-readable duration.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_odd_even_median() {
+        let s = Stats::from_samples(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        let s = Stats::from_samples(&[4.0, 1.0, 2.0, 3.0]);
+        assert_eq!(s.median, 2.5);
+        assert_eq!(s.mean, 2.5);
+    }
+
+    #[test]
+    fn measure_counts_reps() {
+        let mut calls = 0;
+        let st = measure(2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(st.n, 5);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(2.5).ends_with('s'));
+        assert!(fmt_secs(0.002).ends_with("ms"));
+        assert!(fmt_secs(2e-5).ends_with("us"));
+    }
+}

@@ -1,0 +1,200 @@
+//! Cross-module integration tests: the full pipeline composed end to
+//! end, engine agreement at the coordinator level, config round trips,
+//! and dataset demographics invariants (paper §4.3.3).
+
+use dpp_pmrf::config::{DatasetConfig, DatasetKind, EngineKind, MrfConfig,
+                       RunConfig};
+use dpp_pmrf::coordinator::Coordinator;
+use dpp_pmrf::dpp::Backend;
+use dpp_pmrf::image;
+use dpp_pmrf::metrics::Confusion;
+use dpp_pmrf::mrf::{self, Engine};
+use dpp_pmrf::overseg::oversegment;
+use dpp_pmrf::pool::Pool;
+
+fn small_cfg(kind: DatasetKind, engine: EngineKind) -> RunConfig {
+    RunConfig {
+        dataset: DatasetConfig {
+            kind,
+            width: 64,
+            height: 64,
+            slices: 2,
+            ..Default::default()
+        },
+        engine,
+        threads: 3,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn full_pipeline_synthetic_all_engines_agree() {
+    let base = small_cfg(DatasetKind::Synthetic, EngineKind::Serial);
+    let ds = image::generate(&base.dataset);
+    let mut outputs = Vec::new();
+    for engine in [
+        EngineKind::Serial,
+        EngineKind::Reference,
+        EngineKind::Dpp,
+        EngineKind::Xla,
+    ] {
+        let coord =
+            Coordinator::new(small_cfg(DatasetKind::Synthetic, engine))
+                .unwrap();
+        outputs.push((engine, coord.run(&ds).unwrap().output));
+    }
+    let (_, ref baseline) = outputs[0];
+    let n = baseline.voxels() as f64;
+    for (engine, o) in &outputs[1..] {
+        let agree = o
+            .data
+            .iter()
+            .zip(&baseline.data)
+            .filter(|(a, b)| a == b)
+            .count() as f64;
+        assert!(agree / n > 0.99, "{engine:?} agreement {}", agree / n);
+    }
+}
+
+#[test]
+fn model_builders_agree_on_both_datasets() {
+    for kind in [DatasetKind::Synthetic, DatasetKind::Experimental] {
+        let cfg = small_cfg(kind, EngineKind::Serial);
+        let ds = image::generate(&cfg.dataset);
+        let seg = oversegment(&Backend::Serial, &ds.input.slice(0),
+                              &cfg.overseg);
+        let serial = mrf::build_model_serial(&seg);
+        let dpp = mrf::build_model(
+            &Backend::threaded_with_grain(Pool::new(4), 128),
+            &seg,
+        );
+        assert_eq!(serial.graph, dpp.graph, "{kind:?} graph");
+        assert_eq!(serial.hoods, dpp.hoods, "{kind:?} hoods");
+        assert_eq!(serial.y, dpp.y, "{kind:?} observations");
+    }
+}
+
+#[test]
+fn experimental_graph_denser_and_more_irregular_than_synthetic() {
+    // The paper's §4.3.3 demographics claim, as a structural test.
+    let mut stats = Vec::new();
+    for kind in [DatasetKind::Synthetic, DatasetKind::Experimental] {
+        let cfg = small_cfg(kind, EngineKind::Serial);
+        let ds = image::generate(&cfg.dataset);
+        let coord = Coordinator::new(cfg).unwrap();
+        let (_, model) = coord.build_slice_model(&ds.input, 0);
+        let hist = model.hoods.size_histogram(4);
+        stats.push((
+            model.hoods.num_hoods(),
+            hist.mean(),
+            model.graph.num_edges() as f64
+                / model.graph.num_vertices() as f64,
+        ));
+    }
+    let (syn, exp) = (stats[0], stats[1]);
+    assert!(exp.1 > syn.1,
+            "experimental hoods more complex: {} vs {}", exp.1, syn.1);
+    assert!(exp.2 > syn.2,
+            "experimental graph denser: {} vs {}", exp.2, syn.2);
+}
+
+#[test]
+fn config_file_round_trip_drives_coordinator() {
+    let dir = std::env::temp_dir().join("dpp_pmrf_cfg_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("run.json");
+    let mut cfg = small_cfg(DatasetKind::Synthetic, EngineKind::Reference);
+    cfg.mrf = MrfConfig { em_iters: 2, map_iters: 2, ..Default::default() };
+    cfg.save_json(&path).unwrap();
+    let loaded = RunConfig::from_json_file(&path).unwrap();
+    assert_eq!(loaded, cfg);
+    let ds = image::generate(&loaded.dataset);
+    let report = Coordinator::new(loaded).unwrap().run(&ds).unwrap();
+    assert_eq!(report.engine, "reference");
+}
+
+#[test]
+fn fixed_iters_engine_equivalence_through_coordinator() {
+    // With fixed iteration counts, serial / reference / dpp-serial are
+    // bit-identical through the full pipeline.
+    let ds = image::generate(
+        &small_cfg(DatasetKind::Experimental, EngineKind::Serial).dataset,
+    );
+    let mrf_cfg = MrfConfig {
+        fixed_iters: true,
+        em_iters: 3,
+        map_iters: 3,
+        ..Default::default()
+    };
+    let mut outs: Vec<Vec<u8>> = Vec::new();
+    for engine in [EngineKind::Serial, EngineKind::Reference,
+                   EngineKind::Dpp] {
+        let mut cfg = small_cfg(DatasetKind::Experimental, engine);
+        cfg.mrf = mrf_cfg.clone();
+        cfg.threads = 1; // serial backend everywhere -> exact equality
+        let coord = Coordinator::new(cfg).unwrap();
+        outs.push(coord.run(&ds).unwrap().output.data);
+    }
+    assert_eq!(outs[0], outs[1], "reference == serial");
+    assert_eq!(outs[0], outs[2], "dpp == serial");
+}
+
+#[test]
+fn segmentation_beats_threshold_under_paper_corruption() {
+    let cfg = small_cfg(DatasetKind::Synthetic, EngineKind::Dpp);
+    let ds = image::generate(&cfg.dataset);
+    let truth = ds.ground_truth.clone().unwrap();
+    let report = Coordinator::new(cfg).unwrap().run(&ds).unwrap();
+    let mrf_acc = report.confusion.unwrap().accuracy();
+    let thr = image::threshold::otsu(&ds.input);
+    let thr_acc = Confusion::from_volumes(&thr, &truth).accuracy();
+    assert!(mrf_acc > thr_acc, "mrf {mrf_acc} vs threshold {thr_acc}");
+}
+
+#[test]
+fn volume_io_survives_pipeline() {
+    let dir = std::env::temp_dir().join("dpp_pmrf_io_pipeline");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = small_cfg(DatasetKind::Synthetic, EngineKind::Serial);
+    let ds = image::generate(&cfg.dataset);
+    let raw = dir.join("input.raw");
+    ds.input.write_raw(&raw).unwrap();
+    let loaded = image::Volume::read_raw(&raw).unwrap();
+    assert_eq!(loaded, ds.input);
+
+    // Segment the loaded copy; result must match segmenting the
+    // original.
+    let coord = Coordinator::new(cfg).unwrap();
+    let ds2 = image::Dataset {
+        input: loaded,
+        ground_truth: ds.ground_truth.clone(),
+        name: "loaded",
+    };
+    let a = coord.run(&ds).unwrap();
+    let b = coord.run(&ds2).unwrap();
+    assert_eq!(a.output, b.output);
+}
+
+#[test]
+fn engine_trait_objects_are_interchangeable() {
+    let cfg = small_cfg(DatasetKind::Synthetic, EngineKind::Serial);
+    let ds = image::generate(&cfg.dataset);
+    let coord = Coordinator::new(cfg.clone()).unwrap();
+    let (_, model) = coord.build_slice_model(&ds.input, 0);
+    let engines: Vec<Box<dyn Engine>> = vec![
+        Box::new(mrf::serial::SerialEngine),
+        Box::new(mrf::reference::ReferenceEngine::new(Pool::new(2))),
+        Box::new(mrf::dpp::DppEngine::new(Backend::Serial)),
+    ];
+    let mrf_cfg = MrfConfig {
+        fixed_iters: true,
+        em_iters: 2,
+        map_iters: 2,
+        ..Default::default()
+    };
+    let results: Vec<_> =
+        engines.iter().map(|e| e.run(&model, &mrf_cfg)).collect();
+    for r in &results[1..] {
+        assert_eq!(r.labels, results[0].labels);
+    }
+}

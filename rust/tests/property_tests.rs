@@ -1,0 +1,275 @@
+//! Randomized property tests (proptest is unavailable offline, so this
+//! is a small hand-rolled harness: seeded generators + a fixed trial
+//! budget; failures print the seed for replay).
+//!
+//! Invariants covered: DPP primitives vs serial oracles, radix sort vs
+//! std sort, scan/reduce algebra, MCE vs Bron–Kerbosch, neighborhood
+//! structure, energy packing order, and convergence-window behaviour.
+
+use dpp_pmrf::dpp::{self, Backend};
+use dpp_pmrf::graph::Csr;
+use dpp_pmrf::mce;
+use dpp_pmrf::mrf::energy;
+use dpp_pmrf::pool::Pool;
+use dpp_pmrf::util::Pcg32;
+
+const TRIALS: u64 = 24;
+
+fn backends() -> Vec<Backend> {
+    vec![
+        Backend::Serial,
+        Backend::threaded_with_grain(Pool::new(4), 64),
+        Backend::threaded_with_grain(Pool::new(3), 1021), // odd grain
+    ]
+}
+
+fn random_csr(rng: &mut Pcg32, max_n: u32) -> Csr {
+    let n = 2 + rng.below(max_n) as usize;
+    let m = rng.below((n * 3) as u32) as usize;
+    let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for _ in 0..m {
+        let a = rng.below(n as u32);
+        let b = rng.below(n as u32);
+        if a != b {
+            adj[a as usize].push(b);
+            adj[b as usize].push(a);
+        }
+    }
+    let mut offsets = vec![0u32];
+    let mut neighbors = Vec::new();
+    for l in adj.iter_mut() {
+        l.sort_unstable();
+        l.dedup();
+        neighbors.extend_from_slice(l);
+        offsets.push(neighbors.len() as u32);
+    }
+    Csr { offsets, neighbors }
+}
+
+#[test]
+fn prop_sort_by_key_matches_std() {
+    for seed in 0..TRIALS {
+        let mut rng = Pcg32::seeded(seed);
+        let n = 1 + rng.below(5000) as usize;
+        let bits = 1 + rng.below(64);
+        let mask = if bits >= 64 { u64::MAX } else { (1u64 << bits) - 1 };
+        let keys0: Vec<u64> =
+            (0..n).map(|_| rng.next_u64() & mask).collect();
+        let mut expect: Vec<u64> = keys0.clone();
+        expect.sort_unstable();
+        for bk in backends() {
+            let mut keys = keys0.clone();
+            let mut vals: Vec<u32> = (0..n as u32).collect();
+            dpp::sort_by_key(&bk, &mut keys, &mut vals);
+            assert_eq!(keys, expect, "seed {seed} bits {bits}");
+            // payload is a permutation that maps back to the input
+            for (k, v) in keys.iter().zip(&vals) {
+                assert_eq!(keys0[*v as usize], *k, "seed {seed}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_scan_reduce_algebra() {
+    for seed in 0..TRIALS {
+        let mut rng = Pcg32::seeded(seed ^ 0xABCD);
+        let n = rng.below(10_000) as usize;
+        let xs: Vec<u64> =
+            (0..n).map(|_| rng.below(1000) as u64).collect();
+        let total: u64 = xs.iter().sum();
+        for bk in backends() {
+            // Reduce = sum
+            assert_eq!(dpp::reduce(&bk, &xs, 0, |a, b| a + b), total,
+                       "seed {seed}");
+            // exclusive[i] + x[i] == inclusive[i]; last inclusive == total
+            let (ex, t) = dpp::scan_exclusive(&bk, &xs, 0, |a, b| a + b);
+            let inc = dpp::scan_inclusive(&bk, &xs, 0, |a, b| a + b);
+            assert_eq!(t, total);
+            for i in 0..n {
+                assert_eq!(ex[i] + xs[i], inc[i], "seed {seed} @{i}");
+            }
+            if n > 0 {
+                assert_eq!(inc[n - 1], total);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_gather_scatter_inverse() {
+    for seed in 0..TRIALS {
+        let mut rng = Pcg32::seeded(seed ^ 0x5CA7);
+        let n = 1 + rng.below(4000) as usize;
+        let src: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+        // random permutation
+        let mut perm: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut perm);
+        for bk in backends() {
+            let g = dpp::gather(&bk, &src, &perm);
+            let mut back = vec![0u32; n];
+            dpp::scatter(&bk, &g, &perm, &mut back);
+            assert_eq!(back, src, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_unique_and_reduce_by_key_consistent() {
+    for seed in 0..TRIALS {
+        let mut rng = Pcg32::seeded(seed ^ 0x0F0F);
+        let n = 1 + rng.below(3000) as usize;
+        let mut keys: Vec<u32> =
+            (0..n).map(|_| rng.below(50)).collect();
+        keys.sort_unstable();
+        let vals: Vec<u64> = (0..n).map(|_| rng.below(100) as u64).collect();
+        // serial oracle
+        let mut want_keys = Vec::new();
+        let mut want_sums: Vec<u64> = Vec::new();
+        for i in 0..n {
+            if i == 0 || keys[i] != keys[i - 1] {
+                want_keys.push(keys[i]);
+                want_sums.push(0);
+            }
+            *want_sums.last_mut().unwrap() += vals[i];
+        }
+        for bk in backends() {
+            assert_eq!(dpp::unique(&bk, &keys), want_keys, "seed {seed}");
+            let (k, v) =
+                dpp::reduce_by_key(&bk, &keys, &vals, 0, |a, b| a + b);
+            assert_eq!(k, want_keys, "seed {seed}");
+            assert_eq!(v, want_sums, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_mce_matches_bron_kerbosch() {
+    for seed in 0..TRIALS {
+        let mut rng = Pcg32::seeded(seed ^ 0xC11C);
+        let g = random_csr(&mut rng, 40);
+        let want = mce::enumerate_serial(&g).normalized();
+        for bk in backends() {
+            let got = mce::enumerate_dpp(&bk, &g).normalized();
+            assert_eq!(got, want, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_maximal_cliques_are_cliques_and_maximal() {
+    for seed in 0..TRIALS {
+        let mut rng = Pcg32::seeded(seed ^ 0xFACE);
+        let g = random_csr(&mut rng, 30);
+        let cs = mce::enumerate_serial(&g);
+        for i in 0..cs.num_cliques() {
+            let c = cs.clique(i);
+            // pairwise adjacency
+            for (ai, &a) in c.iter().enumerate() {
+                for &b in &c[ai + 1..] {
+                    assert!(g.adjacent(a, b), "seed {seed}: not a clique");
+                }
+            }
+            // maximality: no vertex extends it
+            for w in 0..g.num_vertices() as u32 {
+                if c.contains(&w) {
+                    continue;
+                }
+                assert!(
+                    !c.iter().all(|&u| g.adjacent(w, u)),
+                    "seed {seed}: clique {c:?} extendable by {w}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_hoods_contain_clique_and_one_hop_only() {
+    use dpp_pmrf::mrf::hoods;
+    for seed in 0..TRIALS {
+        let mut rng = Pcg32::seeded(seed ^ 0x400D);
+        let g = random_csr(&mut rng, 30);
+        let cliques = mce::enumerate_serial(&g);
+        let h = hoods::build_serial(&g, &cliques, g.num_vertices());
+        assert_eq!(h.num_hoods(), cliques.num_cliques());
+        for c in 0..cliques.num_cliques() {
+            let clique = cliques.clique(c);
+            let members = h.hood_members(c);
+            // clique ⊆ hood
+            for v in clique {
+                assert!(members.contains(v), "seed {seed}");
+            }
+            // every member is in the clique or adjacent to a clique
+            // vertex
+            for &m in members {
+                let ok = clique.contains(&m)
+                    || clique.iter().any(|&v| g.adjacent(v, m));
+                assert!(ok, "seed {seed}: member {m} not within 1 hop");
+            }
+            // sorted, deduplicated
+            assert!(members.windows(2).all(|w| w[0] < w[1]), "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_energy_packing_total_order() {
+    for seed in 0..TRIALS {
+        let mut rng = Pcg32::seeded(seed ^ 0xEEEE);
+        for _ in 0..200 {
+            let e1 = (rng.f32() - 0.3) * 1000.0;
+            let e2 = (rng.f32() - 0.3) * 1000.0;
+            let l1 = (rng.next_u32() & 1) as u8;
+            let l2 = (rng.next_u32() & 1) as u8;
+            let p1 = energy::pack_energy_label(e1, l1);
+            let p2 = energy::pack_energy_label(e2, l2);
+            if e1 < e2 {
+                assert!(p1 < p2, "seed {seed}: {e1} {e2}");
+            }
+            if e1 == e2 && l1 < l2 {
+                assert!(p1 < p2);
+            }
+            assert_eq!(energy::unpack_label(p1), l1);
+            assert_eq!(energy::unpack_energy(p1), e1);
+        }
+    }
+}
+
+#[test]
+fn prop_argmin_consistent_with_pair() {
+    let prm = energy::Params {
+        mu: [60.0, 190.0],
+        sigma: [15.0, 25.0],
+        beta: 0.7,
+    };
+    for seed in 0..TRIALS {
+        let mut rng = Pcg32::seeded(seed ^ 0xA191);
+        for _ in 0..500 {
+            let y = rng.f32() * 255.0;
+            let lbl = (rng.next_u32() & 1) as f32;
+            let size = 2.0 + rng.below(30) as f32;
+            let ones = rng.below(size as u32 + 1) as f32;
+            let (e0, e1) = energy::energy_pair(y, lbl, ones, size, &prm);
+            let (em, am) = energy::energy_min(y, lbl, ones, size, &prm);
+            assert_eq!(em, e0.min(e1));
+            assert_eq!(am == 1, e1 < e0, "strict-less tie break");
+        }
+    }
+}
+
+#[test]
+fn prop_copy_if_partition() {
+    for seed in 0..TRIALS {
+        let mut rng = Pcg32::seeded(seed ^ 0xF1F1);
+        let n = rng.below(5000) as usize;
+        let xs: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+        for bk in backends() {
+            let evens = dpp::copy_if_indexed(&bk, &xs, |i| xs[i] % 2 == 0);
+            let odds = dpp::copy_if_indexed(&bk, &xs, |i| xs[i] % 2 == 1);
+            assert_eq!(evens.len() + odds.len(), n, "seed {seed}");
+            assert!(evens.iter().all(|x| x % 2 == 0));
+            assert!(odds.iter().all(|x| x % 2 == 1));
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Runtime-layer integration: AOT artifacts loaded through PJRT must
+//! agree with the rust energy math across randomized shapes and
+//! parameter settings, bucket selection must pad correctly, and the
+//! XLA engine must agree with the serial engine through the
+//! coordinator. (Requires `make artifacts`.)
+
+use std::path::Path;
+use std::sync::Arc;
+
+use dpp_pmrf::config::{DatasetConfig, EngineKind, MrfConfig, RunConfig};
+use dpp_pmrf::coordinator::Coordinator;
+use dpp_pmrf::image;
+use dpp_pmrf::mrf::energy::{self, Params};
+use dpp_pmrf::runtime::EmRuntime;
+use dpp_pmrf::util::Pcg32;
+
+fn runtime() -> Arc<EmRuntime> {
+    Arc::new(EmRuntime::load(Path::new("artifacts"))
+        .expect("run `make artifacts` first"))
+}
+
+#[test]
+fn randomized_batches_match_rust_oracle() {
+    let rt = runtime();
+    for seed in 0..8u64 {
+        let mut rng = Pcg32::seeded(seed);
+        let nh = 1 + rng.below(40) as usize;
+        let n = nh + rng.below(900) as usize;
+        let prm = Params {
+            mu: [rng.f32() * 255.0, rng.f32() * 255.0],
+            sigma: [1.0 + rng.f32() * 60.0, 1.0 + rng.f32() * 60.0],
+            beta: rng.f32() * 2.0,
+        };
+        let y: Vec<f32> = (0..n).map(|_| rng.f32() * 255.0).collect();
+        let label: Vec<f32> =
+            (0..n).map(|_| (rng.next_u32() & 1) as f32).collect();
+        // every hood gets at least one element
+        let hood_id: Vec<u32> = (0..n)
+            .map(|i| if i < nh { i as u32 } else { rng.below(nh as u32) })
+            .collect();
+        let out = rt.em_step(&y, &label, &hood_id, nh, &prm).unwrap();
+
+        // oracle
+        let mut ones = vec![0.0f32; nh];
+        let mut size = vec![0.0f32; nh];
+        for i in 0..n {
+            ones[hood_id[i] as usize] += label[i];
+            size[hood_id[i] as usize] += 1.0;
+        }
+        let mut he = vec![0.0f32; nh];
+        for i in 0..n {
+            let h = hood_id[i] as usize;
+            let (em, am) =
+                energy::energy_min(y[i], label[i], ones[h], size[h], &prm);
+            assert!(
+                (out.emin[i] - em).abs() < 1e-3 * em.abs().max(1.0),
+                "seed {seed} emin[{i}] {} vs {em}",
+                out.emin[i]
+            );
+            assert_eq!(out.new_label[i], am as f32,
+                       "seed {seed} label[{i}]");
+            he[h] += em;
+        }
+        for h in 0..nh {
+            assert!(
+                (out.hood_energy[h] - he[h]).abs()
+                    < 1e-2 * he[h].abs().max(1.0),
+                "seed {seed} hood {h}: {} vs {}",
+                out.hood_energy[h],
+                he[h]
+            );
+        }
+        assert_eq!((out.stats[0] + out.stats[3]) as usize, n,
+                   "seed {seed} stats count");
+    }
+}
+
+#[test]
+fn bucket_boundaries_are_exact() {
+    let rt = runtime();
+    // exactly at the smallest bucket
+    let b = rt.pick_bucket(4096, 2048).unwrap();
+    assert_eq!(b.elems, 4096);
+    // one element over -> next bucket
+    let b = rt.pick_bucket(4097, 10).unwrap();
+    assert_eq!(b.elems, 8192);
+    // hood-bound (elems fit, hoods don't)
+    let b = rt.pick_bucket(100, 4000).unwrap();
+    assert_eq!(b.elems, 8192);
+}
+
+#[test]
+fn full_coordinator_run_with_xla_engine() {
+    let cfg = RunConfig {
+        dataset: DatasetConfig {
+            width: 64,
+            height: 64,
+            slices: 1,
+            ..Default::default()
+        },
+        engine: EngineKind::Xla,
+        mrf: MrfConfig { em_iters: 6, ..Default::default() },
+        ..Default::default()
+    };
+    let ds = image::generate(&cfg.dataset);
+    let coord = Coordinator::new(cfg).unwrap();
+    let report = coord.run(&ds).unwrap();
+    assert_eq!(report.engine, "xla");
+    let acc = report.confusion.unwrap().accuracy();
+    assert!(acc > 0.8, "accuracy {acc}");
+}
+
+#[test]
+fn xla_vs_serial_label_agreement_via_coordinator() {
+    let mk = |engine| RunConfig {
+        dataset: DatasetConfig {
+            width: 64,
+            height: 64,
+            slices: 1,
+            ..Default::default()
+        },
+        engine,
+        mrf: MrfConfig {
+            fixed_iters: true,
+            em_iters: 3,
+            map_iters: 3,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let ds = image::generate(&mk(EngineKind::Serial).dataset);
+    let a = Coordinator::new(mk(EngineKind::Serial))
+        .unwrap()
+        .run(&ds)
+        .unwrap();
+    let b = Coordinator::new(mk(EngineKind::Xla))
+        .unwrap()
+        .run(&ds)
+        .unwrap();
+    let n = a.output.voxels() as f64;
+    let agree = a
+        .output
+        .data
+        .iter()
+        .zip(&b.output.data)
+        .filter(|(x, y)| x == y)
+        .count() as f64;
+    assert!(agree / n > 0.99, "agreement {}", agree / n);
+}
+
+#[test]
+fn runtime_reusable_across_coordinators() {
+    let rt = runtime();
+    for seed in [1u64, 2] {
+        let cfg = RunConfig {
+            dataset: DatasetConfig {
+                width: 48,
+                height: 48,
+                slices: 1,
+                seed,
+                ..Default::default()
+            },
+            engine: EngineKind::Xla,
+            mrf: MrfConfig { em_iters: 2, ..Default::default() },
+            ..Default::default()
+        };
+        let ds = image::generate(&cfg.dataset);
+        let coord = Coordinator::with_runtime(cfg, Arc::clone(&rt));
+        let report = coord.run(&ds).unwrap();
+        assert_eq!(report.slices.len(), 1);
+    }
+}
