@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
 
     // 3. Run the pipeline: oversegmentation -> region graph -> maximal
     //    cliques -> neighborhoods -> EM/MAP optimization -> pixel map.
-    let coordinator = Coordinator::new(cfg)?;
+    let coordinator = Coordinator::new(cfg.clone())?;
     let report = coordinator.run(&dataset)?;
 
     // 4. Inspect the results.
@@ -40,5 +40,20 @@ fn main() -> anyhow::Result<()> {
         println!("verification    : {}", metrics::summary(c));
     }
     println!("porosity        : {:.3}", report.porosity);
+
+    // 5. Any engine is a drop-in swap — here loopy belief propagation
+    //    with residual message scheduling (CLI: `dpp-pmrf segment
+    //    --engine bp`, tuned by `--bp-schedule`, `--bp-damping`,
+    //    `--bp-sweeps`, `--bp-tol`, `--bp-frontier`).
+    let bp = Coordinator::new(RunConfig {
+        engine: EngineKind::Bp,
+        ..cfg
+    })?
+    .run(&dataset)?;
+    println!("bp engine       : opt {:.3}s, {} sweeps",
+             bp.mean_opt_secs(), bp.total_map_iters());
+    if let Some(c) = &bp.confusion {
+        println!("bp verification : {}", metrics::summary(c));
+    }
     Ok(())
 }

@@ -1,0 +1,93 @@
+//! BP vs DPP-MAP: convergence wall-clock, inner-iteration counts, and
+//! final energy for the same models — the loopy-BP analog of the
+//! paper's engine comparisons. Runs the DPP-MAP engine against the BP
+//! engine under both message schedules (synchronous and residual), all
+//! in convergence mode, so the numbers answer "which optimizer reaches
+//! a comparable-energy labeling faster, and in how many inner
+//! iterations (MAP iterations vs BP sweeps)?".
+//!
+//! Output: `bench_results/bp_vs_map.json` — one row per
+//! (dataset, engine) with median seconds plus inner-iteration and
+//! final-energy labels, and a derived speedup summary per dataset.
+
+use dpp_pmrf::bench_support::{prepare_models, workload, Report, Scale};
+use dpp_pmrf::bp::{BpConfig, BpEngine, BpSchedule};
+use dpp_pmrf::config::DatasetKind;
+use dpp_pmrf::dpp::Backend;
+use dpp_pmrf::mrf::{dpp::DppEngine, Engine};
+use dpp_pmrf::pool::Pool;
+use dpp_pmrf::util::measure;
+
+fn main() {
+    let scale = Scale::from_env();
+    let mut report = Report::new("bp_vs_map");
+
+    for kind in [DatasetKind::Synthetic, DatasetKind::Experimental] {
+        let (ds, mut cfg) = workload(kind, scale);
+        // Convergence race, not fixed-work throughput: let every
+        // engine stop at its own convergence point.
+        cfg.mrf.fixed_iters = false;
+        let models = prepare_models(&ds, &cfg);
+
+        let pool = Pool::with_default_threads();
+        let bk = Backend::threaded(pool);
+        let engines: Vec<Box<dyn Engine>> = vec![
+            Box::new(DppEngine::new(bk.clone())),
+            Box::new(BpEngine::new(
+                bk.clone(),
+                BpConfig {
+                    schedule: BpSchedule::Synchronous,
+                    ..Default::default()
+                },
+            )),
+            Box::new(BpEngine::new(
+                bk.clone(),
+                BpConfig {
+                    schedule: BpSchedule::Residual,
+                    ..Default::default()
+                },
+            )),
+        ];
+
+        for engine in engines {
+            let stats = measure(scale.warmup, scale.reps, || {
+                for m in &models {
+                    engine.run(m, &cfg.mrf);
+                }
+            });
+            // One scored pass for the quality/effort labels.
+            let (mut inner, mut em, mut energy) = (0usize, 0usize, 0.0f64);
+            for m in &models {
+                let r = engine.run(m, &cfg.mrf);
+                inner += r.map_iters;
+                em += r.em_iters;
+                energy += r.energy;
+            }
+            report.add(
+                vec![
+                    ("dataset", kind.name().to_string()),
+                    ("engine", engine.name().to_string()),
+                    ("em_iters", em.to_string()),
+                    ("inner_iters", inner.to_string()),
+                    ("final_energy", format!("{energy:.1}")),
+                ],
+                stats,
+            );
+        }
+    }
+    report.finish();
+
+    println!("BP vs DPP-MAP (T_map / T_bp; >1 means BP wins):");
+    for kind in [DatasetKind::Synthetic, DatasetKind::Experimental] {
+        let map = report.median(&[("dataset", kind.name()),
+                                  ("engine", "dpp")]);
+        for bp_name in ["bp-sync", "bp"] {
+            let bp = report.median(&[("dataset", kind.name()),
+                                     ("engine", bp_name)]);
+            if let (Some(map), Some(bp)) = (map, bp) {
+                println!("  {:<13} {:<8} {:.2}x", kind.name(), bp_name,
+                         map / bp);
+            }
+        }
+    }
+}

@@ -1,0 +1,255 @@
+//! [`BpEngine`] — loopy BP as the E-step of the shared EM outer loop,
+//! a drop-in [`Engine`] beside the MAP engines (DESIGN.md §3, §6).
+//!
+//! Per EM iteration: refresh the unaries from the current (mu, sigma),
+//! run message sweeps to convergence (messages warm-start from the
+//! previous EM iteration), decode per-vertex labels from the beliefs,
+//! score the labeling with the shared hood energy
+//! ([`crate::mrf::config_energy`]) for the convergence window, and
+//! re-estimate (mu, sigma) from the hood-member instances exactly as
+//! the MAP engines do. `EmResult::map_iters` reports total BP sweeps,
+//! making iteration counts comparable in `benches/bp_vs_map.rs`.
+
+use crate::config::MrfConfig;
+use crate::dpp::Backend;
+use crate::mrf::{self, params, ConvergenceWindow, Engine, EmResult,
+                 MrfModel};
+
+use super::messages::BpGraph;
+use super::sweep::{self, BpState};
+use super::{BpConfig, BpSchedule};
+
+pub struct BpEngine {
+    backend: Backend,
+    pub bp: BpConfig,
+}
+
+impl BpEngine {
+    pub fn new(backend: Backend, bp: BpConfig) -> Self {
+        BpEngine { backend, bp }
+    }
+
+    pub fn backend(&self) -> &Backend {
+        &self.backend
+    }
+}
+
+impl Engine for BpEngine {
+    fn name(&self) -> &'static str {
+        match self.bp.schedule {
+            BpSchedule::Synchronous => "bp-sync",
+            BpSchedule::Residual => "bp",
+        }
+    }
+
+    fn run(&self, model: &MrfModel, cfg: &MrfConfig) -> EmResult {
+        let bk = &self.backend;
+        let nv = model.num_vertices();
+        let g = BpGraph::build(bk, model, cfg.beta as f32);
+        let y_elem = model.y_elems();
+
+        // Same seeded init as every other engine; BP ignores the
+        // initial labels (messages start at zero) but shares the
+        // initial parameters, so class polarity matches.
+        let (mut prm, mut labels) =
+            params::init_random(nv, cfg.beta as f32, cfg.seed);
+        let mut st = BpState::new(g.num_edges(), nv);
+
+        let mut em_window = ConvergenceWindow::new(cfg.window, cfg.threshold);
+        let mut total_sweeps = 0usize;
+        let mut em_iters = 0usize;
+
+        for _em in 0..cfg.em_iters {
+            em_iters += 1;
+
+            let unary = sweep::unaries(bk, model, &prm);
+            let bp_run = sweep::run(
+                bk, model, &g, &unary, &mut st, &self.bp, cfg.fixed_iters,
+            );
+            total_sweeps += bp_run.sweeps;
+            sweep::decode(bk, model, &g, &unary, &mut st, &mut labels);
+
+            // Score with the shared hood energy (histories directly
+            // comparable to the MAP engines') and collect the M-step
+            // statistics, both in one parallel pass.
+            let (total, stats) =
+                score_and_stats(bk, model, &labels, &prm, &y_elem);
+            prm = params::update(&stats, cfg.beta as f32);
+
+            em_window.push(total);
+            if em_window.converged() && !cfg.fixed_iters {
+                break;
+            }
+        }
+
+        EmResult {
+            labels,
+            em_iters,
+            map_iters: total_sweeps,
+            energy: *em_window.history().last().unwrap_or(&0.0),
+            history: em_window.history().to_vec(),
+            params: prm,
+        }
+    }
+}
+
+/// Fused scoring pass over the static hood segments: the hood energy
+/// of the labeling (bitwise-equal to [`mrf::config_energy`]) plus the
+/// per-label parameter statistics, one parallel sweep instead of three
+/// serial ones. Deterministic across backends and thread counts: each
+/// hood accumulates sequentially inside one chunk iteration, and the
+/// cross-hood merges run serially in hood order.
+fn score_and_stats(
+    bk: &Backend,
+    model: &MrfModel,
+    labels: &[u8],
+    prm: &mrf::Params,
+    y_elem: &[f32],
+) -> (f64, params::Stats) {
+    use crate::dpp::core::SharedSlice;
+
+    let h = &model.hoods;
+    let nh = h.num_hoods();
+    let n = h.num_elements();
+    let pp = mrf::energy::Prepared::from_params(prm);
+    // Hood-unit grain scaled from the element grain (as in mrf::dpp).
+    let hood_grain = (bk.grain() / (n / nh.max(1)).max(1)).max(1);
+
+    let mut hood_energy = vec![0.0f64; nh];
+    let mut hood_stats = vec![params::Stats::default(); nh];
+    {
+        let we = SharedSlice::new(&mut hood_energy);
+        let ws = SharedSlice::new(&mut hood_stats);
+        bk.for_chunks_with(nh, hood_grain, |hs, he| {
+            for hd in hs..he {
+                let (s, e) =
+                    (h.offsets[hd] as usize, h.offsets[hd + 1] as usize);
+                let sum = mrf::hood_label_energy(
+                    &h.members[s..e], &model.y, labels, &pp,
+                );
+                let mut st = params::Stats::default();
+                for el in s..e {
+                    st.add(labels[h.members[el] as usize], y_elem[el]);
+                }
+                unsafe {
+                    we.write(hd, sum);
+                    ws.write(hd, st);
+                }
+            }
+        });
+    }
+    let total = hood_energy.iter().sum();
+    let mut stats = params::Stats::default();
+    for st in &hood_stats {
+        stats.merge(st);
+    }
+    (total, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bp::test_model as small_model;
+    use crate::pool::Pool;
+
+    #[test]
+    fn bp_engine_deterministic_across_backends_and_runs() {
+        let model = small_model(51);
+        let cfg = MrfConfig::default();
+        for schedule in [BpSchedule::Synchronous, BpSchedule::Residual] {
+            let bp = BpConfig { schedule, ..Default::default() };
+            let a = BpEngine::new(Backend::Serial, bp).run(&model, &cfg);
+            let b = BpEngine::new(Backend::Serial, bp).run(&model, &cfg);
+            assert_eq!(a, b, "{schedule:?}: rerun identical");
+            let c = BpEngine::new(
+                Backend::threaded_with_grain(Pool::new(4), 64),
+                bp,
+            )
+            .run(&model, &cfg);
+            assert_eq!(a, c, "{schedule:?}: backend independent");
+        }
+    }
+
+    #[test]
+    fn bp_energy_close_to_serial_map_engine() {
+        let model = small_model(52);
+        let cfg = MrfConfig::default();
+        let map = crate::mrf::serial::SerialEngine.run(&model, &cfg);
+        let bp = BpEngine::new(Backend::Serial, BpConfig::default())
+            .run(&model, &cfg);
+        assert!(bp.labels.iter().all(|&l| l <= 1));
+        let rel = (bp.energy - map.energy).abs() / map.energy.abs().max(1.0);
+        assert!(rel < 0.05, "bp {} vs map {} (rel {rel})",
+                bp.energy, map.energy);
+        let agree = bp
+            .labels
+            .iter()
+            .zip(&map.labels)
+            .filter(|(a, b)| a == b)
+            .count() as f64
+            / map.labels.len() as f64;
+        assert!(agree > 0.9, "label agreement {agree}");
+    }
+
+    #[test]
+    fn fixed_iters_runs_exact_em_and_sweep_counts() {
+        let model = small_model(53);
+        let cfg = MrfConfig {
+            em_iters: 3,
+            fixed_iters: true,
+            ..Default::default()
+        };
+        let bp = BpConfig { max_sweeps: 5, ..Default::default() };
+        let res = BpEngine::new(Backend::Serial, bp).run(&model, &cfg);
+        assert_eq!(res.em_iters, 3);
+        assert_eq!(res.map_iters, 15, "3 EM x 5 sweeps");
+    }
+
+    #[test]
+    fn score_matches_config_energy_bitwise() {
+        let model = small_model(55);
+        let prm = crate::mrf::Params {
+            mu: [60.0, 180.0],
+            sigma: [25.0, 25.0],
+            beta: 0.5,
+        };
+        let labels: Vec<u8> =
+            (0..model.num_vertices()).map(|v| (v % 2) as u8).collect();
+        let y_elem = model.y_elems();
+        let (_, want) = mrf::config_energy(&model, &labels, &prm);
+        for bk in [
+            Backend::Serial,
+            Backend::threaded_with_grain(Pool::new(4), 64),
+        ] {
+            let (total, stats) =
+                score_and_stats(&bk, &model, &labels, &prm, &y_elem);
+            assert_eq!(total, want, "bitwise-equal energy ({bk:?})");
+            let n: f64 = stats.acc[0][0] + stats.acc[1][0];
+            assert_eq!(n, model.hoods.num_elements() as f64);
+        }
+    }
+
+    #[test]
+    fn residual_schedule_needs_no_more_sweeps_budget() {
+        // Smoke check on the Van der Merwe claim at our scale: the
+        // residual schedule converges within the same sweep budget
+        // while committing fewer message updates per round.
+        let model = small_model(54);
+        let cfg = MrfConfig::default();
+        let sync = BpEngine::new(
+            Backend::Serial,
+            BpConfig { schedule: BpSchedule::Synchronous,
+                       ..Default::default() },
+        )
+        .run(&model, &cfg);
+        let res = BpEngine::new(
+            Backend::Serial,
+            BpConfig { schedule: BpSchedule::Residual,
+                       ..Default::default() },
+        )
+        .run(&model, &cfg);
+        let rel = (sync.energy - res.energy).abs()
+            / sync.energy.abs().max(1.0);
+        assert!(rel < 0.05, "schedules agree on energy (rel {rel})");
+    }
+}

@@ -1,0 +1,149 @@
+//! Edge-message layout: the static index structure BP sweeps over.
+//!
+//! Messages are stored edge-major in one flat `Vec<f32>` with two
+//! entries (label 0, label 1) per *directed* edge, where directed edge
+//! `e` is position `e` of the CSR `neighbors` array — `src[e] ->
+//! neighbors[e]`. The reverse-edge index `rev` pairs the two directions
+//! of every undirected edge; it is what turns "sum the messages *into*
+//! a vertex" into a Gather through `rev` followed by a segmented reduce
+//! over the vertex's own CSR row.
+//!
+//! Potts weights are calibrated to the hood energy (DESIGN.md §5): the
+//! hood Potts term charges `beta` once per ordered disagreeing pair per
+//! shared hood, so an undirected edge (u, v) carries
+//! `2 * beta * |hoods(u) ∩ hoods(v)|`. BP over these weights optimizes
+//! the same objective the MAP engines report, up to the (rare)
+//! same-hood pairs that are not graph-adjacent.
+
+use crate::dpp::{self, Backend};
+use crate::mrf::{Hoods, MrfModel};
+
+/// Static per-directed-edge structure for BP over a [`MrfModel`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct BpGraph {
+    /// Directed edge -> source vertex (CSR row expansion).
+    pub src: Vec<u32>,
+    /// Directed edge -> the opposite-direction edge's index.
+    pub rev: Vec<u32>,
+    /// Directed edge -> Potts disagreement weight (symmetric).
+    pub weight: Vec<f32>,
+}
+
+impl BpGraph {
+    pub fn num_edges(&self) -> usize {
+        self.src.len()
+    }
+
+    /// Build the reverse index and hood-calibrated Potts weights, all
+    /// via Map over the directed-edge domain.
+    pub fn build(bk: &Backend, model: &MrfModel, beta: f32) -> BpGraph {
+        let g = &model.graph;
+        let ne = g.neighbors.len();
+        let offsets = &g.offsets;
+        let neighbors = &g.neighbors;
+
+        // Map: source vertex of edge e = the row whose offset range
+        // contains e (offsets are sorted, so a binary search).
+        let src: Vec<u32> = dpp::map_indexed(bk, ne, |e| {
+            offsets.partition_point(|&o| o as usize <= e) as u32 - 1
+        });
+
+        // Map: position of the (v -> u) twin inside v's sorted row.
+        let src_ref = &src;
+        let rev: Vec<u32> = dpp::map_indexed(bk, ne, |e| {
+            let u = src_ref[e];
+            let v = neighbors[e] as usize;
+            let row =
+                &neighbors[offsets[v] as usize..offsets[v + 1] as usize];
+            let p = row
+                .binary_search(&u)
+                .expect("CSR stores both directions of every edge");
+            offsets[v] + p as u32
+        });
+
+        // Map: Potts weight from hood co-occurrence.
+        let h = &model.hoods;
+        let weight: Vec<f32> = dpp::map_indexed(bk, ne, |e| {
+            2.0 * beta * co_occurrence(h, src_ref[e], neighbors[e]) as f32
+        });
+
+        BpGraph { src, rev, weight }
+    }
+}
+
+/// Number of hoods containing both `u` and `v`: merge-intersection of
+/// the two sorted hood-id lists (each vertex appears at most once per
+/// hood, and `vert_elems` walks hoods in ascending order).
+fn co_occurrence(h: &Hoods, u: u32, v: u32) -> u32 {
+    let mut i = h.vert_offsets[u as usize] as usize;
+    let iu = h.vert_offsets[u as usize + 1] as usize;
+    let mut j = h.vert_offsets[v as usize] as usize;
+    let jv = h.vert_offsets[v as usize + 1] as usize;
+    let mut count = 0u32;
+    while i < iu && j < jv {
+        let hu = h.hood_id[h.vert_elems[i] as usize];
+        let hv = h.hood_id[h.vert_elems[j] as usize];
+        if hu == hv {
+            count += 1;
+            i += 1;
+            j += 1;
+        } else if hu < hv {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bp::test_model as small_model;
+    use crate::pool::Pool;
+
+    #[test]
+    fn reverse_index_is_an_involution() {
+        let model = small_model(11);
+        let g = BpGraph::build(&Backend::Serial, &model, 0.5);
+        assert_eq!(g.num_edges(), model.graph.neighbors.len());
+        for e in 0..g.num_edges() {
+            let r = g.rev[e] as usize;
+            assert_eq!(g.rev[r] as usize, e, "rev twice = identity");
+            assert_eq!(g.src[r], model.graph.neighbors[e],
+                       "twin starts where e ends");
+            assert_eq!(model.graph.neighbors[r], g.src[e],
+                       "twin ends where e starts");
+        }
+    }
+
+    #[test]
+    fn src_matches_csr_rows() {
+        let model = small_model(12);
+        let g = BpGraph::build(&Backend::Serial, &model, 0.5);
+        let offs = &model.graph.offsets;
+        for v in 0..model.graph.num_vertices() {
+            for e in offs[v] as usize..offs[v + 1] as usize {
+                assert_eq!(g.src[e] as usize, v);
+            }
+        }
+    }
+
+    #[test]
+    fn weights_symmetric_positive_and_backend_independent() {
+        let model = small_model(13);
+        let a = BpGraph::build(&Backend::Serial, &model, 0.5);
+        let b = BpGraph::build(
+            &Backend::threaded_with_grain(Pool::new(4), 64),
+            &model,
+            0.5,
+        );
+        assert_eq!(a, b, "build is deterministic across backends");
+        for e in 0..a.num_edges() {
+            assert_eq!(a.weight[e], a.weight[a.rev[e] as usize]);
+            // every RAG edge lies in at least one maximal clique, hence
+            // in at least one shared hood
+            assert!(a.weight[e] >= 2.0 * 0.5, "edge {e} weight");
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! Max-product loopy belief propagation over the region graph
+//! (DESIGN.md §6) — a second optimizer for [`crate::mrf::MrfModel`]
+//! beside the EM/MAP engines, expressed entirely in the DPP vocabulary
+//! of [`crate::dpp`].
+//!
+//! The pairwise reformulation of the hood energy (DESIGN.md §5): unary
+//! energies are the Gaussian data term of [`crate::mrf::energy`]
+//! weighted by each vertex's hood multiplicity, and the Potts coupling
+//! between adjacent regions is weighted by how many hoods contain both
+//! endpoints ([`messages::BpGraph`]). Min-sum messages (max-product in
+//! the log domain) live in one flat edge-major `Vec<f32>` indexed by
+//! the CSR adjacency; one sweep is
+//!
+//! 1. **Gather** reverse-edge messages + **segmented reduce** per
+//!    vertex -> beliefs,
+//! 2. **Map** over directed edges -> damped candidate messages and
+//!    per-message residuals,
+//! 3. **Reduce⟨Max⟩** over residuals, then a **Map** commit of the
+//!    residual frontier (Van der Merwe et al. 2019: updating only the
+//!    high-residual messages each round converges in far fewer message
+//!    updates than the synchronous schedule).
+//!
+//! Modules: [`messages`] (edge layout + reverse index + Potts weights),
+//! [`sweep`] (synchronous and residual-scheduled sweeps on a
+//! [`crate::dpp::Backend`]), [`serial`] (plain-loop oracle for tests),
+//! [`engine`] ([`BpEngine`], an [`crate::mrf::Engine`] running BP as
+//! the E-step inside the shared EM outer loop).
+//!
+//! Every pass is deterministic across backends and thread counts: the
+//! only floating-point reduction is an exact `max`, and per-vertex /
+//! per-edge arithmetic runs in a fixed order. BP with any backend is
+//! therefore bitwise-reproducible — stronger than the MAP engines'
+//! chunk-order-dependent parameter reductions.
+
+pub mod engine;
+pub mod messages;
+pub mod serial;
+pub mod sweep;
+
+pub use engine::BpEngine;
+pub use messages::BpGraph;
+pub use sweep::{BpRun, BpState, SweepStats};
+
+use anyhow::{bail, Result};
+
+/// Message-update schedule for one BP round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BpSchedule {
+    /// Jacobi: every message recomputed and committed each round.
+    Synchronous,
+    /// Residual frontier: every candidate is computed, but only
+    /// messages whose residual reaches `frontier * max_residual`
+    /// commit this round (the top of the residual distribution).
+    #[default]
+    Residual,
+}
+
+impl BpSchedule {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "sync" | "synchronous" => Ok(BpSchedule::Synchronous),
+            "residual" => Ok(BpSchedule::Residual),
+            _ => bail!("unknown bp schedule `{s}` (sync|residual)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BpSchedule::Synchronous => "sync",
+            BpSchedule::Residual => "residual",
+        }
+    }
+}
+
+/// Belief-propagation hyperparameters (CLI: `--bp-*`; JSON: `"bp"`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BpConfig {
+    /// Fraction of the old message kept per update (0 = no damping).
+    pub damping: f32,
+    /// Maximum message sweeps per EM iteration.
+    pub max_sweeps: usize,
+    /// Convergence: stop sweeping when the max residual drops below.
+    pub tol: f32,
+    pub schedule: BpSchedule,
+    /// Residual schedule only: commit messages with
+    /// `residual >= frontier * max_residual`. 0 commits everything
+    /// (synchronous), 1 commits only the maximal-residual messages.
+    pub frontier: f32,
+}
+
+impl Default for BpConfig {
+    fn default() -> Self {
+        BpConfig {
+            damping: 0.5,
+            max_sweeps: 50,
+            tol: 1e-3,
+            schedule: BpSchedule::default(),
+            frontier: 0.5,
+        }
+    }
+}
+
+/// One-shot solve for tests and playgrounds: build the edge structure,
+/// run BP to convergence under `prm`, decode labels.
+pub fn solve(
+    bk: &crate::dpp::Backend,
+    model: &crate::mrf::MrfModel,
+    prm: &crate::mrf::Params,
+    cfg: &BpConfig,
+) -> (Vec<u8>, BpRun) {
+    let g = BpGraph::build(bk, model, prm.beta);
+    let unary = sweep::unaries(bk, model, prm);
+    let mut st = BpState::new(g.num_edges(), model.num_vertices());
+    let run = sweep::run(bk, model, &g, &unary, &mut st, cfg, false);
+    let mut labels = vec![0u8; model.num_vertices()];
+    sweep::decode(bk, model, &g, &unary, &mut st, &mut labels);
+    (labels, run)
+}
+
+/// Shared small test fixture: a noisy porous slice, oversegmented and
+/// model-built serially. One definition for every bp submodule test
+/// (and `mrf`'s `config_energy` test) instead of per-file copies.
+#[cfg(test)]
+pub(crate) fn test_model(seed: u64) -> crate::mrf::MrfModel {
+    let v =
+        crate::image::synth::porous_ground_truth(48, 48, 1, 0.42, seed);
+    let mut input = v.clone();
+    crate::image::noise::additive_gaussian(&mut input, 60.0, seed);
+    let seg = crate::overseg::oversegment(
+        &crate::dpp::Backend::Serial,
+        &input.slice(0),
+        &crate::config::OversegConfig { scale: 64.0, min_region: 4 },
+    );
+    crate::mrf::build_model_serial(&seg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_parse_round_trip() {
+        for s in ["sync", "residual"] {
+            assert_eq!(BpSchedule::parse(s).unwrap().name(), s);
+        }
+        assert_eq!(BpSchedule::parse("synchronous").unwrap(),
+                   BpSchedule::Synchronous);
+        assert!(BpSchedule::parse("chaotic").is_err());
+    }
+
+    #[test]
+    fn default_config_is_sane() {
+        let c = BpConfig::default();
+        assert!(c.damping >= 0.0 && c.damping < 1.0);
+        assert!(c.frontier >= 0.0 && c.frontier <= 1.0);
+        assert!(c.max_sweeps >= 1);
+        assert!(c.tol > 0.0);
+    }
+}

@@ -1,0 +1,155 @@
+//! Serial BP oracle — straight loops, no primitives, no chunking.
+//!
+//! Implements exactly the math of [`super::sweep`] (same per-edge
+//! update, same normalization, damping, frontier rule and tie-breaks)
+//! so tests can require *bitwise* equality against the DPP sweeps on
+//! any backend: the only cross-chunk reduction in the DPP path is an
+//! exact `max`, so no floating-point slack is needed.
+
+use crate::mrf::{energy, MrfModel, Params};
+
+use super::messages::BpGraph;
+use super::{BpConfig, BpSchedule};
+
+/// Full serial BP run: returns (messages, labels, sweeps executed).
+pub fn run_serial(
+    model: &MrfModel,
+    g: &BpGraph,
+    prm: &Params,
+    cfg: &BpConfig,
+    fixed: bool,
+) -> (Vec<f32>, Vec<u8>, usize) {
+    let nv = model.num_vertices();
+    let ne = g.num_edges();
+    let unary = unaries_serial(model, prm);
+    let mut msg = vec![0.0f32; 2 * ne];
+    let mut belief = vec![0.0f32; 2 * nv];
+    let mut cand = vec![0.0f32; 2 * ne];
+    let mut resid = vec![0.0f32; ne];
+
+    let max_sweeps = cfg.max_sweeps.max(1);
+    let mut sweeps = 0usize;
+    for _ in 0..max_sweeps {
+        sweeps += 1;
+        beliefs_serial(model, g, &unary, &msg, &mut belief);
+        let mut r_max = 0.0f32;
+        for ed in 0..ne {
+            let u = g.src[ed] as usize;
+            let r = g.rev[ed] as usize;
+            let h0 = belief[2 * u] - msg[2 * r];
+            let h1 = belief[2 * u + 1] - msg[2 * r + 1];
+            let w = g.weight[ed];
+            let mut c0 = h0.min(h1 + w);
+            let mut c1 = h1.min(h0 + w);
+            let norm = c0.min(c1);
+            c0 -= norm;
+            c1 -= norm;
+            let n0 = cfg.damping * msg[2 * ed] + (1.0 - cfg.damping) * c0;
+            let n1 =
+                cfg.damping * msg[2 * ed + 1] + (1.0 - cfg.damping) * c1;
+            let rr = (n0 - msg[2 * ed])
+                .abs()
+                .max((n1 - msg[2 * ed + 1]).abs());
+            cand[2 * ed] = n0;
+            cand[2 * ed + 1] = n1;
+            resid[ed] = rr;
+            r_max = r_max.max(rr);
+        }
+        let tau = match cfg.schedule {
+            BpSchedule::Synchronous => 0.0,
+            BpSchedule::Residual => cfg.frontier * r_max,
+        };
+        for ed in 0..ne {
+            if resid[ed] >= tau {
+                msg[2 * ed] = cand[2 * ed];
+                msg[2 * ed + 1] = cand[2 * ed + 1];
+            }
+        }
+        if r_max < cfg.tol && !fixed {
+            break;
+        }
+    }
+
+    beliefs_serial(model, g, &unary, &msg, &mut belief);
+    let labels: Vec<u8> = (0..nv)
+        .map(|v| u8::from(belief[2 * v + 1] < belief[2 * v]))
+        .collect();
+    (msg, labels, sweeps)
+}
+
+fn unaries_serial(model: &MrfModel, prm: &Params) -> Vec<f32> {
+    let pp = energy::Prepared::from_params(prm);
+    let h = &model.hoods;
+    let nv = model.num_vertices();
+    let mut out = vec![0.0f32; 2 * nv];
+    for v in 0..nv {
+        let k = (h.vert_offsets[v + 1] - h.vert_offsets[v]).max(1) as f32;
+        let d0 = model.y[v] - pp.mu[0];
+        let d1 = model.y[v] - pp.mu[1];
+        out[2 * v] = k * (d0 * d0 * pp.inv2s[0] + pp.lns[0]);
+        out[2 * v + 1] = k * (d1 * d1 * pp.inv2s[1] + pp.lns[1]);
+    }
+    out
+}
+
+fn beliefs_serial(
+    model: &MrfModel,
+    g: &BpGraph,
+    unary: &[f32],
+    msg: &[f32],
+    belief: &mut [f32],
+) {
+    let offsets = &model.graph.offsets;
+    for v in 0..model.num_vertices() {
+        let mut b0 = unary[2 * v];
+        let mut b1 = unary[2 * v + 1];
+        for ed in offsets[v] as usize..offsets[v + 1] as usize {
+            let r = g.rev[ed] as usize;
+            b0 += msg[2 * r];
+            b1 += msg[2 * r + 1];
+        }
+        belief[2 * v] = b0;
+        belief[2 * v + 1] = b1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bp::test_model as small_model;
+    use crate::dpp::Backend;
+    use crate::pool::Pool;
+
+    #[test]
+    fn oracle_matches_dpp_sweeps_bitwise_on_both_backends() {
+        let model = small_model(41);
+        let prm = Params { mu: [60.0, 180.0], sigma: [25.0, 25.0],
+                           beta: 0.5 };
+        for schedule in [BpSchedule::Synchronous, BpSchedule::Residual] {
+            let cfg = BpConfig { schedule, ..Default::default() };
+            let g = BpGraph::build(&Backend::Serial, &model, prm.beta);
+            let (want_msg, want_labels, want_sweeps) =
+                run_serial(&model, &g, &prm, &cfg, false);
+            for bk in [
+                Backend::Serial,
+                Backend::threaded_with_grain(Pool::new(4), 64),
+            ] {
+                let unary = super::super::sweep::unaries(&bk, &model, &prm);
+                let mut st = super::super::sweep::BpState::new(
+                    g.num_edges(),
+                    model.num_vertices(),
+                );
+                let run = super::super::sweep::run(
+                    &bk, &model, &g, &unary, &mut st, &cfg, false,
+                );
+                let mut labels = vec![0u8; model.num_vertices()];
+                super::super::sweep::decode(
+                    &bk, &model, &g, &unary, &mut st, &mut labels,
+                );
+                assert_eq!(st.msg, want_msg, "{schedule:?} messages {bk:?}");
+                assert_eq!(labels, want_labels, "{schedule:?} labels");
+                assert_eq!(run.sweeps, want_sweeps, "{schedule:?} sweeps");
+            }
+        }
+    }
+}

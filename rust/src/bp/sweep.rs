@@ -1,0 +1,363 @@
+//! BP sweeps on a [`Backend`]: beliefs (gather + segmented reduce),
+//! candidate messages (map), residual max (exact reduce), and the
+//! frontier commit (map) — see the module docs of [`crate::bp`].
+//!
+//! Deterministic by construction: per-vertex and per-edge loops run in
+//! index order inside each chunk, chunks write disjoint slots, and the
+//! only cross-chunk reduction is `max` (exact, association-free). The
+//! serial oracle in [`super::serial`] reproduces every pass bitwise.
+
+use crate::dpp::core::SharedSlice;
+use crate::dpp::Backend;
+use crate::mrf::{energy, MrfModel, Params};
+
+use super::messages::BpGraph;
+use super::{BpConfig, BpSchedule};
+
+/// Message buffers, reused across sweeps and EM iterations.
+/// `msg` holds two f32 per directed edge: `[2e]` = label 0, `[2e+1]` =
+/// label 1, normalized so the smaller entry is 0.
+#[derive(Debug, Clone)]
+pub struct BpState {
+    pub msg: Vec<f32>,
+    cand: Vec<f32>,
+    resid: Vec<f32>,
+    belief: Vec<f32>,
+}
+
+impl BpState {
+    pub fn new(num_edges: usize, num_vertices: usize) -> BpState {
+        BpState {
+            msg: vec![0.0; 2 * num_edges],
+            cand: vec![0.0; 2 * num_edges],
+            resid: vec![0.0; num_edges],
+            belief: vec![0.0; 2 * num_vertices],
+        }
+    }
+
+    /// Zero all messages (cold start).
+    pub fn reset(&mut self) {
+        self.msg.fill(0.0);
+    }
+}
+
+/// Result of one sweep.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SweepStats {
+    /// Max candidate residual across all messages (pre-commit).
+    pub max_residual: f32,
+    /// Messages actually committed this round.
+    pub updated: usize,
+}
+
+/// Result of a full BP run (one E-step).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BpRun {
+    pub sweeps: usize,
+    pub max_residual: f32,
+    pub converged: bool,
+}
+
+/// Unary energies, two per vertex: the Gaussian data term weighted by
+/// the vertex's hood multiplicity, so the BP objective matches the
+/// hood energy's data term (each element instance counts once).
+pub fn unaries(bk: &Backend, model: &MrfModel, prm: &Params) -> Vec<f32> {
+    let pp = energy::Prepared::from_params(prm);
+    let h = &model.hoods;
+    let y = &model.y;
+    let nv = model.num_vertices();
+    let mut out = vec![0.0f32; 2 * nv];
+    {
+        let win = SharedSlice::new(&mut out);
+        bk.for_chunks(nv, |s, e| {
+            for v in s..e {
+                // Vertices outside every hood still get their plain
+                // data term so BP labels them sensibly.
+                let k = (h.vert_offsets[v + 1] - h.vert_offsets[v])
+                    .max(1) as f32;
+                let d0 = y[v] - pp.mu[0];
+                let d1 = y[v] - pp.mu[1];
+                unsafe {
+                    win.write(2 * v, k * (d0 * d0 * pp.inv2s[0] + pp.lns[0]));
+                    win.write(
+                        2 * v + 1,
+                        k * (d1 * d1 * pp.inv2s[1] + pp.lns[1]),
+                    );
+                }
+            }
+        });
+    }
+    out
+}
+
+/// Beliefs: per vertex, unary + sum of incoming messages (the messages
+/// at the reverse of the vertex's own CSR row — a Gather through `rev`
+/// reduced over the static vertex segments).
+fn beliefs(
+    bk: &Backend,
+    model: &MrfModel,
+    g: &BpGraph,
+    unary: &[f32],
+    msg: &[f32],
+    belief: &mut [f32],
+) {
+    let offsets = &model.graph.offsets;
+    let nv = model.num_vertices();
+    let win = SharedSlice::new(belief);
+    let rev = &g.rev;
+    bk.for_chunks(nv, |s, e| {
+        for v in s..e {
+            let (rs, re) = (offsets[v] as usize, offsets[v + 1] as usize);
+            let mut b0 = unary[2 * v];
+            let mut b1 = unary[2 * v + 1];
+            for ed in rs..re {
+                let r = rev[ed] as usize;
+                b0 += msg[2 * r];
+                b1 += msg[2 * r + 1];
+            }
+            unsafe {
+                win.write(2 * v, b0);
+                win.write(2 * v + 1, b1);
+            }
+        }
+    });
+}
+
+/// Candidate messages for every directed edge: min-sum Potts update
+/// from the source belief minus the reverse message, normalized,
+/// damped; fills `cand`/`resid` and returns the exact max residual.
+fn candidates(
+    bk: &Backend,
+    g: &BpGraph,
+    belief: &[f32],
+    msg: &[f32],
+    damping: f32,
+    cand: &mut [f32],
+    resid: &mut [f32],
+) -> f32 {
+    let ne = g.num_edges();
+    let bounds = bk.chunk_bounds(ne);
+    let mut partial_max = vec![0.0f32; bounds.len()];
+    {
+        let wc = SharedSlice::new(cand);
+        let wr = SharedSlice::new(resid);
+        let wm = SharedSlice::new(&mut partial_max);
+        let bounds_ref = &bounds;
+        bk.for_chunk_ids(bounds_ref.len(), |c| {
+            let (s, e) = bounds_ref[c];
+            let mut mx = 0.0f32;
+            for ed in s..e {
+                let u = g.src[ed] as usize;
+                let r = g.rev[ed] as usize;
+                let h0 = belief[2 * u] - msg[2 * r];
+                let h1 = belief[2 * u + 1] - msg[2 * r + 1];
+                let w = g.weight[ed];
+                let mut c0 = h0.min(h1 + w);
+                let mut c1 = h1.min(h0 + w);
+                let norm = c0.min(c1);
+                c0 -= norm;
+                c1 -= norm;
+                let n0 = damping * msg[2 * ed] + (1.0 - damping) * c0;
+                let n1 = damping * msg[2 * ed + 1] + (1.0 - damping) * c1;
+                let rr = (n0 - msg[2 * ed])
+                    .abs()
+                    .max((n1 - msg[2 * ed + 1]).abs());
+                unsafe {
+                    wc.write(2 * ed, n0);
+                    wc.write(2 * ed + 1, n1);
+                    wr.write(ed, rr);
+                }
+                mx = mx.max(rr);
+            }
+            unsafe { wm.write(c, mx) };
+        });
+    }
+    partial_max.into_iter().fold(0.0f32, f32::max)
+}
+
+/// Commit candidates whose residual reaches `tau`; returns how many.
+fn commit(
+    bk: &Backend,
+    msg: &mut [f32],
+    cand: &[f32],
+    resid: &[f32],
+    tau: f32,
+) -> usize {
+    let ne = resid.len();
+    let bounds = bk.chunk_bounds(ne);
+    let mut partial = vec![0usize; bounds.len()];
+    {
+        let wm = SharedSlice::new(msg);
+        let wp = SharedSlice::new(&mut partial);
+        let bounds_ref = &bounds;
+        bk.for_chunk_ids(bounds_ref.len(), |c| {
+            let (s, e) = bounds_ref[c];
+            let mut cnt = 0usize;
+            for ed in s..e {
+                if resid[ed] >= tau {
+                    unsafe {
+                        wm.write(2 * ed, cand[2 * ed]);
+                        wm.write(2 * ed + 1, cand[2 * ed + 1]);
+                    }
+                    cnt += 1;
+                }
+            }
+            unsafe { wp.write(c, cnt) };
+        });
+    }
+    partial.iter().sum()
+}
+
+/// One BP round under the configured schedule.
+pub fn sweep(
+    bk: &Backend,
+    model: &MrfModel,
+    g: &BpGraph,
+    unary: &[f32],
+    st: &mut BpState,
+    cfg: &BpConfig,
+) -> SweepStats {
+    beliefs(bk, model, g, unary, &st.msg, &mut st.belief);
+    let max_residual = candidates(
+        bk, g, &st.belief, &st.msg, cfg.damping, &mut st.cand,
+        &mut st.resid,
+    );
+    let tau = match cfg.schedule {
+        BpSchedule::Synchronous => 0.0,
+        BpSchedule::Residual => cfg.frontier * max_residual,
+    };
+    let updated = commit(bk, &mut st.msg, &st.cand, &st.resid, tau);
+    SweepStats { max_residual, updated }
+}
+
+/// Sweep until the max residual drops below `cfg.tol` (or
+/// `cfg.max_sweeps`; with `fixed` every run does the full count).
+pub fn run(
+    bk: &Backend,
+    model: &MrfModel,
+    g: &BpGraph,
+    unary: &[f32],
+    st: &mut BpState,
+    cfg: &BpConfig,
+    fixed: bool,
+) -> BpRun {
+    let max_sweeps = cfg.max_sweeps.max(1);
+    let mut last = 0.0f32;
+    for s in 0..max_sweeps {
+        let stats = sweep(bk, model, g, unary, st, cfg);
+        last = stats.max_residual;
+        if last < cfg.tol && !fixed {
+            return BpRun { sweeps: s + 1, max_residual: last,
+                           converged: true };
+        }
+    }
+    BpRun { sweeps: max_sweeps, max_residual: last,
+            converged: last < cfg.tol }
+}
+
+/// Decode labels from the current messages: recompute beliefs, take
+/// the per-vertex argmin with the engines' tie-break (ties -> 0).
+pub fn decode(
+    bk: &Backend,
+    model: &MrfModel,
+    g: &BpGraph,
+    unary: &[f32],
+    st: &mut BpState,
+    labels: &mut [u8],
+) {
+    beliefs(bk, model, g, unary, &st.msg, &mut st.belief);
+    let win = SharedSlice::new(labels);
+    let belief = &st.belief;
+    bk.for_chunks(model.num_vertices(), |s, e| {
+        for v in s..e {
+            unsafe {
+                win.write(v, u8::from(belief[2 * v + 1] < belief[2 * v]));
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bp::test_model as small_model;
+    use crate::pool::Pool;
+
+    fn test_params() -> Params {
+        Params { mu: [60.0, 180.0], sigma: [25.0, 25.0], beta: 0.5 }
+    }
+
+    #[test]
+    fn synchronous_sweeps_converge_and_decode_binary() {
+        let model = small_model(31);
+        let prm = test_params();
+        let cfg = BpConfig {
+            schedule: BpSchedule::Synchronous,
+            ..Default::default()
+        };
+        let (labels, run) = crate::bp::solve(&Backend::Serial, &model,
+                                             &prm, &cfg);
+        assert!(run.converged, "residual {}", run.max_residual);
+        assert!(run.sweeps <= cfg.max_sweeps);
+        assert!(labels.iter().all(|&l| l <= 1));
+        assert_eq!(labels.len(), model.num_vertices());
+    }
+
+    #[test]
+    fn residual_schedule_updates_fewer_messages_per_round() {
+        let model = small_model(32);
+        let prm = test_params();
+        let g = BpGraph::build(&Backend::Serial, &model, prm.beta);
+        let unary = unaries(&Backend::Serial, &model, &prm);
+        let mut st = BpState::new(g.num_edges(), model.num_vertices());
+
+        let sync = BpConfig { schedule: BpSchedule::Synchronous,
+                              ..Default::default() };
+        let s1 = sweep(&Backend::Serial, &model, &g, &unary, &mut st,
+                       &sync);
+        assert_eq!(s1.updated, g.num_edges(), "sync commits everything");
+
+        let res = BpConfig { schedule: BpSchedule::Residual,
+                             frontier: 0.5, ..Default::default() };
+        let s2 = sweep(&Backend::Serial, &model, &g, &unary, &mut st,
+                       &res);
+        assert!(s2.updated <= g.num_edges());
+        assert!(s2.updated > 0, "frontier is never empty while r_max > 0");
+    }
+
+    #[test]
+    fn backends_produce_bitwise_identical_messages() {
+        let model = small_model(33);
+        let prm = test_params();
+        for schedule in [BpSchedule::Synchronous, BpSchedule::Residual] {
+            let cfg = BpConfig { schedule, ..Default::default() };
+            let mut runs = Vec::new();
+            for bk in [
+                Backend::Serial,
+                Backend::threaded_with_grain(Pool::new(4), 32),
+            ] {
+                let g = BpGraph::build(&bk, &model, prm.beta);
+                let unary = unaries(&bk, &model, &prm);
+                let mut st = BpState::new(g.num_edges(),
+                                          model.num_vertices());
+                let r = run(&bk, &model, &g, &unary, &mut st, &cfg, false);
+                runs.push((st.msg.clone(), r));
+            }
+            assert_eq!(runs[0].0, runs[1].0, "{schedule:?} messages");
+            assert_eq!(runs[0].1, runs[1].1, "{schedule:?} run stats");
+        }
+    }
+
+    #[test]
+    fn fixed_mode_runs_exact_sweep_count() {
+        let model = small_model(34);
+        let prm = test_params();
+        let g = BpGraph::build(&Backend::Serial, &model, prm.beta);
+        let unary = unaries(&Backend::Serial, &model, &prm);
+        let mut st = BpState::new(g.num_edges(), model.num_vertices());
+        let cfg = BpConfig { max_sweeps: 7, ..Default::default() };
+        let r = run(&Backend::Serial, &model, &g, &unary, &mut st, &cfg,
+                    true);
+        assert_eq!(r.sweeps, 7);
+    }
+}

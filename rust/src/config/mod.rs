@@ -9,6 +9,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::bp::{BpConfig, BpSchedule};
 use crate::json::{self, Value};
 
 /// Which dataset generator to use (paper §4.1.1).
@@ -49,16 +50,33 @@ pub enum EngineKind {
     /// DPP pipeline with the EM inner step on AOT XLA artifacts
     /// (the accelerator platform of Table 1).
     Xla,
+    /// Max-product loopy belief propagation on DPP sweeps with
+    /// residual message scheduling (DESIGN.md §6).
+    Bp,
 }
 
 impl EngineKind {
+    /// Accepted `--engine` values, for help text and error messages.
+    pub const USAGE: &'static str = "serial|reference|dpp|xla|bp";
+
+    pub fn all() -> [EngineKind; 5] {
+        [
+            EngineKind::Serial,
+            EngineKind::Reference,
+            EngineKind::Dpp,
+            EngineKind::Xla,
+            EngineKind::Bp,
+        ]
+    }
+
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "serial" => Ok(EngineKind::Serial),
             "reference" => Ok(EngineKind::Reference),
             "dpp" => Ok(EngineKind::Dpp),
             "xla" => Ok(EngineKind::Xla),
-            _ => bail!("unknown engine `{s}` (serial|reference|dpp|xla)"),
+            "bp" => Ok(EngineKind::Bp),
+            _ => bail!("unknown engine `{s}` ({})", Self::USAGE),
         }
     }
 
@@ -68,6 +86,20 @@ impl EngineKind {
             EngineKind::Reference => "reference",
             EngineKind::Dpp => "dpp",
             EngineKind::Xla => "xla",
+            EngineKind::Bp => "bp",
+        }
+    }
+
+    /// One-line description for `dpp-pmrf engines`.
+    pub fn about(&self) -> &'static str {
+        match self {
+            EngineKind::Serial => "single-threaded baseline (Table 1)",
+            EngineKind::Reference => "coarse-parallel OpenMP analog (Alg. 1)",
+            EngineKind::Dpp => "fine-grained DPP pipeline (Alg. 2, paper)",
+            EngineKind::Xla => "AOT XLA/PJRT accelerator path",
+            EngineKind::Bp => {
+                "loopy belief propagation, residual-scheduled DPP sweeps"
+            }
         }
     }
 }
@@ -158,6 +190,8 @@ pub struct RunConfig {
     pub dataset: DatasetConfig,
     pub overseg: OversegConfig,
     pub mrf: MrfConfig,
+    /// BP engine parameters (used when `engine` is [`EngineKind::Bp`]).
+    pub bp: BpConfig,
     pub engine: EngineKind,
     pub threads: usize,
     pub grain: usize,
@@ -170,6 +204,7 @@ impl Default for RunConfig {
             dataset: DatasetConfig::default(),
             overseg: OversegConfig::default(),
             mrf: MrfConfig::default(),
+            bp: BpConfig::default(),
             engine: EngineKind::Dpp,
             threads: crate::pool::available_threads(),
             grain: crate::pool::DEFAULT_GRAIN,
@@ -232,6 +267,18 @@ impl RunConfig {
                 .and_then(Value::as_bool)
                 .unwrap_or(cfg.mrf.fixed_iters);
         }
+        if let Some(b) = v.get("bp") {
+            if let Some(s) = b.get("schedule").and_then(Value::as_str) {
+                cfg.bp.schedule = BpSchedule::parse(s)?;
+            }
+            cfg.bp.damping =
+                get_f64(b, "damping", cfg.bp.damping as f64) as f32;
+            cfg.bp.max_sweeps =
+                get_usize(b, "max_sweeps", cfg.bp.max_sweeps);
+            cfg.bp.tol = get_f64(b, "tol", cfg.bp.tol as f64) as f32;
+            cfg.bp.frontier =
+                get_f64(b, "frontier", cfg.bp.frontier as f64) as f32;
+        }
         if let Some(e) = v.get("engine").and_then(Value::as_str) {
             cfg.engine = EngineKind::parse(e)?;
         }
@@ -240,13 +287,32 @@ impl RunConfig {
         if let Some(p) = v.get("artifacts_dir").and_then(Value::as_str) {
             cfg.artifacts_dir = PathBuf::from(p);
         }
-        if cfg.threads == 0 {
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Range checks shared by the JSON loader and the CLI override
+    /// path (`main.rs` re-validates after applying `--bp-*` flags).
+    pub fn validate(&self) -> Result<()> {
+        if self.threads == 0 {
             bail!("threads must be >= 1");
         }
-        if cfg.mrf.window == 0 {
+        if self.mrf.window == 0 {
             bail!("mrf.window must be >= 1");
         }
-        Ok(cfg)
+        if !(0.0..1.0).contains(&self.bp.damping) {
+            bail!("bp.damping must be in [0, 1)");
+        }
+        if !(0.0..=1.0).contains(&self.bp.frontier) {
+            bail!("bp.frontier must be in [0, 1]");
+        }
+        if self.bp.max_sweeps == 0 {
+            bail!("bp.max_sweeps must be >= 1");
+        }
+        if self.bp.tol <= 0.0 {
+            bail!("bp.tol must be > 0");
+        }
+        Ok(())
     }
 
     /// Serialize back to JSON (round-trips through `from_json`).
@@ -274,6 +340,13 @@ impl RunConfig {
                 ("threshold", self.mrf.threshold.into()),
                 ("seed", (self.mrf.seed as usize).into()),
                 ("fixed_iters", self.mrf.fixed_iters.into()),
+            ])),
+            ("bp", Value::object(vec![
+                ("damping", (self.bp.damping as f64).into()),
+                ("max_sweeps", self.bp.max_sweeps.into()),
+                ("tol", (self.bp.tol as f64).into()),
+                ("schedule", self.bp.schedule.name().into()),
+                ("frontier", (self.bp.frontier as f64).into()),
             ])),
             ("engine", self.engine.name().into()),
             ("threads", self.threads.into()),
@@ -316,15 +389,41 @@ mod tests {
         assert!(RunConfig::from_json(&v).is_err());
         let v = json::parse(r#"{"threads": 0}"#).unwrap();
         assert!(RunConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"bp": {"damping": 1.5}}"#).unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"bp": {"schedule": "chaotic"}}"#).unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"bp": {"max_sweeps": 0}}"#).unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"bp": {"tol": -1.0}}"#).unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
     }
 
     #[test]
     fn kinds_parse_and_name() {
-        for k in ["serial", "reference", "dpp", "xla"] {
+        for k in ["serial", "reference", "dpp", "xla", "bp"] {
             assert_eq!(EngineKind::parse(k).unwrap().name(), k);
         }
+        assert_eq!(EngineKind::all().len(), 5);
         for d in ["synthetic", "experimental"] {
             assert_eq!(DatasetKind::parse(d).unwrap().name(), d);
         }
+    }
+
+    #[test]
+    fn bp_section_parses() {
+        let v = json::parse(
+            r#"{"engine": "bp", "bp": {"damping": 0.25, "max_sweeps": 9,
+                "schedule": "sync", "frontier": 0.75}}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.engine, EngineKind::Bp);
+        assert_eq!(cfg.bp.damping, 0.25);
+        assert_eq!(cfg.bp.max_sweeps, 9);
+        assert_eq!(cfg.bp.schedule, BpSchedule::Synchronous);
+        assert_eq!(cfg.bp.frontier, 0.75);
+        // unspecified keys keep defaults
+        assert_eq!(cfg.bp.tol, BpConfig::default().tol);
     }
 }

@@ -60,6 +60,17 @@ impl RunReport {
             / self.slices.len().max(1) as f64
     }
 
+    /// Total EM iterations across slices.
+    pub fn total_em_iters(&self) -> usize {
+        self.slices.iter().map(|s| s.em_iters).sum()
+    }
+
+    /// Total inner iterations (MAP iterations or BP sweeps) across
+    /// slices.
+    pub fn total_map_iters(&self) -> usize {
+        self.slices.iter().map(|s| s.map_iters).sum()
+    }
+
     /// JSON rendering for EXPERIMENTS.md / bench reports.
     pub fn to_json(&self) -> crate::json::Value {
         use crate::json::Value;
@@ -69,12 +80,35 @@ impl RunReport {
             ("mean_init_secs", self.mean_init_secs().into()),
             ("porosity", self.porosity.into()),
             ("slices", self.slices.len().into()),
+            ("em_iters", self.total_em_iters().into()),
+            ("map_iters", self.total_map_iters().into()),
         ];
         if let Some(c) = &self.confusion {
             fields.push(("precision", c.precision().into()));
             fields.push(("recall", c.recall().into()));
             fields.push(("accuracy", c.accuracy().into()));
         }
+        // Per-slice detail: iteration counts were collected in
+        // SliceReport all along but dropped from the JSON, which made
+        // BP-vs-MAP iteration comparisons impossible in bench reports.
+        let slice_reports: Vec<Value> = self
+            .slices
+            .iter()
+            .map(|s| {
+                Value::object(vec![
+                    ("z", s.z.into()),
+                    ("regions", s.regions.into()),
+                    ("hoods", s.hoods.into()),
+                    ("elements", s.elements.into()),
+                    ("em_iters", s.em_iters.into()),
+                    ("map_iters", s.map_iters.into()),
+                    ("init_secs", s.init_secs.into()),
+                    ("opt_secs", s.opt_secs.into()),
+                    ("final_energy", s.final_energy.into()),
+                ])
+            })
+            .collect();
+        fields.push(("slice_reports", Value::Array(slice_reports)));
         Value::object(fields)
     }
 }
@@ -123,20 +157,21 @@ impl Coordinator {
         &self.backend
     }
 
-    /// Instantiate the configured engine.
-    pub fn engine(&self) -> Box<dyn Engine> {
-        match self.cfg.engine {
-            EngineKind::Serial => Box::new(mrf::serial::SerialEngine),
-            EngineKind::Reference => Box::new(
-                mrf::reference::ReferenceEngine::new(Arc::clone(&self.pool)),
-            ),
-            EngineKind::Dpp => {
-                Box::new(mrf::dpp::DppEngine::new(self.backend.clone()))
-            }
-            EngineKind::Xla => Box::new(mrf::xla::XlaEngine::new(
-                Arc::clone(self.runtime.as_ref().expect("runtime loaded")),
-            )),
+    /// The resource bundle [`mrf::make_engine`] dispatches on.
+    pub fn engine_resources(&self) -> mrf::EngineResources {
+        mrf::EngineResources {
+            pool: Arc::clone(&self.pool),
+            backend: self.backend.clone(),
+            runtime: self.runtime.clone(),
+            bp: self.cfg.bp,
         }
+    }
+
+    /// Instantiate the configured engine (one dispatch site for every
+    /// kind: [`mrf::make_engine`]).
+    pub fn engine(&self) -> Box<dyn Engine> {
+        mrf::make_engine(self.cfg.engine, &self.engine_resources())
+            .expect("engine resources prepared in Coordinator::new")
     }
 
     /// Build the per-slice MRF model (initialization phase).
@@ -425,5 +460,50 @@ mod tests {
         assert!(j.get("accuracy").is_some());
         assert!(j.get("mean_opt_secs").and_then(|v| v.as_f64()).unwrap()
                 > 0.0);
+        // Iteration counts must survive into the JSON, per slice and
+        // in total, so engines' inner-loop costs are comparable.
+        assert!(j.get("em_iters").and_then(|v| v.as_f64()).unwrap() >= 1.0);
+        assert!(j.get("map_iters").and_then(|v| v.as_f64()).unwrap() >= 1.0);
+        match j.get("slice_reports") {
+            Some(crate::json::Value::Array(rows)) => {
+                assert_eq!(rows.len(), report.slices.len());
+                for (row, s) in rows.iter().zip(&report.slices) {
+                    assert_eq!(
+                        row.get("em_iters").and_then(|v| v.as_f64()),
+                        Some(s.em_iters as f64)
+                    );
+                    assert_eq!(
+                        row.get("map_iters").and_then(|v| v.as_f64()),
+                        Some(s.map_iters as f64)
+                    );
+                }
+            }
+            other => panic!("slice_reports missing/not array: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bp_engine_runs_end_to_end_and_matches_serial_quality() {
+        let ds = crate::image::generate(&base_cfg(EngineKind::Bp).dataset);
+
+        let serial =
+            Coordinator::new(base_cfg(EngineKind::Serial)).unwrap()
+                .run(&ds).unwrap();
+        let bp = Coordinator::new(base_cfg(EngineKind::Bp)).unwrap()
+            .run(&ds).unwrap();
+
+        assert_eq!(bp.engine, "bp");
+        assert_eq!(bp.slices.len(), serial.slices.len());
+        let acc = bp.confusion.expect("synthetic has truth").accuracy();
+        assert!(acc > 0.85, "bp accuracy {acc}");
+        // Acceptance bar: per-slice final energy within 5% of the
+        // serial MAP engine on the same fixture.
+        for (b, s) in bp.slices.iter().zip(&serial.slices) {
+            let rel = (b.final_energy - s.final_energy).abs()
+                / s.final_energy.abs().max(1.0);
+            assert!(rel < 0.05,
+                    "slice {}: bp {} vs serial {} (rel {rel})",
+                    b.z, b.final_energy, s.final_energy);
+        }
     }
 }

@@ -5,13 +5,16 @@
 //! (Lessley et al., 2018): Markov-Random-Field image segmentation
 //! reformulated entirely in terms of data-parallel primitives, with a
 //! serial baseline, a coarse-parallel "OpenMP" reference engine, the
-//! fine-grained DPP engine, and an AOT-compiled XLA/PJRT accelerator
-//! path (JAX + Pallas at build time, rust-only at run time).
+//! fine-grained DPP engine, an AOT-compiled XLA/PJRT accelerator
+//! path (JAX + Pallas at build time, rust-only at run time), and a
+//! data-parallel loopy belief propagation engine ([`bp`]) with
+//! residual message scheduling.
 //!
 //! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the
 //! reproduced tables/figures.
 
 pub mod bench_support;
+pub mod bp;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
@@ -29,6 +32,7 @@ pub mod util;
 
 /// Convenient re-exports for examples and benches.
 pub mod prelude {
+    pub use crate::bp::{BpConfig, BpSchedule};
     pub use crate::config::{DatasetKind, EngineKind, RunConfig};
     pub use crate::dpp::Backend;
     pub use crate::pool::Pool;

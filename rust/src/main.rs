@@ -14,6 +14,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use dpp_pmrf::bp::BpSchedule;
 use dpp_pmrf::cli::Spec;
 use dpp_pmrf::config::{DatasetKind, EngineKind, RunConfig};
 use dpp_pmrf::coordinator::Coordinator;
@@ -133,13 +134,22 @@ fn cmd_generate(args: &[String]) -> Result<()> {
 fn cmd_segment(args: &[String]) -> Result<()> {
     let spec = common_spec(Spec::new("dpp-pmrf segment",
                                      "run the segmentation pipeline"))
-        .opt("engine", "serial|reference|dpp|xla", Some("dpp"))
+        .opt("engine", EngineKind::USAGE, Some("dpp"))
         .opt("threads", "worker threads (default: all cores)", None)
         .opt("input", "raw volume to segment instead of generating", None)
         .opt("out", "write segmented raw volume here", None)
         .opt("figures", "write PGM figure panels to this directory", None)
         .opt("report", "write a JSON run report here", None)
-        .opt("artifacts", "XLA artifacts dir", Some("artifacts"));
+        .opt("artifacts", "XLA artifacts dir", Some("artifacts"))
+        .opt("bp-schedule", "bp engine: sync|residual message schedule",
+             None)
+        .opt("bp-damping", "bp engine: fraction of old message kept",
+             None)
+        .opt("bp-sweeps", "bp engine: max sweeps per EM iteration", None)
+        .opt("bp-tol", "bp engine: residual convergence threshold", None)
+        .opt("bp-frontier",
+             "bp engine: commit messages with residual >= ratio * max",
+             None);
     let m = spec.parse(args)?;
     let mut cfg = load_cfg(&m)?;
     cfg.engine = EngineKind::parse(m.get("engine").unwrap())?;
@@ -147,6 +157,22 @@ fn cmd_segment(args: &[String]) -> Result<()> {
         cfg.threads = t;
     }
     cfg.artifacts_dir = PathBuf::from(m.get("artifacts").unwrap());
+    if let Some(s) = m.get("bp-schedule") {
+        cfg.bp.schedule = BpSchedule::parse(s)?;
+    }
+    if let Some(d) = m.get_parse::<f32>("bp-damping")? {
+        cfg.bp.damping = d;
+    }
+    if let Some(s) = m.get_parse::<usize>("bp-sweeps")? {
+        cfg.bp.max_sweeps = s;
+    }
+    if let Some(t) = m.get_parse::<f32>("bp-tol")? {
+        cfg.bp.tol = t;
+    }
+    if let Some(f) = m.get_parse::<f32>("bp-frontier")? {
+        cfg.bp.frontier = f;
+    }
+    cfg.validate()?;
 
     let ds = load_or_generate(&m, &cfg)?;
     let coord = Coordinator::new(cfg.clone())?;
@@ -209,8 +235,10 @@ fn cmd_engines(args: &[String]) -> Result<()> {
                          "list engines and XLA artifact buckets")
         .opt("artifacts", "XLA artifacts dir", Some("artifacts"));
     let m = spec.parse(args)?;
-    println!("engines: serial, reference (OpenMP analog), dpp (paper), \
-              dpp-fused, xla (PJRT accelerator path)");
+    println!("engines:");
+    for kind in EngineKind::all() {
+        println!("  {:<10} {}", kind.name(), kind.about());
+    }
     let dir = PathBuf::from(m.get("artifacts").unwrap());
     match dpp_pmrf::runtime::EmRuntime::load(&dir) {
         Ok(rt) => {

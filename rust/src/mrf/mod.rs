@@ -20,7 +20,9 @@
 //! Engines: [`serial::SerialEngine`] (baseline),
 //! [`reference::ReferenceEngine`] (coarse-parallel OpenMP analog),
 //! [`dpp::DppEngine`] (the paper's contribution),
-//! [`xla::XlaEngine`] (AOT accelerator path).
+//! [`xla::XlaEngine`] (AOT accelerator path), and
+//! [`crate::bp::BpEngine`] (loopy belief propagation, DESIGN.md §6).
+//! Construct by kind through [`make_engine`].
 
 pub mod dpp;
 pub mod energy;
@@ -33,10 +35,16 @@ pub mod xla;
 pub use energy::Params;
 pub use hoods::Hoods;
 
-use crate::config::MrfConfig;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::{EngineKind, MrfConfig};
 use crate::dpp::Backend;
 use crate::graph::Csr;
 use crate::overseg::Overseg;
+use crate::pool::Pool;
+use crate::runtime::EmRuntime;
 
 /// The optimization problem: graph, observations, neighborhoods.
 #[derive(Debug, Clone)]
@@ -98,6 +106,101 @@ pub struct EmResult {
 pub trait Engine {
     fn name(&self) -> &'static str;
     fn run(&self, model: &MrfModel, cfg: &MrfConfig) -> EmResult;
+}
+
+/// Everything [`make_engine`] may need; callers fill in what they have
+/// (`runtime` is only required for [`EngineKind::Xla`]).
+#[derive(Clone)]
+pub struct EngineResources {
+    pub pool: Arc<Pool>,
+    pub backend: Backend,
+    pub runtime: Option<Arc<EmRuntime>>,
+    pub bp: crate::bp::BpConfig,
+}
+
+impl EngineResources {
+    /// Resources for the pure-CPU engines (serial/reference/dpp/bp).
+    pub fn new(pool: Arc<Pool>, backend: Backend) -> EngineResources {
+        EngineResources {
+            pool,
+            backend,
+            runtime: None,
+            bp: crate::bp::BpConfig::default(),
+        }
+    }
+}
+
+/// The single construction site for every [`EngineKind`] — the
+/// coordinator and launcher both dispatch through here, so adding an
+/// engine means one new arm, not one per caller.
+pub fn make_engine(kind: EngineKind, res: &EngineResources)
+    -> Result<Box<dyn Engine>> {
+    Ok(match kind {
+        EngineKind::Serial => Box::new(serial::SerialEngine),
+        EngineKind::Reference => {
+            Box::new(reference::ReferenceEngine::new(Arc::clone(&res.pool)))
+        }
+        EngineKind::Dpp => {
+            Box::new(dpp::DppEngine::new(res.backend.clone()))
+        }
+        EngineKind::Xla => Box::new(xla::XlaEngine::new(Arc::clone(
+            res.runtime
+                .as_ref()
+                .context("xla engine needs loaded artifacts")?,
+        ))),
+        EngineKind::Bp => Box::new(crate::bp::BpEngine::new(
+            res.backend.clone(),
+            res.bp,
+        )),
+    })
+}
+
+/// Energy of a concrete labeling under the shared hood-energy
+/// definition (DESIGN.md §5): per hood-member instance, the energy of
+/// the vertex's assigned label, summed per hood. At a MAP fixpoint this
+/// equals the engines' reported energy; the BP engine and the
+/// cross-engine quality tests score labelings with it.
+pub fn config_energy(model: &MrfModel, labels: &[u8], prm: &Params)
+    -> (Vec<f64>, f64) {
+    let h = &model.hoods;
+    let pp = energy::Prepared::from_params(prm);
+    let hood_energy: Vec<f64> = (0..h.num_hoods())
+        .map(|hd| {
+            hood_label_energy(h.hood_members(hd), &model.y, labels, &pp)
+        })
+        .collect();
+    let total = hood_energy.iter().sum();
+    (hood_energy, total)
+}
+
+/// One hood's labeling energy — the single accumulation both
+/// [`config_energy`] and the BP engine's fused parallel scorer run, so
+/// their bitwise equality is structural: label-1 count over the
+/// members in order, then each member's energy at its assigned label.
+pub(crate) fn hood_label_energy(
+    members: &[u32],
+    y: &[f32],
+    labels: &[u8],
+    pp: &energy::Prepared,
+) -> f64 {
+    let mut ones = 0.0f32;
+    for &v in members {
+        ones += labels[v as usize] as f32;
+    }
+    let size = members.len() as f32;
+    let mut sum = 0.0f64;
+    for &v in members {
+        let lbl = labels[v as usize];
+        let (e0, e1) = energy::energy_pair_p(
+            y[v as usize],
+            lbl as f32,
+            ones,
+            size,
+            pp,
+        );
+        sum += if lbl == 1 { e1 as f64 } else { e0 as f64 };
+    }
+    sum
 }
 
 /// Windowed relative-change convergence test (paper: L=3, 1e-4).
@@ -221,5 +324,37 @@ mod tests {
         hw.push_all(&[1.0e6]);
         // 1e-4 relative on 1e6 allows drift of 100
         assert!(hw.push_all(&[1.0e6 + 50.0]));
+    }
+
+    #[test]
+    fn config_energy_matches_serial_engine_at_convergence() {
+        let model = crate::bp::test_model(61);
+        let cfg = MrfConfig::default();
+        let res = serial::SerialEngine.run(&model, &cfg);
+        let (hood_e, total) =
+            config_energy(&model, &res.labels, &res.params);
+        assert_eq!(hood_e.len(), model.hoods.num_hoods());
+        // At convergence the labeling energy and the engine's reported
+        // per-instance-minimum sum coincide up to residual label churn.
+        let rel = (total - res.energy).abs() / res.energy.abs().max(1.0);
+        assert!(rel < 0.02, "config {total} vs engine {} ", res.energy);
+    }
+
+    #[test]
+    fn factory_builds_every_cpu_engine() {
+        let pool = crate::pool::Pool::new(2);
+        let res = EngineResources::new(Arc::clone(&pool),
+                                       Backend::threaded(pool));
+        for (kind, name) in [
+            (EngineKind::Serial, "serial"),
+            (EngineKind::Reference, "reference"),
+            (EngineKind::Dpp, "dpp"),
+            (EngineKind::Bp, "bp"),
+        ] {
+            let e = make_engine(kind, &res).unwrap();
+            assert_eq!(e.name(), name);
+        }
+        // Xla without a loaded runtime is a clean error, not a panic.
+        assert!(make_engine(EngineKind::Xla, &res).is_err());
     }
 }

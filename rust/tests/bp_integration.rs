@@ -1,0 +1,132 @@
+//! BP subsystem integration tests (ISSUE 1 acceptance): serial-vs-DPP
+//! sweep parity on small synthetic graphs, determinism under the
+//! residual schedule, and the energy-quality property — BP final
+//! energy within tolerance of `SerialEngine` on the same fixtures the
+//! pipeline integration tests use.
+
+use dpp_pmrf::bp::{self, serial::run_serial, BpConfig, BpEngine, BpGraph,
+                   BpSchedule};
+use dpp_pmrf::config::{DatasetConfig, DatasetKind, EngineKind, MrfConfig,
+                       RunConfig};
+use dpp_pmrf::coordinator::Coordinator;
+use dpp_pmrf::dpp::Backend;
+use dpp_pmrf::image;
+use dpp_pmrf::mrf::{self, Engine, MrfModel, Params};
+use dpp_pmrf::overseg::oversegment;
+use dpp_pmrf::pool::Pool;
+
+fn small_cfg(kind: DatasetKind, engine: EngineKind) -> RunConfig {
+    RunConfig {
+        dataset: DatasetConfig {
+            kind,
+            width: 64,
+            height: 64,
+            slices: 2,
+            ..Default::default()
+        },
+        engine,
+        threads: 3,
+        ..Default::default()
+    }
+}
+
+/// First-slice model of the standard integration fixture.
+fn fixture_model(kind: DatasetKind) -> MrfModel {
+    let cfg = small_cfg(kind, EngineKind::Serial);
+    let ds = image::generate(&cfg.dataset);
+    let seg = oversegment(&Backend::Serial, &ds.input.slice(0),
+                          &cfg.overseg);
+    mrf::build_model_serial(&seg)
+}
+
+#[test]
+fn sweep_parity_serial_oracle_vs_dpp_backends() {
+    let model = fixture_model(DatasetKind::Synthetic);
+    let prm = Params { mu: [50.0, 190.0], sigma: [30.0, 30.0], beta: 0.5 };
+    for schedule in [BpSchedule::Synchronous, BpSchedule::Residual] {
+        let cfg = BpConfig { schedule, ..Default::default() };
+        let g = BpGraph::build(&Backend::Serial, &model, prm.beta);
+        let (want_msg, want_labels, _) =
+            run_serial(&model, &g, &prm, &cfg, false);
+        for bk in [
+            Backend::Serial,
+            Backend::threaded_with_grain(Pool::new(4), 128),
+        ] {
+            let (labels, _) = bp::solve(&bk, &model, &prm, &cfg);
+            assert_eq!(labels, want_labels, "{schedule:?} labels {bk:?}");
+            // and the raw message state agrees bitwise
+            let unary = bp::sweep::unaries(&bk, &model, &prm);
+            let mut st =
+                bp::BpState::new(g.num_edges(), model.num_vertices());
+            bp::sweep::run(&bk, &model, &g, &unary, &mut st, &cfg, false);
+            assert_eq!(st.msg, want_msg, "{schedule:?} messages {bk:?}");
+        }
+    }
+}
+
+#[test]
+fn residual_schedule_is_deterministic() {
+    let model = fixture_model(DatasetKind::Experimental);
+    let cfg = MrfConfig::default();
+    let bp_cfg = BpConfig { schedule: BpSchedule::Residual,
+                            ..Default::default() };
+    let a = BpEngine::new(Backend::Serial, bp_cfg).run(&model, &cfg);
+    let b = BpEngine::new(Backend::Serial, bp_cfg).run(&model, &cfg);
+    assert_eq!(a, b, "same backend, same result");
+    let c = BpEngine::new(
+        Backend::threaded_with_grain(Pool::new(4), 64),
+        bp_cfg,
+    )
+    .run(&model, &cfg);
+    assert_eq!(a, c, "thread count does not change the result");
+}
+
+#[test]
+fn bp_energy_within_tolerance_of_serial_engine_on_fixtures() {
+    for kind in [DatasetKind::Synthetic, DatasetKind::Experimental] {
+        let model = fixture_model(kind);
+        let cfg = MrfConfig::default();
+        let map = mrf::serial::SerialEngine.run(&model, &cfg);
+        for schedule in [BpSchedule::Synchronous, BpSchedule::Residual] {
+            let bp_cfg = BpConfig { schedule, ..Default::default() };
+            let bp_res =
+                BpEngine::new(Backend::Serial, bp_cfg).run(&model, &cfg);
+            let rel = (bp_res.energy - map.energy).abs()
+                / map.energy.abs().max(1.0);
+            assert!(rel < 0.05,
+                    "{kind:?}/{schedule:?}: bp {} vs serial {} (rel {rel})",
+                    bp_res.energy, map.energy);
+        }
+    }
+}
+
+#[test]
+fn bp_engine_through_coordinator_on_synthetic() {
+    // `--engine bp` end to end: full pipeline, ground-truth scoring.
+    let cfg = small_cfg(DatasetKind::Synthetic, EngineKind::Bp);
+    let ds = image::generate(&cfg.dataset);
+    let report = Coordinator::new(cfg).unwrap().run(&ds).unwrap();
+    assert_eq!(report.engine, "bp");
+    let acc = report.confusion.expect("synthetic has truth").accuracy();
+    assert!(acc > 0.85, "bp accuracy {acc}");
+    for s in &report.slices {
+        assert!(s.map_iters >= 1, "sweeps recorded per slice");
+    }
+    // the per-slice iteration counts survive into the JSON report
+    let j = report.to_json();
+    assert!(j.get("map_iters").and_then(|v| v.as_f64()).unwrap() >= 1.0);
+}
+
+#[test]
+fn bp_config_round_trips_through_json() {
+    let mut cfg = small_cfg(DatasetKind::Synthetic, EngineKind::Bp);
+    cfg.bp = BpConfig {
+        damping: 0.25,
+        max_sweeps: 17,
+        tol: 1e-2,
+        schedule: BpSchedule::Synchronous,
+        frontier: 0.75,
+    };
+    let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+    assert_eq!(back, cfg);
+}
