@@ -1,12 +1,17 @@
 //! Quickstart: generate a noisy porous volume, segment it with
-//! DPP-PMRF, print the verification metrics.
+//! DPP-PMRF, print the verification metrics, and peek at the fused
+//! plan + pipeline layer the hot loops run on.
 //!
 //!     cargo run --release --example quickstart
 
-use dpp_pmrf::config::{DatasetConfig, EngineKind, RunConfig};
+use dpp_pmrf::config::{DatasetConfig, EngineKind, MrfConfig, RunConfig};
 use dpp_pmrf::coordinator::Coordinator;
+use dpp_pmrf::dpp::{Backend, SegmentPlan};
 use dpp_pmrf::image;
 use dpp_pmrf::metrics;
+use dpp_pmrf::mrf::dpp::{DppEngine, PairMode};
+use dpp_pmrf::mrf::Engine;
+use dpp_pmrf::pool::Pool;
 
 fn main() -> anyhow::Result<()> {
     // 1. Describe the run: a 128x128x2 synthetic porous volume with the
@@ -47,7 +52,7 @@ fn main() -> anyhow::Result<()> {
     //    `--bp-sweeps`, `--bp-tol`, `--bp-frontier`).
     let bp = Coordinator::new(RunConfig {
         engine: EngineKind::Bp,
-        ..cfg
+        ..cfg.clone()
     })?
     .run(&dataset)?;
     println!("bp engine       : opt {:.3}s, {} sweeps",
@@ -55,5 +60,31 @@ fn main() -> anyhow::Result<()> {
     if let Some(c) = &bp.confusion {
         println!("bp verification : {}", metrics::summary(c));
     }
+
+    // 6. The layer underneath (DESIGN.md §7): the iteration hot path
+    //    reduces over STATIC keys, so a SegmentPlan pays the paper's
+    //    per-iteration SortByKey once and every later reduction runs
+    //    sort-free — bitwise-identical to sort + reduce_by_key.
+    let bk = Backend::threaded(Pool::with_default_threads());
+    let keys: Vec<u64> = (0..1000u64).map(|i| i % 10).collect();
+    let plan = SegmentPlan::build(&bk, &keys); // the one sort
+    for _iteration in 0..3 {
+        let vals: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        let sums = plan.reduce_segments(&bk, &vals, 0.0, |a, b| a + b);
+        assert_eq!(sums.len(), 10); // one per distinct key, sort-free
+    }
+
+    // 7. The planned engine mode drives the whole EM/MAP loop through
+    //    that layer: plans built once per run, each MAP iteration one
+    //    fused Pipeline region — same labels as every other MAP
+    //    engine, bit for bit.
+    let seg = dpp_pmrf::overseg::oversegment(
+        &bk, &dataset.input.slice(0), &cfg.overseg,
+    );
+    let model = dpp_pmrf::mrf::build_model(&bk, &seg);
+    let planned = DppEngine::with_mode(bk.clone(), PairMode::Planned);
+    let res = planned.run(&model, &MrfConfig::default());
+    println!("planned engine  : {} -> {} EM / {} MAP iters, energy {:.1}",
+             planned.name(), res.em_iters, res.map_iters, res.energy);
     Ok(())
 }

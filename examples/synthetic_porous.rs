@@ -1,4 +1,4 @@
-//! END-TO-END driver (EXPERIMENTS.md §E2E): the full system on a real
+//! END-TO-END driver: the full system on a real
 //! small workload — a 256x256x4 corrupted porous-media stack — run
 //! through **all four engines** (serial, reference, dpp, xla), proving
 //! every layer composes: image substrate -> oversegmentation -> region

@@ -1,0 +1,131 @@
+//! Ablation: fused DPP pipelines + static-key segment caching vs the
+//! paper's per-iteration sort (ISSUE 2 tentpole; §4.3.2–4.3.3 names
+//! SortByKey + ReduceByKey as the limiters this layer attacks).
+//!
+//! (a) Primitive level, on identical inputs — the §3.2.2 pairing
+//!     pattern (every key appears twice, unsorted). Per "iteration":
+//!       * `unfused`: SortByKey(keys, iota) + Gather + ReduceByKey —
+//!         exactly what the paper re-runs every MAP iteration;
+//!       * `fused`:   `SegmentPlan::reduce_segments` against a plan
+//!         built once — the sort amortized out of the loop.
+//!     The one-time plan build is reported as its own row so the
+//!     amortization claim is checkable: build ≈ one unfused sort.
+//!
+//! (b) Engine level, on identical models: `PairMode::Paper` (unfused)
+//!     vs `PairMode::Planned` (plans cached once per run + the whole
+//!     MAP iteration in one `Pipeline` region) vs `PairMode::Fused`
+//!     (hand-fused L1 layout). All three are bitwise-identical in
+//!     results, so the delta is pure execution structure.
+
+use dpp_pmrf::bench_support::{prepare_models, workload, Report, Scale};
+use dpp_pmrf::config::DatasetKind;
+use dpp_pmrf::dpp::{self, Backend, SegmentPlan};
+use dpp_pmrf::mrf::dpp::{DppEngine, PairMode};
+use dpp_pmrf::mrf::Engine;
+use dpp_pmrf::pool::Pool;
+use dpp_pmrf::util::{measure, Pcg32};
+
+fn main() {
+    let scale = Scale::from_env();
+    let threads = dpp_pmrf::pool::available_threads();
+    let pool = Pool::new(threads);
+    let mut report = Report::new("ablation_fusion");
+
+    // ---- (a) primitive level: static keys, fresh values every
+    // iteration — the hot-loop shape of every engine.
+    let n = 1 << 20;
+    let mut rng = Pcg32::seeded(99);
+    // Pairing-style keys: element ids replicated twice, unsorted.
+    let keys: Vec<u64> = (0..n).map(|i| (i % (n / 2)) as u64).collect();
+    let vals: Vec<f32> =
+        (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+
+    for (name, bk) in [
+        ("serial", Backend::Serial),
+        ("threaded", Backend::threaded(pool.clone())),
+    ] {
+        let reps = scale.reps.max(3);
+
+        // Unfused: the per-iteration sort the paper pays.
+        let stats = measure(1, reps, || {
+            let mut k = keys.clone();
+            let mut idx: Vec<u32> = (0..n as u32).collect();
+            dpp::sort_by_key(&bk, &mut k, &mut idx);
+            let sorted_vals = dpp::gather(&bk, &vals, &idx);
+            let (_, sums) =
+                dpp::reduce_by_key(&bk, &k, &sorted_vals, 0.0f32,
+                                   |a, b| a + b);
+            assert_eq!(sums.len(), n / 2);
+        });
+        report.add(
+            vec![
+                ("level", "primitive".to_string()),
+                ("variant", format!("unfused-{name}")),
+                ("threads", bk.threads().to_string()),
+            ],
+            stats,
+        );
+
+        // One-time plan build (the amortized cost).
+        let stats = measure(1, reps, || {
+            let plan = SegmentPlan::build(&bk, &keys);
+            assert_eq!(plan.num_segments(), n / 2);
+        });
+        report.add(
+            vec![
+                ("level", "primitive".to_string()),
+                ("variant", format!("plan-build-{name}")),
+                ("threads", bk.threads().to_string()),
+            ],
+            stats,
+        );
+
+        // Fused: every subsequent iteration is sort-free.
+        let plan = SegmentPlan::build(&bk, &keys);
+        let stats = measure(1, reps, || {
+            let sums =
+                plan.reduce_segments(&bk, &vals, 0.0f32, |a, b| a + b);
+            assert_eq!(sums.len(), n / 2);
+        });
+        report.add(
+            vec![
+                ("level", "primitive".to_string()),
+                ("variant", format!("fused-{name}")),
+                ("threads", bk.threads().to_string()),
+            ],
+            stats,
+        );
+    }
+
+    // ---- (b) engine level: identical models, identical results,
+    // different execution structure. Per-iteration time = total /
+    // (em_iters * map_iters), fixed by the workload config.
+    let (ds, cfg) = workload(DatasetKind::Experimental, scale);
+    let models = prepare_models(&ds, &cfg);
+    let iters = (cfg.mrf.em_iters * cfg.mrf.map_iters) as f64;
+    for mode in [PairMode::Paper, PairMode::Planned, PairMode::Fused] {
+        let engine =
+            DppEngine::with_mode(Backend::threaded(pool.clone()), mode);
+        let stats = measure(scale.warmup, scale.reps, || {
+            for m in &models {
+                engine.run(m, &cfg.mrf);
+            }
+        });
+        println!(
+            "engine {:<12} {:>9.3} ms/run  {:>9.3} ms/map-iter",
+            engine.name(),
+            stats.mean * 1e3,
+            stats.mean * 1e3 / iters
+        );
+        report.add(
+            vec![
+                ("level", "engine".to_string()),
+                ("variant", engine.name().to_string()),
+                ("threads", threads.to_string()),
+                ("map_iters", (iters as usize).to_string()),
+            ],
+            stats,
+        );
+    }
+    report.finish();
+}

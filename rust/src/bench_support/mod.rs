@@ -4,7 +4,7 @@
 //!
 //! Scale is controlled by `DPP_PMRF_BENCH_SCALE`:
 //!   * `smoke` — tiny, seconds (CI / `make bench` default sanity)
-//!   * `paper` — the shapes used for EXPERIMENTS.md numbers
+//!   * `paper` — the shapes used for the README's reported numbers
 //! or any explicit `<width>x<height>x<slices>` triple.
 
 use std::io::Write;

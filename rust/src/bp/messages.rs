@@ -15,7 +15,7 @@
 //! the same objective the MAP engines report, up to the (rare)
 //! same-hood pairs that are not graph-adjacent.
 
-use crate::dpp::{self, Backend};
+use crate::dpp::{self, Backend, SegmentPlan};
 use crate::mrf::{Hoods, MrfModel};
 
 /// Static per-directed-edge structure for BP over a [`MrfModel`].
@@ -27,6 +27,12 @@ pub struct BpGraph {
     pub rev: Vec<u32>,
     /// Directed edge -> Potts disagreement weight (symmetric).
     pub weight: Vec<f32>,
+    /// Per-vertex edge segments, cached once from the CSR offsets
+    /// ("segments for free": the adjacency rows *are* the sorted
+    /// segmentation, empty rows included). The belief sweep's
+    /// Gather + segmented reduce runs over this plan every sweep with
+    /// no sort and no key compare.
+    pub plan: SegmentPlan,
 }
 
 impl BpGraph {
@@ -67,7 +73,12 @@ impl BpGraph {
             2.0 * beta * co_occurrence(h, src_ref[e], neighbors[e]) as f32
         });
 
-        BpGraph { src, rev, weight }
+        BpGraph {
+            src,
+            rev,
+            weight,
+            plan: SegmentPlan::from_csr_offsets(offsets),
+        }
     }
 }
 
@@ -127,6 +138,16 @@ mod tests {
                 assert_eq!(g.src[e] as usize, v);
             }
         }
+    }
+
+    #[test]
+    fn plan_segments_are_the_csr_rows() {
+        let model = small_model(14);
+        let g = BpGraph::build(&Backend::Serial, &model, 0.5);
+        assert_eq!(g.plan.offsets(), &model.graph.offsets[..]);
+        assert_eq!(g.plan.num_segments(), model.graph.num_vertices());
+        assert_eq!(g.plan.len(), g.num_edges());
+        assert_eq!(g.plan.permutation(), None, "CSR rows: identity");
     }
 
     #[test]

@@ -20,6 +20,12 @@
 //!    high-residual messages each round converges in far fewer message
 //!    updates than the synchronous schedule).
 //!
+//! All of it fused: the vertex segments come from the
+//! [`crate::dpp::SegmentPlan`] cached in [`messages::BpGraph`] (CSR
+//! rows — no per-sweep sort or key compare), and one sweep runs as a
+//! single [`crate::dpp::Pipeline`] region — phase barriers between the
+//! passes instead of one pool fork-join per pass.
+//!
 //! Modules: [`messages`] (edge layout + reverse index + Potts weights),
 //! [`sweep`] (synchronous and residual-scheduled sweeps on a
 //! [`crate::dpp::Backend`]), [`serial`] (plain-loop oracle for tests),

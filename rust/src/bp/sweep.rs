@@ -1,6 +1,12 @@
-//! BP sweeps on a [`Backend`]: beliefs (gather + segmented reduce),
-//! candidate messages (map), residual max (exact reduce), and the
-//! frontier commit (map) — see the module docs of [`crate::bp`].
+//! BP sweeps on a [`Backend`]: beliefs (gather + segmented reduce over
+//! the cached [`crate::dpp::SegmentPlan`] in [`BpGraph`]), candidate
+//! messages (map), residual max (exact reduce), and the frontier
+//! commit (map) — see the module docs of [`crate::bp`].
+//!
+//! One sweep executes as **one** [`Pipeline`] region: the four passes
+//! are stages separated by phase barriers instead of four pool
+//! fork-joins, with the serial residual fold as a one-invocation stage
+//! between them. Per-stage time still lands in [`crate::dpp::timing`].
 //!
 //! Deterministic by construction: per-vertex and per-edge loops run in
 //! index order inside each chunk, chunks write disjoint slots, and the
@@ -8,7 +14,7 @@
 //! serial oracle in [`super::serial`] reproduces every pass bitwise.
 
 use crate::dpp::core::SharedSlice;
-use crate::dpp::Backend;
+use crate::dpp::{Backend, Pipeline};
 use crate::mrf::{energy, MrfModel, Params};
 
 use super::messages::BpGraph;
@@ -90,125 +96,49 @@ pub fn unaries(bk: &Backend, model: &MrfModel, prm: &Params) -> Vec<f32> {
     out
 }
 
-/// Beliefs: per vertex, unary + sum of incoming messages (the messages
-/// at the reverse of the vertex's own CSR row — a Gather through `rev`
-/// reduced over the static vertex segments).
-fn beliefs(
-    bk: &Backend,
-    model: &MrfModel,
+/// Beliefs stage body over vertices `s..e`: unary + sum of incoming
+/// messages — a Gather through `rev` reduced over the static vertex
+/// segments cached in `g.plan` (empty segment = isolated vertex =
+/// plain unary). Reads `msg` and writes `belief` through windows so
+/// sweep and decode can share it inside a [`Pipeline`].
+fn beliefs_chunk(
     g: &BpGraph,
     unary: &[f32],
-    msg: &[f32],
-    belief: &mut [f32],
+    msg: &SharedSlice<f32>,
+    belief: &SharedSlice<f32>,
+    s: usize,
+    e: usize,
 ) {
-    let offsets = &model.graph.offsets;
-    let nv = model.num_vertices();
-    let win = SharedSlice::new(belief);
-    let rev = &g.rev;
-    bk.for_chunks(nv, |s, e| {
-        for v in s..e {
-            let (rs, re) = (offsets[v] as usize, offsets[v + 1] as usize);
-            let mut b0 = unary[2 * v];
-            let mut b1 = unary[2 * v + 1];
-            for ed in rs..re {
-                let r = rev[ed] as usize;
-                b0 += msg[2 * r];
-                b1 += msg[2 * r + 1];
-            }
-            unsafe {
-                win.write(2 * v, b0);
-                win.write(2 * v + 1, b1);
-            }
+    for v in s..e {
+        let (rs, re) = g.plan.segment_bounds(v);
+        let mut b0 = unary[2 * v];
+        let mut b1 = unary[2 * v + 1];
+        for ed in rs..re {
+            let r = g.rev[ed] as usize;
+            b0 += unsafe { msg.read(2 * r) };
+            b1 += unsafe { msg.read(2 * r + 1) };
         }
-    });
-}
-
-/// Candidate messages for every directed edge: min-sum Potts update
-/// from the source belief minus the reverse message, normalized,
-/// damped; fills `cand`/`resid` and returns the exact max residual.
-fn candidates(
-    bk: &Backend,
-    g: &BpGraph,
-    belief: &[f32],
-    msg: &[f32],
-    damping: f32,
-    cand: &mut [f32],
-    resid: &mut [f32],
-) -> f32 {
-    let ne = g.num_edges();
-    let bounds = bk.chunk_bounds(ne);
-    let mut partial_max = vec![0.0f32; bounds.len()];
-    {
-        let wc = SharedSlice::new(cand);
-        let wr = SharedSlice::new(resid);
-        let wm = SharedSlice::new(&mut partial_max);
-        let bounds_ref = &bounds;
-        bk.for_chunk_ids(bounds_ref.len(), |c| {
-            let (s, e) = bounds_ref[c];
-            let mut mx = 0.0f32;
-            for ed in s..e {
-                let u = g.src[ed] as usize;
-                let r = g.rev[ed] as usize;
-                let h0 = belief[2 * u] - msg[2 * r];
-                let h1 = belief[2 * u + 1] - msg[2 * r + 1];
-                let w = g.weight[ed];
-                let mut c0 = h0.min(h1 + w);
-                let mut c1 = h1.min(h0 + w);
-                let norm = c0.min(c1);
-                c0 -= norm;
-                c1 -= norm;
-                let n0 = damping * msg[2 * ed] + (1.0 - damping) * c0;
-                let n1 = damping * msg[2 * ed + 1] + (1.0 - damping) * c1;
-                let rr = (n0 - msg[2 * ed])
-                    .abs()
-                    .max((n1 - msg[2 * ed + 1]).abs());
-                unsafe {
-                    wc.write(2 * ed, n0);
-                    wc.write(2 * ed + 1, n1);
-                    wr.write(ed, rr);
-                }
-                mx = mx.max(rr);
-            }
-            unsafe { wm.write(c, mx) };
-        });
+        unsafe {
+            belief.write(2 * v, b0);
+            belief.write(2 * v + 1, b1);
+        }
     }
-    partial_max.into_iter().fold(0.0f32, f32::max)
 }
 
-/// Commit candidates whose residual reaches `tau`; returns how many.
-fn commit(
-    bk: &Backend,
-    msg: &mut [f32],
-    cand: &[f32],
-    resid: &[f32],
-    tau: f32,
-) -> usize {
-    let ne = resid.len();
-    let bounds = bk.chunk_bounds(ne);
-    let mut partial = vec![0usize; bounds.len()];
-    {
-        let wm = SharedSlice::new(msg);
-        let wp = SharedSlice::new(&mut partial);
-        let bounds_ref = &bounds;
-        bk.for_chunk_ids(bounds_ref.len(), |c| {
-            let (s, e) = bounds_ref[c];
-            let mut cnt = 0usize;
-            for ed in s..e {
-                if resid[ed] >= tau {
-                    unsafe {
-                        wm.write(2 * ed, cand[2 * ed]);
-                        wm.write(2 * ed + 1, cand[2 * ed + 1]);
-                    }
-                    cnt += 1;
-                }
-            }
-            unsafe { wp.write(c, cnt) };
-        });
+/// Chunk grain for the edge-domain stages. Chunk starts are multiples
+/// of the grain, so `start / grain` indexes the per-chunk partial
+/// arrays no matter which worker claims the chunk (under Serial the
+/// single full-range chunk lands in slot 0).
+fn edge_grain(bk: &Backend, ne: usize) -> usize {
+    match bk {
+        Backend::Serial => ne.max(1),
+        Backend::Threaded { grain, .. } => (*grain).max(1),
     }
-    partial.iter().sum()
 }
 
-/// One BP round under the configured schedule.
+/// One BP round under the configured schedule, executed as a single
+/// fused pipeline region: beliefs -> candidates (+ per-chunk residual
+/// maxima) -> serial residual fold + frontier threshold -> commit.
 pub fn sweep(
     bk: &Backend,
     model: &MrfModel,
@@ -217,17 +147,104 @@ pub fn sweep(
     st: &mut BpState,
     cfg: &BpConfig,
 ) -> SweepStats {
-    beliefs(bk, model, g, unary, &st.msg, &mut st.belief);
-    let max_residual = candidates(
-        bk, g, &st.belief, &st.msg, cfg.damping, &mut st.cand,
-        &mut st.resid,
-    );
-    let tau = match cfg.schedule {
-        BpSchedule::Synchronous => 0.0,
-        BpSchedule::Residual => cfg.frontier * max_residual,
-    };
-    let updated = commit(bk, &mut st.msg, &st.cand, &st.resid, tau);
-    SweepStats { max_residual, updated }
+    let nv = model.num_vertices();
+    let ne = g.num_edges();
+    let grain = edge_grain(bk, ne);
+    let slots = ne.div_ceil(grain).max(1);
+    let mut partial_max = vec![0.0f32; slots];
+    let mut partial_cnt = vec![0usize; slots];
+    // [max_residual, tau], published by the serial fold stage.
+    let mut scalars = vec![0.0f32; 2];
+    {
+        let w_msg = SharedSlice::new(&mut st.msg);
+        let w_cand = SharedSlice::new(&mut st.cand);
+        let w_resid = SharedSlice::new(&mut st.resid);
+        let w_belief = SharedSlice::new(&mut st.belief);
+        let w_pmax = SharedSlice::new(&mut partial_max);
+        let w_pcnt = SharedSlice::new(&mut partial_cnt);
+        let w_scal = SharedSlice::new(&mut scalars);
+        let damping = cfg.damping;
+        let schedule = cfg.schedule;
+        let frontier = cfg.frontier;
+        Pipeline::new()
+            // (1) Beliefs: Gather(rev) + segmented reduce per vertex.
+            .stage("Gather", nv, |s, e| {
+                beliefs_chunk(g, unary, &w_msg, &w_belief, s, e);
+            })
+            // (2) Candidates: min-sum Potts update, normalization,
+            // damping, per-message residuals + per-chunk max.
+            .stage_with_grain("Map", ne, grain, |s, e| {
+                let mut mx = 0.0f32;
+                for ed in s..e {
+                    let u = g.src[ed] as usize;
+                    let r = g.rev[ed] as usize;
+                    let (m0, m1) = unsafe {
+                        (w_msg.read(2 * ed), w_msg.read(2 * ed + 1))
+                    };
+                    let h0 = unsafe { w_belief.read(2 * u) }
+                        - unsafe { w_msg.read(2 * r) };
+                    let h1 = unsafe { w_belief.read(2 * u + 1) }
+                        - unsafe { w_msg.read(2 * r + 1) };
+                    let w = g.weight[ed];
+                    let mut c0 = h0.min(h1 + w);
+                    let mut c1 = h1.min(h0 + w);
+                    let norm = c0.min(c1);
+                    c0 -= norm;
+                    c1 -= norm;
+                    let n0 = damping * m0 + (1.0 - damping) * c0;
+                    let n1 = damping * m1 + (1.0 - damping) * c1;
+                    let rr = (n0 - m0).abs().max((n1 - m1).abs());
+                    unsafe {
+                        w_cand.write(2 * ed, n0);
+                        w_cand.write(2 * ed + 1, n1);
+                        w_resid.write(ed, rr);
+                    }
+                    mx = mx.max(rr);
+                }
+                let slot = s / grain;
+                let old = unsafe { w_pmax.read(slot) };
+                unsafe { w_pmax.write(slot, old.max(mx)) };
+            })
+            // (3) Exact Reduce<Max> over the chunk maxima + the
+            // frontier threshold, on one worker between barriers.
+            .serial_stage("Reduce", || {
+                let mut mx = 0.0f32;
+                for i in 0..slots {
+                    mx = mx.max(unsafe { w_pmax.read(i) });
+                }
+                let tau = match schedule {
+                    BpSchedule::Synchronous => 0.0,
+                    BpSchedule::Residual => frontier * mx,
+                };
+                unsafe {
+                    w_scal.write(0, mx);
+                    w_scal.write(1, tau);
+                }
+            })
+            // (4) Commit the frontier (residual >= tau).
+            .stage_with_grain("Scatter", ne, grain, |s, e| {
+                let tau = unsafe { w_scal.read(1) };
+                let mut cnt = 0usize;
+                for ed in s..e {
+                    if unsafe { w_resid.read(ed) } >= tau {
+                        unsafe {
+                            w_msg.write(2 * ed, w_cand.read(2 * ed));
+                            w_msg
+                                .write(2 * ed + 1, w_cand.read(2 * ed + 1));
+                        }
+                        cnt += 1;
+                    }
+                }
+                let slot = s / grain;
+                let old = unsafe { w_pcnt.read(slot) };
+                unsafe { w_pcnt.write(slot, old + cnt) };
+            })
+            .run(bk);
+    }
+    SweepStats {
+        max_residual: scalars[0],
+        updated: partial_cnt.iter().sum(),
+    }
 }
 
 /// Sweep until the max residual drops below `cfg.tol` (or
@@ -256,7 +273,8 @@ pub fn run(
 }
 
 /// Decode labels from the current messages: recompute beliefs, take
-/// the per-vertex argmin with the engines' tie-break (ties -> 0).
+/// the per-vertex argmin with the engines' tie-break (ties -> 0) —
+/// two pipeline stages in one region.
 pub fn decode(
     bk: &Backend,
     model: &MrfModel,
@@ -265,16 +283,23 @@ pub fn decode(
     st: &mut BpState,
     labels: &mut [u8],
 ) {
-    beliefs(bk, model, g, unary, &st.msg, &mut st.belief);
-    let win = SharedSlice::new(labels);
-    let belief = &st.belief;
-    bk.for_chunks(model.num_vertices(), |s, e| {
-        for v in s..e {
-            unsafe {
-                win.write(v, u8::from(belief[2 * v + 1] < belief[2 * v]));
+    let nv = model.num_vertices();
+    let w_msg = SharedSlice::new(&mut st.msg);
+    let w_belief = SharedSlice::new(&mut st.belief);
+    let w_lab = SharedSlice::new(labels);
+    Pipeline::new()
+        .stage("Gather", nv, |s, e| {
+            beliefs_chunk(g, unary, &w_msg, &w_belief, s, e);
+        })
+        .stage("Map", nv, |s, e| {
+            for v in s..e {
+                let (b0, b1) = unsafe {
+                    (w_belief.read(2 * v), w_belief.read(2 * v + 1))
+                };
+                unsafe { w_lab.write(v, u8::from(b1 < b0)) };
             }
-        }
-    });
+        })
+        .run(bk);
 }
 
 #[cfg(test)]

@@ -71,7 +71,7 @@ impl RunReport {
         self.slices.iter().map(|s| s.map_iters).sum()
     }
 
-    /// JSON rendering for EXPERIMENTS.md / bench reports.
+    /// JSON rendering for the README's tables / bench reports.
     pub fn to_json(&self) -> crate::json::Value {
         use crate::json::Value;
         let mut fields = vec![

@@ -10,29 +10,119 @@
 use super::timing::timed;
 use super::Backend;
 
-/// Shared mutable output window for disjoint parallel writes.
+/// Shared mutable window over a slice for disjoint parallel writes —
+/// the raw building block every primitive (and every
+/// [`crate::dpp::Pipeline`] stage) writes its output through.
 ///
-/// Safety contract: every index is written by at most one chunk. All
-/// call sites in this module partition indices disjointly.
-pub(crate) struct SharedSlice<T>(*mut T, usize);
+/// Safety contract: within one parallel pass, every index is written
+/// by at most one chunk, and a given index is never read and written
+/// concurrently. Reads of an index written in an *earlier* pipeline
+/// stage are fine — the phase barrier orders them.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::SharedSlice;
+///
+/// let mut out = vec![0u32; 4];
+/// {
+///     let win = SharedSlice::new(&mut out);
+///     // Chunks write disjoint indices (here: one "chunk").
+///     for i in 0..4 {
+///         unsafe { win.write(i, (i * i) as u32) };
+///     }
+///     assert_eq!(unsafe { win.read(3) }, 9);
+/// }
+/// assert_eq!(out, vec![0, 1, 4, 9]);
+/// ```
+pub struct SharedSlice<T>(*mut T, usize);
 
 unsafe impl<T: Send> Send for SharedSlice<T> {}
 unsafe impl<T: Send> Sync for SharedSlice<T> {}
 
 impl<T> SharedSlice<T> {
-    pub(crate) fn new(s: &mut [T]) -> Self {
+    /// Capture a window over `s`. The window borrows nothing: it is a
+    /// raw pointer + length, so the caller is responsible for keeping
+    /// the underlying buffer alive and un-moved while the window is
+    /// used (trivially true for the scoped passes in this crate).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::SharedSlice;
+    /// let mut buf = vec![0u8; 2];
+    /// let win = SharedSlice::new(&mut buf);
+    /// unsafe { win.write(1, 7) };
+    /// assert_eq!(buf[1], 7);
+    /// ```
+    pub fn new(s: &mut [T]) -> Self {
         SharedSlice(s.as_mut_ptr(), s.len())
     }
 
-    /// Write `v` at `i`. Caller guarantees disjointness across threads.
+    /// Number of elements in the window.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::SharedSlice;
+    /// let mut buf = vec![0u32; 5];
+    /// assert_eq!(SharedSlice::new(&mut buf).len(), 5);
+    /// ```
+    pub fn len(&self) -> usize {
+        self.1
+    }
+
+    /// Whether the window is empty.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::SharedSlice;
+    /// let mut buf: Vec<u32> = Vec::new();
+    /// assert!(SharedSlice::new(&mut buf).is_empty());
+    /// ```
+    pub fn is_empty(&self) -> bool {
+        self.1 == 0
+    }
+
+    /// Write `v` at `i`.
+    ///
+    /// # Safety
+    ///
+    /// `i` must be written by at most one chunk of the current pass,
+    /// and must not be read concurrently within the same pass.
     #[inline]
-    pub(crate) unsafe fn write(&self, i: usize, v: T) {
+    pub unsafe fn write(&self, i: usize, v: T) {
         debug_assert!(i < self.1);
         unsafe { *self.0.add(i) = v }
+    }
+
+    /// Read index `i`.
+    ///
+    /// # Safety
+    ///
+    /// No chunk of the current pass may write `i` concurrently. Used
+    /// by pipeline stages to read buffers a *previous* stage wrote
+    /// (the phase barrier makes those writes visible).
+    #[inline]
+    pub unsafe fn read(&self, i: usize) -> T
+    where
+        T: Copy,
+    {
+        debug_assert!(i < self.1);
+        unsafe { *self.0.add(i) }
     }
 }
 
 /// Map: `out[i] = f(&input[i])`.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend};
+/// let ys = dpp::map(&Backend::Serial, &[1u32, 2, 3], |x| x * 10);
+/// assert_eq!(ys, vec![10, 20, 30]);
+/// ```
 pub fn map<T, U, F>(bk: &Backend, input: &[T], f: F) -> Vec<U>
 where
     T: Sync,
@@ -52,6 +142,14 @@ where
 }
 
 /// Map with the element index: `out[i] = f(i)`.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend};
+/// let ys = dpp::map_indexed(&Backend::Serial, 4, |i| i as u32 * 2);
+/// assert_eq!(ys, vec![0, 2, 4, 6]);
+/// ```
 pub fn map_indexed<U, F>(bk: &Backend, n: usize, f: F) -> Vec<U>
 where
     U: Copy + Default + Send,
@@ -70,6 +168,15 @@ where
 }
 
 /// In-place Map over a mutable slice: `data[i] = f(i, data[i])`.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend};
+/// let mut xs = vec![5u32, 6, 7];
+/// dpp::map_in_place(&Backend::Serial, &mut xs, |i, x| x + i as u32);
+/// assert_eq!(xs, vec![5, 7, 9]);
+/// ```
 pub fn map_in_place<T, F>(bk: &Backend, data: &mut [T], f: F)
 where
     T: Copy + Send + Sync,
@@ -101,6 +208,15 @@ impl<T: Copy> SharedConst<T> {
 }
 
 /// Zip-map: `out[i] = f(&a[i], &b[i])`.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend};
+/// let s = dpp::zip_map(&Backend::Serial, &[1u32, 2], &[10u32, 20],
+///                      |a, b| a + b);
+/// assert_eq!(s, vec![11, 22]);
+/// ```
 pub fn zip_map<A, B, U, F>(bk: &Backend, a: &[A], b: &[B], f: F) -> Vec<U>
 where
     A: Sync,
@@ -122,6 +238,13 @@ where
 }
 
 /// Counting sequence `0..n` (VTK-m's ArrayHandleCounting materialized).
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend};
+/// assert_eq!(dpp::iota(&Backend::Serial, 3), vec![0, 1, 2]);
+/// ```
 pub fn iota(bk: &Backend, n: usize) -> Vec<u32> {
     map_indexed(bk, n, |i| i as u32)
 }
@@ -130,6 +253,15 @@ pub fn iota(bk: &Backend, n: usize) -> Vec<u32> {
 ///
 /// Floating-point note: association order is chunked under the
 /// Threaded backend.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend};
+/// let xs: Vec<u64> = (1..=100).collect();
+/// assert_eq!(dpp::reduce(&Backend::Serial, &xs, 0, |a, b| a + b),
+///            5050);
+/// ```
 pub fn reduce<T, F>(bk: &Backend, input: &[T], identity: T, op: F) -> T
 where
     T: Copy + Default + Send + Sync,
@@ -155,6 +287,17 @@ where
 }
 
 /// Exclusive scan (prefix "sum" with `op`); returns (scanned, total).
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend};
+/// let (ex, total) =
+///     dpp::scan_exclusive(&Backend::Serial, &[1u32, 2, 3], 0,
+///                         |a, b| a + b);
+/// assert_eq!(ex, vec![0, 1, 3]);
+/// assert_eq!(total, 6);
+/// ```
 pub fn scan_exclusive<T, F>(
     bk: &Backend,
     input: &[T],
@@ -210,6 +353,15 @@ where
 }
 
 /// Inclusive scan; returns the scanned array (last element = total).
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend};
+/// let inc = dpp::scan_inclusive(&Backend::Serial, &[1u32, 2, 3], 0,
+///                               |a, b| a + b);
+/// assert_eq!(inc, vec![1, 3, 6]);
+/// ```
 pub fn scan_inclusive<T, F>(bk: &Backend, input: &[T], identity: T, op: F)
     -> Vec<T>
 where
@@ -257,6 +409,14 @@ where
 }
 
 /// Gather: `out[i] = src[idx[i]]`.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend};
+/// let g = dpp::gather(&Backend::Serial, &[10u32, 20, 30], &[2, 0]);
+/// assert_eq!(g, vec![30, 10]);
+/// ```
 pub fn gather<T>(bk: &Backend, src: &[T], idx: &[u32]) -> Vec<T>
 where
     T: Copy + Default + Send + Sync,
@@ -277,6 +437,15 @@ where
 ///
 /// Contract (same as VTK-m's ScatterPermutation): `idx` contains no
 /// duplicates — each output location is written at most once.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend};
+/// let mut out = vec![0u32; 3];
+/// dpp::scatter(&Backend::Serial, &[7u32, 8], &[2, 0], &mut out);
+/// assert_eq!(out, vec![8, 0, 7]);
+/// ```
 pub fn scatter<T>(bk: &Backend, src: &[T], idx: &[u32], out: &mut [T])
 where
     T: Copy + Send + Sync,

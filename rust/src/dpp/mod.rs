@@ -16,16 +16,34 @@
 //! AOT-compiled program (see `rust/src/mrf/xla.rs`) rather than one
 //! primitive at a time.
 //!
-//! Every primitive is instrumented through [`timing`] so benches can
-//! reproduce the paper's per-DPP breakdown (SortByKey + ReduceByKey
-//! dominating at scale, §4.3.2–4.3.3).
+//! Two layers sit on top of the one-call-per-primitive vocabulary and
+//! attack the paper's two measured scalability limiters
+//! (§4.3.2–4.3.3):
+//!
+//! * [`SegmentPlan`] (in [`segmented`]) — amortizes **SortByKey**: the
+//!   hot loops reduce over *static* keys (hood membership, vertex
+//!   groupings, CSR edges), so the sort is paid once at plan build and
+//!   every per-iteration `reduce_segments` runs sort-free,
+//!   bitwise-identical to the unfused sort + reduce pair.
+//! * [`Pipeline`] (in [`pipeline`]) — amortizes the **fork-join
+//!   barrier**: a whole iteration's stages execute inside one
+//!   persistent pool region ([`crate::pool::Pool::region`]) with a
+//!   lightweight phase barrier between stages.
+//!
+//! Every primitive and pipeline stage is instrumented through
+//! [`timing`] so benches can reproduce the paper's per-DPP breakdown
+//! (SortByKey + ReduceByKey dominating at scale, §4.3.2–4.3.3);
+//! `benches/ablation_fusion.rs` quantifies what the plan + pipeline
+//! layer saves.
 
 pub mod core;
+pub mod pipeline;
 pub mod segmented;
 pub mod sort;
 pub mod timing;
 
 pub use self::core::*;
+pub use pipeline::*;
 pub use segmented::*;
 pub use sort::*;
 

@@ -1,0 +1,475 @@
+//! Fused DPP pipelines: a sequence of Map/Gather/SegmentedReduce
+//! stages executed inside **one** persistent pool parallel region.
+//!
+//! The paper pays one full fork-join barrier per primitive (§4.1.3's
+//! TBB dispatch; our [`crate::pool::Pool::parallel_for`] is the same
+//! shape). For the EM/MAP/BP hot loops — a handful of short passes per
+//! iteration over static structure — that dispatch overhead is pure
+//! loss. A [`Pipeline`] instead enters the pool's persistent region
+//! ([`crate::pool::Pool::region`]) once: every worker spins through
+//! the stage list, claiming chunks from a shared atomic cursor, and
+//! crosses a lightweight [`crate::pool::PhaseBarrier`] between stages.
+//! Stage *k*'s writes are visible to stage *k + 1* through the
+//! barrier's release/acquire ordering.
+//!
+//! Per-stage wall time still flows into [`crate::dpp::timing`] under
+//! the stage's canonical primitive name, so
+//! `benches/per_dpp_breakdown.rs` keeps reproducing the paper's
+//! per-DPP breakdown for pipelined engines.
+//!
+//! Rules for stage closures:
+//!
+//! * a stage must write only through [`crate::dpp::SharedSlice`]-style
+//!   disjoint windows and read only stage-private inputs or buffers
+//!   written by *earlier* stages;
+//! * a stage must not submit work to the pool (the region holds the
+//!   pool for its whole duration) — plain loops only.
+//!
+//! Determinism: chunk *assignment* to workers is scheduling-dependent,
+//! but the chunk set is fixed (`0, g, 2g, ...` for the stage grain
+//! `g`), every index is processed exactly once, and all call sites
+//! either write independent slots or combine chunk results with exact
+//! operations — so pipelined passes produce bitwise-identical results
+//! across backends and thread counts whenever their unfused
+//! counterparts do.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Instant;
+
+use crate::pool::Pool;
+
+use super::timing;
+use super::Backend;
+
+/// One stage of a [`Pipeline`].
+struct Stage<'p> {
+    /// Canonical primitive name for [`crate::dpp::timing`].
+    name: &'static str,
+    /// Iteration-domain size.
+    n: usize,
+    /// Explicit chunk grain; `None` = derived from the backend.
+    grain: Option<usize>,
+    f: Box<dyn Fn(usize, usize) + Sync + 'p>,
+}
+
+/// A fused sequence of data-parallel stages, executed with one pool
+/// entry and one phase barrier per stage boundary instead of one
+/// fork-join per primitive.
+///
+/// Build with the consuming [`Pipeline::stage`] chain, then call
+/// [`Pipeline::run`]. Under [`Backend::Serial`] the stages simply run
+/// back-to-back on the calling thread (same results, no threads).
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{Backend, Pipeline, SharedSlice};
+///
+/// let xs: Vec<u32> = (0..1000).collect();
+/// let mut doubled = vec![0u32; 1000];
+/// let mut total = vec![0u64; 1];
+/// let wd = SharedSlice::new(&mut doubled);
+/// let wt = SharedSlice::new(&mut total);
+/// Pipeline::new()
+///     // Stage 1 (Map): doubled[i] = 2 * xs[i].
+///     .stage("Map", xs.len(), |s, e| {
+///         for i in s..e {
+///             unsafe { wd.write(i, 2 * xs[i]) };
+///         }
+///     })
+///     // Stage 2 (Reduce, serial tail): reads what stage 1 wrote —
+///     // the phase barrier between stages makes it visible.
+///     .serial_stage("Reduce", || {
+///         let mut acc = 0u64;
+///         for i in 0..1000 {
+///             acc += u64::from(unsafe { wd.read(i) });
+///         }
+///         unsafe { wt.write(0, acc) };
+///     })
+///     .run(&Backend::Serial);
+/// assert_eq!(total[0], 2 * 999 * 1000 / 2);
+/// ```
+#[derive(Default)]
+pub struct Pipeline<'p> {
+    stages: Vec<Stage<'p>>,
+}
+
+impl<'p> Pipeline<'p> {
+    /// Empty pipeline; add work with [`Pipeline::stage`].
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::Pipeline;
+    /// assert_eq!(Pipeline::new().num_stages(), 0);
+    /// ```
+    pub fn new() -> Pipeline<'p> {
+        Pipeline { stages: Vec::new() }
+    }
+
+    /// Append a stage: `f(start, end)` over disjoint chunks covering
+    /// `0..n`, with the chunk grain derived from the backend at run
+    /// time. `name` is the canonical primitive name the stage's wall
+    /// time is recorded under (`"Map"`, `"Gather"`, `"ReduceByKey"`,
+    /// ...), keeping the per-DPP breakdown comparable between fused
+    /// and unfused execution.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::{Backend, Pipeline, SharedSlice};
+    /// let mut out = vec![0u32; 8];
+    /// let w = SharedSlice::new(&mut out);
+    /// Pipeline::new()
+    ///     .stage("Map", 8, |s, e| {
+    ///         for i in s..e {
+    ///             unsafe { w.write(i, i as u32) };
+    ///         }
+    ///     })
+    ///     .run(&Backend::Serial);
+    /// assert_eq!(out[7], 7);
+    /// ```
+    pub fn stage<F>(self, name: &'static str, n: usize, f: F) -> Self
+    where
+        F: Fn(usize, usize) + Sync + 'p,
+    {
+        self.push(name, n, None, f)
+    }
+
+    /// [`Pipeline::stage`] with an explicit chunk grain. Use when the
+    /// stage keeps per-chunk partials: chunk starts are then exactly
+    /// the multiples of `grain`, so `start / grain` is a stable slot
+    /// index into a `ceil(n / grain)`-sized partial array regardless
+    /// of which worker claims the chunk.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::{Backend, Pipeline, SharedSlice};
+    /// let n = 10usize;
+    /// let grain = 4usize;
+    /// let mut partial = vec![0u32; n.div_ceil(grain)];
+    /// let w = SharedSlice::new(&mut partial);
+    /// Pipeline::new()
+    ///     .stage_with_grain("Reduce", n, grain, |s, e| {
+    ///         let sum = (s..e).map(|i| i as u32).sum::<u32>();
+    ///         unsafe { w.write(s / grain, sum) };
+    ///     })
+    ///     .run(&Backend::Serial);
+    /// // Serial runs one chunk covering everything: slot 0.
+    /// assert_eq!(partial.iter().sum::<u32>(), 45);
+    /// ```
+    pub fn stage_with_grain<F>(
+        self,
+        name: &'static str,
+        n: usize,
+        grain: usize,
+        f: F,
+    ) -> Self
+    where
+        F: Fn(usize, usize) + Sync + 'p,
+    {
+        self.push(name, n, Some(grain.max(1)), f)
+    }
+
+    /// Append a single-invocation stage — the serial tail between
+    /// parallel stages (fold chunk partials, pick a threshold, ...).
+    /// Exactly one worker executes `f`; the barriers on both sides
+    /// order it against the neighbouring stages.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::{Backend, Pipeline, SharedSlice};
+    /// let mut flag = vec![0u8; 1];
+    /// let w = SharedSlice::new(&mut flag);
+    /// Pipeline::new()
+    ///     .serial_stage("Reduce", || unsafe { w.write(0, 1) })
+    ///     .run(&Backend::Serial);
+    /// assert_eq!(flag[0], 1);
+    /// ```
+    pub fn serial_stage<F>(self, name: &'static str, f: F) -> Self
+    where
+        F: Fn() + Sync + 'p,
+    {
+        self.push(name, 1, Some(1), move |_, _| f())
+    }
+
+    /// Number of stages added so far.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::Pipeline;
+    /// let p = Pipeline::new().stage("Map", 4, |_, _| {});
+    /// assert_eq!(p.num_stages(), 1);
+    /// ```
+    pub fn num_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    fn push<F>(
+        mut self,
+        name: &'static str,
+        n: usize,
+        grain: Option<usize>,
+        f: F,
+    ) -> Self
+    where
+        F: Fn(usize, usize) + Sync + 'p,
+    {
+        self.stages.push(Stage { name, n, grain, f: Box::new(f) });
+        self
+    }
+
+    /// Execute all stages in order under `bk`.
+    ///
+    /// [`Backend::Serial`]: stages run back-to-back on the calling
+    /// thread. [`Backend::Threaded`]: the pool enters one persistent
+    /// region; workers claim grain-sized chunks from a shared cursor
+    /// per stage and meet at a phase barrier between stages — no
+    /// fork-join until the whole pipeline is done. Per-stage wall time
+    /// (including barrier wait) is recorded in [`crate::dpp::timing`]
+    /// when profiling is enabled.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::{Backend, Pipeline, SharedSlice};
+    /// use dpp_pmrf::pool::Pool;
+    ///
+    /// let mut a = vec![0u32; 100];
+    /// let mut b = vec![0u32; 100];
+    /// let wa = SharedSlice::new(&mut a);
+    /// let wb = SharedSlice::new(&mut b);
+    /// let bk = Backend::threaded_with_grain(Pool::new(2), 16);
+    /// Pipeline::new()
+    ///     .stage("Map", 100, |s, e| {
+    ///         for i in s..e {
+    ///             unsafe { wa.write(i, i as u32) };
+    ///         }
+    ///     })
+    ///     .stage("Map", 100, |s, e| {
+    ///         for i in s..e {
+    ///             let v = unsafe { wa.read(i) };
+    ///             unsafe { wb.write(i, v + 1) };
+    ///         }
+    ///     })
+    ///     .run(&bk);
+    /// assert!(b.iter().enumerate().all(|(i, &v)| v == i as u32 + 1));
+    /// ```
+    pub fn run(&self, bk: &Backend) {
+        if self.stages.is_empty() {
+            return;
+        }
+        match bk {
+            Backend::Serial => {
+                for st in &self.stages {
+                    timing::timed(st.name, || {
+                        if st.n > 0 {
+                            (st.f)(0, st.n);
+                        }
+                    });
+                }
+            }
+            Backend::Threaded { pool, grain } => {
+                self.run_region(pool, *grain);
+            }
+        }
+    }
+
+    fn run_region(&self, pool: &Pool, backend_grain: usize) {
+        let workers = pool.threads();
+        let grains: Vec<usize> = self
+            .stages
+            .iter()
+            .map(|st| {
+                st.grain
+                    .unwrap_or_else(|| auto_grain(st.n, workers,
+                                                  backend_grain))
+            })
+            .collect();
+        let cursors: Vec<AtomicUsize> =
+            self.stages.iter().map(|_| AtomicUsize::new(0)).collect();
+        let profile = timing::enabled();
+        let nanos: Vec<AtomicU64> =
+            self.stages.iter().map(|_| AtomicU64::new(0)).collect();
+        pool.region(|w, barrier| {
+            for (si, st) in self.stages.iter().enumerate() {
+                let t0 = if profile && w == 0 {
+                    Some(Instant::now())
+                } else {
+                    None
+                };
+                let g = grains[si];
+                loop {
+                    let s = cursors[si].fetch_add(g, Ordering::Relaxed);
+                    if s >= st.n {
+                        break;
+                    }
+                    (st.f)(s, (s + g).min(st.n));
+                }
+                barrier.wait();
+                if let Some(t) = t0 {
+                    nanos[si].store(
+                        t.elapsed().as_nanos() as u64,
+                        Ordering::Relaxed,
+                    );
+                }
+            }
+        });
+        if profile {
+            for (si, st) in self.stages.iter().enumerate() {
+                timing::record(st.name, nanos[si].load(Ordering::Relaxed));
+            }
+        }
+    }
+}
+
+/// Stage grain when the caller did not pin one: enough chunks to load
+/// every worker several times over (dynamic balance), capped at the
+/// backend's configured grain (cache-friendly chunk cost).
+fn auto_grain(n: usize, workers: usize, backend_grain: usize) -> usize {
+    n.div_ceil(workers.max(1) * 8).clamp(1, backend_grain.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpp::core::SharedSlice;
+    use crate::pool::Pool;
+
+    fn backends() -> Vec<Backend> {
+        vec![
+            Backend::Serial,
+            Backend::threaded_with_grain(Pool::new(4), 64),
+        ]
+    }
+
+    #[test]
+    fn stages_chain_with_dependencies() {
+        for bk in backends() {
+            let n = 10_000usize;
+            let mut a = vec![0u64; n];
+            let mut b = vec![0u64; n];
+            let mut total = vec![0u64; 1];
+            let wa = SharedSlice::new(&mut a);
+            let wb = SharedSlice::new(&mut b);
+            let wt = SharedSlice::new(&mut total);
+            Pipeline::new()
+                .stage("Map", n, |s, e| {
+                    for i in s..e {
+                        unsafe { wa.write(i, i as u64) };
+                    }
+                })
+                .stage("Map", n, |s, e| {
+                    for i in s..e {
+                        let v = unsafe { wa.read(i) };
+                        unsafe { wb.write(i, 3 * v) };
+                    }
+                })
+                .serial_stage("Reduce", || {
+                    let mut acc = 0u64;
+                    for i in 0..n {
+                        acc += unsafe { wb.read(i) };
+                    }
+                    unsafe { wt.write(0, acc) };
+                })
+                .run(&bk);
+            assert_eq!(total[0], 3 * (n as u64 - 1) * n as u64 / 2);
+        }
+    }
+
+    #[test]
+    fn every_index_processed_exactly_once() {
+        use std::sync::atomic::AtomicU32;
+        for bk in backends() {
+            let n = 4_321usize;
+            let hits: Vec<AtomicU32> =
+                (0..n).map(|_| AtomicU32::new(0)).collect();
+            let hits_ref = &hits;
+            Pipeline::new()
+                .stage("Map", n, move |s, e| {
+                    for i in s..e {
+                        hits_ref[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                })
+                .run(&bk);
+            assert!(hits
+                .iter()
+                .all(|h| h.load(Ordering::Relaxed) == 1));
+        }
+    }
+
+    #[test]
+    fn explicit_grain_slots_are_stable() {
+        for bk in backends() {
+            let n = 1000usize;
+            let grain = 128usize;
+            let slots = n.div_ceil(grain);
+            let mut partial = vec![0u64; slots];
+            let wp = SharedSlice::new(&mut partial);
+            Pipeline::new()
+                .stage_with_grain("Reduce", n, grain, |s, e| {
+                    let mut acc = 0u64;
+                    for i in s..e {
+                        acc += i as u64;
+                    }
+                    // Serial runs one chunk (slot 0); threaded runs
+                    // per-grain chunks whose starts are multiples of
+                    // the grain. Accumulate so both layouts sum right.
+                    let slot = s / grain;
+                    let old = unsafe { wp.read(slot) };
+                    unsafe { wp.write(slot, old + acc) };
+                })
+                .run(&bk);
+            assert_eq!(
+                partial.iter().sum::<u64>(),
+                (n as u64 - 1) * n as u64 / 2
+            );
+        }
+    }
+
+    #[test]
+    fn empty_stages_and_empty_pipeline_are_noops() {
+        for bk in backends() {
+            Pipeline::new().run(&bk);
+            let mut out = vec![7u32; 3];
+            let w = SharedSlice::new(&mut out);
+            Pipeline::new()
+                .stage("Map", 0, |_, _| panic!("no work expected"))
+                .stage("Map", 3, |s, e| {
+                    for i in s..e {
+                        unsafe { w.write(i, 1) };
+                    }
+                })
+                .run(&bk);
+            assert_eq!(out, vec![1, 1, 1]);
+        }
+    }
+
+    #[test]
+    fn records_stage_timing_under_primitive_names() {
+        use crate::dpp::timing;
+        // Timing registry is global: serialize with other timing tests.
+        let _guard = timing::test_lock();
+        timing::reset();
+        timing::set_enabled(true);
+        let bk = Backend::threaded_with_grain(Pool::new(2), 32);
+        let mut out = vec![0u32; 64];
+        let w = SharedSlice::new(&mut out);
+        Pipeline::new()
+            .stage("Map", 64, |s, e| {
+                for i in s..e {
+                    unsafe { w.write(i, 1) };
+                }
+            })
+            .stage("ReduceByKey", 64, |_, _| {})
+            .run(&bk);
+        let snap = timing::snapshot();
+        timing::set_enabled(false);
+        timing::reset();
+        assert!(snap.contains_key("Map"));
+        assert!(snap.contains_key("ReduceByKey"));
+    }
+}

@@ -1,15 +1,37 @@
-//! Segmented primitives: CopyIf, Unique, ReduceByKey.
+//! Segmented primitives: CopyIf, Unique, ReduceByKey — and the
+//! [`SegmentPlan`], the static-key segment cache that amortizes the
+//! per-iteration SortByKey the paper identifies as the scalability
+//! limiter (§4.3.2–4.3.3).
 //!
 //! Built compositionally from the core primitives, exactly as the paper
 //! describes (§2.3): boundary flags via Map, placement via Scan,
 //! movement via Scatter. ReduceByKey assumes key-sorted input (the
 //! VTK-m/Thrust contract) and reduces each segment in parallel.
+//!
+//! The EM/MAP/BP hot loops reduce over the *same* keys every iteration
+//! (hood membership, vertex grouping, CSR edges — all static graph
+//! structure). A [`SegmentPlan`] sorts those keys **once**, caches the
+//! stable permutation and the segment offsets, and then serves every
+//! subsequent [`SegmentPlan::reduce_segments`] with no sort and no key
+//! comparison, bitwise-identical to `sort_by_key` + `reduce_by_key` on
+//! the same input.
 
-use super::core::{map_indexed, scan_exclusive, SharedSlice};
+use super::core::{map, map_indexed, scan_exclusive, SharedSlice};
+use super::sort::sort_by_key;
 use super::timing::timed;
 use super::Backend;
 
 /// CopyIf (stream compaction): keep `input[i]` where `keep(i)`.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend};
+/// let xs = [5u32, 6, 7, 8];
+/// let kept = dpp::copy_if_indexed(&Backend::Serial, &xs,
+///                                 |i| xs[i] % 2 == 0);
+/// assert_eq!(kept, vec![6, 8]);
+/// ```
 pub fn copy_if_indexed<T, F>(bk: &Backend, input: &[T], keep: F) -> Vec<T>
 where
     T: Copy + Default + Send + Sync,
@@ -34,6 +56,14 @@ where
 
 /// Indices `i in 0..n` where `keep(i)` holds (compact of a counting
 /// array) — the workhorse for segment-start detection.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend};
+/// let idx = dpp::select_indices(&Backend::Serial, 10, |i| i % 4 == 0);
+/// assert_eq!(idx, vec![0, 4, 8]);
+/// ```
 pub fn select_indices<F>(bk: &Backend, n: usize, keep: F) -> Vec<u32>
 where
     F: Fn(usize) -> bool + Sync,
@@ -55,6 +85,14 @@ where
 }
 
 /// Unique: drop adjacent duplicates (input usually sorted first).
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend};
+/// let u = dpp::unique(&Backend::Serial, &[1u32, 1, 2, 2, 1]);
+/// assert_eq!(u, vec![1, 2, 1]); // adjacent dups only
+/// ```
 pub fn unique<T>(bk: &Backend, input: &[T]) -> Vec<T>
 where
     T: Copy + Default + PartialEq + Send + Sync,
@@ -66,6 +104,21 @@ where
 
 /// ReduceByKey over key-sorted input: one `(key, reduce(op, segment))`
 /// per distinct key, in key order.
+///
+/// If the same keys are reduced every iteration, build a
+/// [`SegmentPlan`] once instead — same result, no per-iteration
+/// segment detection.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend};
+/// let (k, v) = dpp::reduce_by_key(
+///     &Backend::Serial, &[0u32, 0, 3], &[1u64, 2, 4], 0,
+///     |a, b| a + b);
+/// assert_eq!(k, vec![0, 3]);
+/// assert_eq!(v, vec![3, 4]);
+/// ```
 pub fn reduce_by_key<K, V, F>(
     bk: &Backend,
     keys: &[K],
@@ -130,6 +183,16 @@ fn is_key_sorted_grouped<K: PartialEq>(keys: &[K]) -> bool {
 
 /// Segment offsets (CSR-style) from grouped keys: returns
 /// `(segment_keys, offsets)` with `offsets.len() == segments + 1`.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend};
+/// let (sk, off) =
+///     dpp::segment_offsets(&Backend::Serial, &[3u32, 3, 7]);
+/// assert_eq!(sk, vec![3, 7]);
+/// assert_eq!(off, vec![0, 2, 3]);
+/// ```
 pub fn segment_offsets<K>(bk: &Backend, keys: &[K]) -> (Vec<K>, Vec<u32>)
 where
     K: Copy + Default + PartialEq + Send + Sync,
@@ -142,6 +205,505 @@ where
     let mut offsets = starts;
     offsets.push(n as u32);
     (seg_keys, offsets)
+}
+
+/// Static-key segment cache: SortByKey paid **once**, every later
+/// segmented reduction served sort-free.
+///
+/// The plan records, for an immutable key array, the stable-sort
+/// permutation (`sorted position -> original index`) and the CSR-style
+/// segment offsets of the sorted keys. [`SegmentPlan::reduce_segments`]
+/// then visits each segment's values in exactly the order
+/// `sort_by_key` + `reduce_by_key` would — so the results are
+/// **bitwise identical** to the unfused pair, for floats included —
+/// without sorting or comparing keys again.
+///
+/// **Static-keys contract:** a plan is valid for precisely the key
+/// array it was built from. It must be invalidated (rebuilt) whenever
+/// the keys change — for this codebase that means never during an
+/// EM/MAP/BP run, because hood membership, vertex grouping, CSR edges
+/// and overseg regions are all fixed at model-build time. Use
+/// [`SegmentPlan::matches`] in debug assertions to catch violations.
+///
+/// Two fast paths:
+/// * keys already sorted (hood ids, vertex groupings): no sort, no
+///   permutation is stored, reductions run straight over the input;
+/// * the segments already exist as CSR offsets (BP's adjacency rows):
+///   [`SegmentPlan::from_csr_offsets`] builds the plan with no key
+///   array at all — this is the only constructor that can represent
+///   *empty* segments, which reduce to `identity`.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend, SegmentPlan};
+///
+/// let bk = Backend::Serial;
+/// // Unsorted static keys: the plan sorts them once...
+/// let keys: Vec<u64> = vec![2, 0, 2, 1, 0];
+/// let plan = SegmentPlan::build(&bk, &keys);
+/// assert_eq!(plan.segment_keys(), &[0, 1, 2]);
+/// // ...then every "iteration" reduces sort-free:
+/// for _ in 0..3 {
+///     let vals = vec![10u64, 1, 20, 5, 2];
+///     let sums = plan.reduce_segments(&bk, &vals, 0, |a, b| a + b);
+///     assert_eq!(sums, vec![3, 5, 30]); // keys 0, 1, 2
+/// }
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct SegmentPlan {
+    /// Element count the plan was built for.
+    n: usize,
+    /// Stable-sort permutation (`sorted position -> original index`);
+    /// `None` when the keys were already sorted (identity).
+    perm: Option<Vec<u32>>,
+    /// Distinct keys, ascending — one per segment. For
+    /// [`SegmentPlan::from_csr_offsets`] this is the segment index
+    /// itself.
+    seg_keys: Vec<u64>,
+    /// Segment boundaries in sorted order (`num_segments + 1`).
+    offsets: Vec<u32>,
+}
+
+impl SegmentPlan {
+    /// Build a plan from `keys`, paying the SortByKey now so no later
+    /// reduction has to. Keys that are already sorted (the common case
+    /// for CSR-derived groupings) are detected with one linear scan
+    /// and skip both the sort and the permutation storage.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::{Backend, SegmentPlan};
+    /// let bk = Backend::Serial;
+    /// let plan = SegmentPlan::build(&bk, &[7u64, 7, 9]);
+    /// assert_eq!(plan.num_segments(), 2);
+    /// assert_eq!(plan.permutation(), None); // sorted: identity
+    /// ```
+    pub fn build(bk: &Backend, keys: &[u64]) -> SegmentPlan {
+        let n = keys.len();
+        assert!(n <= u32::MAX as usize, "SegmentPlan: too many elements");
+        if keys.windows(2).all(|w| w[0] <= w[1]) {
+            let (seg_keys, offsets) = segment_offsets(bk, keys);
+            return SegmentPlan { n, perm: None, seg_keys, offsets };
+        }
+        let mut sorted = keys.to_vec();
+        let mut perm: Vec<u32> = map_indexed(bk, n, |i| i as u32);
+        sort_by_key(bk, &mut sorted, &mut perm);
+        let (seg_keys, offsets) = segment_offsets(bk, &sorted);
+        SegmentPlan { n, perm: Some(perm), seg_keys, offsets }
+    }
+
+    /// [`SegmentPlan::build`] for `u32` keys (hood ids, region labels,
+    /// vertex ids — most static keys in this codebase are `u32`).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::{Backend, SegmentPlan};
+    /// let bk = Backend::Serial;
+    /// let plan = SegmentPlan::build_u32(&bk, &[1u32, 0, 1]);
+    /// assert_eq!(plan.segment_keys(), &[0, 1]);
+    /// assert_eq!(plan.segment_len(1), 2);
+    /// ```
+    pub fn build_u32(bk: &Backend, keys: &[u32]) -> SegmentPlan {
+        let wide: Vec<u64> = map(bk, keys, |&k| k as u64);
+        SegmentPlan::build(bk, &wide)
+    }
+
+    /// Build a plan directly from CSR-style offsets — the "segments
+    /// for free" case: the structure (BP adjacency rows, hood element
+    /// ranges) already *is* the sorted segmentation, so there is
+    /// nothing to sort and segment `j`'s key is `j` itself. Unlike the
+    /// key-built constructors this can represent **empty** segments
+    /// (`offsets[j] == offsets[j + 1]`), which reduce to the identity.
+    ///
+    /// `offsets` must start at 0 and be non-decreasing; the element
+    /// count is `offsets[last]`. The identity key array is
+    /// materialized eagerly (8 bytes per segment) to keep
+    /// [`SegmentPlan::segment_keys`] a plain slice.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::{Backend, SegmentPlan};
+    /// let bk = Backend::Serial;
+    /// // Segment 1 is empty.
+    /// let plan = SegmentPlan::from_csr_offsets(&[0, 2, 2, 5]);
+    /// let vals = vec![1u32, 2, 3, 4, 5];
+    /// let sums = plan.reduce_segments(&bk, &vals, 0, |a, b| a + b);
+    /// assert_eq!(sums, vec![3, 0, 12]);
+    /// ```
+    pub fn from_csr_offsets(offsets: &[u32]) -> SegmentPlan {
+        assert!(!offsets.is_empty(), "offsets need at least one entry");
+        assert_eq!(offsets[0], 0, "CSR offsets start at 0");
+        debug_assert!(
+            offsets.windows(2).all(|w| w[0] <= w[1]),
+            "CSR offsets must be non-decreasing"
+        );
+        let nseg = offsets.len() - 1;
+        SegmentPlan {
+            n: offsets[nseg] as usize,
+            perm: None,
+            seg_keys: (0..nseg as u64).collect(),
+            offsets: offsets.to_vec(),
+        }
+    }
+
+    /// Number of elements the plan covers.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::{Backend, SegmentPlan};
+    /// let plan = SegmentPlan::build(&Backend::Serial, &[4u64, 4, 4]);
+    /// assert_eq!(plan.len(), 3);
+    /// ```
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// Whether the plan covers zero elements.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::{Backend, SegmentPlan};
+    /// assert!(SegmentPlan::build(&Backend::Serial, &[]).is_empty());
+    /// ```
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Number of segments (distinct keys, or CSR rows).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::{Backend, SegmentPlan};
+    /// let plan = SegmentPlan::build(&Backend::Serial, &[5u64, 3, 5]);
+    /// assert_eq!(plan.num_segments(), 2);
+    /// ```
+    pub fn num_segments(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// The distinct keys, ascending — segment `j` reduces the values
+    /// of `segment_keys()[j]`.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::{Backend, SegmentPlan};
+    /// let plan = SegmentPlan::build(&Backend::Serial, &[9u64, 1, 9]);
+    /// assert_eq!(plan.segment_keys(), &[1, 9]);
+    /// ```
+    pub fn segment_keys(&self) -> &[u64] {
+        &self.seg_keys
+    }
+
+    /// Key of segment `j` (see [`SegmentPlan::segment_keys`]).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::{Backend, SegmentPlan};
+    /// let plan = SegmentPlan::build(&Backend::Serial, &[9u64, 1, 9]);
+    /// assert_eq!(plan.segment_key(1), 9);
+    /// ```
+    pub fn segment_key(&self, j: usize) -> u64 {
+        self.seg_keys[j]
+    }
+
+    /// Segment boundaries in sorted order (`num_segments + 1`
+    /// entries) — positions index the *sorted* arrangement; map them
+    /// through [`SegmentPlan::permutation`] to reach original indices.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::{Backend, SegmentPlan};
+    /// let plan = SegmentPlan::build(&Backend::Serial, &[2u64, 2, 8]);
+    /// assert_eq!(plan.offsets(), &[0, 2, 3]);
+    /// ```
+    pub fn offsets(&self) -> &[u32] {
+        &self.offsets
+    }
+
+    /// Sorted-position bounds `(start, end)` of segment `j`.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::{Backend, SegmentPlan};
+    /// let plan = SegmentPlan::build(&Backend::Serial, &[2u64, 2, 8]);
+    /// assert_eq!(plan.segment_bounds(0), (0, 2));
+    /// ```
+    #[inline]
+    pub fn segment_bounds(&self, j: usize) -> (usize, usize) {
+        (self.offsets[j] as usize, self.offsets[j + 1] as usize)
+    }
+
+    /// Element count of segment `j`.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::{Backend, SegmentPlan};
+    /// let plan = SegmentPlan::from_csr_offsets(&[0, 0, 3]);
+    /// assert_eq!(plan.segment_len(0), 0);
+    /// assert_eq!(plan.segment_len(1), 3);
+    /// ```
+    #[inline]
+    pub fn segment_len(&self, j: usize) -> usize {
+        (self.offsets[j + 1] - self.offsets[j]) as usize
+    }
+
+    /// The cached stable-sort permutation (`sorted position ->
+    /// original index`), or `None` when the keys were already sorted
+    /// and the identity applies.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::{Backend, SegmentPlan};
+    /// let plan = SegmentPlan::build(&Backend::Serial, &[1u64, 0]);
+    /// assert_eq!(plan.permutation(), Some(&[1u32, 0][..]));
+    /// ```
+    pub fn permutation(&self) -> Option<&[u32]> {
+        self.perm.as_deref()
+    }
+
+    /// Original indices in sorted-key order — the cached equivalent of
+    /// re-running SortByKey with an index payload. One plan serves any
+    /// number of ordered passes (overseg's merge loop walks it twice).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::{Backend, SegmentPlan};
+    /// let plan = SegmentPlan::build(&Backend::Serial, &[5u64, 1, 3]);
+    /// let order: Vec<usize> = plan.ordered_indices().collect();
+    /// assert_eq!(order, vec![1, 2, 0]);
+    /// ```
+    pub fn ordered_indices(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.n).map(move |i| match &self.perm {
+            Some(p) => p[i] as usize,
+            None => i,
+        })
+    }
+
+    /// Debug check that `keys` still matches the plan (the static-keys
+    /// contract): every element must sit in the segment of its key.
+    /// O(n) — intended for `debug_assert!`, not hot paths.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::{Backend, SegmentPlan};
+    /// let keys = vec![3u64, 1, 3];
+    /// let plan = SegmentPlan::build(&Backend::Serial, &keys);
+    /// assert!(plan.matches(&keys));
+    /// assert!(!plan.matches(&[3, 2, 3])); // keys changed: rebuild
+    /// ```
+    pub fn matches(&self, keys: &[u64]) -> bool {
+        if keys.len() != self.n {
+            return false;
+        }
+        for j in 0..self.num_segments() {
+            let (s, e) = self.segment_bounds(j);
+            let key = self.seg_keys[j];
+            for pos in s..e {
+                let orig = match &self.perm {
+                    Some(p) => p[pos] as usize,
+                    None => pos,
+                };
+                if keys[orig] != key {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Reduce one segment, fetching each value by *original* index in
+    /// sorted order — the building block pipeline stages call in their
+    /// own chunk loops (no timing, no dispatch). `fetch` is where
+    /// Gather fuses in: pass `|i| vals[idx[i] as usize]` and the
+    /// gather never materializes.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::{Backend, SegmentPlan};
+    /// let plan = SegmentPlan::build(&Backend::Serial, &[4u64, 0, 4]);
+    /// let vals = [10u32, 7, 1];
+    /// let m = plan.reduce_segment(1, |i| vals[i], u32::MAX,
+    ///                             |a, b| a.min(b));
+    /// assert_eq!(m, 1); // min over key-4 values {10, 1}
+    /// ```
+    #[inline]
+    pub fn reduce_segment<V, F, G>(
+        &self,
+        j: usize,
+        fetch: G,
+        identity: V,
+        op: F,
+    ) -> V
+    where
+        V: Copy,
+        F: Fn(V, V) -> V,
+        G: Fn(usize) -> V,
+    {
+        let (s, e) = self.segment_bounds(j);
+        let mut acc = identity;
+        match &self.perm {
+            None => {
+                for i in s..e {
+                    acc = op(acc, fetch(i));
+                }
+            }
+            Some(p) => {
+                for i in s..e {
+                    acc = op(acc, fetch(p[i] as usize));
+                }
+            }
+        }
+        acc
+    }
+
+    /// ReduceByKey over the cached segmentation: one reduced value per
+    /// segment, in segment order, **bitwise identical** to
+    /// `sort_by_key(keys, iota)` + `reduce_by_key` on the same input —
+    /// but with the sort amortized into [`SegmentPlan::build`].
+    /// Recorded as `ReduceByKey` in [`crate::dpp::timing`].
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::{Backend, SegmentPlan};
+    /// let bk = Backend::Serial;
+    /// let plan = SegmentPlan::build(&bk, &[1u64, 0, 1, 0]);
+    /// let vals = vec![1.5f32, 2.5, 0.5, 1.0];
+    /// let sums = plan.reduce_segments(&bk, &vals, 0.0, |a, b| a + b);
+    /// assert_eq!(sums, vec![3.5, 2.0]); // keys 0, 1
+    /// ```
+    pub fn reduce_segments<V, F>(
+        &self,
+        bk: &Backend,
+        vals: &[V],
+        identity: V,
+        op: F,
+    ) -> Vec<V>
+    where
+        V: Copy + Default + Send + Sync,
+        F: Fn(V, V) -> V + Sync,
+    {
+        assert_eq!(vals.len(), self.n, "reduce_segments length mismatch");
+        self.reduce_segments_map(bk, |i| vals[i], identity, op)
+    }
+
+    /// [`SegmentPlan::reduce_segments`] with the value array replaced
+    /// by a fetch-by-original-index function — the fused
+    /// Gather + SegmentedReduce form.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::{Backend, SegmentPlan};
+    /// let bk = Backend::Serial;
+    /// let plan = SegmentPlan::build(&bk, &[0u64, 0, 2]);
+    /// let src = [5u64, 6, 7];
+    /// let idx = [2u32, 1, 0]; // fused gather through idx
+    /// let sums = plan.reduce_segments_map(
+    ///     &bk, |i| src[idx[i] as usize], 0, |a, b| a + b);
+    /// assert_eq!(sums, vec![13, 5]);
+    /// ```
+    pub fn reduce_segments_map<V, F, G>(
+        &self,
+        bk: &Backend,
+        fetch: G,
+        identity: V,
+        op: F,
+    ) -> Vec<V>
+    where
+        V: Copy + Default + Send + Sync,
+        F: Fn(V, V) -> V + Sync,
+        G: Fn(usize) -> V + Sync,
+    {
+        let mut out = vec![identity; self.num_segments()];
+        self.reduce_segments_map_into(bk, fetch, identity, op, &mut out);
+        out
+    }
+
+    /// Allocation-free [`SegmentPlan::reduce_segments`]: writes the
+    /// per-segment reductions into `out` (one slot per segment).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::{Backend, SegmentPlan};
+    /// let bk = Backend::Serial;
+    /// let plan = SegmentPlan::build(&bk, &[0u64, 1, 1]);
+    /// let mut out = vec![0u32; plan.num_segments()];
+    /// plan.reduce_segments_into(&bk, &[4, 1, 2], 0, |a, b| a + b,
+    ///                           &mut out);
+    /// assert_eq!(out, vec![4, 3]);
+    /// ```
+    pub fn reduce_segments_into<V, F>(
+        &self,
+        bk: &Backend,
+        vals: &[V],
+        identity: V,
+        op: F,
+        out: &mut [V],
+    ) where
+        V: Copy + Send + Sync,
+        F: Fn(V, V) -> V + Sync,
+    {
+        assert_eq!(vals.len(), self.n, "reduce_segments length mismatch");
+        self.reduce_segments_map_into(bk, |i| vals[i], identity, op, out);
+    }
+
+    /// The fetch-function form of
+    /// [`SegmentPlan::reduce_segments_into`] — every other segmented
+    /// reduction on the plan lowers to this.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::{Backend, SegmentPlan};
+    /// let bk = Backend::Serial;
+    /// let plan = SegmentPlan::from_csr_offsets(&[0, 1, 1, 2]);
+    /// let mut out = vec![9u32; 3];
+    /// plan.reduce_segments_map_into(&bk, |i| i as u32 + 1, 0,
+    ///                               |a, b| a + b, &mut out);
+    /// assert_eq!(out, vec![1, 0, 2]); // empty segment -> identity
+    /// ```
+    pub fn reduce_segments_map_into<V, F, G>(
+        &self,
+        bk: &Backend,
+        fetch: G,
+        identity: V,
+        op: F,
+        out: &mut [V],
+    ) where
+        V: Copy + Send + Sync,
+        F: Fn(V, V) -> V + Sync,
+        G: Fn(usize) -> V + Sync,
+    {
+        let nseg = self.num_segments();
+        assert_eq!(out.len(), nseg, "one output slot per segment");
+        timed("ReduceByKey", || {
+            let win = SharedSlice::new(out);
+            bk.for_chunks(nseg, |cs, ce| {
+                for j in cs..ce {
+                    let v = self.reduce_segment(j, &fetch, identity, &op);
+                    unsafe { win.write(j, v) };
+                }
+            });
+        });
+    }
 }
 
 #[cfg(test)]
@@ -216,6 +778,86 @@ mod tests {
             let (sk, off) = segment_offsets(&bk, &keys);
             assert_eq!(sk, vec![3, 7, 9]);
             assert_eq!(off, vec![0, 3, 4, 6]);
+        }
+    }
+
+    #[test]
+    fn plan_matches_sort_then_reduce_by_key() {
+        for bk in backends() {
+            let keys: Vec<u64> =
+                vec![9, 2, 2, 7, 9, 2, 0, 7, 7, 7, 9, 0];
+            let vals: Vec<f32> = (0..keys.len())
+                .map(|i| (i as f32) * 0.37 - 1.5)
+                .collect();
+            // Unfused reference: sort (keys, iota) then reduce.
+            let mut k = keys.clone();
+            let mut idx: Vec<u32> = (0..keys.len() as u32).collect();
+            sort_by_key(&bk, &mut k, &mut idx);
+            let sorted_vals: Vec<f32> =
+                idx.iter().map(|&i| vals[i as usize]).collect();
+            let (want_k, want_v) =
+                reduce_by_key(&bk, &k, &sorted_vals, 0.0f32, |a, b| a + b);
+            // Fused: plan once, reduce sort-free.
+            let plan = SegmentPlan::build(&bk, &keys);
+            assert!(plan.matches(&keys));
+            let got =
+                plan.reduce_segments(&bk, &vals, 0.0f32, |a, b| a + b);
+            assert_eq!(plan.segment_keys(), &want_k[..]);
+            assert_eq!(got, want_v, "bitwise-identical to the pair");
+        }
+    }
+
+    #[test]
+    fn plan_sorted_keys_take_identity_path() {
+        for bk in backends() {
+            let keys = vec![0u64, 0, 3, 3, 3, 8];
+            let plan = SegmentPlan::build(&bk, &keys);
+            assert_eq!(plan.permutation(), None);
+            assert_eq!(plan.segment_keys(), &[0, 3, 8]);
+            assert_eq!(plan.offsets(), &[0, 2, 5, 6]);
+            let order: Vec<usize> = plan.ordered_indices().collect();
+            assert_eq!(order, (0..6).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn plan_csr_offsets_with_empty_segments() {
+        let bk = Backend::Serial;
+        let plan = SegmentPlan::from_csr_offsets(&[0, 0, 2, 2, 3]);
+        assert_eq!(plan.len(), 3);
+        assert_eq!(plan.num_segments(), 4);
+        let vals = vec![5u32, 6, 7];
+        let out = plan.reduce_segments(&bk, &vals, 0, |a, b| a + b);
+        assert_eq!(out, vec![0, 11, 0, 7], "empty segments = identity");
+    }
+
+    #[test]
+    fn plan_empty_and_single() {
+        for bk in backends() {
+            let empty = SegmentPlan::build(&bk, &[]);
+            assert!(empty.is_empty());
+            assert_eq!(empty.num_segments(), 0);
+            assert_eq!(
+                empty.reduce_segments(&bk, &[] as &[u32], 0, |a, b| a + b),
+                Vec::<u32>::new()
+            );
+            let single = SegmentPlan::build(&bk, &[42u64; 1000]);
+            assert_eq!(single.num_segments(), 1);
+            let vals = vec![1u64; 1000];
+            assert_eq!(
+                single.reduce_segments(&bk, &vals, 0, |a, b| a + b),
+                vec![1000]
+            );
+        }
+    }
+
+    #[test]
+    fn plan_ordered_indices_is_stable_sort_order() {
+        for bk in backends() {
+            let keys = vec![1u64, 0, 1, 0, 1];
+            let plan = SegmentPlan::build(&bk, &keys);
+            let order: Vec<usize> = plan.ordered_indices().collect();
+            assert_eq!(order, vec![1, 3, 0, 2, 4]);
         }
     }
 }

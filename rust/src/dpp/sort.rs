@@ -23,18 +23,48 @@ const RADIX_BITS: usize = 8;
 const BUCKETS: usize = 1 << RADIX_BITS;
 
 /// Pack a pair into a lexicographic u64 key.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::pack_pair;
+/// assert!(pack_pair(1, 0) > pack_pair(0, u32::MAX));
+/// assert_eq!(pack_pair(1, 2), (1u64 << 32) | 2);
+/// ```
 #[inline]
 pub fn pack_pair(hi: u32, lo: u32) -> u64 {
     ((hi as u64) << 32) | lo as u64
 }
 
 /// Unpack a lexicographic u64 key.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{pack_pair, unpack_pair};
+/// assert_eq!(unpack_pair(pack_pair(7, 9)), (7, 9));
+/// ```
 #[inline]
 pub fn unpack_pair(key: u64) -> (u32, u32) {
     ((key >> 32) as u32, key as u32)
 }
 
 /// Stable sort of `(keys, vals)` by key, ascending. Radix/LSD.
+///
+/// When the keys are *static* across iterations, do not re-sort them:
+/// build a [`crate::dpp::SegmentPlan`] once instead and reduce
+/// sort-free every iteration.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend};
+/// let mut keys = vec![3u64, 1, 3, 2];
+/// let mut vals = vec![0u32, 1, 2, 3];
+/// dpp::sort_by_key(&Backend::Serial, &mut keys, &mut vals);
+/// assert_eq!(keys, vec![1, 2, 3, 3]);
+/// assert_eq!(vals, vec![1, 3, 0, 2]); // stable: 0 before 2
+/// ```
 pub fn sort_by_key(bk: &Backend, keys: &mut Vec<u64>, vals: &mut Vec<u32>) {
     assert_eq!(keys.len(), vals.len(), "sort_by_key length mismatch");
     timed("SortByKey", || {
@@ -43,6 +73,15 @@ pub fn sort_by_key(bk: &Backend, keys: &mut Vec<u64>, vals: &mut Vec<u32>) {
 }
 
 /// Sort keys only (payload-free variant used by Unique pipelines).
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend};
+/// let mut keys = vec![9u64, 4, 7];
+/// dpp::sort_keys(&Backend::Serial, &mut keys);
+/// assert_eq!(keys, vec![4, 7, 9]);
+/// ```
 pub fn sort_keys(bk: &Backend, keys: &mut Vec<u64>) {
     timed("SortByKey", || {
         let mut vals = vec![0u32; keys.len()];
@@ -138,6 +177,17 @@ fn radix_sort(bk: &Backend, keys: &mut Vec<u64>, vals: &mut Vec<u32>) {
 
 /// Comparison-sort baseline for the ablation bench: pack into tuples,
 /// use the standard library's pdqsort-ish unstable sort, unpack.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::sort_pairs_comparison;
+/// let mut keys = vec![2u64, 1];
+/// let mut vals = vec![10u32, 20];
+/// sort_pairs_comparison(&mut keys, &mut vals);
+/// assert_eq!(keys, vec![1, 2]);
+/// assert_eq!(vals, vec![20, 10]);
+/// ```
 pub fn sort_pairs_comparison(keys: &mut [u64], vals: &mut [u32]) {
     timed("SortByKey(cmp)", || {
         let mut zipped: Vec<(u64, u32)> =

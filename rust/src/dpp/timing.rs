@@ -62,6 +62,15 @@ pub fn timed<R>(name: &'static str, f: impl FnOnce() -> R) -> R {
     r
 }
 
+/// Serializes tests that enable the global registry: the registry is
+/// process-wide, so concurrent test threads that both `set_enabled`
+/// would bleed counts into each other. Not part of the public API.
+#[doc(hidden)]
+pub fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 /// Render the registry as an aligned text table sorted by total time.
 pub fn report() -> String {
     let snap = snapshot();
@@ -88,6 +97,7 @@ mod tests {
 
     #[test]
     fn records_when_enabled() {
+        let _guard = test_lock();
         reset();
         set_enabled(true);
         let v = timed("test-prim", || 41 + 1);
@@ -101,6 +111,7 @@ mod tests {
 
     #[test]
     fn silent_when_disabled() {
+        let _guard = test_lock();
         reset();
         set_enabled(false);
         timed("ghost", || ());
@@ -109,6 +120,7 @@ mod tests {
 
     #[test]
     fn report_formats() {
+        let _guard = test_lock();
         reset();
         set_enabled(true);
         timed("alpha", || std::thread::sleep(

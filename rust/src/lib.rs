@@ -10,8 +10,8 @@
 //! data-parallel loopy belief propagation engine ([`bp`]) with
 //! residual message scheduling.
 //!
-//! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the
-//! reproduced tables/figures.
+//! See `README.md` for the front door (quickstart + the bench ->
+//! paper-figure map) and `DESIGN.md` for the architecture.
 
 pub mod bench_support;
 pub mod bp;

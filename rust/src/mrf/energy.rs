@@ -114,7 +114,7 @@ pub fn sortable_f32(x: f32) -> u32 {
 }
 
 /// Pack (energy, label) so u64-min selects minimum energy, ties -> the
-/// smaller label. Used by the per-vertex resolution ReduceByKey<Min>.
+/// smaller label. Used by the per-vertex resolution `ReduceByKey<Min>`.
 #[inline(always)]
 pub fn pack_energy_label(energy: f32, label: u8) -> u64 {
     ((sortable_f32(energy) as u64) << 32) | label as u64

@@ -6,8 +6,11 @@
 //! weight order; two components merge when the edge weight is within
 //! each component's internal difference plus a size-scaled tolerance
 //! (`scale / |C|`). A final pass absorbs regions smaller than
-//! `min_region`. Edge ordering uses the DPP radix [`sort_by_key`], so
-//! the oversegmentation is itself a DPP client, as in the paper.
+//! `min_region`. Edge ordering builds a [`crate::dpp::SegmentPlan`]
+//! over the weight keys — one DPP radix sort, cached — and both merge
+//! passes walk the plan's [`crate::dpp::SegmentPlan::ordered_indices`]
+//! (sort paid once, served twice), so the oversegmentation is itself a
+//! DPP client, as in the paper.
 
 mod unionfind;
 
@@ -32,9 +35,9 @@ pub struct Overseg {
     pub height: usize,
 }
 
-/// 4-connectivity pixel edges, weight = |ΔI|, packed for the radix
-/// sort: key = (weight << 40) | edge_index keeps the sort stable and
-/// deterministic without a payload side array.
+/// 4-connectivity pixel edges, weight = |ΔI|. The radix sort behind
+/// the weight [`crate::dpp::SegmentPlan`] is stable, so equal-weight
+/// edges keep build order and the merging is deterministic.
 fn build_edges(img: &ImageSlice) -> (Vec<u32>, Vec<u32>, Vec<u8>) {
     let (w, h) = (img.width, img.height);
     let mut a = Vec::with_capacity(2 * w * h);
@@ -118,22 +121,24 @@ fn segment_core(
     cfg: &OversegConfig,
 ) -> Overseg {
     let n = intensity.len();
-    let m = ea.len();
 
-    // Order edges by weight via SortByKey: key = weight, payload = edge.
-    let mut keys: Vec<u64> = ew.iter().map(|&w| w as u64).collect();
-    let mut order: Vec<u32> = dpp::iota(bk, m);
-    dpp::sort_by_key(bk, &mut keys, &mut order);
+    // Edge ordering: one SegmentPlan over the weight keys caches the
+    // stable radix-sort permutation; both merge passes below replay
+    // it with no further sort (SortByKey paid once, served twice).
+    // The plan's segment detection is unused here (only the order
+    // is walked) — a few extra O(m) init-phase passes, accepted to
+    // keep every cached ordering behind the one plan abstraction.
+    let keys: Vec<u64> = dpp::map(bk, ew, |&w| w as u64);
+    let order_plan = dpp::SegmentPlan::build(bk, &keys);
 
     // Sequential merging (union-find is inherently sequential; the
     // paper's pipeline also builds the graph once per slice).
     let mut uf = UnionFind::new(n);
     let mut internal = vec![0.0f64; n]; // max internal edge weight
     let scale = cfg.scale.max(0.0);
-    for &ei in &order {
+    for ei in order_plan.ordered_indices() {
         let (pa, pb, w) =
-            (ea[ei as usize] as usize, eb[ei as usize] as usize,
-             ew[ei as usize] as f64);
+            (ea[ei] as usize, eb[ei] as usize, ew[ei] as f64);
         let ra = uf.find(pa);
         let rb = uf.find(pb);
         if ra == rb {
@@ -150,9 +155,9 @@ fn segment_core(
     // Absorb small regions into an arbitrary neighbor (ascending edge
     // order keeps this deterministic and edge-contrast-aware).
     if cfg.min_region > 1 {
-        for &ei in &order {
-            let ra = uf.find(ea[ei as usize] as usize);
-            let rb = uf.find(eb[ei as usize] as usize);
+        for ei in order_plan.ordered_indices() {
+            let ra = uf.find(ea[ei] as usize);
+            let rb = uf.find(eb[ei] as usize);
             if ra != rb
                 && (uf.size(ra) < cfg.min_region
                     || uf.size(rb) < cfg.min_region)
@@ -175,7 +180,10 @@ fn segment_core(
         labels[p] = remap[r];
     }
 
-    // Region statistics.
+    // Region statistics: one O(n) accumulation. (A SegmentPlan over
+    // the labels would work too, but it is read exactly once here, so
+    // its sort could never amortize — the plan layer is for the keys
+    // the hot loops reduce over every iteration.)
     let mut sum = vec![0u64; num_regions as usize];
     let mut size = vec![0u32; num_regions as usize];
     for (p, &l) in labels.iter().enumerate() {

@@ -17,6 +17,12 @@
 //!
 //! Pools are cheap to keep around; benches build one pool per
 //! concurrency level and reuse it across runs.
+//!
+//! Besides the fork-join [`Pool::parallel_for`], the pool offers a
+//! *persistent region* ([`Pool::region`]): all workers enter one
+//! closure together and separate their phases with a [`PhaseBarrier`]
+//! instead of paying a fork-join per pass — the substrate the fused
+//! [`crate::dpp::Pipeline`] executes on.
 
 use std::ops::Range;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -271,6 +277,95 @@ impl Pool {
     }
 }
 
+/// Sense-reversing spin barrier separating the *phases* of a
+/// persistent parallel region ([`Pool::region`]).
+///
+/// `wait` blocks until every participant has arrived, then releases
+/// them all into the next phase. Release/Acquire ordering on the
+/// generation counter makes every write performed before a `wait`
+/// visible to every participant after it — which is what lets pipeline
+/// stages read what the previous stage wrote without a fork-join.
+///
+/// The barrier spins with [`std::thread::yield_now`] rather than
+/// parking: phases in a DPP pipeline are microseconds apart, and the
+/// whole point of the persistent region is to avoid the
+/// condvar/fork-join latency of one [`Pool::parallel_for`] per stage.
+pub struct PhaseBarrier {
+    participants: usize,
+    arrived: AtomicUsize,
+    generation: AtomicUsize,
+}
+
+impl PhaseBarrier {
+    /// Barrier for `participants` cooperating workers (>= 1).
+    pub fn new(participants: usize) -> PhaseBarrier {
+        PhaseBarrier {
+            participants: participants.max(1),
+            arrived: AtomicUsize::new(0),
+            generation: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn participants(&self) -> usize {
+        self.participants
+    }
+
+    /// Block until all participants reach the barrier. The last arrival
+    /// resets the count and advances the generation, releasing the
+    /// spinners; a single-participant barrier returns immediately.
+    pub fn wait(&self) {
+        if self.participants <= 1 {
+            return;
+        }
+        let gen = self.generation.load(Ordering::Acquire);
+        if self.arrived.fetch_add(1, Ordering::AcqRel) + 1
+            == self.participants
+        {
+            // Reset BEFORE advancing the generation: a released worker
+            // may reach the next barrier and increment `arrived` the
+            // moment the generation moves.
+            self.arrived.store(0, Ordering::Release);
+            self.generation
+                .store(gen.wrapping_add(1), Ordering::Release);
+        } else {
+            while self.generation.load(Ordering::Acquire) == gen {
+                std::thread::yield_now();
+            }
+        }
+    }
+}
+
+impl Pool {
+    /// Persistent parallel region: run `f(worker, barrier)` once on
+    /// every worker of the pool *concurrently*. Workers coordinate
+    /// phases themselves through the shared [`PhaseBarrier`] instead of
+    /// paying one fork-join per data-parallel pass — the substrate for
+    /// [`crate::dpp::Pipeline`].
+    ///
+    /// Guarantees: exactly `threads()` invocations of `f`, each with a
+    /// distinct `worker` in `0..threads()`, each on its own OS thread
+    /// (worker 0 is the submitting thread), all live at the same time.
+    /// This rides on [`Pool::parallel_for`] with `n == threads` and
+    /// grain 1: the initial partition hands every worker exactly one
+    /// index and the steal path never triggers (a 1-element range is
+    /// never above the grain), so no worker can ever own two region
+    /// slots — which would deadlock the barrier.
+    ///
+    /// `f` must NOT submit further work to this pool (the submit lock
+    /// is held for the duration of the region).
+    pub fn region<F>(&self, f: F)
+    where
+        F: Fn(usize, &PhaseBarrier) + Sync,
+    {
+        let barrier = PhaseBarrier::new(self.threads);
+        self.parallel_for(self.threads, 1, |s, e| {
+            for w in s..e {
+                f(w, &barrier);
+            }
+        });
+    }
+}
+
 impl Drop for Pool {
     fn drop(&mut self) {
         self.shared.shutdown.store(true, Ordering::Release);
@@ -383,6 +478,73 @@ mod tests {
             hits[i].fetch_add(1, Ordering::Relaxed);
         });
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn region_runs_every_worker_once() {
+        for threads in [1, 2, 4, 7] {
+            let pool = Pool::new(threads);
+            let hits: Vec<AtomicU32> =
+                (0..threads).map(|_| AtomicU32::new(0)).collect();
+            pool.region(|w, _| {
+                hits[w].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn region_phases_stay_in_lockstep() {
+        // Each worker bumps a per-phase counter, then barriers. If the
+        // barrier failed to hold a phase, a worker would observe a
+        // partial count from the next phase.
+        let threads = 4;
+        let pool = Pool::new(threads);
+        let phases = 16;
+        let counts: Vec<AtomicU32> =
+            (0..phases).map(|_| AtomicU32::new(0)).collect();
+        pool.region(|_, barrier| {
+            for p in 0..phases {
+                counts[p].fetch_add(1, Ordering::AcqRel);
+                barrier.wait();
+                // After the barrier, every participant must have
+                // contributed to this phase.
+                assert_eq!(
+                    counts[p].load(Ordering::Acquire),
+                    threads as u32,
+                    "phase {p} released early"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn region_barrier_publishes_prior_phase_writes() {
+        // Worker 0 writes in phase 0; everyone reads in phase 1.
+        let threads = 4;
+        let pool = Pool::new(threads);
+        let cell = AtomicU32::new(0);
+        pool.region(|w, barrier| {
+            if w == 0 {
+                cell.store(42, Ordering::Relaxed);
+            }
+            barrier.wait();
+            assert_eq!(cell.load(Ordering::Relaxed), 42);
+        });
+    }
+
+    #[test]
+    fn pool_reusable_after_region() {
+        let pool = Pool::new(3);
+        pool.region(|_, b| b.wait());
+        let count = AtomicUsize::new(0);
+        pool.parallel_for(1000, 64, |s, e| {
+            count.fetch_add(e - s, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 1000);
     }
 
     #[test]

@@ -69,7 +69,7 @@ impl Histogram {
         var.sqrt() / mean
     }
 
-    /// ASCII rendering for log output / EXPERIMENTS.md.
+    /// ASCII rendering for log output / bench reports.
     pub fn render(&self, width: usize) -> String {
         let peak = self.counts.iter().copied().max().unwrap_or(1).max(1);
         let mut out = String::new();

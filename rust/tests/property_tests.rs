@@ -144,6 +144,100 @@ fn prop_unique_and_reduce_by_key_consistent() {
 }
 
 #[test]
+fn prop_segment_plan_bitwise_matches_sort_reduce() {
+    // The SegmentPlan contract: reduce_segments on a plan built once
+    // is BITWISE identical (f32, no tolerance) to the unfused
+    // SortByKey + ReduceByKey pair on the same input, on every
+    // backend and thread count.
+    for seed in 0..TRIALS {
+        let mut rng = Pcg32::seeded(seed ^ 0x5E97);
+        let n = rng.below(4000) as usize; // 0 => empty-input edge
+        let nkeys = 1 + rng.below(60);
+        let keys: Vec<u64> =
+            (0..n).map(|_| rng.below(nkeys) as u64).collect();
+        let vals: Vec<f32> =
+            (0..n).map(|_| rng.f32() * 100.0 - 50.0).collect();
+        for bk in backends() {
+            // Unfused reference.
+            let mut k = keys.clone();
+            let mut idx: Vec<u32> = (0..n as u32).collect();
+            dpp::sort_by_key(&bk, &mut k, &mut idx);
+            let sorted_vals = dpp::gather(&bk, &vals, &idx);
+            let (want_k, want_v) = dpp::reduce_by_key(
+                &bk, &k, &sorted_vals, 0.0f32, |a, b| a + b,
+            );
+            // Fused: plan built once, reductions sort-free.
+            let plan = dpp::SegmentPlan::build(&bk, &keys);
+            assert!(plan.matches(&keys), "seed {seed}");
+            let got =
+                plan.reduce_segments(&bk, &vals, 0.0f32, |a, b| a + b);
+            assert_eq!(plan.segment_keys(), &want_k[..], "seed {seed}");
+            assert_eq!(got, want_v, "seed {seed}: bitwise mismatch");
+            // Allocation-free variant agrees.
+            let mut out = vec![0.0f32; plan.num_segments()];
+            plan.reduce_segments_into(&bk, &vals, 0.0, |a, b| a + b,
+                                      &mut out);
+            assert_eq!(out, got, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_segment_plan_single_segment_and_empty() {
+    for bk in backends() {
+        // Single segment: every key identical.
+        let keys = vec![7u64; 513];
+        let vals: Vec<f32> = (0..513).map(|i| i as f32 * 0.25).collect();
+        let plan = dpp::SegmentPlan::build(&bk, &keys);
+        assert_eq!(plan.num_segments(), 1);
+        let got = plan.reduce_segments(&bk, &vals, 0.0f32, |a, b| a + b);
+        // Serial left-to-right sum — the reduce_by_key order.
+        let mut want = 0.0f32;
+        for &v in &vals {
+            want += v;
+        }
+        assert_eq!(got, vec![want]);
+        // Empty input.
+        let empty = dpp::SegmentPlan::build(&bk, &[]);
+        assert_eq!(
+            empty.reduce_segments(&bk, &[] as &[f32], 0.0, |a, b| a + b),
+            Vec::<f32>::new()
+        );
+    }
+}
+
+#[test]
+fn prop_segment_plan_csr_offsets_with_empty_segments() {
+    // from_csr_offsets is the only constructor that can express empty
+    // segments; they must reduce to the identity on every backend.
+    for seed in 0..TRIALS {
+        let mut rng = Pcg32::seeded(seed ^ 0xC5A0);
+        let nseg = 1 + rng.below(40) as usize;
+        let mut offsets = vec![0u32];
+        for _ in 0..nseg {
+            let len =
+                if rng.below(3) == 0 { 0 } else { rng.below(20) };
+            offsets.push(offsets.last().unwrap() + len);
+        }
+        let n = *offsets.last().unwrap() as usize;
+        let vals: Vec<u64> =
+            (0..n).map(|_| rng.below(1000) as u64).collect();
+        let plan = dpp::SegmentPlan::from_csr_offsets(&offsets);
+        assert_eq!(plan.num_segments(), nseg);
+        assert_eq!(plan.len(), n);
+        for bk in backends() {
+            let got = plan.reduce_segments(&bk, &vals, 0, |a, b| a + b);
+            for j in 0..nseg {
+                let (s, e) =
+                    (offsets[j] as usize, offsets[j + 1] as usize);
+                let want: u64 = vals[s..e].iter().sum();
+                assert_eq!(got[j], want, "seed {seed} seg {j}");
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_mce_matches_bron_kerbosch() {
     for seed in 0..TRIALS {
         let mut rng = Pcg32::seeded(seed ^ 0xC11C);
