@@ -1,0 +1,118 @@
+//! Serial vs sharded slice throughput (ISSUE 3 tentpole): slices/sec
+//! for the slice scheduler across lane counts {1, 2, 4, 8} and three
+//! engines — fused DPP (default), planned DPP (plan-cached pipeline),
+//! and loopy BP. Lanes run with `threads = 1` so scaling comes purely
+//! from slice-level sharding (the README's "Throughput mode" table).
+//!
+//! Output: `bench_results/throughput.json` — one row per
+//! (engine, lanes) with median seconds, slices/sec, and observed lane
+//! occupancy — plus a speedup-vs-1-lane summary on stdout. `lanes=1`
+//! is the serial baseline (it takes the literal serial path).
+
+use dpp_pmrf::bench_support::{Report, Scale};
+use dpp_pmrf::bp::{BpConfig, BpEngine};
+use dpp_pmrf::config::{DatasetConfig, DatasetKind, MrfConfig, RunConfig};
+use dpp_pmrf::dpp::Backend;
+use dpp_pmrf::image;
+use dpp_pmrf::mrf::dpp::{DppEngine, PairMode};
+use dpp_pmrf::mrf::Engine;
+use dpp_pmrf::sched;
+use dpp_pmrf::util::measure;
+
+const LANES: [usize; 4] = [1, 2, 4, 8];
+
+type Factory = Box<dyn Fn(usize, &Backend) -> Box<dyn Engine> + Sync>;
+
+fn main() {
+    let scale = Scale::from_env();
+    let mut report = Report::new("throughput");
+
+    // Enough slices that 8 lanes have work; fixed iterations so every
+    // configuration does identical work per slice.
+    let slices = scale.slices.max(8);
+    let base = RunConfig {
+        dataset: DatasetConfig {
+            kind: DatasetKind::Synthetic,
+            width: scale.width,
+            height: scale.height,
+            slices,
+            ..Default::default()
+        },
+        mrf: MrfConfig {
+            em_iters: 5,
+            map_iters: 4,
+            fixed_iters: true,
+            ..Default::default()
+        },
+        threads: 1,
+        ..Default::default()
+    };
+    let ds = image::generate(&base.dataset);
+
+    let engines: Vec<(&'static str, Factory)> = vec![
+        ("dpp", Box::new(|_, bk: &Backend| {
+            Box::new(DppEngine::new(bk.clone())) as Box<dyn Engine>
+        })),
+        ("dpp-planned", Box::new(|_, bk: &Backend| {
+            Box::new(DppEngine::with_mode(bk.clone(), PairMode::Planned))
+                as Box<dyn Engine>
+        })),
+        ("bp", Box::new(|_, bk: &Backend| {
+            Box::new(BpEngine::new(bk.clone(), BpConfig::default()))
+                as Box<dyn Engine>
+        })),
+    ];
+
+    for (name, factory) in &engines {
+        let name = *name;
+        for lanes in LANES {
+            let mut cfg = base.clone();
+            cfg.sched.lanes = lanes;
+            cfg.sched.inflight = 2 * lanes;
+            // Stash the last timed run's report for the occupancy /
+            // metric labels — no extra un-timed pass.
+            let last = std::cell::RefCell::new(None);
+            let stats = measure(scale.warmup, scale.reps, || {
+                let r = sched::run_sharded_with(&ds, &cfg, name, |l, bk| {
+                    factory(l, bk)
+                })
+                .expect("sharded run");
+                *last.borrow_mut() = Some(r);
+            });
+            let r = last.into_inner().expect("at least one rep ran");
+            report.add(
+                vec![
+                    ("engine", name.to_string()),
+                    ("lanes", lanes.to_string()),
+                    ("slices_per_sec",
+                     format!("{:.2}", slices as f64 / stats.median)),
+                    ("occupancy",
+                     format!("{:.2}", r.lane_occupancy())),
+                    ("peak_inflight",
+                     r.sched.peak_inflight.to_string()),
+                ],
+                stats,
+            );
+        }
+    }
+    report.finish();
+
+    println!("slice throughput speedup vs lanes=1 (same engine):");
+    for (name, _) in &engines {
+        let name = *name;
+        let t1 = report
+            .median(&[("engine", name), ("lanes", "1")])
+            .expect("lanes=1 row");
+        for lanes in LANES {
+            let ls = lanes.to_string();
+            let t = report
+                .median(&[("engine", name), ("lanes", ls.as_str())])
+                .expect("row");
+            println!(
+                "  {name:<12} lanes {lanes}: {:.2}x ({:.2} slices/s)",
+                t1 / t,
+                slices as f64 / t
+            );
+        }
+    }
+}

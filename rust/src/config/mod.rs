@@ -184,6 +184,27 @@ impl Default for MrfConfig {
     }
 }
 
+/// Slice-scheduler shape (DESIGN.md §8): how many lanes shard the
+/// slice stack and how far initialization may run ahead of
+/// optimization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SchedConfig {
+    /// Optimize lanes (init/optimize worker pairs). 1 reproduces the
+    /// serial slice order bitwise; each extra lane adds roughly
+    /// `threads` worker threads (lanes oversubscribe when
+    /// `threads > 1`).
+    pub lanes: usize,
+    /// Max initialized-but-unoptimized slice models waiting between
+    /// the init and optimize stages (backpressure / peak-memory cap).
+    pub inflight: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig { lanes: 1, inflight: 2 }
+    }
+}
+
 /// Everything one run needs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
@@ -192,6 +213,8 @@ pub struct RunConfig {
     pub mrf: MrfConfig,
     /// BP engine parameters (used when `engine` is [`EngineKind::Bp`]).
     pub bp: BpConfig,
+    /// Slice-scheduler shape (`--lanes` / `--inflight`).
+    pub sched: SchedConfig,
     pub engine: EngineKind,
     pub threads: usize,
     pub grain: usize,
@@ -205,6 +228,7 @@ impl Default for RunConfig {
             overseg: OversegConfig::default(),
             mrf: MrfConfig::default(),
             bp: BpConfig::default(),
+            sched: SchedConfig::default(),
             engine: EngineKind::Dpp,
             threads: crate::pool::available_threads(),
             grain: crate::pool::DEFAULT_GRAIN,
@@ -279,6 +303,11 @@ impl RunConfig {
             cfg.bp.frontier =
                 get_f64(b, "frontier", cfg.bp.frontier as f64) as f32;
         }
+        if let Some(s) = v.get("sched") {
+            cfg.sched.lanes = get_usize(s, "lanes", cfg.sched.lanes);
+            cfg.sched.inflight =
+                get_usize(s, "inflight", cfg.sched.inflight);
+        }
         if let Some(e) = v.get("engine").and_then(Value::as_str) {
             cfg.engine = EngineKind::parse(e)?;
         }
@@ -311,6 +340,12 @@ impl RunConfig {
         }
         if self.bp.tol <= 0.0 {
             bail!("bp.tol must be > 0");
+        }
+        if self.sched.lanes == 0 {
+            bail!("sched.lanes must be >= 1");
+        }
+        if self.sched.inflight == 0 {
+            bail!("sched.inflight must be >= 1");
         }
         Ok(())
     }
@@ -347,6 +382,10 @@ impl RunConfig {
                 ("tol", (self.bp.tol as f64).into()),
                 ("schedule", self.bp.schedule.name().into()),
                 ("frontier", (self.bp.frontier as f64).into()),
+            ])),
+            ("sched", Value::object(vec![
+                ("lanes", self.sched.lanes.into()),
+                ("inflight", self.sched.inflight.into()),
             ])),
             ("engine", self.engine.name().into()),
             ("threads", self.threads.into()),
@@ -397,6 +436,10 @@ mod tests {
         assert!(RunConfig::from_json(&v).is_err());
         let v = json::parse(r#"{"bp": {"tol": -1.0}}"#).unwrap();
         assert!(RunConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"sched": {"lanes": 0}}"#).unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"sched": {"inflight": 0}}"#).unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
     }
 
     #[test]
@@ -425,5 +468,17 @@ mod tests {
         assert_eq!(cfg.bp.frontier, 0.75);
         // unspecified keys keep defaults
         assert_eq!(cfg.bp.tol, BpConfig::default().tol);
+    }
+
+    #[test]
+    fn sched_section_parses_with_defaults() {
+        let v = json::parse(r#"{"sched": {"lanes": 4}}"#).unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.sched.lanes, 4);
+        assert_eq!(cfg.sched.inflight, SchedConfig::default().inflight);
+        let v = json::parse(r#"{"sched": {"lanes": 2, "inflight": 7}}"#)
+            .unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.sched, SchedConfig { lanes: 2, inflight: 7 });
     }
 }

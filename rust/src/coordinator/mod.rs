@@ -5,6 +5,12 @@
 //! map vertex labels back to pixels. Reports the per-phase timings the
 //! paper's evaluation is built on (optimization time only is the
 //! headline number).
+//!
+//! Slice execution is dispatched through the slice scheduler
+//! ([`crate::sched`]): `sched.lanes = 1` (the default) runs the
+//! classic serial loop bitwise; more lanes shard the stack across
+//! work-stealing init/optimize worker pairs with the same per-slice
+//! results.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -16,9 +22,10 @@ use crate::dpp::Backend;
 use crate::image::{Dataset, Volume};
 use crate::metrics::Confusion;
 use crate::mrf::{self, Engine, MrfModel};
-use crate::overseg::{oversegment, Overseg};
+use crate::overseg::Overseg;
 use crate::pool::Pool;
 use crate::runtime::EmRuntime;
+use crate::sched::SchedStats;
 use crate::util::Timer;
 
 /// Timings and statistics for one slice.
@@ -46,6 +53,12 @@ pub struct RunReport {
     /// Verification vs ground truth, when the dataset has one.
     pub confusion: Option<Confusion>,
     pub porosity: f64,
+    /// End-to-end wall clock for the whole run — scheduling and
+    /// assembly included, not just per-slice sums — the honest
+    /// denominator for throughput numbers.
+    pub total_secs: f64,
+    /// Scheduler shape + occupancy observed during the run.
+    pub sched: SchedStats,
 }
 
 impl RunReport {
@@ -58,6 +71,20 @@ impl RunReport {
     pub fn mean_init_secs(&self) -> f64 {
         self.slices.iter().map(|s| s.init_secs).sum::<f64>()
             / self.slices.len().max(1) as f64
+    }
+
+    /// Whole-run throughput: slices per wall-clock second.
+    pub fn slices_per_sec(&self) -> f64 {
+        if self.total_secs > 0.0 {
+            self.slices.len() as f64 / self.total_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean fraction of the run each optimize lane spent busy.
+    pub fn lane_occupancy(&self) -> f64 {
+        self.sched.occupancy(self.total_secs)
     }
 
     /// Total EM iterations across slices.
@@ -78,6 +105,15 @@ impl RunReport {
             ("engine", Value::str(self.engine)),
             ("mean_opt_secs", self.mean_opt_secs().into()),
             ("mean_init_secs", self.mean_init_secs().into()),
+            // Whole-run wall clock + throughput (sched tentpole): the
+            // per-slice means above cannot answer "how fast is the
+            // stack done" once slices overlap.
+            ("total_secs", self.total_secs.into()),
+            ("slices_per_sec", self.slices_per_sec().into()),
+            ("lanes", self.sched.lanes.into()),
+            ("inflight_cap", self.sched.inflight_cap.into()),
+            ("peak_inflight", self.sched.peak_inflight.into()),
+            ("lane_occupancy", self.lane_occupancy().into()),
             ("porosity", self.porosity.into()),
             ("slices", self.slices.len().into()),
             ("em_iters", self.total_em_iters().into()),
@@ -113,6 +149,19 @@ impl RunReport {
     }
 }
 
+/// Pool + backend for a run config, via the one shared construction
+/// rule ([`Backend::for_threads`]) the scheduler's workers also use —
+/// bitwise parity between serial and sharded runs depends on every
+/// site constructing backends identically.
+fn pool_and_backend(cfg: &RunConfig) -> (Arc<Pool>, Backend) {
+    let backend = Backend::for_threads(cfg.threads, cfg.grain);
+    let pool = match &backend {
+        Backend::Threaded { pool, .. } => Arc::clone(pool),
+        Backend::Serial => Pool::serial(),
+    };
+    (pool, backend)
+}
+
 /// The coordinator owns the pool, the DPP backend, and (for the xla
 /// engine) the PJRT runtime; it is reused across runs.
 pub struct Coordinator {
@@ -124,12 +173,7 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn new(cfg: RunConfig) -> Result<Coordinator> {
-        let pool = Pool::new(cfg.threads);
-        let backend = if cfg.threads == 1 {
-            Backend::Serial
-        } else {
-            Backend::threaded_with_grain(Arc::clone(&pool), cfg.grain)
-        };
+        let (pool, backend) = pool_and_backend(&cfg);
         let runtime = if cfg.engine == EngineKind::Xla {
             Some(Arc::new(
                 EmRuntime::load(&cfg.artifacts_dir)
@@ -144,12 +188,7 @@ impl Coordinator {
     /// Pre-loaded runtime variant (lets benches share one runtime).
     pub fn with_runtime(cfg: RunConfig, runtime: Arc<EmRuntime>)
         -> Coordinator {
-        let pool = Pool::new(cfg.threads);
-        let backend = if cfg.threads == 1 {
-            Backend::Serial
-        } else {
-            Backend::threaded_with_grain(Arc::clone(&pool), cfg.grain)
-        };
+        let (pool, backend) = pool_and_backend(&cfg);
         Coordinator { cfg, pool, backend, runtime: Some(runtime) }
     }
 
@@ -177,67 +216,17 @@ impl Coordinator {
     /// Build the per-slice MRF model (initialization phase).
     pub fn build_slice_model(&self, input: &Volume, z: usize)
         -> (Overseg, MrfModel) {
-        let seg = oversegment(&self.backend, &input.slice(z),
-                              &self.cfg.overseg);
-        let model = if self.cfg.engine == EngineKind::Serial {
-            mrf::build_model_serial(&seg)
-        } else {
-            mrf::build_model(&self.backend, &seg)
-        };
-        (seg, model)
+        crate::sched::build_slice_model(&self.backend, &self.cfg, input, z)
     }
 
-    /// Run the full pipeline over every slice of the dataset.
+    /// Run the full pipeline over every slice of the dataset, through
+    /// the slice scheduler: `cfg.sched.lanes = 1` is the classic
+    /// serial loop on this coordinator's backend (bitwise-identical to
+    /// the pre-scheduler path); more lanes shard the stack with the
+    /// same per-slice results (DESIGN.md §8).
     pub fn run(&self, dataset: &Dataset) -> Result<RunReport> {
-        let input = &dataset.input;
-        let engine = self.engine();
-        let mut output =
-            Volume::new(input.width, input.height, input.depth);
-        let mut reports = Vec::with_capacity(input.depth);
-
-        for z in 0..input.depth {
-            let t_init = Timer::start();
-            let (seg, model) = self.build_slice_model(input, z);
-            let init_secs = t_init.elapsed_secs();
-
-            let t_opt = Timer::start();
-            let res = engine.run(&model, &self.cfg.mrf);
-            let opt_secs = t_opt.elapsed_secs();
-
-            paint_slice(&mut output, z, &seg, &res.labels, &res.params);
-
-            reports.push(SliceReport {
-                z,
-                regions: seg.num_regions,
-                hoods: model.hoods.num_hoods(),
-                elements: model.hoods.num_elements(),
-                em_iters: res.em_iters,
-                map_iters: res.map_iters,
-                init_secs,
-                opt_secs,
-                final_energy: res.energy,
-            });
-            crate::log_debug!(
-                "slice {z}: {} regions, {} hoods, init {:.3}s opt {:.3}s",
-                seg.num_regions,
-                model.hoods.num_hoods(),
-                init_secs,
-                opt_secs
-            );
-        }
-
-        let confusion = dataset
-            .ground_truth
-            .as_ref()
-            .map(|t| Confusion::from_volumes(&output, t));
-        let porosity = crate::metrics::porosity(&output);
-        Ok(RunReport {
-            engine: engine.name(),
-            output,
-            slices: reports,
-            confusion,
-            porosity,
-        })
+        crate::sched::run_slices(dataset, &self.cfg,
+                                 &self.engine_resources())
     }
 
     /// Save a side-by-side PGM triptych (input / segmentation / truth)
@@ -271,6 +260,7 @@ impl Coordinator {
     pub fn run_3d(&self, dataset: &Dataset) -> Result<RunReport> {
         let input = &dataset.input;
         let engine = self.engine();
+        let t_total = Timer::start();
 
         let t_init = Timer::start();
         // 6-connectivity gives the merger ~1.5x more edges per voxel
@@ -337,25 +327,9 @@ impl Coordinator {
             }],
             confusion,
             porosity,
+            total_secs: t_total.elapsed_secs(),
+            sched: SchedStats::serial(init_secs, opt_secs),
         })
-    }
-}
-
-/// Map vertex labels back to pixels. The brighter class (higher
-/// estimated mu) renders as 255 so outputs are comparable across seeds
-/// and engines regardless of label-symmetry.
-fn paint_slice(
-    out: &mut Volume,
-    z: usize,
-    seg: &Overseg,
-    labels: &[u8],
-    params: &mrf::Params,
-) {
-    let bright: u8 = u8::from(params.mu[1] > params.mu[0]);
-    let px = out.slice_mut(z);
-    for (p, &region) in seg.labels.iter().enumerate() {
-        let l = labels[region as usize];
-        px[p] = if l == bright { 255 } else { 0 };
     }
 }
 
@@ -460,6 +434,17 @@ mod tests {
         assert!(j.get("accuracy").is_some());
         assert!(j.get("mean_opt_secs").and_then(|v| v.as_f64()).unwrap()
                 > 0.0);
+        // Throughput metrics (sched tentpole): whole-run wall clock
+        // and slices/sec must be present and consistent.
+        let total = j.get("total_secs").and_then(|v| v.as_f64()).unwrap();
+        assert!(total > 0.0);
+        let sps =
+            j.get("slices_per_sec").and_then(|v| v.as_f64()).unwrap();
+        assert!((sps - report.slices.len() as f64 / total).abs() < 1e-9);
+        assert_eq!(j.get("lanes").and_then(|v| v.as_f64()), Some(1.0));
+        let occ =
+            j.get("lane_occupancy").and_then(|v| v.as_f64()).unwrap();
+        assert!((0.0..=1.0).contains(&occ));
         // Iteration counts must survive into the JSON, per slice and
         // in total, so engines' inner-loop costs are comparable.
         assert!(j.get("em_iters").and_then(|v| v.as_f64()).unwrap() >= 1.0);
@@ -479,6 +464,26 @@ mod tests {
                 }
             }
             other => panic!("slice_reports missing/not array: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sharded_run_matches_single_lane() {
+        // Smoke-level check of the scheduler dispatch (the full
+        // lanes × engines sweep lives in tests/sched_determinism.rs).
+        let mut cfg = base_cfg(EngineKind::Dpp);
+        cfg.dataset.slices = 4;
+        let ds = crate::image::generate(&cfg.dataset);
+        let serial =
+            Coordinator::new(cfg.clone()).unwrap().run(&ds).unwrap();
+        assert_eq!(serial.sched.lanes, 1);
+        cfg.sched.lanes = 2;
+        let sharded = Coordinator::new(cfg).unwrap().run(&ds).unwrap();
+        assert_eq!(sharded.sched.lanes, 2);
+        assert_eq!(sharded.output.data, serial.output.data);
+        for (a, b) in sharded.slices.iter().zip(&serial.slices) {
+            assert_eq!(a.z, b.z);
+            assert_eq!(a.final_energy.to_bits(), b.final_energy.to_bits());
         }
     }
 

@@ -70,6 +70,21 @@ impl Backend {
         Backend::Threaded { pool, grain }
     }
 
+    /// THE construction rule for a run-configured backend: Serial for
+    /// one thread, else a fresh pool of `threads` workers at `grain`.
+    /// Every site that must produce bitwise-identical results for the
+    /// same `(threads, grain)` — the coordinator and every scheduler
+    /// worker ([`crate::sched`]) — goes through here, because
+    /// [`Backend::chunk_bounds`] (and with it every floating-point
+    /// association order) depends on exactly these two values.
+    pub fn for_threads(threads: usize, grain: usize) -> Backend {
+        if threads == 1 {
+            Backend::Serial
+        } else {
+            Backend::threaded_with_grain(Pool::new(threads), grain)
+        }
+    }
+
     /// Worker count (1 for serial).
     pub fn threads(&self) -> usize {
         match self {

@@ -8,7 +8,9 @@
 //! fine-grained DPP engine, an AOT-compiled XLA/PJRT accelerator
 //! path (JAX + Pallas at build time, rust-only at run time), and a
 //! data-parallel loopy belief propagation engine ([`bp`]) with
-//! residual message scheduling.
+//! residual message scheduling. Above the engines, a sharded slice
+//! scheduler and batch serving front end ([`sched`]) turn the
+//! per-slice pipeline into a throughput system.
 //!
 //! See `README.md` for the front door (quickstart + the bench ->
 //! paper-figure map) and `DESIGN.md` for the architecture.
@@ -28,13 +30,16 @@ pub mod mrf;
 pub mod overseg;
 pub mod pool;
 pub mod runtime;
+pub mod sched;
 pub mod util;
 
 /// Convenient re-exports for examples and benches.
 pub mod prelude {
     pub use crate::bp::{BpConfig, BpSchedule};
-    pub use crate::config::{DatasetKind, EngineKind, RunConfig};
+    pub use crate::config::{DatasetKind, EngineKind, RunConfig,
+                            SchedConfig};
     pub use crate::dpp::Backend;
     pub use crate::pool::Pool;
+    pub use crate::sched::{Job, Service};
     pub use crate::util::{Pcg32, Timer};
 }

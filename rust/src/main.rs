@@ -136,6 +136,11 @@ fn cmd_segment(args: &[String]) -> Result<()> {
                                      "run the segmentation pipeline"))
         .opt("engine", EngineKind::USAGE, Some("dpp"))
         .opt("threads", "worker threads (default: all cores)", None)
+        .opt("lanes",
+             "slice scheduler lanes (1 = serial slice order)", None)
+        .opt("inflight",
+             "max initialized slices in flight between scheduler stages",
+             None)
         .opt("input", "raw volume to segment instead of generating", None)
         .opt("out", "write segmented raw volume here", None)
         .opt("figures", "write PGM figure panels to this directory", None)
@@ -155,6 +160,12 @@ fn cmd_segment(args: &[String]) -> Result<()> {
     cfg.engine = EngineKind::parse(m.get("engine").unwrap())?;
     if let Some(t) = m.get_parse::<usize>("threads")? {
         cfg.threads = t;
+    }
+    if let Some(l) = m.get_parse::<usize>("lanes")? {
+        cfg.sched.lanes = l;
+    }
+    if let Some(i) = m.get_parse::<usize>("inflight")? {
+        cfg.sched.inflight = i;
     }
     cfg.artifacts_dir = PathBuf::from(m.get("artifacts").unwrap());
     if let Some(s) = m.get("bp-schedule") {
@@ -176,13 +187,21 @@ fn cmd_segment(args: &[String]) -> Result<()> {
 
     let ds = load_or_generate(&m, &cfg)?;
     let coord = Coordinator::new(cfg.clone())?;
-    log_info!("engine {} / {} threads", cfg.engine.name(), cfg.threads);
+    log_info!("engine {} / {} threads / {} lane(s), inflight {}",
+              cfg.engine.name(), cfg.threads, cfg.sched.lanes,
+              cfg.sched.inflight);
     let report = coord.run(&ds)?;
 
     log_info!(
         "mean per-slice: init {:.3}s, optimization {:.3}s",
         report.mean_init_secs(),
         report.mean_opt_secs()
+    );
+    log_info!(
+        "whole run: {:.3}s, {:.2} slices/s, lane occupancy {:.0}%",
+        report.total_secs,
+        report.slices_per_sec(),
+        100.0 * report.lane_occupancy()
     );
     if let Some(c) = &report.confusion {
         log_info!("{}", metrics::summary(c));

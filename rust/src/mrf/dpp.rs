@@ -88,119 +88,196 @@ impl Engine for DppEngine {
     }
 
     fn run(&self, model: &MrfModel, cfg: &MrfConfig) -> EmResult {
+        let nh = model.hoods.num_hoods();
         match self.mode {
-            PairMode::Paper => self.run_paper(model, cfg),
-            PairMode::Planned => self.run_planned(model, cfg),
-            PairMode::Fused => self.run_fused(model, cfg),
+            PairMode::Paper => {
+                let (mut step, prm) =
+                    PaperStep::new(&self.backend, model, cfg);
+                drive_em(&mut step, nh, prm, cfg)
+            }
+            PairMode::Planned => {
+                let (mut step, prm) =
+                    PlannedStep::new(&self.backend, model, cfg);
+                drive_em(&mut step, nh, prm, cfg)
+            }
+            PairMode::Fused => {
+                let (mut step, prm) =
+                    FusedStep::new(&self.backend, model, cfg);
+                drive_em(&mut step, nh, prm, cfg)
+            }
         }
     }
 }
 
-impl DppEngine {
-    /// Paper-literal pipeline built from the generic primitives.
-    fn run_paper(&self, model: &MrfModel, cfg: &MrfConfig) -> EmResult {
-        let bk = &self.backend;
+/// One mode's per-iteration behavior, driven by [`drive_em`]. The
+/// trait splits exactly along the seams the three modes differ on;
+/// everything else (EM/MAP loop structure, convergence windows,
+/// parameter re-estimation cadence) lives once in the driver.
+trait EmStep {
+    /// One MAP (Jacobi) iteration under `prm`; leaves this iteration's
+    /// per-hood energies in `hood_energy`.
+    fn map_iter(&mut self, prm: &Params, hood_energy: &mut [f64]);
+    /// Per-label statistics of the latest instance-argmin labels (the
+    /// EM M-step input).
+    fn stats(&mut self) -> Stats;
+    /// Final per-vertex labels (consumes the step's label state).
+    fn take_labels(&mut self) -> Vec<u8>;
+}
+
+/// The single EM outer-loop driver all [`PairMode`]s share (ROADMAP
+/// item): MAP-iterate until every hood's windowed energy converges (or
+/// `map_iters`), re-estimate parameters, repeat until the total energy
+/// converges (or `em_iters`). Identical control flow — and therefore
+/// bitwise-identical energy traces per mode — to the three drivers it
+/// replaced.
+fn drive_em(
+    step: &mut dyn EmStep,
+    nh: usize,
+    mut prm: Params,
+    cfg: &MrfConfig,
+) -> EmResult {
+    let mut hood_energy = vec![0.0f64; nh];
+    let mut em_window = ConvergenceWindow::new(cfg.window, cfg.threshold);
+    let mut total_map = 0usize;
+    let mut em_iters = 0usize;
+
+    for _em in 0..cfg.em_iters {
+        em_iters += 1;
+        let mut hw = HoodWindows::new(nh, cfg.window, cfg.threshold);
+        for _map in 0..cfg.map_iters {
+            total_map += 1;
+            step.map_iter(&prm, &mut hood_energy);
+            let done = hw.push_all(&hood_energy);
+            if done && !cfg.fixed_iters {
+                break;
+            }
+        }
+
+        let stats = step.stats();
+        prm = params::update(&stats, cfg.beta as f32);
+
+        let total: f64 = hood_energy.iter().sum();
+        em_window.push(total);
+        if em_window.converged() && !cfg.fixed_iters {
+            break;
+        }
+    }
+
+    EmResult {
+        labels: step.take_labels(),
+        em_iters,
+        map_iters: total_map,
+        energy: *em_window.history().last().unwrap_or(&0.0),
+        history: em_window.history().to_vec(),
+        params: prm,
+    }
+}
+
+/// Paper-literal pipeline built from the generic primitives (one
+/// fork-join and one full sort per iteration — the unfused baseline).
+struct PaperStep<'a> {
+    bk: &'a Backend,
+    model: &'a MrfModel,
+    n: usize,
+    // ---- static arrays (built once; Alg. 2 lines 1–5) ----
+    y_elem: Vec<f32>,
+    size_e: Vec<f32>,
+    /// Vertex grouping for step 5: keys (grouped by construction).
+    vert_keys: Vec<u32>,
+    labels: Vec<f32>,
+    amin: Vec<u8>,
+}
+
+impl<'a> PaperStep<'a> {
+    fn new(bk: &'a Backend, model: &'a MrfModel, cfg: &MrfConfig)
+        -> (PaperStep<'a>, Params) {
         let h = &model.hoods;
         let n = h.num_elements();
         let nh = h.num_hoods();
         let nv = model.num_vertices();
 
-        // ---- static arrays (built once; Alg. 2 lines 1–5) ----
         let y_elem: Vec<f32> = dpp::gather(bk, &model.y, &h.members);
         let size_h: Vec<f32> =
             dpp::map_indexed(bk, nh, |i| h.hood_size(i) as f32);
         let size_e: Vec<f32> = dpp::gather(bk, &size_h, &h.hood_id);
-        // Vertex grouping for step 5: keys (grouped by construction)
-        // and the element gather indices.
         let vert_keys: Vec<u32> = dpp::map_indexed(bk, n, |i| {
             h.members[h.vert_elems[i] as usize]
         });
 
-        let (mut prm, mut labels_u8) =
+        let (prm, labels_u8) =
             params::init_random(nv, cfg.beta as f32, cfg.seed);
-        let mut labels: Vec<f32> =
-            dpp::map(bk, &labels_u8, |&l| l as f32);
+        let labels: Vec<f32> = dpp::map(bk, &labels_u8, |&l| l as f32);
 
-        let mut em_window = ConvergenceWindow::new(cfg.window, cfg.threshold);
-        let mut total_map = 0usize;
-        let mut em_iters = 0usize;
-        let mut amin: Vec<u8> = Vec::new();
+        (
+            PaperStep {
+                bk,
+                model,
+                n,
+                y_elem,
+                size_e,
+                vert_keys,
+                labels,
+                amin: Vec::new(),
+            },
+            prm,
+        )
+    }
+}
 
-        for _em in 0..cfg.em_iters {
-            em_iters += 1;
-            let mut hw = HoodWindows::new(nh, cfg.window, cfg.threshold);
-            let mut hood_energy_f64: Vec<f64> = vec![0.0; nh];
+impl EmStep for PaperStep<'_> {
+    fn map_iter(&mut self, prm: &Params, hood_energy: &mut [f64]) {
+        let bk = self.bk;
+        let h = &self.model.hoods;
+        let n = self.n;
 
-            for _map in 0..cfg.map_iters {
-                total_map += 1;
+        // (1) Gather labels to elements.
+        let lbl_e: Vec<f32> = dpp::gather(bk, &self.labels, &h.members);
+        // (2) Per-hood label-1 counts; gather back to elements.
+        let (_, ones_h) = dpp::reduce_by_key(
+            bk, &h.hood_id, &lbl_e, 0.0f32, |a, b| a + b,
+        );
+        let ones_e: Vec<f32> = dpp::gather(bk, &ones_h, &h.hood_id);
 
-                // (1) Gather labels to elements.
-                let lbl_e: Vec<f32> = dpp::gather(bk, &labels, &h.members);
-                // (2) Per-hood label-1 counts; gather back to elements.
-                let (_, ones_h) = dpp::reduce_by_key(
-                    bk, &h.hood_id, &lbl_e, 0.0f32, |a, b| a + b,
-                );
-                let ones_e: Vec<f32> = dpp::gather(bk, &ones_h, &h.hood_id);
+        // (3)+(4) energies and per-instance minima.
+        let (e_min, a_min) = pair_paper(
+            bk, n, &self.y_elem, &lbl_e, &ones_e, &self.size_e, prm,
+        );
 
-                // (3)+(4) energies and per-instance minima.
-                let (e_min, a_min) = pair_paper(
-                    bk, n, &y_elem, &lbl_e, &ones_e, &size_e, &prm,
-                );
+        // (5) Per-vertex resolution over the static grouping.
+        let packed: Vec<u64> = dpp::zip_map(
+            bk, &e_min, &a_min,
+            |&e, &a| energy::pack_energy_label(e, a),
+        );
+        let packed_by_vert: Vec<u64> =
+            dpp::gather(bk, &packed, &h.vert_elems);
+        let (_, best) = dpp::reduce_by_key(
+            bk, &self.vert_keys, &packed_by_vert, u64::MAX,
+            |a, b| a.min(b),
+        );
+        // Scatter resolved labels back to the vertex array.
+        // (vert_keys is ascending-grouped and covers exactly the
+        // vertices that appear in hoods.)
+        let resolved: Vec<f32> =
+            dpp::map(bk, &best, |&p| energy::unpack_label(p) as f32);
+        let touched = dpp::unique(bk, &self.vert_keys);
+        dpp::scatter(bk, &resolved, &touched, &mut self.labels);
 
-                // (5) Per-vertex resolution over the static grouping.
-                let packed: Vec<u64> = dpp::zip_map(
-                    bk, &e_min, &a_min,
-                    |&e, &a| energy::pack_energy_label(e, a),
-                );
-                let packed_by_vert: Vec<u64> =
-                    dpp::gather(bk, &packed, &h.vert_elems);
-                let (_, best) = dpp::reduce_by_key(
-                    bk, &vert_keys, &packed_by_vert, u64::MAX,
-                    |a, b| a.min(b),
-                );
-                // Scatter resolved labels back to the vertex array.
-                // (vert_keys is ascending-grouped and covers exactly the
-                // vertices that appear in hoods.)
-                let resolved: Vec<f32> =
-                    dpp::map(bk, &best, |&p| energy::unpack_label(p) as f32);
-                let touched = dpp::unique(bk, &vert_keys);
-                dpp::scatter(bk, &resolved, &touched, &mut labels);
+        // (6) Per-hood energy sums.
+        let emin_f64: Vec<f64> = dpp::map(bk, &e_min, |&e| e as f64);
+        let (_, he) = dpp::reduce_by_key(
+            bk, &h.hood_id, &emin_f64, 0.0f64, |a, b| a + b,
+        );
+        hood_energy.copy_from_slice(&he);
+        self.amin = a_min;
+    }
 
-                // (6) Per-hood energy sums + convergence.
-                let emin_f64: Vec<f64> =
-                    dpp::map(bk, &e_min, |&e| e as f64);
-                let (_, he) = dpp::reduce_by_key(
-                    bk, &h.hood_id, &emin_f64, 0.0f64, |a, b| a + b,
-                );
-                hood_energy_f64 = he;
-                amin = a_min;
+    /// (7) Parameter statistics (chunked Reduce in chunk order).
+    fn stats(&mut self) -> Stats {
+        stats_reduce(self.bk, &self.amin, &self.y_elem)
+    }
 
-                let done = hw.push_all(&hood_energy_f64);
-                if done && !cfg.fixed_iters {
-                    break;
-                }
-            }
-
-            // (7) Parameter statistics (chunked Reduce in chunk order).
-            let stats = stats_reduce(bk, &amin, &y_elem);
-            prm = params::update(&stats, cfg.beta as f32);
-
-            let total: f64 = hood_energy_f64.iter().sum();
-            em_window.push(total);
-            if em_window.converged() && !cfg.fixed_iters {
-                break;
-            }
-        }
-
-        labels_u8 = dpp::map(bk, &labels, |&l| l as u8);
-        EmResult {
-            labels: labels_u8,
-            em_iters,
-            map_iters: total_map,
-            energy: *em_window.history().last().unwrap_or(&0.0),
-            history: em_window.history().to_vec(),
-            params: prm,
-        }
+    fn take_labels(&mut self) -> Vec<u8> {
+        dpp::map(self.bk, &self.labels, |&l| l as u8)
     }
 }
 
@@ -252,34 +329,54 @@ fn pair_paper(
     (emin, amin)
 }
 
-impl DppEngine {
-    /// Plan-cached pipeline mode (see [`PairMode::Planned`]): the
-    /// paper's Alg. 2 step for step, but restructured around what is
-    /// *static* across EM/MAP iterations.
-    ///
-    /// Once per run: build the three [`crate::dpp::SegmentPlan`]s —
-    /// hood membership and vertex grouping straight from their CSR
-    /// offsets (segments for free, no sort, empty segments included),
-    /// and the §3.2.2 replication-pairing keys (the ONE SortByKey of
-    /// the whole run; the paper re-sorts these identical keys every
-    /// iteration).
-    ///
-    /// Per MAP iteration: seven stages — Gather, ReduceByKey⟨Add⟩,
-    /// Gather, Map, ReduceByKey⟨Min⟩ (pairing), ReduceByKey⟨Min⟩ +
-    /// scatter (vertex resolve), ReduceByKey⟨Add⟩ (hood energies) —
-    /// run as **one** [`crate::dpp::Pipeline`] region over a
-    /// preallocated
-    /// workspace: one pool entry and six phase barriers instead of
-    /// ~eight fork-joins, zero per-iteration allocation, no sort.
-    ///
-    /// Bitwise-identical to Paper mode on every backend: each segment
-    /// is reduced serially in the cached stable-sort order, which is
-    /// exactly the order the per-iteration sort would have produced.
-    fn run_planned(&self, model: &MrfModel, cfg: &MrfConfig) -> EmResult {
-        use crate::dpp::timing::timed;
-        use crate::dpp::{Pipeline, SegmentPlan, SharedSlice};
+/// Plan-cached pipeline mode (see [`PairMode::Planned`]): the
+/// paper's Alg. 2 step for step, but restructured around what is
+/// *static* across EM/MAP iterations.
+///
+/// Once per run ([`PlannedStep::new`]): build the three
+/// [`crate::dpp::SegmentPlan`]s — hood membership and vertex grouping
+/// straight from their CSR offsets (segments for free, no sort, empty
+/// segments included), and the §3.2.2 replication-pairing keys (the
+/// ONE SortByKey of the whole run; the paper re-sorts these identical
+/// keys every iteration).
+///
+/// Per MAP iteration: seven stages — Gather, ReduceByKey⟨Add⟩,
+/// Gather, Map, ReduceByKey⟨Min⟩ (pairing), ReduceByKey⟨Min⟩ +
+/// scatter (vertex resolve), ReduceByKey⟨Add⟩ (hood energies) — run
+/// as **one** [`crate::dpp::Pipeline`] region over a preallocated
+/// workspace: one pool entry and six phase barriers instead of ~eight
+/// fork-joins, zero per-iteration allocation, no sort.
+///
+/// Bitwise-identical to Paper mode on every backend: each segment is
+/// reduced serially in the cached stable-sort order, which is exactly
+/// the order the per-iteration sort would have produced.
+struct PlannedStep<'a> {
+    bk: &'a Backend,
+    model: &'a MrfModel,
+    n: usize,
+    nh: usize,
+    nv: usize,
+    y_elem: Vec<f32>,
+    size_e: Vec<f32>,
+    hood_plan: crate::dpp::SegmentPlan,
+    vert_plan: crate::dpp::SegmentPlan,
+    pair_plan: crate::dpp::SegmentPlan,
+    labels: Vec<u8>,
+    // Workspace (allocated once; zero per-iteration allocation).
+    lbl_e: Vec<f32>,
+    ones_h: Vec<f32>,
+    ones_e: Vec<f32>,
+    e_rep: Vec<f32>,
+    emin: Vec<f32>,
+    amin: Vec<u8>,
+    packed: Vec<u64>,
+}
 
-        let bk = &self.backend;
+impl<'a> PlannedStep<'a> {
+    fn new(bk: &'a Backend, model: &'a MrfModel, cfg: &MrfConfig)
+        -> (PlannedStep<'a>, Params) {
+        use crate::dpp::SegmentPlan;
+
         let h = &model.hoods;
         let n = h.num_elements();
         let nh = h.num_hoods();
@@ -305,49 +402,63 @@ impl DppEngine {
         let pair_plan = SegmentPlan::build(bk, &pair_keys);
         debug_assert_eq!(pair_plan.num_segments(), n);
 
-        let (mut prm, mut labels) =
+        let (prm, labels) =
             params::init_random(nv, cfg.beta as f32, cfg.seed);
 
-        // Workspace (allocated once; zero per-iteration allocation).
-        let mut lbl_e = vec![0.0f32; n];
-        let mut ones_h = vec![0.0f32; nh];
-        let mut ones_e = vec![0.0f32; n];
-        let mut e_rep = vec![0.0f32; 2 * n];
-        let mut emin = vec![0.0f32; n];
-        let mut amin = vec![0u8; n];
-        let mut packed = vec![0u64; n];
-        let mut hood_energy = vec![0.0f64; nh];
+        (
+            PlannedStep {
+                bk,
+                model,
+                n,
+                nh,
+                nv,
+                y_elem,
+                size_e,
+                hood_plan,
+                vert_plan,
+                pair_plan,
+                labels,
+                lbl_e: vec![0.0f32; n],
+                ones_h: vec![0.0f32; nh],
+                ones_e: vec![0.0f32; n],
+                e_rep: vec![0.0f32; 2 * n],
+                emin: vec![0.0f32; n],
+                amin: vec![0u8; n],
+                packed: vec![0u64; n],
+            },
+            prm,
+        )
+    }
+}
 
-        let mut em_window = ConvergenceWindow::new(cfg.window, cfg.threshold);
-        let mut total_map = 0usize;
-        let mut em_iters = 0usize;
+impl EmStep for PlannedStep<'_> {
+    fn map_iter(&mut self, prm: &Params, hood_energy: &mut [f64]) {
+        use crate::dpp::{Pipeline, SharedSlice};
 
-        for _em in 0..cfg.em_iters {
-            em_iters += 1;
-            let mut hw = HoodWindows::new(nh, cfg.window, cfg.threshold);
-            for _map in 0..cfg.map_iters {
-                total_map += 1;
-                let pp = energy::Prepared::from_params(&prm);
-                {
-                    let w_labels = SharedSlice::new(&mut labels);
-                    let w_lbl_e = SharedSlice::new(&mut lbl_e);
-                    let w_ones_h = SharedSlice::new(&mut ones_h);
-                    let w_ones_e = SharedSlice::new(&mut ones_e);
-                    let w_e_rep = SharedSlice::new(&mut e_rep);
-                    let w_emin = SharedSlice::new(&mut emin);
-                    let w_amin = SharedSlice::new(&mut amin);
-                    let w_packed = SharedSlice::new(&mut packed);
-                    let w_he = SharedSlice::new(&mut hood_energy);
-                    let members = &h.members;
-                    let hood_id = &h.hood_id;
-                    let vert_elems = &h.vert_elems;
-                    let y_ref = &y_elem;
-                    let size_ref = &size_e;
-                    let pp_ref = &pp;
-                    let hood_plan_ref = &hood_plan;
-                    let vert_plan_ref = &vert_plan;
-                    let pair_plan_ref = &pair_plan;
-                    Pipeline::new()
+        let bk = self.bk;
+        let h = &self.model.hoods;
+        let (n, nh, nv) = (self.n, self.nh, self.nv);
+        let pp = energy::Prepared::from_params(prm);
+        {
+            let w_labels = SharedSlice::new(&mut self.labels);
+            let w_lbl_e = SharedSlice::new(&mut self.lbl_e);
+            let w_ones_h = SharedSlice::new(&mut self.ones_h);
+            let w_ones_e = SharedSlice::new(&mut self.ones_e);
+            let w_e_rep = SharedSlice::new(&mut self.e_rep);
+            let w_emin = SharedSlice::new(&mut self.emin);
+            let w_amin = SharedSlice::new(&mut self.amin);
+            let w_packed = SharedSlice::new(&mut self.packed);
+            let w_he = SharedSlice::new(hood_energy);
+            let members = &h.members;
+            let hood_id = &h.hood_id;
+            let vert_elems = &h.vert_elems;
+            let y_ref = &self.y_elem;
+            let size_ref = &self.size_e;
+            let pp_ref = &pp;
+            let hood_plan_ref = &self.hood_plan;
+            let vert_plan_ref = &self.vert_plan;
+            let pair_plan_ref = &self.pair_plan;
+            Pipeline::new()
                         // (1) Gather labels to elements.
                         .stage("Gather", n, |s, e| {
                             for i in s..e {
@@ -478,62 +589,59 @@ impl DppEngine {
                             }
                         })
                         .run(bk);
-                }
-
-                let done = hw.push_all(&hood_energy);
-                if done && !cfg.fixed_iters {
-                    break;
-                }
-            }
-
-            let stats =
-                timed("Reduce", || stats_reduce(bk, &amin, &y_elem));
-            prm = params::update(&stats, cfg.beta as f32);
-
-            let total: f64 = hood_energy.iter().sum();
-            em_window.push(total);
-            if em_window.converged() && !cfg.fixed_iters {
-                break;
-            }
-        }
-
-        EmResult {
-            labels,
-            em_iters,
-            map_iters: total_map,
-            energy: *em_window.history().last().unwrap_or(&0.0),
-            history: em_window.history().to_vec(),
-            params: prm,
         }
     }
 
-    /// Optimized fused pipeline (§Perf; see `PairMode::Fused`).
-    ///
-    /// Three static-segment passes per MAP iteration, all over
-    /// preallocated workspace (zero per-iteration allocation):
-    ///
-    /// 1. **Map over hoods** (fused ReduceByKey + energy Map — the L1
-    ///    kernel layout): per hood, sum the members' labels (`ones_h`),
-    ///    then compute each member's fused energy-min and the hood's
-    ///    energy sum. Both sweeps stay in cache.
-    /// 2. **ReduceByKey⟨Min⟩ over vertices** (static grouping): resolve
-    ///    each vertex's label from its instances' packed minima.
-    /// 3. Per-label statistics via chunked Reduce (per EM iteration).
-    ///
-    /// Bitwise-identical to the serial engine and to Paper mode (same
-    /// f32 op order within hoods/vertices).
-    fn run_fused(&self, model: &MrfModel, cfg: &MrfConfig) -> EmResult {
-        use crate::dpp::core::SharedSlice;
+    fn stats(&mut self) -> Stats {
         use crate::dpp::timing::timed;
+        timed("Reduce", || {
+            stats_reduce(self.bk, &self.amin, &self.y_elem)
+        })
+    }
 
-        let bk = &self.backend;
+    fn take_labels(&mut self) -> Vec<u8> {
+        std::mem::take(&mut self.labels)
+    }
+}
+
+/// Optimized fused pipeline (§Perf; see [`PairMode::Fused`]).
+///
+/// Three static-segment passes per MAP iteration, all over
+/// preallocated workspace (zero per-iteration allocation):
+///
+/// 1. **Map over hoods** (fused ReduceByKey + energy Map — the L1
+///    kernel layout): per hood, sum the members' labels (`ones_h`),
+///    then compute each member's fused energy-min and the hood's
+///    energy sum. Both sweeps stay in cache.
+/// 2. **ReduceByKey⟨Min⟩ over vertices** (static grouping): resolve
+///    each vertex's label from its instances' packed minima.
+/// 3. Per-label statistics via chunked Reduce (per EM iteration).
+///
+/// Bitwise-identical to the serial engine and to Paper mode (same
+/// f32 op order within hoods/vertices).
+struct FusedStep<'a> {
+    bk: &'a Backend,
+    model: &'a MrfModel,
+    y_elem: Vec<f32>,
+    /// Grains in hood/vertex units scaled from the element grain.
+    hood_grain: usize,
+    vert_grain: usize,
+    labels: Vec<u8>,
+    // Workspace (allocated once).
+    emin: Vec<f32>,
+    amin: Vec<u8>,
+    ones_h: Vec<f32>,
+}
+
+impl<'a> FusedStep<'a> {
+    fn new(bk: &'a Backend, model: &'a MrfModel, cfg: &MrfConfig)
+        -> (FusedStep<'a>, Params) {
         let h = &model.hoods;
         let n = h.num_elements();
         let nh = h.num_hoods();
         let nv = model.num_vertices();
         let y_elem = model.y_elems();
 
-        // Grains in hood/vertex units scaled from the element grain.
         let elem_grain = match bk {
             Backend::Serial => usize::MAX,
             Backend::Threaded { grain, .. } => *grain,
@@ -543,36 +651,47 @@ impl DppEngine {
         let vert_grain =
             (elem_grain / (n / nv.max(1)).max(1)).clamp(1, usize::MAX);
 
-        let (mut prm, mut labels) =
+        let (prm, labels) =
             params::init_random(nv, cfg.beta as f32, cfg.seed);
 
-        // Workspace (allocated once).
-        let mut emin = vec![0.0f32; n];
-        let mut amin = vec![0u8; n];
-        let mut ones_h = vec![0.0f32; nh];
-        let mut hood_energy = vec![0.0f64; nh];
+        (
+            FusedStep {
+                bk,
+                model,
+                y_elem,
+                hood_grain,
+                vert_grain,
+                labels,
+                emin: vec![0.0f32; n],
+                amin: vec![0u8; n],
+                ones_h: vec![0.0f32; nh],
+            },
+            prm,
+        )
+    }
+}
 
-        let mut em_window = ConvergenceWindow::new(cfg.window, cfg.threshold);
-        let mut total_map = 0usize;
-        let mut em_iters = 0usize;
+impl EmStep for FusedStep<'_> {
+    fn map_iter(&mut self, prm: &Params, hood_energy: &mut [f64]) {
+        use crate::dpp::core::SharedSlice;
+        use crate::dpp::timing::timed;
 
-        for _em in 0..cfg.em_iters {
-            em_iters += 1;
-            let mut hw = HoodWindows::new(nh, cfg.window, cfg.threshold);
-            for _map in 0..cfg.map_iters {
-                total_map += 1;
+        let bk = self.bk;
+        let h = &self.model.hoods;
+        let nh = h.num_hoods();
+        let nv = self.model.num_vertices();
 
-                // Pass 1: fused per-hood stats + energy map.
-                let pp = energy::Prepared::from_params(&prm);
-                timed("Map", || {
-                    let we = SharedSlice::new(&mut emin);
-                    let wa = SharedSlice::new(&mut amin);
-                    let wo = SharedSlice::new(&mut ones_h);
-                    let wh = SharedSlice::new(&mut hood_energy);
-                    let labels_ref = &labels;
-                    let y_ref = &y_elem;
-                    let prm_ref = &pp;
-                    bk.for_chunks_with(nh, hood_grain, |hs, he| {
+        // Pass 1: fused per-hood stats + energy map.
+        let pp = energy::Prepared::from_params(prm);
+        timed("Map", || {
+            let we = SharedSlice::new(&mut self.emin);
+            let wa = SharedSlice::new(&mut self.amin);
+            let wo = SharedSlice::new(&mut self.ones_h);
+            let wh = SharedSlice::new(hood_energy);
+            let labels_ref = &self.labels;
+            let y_ref = &self.y_elem;
+            let prm_ref = &pp;
+            bk.for_chunks_with(nh, self.hood_grain, |hs, he| {
                         for hd in hs..he {
                             let (s, e) = (
                                 h.offsets[hd] as usize,
@@ -605,13 +724,13 @@ impl DppEngine {
                     });
                 });
 
-                // Pass 2: per-vertex min-energy resolution (static
-                // segmented ReduceByKey<Min>).
-                timed("ReduceByKey", || {
-                    let wl = SharedSlice::new(&mut labels);
-                    let emin_ref = &emin;
-                    let amin_ref = &amin;
-                    bk.for_chunks_with(nv, vert_grain, |vs, ve| {
+        // Pass 2: per-vertex min-energy resolution (static
+        // segmented ReduceByKey<Min>).
+        timed("ReduceByKey", || {
+            let wl = SharedSlice::new(&mut self.labels);
+            let emin_ref = &self.emin;
+            let amin_ref = &self.amin;
+            bk.for_chunks_with(nv, self.vert_grain, |vs, ve| {
                         for v in vs..ve {
                             let (s, e) = (
                                 h.vert_offsets[v] as usize,
@@ -632,34 +751,18 @@ impl DppEngine {
                             };
                         }
                     });
-                });
+        });
+    }
 
-                let done = hw.push_all(&hood_energy);
-                if done && !cfg.fixed_iters {
-                    break;
-                }
-            }
+    fn stats(&mut self) -> Stats {
+        use crate::dpp::timing::timed;
+        timed("Reduce", || {
+            stats_reduce(self.bk, &self.amin, &self.y_elem)
+        })
+    }
 
-            let stats = timed("Reduce", || {
-                stats_reduce(bk, &amin, &y_elem)
-            });
-            prm = params::update(&stats, cfg.beta as f32);
-
-            let total: f64 = hood_energy.iter().sum();
-            em_window.push(total);
-            if em_window.converged() && !cfg.fixed_iters {
-                break;
-            }
-        }
-
-        EmResult {
-            labels,
-            em_iters,
-            map_iters: total_map,
-            energy: *em_window.history().last().unwrap_or(&0.0),
-            history: em_window.history().to_vec(),
-            params: prm,
-        }
+    fn take_labels(&mut self) -> Vec<u8> {
+        std::mem::take(&mut self.labels)
     }
 }
 

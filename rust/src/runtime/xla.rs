@@ -1,0 +1,111 @@
+//! Offline stub of the `xla` (PJRT) binding.
+//!
+//! The runtime was written against the xla-rs API surface
+//! (`PjRtClient` / `HloModuleProto` / `Literal` / ...), but the
+//! offline registry carries no `xla_extension` crate, so this module
+//! gates the dependency instead: the exact subset of the API the
+//! runtime calls, with [`PjRtClient::cpu`] reporting the backend as
+//! unavailable. Every caller already treats a failed client/load as a
+//! clean "xla runtime unavailable" condition (`dpp-pmrf engines`
+//! prints it, [`crate::mrf::make_engine`] returns an error for
+//! [`crate::config::EngineKind::Xla`]), so the rest of the crate
+//! builds and runs without the accelerator. Swapping in a real
+//! binding means deleting this file and adding the crate dependency —
+//! no call-site changes.
+
+use std::path::Path;
+
+/// Error type standing in for the binding's; callers only `Display`
+/// it into `anyhow` contexts.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl std::fmt::Display for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable() -> XlaError {
+    XlaError(
+        "xla/PJRT backend not available in this build (offline stub; \
+         see rust/src/runtime/xla.rs)"
+            .to_string(),
+    )
+}
+
+/// Parsed HLO module (stub: never constructed successfully).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &Path) -> Result<HloModuleProto, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// Computation wrapper around a parsed module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Host literal (stub: carries no data — nothing ever executes).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, XlaError> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// Device buffer returned by an execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// Compiled executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Always fails in the offline build; the real binding returns a
+    /// CPU client here.
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Err(unavailable())
+    }
+
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(unavailable())
+    }
+}

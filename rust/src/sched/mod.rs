@@ -1,0 +1,499 @@
+//! Sharded slice scheduler + batch serving front end (DESIGN.md §8).
+//!
+//! The paper parallelizes *within* one slice's EM optimization; this
+//! layer parallelizes *across* slices, where a many-slice stack leaves
+//! throughput on the table: initialization (overseg + graph + MCE +
+//! hoods) and optimization never overlapped, and every slice ran
+//! strictly after the previous one finished.
+//!
+//! Architecture (per run):
+//!
+//! ```text
+//!   slices 0..depth ──► SliceShard (work-stealing ranges, one per lane)
+//!        │ claim                                   [shard.rs]
+//!   init workers ×lanes ──► BoundedQueue(inflight) ──► optimize lanes
+//!   (overseg/graph/MCE/      backpressure cap           ×lanes, one
+//!    hoods per slice)        [queue.rs]                 Engine each
+//!        └──────────── two-stage software pipeline ─────────┘
+//! ```
+//!
+//! * **Lanes** — `cfg.sched.lanes` pairs of init/optimize workers.
+//!   Each optimize lane constructs its [`crate::mrf::Engine`] once and
+//!   reuses it for every slice the lane claims. (Today's engines keep
+//!   no cross-run state — plans and workspaces are per-model, and
+//!   models differ per slice — so this buys engine-construction reuse
+//!   and a seam where future engine-level caches, e.g. bucketed
+//!   workspace pools, would automatically amortize per lane.)
+//! * **In-flight cap** — `cfg.sched.inflight` bounds how many
+//!   initialized-but-unoptimized slice models wait between the stages;
+//!   producers block at the cap (bounded memory), and the observed
+//!   high-water mark is reported in [`SchedStats::peak_inflight`].
+//! * **Determinism** — every worker runs on a backend with the *same*
+//!   thread count and grain as the serial path
+//!   ([`crate::dpp::Backend::chunk_bounds`] depends on both), and each
+//!   slice is claimed exactly once, so per-slice labels, energies, and
+//!   the painted output volume are bitwise identical to the serial
+//!   loop for every lane count; `lanes = 1` *is* the pre-scheduler
+//!   serial loop, same backend, same order
+//!   (`rust/tests/sched_determinism.rs`). With `threads > 1` each of
+//!   the `2 × lanes` stage workers owns a pool of that size, so a run
+//!   oversubscribes to roughly `2 × lanes × threads` workers —
+//!   lane-parallel throughput runs want `threads = 1`.
+//!
+//! On top sits [`Service`]: submit N jobs (dataset + config), get
+//! deterministically-ordered [`RunReport`]s back, with backpressure
+//! via a bounded in-flight job cap (`service.rs`). Stage and job times
+//! flow into [`crate::dpp::timing`] under `Sched::init`, `Sched::opt`,
+//! and `Service::job` when profiling is enabled;
+//! `benches/throughput.rs` sweeps lanes × engines and reports
+//! slices/sec.
+
+pub mod queue;
+pub mod service;
+pub mod shard;
+
+pub use queue::BoundedQueue;
+pub use service::{Job, Service};
+pub use shard::SliceShard;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::config::{EngineKind, RunConfig};
+use crate::coordinator::{RunReport, SliceReport};
+use crate::dpp::{timing, Backend, SharedSlice};
+use crate::image::{Dataset, Volume};
+use crate::metrics::Confusion;
+use crate::mrf::{self, Engine, EngineResources, MrfModel};
+use crate::overseg::{oversegment, Overseg};
+use crate::pool::Pool;
+use crate::util::Timer;
+
+/// Scheduler shape and occupancy actually observed during one run —
+/// carried on [`RunReport`] so throughput numbers are reproducible
+/// from the report alone.
+#[derive(Debug, Clone)]
+pub struct SchedStats {
+    /// Optimize lanes the run executed with (after clamping to the
+    /// slice count).
+    pub lanes: usize,
+    /// Configured in-flight cap (0 on the serial path, which has no
+    /// hand-off queue).
+    pub inflight_cap: usize,
+    /// Peak number of initialized slices that waited in the hand-off
+    /// queue (always `<= inflight_cap` on the sharded path).
+    pub peak_inflight: usize,
+    /// Seconds each init worker spent building slice models.
+    pub init_busy_secs: Vec<f64>,
+    /// Seconds each optimize lane spent inside EM runs.
+    pub lane_busy_secs: Vec<f64>,
+}
+
+impl SchedStats {
+    /// Stats for the single-lane serial path.
+    pub fn serial(init_secs: f64, opt_secs: f64) -> SchedStats {
+        SchedStats {
+            lanes: 1,
+            inflight_cap: 0,
+            peak_inflight: 0,
+            init_busy_secs: vec![init_secs],
+            lane_busy_secs: vec![opt_secs],
+        }
+    }
+
+    /// Mean fraction of the run's wall clock each optimize lane spent
+    /// busy — 1.0 means the optimize stage never starved.
+    pub fn occupancy(&self, total_secs: f64) -> f64 {
+        if total_secs <= 0.0 || self.lane_busy_secs.is_empty() {
+            return 0.0;
+        }
+        let busy: f64 = self.lane_busy_secs.iter().sum();
+        (busy / (self.lane_busy_secs.len() as f64 * total_secs)).min(1.0)
+    }
+}
+
+/// Build the per-slice MRF model (the init stage): oversegment, region
+/// graph, maximal cliques, 1-neighborhoods. Shared by the serial path,
+/// the init workers, and [`crate::coordinator::Coordinator`].
+pub(crate) fn build_slice_model(
+    bk: &Backend,
+    cfg: &RunConfig,
+    input: &Volume,
+    z: usize,
+) -> (Overseg, MrfModel) {
+    let seg = oversegment(bk, &input.slice(z), &cfg.overseg);
+    let model = if cfg.engine == EngineKind::Serial {
+        mrf::build_model_serial(&seg)
+    } else {
+        mrf::build_model(bk, &seg)
+    };
+    (seg, model)
+}
+
+/// Map one slice's vertex labels back to pixels, into the slice's
+/// pixel window. The brighter class (higher estimated mu) renders as
+/// 255 so outputs are comparable across seeds and engines regardless
+/// of label symmetry. The ONE paint formula — both the serial path
+/// and the sharded lanes go through here, which is what keeps the
+/// serial-vs-sharded bitwise contract immune to formula drift.
+pub(crate) fn paint_pixels(
+    px: &mut [u8],
+    seg: &Overseg,
+    labels: &[u8],
+    params: &mrf::Params,
+) {
+    let bright: u8 = u8::from(params.mu[1] > params.mu[0]);
+    for (p, &region) in seg.labels.iter().enumerate() {
+        let l = labels[region as usize];
+        px[p] = if l == bright { 255 } else { 0 };
+    }
+}
+
+/// [`paint_pixels`] addressed by slice index.
+pub(crate) fn paint_slice(
+    out: &mut Volume,
+    z: usize,
+    seg: &Overseg,
+    labels: &[u8],
+    params: &mrf::Params,
+) {
+    paint_pixels(out.slice_mut(z), seg, labels, params);
+}
+
+/// Backend for one scheduler worker — the same construction rule as
+/// the coordinator's own backend ([`Backend::for_threads`]), which is
+/// what makes sharded per-slice results bitwise identical to the
+/// serial path.
+fn worker_backend(cfg: &RunConfig) -> Backend {
+    Backend::for_threads(cfg.threads, cfg.grain)
+}
+
+/// Run the slice pipeline for `dataset` under `cfg` through the
+/// scheduler, constructing engines from `res` (one per lane).
+/// `cfg.sched.lanes <= 1` reproduces the pre-scheduler serial loop
+/// bitwise on `res.backend`; more lanes shard the stack.
+pub fn run_slices(
+    dataset: &Dataset,
+    cfg: &RunConfig,
+    res: &EngineResources,
+) -> Result<RunReport> {
+    // Fail fast (and on the caller's thread) if the engine cannot be
+    // built — e.g. the XLA engine without loaded artifacts.
+    let probe = mrf::make_engine(cfg.engine, res)?;
+    if cfg.sched.lanes <= 1 || dataset.input.depth <= 1 {
+        return run_serial(dataset, cfg, &res.backend, probe);
+    }
+    let name = probe.name();
+    drop(probe);
+    let kind = cfg.engine;
+    let runtime = res.runtime.clone();
+    let bp = res.bp;
+    run_sharded_with(dataset, cfg, name, move |_lane, bk: &Backend| {
+        let pool = match bk {
+            Backend::Threaded { pool, .. } => Arc::clone(pool),
+            Backend::Serial => Pool::serial(),
+        };
+        let lane_res = EngineResources {
+            pool,
+            backend: bk.clone(),
+            runtime: runtime.clone(),
+            bp,
+        };
+        mrf::make_engine(kind, &lane_res)
+            .expect("engine construction already succeeded in the probe")
+    })
+}
+
+/// Sharded run with a caller-supplied engine factory (called once per
+/// optimize lane, on that lane's thread, with the lane's backend) —
+/// the hook benches use to drive non-default engine modes (e.g.
+/// `PairMode::Planned`) through the scheduler. Falls back to the
+/// serial loop when `cfg.sched.lanes <= 1`.
+pub fn run_sharded_with<F>(
+    dataset: &Dataset,
+    cfg: &RunConfig,
+    engine_name: &'static str,
+    factory: F,
+) -> Result<RunReport>
+where
+    F: Fn(usize, &Backend) -> Box<dyn Engine> + Sync,
+{
+    let depth = dataset.input.depth;
+    let lanes = cfg.sched.lanes.min(depth.max(1));
+    if lanes <= 1 {
+        let bk = worker_backend(cfg);
+        let engine = factory(0, &bk);
+        return run_serial(dataset, cfg, &bk, engine);
+    }
+    run_sharded_inner(dataset, cfg, lanes, engine_name, &factory)
+}
+
+/// Initialized slice waiting for an optimize lane.
+struct InitJob {
+    z: usize,
+    seg: Overseg,
+    model: MrfModel,
+    init_secs: f64,
+}
+
+/// Poison guard: if a stage worker unwinds, close the hand-off queue
+/// so the opposite stage's workers unblock (producers stuck on a full
+/// queue, consumers waiting for items) and the panic propagates
+/// through the scope joins instead of deadlocking the run.
+struct PoisonOnPanic<'a>(&'a BoundedQueue<InitJob>);
+
+impl Drop for PoisonOnPanic<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.close();
+        }
+    }
+}
+
+/// The pre-scheduler per-slice loop, bit for bit: init, optimize,
+/// paint, in ascending slice order on one backend.
+fn run_serial(
+    dataset: &Dataset,
+    cfg: &RunConfig,
+    bk: &Backend,
+    engine: Box<dyn Engine>,
+) -> Result<RunReport> {
+    let input = &dataset.input;
+    let t_total = Timer::start();
+    let mut output = Volume::new(input.width, input.height, input.depth);
+    let mut reports = Vec::with_capacity(input.depth);
+    let (mut init_total, mut opt_total) = (0.0f64, 0.0f64);
+
+    for z in 0..input.depth {
+        let t_init = Timer::start();
+        let (seg, model) = build_slice_model(bk, cfg, input, z);
+        let init_secs = t_init.elapsed_secs();
+        init_total += init_secs;
+        if timing::enabled() {
+            timing::record("Sched::init", t_init.elapsed().as_nanos() as u64);
+        }
+
+        let t_opt = Timer::start();
+        let res = engine.run(&model, &cfg.mrf);
+        let opt_secs = t_opt.elapsed_secs();
+        opt_total += opt_secs;
+        if timing::enabled() {
+            timing::record("Sched::opt", t_opt.elapsed().as_nanos() as u64);
+        }
+
+        paint_slice(&mut output, z, &seg, &res.labels, &res.params);
+
+        reports.push(SliceReport {
+            z,
+            regions: seg.num_regions,
+            hoods: model.hoods.num_hoods(),
+            elements: model.hoods.num_elements(),
+            em_iters: res.em_iters,
+            map_iters: res.map_iters,
+            init_secs,
+            opt_secs,
+            final_energy: res.energy,
+        });
+        crate::log_debug!(
+            "slice {z}: {} regions, {} hoods, init {:.3}s opt {:.3}s",
+            seg.num_regions,
+            model.hoods.num_hoods(),
+            init_secs,
+            opt_secs
+        );
+    }
+
+    Ok(finalize(
+        engine.name(),
+        output,
+        reports,
+        dataset,
+        t_total.elapsed_secs(),
+        SchedStats::serial(init_total, opt_total),
+    ))
+}
+
+fn run_sharded_inner<F>(
+    dataset: &Dataset,
+    cfg: &RunConfig,
+    lanes: usize,
+    engine_name: &'static str,
+    factory: &F,
+) -> Result<RunReport>
+where
+    F: Fn(usize, &Backend) -> Box<dyn Engine> + Sync,
+{
+    let input = &dataset.input;
+    let depth = input.depth;
+    let slice_len = input.slice_len();
+    let t_total = Timer::start();
+
+    if cfg.threads > 1 {
+        // The bitwise contract pins every worker's backend to
+        // cfg.threads (chunk bounds depend on it), so sharding cannot
+        // divide the thread budget — it multiplies it.
+        crate::log_info!(
+            "sched: {lanes} lanes x {} threads each (~{} workers incl. \
+             init stage) oversubscribes; prefer --threads 1 for \
+             lane-parallel throughput runs",
+            cfg.threads,
+            2 * lanes * cfg.threads
+        );
+    }
+
+    let shard = SliceShard::new(depth, lanes);
+    let queue: BoundedQueue<InitJob> =
+        BoundedQueue::new(cfg.sched.inflight);
+    let producers = AtomicUsize::new(lanes);
+    let reports: Mutex<Vec<Option<SliceReport>>> =
+        Mutex::new(vec![None; depth]);
+    let mut output = Volume::new(input.width, input.height, depth);
+    let out_win = SharedSlice::new(&mut output.data);
+
+    let (init_busy, lane_busy) = std::thread::scope(|s| {
+        let mut init_handles = Vec::with_capacity(lanes);
+        let mut opt_handles = Vec::with_capacity(lanes);
+        for lane in 0..lanes {
+            let (shard, queue, producers) = (&shard, &queue, &producers);
+            init_handles.push(s.spawn(move || {
+                let _poison = PoisonOnPanic(queue);
+                let bk = worker_backend(cfg);
+                let mut busy = 0.0f64;
+                while let Some(z) = shard.claim(lane) {
+                    let t = Timer::start();
+                    let (seg, model) =
+                        build_slice_model(&bk, cfg, input, z);
+                    let secs = t.elapsed_secs();
+                    busy += secs;
+                    if timing::enabled() {
+                        timing::record("Sched::init",
+                                       t.elapsed().as_nanos() as u64);
+                    }
+                    crate::log_debug!(
+                        "init lane {lane}: slice {z}, {} regions, {:.3}s",
+                        seg.num_regions, secs
+                    );
+                    let queued = queue
+                        .push(InitJob { z, seg, model, init_secs: secs });
+                    if !queued {
+                        break; // consumer side poisoned the queue
+                    }
+                }
+                if producers.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    queue.close();
+                }
+                busy
+            }));
+        }
+        for lane in 0..lanes {
+            let (queue, reports, out_win) = (&queue, &reports, &out_win);
+            opt_handles.push(s.spawn(move || {
+                let _poison = PoisonOnPanic(queue);
+                let bk = worker_backend(cfg);
+                let engine = factory(lane, &bk);
+                let mut busy = 0.0f64;
+                // Paint scratch, reused across the lane's slices
+                // (paint_pixels overwrites every pixel).
+                let mut px = vec![0u8; slice_len];
+                while let Some(job) = queue.pop() {
+                    let t = Timer::start();
+                    let res = engine.run(&job.model, &cfg.mrf);
+                    let secs = t.elapsed_secs();
+                    busy += secs;
+                    if timing::enabled() {
+                        timing::record("Sched::opt",
+                                       t.elapsed().as_nanos() as u64);
+                    }
+                    // Paint this slice, then publish it into the
+                    // shared output volume's disjoint voxel range
+                    // (SharedSlice because the volume is shared
+                    // across lanes; the scratch buffer keeps the
+                    // paint formula in paint_pixels, shared with the
+                    // serial path).
+                    paint_pixels(&mut px, &job.seg, &res.labels,
+                                 &res.params);
+                    let base = job.z * slice_len;
+                    for (p, &v) in px.iter().enumerate() {
+                        unsafe { out_win.write(base + p, v) };
+                    }
+                    crate::log_debug!(
+                        "opt lane {lane}: slice {}, opt {:.3}s", job.z, secs
+                    );
+                    reports.lock().unwrap()[job.z] = Some(SliceReport {
+                        z: job.z,
+                        regions: job.seg.num_regions,
+                        hoods: job.model.hoods.num_hoods(),
+                        elements: job.model.hoods.num_elements(),
+                        em_iters: res.em_iters,
+                        map_iters: res.map_iters,
+                        init_secs: job.init_secs,
+                        opt_secs: secs,
+                        final_energy: res.energy,
+                    });
+                }
+                busy
+            }));
+        }
+        (
+            init_handles
+                .into_iter()
+                .map(|h| h.join().expect("init worker panicked"))
+                .collect::<Vec<f64>>(),
+            opt_handles
+                .into_iter()
+                .map(|h| h.join().expect("optimize lane panicked"))
+                .collect::<Vec<f64>>(),
+        )
+    });
+
+    let slices: Vec<SliceReport> = reports
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .enumerate()
+        .map(|(z, r)| {
+            r.unwrap_or_else(|| panic!("slice {z} never optimized"))
+        })
+        .collect();
+
+    Ok(finalize(
+        engine_name,
+        output,
+        slices,
+        dataset,
+        t_total.elapsed_secs(),
+        SchedStats {
+            lanes,
+            inflight_cap: queue.cap(),
+            peak_inflight: queue.peak(),
+            init_busy_secs: init_busy,
+            lane_busy_secs: lane_busy,
+        },
+    ))
+}
+
+fn finalize(
+    engine: &'static str,
+    output: Volume,
+    slices: Vec<SliceReport>,
+    dataset: &Dataset,
+    total_secs: f64,
+    sched: SchedStats,
+) -> RunReport {
+    let confusion = dataset
+        .ground_truth
+        .as_ref()
+        .map(|t| Confusion::from_volumes(&output, t));
+    let porosity = crate::metrics::porosity(&output);
+    RunReport {
+        engine,
+        output,
+        slices,
+        confusion,
+        porosity,
+        total_secs,
+        sched,
+    }
+}

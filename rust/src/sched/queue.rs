@@ -1,0 +1,196 @@
+//! Bounded hand-off queue between the init and optimize stages.
+//!
+//! A Mutex + two-Condvar MPMC ring: producers block once `cap` items
+//! are waiting (the scheduler's backpressure contract — initialization
+//! can run at most `cap` slices ahead of optimization, bounding peak
+//! model memory), consumers block until an item or close arrives. The
+//! observed high-water mark is recorded so tests — and
+//! `RunReport::sched` — can assert the cap was honored.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+
+struct State<T> {
+    q: VecDeque<T>,
+    closed: bool,
+}
+
+/// Multi-producer multi-consumer queue holding at most `cap` items.
+pub struct BoundedQueue<T> {
+    state: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+    peak: AtomicUsize,
+}
+
+impl<T> BoundedQueue<T> {
+    /// Queue admitting at most `cap` (>= 1) waiting items.
+    pub fn new(cap: usize) -> BoundedQueue<T> {
+        BoundedQueue {
+            state: Mutex::new(State { q: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap: cap.max(1),
+            peak: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Highest occupancy ever observed (the in-flight cap audit).
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::Acquire)
+    }
+
+    /// Enqueue `v`, blocking while the queue is full. Returns `false`
+    /// (dropping `v`) if the queue was closed underneath the producer
+    /// — that only happens when the consumer side poisoned the queue
+    /// via [`BoundedQueue::close`] after a panic, and tells the
+    /// producer to stop instead of blocking forever on a full queue
+    /// nobody will drain.
+    pub fn push(&self, v: T) -> bool {
+        let mut st = self.state.lock().unwrap();
+        while st.q.len() >= self.cap && !st.closed {
+            st = self.not_full.wait(st).unwrap();
+        }
+        if st.closed {
+            return false;
+        }
+        st.q.push_back(v);
+        self.peak.fetch_max(st.q.len(), Ordering::AcqRel);
+        drop(st);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Dequeue the next item, blocking while the queue is empty and
+    /// open. Returns `None` only once the queue is closed AND drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(v) = st.q.pop_front() {
+                drop(st);
+                self.not_full.notify_one();
+                return Some(v);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Mark the producer side done: consumers drain what is queued,
+    /// then observe `None`.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_then_none_after_close() {
+        let q = BoundedQueue::new(4);
+        assert!(q.push(1));
+        assert!(q.push(2));
+        q.close();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pop(), None);
+        // Push after close is refused, not blocked (panic poisoning).
+        assert!(!q.push(3));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn close_releases_a_blocked_producer() {
+        // A producer stuck on a full queue must observe a close (the
+        // consumer-panic poison path) instead of blocking forever.
+        let q = BoundedQueue::new(1);
+        assert!(q.push(0));
+        std::thread::scope(|s| {
+            let qr = &q;
+            let h = s.spawn(move || qr.push(1)); // blocks: queue full
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            q.close();
+            assert!(!h.join().unwrap(), "push must report the close");
+        });
+    }
+
+    #[test]
+    fn producers_block_at_cap_and_peak_respects_it() {
+        // Property sweep: for every cap, a fast producer against a
+        // slow consumer never exceeds the cap — the high-water mark
+        // proves the backpressure held.
+        for cap in [1, 2, 3, 7] {
+            let q = BoundedQueue::new(cap);
+            let n = 50;
+            std::thread::scope(|s| {
+                let qp = &q;
+                s.spawn(move || {
+                    for i in 0..n {
+                        qp.push(i);
+                    }
+                    qp.close();
+                });
+                let mut got = Vec::new();
+                while let Some(v) = q.pop() {
+                    got.push(v);
+                    std::thread::yield_now();
+                }
+                assert_eq!(got, (0..n).collect::<Vec<_>>());
+            });
+            assert!(q.peak() <= cap, "cap {cap}, peak {}", q.peak());
+            assert!(q.peak() >= 1);
+        }
+    }
+
+    #[test]
+    fn many_producers_many_consumers_deliver_everything() {
+        let q = BoundedQueue::new(2);
+        let producers = 3;
+        let per = 40;
+        let total: usize = std::thread::scope(|s| {
+            let done = AtomicUsize::new(producers);
+            let doner = &done;
+            let qr = &q;
+            for p in 0..producers {
+                s.spawn(move || {
+                    for i in 0..per {
+                        qr.push(p * per + i);
+                    }
+                    if doner.fetch_sub(1, Ordering::AcqRel) == 1 {
+                        qr.close();
+                    }
+                });
+            }
+            let consumers: Vec<_> = (0..2)
+                .map(|_| {
+                    s.spawn(move || {
+                        let mut sum = 0usize;
+                        while let Some(v) = qr.pop() {
+                            sum += v;
+                        }
+                        sum
+                    })
+                })
+                .collect();
+            consumers.into_iter().map(|h| h.join().unwrap()).sum()
+        });
+        let n = producers * per;
+        assert_eq!(total, n * (n - 1) / 2);
+        assert!(q.peak() <= 2);
+    }
+}

@@ -1,0 +1,275 @@
+//! Batch serving front end over the slice scheduler.
+//!
+//! A [`Service`] owns a small crew of job workers. Callers
+//! [`Service::submit`] jobs — a dataset plus the [`RunConfig`] to run
+//! it under — and block only when the configured number of jobs is
+//! already in flight (admission backpressure, same contract as the
+//! slice queue one layer down). Each job runs the full coordinator
+//! pipeline (which itself shards slices across `cfg.sched.lanes`
+//! lanes), so a deployment has two independent concurrency knobs:
+//! jobs in flight × lanes per job.
+//!
+//! Results come back through [`Ticket`]s; [`Service::run_batch`]
+//! returns reports in **submission order** regardless of completion
+//! order — the determinism contract callers script against. Per-job
+//! wall clock is recorded under `Service::job` in
+//! [`crate::dpp::timing`] when profiling is enabled.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::coordinator::{Coordinator, RunReport};
+use crate::dpp::timing;
+use crate::image::Dataset;
+use crate::util::Timer;
+
+/// One unit of serving work: segment `dataset` under `cfg`.
+pub struct Job {
+    pub dataset: Dataset,
+    pub cfg: RunConfig,
+}
+
+/// Completion slot one job's result is published through.
+struct Slot {
+    cell: Mutex<Option<Result<RunReport>>>,
+    done: Condvar,
+}
+
+/// Handle to one submitted job; [`Ticket::wait`] blocks until the
+/// job's report (or error) is available.
+pub struct Ticket {
+    slot: Arc<Slot>,
+}
+
+impl Ticket {
+    /// Block until the job completes and take its result.
+    pub fn wait(self) -> Result<RunReport> {
+        let mut cell = self.slot.cell.lock().unwrap();
+        loop {
+            if let Some(res) = cell.take() {
+                return res;
+            }
+            cell = self.slot.done.wait(cell).unwrap();
+        }
+    }
+}
+
+struct Queued {
+    job: Job,
+    slot: Arc<Slot>,
+}
+
+struct ServiceState {
+    queue: VecDeque<Queued>,
+    /// Jobs submitted and not yet completed (queued + running).
+    inflight: usize,
+    open: bool,
+}
+
+struct Shared {
+    state: Mutex<ServiceState>,
+    /// Workers wait here for jobs.
+    jobs: Condvar,
+    /// Submitters wait here for in-flight capacity.
+    space: Condvar,
+    inflight_cap: usize,
+}
+
+/// Multi-job segmentation service (see module docs).
+pub struct Service {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Service {
+    /// Service with `workers` job threads admitting at most
+    /// `inflight_cap` concurrent jobs (both clamped to >= 1;
+    /// `inflight_cap` below `workers` leaves workers idle).
+    pub fn new(workers: usize, inflight_cap: usize) -> Service {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(ServiceState {
+                queue: VecDeque::new(),
+                inflight: 0,
+                open: true,
+            }),
+            jobs: Condvar::new(),
+            space: Condvar::new(),
+            inflight_cap: inflight_cap.max(1),
+        });
+        let workers = (0..workers.max(1))
+            .map(|w| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("sched-serve-{w}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn service worker")
+            })
+            .collect();
+        Service { shared, workers }
+    }
+
+    pub fn inflight_cap(&self) -> usize {
+        self.shared.inflight_cap
+    }
+
+    /// Submit one job, blocking while `inflight_cap` jobs are already
+    /// in flight (admission backpressure).
+    pub fn submit(&self, job: Job) -> Ticket {
+        let slot = Arc::new(Slot {
+            cell: Mutex::new(None),
+            done: Condvar::new(),
+        });
+        let mut st = self.shared.state.lock().unwrap();
+        while st.inflight >= self.shared.inflight_cap {
+            st = self.shared.space.wait(st).unwrap();
+        }
+        st.inflight += 1;
+        st.queue.push_back(Queued { job, slot: Arc::clone(&slot) });
+        drop(st);
+        self.shared.jobs.notify_one();
+        Ticket { slot }
+    }
+
+    /// Submit every job and wait for all of them; reports come back in
+    /// **submission order** regardless of completion order.
+    pub fn run_batch(&self, jobs: Vec<Job>) -> Vec<Result<RunReport>> {
+        // Submission interleaves with completion once the in-flight
+        // cap is hit; tickets keep the order either way.
+        let tickets: Vec<Ticket> =
+            jobs.into_iter().map(|j| self.submit(j)).collect();
+        tickets.into_iter().map(Ticket::wait).collect()
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.open = false;
+        }
+        self.shared.jobs.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let queued = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(q) = st.queue.pop_front() {
+                    break q;
+                }
+                if !st.open {
+                    return;
+                }
+                st = shared.jobs.wait(st).unwrap();
+            }
+        };
+        let t = Timer::start();
+        // Contain panics to the job: an unwinding run would otherwise
+        // leave the ticket's condvar waiting forever and leak one unit
+        // of in-flight capacity — per-job failures must never be fatal
+        // to the service.
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || run_job(&queued.job),
+        ))
+        .unwrap_or_else(|p| Err(anyhow::anyhow!(
+            "job panicked: {}", panic_message(p.as_ref())
+        )));
+        if timing::enabled() {
+            timing::record("Service::job", t.elapsed().as_nanos() as u64);
+        }
+        *queued.slot.cell.lock().unwrap() = Some(res);
+        queued.slot.done.notify_all();
+        {
+            let mut st = shared.state.lock().unwrap();
+            st.inflight -= 1;
+        }
+        shared.space.notify_one();
+    }
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> &str {
+    p.downcast_ref::<&str>().copied().unwrap_or_else(|| {
+        p.downcast_ref::<String>().map(String::as_str)
+            .unwrap_or("<non-string payload>")
+    })
+}
+
+fn run_job(job: &Job) -> Result<RunReport> {
+    let coord = Coordinator::new(job.cfg.clone())?;
+    coord.run(&job.dataset)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetConfig, EngineKind};
+    use crate::image;
+
+    fn job(seed: u64, lanes: usize) -> Job {
+        let mut cfg = RunConfig {
+            dataset: DatasetConfig {
+                width: 48,
+                height: 48,
+                slices: 2,
+                seed,
+                ..Default::default()
+            },
+            engine: EngineKind::Dpp,
+            threads: 1,
+            ..Default::default()
+        };
+        cfg.sched.lanes = lanes;
+        let dataset = image::generate(&cfg.dataset);
+        Job { dataset, cfg }
+    }
+
+    #[test]
+    fn batch_returns_reports_in_submission_order() {
+        let service = Service::new(2, 2);
+        let jobs = vec![job(11, 1), job(22, 2), job(33, 1)];
+        let seeds = [11u64, 22, 33];
+        let reports = service.run_batch(jobs);
+        assert_eq!(reports.len(), 3);
+        for (i, r) in reports.iter().enumerate() {
+            let r = r.as_ref().expect("job succeeded");
+            assert_eq!(r.slices.len(), 2, "job {i} (seed {})", seeds[i]);
+            assert!(r.total_secs > 0.0);
+        }
+        // Same seed => same output, independent of which worker ran it.
+        let again = service.run_batch(vec![job(11, 1)]);
+        assert_eq!(
+            again[0].as_ref().unwrap().output.data,
+            reports[0].as_ref().unwrap().output.data
+        );
+    }
+
+    #[test]
+    fn backpressure_caps_inflight_jobs() {
+        // cap 1 on a 2-worker service: submissions serialize, results
+        // still come back and in order.
+        let service = Service::new(2, 1);
+        let reports =
+            service.run_batch(vec![job(1, 1), job(2, 1), job(3, 1)]);
+        assert_eq!(reports.len(), 3);
+        assert!(reports.iter().all(|r| r.is_ok()));
+    }
+
+    #[test]
+    fn errors_are_per_job_not_fatal() {
+        let service = Service::new(1, 2);
+        let mut bad = job(5, 1);
+        bad.cfg.engine = EngineKind::Xla; // no artifacts loaded => error
+        let reports = service.run_batch(vec![bad, job(6, 1)]);
+        assert!(reports[0].is_err());
+        assert!(reports[1].is_ok());
+    }
+}

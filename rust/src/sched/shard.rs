@@ -1,0 +1,223 @@
+//! Work-stealing shard of the slice index space.
+//!
+//! The same range-stealing discipline as [`crate::pool`], lifted from
+//! elements to *slices*: every lane owns a contiguous range of slice
+//! indices packed into one atomic (`start:u32 | end:u32`), pops single
+//! indices from the front, and — when its range drains — steals the
+//! back half of the largest victim range. The contiguous split keeps
+//! each lane walking neighboring slices (locality for the per-lane
+//! engine state) while guaranteeing no idle lane waits on a loaded one.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Packed(u64);
+
+impl Packed {
+    #[inline]
+    fn new(start: u32, end: u32) -> Self {
+        Packed(((start as u64) << 32) | end as u64)
+    }
+    #[inline]
+    fn start(self) -> u32 {
+        (self.0 >> 32) as u32
+    }
+    #[inline]
+    fn end(self) -> u32 {
+        self.0 as u32
+    }
+    #[inline]
+    fn len(self) -> u32 {
+        self.end().saturating_sub(self.start())
+    }
+}
+
+enum Steal {
+    /// Loot installed as the thief's new range.
+    Won,
+    /// Lost a CAS race; worth retrying.
+    Lost,
+    /// No victim holds 2+ slices — every remaining slice will be
+    /// drained by its owner, so the thief is done.
+    Empty,
+}
+
+/// The slice index space `0..n` sharded across `lanes` owners.
+///
+/// Guarantee: across all lanes, [`SliceShard::claim`] yields every
+/// index in `0..n` exactly once (in some order), then `None` forever.
+pub struct SliceShard {
+    ranges: Vec<AtomicU64>,
+}
+
+impl SliceShard {
+    /// Evenly partition `0..n` into one contiguous range per lane
+    /// (front lanes get the remainder, like the pool's initial split).
+    pub fn new(n: usize, lanes: usize) -> SliceShard {
+        assert!(n <= u32::MAX as usize, "slice count exceeds packed range");
+        let lanes = lanes.max(1);
+        let per = n / lanes;
+        let rem = n % lanes;
+        let mut ranges = Vec::with_capacity(lanes);
+        let mut at = 0usize;
+        for lane in 0..lanes {
+            let len = per + usize::from(lane < rem);
+            ranges.push(AtomicU64::new(
+                Packed::new(at as u32, (at + len) as u32).0,
+            ));
+            at += len;
+        }
+        SliceShard { ranges }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Slices not yet claimed (racy snapshot; exact once quiescent).
+    pub fn remaining(&self) -> usize {
+        self.ranges
+            .iter()
+            .map(|r| Packed(r.load(Ordering::Acquire)).len() as usize)
+            .sum()
+    }
+
+    /// Pop the next slice for `lane`: front of its own range first,
+    /// stealing from the most-loaded victim once the range drains.
+    pub fn claim(&self, lane: usize) -> Option<usize> {
+        loop {
+            if let Some(z) = self.pop_front(lane) {
+                return Some(z);
+            }
+            match self.steal(lane) {
+                Steal::Won | Steal::Lost => continue,
+                Steal::Empty => return None,
+            }
+        }
+    }
+
+    fn pop_front(&self, lane: usize) -> Option<usize> {
+        let slot = &self.ranges[lane];
+        loop {
+            let cur = Packed(slot.load(Ordering::Acquire));
+            let (s, e) = (cur.start(), cur.end());
+            if s >= e {
+                return None;
+            }
+            let new = Packed::new(s + 1, e);
+            if slot
+                .compare_exchange_weak(cur.0, new.0, Ordering::AcqRel,
+                                       Ordering::Relaxed)
+                .is_ok()
+            {
+                return Some(s as usize);
+            }
+        }
+    }
+
+    fn steal(&self, lane: usize) -> Steal {
+        // Victim with the most remaining slices; a single remaining
+        // slice is left to its owner (halving it would steal nothing).
+        let mut best: Option<(usize, Packed)> = None;
+        for (v, slot) in self.ranges.iter().enumerate() {
+            if v == lane {
+                continue;
+            }
+            let cur = Packed(slot.load(Ordering::Acquire));
+            if cur.len() >= 2 {
+                match best {
+                    Some((_, b)) if b.len() >= cur.len() => {}
+                    _ => best = Some((v, cur)),
+                }
+            }
+        }
+        let (v, cur) = match best {
+            Some(x) => x,
+            None => return Steal::Empty,
+        };
+        let (s, e) = (cur.start(), cur.end());
+        let mid = e - (e - s) / 2;
+        let shrunk = Packed::new(s, mid);
+        if self.ranges[v]
+            .compare_exchange(cur.0, shrunk.0, Ordering::AcqRel,
+                              Ordering::Relaxed)
+            .is_ok()
+        {
+            self.ranges[lane]
+                .store(Packed::new(mid, e).0, Ordering::Release);
+            Steal::Won
+        } else {
+            Steal::Lost
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn single_lane_claims_in_order() {
+        let shard = SliceShard::new(5, 1);
+        let got: Vec<usize> =
+            std::iter::from_fn(|| shard.claim(0)).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+        assert_eq!(shard.claim(0), None);
+    }
+
+    #[test]
+    fn every_index_claimed_exactly_once_concurrently() {
+        for lanes in [2, 3, 4, 8] {
+            let n = 503;
+            let shard = SliceShard::new(n, lanes);
+            let hits: Vec<AtomicU32> =
+                (0..n).map(|_| AtomicU32::new(0)).collect();
+            std::thread::scope(|s| {
+                for lane in 0..lanes {
+                    let shard = &shard;
+                    let hits = &hits;
+                    s.spawn(move || {
+                        while let Some(z) = shard.claim(lane) {
+                            hits[z].fetch_add(1, Ordering::Relaxed);
+                        }
+                    });
+                }
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "lanes={lanes}"
+            );
+        }
+    }
+
+    #[test]
+    fn idle_lane_steals_from_loaded_one() {
+        // Lane 1's initial range is empty (2 lanes, all work in lane
+        // 0's half after lane 0 never pops): a claim from lane 1 must
+        // still find work.
+        let shard = SliceShard::new(8, 2);
+        // Lane 1 starts with 4..8; drain those, then steal from lane 0.
+        let mut seen = Vec::new();
+        while let Some(z) = shard.claim(1) {
+            seen.push(z);
+        }
+        assert_eq!(seen.len(), 7, "lane 1 drains all but the last \
+                                   owner-reserved slice: {seen:?}");
+        assert_eq!(shard.claim(0), Some(0));
+        assert_eq!(shard.claim(0), None);
+    }
+
+    #[test]
+    fn empty_and_more_lanes_than_slices() {
+        let shard = SliceShard::new(0, 4);
+        for lane in 0..4 {
+            assert_eq!(shard.claim(lane), None);
+        }
+        let shard = SliceShard::new(2, 4);
+        let mut got: Vec<usize> =
+            (0..4).filter_map(|lane| shard.claim(lane)).collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1]);
+    }
+}

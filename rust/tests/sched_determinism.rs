@@ -1,0 +1,165 @@
+//! Scheduler determinism suite (ISSUE 3 acceptance): sharding the
+//! slice stack across lanes must change *throughput only*. For every
+//! lane count the output volume and every per-slice final energy must
+//! be bitwise identical to the serial `Coordinator::run` path, on both
+//! the DPP-MAP and BP engines; and the init→optimize hand-off queue
+//! must never hold more than the configured in-flight cap.
+
+use dpp_pmrf::config::{DatasetConfig, EngineKind, RunConfig};
+use dpp_pmrf::coordinator::{Coordinator, RunReport};
+use dpp_pmrf::image::{self, Dataset};
+
+fn cfg(engine: EngineKind, lanes: usize, slices: usize) -> RunConfig {
+    let mut cfg = RunConfig {
+        dataset: DatasetConfig {
+            width: 48,
+            height: 48,
+            slices,
+            ..Default::default()
+        },
+        engine,
+        // threads > 1 so the determinism claim covers the threaded
+        // backend (chunk bounds depend on the thread count — every
+        // lane must reproduce them exactly).
+        threads: 2,
+        ..Default::default()
+    };
+    cfg.sched.lanes = lanes;
+    cfg
+}
+
+fn run(c: RunConfig, ds: &Dataset) -> RunReport {
+    Coordinator::new(c).unwrap().run(ds).unwrap()
+}
+
+/// Bitwise comparison of everything the scheduler must not perturb.
+fn assert_identical(a: &RunReport, b: &RunReport, tag: &str) {
+    assert_eq!(a.output.data, b.output.data, "{tag}: output volume");
+    assert_eq!(a.slices.len(), b.slices.len(), "{tag}: slice count");
+    for (x, y) in a.slices.iter().zip(&b.slices) {
+        assert_eq!(x.z, y.z, "{tag}: slice order");
+        assert_eq!(
+            x.final_energy.to_bits(),
+            y.final_energy.to_bits(),
+            "{tag}: slice {} energy {} vs {}",
+            x.z, x.final_energy, y.final_energy
+        );
+        assert_eq!(x.em_iters, y.em_iters, "{tag}: slice {}", x.z);
+        assert_eq!(x.map_iters, y.map_iters, "{tag}: slice {}", x.z);
+        assert_eq!(x.regions, y.regions, "{tag}: slice {}", x.z);
+        assert_eq!(x.hoods, y.hoods, "{tag}: slice {}", x.z);
+    }
+    assert_eq!(a.porosity.to_bits(), b.porosity.to_bits(), "{tag}");
+}
+
+#[test]
+fn lanes_1_matches_manual_serial_loop() {
+    // The scheduler's serial path must reproduce the literal pre-PR
+    // loop: build model, run engine, paint — in ascending slice order
+    // on the coordinator's own backend.
+    for engine in [EngineKind::Dpp, EngineKind::Bp] {
+        let c = cfg(engine, 1, 3);
+        let ds = image::generate(&c.dataset);
+        let coord = Coordinator::new(c.clone()).unwrap();
+        let report = coord.run(&ds).unwrap();
+
+        let eng = coord.engine();
+        let mut manual =
+            dpp_pmrf::image::Volume::new(48, 48, c.dataset.slices);
+        for z in 0..c.dataset.slices {
+            let (seg, model) = coord.build_slice_model(&ds.input, z);
+            let res = eng.run(&model, &c.mrf);
+            assert_eq!(
+                res.energy.to_bits(),
+                report.slices[z].final_energy.to_bits(),
+                "{engine:?} slice {z}"
+            );
+            let bright = u8::from(res.params.mu[1] > res.params.mu[0]);
+            let px = manual.slice_mut(z);
+            for (p, &region) in seg.labels.iter().enumerate() {
+                px[p] = if res.labels[region as usize] == bright {
+                    255
+                } else {
+                    0
+                };
+            }
+        }
+        assert_eq!(manual.data, report.output.data, "{engine:?}");
+    }
+}
+
+#[test]
+fn sharded_lanes_bitwise_match_serial_dpp() {
+    let ds = image::generate(&cfg(EngineKind::Dpp, 1, 6).dataset);
+    let serial = run(cfg(EngineKind::Dpp, 1, 6), &ds);
+    assert_eq!(serial.sched.lanes, 1);
+    for lanes in [2, 4] {
+        let sharded = run(cfg(EngineKind::Dpp, lanes, 6), &ds);
+        assert_eq!(sharded.sched.lanes, lanes);
+        assert_identical(&sharded, &serial, &format!("dpp lanes={lanes}"));
+    }
+}
+
+#[test]
+fn sharded_lanes_bitwise_match_serial_bp() {
+    let ds = image::generate(&cfg(EngineKind::Bp, 1, 6).dataset);
+    let serial = run(cfg(EngineKind::Bp, 1, 6), &ds);
+    for lanes in [2, 4] {
+        let sharded = run(cfg(EngineKind::Bp, lanes, 6), &ds);
+        assert_identical(&sharded, &serial, &format!("bp lanes={lanes}"));
+    }
+}
+
+#[test]
+fn single_threaded_lanes_also_match() {
+    // threads = 1 switches every worker to Backend::Serial — the
+    // lane-parallel throughput configuration must hold the same
+    // bitwise contract.
+    let mut base = cfg(EngineKind::Dpp, 1, 5);
+    base.threads = 1;
+    let ds = image::generate(&base.dataset);
+    let serial = run(base.clone(), &ds);
+    let mut sharded_cfg = base;
+    sharded_cfg.sched.lanes = 4;
+    let sharded = run(sharded_cfg, &ds);
+    assert_identical(&sharded, &serial, "dpp threads=1 lanes=4");
+}
+
+#[test]
+fn inflight_cap_is_never_exceeded() {
+    // Property sweep over caps and lane counts: the queue's observed
+    // high-water mark must respect the configured cap, and at least
+    // one slice must have flowed through the queue.
+    let ds = image::generate(&cfg(EngineKind::Dpp, 1, 8).dataset);
+    for cap in [1, 2, 3] {
+        for lanes in [2, 4] {
+            let mut c = cfg(EngineKind::Dpp, lanes, 8);
+            c.sched.inflight = cap;
+            let report = run(c, &ds);
+            assert!(
+                report.sched.peak_inflight <= cap,
+                "cap {cap} lanes {lanes}: peak {}",
+                report.sched.peak_inflight
+            );
+            assert!(report.sched.peak_inflight >= 1,
+                    "cap {cap} lanes {lanes}: queue never used");
+            assert_eq!(report.sched.inflight_cap, cap);
+            assert_eq!(report.slices.len(), 8);
+        }
+    }
+}
+
+#[test]
+fn throughput_metrics_are_consistent() {
+    let mut c = cfg(EngineKind::Dpp, 2, 4);
+    c.threads = 1;
+    let ds = image::generate(&c.dataset);
+    let report = run(c, &ds);
+    assert!(report.total_secs > 0.0);
+    let expect = report.slices.len() as f64 / report.total_secs;
+    assert!((report.slices_per_sec() - expect).abs() < 1e-12);
+    let occ = report.lane_occupancy();
+    assert!((0.0..=1.0).contains(&occ), "occupancy {occ}");
+    assert_eq!(report.sched.lane_busy_secs.len(), 2);
+    assert_eq!(report.sched.init_busy_secs.len(), 2);
+}
