@@ -19,10 +19,20 @@ use dpp_pmrf::util::measure;
 
 fn main() {
     let scale = Scale::from_env();
-    let runtime = Arc::new(
-        EmRuntime::load(std::path::Path::new("artifacts"))
-            .expect("run `make artifacts` first"),
-    );
+    // Skip-cleanly convention (shared with the runtime/xla tests): a
+    // missing or unloadable artifact set is an environment condition,
+    // not a bench failure.
+    let runtime = match EmRuntime::load(std::path::Path::new("artifacts")) {
+        Ok(rt) => Arc::new(rt),
+        Err(e) => {
+            eprintln!(
+                "skipping table1_platforms: xla runtime unavailable \
+                 ({e}); run `make artifacts` to enable the accelerator \
+                 rows"
+            );
+            return;
+        }
+    };
     let mut report = Report::new("table1_platforms");
     let max_threads = dpp_pmrf::pool::available_threads();
 

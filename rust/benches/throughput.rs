@@ -12,7 +12,9 @@
 use dpp_pmrf::bench_support::{Report, Scale};
 use dpp_pmrf::bp::{BpConfig, BpEngine};
 use dpp_pmrf::config::{DatasetConfig, DatasetKind, MrfConfig, RunConfig};
-use dpp_pmrf::dpp::Backend;
+use std::sync::Arc;
+
+use dpp_pmrf::dpp::Device;
 use dpp_pmrf::image;
 use dpp_pmrf::mrf::dpp::{DppEngine, PairMode};
 use dpp_pmrf::mrf::Engine;
@@ -21,7 +23,8 @@ use dpp_pmrf::util::measure;
 
 const LANES: [usize; 4] = [1, 2, 4, 8];
 
-type Factory = Box<dyn Fn(usize, &Backend) -> Box<dyn Engine> + Sync>;
+type Factory =
+    Box<dyn Fn(usize, &Arc<dyn Device>) -> Box<dyn Engine> + Sync>;
 
 fn main() {
     let scale = Scale::from_env();
@@ -50,15 +53,16 @@ fn main() {
     let ds = image::generate(&base.dataset);
 
     let engines: Vec<(&'static str, Factory)> = vec![
-        ("dpp", Box::new(|_, bk: &Backend| {
-            Box::new(DppEngine::new(bk.clone())) as Box<dyn Engine>
+        ("dpp", Box::new(|_, dev: &Arc<dyn Device>| {
+            Box::new(DppEngine::new(Arc::clone(dev))) as Box<dyn Engine>
         })),
-        ("dpp-planned", Box::new(|_, bk: &Backend| {
-            Box::new(DppEngine::with_mode(bk.clone(), PairMode::Planned))
+        ("dpp-planned", Box::new(|_, dev: &Arc<dyn Device>| {
+            Box::new(DppEngine::with_mode(Arc::clone(dev),
+                                          PairMode::Planned))
                 as Box<dyn Engine>
         })),
-        ("bp", Box::new(|_, bk: &Backend| {
-            Box::new(BpEngine::new(bk.clone(), BpConfig::default()))
+        ("bp", Box::new(|_, dev: &Arc<dyn Device>| {
+            Box::new(BpEngine::new(Arc::clone(dev), BpConfig::default()))
                 as Box<dyn Engine>
         })),
     ];
@@ -73,9 +77,10 @@ fn main() {
             // metric labels — no extra un-timed pass.
             let last = std::cell::RefCell::new(None);
             let stats = measure(scale.warmup, scale.reps, || {
-                let r = sched::run_sharded_with(&ds, &cfg, name, |l, bk| {
-                    factory(l, bk)
-                })
+                let r =
+                    sched::run_sharded_with(&ds, &cfg, name, |l, dev| {
+                        factory(l, dev)
+                    })
                 .expect("sharded run");
                 *last.borrow_mut() = Some(r);
             });

@@ -10,8 +10,10 @@
 //! the MAP engines do. `EmResult::map_iters` reports total BP sweeps,
 //! making iteration counts comparable in `benches/bp_vs_map.rs`.
 
+use std::sync::Arc;
+
 use crate::config::MrfConfig;
-use crate::dpp::Backend;
+use crate::dpp::{Device, DeviceExt, IntoDevice};
 use crate::mrf::{self, params, ConvergenceWindow, Engine, EmResult,
                  MrfModel};
 
@@ -20,17 +22,20 @@ use super::sweep::{self, BpState};
 use super::{BpConfig, BpSchedule};
 
 pub struct BpEngine {
-    backend: Backend,
+    device: Arc<dyn Device>,
     pub bp: BpConfig,
 }
 
 impl BpEngine {
-    pub fn new(backend: Backend, bp: BpConfig) -> Self {
-        BpEngine { backend, bp }
+    /// Engine on any device — accepts a concrete device, an
+    /// `Arc<dyn Device>`, or the deprecated `Backend` spelling.
+    pub fn new(device: impl IntoDevice, bp: BpConfig) -> Self {
+        BpEngine { device: device.into_device(), bp }
     }
 
-    pub fn backend(&self) -> &Backend {
-        &self.backend
+    /// The device every sweep of this engine executes on.
+    pub fn device(&self) -> &Arc<dyn Device> {
+        &self.device
     }
 }
 
@@ -43,7 +48,7 @@ impl Engine for BpEngine {
     }
 
     fn run(&self, model: &MrfModel, cfg: &MrfConfig) -> EmResult {
-        let bk = &self.backend;
+        let bk: &dyn Device = &*self.device;
         let nv = model.num_vertices();
         let g = BpGraph::build(bk, model, cfg.beta as f32);
         let y_elem = model.y_elems();
@@ -100,7 +105,7 @@ impl Engine for BpEngine {
 /// hood accumulates sequentially inside one chunk iteration, and the
 /// cross-hood merges run serially in hood order.
 fn score_and_stats(
-    bk: &Backend,
+    bk: &dyn Device,
     model: &MrfModel,
     labels: &[u8],
     prm: &mrf::Params,
@@ -150,6 +155,7 @@ fn score_and_stats(
 mod tests {
     use super::*;
     use crate::bp::test_model as small_model;
+    use crate::dpp::Backend;
     use crate::pool::Pool;
 
     #[test]

@@ -15,7 +15,7 @@
 //! the same objective the MAP engines report, up to the (rare)
 //! same-hood pairs that are not graph-adjacent.
 
-use crate::dpp::{self, Backend, SegmentPlan};
+use crate::dpp::{self, Device, SegmentPlan};
 use crate::mrf::{Hoods, MrfModel};
 
 /// Static per-directed-edge structure for BP over a [`MrfModel`].
@@ -42,7 +42,8 @@ impl BpGraph {
 
     /// Build the reverse index and hood-calibrated Potts weights, all
     /// via Map over the directed-edge domain.
-    pub fn build(bk: &Backend, model: &MrfModel, beta: f32) -> BpGraph {
+    pub fn build(bk: &dyn Device, model: &MrfModel, beta: f32)
+        -> BpGraph {
         let g = &model.graph;
         let ne = g.neighbors.len();
         let offsets = &g.offsets;
@@ -111,6 +112,7 @@ fn co_occurrence(h: &Hoods, u: u32, v: u32) -> u32 {
 mod tests {
     use super::*;
     use crate::bp::test_model as small_model;
+    use crate::dpp::Backend;
     use crate::pool::Pool;
 
     #[test]

@@ -28,7 +28,7 @@
 //!
 //! Modules: [`messages`] (edge layout + reverse index + Potts weights),
 //! [`sweep`] (synchronous and residual-scheduled sweeps on a
-//! [`crate::dpp::Backend`]), [`serial`] (plain-loop oracle for tests),
+//! [`crate::dpp::Device`]), [`serial`] (plain-loop oracle for tests),
 //! [`engine`] ([`BpEngine`], an [`crate::mrf::Engine`] running BP as
 //! the E-step inside the shared EM outer loop).
 //!
@@ -109,7 +109,7 @@ impl Default for BpConfig {
 /// One-shot solve for tests and playgrounds: build the edge structure,
 /// run BP to convergence under `prm`, decode labels.
 pub fn solve(
-    bk: &crate::dpp::Backend,
+    bk: &dyn crate::dpp::Device,
     model: &crate::mrf::MrfModel,
     prm: &crate::mrf::Params,
     cfg: &BpConfig,

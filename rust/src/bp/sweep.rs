@@ -14,7 +14,7 @@
 //! serial oracle in [`super::serial`] reproduces every pass bitwise.
 
 use crate::dpp::core::SharedSlice;
-use crate::dpp::{Backend, Pipeline};
+use crate::dpp::{Device, DeviceExt, Pipeline};
 use crate::mrf::{energy, MrfModel, Params};
 
 use super::messages::BpGraph;
@@ -67,7 +67,8 @@ pub struct BpRun {
 /// Unary energies, two per vertex: the Gaussian data term weighted by
 /// the vertex's hood multiplicity, so the BP objective matches the
 /// hood energy's data term (each element instance counts once).
-pub fn unaries(bk: &Backend, model: &MrfModel, prm: &Params) -> Vec<f32> {
+pub fn unaries(bk: &dyn Device, model: &MrfModel, prm: &Params)
+    -> Vec<f32> {
     let pp = energy::Prepared::from_params(prm);
     let h = &model.hoods;
     let y = &model.y;
@@ -129,18 +130,18 @@ fn beliefs_chunk(
 /// of the grain, so `start / grain` indexes the per-chunk partial
 /// arrays no matter which worker claims the chunk (under Serial the
 /// single full-range chunk lands in slot 0).
-fn edge_grain(bk: &Backend, ne: usize) -> usize {
-    match bk {
-        Backend::Serial => ne.max(1),
-        Backend::Threaded { grain, .. } => (*grain).max(1),
-    }
+fn edge_grain(bk: &dyn Device, ne: usize) -> usize {
+    // Serial-execution devices report `usize::MAX`: one chunk covers
+    // the whole edge domain and its partial lands in slot 0, exactly
+    // as the old per-variant match arranged.
+    bk.grain().min(ne.max(1)).max(1)
 }
 
 /// One BP round under the configured schedule, executed as a single
 /// fused pipeline region: beliefs -> candidates (+ per-chunk residual
 /// maxima) -> serial residual fold + frontier threshold -> commit.
 pub fn sweep(
-    bk: &Backend,
+    bk: &dyn Device,
     model: &MrfModel,
     g: &BpGraph,
     unary: &[f32],
@@ -250,7 +251,7 @@ pub fn sweep(
 /// Sweep until the max residual drops below `cfg.tol` (or
 /// `cfg.max_sweeps`; with `fixed` every run does the full count).
 pub fn run(
-    bk: &Backend,
+    bk: &dyn Device,
     model: &MrfModel,
     g: &BpGraph,
     unary: &[f32],
@@ -276,7 +277,7 @@ pub fn run(
 /// the per-vertex argmin with the engines' tie-break (ties -> 0) —
 /// two pipeline stages in one region.
 pub fn decode(
-    bk: &Backend,
+    bk: &dyn Device,
     model: &MrfModel,
     g: &BpGraph,
     unary: &[f32],
@@ -306,6 +307,7 @@ pub fn decode(
 mod tests {
     use super::*;
     use crate::bp::test_model as small_model;
+    use crate::dpp::Backend;
     use crate::pool::Pool;
 
     fn test_params() -> Params {

@@ -12,6 +12,8 @@ use anyhow::{bail, Context, Result};
 use crate::bp::{BpConfig, BpSchedule};
 use crate::json::{self, Value};
 
+pub use crate::dpp::DeviceKind;
+
 /// Which dataset generator to use (paper §4.1.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DatasetKind {
@@ -216,6 +218,10 @@ pub struct RunConfig {
     /// Slice-scheduler shape (`--lanes` / `--inflight`).
     pub sched: SchedConfig,
     pub engine: EngineKind,
+    /// Which [`crate::dpp::Device`] the primitives execute on
+    /// (`--device`): `auto` keeps the historical serial-for-one-thread
+    /// rule, `serial`/`pool`/`accel` pin a device explicitly.
+    pub device: DeviceKind,
     pub threads: usize,
     pub grain: usize,
     pub artifacts_dir: PathBuf,
@@ -230,6 +236,7 @@ impl Default for RunConfig {
             bp: BpConfig::default(),
             sched: SchedConfig::default(),
             engine: EngineKind::Dpp,
+            device: DeviceKind::Auto,
             threads: crate::pool::available_threads(),
             grain: crate::pool::DEFAULT_GRAIN,
             artifacts_dir: PathBuf::from("artifacts"),
@@ -311,6 +318,9 @@ impl RunConfig {
         if let Some(e) = v.get("engine").and_then(Value::as_str) {
             cfg.engine = EngineKind::parse(e)?;
         }
+        if let Some(d) = v.get("device").and_then(Value::as_str) {
+            cfg.device = DeviceKind::parse(d)?;
+        }
         cfg.threads = get_usize(v, "threads", cfg.threads);
         cfg.grain = get_usize(v, "grain", cfg.grain);
         if let Some(p) = v.get("artifacts_dir").and_then(Value::as_str) {
@@ -388,6 +398,7 @@ impl RunConfig {
                 ("inflight", self.sched.inflight.into()),
             ])),
             ("engine", self.engine.name().into()),
+            ("device", self.device.name().into()),
             ("threads", self.threads.into()),
             ("grain", self.grain.into()),
             ("artifacts_dir",
@@ -451,6 +462,23 @@ mod tests {
         for d in ["synthetic", "experimental"] {
             assert_eq!(DatasetKind::parse(d).unwrap().name(), d);
         }
+        for d in ["auto", "serial", "pool", "accel"] {
+            assert_eq!(DeviceKind::parse(d).unwrap().name(), d);
+        }
+    }
+
+    #[test]
+    fn device_section_parses_with_default() {
+        let v = json::parse(r#"{"device": "pool"}"#).unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.device, DeviceKind::Pool);
+        let v = json::parse(r#"{"threads": 2}"#).unwrap();
+        assert_eq!(
+            RunConfig::from_json(&v).unwrap().device,
+            DeviceKind::Auto
+        );
+        let v = json::parse(r#"{"device": "gpu"}"#).unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
     }
 
     #[test]

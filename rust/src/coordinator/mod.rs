@@ -17,8 +17,8 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::config::{EngineKind, RunConfig};
-use crate::dpp::Backend;
+use crate::config::{DeviceKind, EngineKind, RunConfig};
+use crate::dpp::{device_for, Device, DeviceCaps, OfflineAcceleratorDevice};
 use crate::image::{Dataset, Volume};
 use crate::metrics::Confusion;
 use crate::mrf::{self, Engine, MrfModel};
@@ -48,6 +48,11 @@ pub struct SliceReport {
 #[derive(Debug, Clone)]
 pub struct RunReport {
     pub engine: &'static str,
+    /// Name of the [`Device`] the primitives executed on.
+    pub device: String,
+    /// Capability flags of that device (threaded / fused regions /
+    /// accelerator offload).
+    pub device_caps: DeviceCaps,
     pub output: Volume,
     pub slices: Vec<SliceReport>,
     /// Verification vs ground truth, when the dataset has one.
@@ -103,6 +108,14 @@ impl RunReport {
         use crate::json::Value;
         let mut fields = vec![
             ("engine", Value::str(self.engine)),
+            // Device identity + capability flags: results are only
+            // comparable across runs when the hardware path is pinned
+            // in the report (device tentpole).
+            ("device", Value::str(self.device.as_str())),
+            ("device_threaded", self.device_caps.threaded.into()),
+            ("device_fused_regions",
+             self.device_caps.fused_regions.into()),
+            ("device_offload", self.device_caps.offload.into()),
             ("mean_opt_secs", self.mean_opt_secs().into()),
             ("mean_init_secs", self.mean_init_secs().into()),
             // Whole-run wall clock + throughput (sched tentpole): the
@@ -149,58 +162,83 @@ impl RunReport {
     }
 }
 
-/// Pool + backend for a run config, via the one shared construction
-/// rule ([`Backend::for_threads`]) the scheduler's workers also use —
-/// bitwise parity between serial and sharded runs depends on every
-/// site constructing backends identically.
-fn pool_and_backend(cfg: &RunConfig) -> (Arc<Pool>, Backend) {
-    let backend = Backend::for_threads(cfg.threads, cfg.grain);
-    let pool = match &backend {
-        Backend::Threaded { pool, .. } => Arc::clone(pool),
-        Backend::Serial => Pool::serial(),
-    };
-    (pool, backend)
+/// Pool + device for a run config, via the one shared construction
+/// rule ([`crate::dpp::device_for`]) the scheduler's workers also use
+/// — bitwise parity between serial and sharded runs depends on every
+/// site constructing devices identically.
+fn pool_and_device(cfg: &RunConfig) -> (Arc<Pool>, Arc<dyn Device>) {
+    let device =
+        device_for(cfg.device, cfg.threads, cfg.grain, &cfg.artifacts_dir);
+    // The shared pool also serves engines outside the primitive
+    // vocabulary (ReferenceEngine's coarse task parallelism), so it
+    // honors `cfg.threads` even when the primitive device is
+    // serial-execution (`--device serial|accel`) — but only for the
+    // engine that actually consumes it.
+    let pool = device.pool().unwrap_or_else(|| {
+        crate::sched::fallback_pool(cfg.engine, cfg.threads)
+    });
+    (pool, device)
 }
 
-/// The coordinator owns the pool, the DPP backend, and (for the xla
+/// The coordinator owns the pool, the DPP device, and (for the xla
 /// engine) the PJRT runtime; it is reused across runs.
 pub struct Coordinator {
     pub cfg: RunConfig,
     pool: Arc<Pool>,
-    backend: Backend,
+    device: Arc<dyn Device>,
     runtime: Option<Arc<EmRuntime>>,
 }
 
 impl Coordinator {
     pub fn new(cfg: RunConfig) -> Result<Coordinator> {
-        let (pool, backend) = pool_and_backend(&cfg);
+        let (pool, device) = pool_and_device(&cfg);
         let runtime = if cfg.engine == EngineKind::Xla {
-            Some(Arc::new(
-                EmRuntime::load(&cfg.artifacts_dir)
-                    .context("loading XLA artifacts")?,
-            ))
+            // The accel device may already carry the runtime; load
+            // separately only when it does not.
+            match device.accelerator_runtime() {
+                Some(rt) => Some(rt),
+                None => Some(Arc::new(
+                    EmRuntime::load(&cfg.artifacts_dir)
+                        .context("loading XLA artifacts")?,
+                )),
+            }
         } else {
             None
         };
-        Ok(Coordinator { cfg, pool, backend, runtime })
+        Ok(Coordinator { cfg, pool, device, runtime })
     }
 
     /// Pre-loaded runtime variant (lets benches share one runtime).
+    /// With `DeviceKind::Accel` the runtime is routed straight into
+    /// the accel seat instead of re-probing the artifacts dir.
     pub fn with_runtime(cfg: RunConfig, runtime: Arc<EmRuntime>)
         -> Coordinator {
-        let (pool, backend) = pool_and_backend(&cfg);
-        Coordinator { cfg, pool, backend, runtime: Some(runtime) }
+        let (pool, device) = if cfg.device == DeviceKind::Accel {
+            let device: Arc<dyn Device> = Arc::new(
+                OfflineAcceleratorDevice::with_runtime(
+                    Arc::clone(&runtime),
+                ),
+            );
+            let pool = device.pool().unwrap_or_else(|| {
+                crate::sched::fallback_pool(cfg.engine, cfg.threads)
+            });
+            (pool, device)
+        } else {
+            pool_and_device(&cfg)
+        };
+        Coordinator { cfg, pool, device, runtime: Some(runtime) }
     }
 
-    pub fn backend(&self) -> &Backend {
-        &self.backend
+    /// The device this coordinator's primitives execute on.
+    pub fn device(&self) -> &Arc<dyn Device> {
+        &self.device
     }
 
     /// The resource bundle [`mrf::make_engine`] dispatches on.
     pub fn engine_resources(&self) -> mrf::EngineResources {
         mrf::EngineResources {
             pool: Arc::clone(&self.pool),
-            backend: self.backend.clone(),
+            device: Arc::clone(&self.device),
             runtime: self.runtime.clone(),
             bp: self.cfg.bp,
         }
@@ -216,12 +254,12 @@ impl Coordinator {
     /// Build the per-slice MRF model (initialization phase).
     pub fn build_slice_model(&self, input: &Volume, z: usize)
         -> (Overseg, MrfModel) {
-        crate::sched::build_slice_model(&self.backend, &self.cfg, input, z)
+        crate::sched::build_slice_model(&*self.device, &self.cfg, input, z)
     }
 
     /// Run the full pipeline over every slice of the dataset, through
     /// the slice scheduler: `cfg.sched.lanes = 1` is the classic
-    /// serial loop on this coordinator's backend (bitwise-identical to
+    /// serial loop on this coordinator's device (bitwise-identical to
     /// the pre-scheduler path); more lanes shard the stack with the
     /// same per-slice results (DESIGN.md §8).
     pub fn run(&self, dataset: &Dataset) -> Result<RunReport> {
@@ -271,14 +309,14 @@ impl Coordinator {
             min_region: self.cfg.overseg.min_region,
         };
         let seg = crate::overseg::oversegment_3d(
-            &self.backend, input, &overseg_cfg,
+            &*self.device, input, &overseg_cfg,
         );
         let graph = crate::graph::build_rag_3d(
-            &self.backend, &seg, input.width, input.height, input.depth,
+            &*self.device, &seg, input.width, input.height, input.depth,
         );
-        let cliques = crate::mce::enumerate_dpp(&self.backend, &graph);
+        let cliques = crate::mce::enumerate_dpp(&*self.device, &graph);
         let hoods = mrf::hoods::build_dpp(
-            &self.backend, &graph, &cliques, graph.num_vertices(),
+            &*self.device, &graph, &cliques, graph.num_vertices(),
         );
         let model = MrfModel { y: seg.mean.clone(), graph, hoods };
         let init_secs = t_init.elapsed_secs();
@@ -313,6 +351,8 @@ impl Coordinator {
         let porosity = crate::metrics::porosity(&output);
         Ok(RunReport {
             engine: engine.name(),
+            device: self.device.name().to_string(),
+            device_caps: self.device.caps(),
             output,
             slices: vec![SliceReport {
                 z: 0,
@@ -432,6 +472,17 @@ mod tests {
         let report = coord.run(&ds).unwrap();
         let j = report.to_json();
         assert!(j.get("accuracy").is_some());
+        // Device identity + capability flags (device tentpole): the
+        // base_cfg runs threads=2 under DeviceKind::Auto -> pool.
+        assert_eq!(j.get("device").and_then(|v| v.as_str()), Some("pool"));
+        assert_eq!(
+            j.get("device_threaded").and_then(|v| v.as_bool()),
+            Some(true)
+        );
+        assert_eq!(
+            j.get("device_offload").and_then(|v| v.as_bool()),
+            Some(false)
+        );
         assert!(j.get("mean_opt_secs").and_then(|v| v.as_f64()).unwrap()
                 > 0.0);
         // Throughput metrics (sched tentpole): whole-run wall clock

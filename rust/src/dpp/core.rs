@@ -7,8 +7,10 @@
 //! so this is benign — and it mirrors the paper's situation exactly
 //! (TBB reductions are unordered too).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::device::{Device, DeviceExt};
 use super::timing::timed;
-use super::Backend;
 
 /// Shared mutable window over a slice for disjoint parallel writes —
 /// the raw building block every primitive (and every
@@ -123,8 +125,9 @@ impl<T> SharedSlice<T> {
 /// let ys = dpp::map(&Backend::Serial, &[1u32, 2, 3], |x| x * 10);
 /// assert_eq!(ys, vec![10, 20, 30]);
 /// ```
-pub fn map<T, U, F>(bk: &Backend, input: &[T], f: F) -> Vec<U>
+pub fn map<D, T, U, F>(bk: &D, input: &[T], f: F) -> Vec<U>
 where
+    D: Device + ?Sized,
     T: Sync,
     U: Copy + Default + Send,
     F: Fn(&T) -> U + Sync,
@@ -150,8 +153,9 @@ where
 /// let ys = dpp::map_indexed(&Backend::Serial, 4, |i| i as u32 * 2);
 /// assert_eq!(ys, vec![0, 2, 4, 6]);
 /// ```
-pub fn map_indexed<U, F>(bk: &Backend, n: usize, f: F) -> Vec<U>
+pub fn map_indexed<D, U, F>(bk: &D, n: usize, f: F) -> Vec<U>
 where
+    D: Device + ?Sized,
     U: Copy + Default + Send,
     F: Fn(usize) -> U + Sync,
 {
@@ -177,8 +181,9 @@ where
 /// dpp::map_in_place(&Backend::Serial, &mut xs, |i, x| x + i as u32);
 /// assert_eq!(xs, vec![5, 7, 9]);
 /// ```
-pub fn map_in_place<T, F>(bk: &Backend, data: &mut [T], f: F)
+pub fn map_in_place<D, T, F>(bk: &D, data: &mut [T], f: F)
 where
+    D: Device + ?Sized,
     T: Copy + Send + Sync,
     F: Fn(usize, T) -> T + Sync,
 {
@@ -217,8 +222,9 @@ impl<T: Copy> SharedConst<T> {
 ///                      |a, b| a + b);
 /// assert_eq!(s, vec![11, 22]);
 /// ```
-pub fn zip_map<A, B, U, F>(bk: &Backend, a: &[A], b: &[B], f: F) -> Vec<U>
+pub fn zip_map<D, A, B, U, F>(bk: &D, a: &[A], b: &[B], f: F) -> Vec<U>
 where
+    D: Device + ?Sized,
     A: Sync,
     B: Sync,
     U: Copy + Default + Send,
@@ -245,7 +251,7 @@ where
 /// use dpp_pmrf::dpp::{self, Backend};
 /// assert_eq!(dpp::iota(&Backend::Serial, 3), vec![0, 1, 2]);
 /// ```
-pub fn iota(bk: &Backend, n: usize) -> Vec<u32> {
+pub fn iota<D: Device + ?Sized>(bk: &D, n: usize) -> Vec<u32> {
     map_indexed(bk, n, |i| i as u32)
 }
 
@@ -262,8 +268,9 @@ pub fn iota(bk: &Backend, n: usize) -> Vec<u32> {
 /// assert_eq!(dpp::reduce(&Backend::Serial, &xs, 0, |a, b| a + b),
 ///            5050);
 /// ```
-pub fn reduce<T, F>(bk: &Backend, input: &[T], identity: T, op: F) -> T
+pub fn reduce<D, T, F>(bk: &D, input: &[T], identity: T, op: F) -> T
 where
+    D: Device + ?Sized,
     T: Copy + Default + Send + Sync,
     F: Fn(T, T) -> T + Sync,
 {
@@ -298,13 +305,14 @@ where
 /// assert_eq!(ex, vec![0, 1, 3]);
 /// assert_eq!(total, 6);
 /// ```
-pub fn scan_exclusive<T, F>(
-    bk: &Backend,
+pub fn scan_exclusive<D, T, F>(
+    bk: &D,
     input: &[T],
     identity: T,
     op: F,
 ) -> (Vec<T>, T)
 where
+    D: Device + ?Sized,
     T: Copy + Default + Send + Sync,
     F: Fn(T, T) -> T + Sync,
 {
@@ -362,9 +370,10 @@ where
 ///                               |a, b| a + b);
 /// assert_eq!(inc, vec![1, 3, 6]);
 /// ```
-pub fn scan_inclusive<T, F>(bk: &Backend, input: &[T], identity: T, op: F)
+pub fn scan_inclusive<D, T, F>(bk: &D, input: &[T], identity: T, op: F)
     -> Vec<T>
 where
+    D: Device + ?Sized,
     T: Copy + Default + Send + Sync,
     F: Fn(T, T) -> T + Sync,
 {
@@ -408,7 +417,33 @@ where
     })
 }
 
+/// Sentinel meaning "no out-of-range index seen" in the cold
+/// [`AtomicU64`] Gather/Scatter validity flag.
+const NO_BAD_INDEX: u64 = u64::MAX;
+
+/// Raise the pinned out-of-range panic on the calling thread, after
+/// the fork-join: workers only *record* the smallest offending index
+/// (a cold atomic touched on the failure path alone — no extra pass),
+/// because a panic inside a stolen chunk would poison the pool
+/// instead of propagating.
+fn check_bad_index(bad: &AtomicU64, prim: &str, target: &str, len: usize) {
+    let j = bad.load(Ordering::Relaxed);
+    assert!(
+        j == NO_BAD_INDEX,
+        "{prim}: index {j} out of range ({target} len {len})"
+    );
+}
+
 /// Gather: `out[i] = src[idx[i]]`.
+///
+/// Contract (pinned by the device conformance suite):
+/// `idx.len()` is independent of `src.len()` (an empty `idx` yields
+/// an empty output regardless of `src`), and every index must lie in
+/// `0..src.len()` — an out-of-range index **panics** on every device.
+/// Detection costs no extra pass: chunks record an offending index
+/// in a cold atomic and the panic is raised on the calling thread
+/// after the fork-join (a panic inside a stolen chunk would poison
+/// the pool instead of propagating).
 ///
 /// # Examples
 ///
@@ -417,26 +452,39 @@ where
 /// let g = dpp::gather(&Backend::Serial, &[10u32, 20, 30], &[2, 0]);
 /// assert_eq!(g, vec![30, 10]);
 /// ```
-pub fn gather<T>(bk: &Backend, src: &[T], idx: &[u32]) -> Vec<T>
+pub fn gather<D, T>(bk: &D, src: &[T], idx: &[u32]) -> Vec<T>
 where
+    D: Device + ?Sized,
     T: Copy + Default + Send + Sync,
 {
     timed("Gather", || {
         let mut out = vec![T::default(); idx.len()];
         let win = SharedSlice::new(&mut out);
+        let bad = AtomicU64::new(NO_BAD_INDEX);
         bk.for_chunks(idx.len(), |s, e| {
             for i in s..e {
-                unsafe { win.write(i, src[idx[i] as usize]) };
+                let j = idx[i] as usize;
+                if j < src.len() {
+                    unsafe { win.write(i, src[j]) };
+                } else {
+                    bad.fetch_min(j as u64, Ordering::Relaxed);
+                }
             }
         });
+        check_bad_index(&bad, "gather", "src", src.len());
         out
     })
 }
 
 /// Scatter: `out[idx[i]] = src[i]`.
 ///
-/// Contract (same as VTK-m's ScatterPermutation): `idx` contains no
-/// duplicates — each output location is written at most once.
+/// Contract (same as VTK-m's ScatterPermutation, pinned by the device
+/// conformance suite): `idx.len()` must equal `src.len()` (mismatch
+/// **panics**), every index must lie in `0..out.len()` (out-of-range
+/// **panics** on every device, raised on the calling thread after
+/// the fork-join so it never poisons a pool worker), and `idx`
+/// contains no duplicates — each output location is written at most
+/// once. An empty `idx` is a no-op: `out` is untouched.
 ///
 /// # Examples
 ///
@@ -446,24 +494,33 @@ where
 /// dpp::scatter(&Backend::Serial, &[7u32, 8], &[2, 0], &mut out);
 /// assert_eq!(out, vec![8, 0, 7]);
 /// ```
-pub fn scatter<T>(bk: &Backend, src: &[T], idx: &[u32], out: &mut [T])
+pub fn scatter<D, T>(bk: &D, src: &[T], idx: &[u32], out: &mut [T])
 where
+    D: Device + ?Sized,
     T: Copy + Send + Sync,
 {
     assert_eq!(src.len(), idx.len(), "scatter length mismatch");
     timed("Scatter", || {
         let win = SharedSlice::new(out);
+        let bad = AtomicU64::new(NO_BAD_INDEX);
         bk.for_chunks(src.len(), |s, e| {
             for i in s..e {
-                unsafe { win.write(idx[i] as usize, src[i]) };
+                let j = idx[i] as usize;
+                if j < win.len() {
+                    unsafe { win.write(j, src[i]) };
+                } else {
+                    bad.fetch_min(j as u64, Ordering::Relaxed);
+                }
             }
         });
+        check_bad_index(&bad, "scatter", "out", win.len());
     })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dpp::Backend;
     use crate::pool::Pool;
 
     fn backends() -> Vec<Backend> {
@@ -545,5 +602,83 @@ mod tests {
         for bk in backends() {
             assert_eq!(iota(&bk, 5), vec![0, 1, 2, 3, 4]);
         }
+    }
+
+    // --- gather/scatter edge semantics (pinned for the device
+    // conformance contract) ---
+
+    #[test]
+    fn gather_empty_idx_yields_empty_for_any_src() {
+        for bk in backends() {
+            assert_eq!(gather(&bk, &[1u32, 2, 3], &[]), Vec::<u32>::new());
+            assert_eq!(gather(&bk, &[] as &[u32], &[]), Vec::<u32>::new());
+        }
+    }
+
+    #[test]
+    fn gather_idx_len_independent_of_src_len() {
+        for bk in backends() {
+            // More gathers than sources (with repeats) is legal.
+            let g = gather(&bk, &[10u32, 20], &[0, 1, 0, 1, 1]);
+            assert_eq!(g, vec![10, 20, 10, 20, 20]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "gather: index 3 out of range")]
+    fn gather_out_of_range_panics() {
+        use crate::dpp::SerialDevice;
+        gather(&SerialDevice, &[1u32, 2, 3], &[0, 3]);
+    }
+
+    #[test]
+    fn scatter_empty_is_a_noop() {
+        for bk in backends() {
+            let mut out = vec![7u32, 8, 9];
+            scatter(&bk, &[] as &[u32], &[], &mut out);
+            assert_eq!(out, vec![7, 8, 9]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "scatter length mismatch")]
+    fn scatter_length_mismatch_panics() {
+        use crate::dpp::SerialDevice;
+        let mut out = vec![0u32; 4];
+        scatter(&SerialDevice, &[1u32, 2, 3], &[0, 1], &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "scatter: index 4 out of range")]
+    fn scatter_out_of_range_panics() {
+        use crate::dpp::SerialDevice;
+        let mut out = vec![0u32; 4];
+        scatter(&SerialDevice, &[1u32, 2], &[0, 4], &mut out);
+    }
+
+    // The pinned panic must also hold on pool devices — raised on the
+    // calling thread after the fork-join, never inside a worker
+    // (which would poison the pool and hang instead of panicking).
+
+    #[test]
+    #[should_panic(expected = "gather: index 9 out of range")]
+    fn gather_out_of_range_panics_on_pool_device() {
+        use crate::dpp::PoolDevice;
+        let idx: Vec<u32> =
+            (0..1000).map(|i| if i == 777 { 9 } else { 0 }).collect();
+        gather(&PoolDevice::new(4, 64), &[1u32, 2, 3], &idx);
+    }
+
+    #[test]
+    #[should_panic(expected = "scatter: index 2000 out of range")]
+    fn scatter_out_of_range_panics_on_pool_device() {
+        use crate::dpp::PoolDevice;
+        let src = vec![1u32; 1000];
+        // Distinct indices (the no-duplicates contract) with one
+        // out-of-range entry.
+        let idx: Vec<u32> =
+            (0..1000).map(|i| if i == 500 { 2000 } else { i }).collect();
+        let mut out = vec![0u32; 1000];
+        scatter(&PoolDevice::new(4, 64), &src, &idx, &mut out);
     }
 }

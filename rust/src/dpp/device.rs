@@ -1,0 +1,828 @@
+//! The device layer: ONE portable primitive API over serial / pool /
+//! accelerator back ends (DESIGN.md §9).
+//!
+//! The paper's thesis is that expressing the optimization in
+//! data-parallel primitives buys *portable performance over hardware
+//! architecture* (§2.3: the same primitives run on TBB or Thrust). The
+//! [`Device`] trait is where this crate encodes that portability: it
+//! owns every execution decision a primitive makes — how an index
+//! domain is chunked ([`Device::chunks_dyn`]), where deterministic
+//! chunk boundaries come from ([`Device::chunk_bounds`]), and how a
+//! fused multi-stage pipeline executes ([`Device::run_stages`]). Every
+//! primitive in [`crate::dpp`] is a generic free function over
+//! `D: Device + ?Sized`, so engines hold an `Arc<dyn Device>` and are
+//! device-agnostic by construction.
+//!
+//! Registered devices:
+//!
+//! * [`SerialDevice`] — plain loops on the calling thread; the oracle
+//!   every other device's conformance is measured against
+//!   (`rust/tests/device_conformance.rs`).
+//! * [`PoolDevice`] — chunked/work-stealing execution on the in-tree
+//!   [`crate::pool::Pool`] (the TBB stand-in). Wraps exactly the
+//!   chunking rules the old `Backend::Threaded` variant used, so
+//!   results are bitwise-identical for the same `(threads, grain)`.
+//! * [`OfflineAcceleratorDevice`] — the accelerator seat: carries the
+//!   XLA/PJRT bucket runtime ([`crate::runtime::EmRuntime`]) when AOT
+//!   artifacts are present and degrades to serial host execution when
+//!   they are not (the offline stub in `rust/src/runtime/xla.rs` never
+//!   loads, so in this build it always reports `offload: false` and
+//!   skips gracefully).
+//!
+//! # Conformance contract
+//!
+//! Any device added to the registry must pass the conformance suite:
+//! for every primitive, **bitwise-identical** outputs to
+//! [`SerialDevice`] on empty / single-element / odd-length / large
+//! inputs, at every thread count. Exact ops (integers, min/max) must
+//! agree on *all* primitives; the one sanctioned exemption is the
+//! association order of floating-point global `reduce`/`scan`, which
+//! is chunk-ordered per device (exactly the paper's situation — TBB
+//! reductions are unordered too). Segmented float reductions are NOT
+//! exempt: a [`crate::dpp::SegmentPlan`] reduces each segment serially
+//! in cached stable order, so they must match bitwise on every device.
+//!
+//! The old [`Backend`] enum still works — it implements [`Device`] —
+//! but is the deprecated spelling, kept for one release (see the
+//! migration table in `README.md`).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::pool::Pool;
+use crate::runtime::EmRuntime;
+
+use super::pipeline::{run_stages_region, run_stages_serial};
+use super::Backend;
+
+/// What a device can do, surfaced into run reports
+/// (`RunReport::to_json`) so results are attributable to a hardware
+/// path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeviceCaps {
+    /// Executes chunks on more than one thread.
+    pub threaded: bool,
+    /// Executes [`Device::run_stages`] in one persistent parallel
+    /// region (phase barriers) rather than stage-by-stage.
+    pub fused_regions: bool,
+    /// Carries a loaded accelerator runtime (AOT artifact offload).
+    pub offload: bool,
+}
+
+impl DeviceCaps {
+    /// Capabilities of a serial-execution device.
+    pub const fn serial() -> DeviceCaps {
+        DeviceCaps { threaded: false, fused_regions: false, offload: false }
+    }
+
+    /// Capabilities of a pool-backed device.
+    pub const fn pool() -> DeviceCaps {
+        DeviceCaps { threaded: true, fused_regions: true, offload: false }
+    }
+
+    /// Capabilities of the accelerator seat (`offload` reflects
+    /// whether artifacts actually loaded).
+    pub const fn accel(offload: bool) -> DeviceCaps {
+        DeviceCaps { threaded: false, fused_regions: false, offload }
+    }
+}
+
+/// One stage of a fused pipeline, as handed to
+/// [`Device::run_stages`]: `f(start, end)` over disjoint chunks
+/// covering `0..n`, timed under `name`.
+pub struct StageSpec<'a> {
+    /// Canonical primitive name for [`crate::dpp::timing`].
+    pub name: &'static str,
+    /// Iteration-domain size.
+    pub n: usize,
+    /// Explicit chunk grain; `None` = derived from the device.
+    pub grain: Option<usize>,
+    /// The stage body.
+    pub f: &'a (dyn Fn(usize, usize) + Sync),
+}
+
+/// A DPP execution device: the object-safe contract every primitive
+/// dispatches through. Implementations decide chunking, parallelism,
+/// and pipeline fusion; primitives decide *what* runs. See the module
+/// docs for the conformance rules an implementation must satisfy.
+///
+/// The `*_dyn` methods take `&dyn Fn` so the trait stays
+/// object-safe; call them through the generic sugar in [`DeviceExt`]
+/// (`for_chunks`, `for_chunks_with`, `for_chunk_ids`), which every
+/// `D: Device + ?Sized` gets for free.
+pub trait Device: Send + Sync + std::fmt::Debug {
+    /// Short device name (`"serial"`, `"pool"`, `"accel"`), surfaced
+    /// in run reports.
+    fn name(&self) -> &'static str;
+
+    /// Worker count (1 for serial-execution devices).
+    fn threads(&self) -> usize;
+
+    /// Configured chunk grain; `usize::MAX` for devices that run one
+    /// chunk per domain (serial semantics).
+    fn grain(&self) -> usize;
+
+    /// Capability flags for reports and dispatch decisions.
+    fn caps(&self) -> DeviceCaps;
+
+    /// Run `f(start, end)` over disjoint chunks covering `0..n`.
+    fn chunks_dyn(&self, n: usize, f: &(dyn Fn(usize, usize) + Sync));
+
+    /// [`Device::chunks_dyn`] with an explicit grain — used when the
+    /// iteration domain is not elements (hoods, vertices).
+    fn chunks_with_dyn(
+        &self,
+        n: usize,
+        grain: usize,
+        f: &(dyn Fn(usize, usize) + Sync),
+    );
+
+    /// Deterministic chunk boundaries used by two-pass primitives
+    /// (scan, radix sort). For a given device configuration the
+    /// boundaries are a pure function of `n` — this is what every
+    /// floating-point association order hangs off, so two devices
+    /// with the same `(threads, grain)` produce bitwise-identical
+    /// reductions.
+    fn chunk_bounds(&self, n: usize) -> Vec<(usize, usize)>;
+
+    /// Run `f(chunk_idx)` for each chunk id in parallel.
+    fn chunk_ids_dyn(&self, nchunks: usize, f: &(dyn Fn(usize) + Sync));
+
+    /// Execute a fused stage sequence ([`crate::dpp::Pipeline`]):
+    /// stage k+1 must observe stage k's writes. The default executes
+    /// stages back-to-back on the calling thread; pool devices
+    /// override with one persistent region + phase barriers.
+    fn run_stages(&self, stages: &[StageSpec<'_>]) {
+        run_stages_serial(stages);
+    }
+
+    /// The shared thread pool, for callers that need coarse task
+    /// parallelism outside the primitive vocabulary (the reference
+    /// engine). `None` for devices without one.
+    fn pool(&self) -> Option<Arc<Pool>> {
+        None
+    }
+
+    /// The loaded accelerator runtime, when this device carries one
+    /// ([`OfflineAcceleratorDevice`] with artifacts present).
+    fn accelerator_runtime(&self) -> Option<Arc<EmRuntime>> {
+        None
+    }
+}
+
+/// Generic sugar over the object-safe [`Device`] hooks so call sites
+/// keep passing closures by value. Blanket-implemented for every
+/// `D: Device + ?Sized` (including `dyn Device`).
+pub trait DeviceExt: Device {
+    /// Run `f(start, end)` over `0..n` on this device.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::{DeviceExt, SerialDevice};
+    /// // Serial: one chunk covering the whole domain.
+    /// SerialDevice.for_chunks(5, |s, e| assert_eq!((s, e), (0, 5)));
+    /// ```
+    fn for_chunks<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        self.chunks_dyn(n, &f);
+    }
+
+    /// [`DeviceExt::for_chunks`] with an explicit grain.
+    fn for_chunks_with<F>(&self, n: usize, grain: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        self.chunks_with_dyn(n, grain, &f);
+    }
+
+    /// Run `f(chunk_idx)` for each chunk id in parallel.
+    fn for_chunk_ids<F>(&self, nchunks: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        self.chunk_ids_dyn(nchunks, &f);
+    }
+}
+
+impl<D: Device + ?Sized> DeviceExt for D {}
+
+/// Split `0..n` into at most `pieces` contiguous equal-ish bounds —
+/// the ONE boundary formula every device (and the legacy [`Backend`])
+/// shares, so chunked association orders can never drift apart.
+pub(crate) fn split_bounds(n: usize, pieces: usize) -> Vec<(usize, usize)> {
+    let per = n.div_ceil(pieces.max(1));
+    (0..pieces.max(1))
+        .map(|i| (i * per, ((i + 1) * per).min(n)))
+        .filter(|(s, e)| s < e)
+        .collect()
+}
+
+/// Piece count for a pool device: enough chunks to load every worker,
+/// few enough that the serial combine step is negligible.
+pub(crate) fn pool_pieces(threads: usize, grain: usize, n: usize) -> usize {
+    let by_threads = threads * 4;
+    let by_grain = n.div_ceil(grain.max(1));
+    by_threads.min(by_grain).max(1)
+}
+
+/// Plain loops on the calling thread: the baseline, the conformance
+/// oracle, and the device behind `--device serial`.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, SerialDevice};
+/// let ys = dpp::map(&SerialDevice, &[1u32, 2, 3], |x| x * 10);
+/// assert_eq!(ys, vec![10, 20, 30]);
+/// ```
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SerialDevice;
+
+impl Device for SerialDevice {
+    fn name(&self) -> &'static str {
+        "serial"
+    }
+
+    fn threads(&self) -> usize {
+        1
+    }
+
+    fn grain(&self) -> usize {
+        usize::MAX
+    }
+
+    fn caps(&self) -> DeviceCaps {
+        DeviceCaps::serial()
+    }
+
+    fn chunks_dyn(&self, n: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+        if n > 0 {
+            f(0, n);
+        }
+    }
+
+    fn chunks_with_dyn(
+        &self,
+        n: usize,
+        _grain: usize,
+        f: &(dyn Fn(usize, usize) + Sync),
+    ) {
+        if n > 0 {
+            f(0, n);
+        }
+    }
+
+    fn chunk_bounds(&self, n: usize) -> Vec<(usize, usize)> {
+        split_bounds(n, 1)
+    }
+
+    fn chunk_ids_dyn(&self, nchunks: usize, f: &(dyn Fn(usize) + Sync)) {
+        (0..nchunks).for_each(f);
+    }
+}
+
+/// Chunked + work-stealing execution on a shared [`crate::pool::Pool`]
+/// — the TBB stand-in, and the device behind `--device pool`. Chunking
+/// rules are shared verbatim with the old `Backend::Threaded` variant
+/// (the crate-internal `split_bounds` / `pool_pieces` formulas), so
+/// for the same `(threads, grain)` the results are bitwise-identical
+/// — the
+/// conformance suite and the scheduler's determinism tests both pin
+/// this.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, PoolDevice, SerialDevice};
+/// let dev = PoolDevice::new(2, 64);
+/// let xs: Vec<u32> = (0..1000).collect();
+/// let a = dpp::map(&dev, &xs, |x| x + 1);
+/// let b = dpp::map(&SerialDevice, &xs, |x| x + 1);
+/// assert_eq!(a, b);
+/// ```
+#[derive(Clone)]
+pub struct PoolDevice {
+    pool: Arc<Pool>,
+    grain: usize,
+}
+
+impl PoolDevice {
+    /// Fresh pool of `threads` workers at `grain` elements per chunk.
+    pub fn new(threads: usize, grain: usize) -> PoolDevice {
+        PoolDevice { pool: Pool::new(threads.max(1)), grain }
+    }
+
+    /// Wrap an existing pool (benches share one pool per concurrency
+    /// level across runs).
+    pub fn from_pool(pool: Arc<Pool>, grain: usize) -> PoolDevice {
+        PoolDevice { pool, grain }
+    }
+}
+
+impl std::fmt::Debug for PoolDevice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "PoolDevice(threads={}, grain={})",
+            self.pool.threads(),
+            self.grain
+        )
+    }
+}
+
+impl Device for PoolDevice {
+    fn name(&self) -> &'static str {
+        "pool"
+    }
+
+    fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    fn grain(&self) -> usize {
+        self.grain
+    }
+
+    fn caps(&self) -> DeviceCaps {
+        DeviceCaps::pool()
+    }
+
+    fn chunks_dyn(&self, n: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+        self.pool.parallel_for(n, self.grain, f);
+    }
+
+    fn chunks_with_dyn(
+        &self,
+        n: usize,
+        grain: usize,
+        f: &(dyn Fn(usize, usize) + Sync),
+    ) {
+        self.pool.parallel_for(n, grain, f);
+    }
+
+    fn chunk_bounds(&self, n: usize) -> Vec<(usize, usize)> {
+        split_bounds(n, pool_pieces(self.pool.threads(), self.grain, n))
+    }
+
+    fn chunk_ids_dyn(&self, nchunks: usize, f: &(dyn Fn(usize) + Sync)) {
+        self.pool.parallel_tasks(nchunks, f);
+    }
+
+    fn run_stages(&self, stages: &[StageSpec<'_>]) {
+        run_stages_region(&self.pool, self.grain, stages);
+    }
+
+    fn pool(&self) -> Option<Arc<Pool>> {
+        Some(Arc::clone(&self.pool))
+    }
+}
+
+/// The accelerator seat (`--device accel`): primitives execute
+/// serially on the host, and the device carries the XLA/PJRT bucket
+/// runtime when AOT artifacts load — the identical dispatch path a
+/// real GPU/TPU PJRT plugin would serve. When artifacts are absent
+/// (or, in this offline build, always — see `rust/src/runtime/xla.rs`)
+/// construction still succeeds and the device degrades gracefully:
+/// `caps().offload` is `false` and the engines simply stay on the
+/// host path.
+pub struct OfflineAcceleratorDevice {
+    runtime: Option<Arc<EmRuntime>>,
+}
+
+impl OfflineAcceleratorDevice {
+    /// Probe `dir` for AOT artifacts; never fails — a missing or
+    /// unloadable artifact set just yields a host-only device.
+    pub fn load(dir: &Path) -> OfflineAcceleratorDevice {
+        let runtime = match EmRuntime::load(dir) {
+            Ok(rt) => Some(Arc::new(rt)),
+            Err(e) => {
+                crate::log_debug!(
+                    "accel device: artifacts unavailable, host-only ({e})"
+                );
+                None
+            }
+        };
+        OfflineAcceleratorDevice { runtime }
+    }
+
+    /// Wrap an already-loaded runtime (benches share one).
+    pub fn with_runtime(rt: Arc<EmRuntime>) -> OfflineAcceleratorDevice {
+        OfflineAcceleratorDevice { runtime: Some(rt) }
+    }
+
+    /// Whether the accelerator runtime actually loaded.
+    pub fn available(&self) -> bool {
+        self.runtime.is_some()
+    }
+}
+
+impl std::fmt::Debug for OfflineAcceleratorDevice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "OfflineAcceleratorDevice(offload={})",
+            self.runtime.is_some()
+        )
+    }
+}
+
+impl Device for OfflineAcceleratorDevice {
+    fn name(&self) -> &'static str {
+        "accel"
+    }
+
+    fn threads(&self) -> usize {
+        1
+    }
+
+    fn grain(&self) -> usize {
+        usize::MAX
+    }
+
+    fn caps(&self) -> DeviceCaps {
+        DeviceCaps::accel(self.runtime.is_some())
+    }
+
+    fn chunks_dyn(&self, n: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+        SerialDevice.chunks_dyn(n, f);
+    }
+
+    fn chunks_with_dyn(
+        &self,
+        n: usize,
+        grain: usize,
+        f: &(dyn Fn(usize, usize) + Sync),
+    ) {
+        SerialDevice.chunks_with_dyn(n, grain, f);
+    }
+
+    fn chunk_bounds(&self, n: usize) -> Vec<(usize, usize)> {
+        SerialDevice.chunk_bounds(n)
+    }
+
+    fn chunk_ids_dyn(&self, nchunks: usize, f: &(dyn Fn(usize) + Sync)) {
+        SerialDevice.chunk_ids_dyn(nchunks, f);
+    }
+
+    fn accelerator_runtime(&self) -> Option<Arc<EmRuntime>> {
+        self.runtime.clone()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Legacy bridge: the pre-device `Backend` enum is itself a Device, so
+// every existing `&Backend` call site coerces to `&dyn Device` and the
+// deprecated names keep working for one release.
+// ---------------------------------------------------------------------
+
+impl Device for Backend {
+    fn name(&self) -> &'static str {
+        match self {
+            Backend::Serial => "serial",
+            Backend::Threaded { .. } => "pool",
+        }
+    }
+
+    fn threads(&self) -> usize {
+        Backend::threads(self)
+    }
+
+    fn grain(&self) -> usize {
+        Backend::grain(self)
+    }
+
+    fn caps(&self) -> DeviceCaps {
+        match self {
+            Backend::Serial => DeviceCaps::serial(),
+            Backend::Threaded { .. } => DeviceCaps::pool(),
+        }
+    }
+
+    fn chunks_dyn(&self, n: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+        Backend::for_chunks(self, n, f);
+    }
+
+    fn chunks_with_dyn(
+        &self,
+        n: usize,
+        grain: usize,
+        f: &(dyn Fn(usize, usize) + Sync),
+    ) {
+        Backend::for_chunks_with(self, n, grain, f);
+    }
+
+    fn chunk_bounds(&self, n: usize) -> Vec<(usize, usize)> {
+        Backend::chunk_bounds(self, n)
+    }
+
+    fn chunk_ids_dyn(&self, nchunks: usize, f: &(dyn Fn(usize) + Sync)) {
+        Backend::for_chunk_ids(self, nchunks, f);
+    }
+
+    fn run_stages(&self, stages: &[StageSpec<'_>]) {
+        match self {
+            Backend::Serial => run_stages_serial(stages),
+            Backend::Threaded { pool, grain } => {
+                run_stages_region(pool, *grain, stages)
+            }
+        }
+    }
+
+    fn pool(&self) -> Option<Arc<Pool>> {
+        match self {
+            Backend::Serial => None,
+            Backend::Threaded { pool, .. } => Some(Arc::clone(pool)),
+        }
+    }
+}
+
+/// Anything that can become a shared device handle — lets engine
+/// constructors accept a [`Backend`] (deprecated spelling), a concrete
+/// device, or an `Arc<dyn Device>` interchangeably during the
+/// migration window.
+pub trait IntoDevice {
+    fn into_device(self) -> Arc<dyn Device>;
+}
+
+impl IntoDevice for Arc<dyn Device> {
+    fn into_device(self) -> Arc<dyn Device> {
+        self
+    }
+}
+
+impl IntoDevice for SerialDevice {
+    fn into_device(self) -> Arc<dyn Device> {
+        Arc::new(self)
+    }
+}
+
+impl IntoDevice for PoolDevice {
+    fn into_device(self) -> Arc<dyn Device> {
+        Arc::new(self)
+    }
+}
+
+impl IntoDevice for OfflineAcceleratorDevice {
+    fn into_device(self) -> Arc<dyn Device> {
+        Arc::new(self)
+    }
+}
+
+impl IntoDevice for Backend {
+    /// The legacy-enum bridge: `Serial` becomes a [`SerialDevice`],
+    /// `Threaded` a [`PoolDevice`] over the same pool and grain —
+    /// chunking (and therefore every association order) is unchanged.
+    fn into_device(self) -> Arc<dyn Device> {
+        match self {
+            Backend::Serial => Arc::new(SerialDevice),
+            Backend::Threaded { pool, grain } => {
+                Arc::new(PoolDevice::from_pool(pool, grain))
+            }
+        }
+    }
+}
+
+/// Which device a run executes its primitives on (`--device`, JSON
+/// `"device"`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DeviceKind {
+    /// The historical rule: serial for one thread, pool otherwise.
+    #[default]
+    Auto,
+    /// [`SerialDevice`] regardless of the thread setting.
+    Serial,
+    /// [`PoolDevice`] with the configured threads and grain.
+    Pool,
+    /// [`OfflineAcceleratorDevice`] probing the artifacts dir.
+    Accel,
+}
+
+impl DeviceKind {
+    /// Accepted `--device` values, for help text and error messages.
+    pub const USAGE: &'static str = "auto|serial|pool|accel";
+
+    pub fn all() -> [DeviceKind; 4] {
+        [
+            DeviceKind::Auto,
+            DeviceKind::Serial,
+            DeviceKind::Pool,
+            DeviceKind::Accel,
+        ]
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<DeviceKind> {
+        match s {
+            "auto" => Ok(DeviceKind::Auto),
+            "serial" => Ok(DeviceKind::Serial),
+            "pool" => Ok(DeviceKind::Pool),
+            "accel" => Ok(DeviceKind::Accel),
+            _ => anyhow::bail!("unknown device `{s}` ({})", Self::USAGE),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeviceKind::Auto => "auto",
+            DeviceKind::Serial => "serial",
+            DeviceKind::Pool => "pool",
+            DeviceKind::Accel => "accel",
+        }
+    }
+}
+
+/// THE construction rule for a run-configured device — the successor
+/// of `Backend::for_threads`. Every site that must produce
+/// bitwise-identical results for the same configuration — the
+/// coordinator and every scheduler worker ([`crate::sched`]) — goes
+/// through here, because [`Device::chunk_bounds`] (and with it every
+/// floating-point association order) depends on exactly these values.
+pub fn device_for(
+    kind: DeviceKind,
+    threads: usize,
+    grain: usize,
+    artifacts_dir: &Path,
+) -> Arc<dyn Device> {
+    match kind {
+        DeviceKind::Auto => {
+            if threads == 1 {
+                Arc::new(SerialDevice)
+            } else {
+                Arc::new(PoolDevice::new(threads, grain))
+            }
+        }
+        DeviceKind::Serial => Arc::new(SerialDevice),
+        DeviceKind::Pool => Arc::new(PoolDevice::new(threads, grain)),
+        DeviceKind::Accel => {
+            Arc::new(OfflineAcceleratorDevice::load(artifacts_dir))
+        }
+    }
+}
+
+/// Whether [`device_for`] yields a pool-free (stateless,
+/// serial-execution) device for this configuration. Pool-free devices
+/// are safe to share across scheduler workers — that is how an accel
+/// run loads its AOT artifact bundle once per run instead of once per
+/// worker. Kept next to [`device_for`] so the two can never disagree
+/// on the `Auto` rule (pinned by a unit test below).
+pub fn device_is_pool_free(kind: DeviceKind, threads: usize) -> bool {
+    match kind {
+        DeviceKind::Serial | DeviceKind::Accel => true,
+        DeviceKind::Auto => threads == 1,
+        DeviceKind::Pool => false,
+    }
+}
+
+/// Name + capability flags [`device_for`] would yield for this
+/// configuration, without spawning a pool — for callers that need to
+/// describe a hardware path (e.g. in a report or a dry-run listing)
+/// without paying device construction. Note: for `Accel` this probes
+/// the artifacts dir, so prefer describing an already-constructed
+/// device when one exists.
+pub fn device_descriptor(
+    kind: DeviceKind,
+    threads: usize,
+    artifacts_dir: &Path,
+) -> (&'static str, DeviceCaps) {
+    match kind {
+        DeviceKind::Auto => {
+            if threads == 1 {
+                ("serial", DeviceCaps::serial())
+            } else {
+                ("pool", DeviceCaps::pool())
+            }
+        }
+        DeviceKind::Serial => ("serial", DeviceCaps::serial()),
+        DeviceKind::Pool => ("pool", DeviceCaps::pool()),
+        DeviceKind::Accel => {
+            let dev = OfflineAcceleratorDevice::load(artifacts_dir);
+            ("accel", dev.caps())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_device_single_chunk() {
+        let calls = std::sync::atomic::AtomicUsize::new(0);
+        SerialDevice.chunks_dyn(7, &|s, e| {
+            assert_eq!((s, e), (0, 7));
+            calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        assert_eq!(calls.load(std::sync::atomic::Ordering::Relaxed), 1);
+        SerialDevice.chunks_dyn(0, &|_, _| panic!("no work expected"));
+        assert_eq!(SerialDevice.chunk_bounds(7), vec![(0, 7)]);
+        assert!(SerialDevice.chunk_bounds(0).is_empty());
+    }
+
+    #[test]
+    fn pool_device_chunk_bounds_match_legacy_backend() {
+        for (threads, grain, n) in
+            [(2, 64, 1000), (4, 128, 10_000), (3, 1021, 4_321), (4, 64, 0)]
+        {
+            let dev = PoolDevice::new(threads, grain);
+            let bk = Backend::threaded_with_grain(Pool::new(threads), grain);
+            assert_eq!(
+                Device::chunk_bounds(&dev, n),
+                Backend::chunk_bounds(&bk, n),
+                "threads={threads} grain={grain} n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn backend_bridge_preserves_identity() {
+        let dev = Backend::Serial.into_device();
+        assert_eq!(dev.name(), "serial");
+        assert_eq!(dev.threads(), 1);
+        let pool = Pool::new(3);
+        let dev =
+            Backend::threaded_with_grain(Arc::clone(&pool), 77).into_device();
+        assert_eq!(dev.name(), "pool");
+        assert_eq!(dev.threads(), 3);
+        assert_eq!(dev.grain(), 77);
+        assert!(dev.pool().is_some());
+    }
+
+    #[test]
+    fn accel_device_degrades_gracefully() {
+        let dev = OfflineAcceleratorDevice::load(Path::new(
+            "definitely/not/artifacts",
+        ));
+        assert!(!dev.available());
+        assert!(!dev.caps().offload);
+        assert!(dev.accelerator_runtime().is_none());
+        // Host execution still works.
+        let ys = crate::dpp::map(&dev, &[1u32, 2], |x| x + 1);
+        assert_eq!(ys, vec![2, 3]);
+    }
+
+    #[test]
+    fn device_kind_parse_round_trip() {
+        for k in ["auto", "serial", "pool", "accel"] {
+            assert_eq!(DeviceKind::parse(k).unwrap().name(), k);
+        }
+        assert!(DeviceKind::parse("gpu").is_err());
+        assert_eq!(DeviceKind::all().len(), 4);
+        assert_eq!(DeviceKind::default(), DeviceKind::Auto);
+    }
+
+    #[test]
+    fn device_for_honors_the_auto_rule() {
+        let dir = Path::new("artifacts");
+        assert_eq!(device_for(DeviceKind::Auto, 1, 64, dir).name(), "serial");
+        assert_eq!(device_for(DeviceKind::Auto, 4, 64, dir).name(), "pool");
+        assert_eq!(
+            device_for(DeviceKind::Serial, 4, 64, dir).name(),
+            "serial"
+        );
+        assert_eq!(device_for(DeviceKind::Pool, 1, 64, dir).name(), "pool");
+        assert_eq!(device_for(DeviceKind::Accel, 4, 64, dir).name(), "accel");
+    }
+
+    #[test]
+    fn pool_free_rule_matches_construction() {
+        let dir = Path::new("definitely/not/artifacts");
+        for kind in DeviceKind::all() {
+            for threads in [1, 2, 4] {
+                assert_eq!(
+                    device_is_pool_free(kind, threads),
+                    device_for(kind, threads, 64, dir).pool().is_none(),
+                    "{kind:?}/{threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn descriptor_matches_construction() {
+        let dir = Path::new("definitely/not/artifacts");
+        for kind in DeviceKind::all() {
+            for threads in [1, 4] {
+                let (name, caps) = device_descriptor(kind, threads, dir);
+                let dev = device_for(kind, threads, 64, dir);
+                assert_eq!(name, dev.name(), "{kind:?}/{threads}");
+                assert_eq!(caps, dev.caps(), "{kind:?}/{threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn ext_trait_works_on_dyn_device() {
+        let dev: Arc<dyn Device> = Arc::new(SerialDevice);
+        let counter = std::sync::atomic::AtomicUsize::new(0);
+        dev.for_chunks(10, |s, e| {
+            counter.fetch_add(e - s, std::sync::atomic::Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(std::sync::atomic::Ordering::Relaxed), 10);
+        dev.for_chunk_ids(3, |_| {
+            counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(std::sync::atomic::Ordering::Relaxed), 13);
+    }
+}

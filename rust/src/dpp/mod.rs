@@ -5,16 +5,27 @@
 //! Gather, Scatter, Unique (+ CopyIf, which the others are built on) —
 //! from which the whole MRF optimization is composed. The paper gets
 //! platform portability by running the same primitives on TBB (CPU) or
-//! Thrust (GPU); here the same role is played by the [`Backend`] enum:
+//! Thrust (GPU); here the same role is played by the [`Device`] trait
+//! ([`device`], DESIGN.md §9): every primitive is generic over
+//! `D: Device + ?Sized`, and engines hold an `Arc<dyn Device>`:
 //!
-//! * [`Backend::Serial`] — straight loops; the baseline and oracle.
-//! * [`Backend::Threaded`] — chunked + work-stealing execution on the
+//! * [`SerialDevice`] — straight loops; the baseline and conformance
+//!   oracle.
+//! * [`PoolDevice`] — chunked + work-stealing execution on the
 //!   in-tree [`crate::pool::Pool`] (the TBB stand-in).
+//! * [`OfflineAcceleratorDevice`] — the accelerator seat, carrying
+//!   the XLA/PJRT bucket runtime when AOT artifacts are present and
+//!   degrading to host execution when they are not.
 //!
 //! The accelerator back end of the paper (Thrust) maps to the XLA/PJRT
 //! path, which executes whole *fused pipelines* of primitives as one
 //! AOT-compiled program (see `rust/src/mrf/xla.rs`) rather than one
 //! primitive at a time.
+//!
+//! The pre-device [`Backend`] enum is the **deprecated** spelling of
+//! the same choices, kept for one release: it implements [`Device`],
+//! so `&Backend` coerces to `&dyn Device` at every primitive call
+//! site (see the migration table in `README.md`).
 //!
 //! Two layers sit on top of the one-call-per-primitive vocabulary and
 //! attack the paper's two measured scalability limiters
@@ -37,12 +48,14 @@
 //! layer saves.
 
 pub mod core;
+pub mod device;
 pub mod pipeline;
 pub mod segmented;
 pub mod sort;
 pub mod timing;
 
 pub use self::core::*;
+pub use device::*;
 pub use pipeline::*;
 pub use segmented::*;
 pub use sort::*;
@@ -51,7 +64,12 @@ use std::sync::Arc;
 
 use crate::pool::{Pool, DEFAULT_GRAIN};
 
-/// Execution back end for the primitives.
+/// Execution back end for the primitives — the **deprecated** spelling
+/// of the device layer, kept for one release. `Backend` implements
+/// [`Device`], so it still works everywhere a device does; new code
+/// should construct [`SerialDevice`] / [`PoolDevice`] /
+/// [`OfflineAcceleratorDevice`] through [`device_for`] instead (see
+/// the migration table in `README.md`).
 #[derive(Clone)]
 pub enum Backend {
     /// Plain loops on the calling thread.
@@ -139,21 +157,18 @@ impl Backend {
 
     /// Deterministic chunk boundaries used by two-pass primitives
     /// (scan, radix sort): enough chunks to load every worker, few
-    /// enough that the serial combine step is negligible.
+    /// enough that the serial combine step is negligible. Shares the
+    /// ONE boundary formula with the device layer (`split_bounds` /
+    /// `pool_pieces` in [`device`]), so the legacy enum and
+    /// [`PoolDevice`] can never drift apart.
     pub fn chunk_bounds(&self, n: usize) -> Vec<(usize, usize)> {
         let pieces = match self {
             Backend::Serial => 1,
             Backend::Threaded { pool, grain } => {
-                let by_threads = pool.threads() * 4;
-                let by_grain = n.div_ceil((*grain).max(1));
-                by_threads.min(by_grain).max(1)
+                device::pool_pieces(pool.threads(), *grain, n)
             }
         };
-        let per = n.div_ceil(pieces);
-        (0..pieces)
-            .map(|i| (i * per, ((i + 1) * per).min(n)))
-            .filter(|(s, e)| s < e)
-            .collect()
+        device::split_bounds(n, pieces)
     }
 
     /// Run `f(chunk_idx)` for each chunk id in parallel.

@@ -38,8 +38,8 @@ use std::time::Instant;
 
 use crate::pool::Pool;
 
+use super::device::{Device, StageSpec};
 use super::timing;
-use super::Backend;
 
 /// One stage of a [`Pipeline`].
 struct Stage<'p> {
@@ -47,7 +47,7 @@ struct Stage<'p> {
     name: &'static str,
     /// Iteration-domain size.
     n: usize,
-    /// Explicit chunk grain; `None` = derived from the backend.
+    /// Explicit chunk grain; `None` = derived from the device.
     grain: Option<usize>,
     f: Box<dyn Fn(usize, usize) + Sync + 'p>,
 }
@@ -57,8 +57,10 @@ struct Stage<'p> {
 /// fork-join per primitive.
 ///
 /// Build with the consuming [`Pipeline::stage`] chain, then call
-/// [`Pipeline::run`]. Under [`Backend::Serial`] the stages simply run
-/// back-to-back on the calling thread (same results, no threads).
+/// [`Pipeline::run`] with any [`Device`]. Under a serial device the
+/// stages simply run back-to-back on the calling thread (same
+/// results, no threads); execution is whatever
+/// [`Device::run_stages`] does.
 ///
 /// # Examples
 ///
@@ -222,27 +224,27 @@ impl<'p> Pipeline<'p> {
         self
     }
 
-    /// Execute all stages in order under `bk`.
+    /// Execute all stages in order on `dev` (any [`Device`]).
     ///
-    /// [`Backend::Serial`]: stages run back-to-back on the calling
-    /// thread. [`Backend::Threaded`]: the pool enters one persistent
-    /// region; workers claim grain-sized chunks from a shared cursor
-    /// per stage and meet at a phase barrier between stages — no
-    /// fork-join until the whole pipeline is done. Per-stage wall time
-    /// (including barrier wait) is recorded in [`crate::dpp::timing`]
-    /// when profiling is enabled.
+    /// Serial-execution devices run the stages back-to-back on the
+    /// calling thread. [`crate::dpp::PoolDevice`] (and the legacy
+    /// `Backend::Threaded`) enter one persistent pool region; workers
+    /// claim grain-sized chunks from a shared cursor per stage and
+    /// meet at a phase barrier between stages — no fork-join until
+    /// the whole pipeline is done. Per-stage wall time (including
+    /// barrier wait) is recorded in [`crate::dpp::timing`] when
+    /// profiling is enabled.
     ///
     /// # Examples
     ///
     /// ```
-    /// use dpp_pmrf::dpp::{Backend, Pipeline, SharedSlice};
-    /// use dpp_pmrf::pool::Pool;
+    /// use dpp_pmrf::dpp::{Pipeline, PoolDevice, SharedSlice};
     ///
     /// let mut a = vec![0u32; 100];
     /// let mut b = vec![0u32; 100];
     /// let wa = SharedSlice::new(&mut a);
     /// let wb = SharedSlice::new(&mut b);
-    /// let bk = Backend::threaded_with_grain(Pool::new(2), 16);
+    /// let dev = PoolDevice::new(2, 16);
     /// Pipeline::new()
     ///     .stage("Map", 100, |s, e| {
     ///         for i in s..e {
@@ -255,73 +257,89 @@ impl<'p> Pipeline<'p> {
     ///             unsafe { wb.write(i, v + 1) };
     ///         }
     ///     })
-    ///     .run(&bk);
+    ///     .run(&dev);
     /// assert!(b.iter().enumerate().all(|(i, &v)| v == i as u32 + 1));
     /// ```
-    pub fn run(&self, bk: &Backend) {
+    pub fn run<D: Device + ?Sized>(&self, dev: &D) {
         if self.stages.is_empty() {
             return;
         }
-        match bk {
-            Backend::Serial => {
-                for st in &self.stages {
-                    timing::timed(st.name, || {
-                        if st.n > 0 {
-                            (st.f)(0, st.n);
-                        }
-                    });
-                }
-            }
-            Backend::Threaded { pool, grain } => {
-                self.run_region(pool, *grain);
-            }
-        }
-    }
-
-    fn run_region(&self, pool: &Pool, backend_grain: usize) {
-        let workers = pool.threads();
-        let grains: Vec<usize> = self
+        let specs: Vec<StageSpec<'_>> = self
             .stages
             .iter()
-            .map(|st| {
-                st.grain
-                    .unwrap_or_else(|| auto_grain(st.n, workers,
-                                                  backend_grain))
+            .map(|st| StageSpec {
+                name: st.name,
+                n: st.n,
+                grain: st.grain,
+                f: &*st.f,
             })
             .collect();
-        let cursors: Vec<AtomicUsize> =
-            self.stages.iter().map(|_| AtomicUsize::new(0)).collect();
-        let profile = timing::enabled();
-        let nanos: Vec<AtomicU64> =
-            self.stages.iter().map(|_| AtomicU64::new(0)).collect();
-        pool.region(|w, barrier| {
-            for (si, st) in self.stages.iter().enumerate() {
-                let t0 = if profile && w == 0 {
-                    Some(Instant::now())
-                } else {
-                    None
-                };
-                let g = grains[si];
-                loop {
-                    let s = cursors[si].fetch_add(g, Ordering::Relaxed);
-                    if s >= st.n {
-                        break;
-                    }
-                    (st.f)(s, (s + g).min(st.n));
-                }
-                barrier.wait();
-                if let Some(t) = t0 {
-                    nanos[si].store(
-                        t.elapsed().as_nanos() as u64,
-                        Ordering::Relaxed,
-                    );
-                }
+        dev.run_stages(&specs);
+    }
+}
+
+/// Serial stage executor — the default [`Device::run_stages`] body:
+/// stages back-to-back on the calling thread, each timed under its
+/// canonical primitive name.
+pub(crate) fn run_stages_serial(stages: &[StageSpec<'_>]) {
+    for st in stages {
+        timing::timed(st.name, || {
+            if st.n > 0 {
+                (st.f)(0, st.n);
             }
         });
-        if profile {
-            for (si, st) in self.stages.iter().enumerate() {
-                timing::record(st.name, nanos[si].load(Ordering::Relaxed));
+    }
+}
+
+/// Pool stage executor — one persistent region, a shared atomic chunk
+/// cursor per stage, and a phase barrier at every stage boundary.
+/// Used by [`crate::dpp::PoolDevice`] and the legacy
+/// `Backend::Threaded` variant.
+pub(crate) fn run_stages_region(
+    pool: &Pool,
+    backend_grain: usize,
+    stages: &[StageSpec<'_>],
+) {
+    let workers = pool.threads();
+    let grains: Vec<usize> = stages
+        .iter()
+        .map(|st| {
+            st.grain
+                .unwrap_or_else(|| auto_grain(st.n, workers, backend_grain))
+        })
+        .collect();
+    let cursors: Vec<AtomicUsize> =
+        stages.iter().map(|_| AtomicUsize::new(0)).collect();
+    let profile = timing::enabled();
+    let nanos: Vec<AtomicU64> =
+        stages.iter().map(|_| AtomicU64::new(0)).collect();
+    pool.region(|w, barrier| {
+        for (si, st) in stages.iter().enumerate() {
+            let t0 = if profile && w == 0 {
+                Some(Instant::now())
+            } else {
+                None
+            };
+            let g = grains[si];
+            loop {
+                let s = cursors[si].fetch_add(g, Ordering::Relaxed);
+                if s >= st.n {
+                    break;
+                }
+                (st.f)(s, (s + g).min(st.n));
             }
+            barrier.wait();
+            if let Some(t) = t0 {
+                nanos[si].store(
+                    t.elapsed().as_nanos() as u64,
+                    Ordering::Relaxed,
+                );
+            }
+        }
+    });
+    if profile {
+        for (si, st) in stages.iter().enumerate() {
+            timing::record(st.name, nanos[si].load(Ordering::Relaxed));
         }
     }
 }
@@ -337,6 +355,7 @@ fn auto_grain(n: usize, workers: usize, backend_grain: usize) -> usize {
 mod tests {
     use super::*;
     use crate::dpp::core::SharedSlice;
+    use crate::dpp::Backend;
     use crate::pool::Pool;
 
     fn backends() -> Vec<Backend> {

@@ -17,9 +17,9 @@
 //! the same input.
 
 use super::core::{map, map_indexed, scan_exclusive, SharedSlice};
+use super::device::{Device, DeviceExt};
 use super::sort::sort_by_key;
 use super::timing::timed;
-use super::Backend;
 
 /// CopyIf (stream compaction): keep `input[i]` where `keep(i)`.
 ///
@@ -32,8 +32,9 @@ use super::Backend;
 ///                                 |i| xs[i] % 2 == 0);
 /// assert_eq!(kept, vec![6, 8]);
 /// ```
-pub fn copy_if_indexed<T, F>(bk: &Backend, input: &[T], keep: F) -> Vec<T>
+pub fn copy_if_indexed<D, T, F>(bk: &D, input: &[T], keep: F) -> Vec<T>
 where
+    D: Device + ?Sized,
     T: Copy + Default + Send + Sync,
     F: Fn(usize) -> bool + Sync,
 {
@@ -64,8 +65,9 @@ where
 /// let idx = dpp::select_indices(&Backend::Serial, 10, |i| i % 4 == 0);
 /// assert_eq!(idx, vec![0, 4, 8]);
 /// ```
-pub fn select_indices<F>(bk: &Backend, n: usize, keep: F) -> Vec<u32>
+pub fn select_indices<D, F>(bk: &D, n: usize, keep: F) -> Vec<u32>
 where
+    D: Device + ?Sized,
     F: Fn(usize) -> bool + Sync,
 {
     timed("CopyIf", || {
@@ -93,8 +95,9 @@ where
 /// let u = dpp::unique(&Backend::Serial, &[1u32, 1, 2, 2, 1]);
 /// assert_eq!(u, vec![1, 2, 1]); // adjacent dups only
 /// ```
-pub fn unique<T>(bk: &Backend, input: &[T]) -> Vec<T>
+pub fn unique<D, T>(bk: &D, input: &[T]) -> Vec<T>
 where
+    D: Device + ?Sized,
     T: Copy + Default + PartialEq + Send + Sync,
 {
     timed("Unique", || {
@@ -119,14 +122,15 @@ where
 /// assert_eq!(k, vec![0, 3]);
 /// assert_eq!(v, vec![3, 4]);
 /// ```
-pub fn reduce_by_key<K, V, F>(
-    bk: &Backend,
+pub fn reduce_by_key<D, K, V, F>(
+    bk: &D,
     keys: &[K],
     vals: &[V],
     identity: V,
     op: F,
 ) -> (Vec<K>, Vec<V>)
 where
+    D: Device + ?Sized,
     K: Copy + Default + PartialEq + Send + Sync,
     V: Copy + Default + Send + Sync,
     F: Fn(V, V) -> V + Sync,
@@ -193,8 +197,9 @@ fn is_key_sorted_grouped<K: PartialEq>(keys: &[K]) -> bool {
 /// assert_eq!(sk, vec![3, 7]);
 /// assert_eq!(off, vec![0, 2, 3]);
 /// ```
-pub fn segment_offsets<K>(bk: &Backend, keys: &[K]) -> (Vec<K>, Vec<u32>)
+pub fn segment_offsets<D, K>(bk: &D, keys: &[K]) -> (Vec<K>, Vec<u32>)
 where
+    D: Device + ?Sized,
     K: Copy + Default + PartialEq + Send + Sync,
 {
     let n = keys.len();
@@ -265,11 +270,36 @@ pub struct SegmentPlan {
     offsets: Vec<u32>,
 }
 
+/// An integer key type [`SegmentPlan::build_keys`] accepts: the ONE
+/// generic widening path behind both [`SegmentPlan::build`] (u64) and
+/// [`SegmentPlan::build_u32`]. Widening must be monotone (`a <= b`
+/// implies `widen(a) <= widen(b)`), so sortedness detected on the
+/// narrow keys carries over to the widened ones.
+pub trait SegmentKey:
+    Copy + Default + PartialEq + PartialOrd + Send + Sync
+{
+    /// Lossless monotone widening into the plan's u64 key space.
+    fn widen(self) -> u64;
+}
+
+impl SegmentKey for u64 {
+    fn widen(self) -> u64 {
+        self
+    }
+}
+
+impl SegmentKey for u32 {
+    fn widen(self) -> u64 {
+        self as u64
+    }
+}
+
 impl SegmentPlan {
-    /// Build a plan from `keys`, paying the SortByKey now so no later
-    /// reduction has to. Keys that are already sorted (the common case
-    /// for CSR-derived groupings) are detected with one linear scan
-    /// and skip both the sort and the permutation storage.
+    /// Build a plan from `u64` keys — a thin wrapper over
+    /// [`SegmentPlan::build_keys`], paying the SortByKey now so no
+    /// later reduction has to. Keys that are already sorted (the
+    /// common case for CSR-derived groupings) are detected with one
+    /// linear scan and skip both the sort and the permutation storage.
     ///
     /// # Examples
     ///
@@ -280,22 +310,13 @@ impl SegmentPlan {
     /// assert_eq!(plan.num_segments(), 2);
     /// assert_eq!(plan.permutation(), None); // sorted: identity
     /// ```
-    pub fn build(bk: &Backend, keys: &[u64]) -> SegmentPlan {
-        let n = keys.len();
-        assert!(n <= u32::MAX as usize, "SegmentPlan: too many elements");
-        if keys.windows(2).all(|w| w[0] <= w[1]) {
-            let (seg_keys, offsets) = segment_offsets(bk, keys);
-            return SegmentPlan { n, perm: None, seg_keys, offsets };
-        }
-        let mut sorted = keys.to_vec();
-        let mut perm: Vec<u32> = map_indexed(bk, n, |i| i as u32);
-        sort_by_key(bk, &mut sorted, &mut perm);
-        let (seg_keys, offsets) = segment_offsets(bk, &sorted);
-        SegmentPlan { n, perm: Some(perm), seg_keys, offsets }
+    pub fn build<D: Device + ?Sized>(bk: &D, keys: &[u64]) -> SegmentPlan {
+        SegmentPlan::build_keys(bk, keys)
     }
 
     /// [`SegmentPlan::build`] for `u32` keys (hood ids, region labels,
-    /// vertex ids — most static keys in this codebase are `u32`).
+    /// vertex ids — most static keys in this codebase are `u32`); a
+    /// thin wrapper over [`SegmentPlan::build_keys`].
     ///
     /// # Examples
     ///
@@ -306,9 +327,43 @@ impl SegmentPlan {
     /// assert_eq!(plan.segment_keys(), &[0, 1]);
     /// assert_eq!(plan.segment_len(1), 2);
     /// ```
-    pub fn build_u32(bk: &Backend, keys: &[u32]) -> SegmentPlan {
-        let wide: Vec<u64> = map(bk, keys, |&k| k as u64);
-        SegmentPlan::build(bk, &wide)
+    pub fn build_u32<D: Device + ?Sized>(bk: &D, keys: &[u32])
+        -> SegmentPlan {
+        SegmentPlan::build_keys(bk, keys)
+    }
+
+    /// The generic construction path every key-built plan goes
+    /// through: detect sortedness on the *narrow* keys (one linear
+    /// scan, no widening copy on the fast path), otherwise widen via
+    /// Map and pay the run's SortByKey.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::{Backend, SegmentPlan};
+    /// let bk = Backend::Serial;
+    /// // Same plan whether the keys arrive as u32 or u64.
+    /// let a = SegmentPlan::build_keys(&bk, &[2u32, 0, 2]);
+    /// let b = SegmentPlan::build_keys(&bk, &[2u64, 0, 2]);
+    /// assert_eq!(a, b);
+    /// ```
+    pub fn build_keys<D, K>(bk: &D, keys: &[K]) -> SegmentPlan
+    where
+        D: Device + ?Sized,
+        K: SegmentKey,
+    {
+        let n = keys.len();
+        assert!(n <= u32::MAX as usize, "SegmentPlan: too many elements");
+        if keys.windows(2).all(|w| w[0] <= w[1]) {
+            let (narrow, offsets) = segment_offsets(bk, keys);
+            let seg_keys = narrow.iter().map(|k| k.widen()).collect();
+            return SegmentPlan { n, perm: None, seg_keys, offsets };
+        }
+        let mut sorted: Vec<u64> = map(bk, keys, |k| k.widen());
+        let mut perm: Vec<u32> = map_indexed(bk, n, |i| i as u32);
+        sort_by_key(bk, &mut sorted, &mut perm);
+        let (seg_keys, offsets) = segment_offsets(bk, &sorted);
+        SegmentPlan { n, perm: Some(perm), seg_keys, offsets }
     }
 
     /// Build a plan directly from CSR-style offsets — the "segments
@@ -588,14 +643,15 @@ impl SegmentPlan {
     /// let sums = plan.reduce_segments(&bk, &vals, 0.0, |a, b| a + b);
     /// assert_eq!(sums, vec![3.5, 2.0]); // keys 0, 1
     /// ```
-    pub fn reduce_segments<V, F>(
+    pub fn reduce_segments<D, V, F>(
         &self,
-        bk: &Backend,
+        bk: &D,
         vals: &[V],
         identity: V,
         op: F,
     ) -> Vec<V>
     where
+        D: Device + ?Sized,
         V: Copy + Default + Send + Sync,
         F: Fn(V, V) -> V + Sync,
     {
@@ -619,14 +675,15 @@ impl SegmentPlan {
     ///     &bk, |i| src[idx[i] as usize], 0, |a, b| a + b);
     /// assert_eq!(sums, vec![13, 5]);
     /// ```
-    pub fn reduce_segments_map<V, F, G>(
+    pub fn reduce_segments_map<D, V, F, G>(
         &self,
-        bk: &Backend,
+        bk: &D,
         fetch: G,
         identity: V,
         op: F,
     ) -> Vec<V>
     where
+        D: Device + ?Sized,
         V: Copy + Default + Send + Sync,
         F: Fn(V, V) -> V + Sync,
         G: Fn(usize) -> V + Sync,
@@ -650,14 +707,15 @@ impl SegmentPlan {
     ///                           &mut out);
     /// assert_eq!(out, vec![4, 3]);
     /// ```
-    pub fn reduce_segments_into<V, F>(
+    pub fn reduce_segments_into<D, V, F>(
         &self,
-        bk: &Backend,
+        bk: &D,
         vals: &[V],
         identity: V,
         op: F,
         out: &mut [V],
     ) where
+        D: Device + ?Sized,
         V: Copy + Send + Sync,
         F: Fn(V, V) -> V + Sync,
     {
@@ -680,14 +738,15 @@ impl SegmentPlan {
     ///                               |a, b| a + b, &mut out);
     /// assert_eq!(out, vec![1, 0, 2]); // empty segment -> identity
     /// ```
-    pub fn reduce_segments_map_into<V, F, G>(
+    pub fn reduce_segments_map_into<D, V, F, G>(
         &self,
-        bk: &Backend,
+        bk: &D,
         fetch: G,
         identity: V,
         op: F,
         out: &mut [V],
     ) where
+        D: Device + ?Sized,
         V: Copy + Send + Sync,
         F: Fn(V, V) -> V + Sync,
         G: Fn(usize) -> V + Sync,
@@ -709,6 +768,7 @@ impl SegmentPlan {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dpp::Backend;
     use crate::pool::Pool;
 
     fn backends() -> Vec<Backend> {
@@ -848,6 +908,28 @@ mod tests {
                 single.reduce_segments(&bk, &vals, 0, |a, b| a + b),
                 vec![1000]
             );
+        }
+    }
+
+    #[test]
+    fn build_u32_matches_widened_build() {
+        for bk in backends() {
+            // Unsorted: both spellings go through the same generic
+            // widen-sort path and must yield identical plans.
+            let keys32: Vec<u32> = vec![9, 2, 2, 7, 9, 0, 7];
+            let keys64: Vec<u64> =
+                keys32.iter().map(|&k| k as u64).collect();
+            assert_eq!(
+                SegmentPlan::build_u32(&bk, &keys32),
+                SegmentPlan::build(&bk, &keys64)
+            );
+            // Sorted fast path: no widening copy, still identical.
+            let sorted32: Vec<u32> = vec![0, 0, 3, 5];
+            let sorted64: Vec<u64> =
+                sorted32.iter().map(|&k| k as u64).collect();
+            let a = SegmentPlan::build_u32(&bk, &sorted32);
+            assert_eq!(a.permutation(), None);
+            assert_eq!(a, SegmentPlan::build(&bk, &sorted64));
         }
     }
 

@@ -16,8 +16,8 @@
 //! baseline (`benches/ablation_sort.rs`).
 
 use super::core::SharedSlice;
+use super::device::{Device, DeviceExt};
 use super::timing::timed;
-use super::Backend;
 
 const RADIX_BITS: usize = 8;
 const BUCKETS: usize = 1 << RADIX_BITS;
@@ -65,7 +65,11 @@ pub fn unpack_pair(key: u64) -> (u32, u32) {
 /// assert_eq!(keys, vec![1, 2, 3, 3]);
 /// assert_eq!(vals, vec![1, 3, 0, 2]); // stable: 0 before 2
 /// ```
-pub fn sort_by_key(bk: &Backend, keys: &mut Vec<u64>, vals: &mut Vec<u32>) {
+pub fn sort_by_key<D: Device + ?Sized>(
+    bk: &D,
+    keys: &mut Vec<u64>,
+    vals: &mut Vec<u32>,
+) {
     assert_eq!(keys.len(), vals.len(), "sort_by_key length mismatch");
     timed("SortByKey", || {
         radix_sort(bk, keys, vals);
@@ -82,14 +86,18 @@ pub fn sort_by_key(bk: &Backend, keys: &mut Vec<u64>, vals: &mut Vec<u32>) {
 /// dpp::sort_keys(&Backend::Serial, &mut keys);
 /// assert_eq!(keys, vec![4, 7, 9]);
 /// ```
-pub fn sort_keys(bk: &Backend, keys: &mut Vec<u64>) {
+pub fn sort_keys<D: Device + ?Sized>(bk: &D, keys: &mut Vec<u64>) {
     timed("SortByKey", || {
         let mut vals = vec![0u32; keys.len()];
         radix_sort(bk, keys, &mut vals);
     })
 }
 
-fn radix_sort(bk: &Backend, keys: &mut Vec<u64>, vals: &mut Vec<u32>) {
+fn radix_sort<D: Device + ?Sized>(
+    bk: &D,
+    keys: &mut Vec<u64>,
+    vals: &mut Vec<u32>,
+) {
     let n = keys.len();
     if n <= 1 {
         return;
@@ -203,6 +211,7 @@ pub fn sort_pairs_comparison(keys: &mut [u64], vals: &mut [u32]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dpp::Backend;
     use crate::pool::Pool;
     use crate::util::Pcg32;
 

@@ -10,7 +10,7 @@
 
 use std::collections::BTreeSet;
 
-use crate::dpp::{self, Backend};
+use crate::dpp::{self, Device};
 use crate::overseg::Overseg;
 
 /// Compressed-sparse-row undirected graph. Neighbor lists are sorted
@@ -98,7 +98,7 @@ pub fn build_rag_serial(seg: &Overseg) -> Csr {
 }
 
 /// Data-parallel RAG builder (paper's initialization, §3.2.1).
-pub fn build_rag_dpp(bk: &Backend, seg: &Overseg) -> Csr {
+pub fn build_rag_dpp(bk: &dyn Device, seg: &Overseg) -> Csr {
     let (w, h) = (seg.width, seg.height);
     let n_px = w * h;
     let labels = &seg.labels;
@@ -152,7 +152,7 @@ pub fn build_rag_dpp(bk: &Backend, seg: &Overseg) -> Csr {
 /// (x+1, y+1, z+1) through the same DPP Sort/Unique pipeline. Part of
 /// the paper's §5 future-work extension.
 pub fn build_rag_3d(
-    bk: &Backend,
+    bk: &dyn Device,
     seg: &Overseg,
     width: usize,
     height: usize,
@@ -207,6 +207,7 @@ pub fn build_rag_3d(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dpp::Backend;
     use crate::config::OversegConfig;
     use crate::image::synth;
     use crate::overseg::oversegment;

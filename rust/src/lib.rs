@@ -38,7 +38,13 @@ pub mod prelude {
     pub use crate::bp::{BpConfig, BpSchedule};
     pub use crate::config::{DatasetKind, EngineKind, RunConfig,
                             SchedConfig};
+    // `Backend` is the deprecated device spelling, re-exported for one
+    // release; see the migration table in README.md.
     pub use crate::dpp::Backend;
+    pub use crate::dpp::{device_for, Device, DeviceCaps, DeviceExt,
+                         DeviceKind, IntoDevice,
+                         OfflineAcceleratorDevice, PoolDevice,
+                         SerialDevice};
     pub use crate::pool::Pool;
     pub use crate::sched::{Job, Service};
     pub use crate::util::{Pcg32, Timer};

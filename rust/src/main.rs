@@ -16,7 +16,7 @@ use anyhow::{bail, Result};
 
 use dpp_pmrf::bp::BpSchedule;
 use dpp_pmrf::cli::Spec;
-use dpp_pmrf::config::{DatasetKind, EngineKind, RunConfig};
+use dpp_pmrf::config::{DatasetKind, DeviceKind, EngineKind, RunConfig};
 use dpp_pmrf::coordinator::Coordinator;
 use dpp_pmrf::image::{self, Dataset, Volume};
 use dpp_pmrf::util::logging::{self, Level};
@@ -135,6 +135,11 @@ fn cmd_segment(args: &[String]) -> Result<()> {
     let spec = common_spec(Spec::new("dpp-pmrf segment",
                                      "run the segmentation pipeline"))
         .opt("engine", EngineKind::USAGE, Some("dpp"))
+        .opt("device",
+             "execution device for the DPP primitives \
+              (auto|serial|pool|accel; default: config file value, \
+              else auto)",
+             None)
         .opt("threads", "worker threads (default: all cores)", None)
         .opt("lanes",
              "slice scheduler lanes (1 = serial slice order)", None)
@@ -158,6 +163,9 @@ fn cmd_segment(args: &[String]) -> Result<()> {
     let m = spec.parse(args)?;
     let mut cfg = load_cfg(&m)?;
     cfg.engine = EngineKind::parse(m.get("engine").unwrap())?;
+    if let Some(d) = m.get("device") {
+        cfg.device = DeviceKind::parse(d)?;
+    }
     if let Some(t) = m.get_parse::<usize>("threads")? {
         cfg.threads = t;
     }
@@ -187,9 +195,10 @@ fn cmd_segment(args: &[String]) -> Result<()> {
 
     let ds = load_or_generate(&m, &cfg)?;
     let coord = Coordinator::new(cfg.clone())?;
-    log_info!("engine {} / {} threads / {} lane(s), inflight {}",
-              cfg.engine.name(), cfg.threads, cfg.sched.lanes,
-              cfg.sched.inflight);
+    log_info!("engine {} / device {} / {} threads / {} lane(s), \
+               inflight {}",
+              cfg.engine.name(), cfg.device.name(), cfg.threads,
+              cfg.sched.lanes, cfg.sched.inflight);
     let report = coord.run(&ds)?;
 
     log_info!(
@@ -257,6 +266,10 @@ fn cmd_engines(args: &[String]) -> Result<()> {
     println!("engines:");
     for kind in EngineKind::all() {
         println!("  {:<10} {}", kind.name(), kind.about());
+    }
+    println!("devices (--device):");
+    for kind in DeviceKind::all() {
+        println!("  {}", kind.name());
     }
     let dir = PathBuf::from(m.get("artifacts").unwrap());
     match dpp_pmrf::runtime::EmRuntime::load(&dir) {

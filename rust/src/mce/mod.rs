@@ -16,7 +16,7 @@
 //! RAGs are near-planar, so cliques are small (≤ 4 in practice) and the
 //! level count stays tiny.
 
-use crate::dpp::{self, Backend};
+use crate::dpp::{self, Device, DeviceExt};
 use crate::graph::Csr;
 
 /// A set of cliques in ragged CSR-like storage. Each clique's vertices
@@ -145,7 +145,7 @@ fn has_extension(g: &Csr, clique: &[u32]) -> bool {
 }
 
 /// DPP-based MCE by ordered expansion (see module docs).
-pub fn enumerate_dpp(bk: &Backend, g: &Csr) -> CliqueSet {
+pub fn enumerate_dpp(bk: &dyn Device, g: &Csr) -> CliqueSet {
     let n = g.num_vertices();
     let mut out = CliqueSet::default();
     out.offsets.push(0);
@@ -244,6 +244,7 @@ pub fn enumerate_dpp(bk: &Backend, g: &Csr) -> CliqueSet {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dpp::Backend;
     use crate::pool::Pool;
     use crate::util::Pcg32;
 

@@ -25,8 +25,10 @@
 //!    convergence windows; **Scatter** labels back.
 //! 7. Per-label parameter statistics via chunked **Reduce**.
 
+use std::sync::Arc;
+
 use crate::config::MrfConfig;
-use crate::dpp::{self, Backend};
+use crate::dpp::{self, Device, DeviceExt, IntoDevice};
 
 use super::energy::{self, Params};
 use super::params::{self, Stats};
@@ -60,21 +62,24 @@ pub enum PairMode {
 }
 
 pub struct DppEngine {
-    backend: Backend,
+    device: Arc<dyn Device>,
     pub mode: PairMode,
 }
 
 impl DppEngine {
-    pub fn new(backend: Backend) -> Self {
-        DppEngine { backend, mode: PairMode::default() }
+    /// Engine on any device — accepts a concrete device, an
+    /// `Arc<dyn Device>`, or the deprecated `Backend` spelling.
+    pub fn new(device: impl IntoDevice) -> Self {
+        DppEngine { device: device.into_device(), mode: PairMode::default() }
     }
 
-    pub fn with_mode(backend: Backend, mode: PairMode) -> Self {
-        DppEngine { backend, mode }
+    pub fn with_mode(device: impl IntoDevice, mode: PairMode) -> Self {
+        DppEngine { device: device.into_device(), mode }
     }
 
-    pub fn backend(&self) -> &Backend {
-        &self.backend
+    /// The device every primitive of this engine executes on.
+    pub fn device(&self) -> &Arc<dyn Device> {
+        &self.device
     }
 }
 
@@ -89,20 +94,18 @@ impl Engine for DppEngine {
 
     fn run(&self, model: &MrfModel, cfg: &MrfConfig) -> EmResult {
         let nh = model.hoods.num_hoods();
+        let bk: &dyn Device = &*self.device;
         match self.mode {
             PairMode::Paper => {
-                let (mut step, prm) =
-                    PaperStep::new(&self.backend, model, cfg);
+                let (mut step, prm) = PaperStep::new(bk, model, cfg);
                 drive_em(&mut step, nh, prm, cfg)
             }
             PairMode::Planned => {
-                let (mut step, prm) =
-                    PlannedStep::new(&self.backend, model, cfg);
+                let (mut step, prm) = PlannedStep::new(bk, model, cfg);
                 drive_em(&mut step, nh, prm, cfg)
             }
             PairMode::Fused => {
-                let (mut step, prm) =
-                    FusedStep::new(&self.backend, model, cfg);
+                let (mut step, prm) = FusedStep::new(bk, model, cfg);
                 drive_em(&mut step, nh, prm, cfg)
             }
         }
@@ -176,7 +179,7 @@ fn drive_em(
 /// Paper-literal pipeline built from the generic primitives (one
 /// fork-join and one full sort per iteration — the unfused baseline).
 struct PaperStep<'a> {
-    bk: &'a Backend,
+    bk: &'a dyn Device,
     model: &'a MrfModel,
     n: usize,
     // ---- static arrays (built once; Alg. 2 lines 1–5) ----
@@ -189,7 +192,7 @@ struct PaperStep<'a> {
 }
 
 impl<'a> PaperStep<'a> {
-    fn new(bk: &'a Backend, model: &'a MrfModel, cfg: &MrfConfig)
+    fn new(bk: &'a dyn Device, model: &'a MrfModel, cfg: &MrfConfig)
         -> (PaperStep<'a>, Params) {
         let h = &model.hoods;
         let n = h.num_elements();
@@ -284,7 +287,7 @@ impl EmStep for PaperStep<'_> {
 /// Paper-mode pairing: replicated energy Map over 2n, SortByKey by
 /// element id, `ReduceByKey<Min>` (§3.2.2 steps 2–3).
 fn pair_paper(
-    bk: &Backend,
+    bk: &dyn Device,
     n: usize,
     y: &[f32],
     lbl: &[f32],
@@ -351,7 +354,7 @@ fn pair_paper(
 /// reduced serially in the cached stable-sort order, which is exactly
 /// the order the per-iteration sort would have produced.
 struct PlannedStep<'a> {
-    bk: &'a Backend,
+    bk: &'a dyn Device,
     model: &'a MrfModel,
     n: usize,
     nh: usize,
@@ -373,7 +376,7 @@ struct PlannedStep<'a> {
 }
 
 impl<'a> PlannedStep<'a> {
-    fn new(bk: &'a Backend, model: &'a MrfModel, cfg: &MrfConfig)
+    fn new(bk: &'a dyn Device, model: &'a MrfModel, cfg: &MrfConfig)
         -> (PlannedStep<'a>, Params) {
         use crate::dpp::SegmentPlan;
 
@@ -620,7 +623,7 @@ impl EmStep for PlannedStep<'_> {
 /// Bitwise-identical to the serial engine and to Paper mode (same
 /// f32 op order within hoods/vertices).
 struct FusedStep<'a> {
-    bk: &'a Backend,
+    bk: &'a dyn Device,
     model: &'a MrfModel,
     y_elem: Vec<f32>,
     /// Grains in hood/vertex units scaled from the element grain.
@@ -634,7 +637,7 @@ struct FusedStep<'a> {
 }
 
 impl<'a> FusedStep<'a> {
-    fn new(bk: &'a Backend, model: &'a MrfModel, cfg: &MrfConfig)
+    fn new(bk: &'a dyn Device, model: &'a MrfModel, cfg: &MrfConfig)
         -> (FusedStep<'a>, Params) {
         let h = &model.hoods;
         let n = h.num_elements();
@@ -642,10 +645,7 @@ impl<'a> FusedStep<'a> {
         let nv = model.num_vertices();
         let y_elem = model.y_elems();
 
-        let elem_grain = match bk {
-            Backend::Serial => usize::MAX,
-            Backend::Threaded { grain, .. } => *grain,
-        };
+        let elem_grain = bk.grain();
         let hood_grain =
             (elem_grain / (n / nh.max(1)).max(1)).clamp(1, usize::MAX);
         let vert_grain =
@@ -768,7 +768,7 @@ impl EmStep for FusedStep<'_> {
 
 /// Per-label (count, sum, sumsq) via per-chunk accumulation merged in
 /// chunk order (deterministic for a fixed backend).
-fn stats_reduce(bk: &Backend, amin: &[u8], y: &[f32]) -> Stats {
+fn stats_reduce(bk: &dyn Device, amin: &[u8], y: &[f32]) -> Stats {
     let bounds = bk.chunk_bounds(amin.len());
     let mut partials = vec![Stats::default(); bounds.len()];
     {
@@ -794,6 +794,7 @@ fn stats_reduce(bk: &Backend, amin: &[u8], y: &[f32]) -> Stats {
 mod tests {
     use super::*;
     use crate::config::OversegConfig;
+    use crate::dpp::Backend;
     use crate::overseg::oversegment;
     use crate::pool::Pool;
 

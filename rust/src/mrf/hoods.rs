@@ -12,7 +12,7 @@
 
 use std::collections::BTreeSet;
 
-use crate::dpp::{self, Backend};
+use crate::dpp::{self, Device, DeviceExt};
 use crate::graph::Csr;
 use crate::mce::CliqueSet;
 
@@ -107,7 +107,7 @@ pub fn build_serial(g: &Csr, cliques: &CliqueSet, num_vertices: usize)
 }
 
 /// DPP builder (paper §3.2.1 steps 1–4).
-pub fn build_dpp(bk: &Backend, g: &Csr, cliques: &CliqueSet,
+pub fn build_dpp(bk: &dyn Device, g: &Csr, cliques: &CliqueSet,
                  num_vertices: usize) -> Hoods {
     let nc = cliques.num_cliques();
     if nc == 0 {
@@ -173,6 +173,7 @@ pub fn build_dpp(bk: &Backend, g: &Csr, cliques: &CliqueSet,
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dpp::Backend;
     use crate::mce;
     use crate::pool::Pool;
 

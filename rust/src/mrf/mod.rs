@@ -40,7 +40,7 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::config::{EngineKind, MrfConfig};
-use crate::dpp::Backend;
+use crate::dpp::{Device, IntoDevice};
 use crate::graph::Csr;
 use crate::overseg::Overseg;
 use crate::pool::Pool;
@@ -68,7 +68,7 @@ impl MrfModel {
 
 /// Full model construction from an oversegmentation: RAG -> maximal
 /// cliques -> 1-neighborhoods, all through the DPP pipeline.
-pub fn build_model(bk: &Backend, seg: &Overseg) -> MrfModel {
+pub fn build_model(bk: &dyn Device, seg: &Overseg) -> MrfModel {
     let graph = crate::graph::build_rag_dpp(bk, seg);
     let cliques = crate::mce::enumerate_dpp(bk, &graph);
     let hoods =
@@ -109,21 +109,26 @@ pub trait Engine {
 }
 
 /// Everything [`make_engine`] may need; callers fill in what they have
-/// (`runtime` is only required for [`EngineKind::Xla`]).
+/// (`runtime` is only required for [`EngineKind::Xla`], and there only
+/// when the device itself carries no accelerator runtime).
 #[derive(Clone)]
 pub struct EngineResources {
     pub pool: Arc<Pool>,
-    pub backend: Backend,
+    /// The device every engine's primitives execute on.
+    pub device: Arc<dyn Device>,
     pub runtime: Option<Arc<EmRuntime>>,
     pub bp: crate::bp::BpConfig,
 }
 
 impl EngineResources {
     /// Resources for the pure-CPU engines (serial/reference/dpp/bp).
-    pub fn new(pool: Arc<Pool>, backend: Backend) -> EngineResources {
+    /// Accepts a concrete device, an `Arc<dyn Device>`, or the
+    /// deprecated `Backend` spelling.
+    pub fn new(pool: Arc<Pool>, device: impl IntoDevice)
+        -> EngineResources {
         EngineResources {
             pool,
-            backend,
+            device: device.into_device(),
             runtime: None,
             bp: crate::bp::BpConfig::default(),
         }
@@ -141,15 +146,17 @@ pub fn make_engine(kind: EngineKind, res: &EngineResources)
             Box::new(reference::ReferenceEngine::new(Arc::clone(&res.pool)))
         }
         EngineKind::Dpp => {
-            Box::new(dpp::DppEngine::new(res.backend.clone()))
+            Box::new(dpp::DppEngine::new(Arc::clone(&res.device)))
         }
-        EngineKind::Xla => Box::new(xla::XlaEngine::new(Arc::clone(
+        EngineKind::Xla => Box::new(xla::XlaEngine::new(
             res.runtime
-                .as_ref()
-                .context("xla engine needs loaded artifacts")?,
-        ))),
+                .clone()
+                .or_else(|| res.device.accelerator_runtime())
+                .context("xla engine needs loaded artifacts (pass a \
+                          runtime or an accel device with artifacts)")?,
+        )),
         EngineKind::Bp => Box::new(crate::bp::BpEngine::new(
-            res.backend.clone(),
+            Arc::clone(&res.device),
             res.bp,
         )),
     })
@@ -285,6 +292,7 @@ impl HoodWindows {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dpp::Backend;
 
     #[test]
     fn window_needs_history() {

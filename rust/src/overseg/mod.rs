@@ -17,7 +17,7 @@ mod unionfind;
 pub use unionfind::UnionFind;
 
 use crate::config::OversegConfig;
-use crate::dpp::{self, Backend};
+use crate::dpp::{self, Device};
 use crate::image::ImageSlice;
 
 /// Result of oversegmenting one slice: a compact region labeling plus
@@ -63,7 +63,7 @@ fn build_edges(img: &ImageSlice) -> (Vec<u32>, Vec<u32>, Vec<u8>) {
 }
 
 /// Oversegment one image slice.
-pub fn oversegment(bk: &Backend, img: &ImageSlice, cfg: &OversegConfig)
+pub fn oversegment(bk: &dyn Device, img: &ImageSlice, cfg: &OversegConfig)
     -> Overseg {
     let (ea, eb, ew) = build_edges(img);
     segment_core(bk, img.pixels, &ea, &eb, &ew, img.width, img.height, cfg)
@@ -75,7 +75,7 @@ pub fn oversegment(bk: &Backend, img: &ImageSlice, cfg: &OversegConfig)
 /// [`Overseg`] flattens z into the height axis (`height = h * depth`),
 /// which every downstream consumer (RAG, hoods, painting) already
 /// handles since they only read `labels` linearly.
-pub fn oversegment_3d(bk: &Backend, vol: &crate::image::Volume,
+pub fn oversegment_3d(bk: &dyn Device, vol: &crate::image::Volume,
                       cfg: &OversegConfig) -> Overseg {
     let (w, h, d) = (vol.width, vol.height, vol.depth);
     let mut a = Vec::with_capacity(3 * vol.voxels());
@@ -111,7 +111,7 @@ pub fn oversegment_3d(bk: &Backend, vol: &crate::image::Volume,
 /// Shared Felzenszwalb merging core over an explicit edge list.
 #[allow(clippy::too_many_arguments)]
 fn segment_core(
-    bk: &Backend,
+    bk: &dyn Device,
     intensity: &[u8],
     ea: &[u32],
     eb: &[u32],
@@ -209,6 +209,7 @@ fn segment_core(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dpp::Backend;
     use crate::image::Volume;
     use crate::pool::Pool;
 

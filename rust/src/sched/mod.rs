@@ -28,13 +28,13 @@
 //!   initialized-but-unoptimized slice models wait between the stages;
 //!   producers block at the cap (bounded memory), and the observed
 //!   high-water mark is reported in [`SchedStats::peak_inflight`].
-//! * **Determinism** — every worker runs on a backend with the *same*
-//!   thread count and grain as the serial path
-//!   ([`crate::dpp::Backend::chunk_bounds`] depends on both), and each
+//! * **Determinism** — every worker runs on a device with the *same*
+//!   kind, thread count, and grain as the serial path
+//!   ([`crate::dpp::Device::chunk_bounds`] depends on all three), and each
 //!   slice is claimed exactly once, so per-slice labels, energies, and
 //!   the painted output volume are bitwise identical to the serial
 //!   loop for every lane count; `lanes = 1` *is* the pre-scheduler
-//!   serial loop, same backend, same order
+//!   serial loop, same device, same order
 //!   (`rust/tests/sched_determinism.rs`). With `threads > 1` each of
 //!   the `2 × lanes` stage workers owns a pool of that size, so a run
 //!   oversubscribes to roughly `2 × lanes × threads` workers —
@@ -63,7 +63,8 @@ use anyhow::Result;
 
 use crate::config::{EngineKind, RunConfig};
 use crate::coordinator::{RunReport, SliceReport};
-use crate::dpp::{timing, Backend, SharedSlice};
+use crate::dpp::{device_descriptor, device_for, device_is_pool_free,
+                 timing, Device, SharedSlice};
 use crate::image::{Dataset, Volume};
 use crate::metrics::Confusion;
 use crate::mrf::{self, Engine, EngineResources, MrfModel};
@@ -118,7 +119,7 @@ impl SchedStats {
 /// graph, maximal cliques, 1-neighborhoods. Shared by the serial path,
 /// the init workers, and [`crate::coordinator::Coordinator`].
 pub(crate) fn build_slice_model(
-    bk: &Backend,
+    bk: &dyn Device,
     cfg: &RunConfig,
     input: &Volume,
     z: usize,
@@ -162,18 +163,34 @@ pub(crate) fn paint_slice(
     paint_pixels(out.slice_mut(z), seg, labels, params);
 }
 
-/// Backend for one scheduler worker — the same construction rule as
-/// the coordinator's own backend ([`Backend::for_threads`]), which is
+/// Device for one scheduler worker — the same construction rule as
+/// the coordinator's own device ([`crate::dpp::device_for`]), which is
 /// what makes sharded per-slice results bitwise identical to the
-/// serial path.
-fn worker_backend(cfg: &RunConfig) -> Backend {
-    Backend::for_threads(cfg.threads, cfg.grain)
+/// serial path ([`Device::chunk_bounds`] depends on exactly the
+/// configured kind, threads, and grain).
+fn worker_device(cfg: &RunConfig) -> Arc<dyn Device> {
+    device_for(cfg.device, cfg.threads, cfg.grain, &cfg.artifacts_dir)
+}
+
+/// Pool for engines outside the primitive vocabulary when the device
+/// carries none: only the [`EngineKind::Reference`] engine consumes
+/// `EngineResources::pool`, so it alone gets a `threads`-sized pool
+/// (honoring the configured budget rather than collapsing to one
+/// thread); every other engine gets the free serial pool instead of
+/// eagerly parked worker threads.
+pub(crate) fn fallback_pool(engine: EngineKind, threads: usize)
+    -> Arc<Pool> {
+    if engine == EngineKind::Reference && threads > 1 {
+        Pool::new(threads)
+    } else {
+        Pool::serial()
+    }
 }
 
 /// Run the slice pipeline for `dataset` under `cfg` through the
 /// scheduler, constructing engines from `res` (one per lane).
 /// `cfg.sched.lanes <= 1` reproduces the pre-scheduler serial loop
-/// bitwise on `res.backend`; more lanes shard the stack.
+/// bitwise on `res.device`; more lanes shard the stack.
 pub fn run_slices(
     dataset: &Dataset,
     cfg: &RunConfig,
@@ -183,21 +200,24 @@ pub fn run_slices(
     // built — e.g. the XLA engine without loaded artifacts.
     let probe = mrf::make_engine(cfg.engine, res)?;
     if cfg.sched.lanes <= 1 || dataset.input.depth <= 1 {
-        return run_serial(dataset, cfg, &res.backend, probe);
+        return run_serial(dataset, cfg, &res.device, probe);
     }
     let name = probe.name();
     drop(probe);
     let kind = cfg.engine;
     let runtime = res.runtime.clone();
     let bp = res.bp;
-    run_sharded_with(dataset, cfg, name, move |_lane, bk: &Backend| {
-        let pool = match bk {
-            Backend::Threaded { pool, .. } => Arc::clone(pool),
-            Backend::Serial => Pool::serial(),
-        };
+    let threads = cfg.threads;
+    // Hand the coordinator's own device down so a pool-free device
+    // (notably accel with loaded artifacts) is reused instead of
+    // reconstructed per run.
+    let device = Some(Arc::clone(&res.device));
+    run_sharded_with_device(dataset, cfg, name, device, move |_lane, dev| {
+        let pool =
+            dev.pool().unwrap_or_else(|| fallback_pool(kind, threads));
         let lane_res = EngineResources {
             pool,
-            backend: bk.clone(),
+            device: Arc::clone(dev),
             runtime: runtime.clone(),
             bp,
         };
@@ -207,7 +227,7 @@ pub fn run_slices(
 }
 
 /// Sharded run with a caller-supplied engine factory (called once per
-/// optimize lane, on that lane's thread, with the lane's backend) —
+/// optimize lane, on that lane's thread, with the lane's device) —
 /// the hook benches use to drive non-default engine modes (e.g.
 /// `PairMode::Planned`) through the scheduler. Falls back to the
 /// serial loop when `cfg.sched.lanes <= 1`.
@@ -218,16 +238,33 @@ pub fn run_sharded_with<F>(
     factory: F,
 ) -> Result<RunReport>
 where
-    F: Fn(usize, &Backend) -> Box<dyn Engine> + Sync,
+    F: Fn(usize, &Arc<dyn Device>) -> Box<dyn Engine> + Sync,
+{
+    run_sharded_with_device(dataset, cfg, engine_name, None, factory)
+}
+
+/// [`run_sharded_with`] with an optional already-constructed device
+/// to reuse (the coordinator's): pool-free devices are shared across
+/// workers, so passing one here avoids reconstructing it — for the
+/// accel seat that means not re-loading the AOT artifact bundle.
+fn run_sharded_with_device<F>(
+    dataset: &Dataset,
+    cfg: &RunConfig,
+    engine_name: &'static str,
+    device: Option<Arc<dyn Device>>,
+    factory: F,
+) -> Result<RunReport>
+where
+    F: Fn(usize, &Arc<dyn Device>) -> Box<dyn Engine> + Sync,
 {
     let depth = dataset.input.depth;
     let lanes = cfg.sched.lanes.min(depth.max(1));
     if lanes <= 1 {
-        let bk = worker_backend(cfg);
-        let engine = factory(0, &bk);
-        return run_serial(dataset, cfg, &bk, engine);
+        let dev = device.unwrap_or_else(|| worker_device(cfg));
+        let engine = factory(0, &dev);
+        return run_serial(dataset, cfg, &dev, engine);
     }
-    run_sharded_inner(dataset, cfg, lanes, engine_name, &factory)
+    run_sharded_inner(dataset, cfg, lanes, engine_name, device, &factory)
 }
 
 /// Initialized slice waiting for an optimize lane.
@@ -253,11 +290,11 @@ impl Drop for PoisonOnPanic<'_> {
 }
 
 /// The pre-scheduler per-slice loop, bit for bit: init, optimize,
-/// paint, in ascending slice order on one backend.
+/// paint, in ascending slice order on one device.
 fn run_serial(
     dataset: &Dataset,
     cfg: &RunConfig,
-    bk: &Backend,
+    dev: &Arc<dyn Device>,
     engine: Box<dyn Engine>,
 ) -> Result<RunReport> {
     let input = &dataset.input;
@@ -268,7 +305,7 @@ fn run_serial(
 
     for z in 0..input.depth {
         let t_init = Timer::start();
-        let (seg, model) = build_slice_model(bk, cfg, input, z);
+        let (seg, model) = build_slice_model(&**dev, cfg, input, z);
         let init_secs = t_init.elapsed_secs();
         init_total += init_secs;
         if timing::enabled() {
@@ -307,6 +344,8 @@ fn run_serial(
 
     Ok(finalize(
         engine.name(),
+        dev.name().to_string(),
+        dev.caps(),
         output,
         reports,
         dataset,
@@ -320,10 +359,11 @@ fn run_sharded_inner<F>(
     cfg: &RunConfig,
     lanes: usize,
     engine_name: &'static str,
+    preloaded: Option<Arc<dyn Device>>,
     factory: &F,
 ) -> Result<RunReport>
 where
-    F: Fn(usize, &Backend) -> Box<dyn Engine> + Sync,
+    F: Fn(usize, &Arc<dyn Device>) -> Box<dyn Engine> + Sync,
 {
     let input = &dataset.input;
     let depth = input.depth;
@@ -331,7 +371,7 @@ where
     let t_total = Timer::start();
 
     if cfg.threads > 1 {
-        // The bitwise contract pins every worker's backend to
+        // The bitwise contract pins every worker's device to
         // cfg.threads (chunk bounds depend on it), so sharding cannot
         // divide the thread budget — it multiplies it.
         crate::log_info!(
@@ -342,6 +382,33 @@ where
             2 * lanes * cfg.threads
         );
     }
+
+    // Pool-free (stateless, serial-execution) devices are built ONCE
+    // and shared by every worker, so an accel run loads its AOT
+    // artifact bundle once per run instead of once per worker; that
+    // one device also stamps the report's identity. Pool devices stay
+    // per-worker (sharing one pool would serialize the lanes on its
+    // submit lock), and their report identity comes from the cheap
+    // descriptor — no throwaway pool is ever spawned.
+    let shared_device: Option<Arc<dyn Device>> =
+        if device_is_pool_free(cfg.device, cfg.threads) {
+            Some(match preloaded {
+                // Reuse the caller's device only if it is indeed
+                // pool-free (sharing a pool would serialize lanes).
+                Some(d) if d.pool().is_none() => d,
+                _ => worker_device(cfg),
+            })
+        } else {
+            None
+        };
+    let (device_name, device_caps) = match &shared_device {
+        Some(d) => (d.name().to_string(), d.caps()),
+        None => {
+            let (n, c) = device_descriptor(cfg.device, cfg.threads,
+                                           &cfg.artifacts_dir);
+            (n.to_string(), c)
+        }
+    };
 
     let shard = SliceShard::new(depth, lanes);
     let queue: BoundedQueue<InitJob> =
@@ -357,14 +424,17 @@ where
         let mut opt_handles = Vec::with_capacity(lanes);
         for lane in 0..lanes {
             let (shard, queue, producers) = (&shard, &queue, &producers);
+            let shared_device = &shared_device;
             init_handles.push(s.spawn(move || {
                 let _poison = PoisonOnPanic(queue);
-                let bk = worker_backend(cfg);
+                let dev = shared_device
+                    .clone()
+                    .unwrap_or_else(|| worker_device(cfg));
                 let mut busy = 0.0f64;
                 while let Some(z) = shard.claim(lane) {
                     let t = Timer::start();
                     let (seg, model) =
-                        build_slice_model(&bk, cfg, input, z);
+                        build_slice_model(&*dev, cfg, input, z);
                     let secs = t.elapsed_secs();
                     busy += secs;
                     if timing::enabled() {
@@ -389,10 +459,13 @@ where
         }
         for lane in 0..lanes {
             let (queue, reports, out_win) = (&queue, &reports, &out_win);
+            let shared_device = &shared_device;
             opt_handles.push(s.spawn(move || {
                 let _poison = PoisonOnPanic(queue);
-                let bk = worker_backend(cfg);
-                let engine = factory(lane, &bk);
+                let dev = shared_device
+                    .clone()
+                    .unwrap_or_else(|| worker_device(cfg));
+                let engine = factory(lane, &dev);
                 let mut busy = 0.0f64;
                 // Paint scratch, reused across the lane's slices
                 // (paint_pixels overwrites every pixel).
@@ -460,6 +533,8 @@ where
 
     Ok(finalize(
         engine_name,
+        device_name,
+        device_caps,
         output,
         slices,
         dataset,
@@ -474,8 +549,11 @@ where
     ))
 }
 
+#[allow(clippy::too_many_arguments)]
 fn finalize(
     engine: &'static str,
+    device: String,
+    device_caps: crate::dpp::DeviceCaps,
     output: Volume,
     slices: Vec<SliceReport>,
     dataset: &Dataset,
@@ -489,6 +567,8 @@ fn finalize(
     let porosity = crate::metrics::porosity(&output);
     RunReport {
         engine,
+        device,
+        device_caps,
         output,
         slices,
         confusion,

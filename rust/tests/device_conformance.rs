@@ -1,0 +1,381 @@
+//! Device conformance suite (ISSUE 4 acceptance; DESIGN.md §9): the
+//! contract any [`Device`] implementation — including any future real
+//! GPU backend — must pass before it may sit behind the primitive API.
+//!
+//! For EVERY primitive, every registered device must produce
+//! **bitwise-identical** results to [`SerialDevice`] across empty /
+//! single-element / odd-length / large inputs and thread counts
+//! {1, 2, 4} (plus an odd grain). Exact ops (integers, min/max) are
+//! checked on all primitives; floating-point outputs are compared by
+//! bit pattern wherever the contract demands bitwise equality — maps,
+//! gathers, scatters, sorts, and every *segmented* reduction (a
+//! [`SegmentPlan`] reduces each segment serially in cached stable
+//! order, so floats must match exactly). The one sanctioned exemption
+//! is the association order of global float `reduce`/`scan`, which is
+//! chunk-ordered per device configuration — those are exercised here
+//! with exact integer ops only.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use dpp_pmrf::dpp::{self, Backend, Device, DeviceKind, IntoDevice,
+                    OfflineAcceleratorDevice, Pipeline, PoolDevice,
+                    SegmentPlan, SerialDevice, SharedSlice};
+use dpp_pmrf::pool::Pool;
+use dpp_pmrf::util::Pcg32;
+
+/// The device registry under test: the serial oracle's peers. Every
+/// entry must match [`SerialDevice`] bitwise on the whole battery.
+fn devices() -> Vec<(String, Arc<dyn Device>)> {
+    let mut out: Vec<(String, Arc<dyn Device>)> = Vec::new();
+    for threads in [1, 2, 4] {
+        out.push((
+            format!("pool-t{threads}-g64"),
+            Arc::new(PoolDevice::new(threads, 64)),
+        ));
+    }
+    // Odd grain: chunk boundaries land mid-everything.
+    out.push(("pool-t4-g1021".into(), Arc::new(PoolDevice::new(4, 1021))));
+    // The legacy enum bridged through IntoDevice must behave as the
+    // pool device it wraps.
+    out.push((
+        "legacy-backend-t2-g64".into(),
+        Backend::threaded_with_grain(Pool::new(2), 64).into_device(),
+    ));
+    // The accelerator seat without artifacts: host-serial execution.
+    out.push((
+        "accel-no-artifacts".into(),
+        Arc::new(OfflineAcceleratorDevice::load(Path::new(
+            "no/such/artifacts",
+        ))),
+    ));
+    out
+}
+
+/// Input shapes the contract names: empty, single, odd-length, large.
+const SIZES: [usize; 5] = [0, 1, 7, 1_000, 10_000];
+
+fn rand_u32(n: usize, seed: u64, modulo: u32) -> Vec<u32> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n).map(|_| (rng.next_u64() as u32) % modulo.max(1)).collect()
+}
+
+fn rand_f32(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n).map(|_| (rng.next_u64() % 10_000) as f32 * 0.37 - 1850.0)
+        .collect()
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn registry_names_and_caps_are_sane() {
+    let serial = SerialDevice;
+    assert_eq!(serial.name(), "serial");
+    assert!(!serial.caps().threaded);
+    for (tag, dev) in devices() {
+        assert!(!dev.name().is_empty(), "{tag}");
+        assert!(dev.threads() >= 1, "{tag}");
+        if dev.caps().threaded {
+            assert!(dev.pool().is_some(), "{tag}: threaded needs a pool");
+        }
+        // No registered device claims offload in the offline build.
+        assert!(!dev.caps().offload, "{tag}");
+    }
+    assert_eq!(DeviceKind::all().len(), 4);
+}
+
+#[test]
+fn map_family_matches_serial_bitwise() {
+    for n in SIZES {
+        let xs = rand_u32(n, 0xA0 + n as u64, u32::MAX);
+        let fs = rand_f32(n, 0xB0 + n as u64);
+        let want_map = dpp::map(&SerialDevice, &xs, |x| x.wrapping_mul(3));
+        let want_mapf = dpp::map(&SerialDevice, &fs, |x| x * 1.5 + 0.25);
+        let want_idx =
+            dpp::map_indexed(&SerialDevice, n, |i| (i as u32) ^ 0x5a5a);
+        let want_zip =
+            dpp::zip_map(&SerialDevice, &xs, &fs, |a, b| *a as f32 + b);
+        let want_iota = dpp::iota(&SerialDevice, n);
+        let mut want_inplace = xs.clone();
+        dpp::map_in_place(&SerialDevice, &mut want_inplace, |i, x| {
+            x.wrapping_add(i as u32)
+        });
+        for (tag, dev) in devices() {
+            let dev = &*dev;
+            assert_eq!(
+                dpp::map(dev, &xs, |x| x.wrapping_mul(3)),
+                want_map,
+                "{tag} map n={n}"
+            );
+            assert_eq!(
+                bits(&dpp::map(dev, &fs, |x| x * 1.5 + 0.25)),
+                bits(&want_mapf),
+                "{tag} map(f32) n={n}"
+            );
+            assert_eq!(
+                dpp::map_indexed(dev, n, |i| (i as u32) ^ 0x5a5a),
+                want_idx,
+                "{tag} map_indexed n={n}"
+            );
+            assert_eq!(
+                bits(&dpp::zip_map(dev, &xs, &fs, |a, b| *a as f32 + b)),
+                bits(&want_zip),
+                "{tag} zip_map n={n}"
+            );
+            assert_eq!(dpp::iota(dev, n), want_iota, "{tag} iota n={n}");
+            let mut got = xs.clone();
+            dpp::map_in_place(dev, &mut got, |i, x| {
+                x.wrapping_add(i as u32)
+            });
+            assert_eq!(got, want_inplace, "{tag} map_in_place n={n}");
+        }
+    }
+}
+
+#[test]
+fn exact_reduce_and_scan_match_serial_bitwise() {
+    for n in SIZES {
+        let xs = rand_u32(n, 0xC0 + n as u64, 1 << 20);
+        let xs64: Vec<u64> = xs.iter().map(|&x| x as u64).collect();
+        let want_sum =
+            dpp::reduce(&SerialDevice, &xs64, 0u64, |a, b| a + b);
+        let want_min =
+            dpp::reduce(&SerialDevice, &xs64, u64::MAX, |a, b| a.min(b));
+        let (want_ex, want_total) =
+            dpp::scan_exclusive(&SerialDevice, &xs, 0u32, |a, b| {
+                a.wrapping_add(b)
+            });
+        let want_inc =
+            dpp::scan_inclusive(&SerialDevice, &xs, 0u32, |a, b| {
+                a.wrapping_add(b)
+            });
+        for (tag, dev) in devices() {
+            let dev = &*dev;
+            assert_eq!(
+                dpp::reduce(dev, &xs64, 0u64, |a, b| a + b),
+                want_sum,
+                "{tag} reduce<add> n={n}"
+            );
+            assert_eq!(
+                dpp::reduce(dev, &xs64, u64::MAX, |a, b| a.min(b)),
+                want_min,
+                "{tag} reduce<min> n={n}"
+            );
+            let (ex, total) = dpp::scan_exclusive(dev, &xs, 0u32, |a, b| {
+                a.wrapping_add(b)
+            });
+            assert_eq!(ex, want_ex, "{tag} scan_exclusive n={n}");
+            assert_eq!(total, want_total, "{tag} scan total n={n}");
+            assert_eq!(
+                dpp::scan_inclusive(dev, &xs, 0u32, |a, b| {
+                    a.wrapping_add(b)
+                }),
+                want_inc,
+                "{tag} scan_inclusive n={n}"
+            );
+        }
+    }
+}
+
+#[test]
+fn gather_scatter_match_serial_bitwise() {
+    for n in SIZES {
+        let src = rand_f32(n, 0xD0 + n as u64);
+        // A permutation gather/scatter plus a with-repeats gather.
+        let perm: Vec<u32> = (0..n as u32).rev().collect();
+        let repeats: Vec<u32> = if n == 0 {
+            Vec::new()
+        } else {
+            rand_u32(2 * n + 1, 0xD7 + n as u64, n as u32)
+        };
+        let want_g = dpp::gather(&SerialDevice, &src, &perm);
+        let want_r = dpp::gather(&SerialDevice, &src, &repeats);
+        let mut want_s = vec![0.0f32; n];
+        dpp::scatter(&SerialDevice, &src, &perm, &mut want_s);
+        for (tag, dev) in devices() {
+            let dev = &*dev;
+            assert_eq!(
+                bits(&dpp::gather(dev, &src, &perm)),
+                bits(&want_g),
+                "{tag} gather(perm) n={n}"
+            );
+            assert_eq!(
+                bits(&dpp::gather(dev, &src, &repeats)),
+                bits(&want_r),
+                "{tag} gather(repeats) n={n}"
+            );
+            let mut out = vec![0.0f32; n];
+            dpp::scatter(dev, &src, &perm, &mut out);
+            assert_eq!(bits(&out), bits(&want_s), "{tag} scatter n={n}");
+        }
+    }
+}
+
+#[test]
+fn compaction_family_matches_serial() {
+    for n in SIZES {
+        let xs = rand_u32(n, 0xE0 + n as u64, 97);
+        let keep = |i: usize| xs[i] % 3 == 0;
+        let want_copy = dpp::copy_if_indexed(&SerialDevice, &xs, keep);
+        let want_sel = dpp::select_indices(&SerialDevice, n, keep);
+        let want_uniq = dpp::unique(&SerialDevice, &xs);
+        for (tag, dev) in devices() {
+            let dev = &*dev;
+            assert_eq!(
+                dpp::copy_if_indexed(dev, &xs, keep),
+                want_copy,
+                "{tag} copy_if n={n}"
+            );
+            assert_eq!(
+                dpp::select_indices(dev, n, keep),
+                want_sel,
+                "{tag} select_indices n={n}"
+            );
+            assert_eq!(
+                dpp::unique(dev, &xs),
+                want_uniq,
+                "{tag} unique n={n}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sort_by_key_matches_serial_at_every_key_width() {
+    for n in SIZES {
+        for key_bits in [4u32, 16, 40, 64] {
+            let mut rng = Pcg32::seeded(0xF0 + n as u64 + key_bits as u64);
+            let mask = if key_bits >= 64 {
+                u64::MAX
+            } else {
+                (1u64 << key_bits) - 1
+            };
+            let keys: Vec<u64> =
+                (0..n).map(|_| rng.next_u64() & mask).collect();
+            let vals: Vec<u32> = (0..n as u32).collect();
+            let (mut wk, mut wv) = (keys.clone(), vals.clone());
+            dpp::sort_by_key(&SerialDevice, &mut wk, &mut wv);
+            for (tag, dev) in devices() {
+                let dev = &*dev;
+                let (mut gk, mut gv) = (keys.clone(), vals.clone());
+                dpp::sort_by_key(dev, &mut gk, &mut gv);
+                assert_eq!(gk, wk, "{tag} keys n={n} bits={key_bits}");
+                assert_eq!(gv, wv, "{tag} vals n={n} bits={key_bits}");
+            }
+        }
+    }
+}
+
+#[test]
+fn reduce_by_key_matches_serial_bitwise_floats() {
+    for n in SIZES {
+        // Grouped keys (the ReduceByKey contract) with float payloads:
+        // each segment reduces serially, so floats must match bitwise.
+        let mut keys = rand_u32(n, 0x1F0 + n as u64, 37);
+        keys.sort_unstable();
+        let vals = rand_f32(n, 0x1F7 + n as u64);
+        let (wk, wv) = dpp::reduce_by_key(&SerialDevice, &keys, &vals,
+                                          0.0f32, |a, b| a + b);
+        for (tag, dev) in devices() {
+            let dev = &*dev;
+            let (gk, gv) =
+                dpp::reduce_by_key(dev, &keys, &vals, 0.0f32, |a, b| a + b);
+            assert_eq!(gk, wk, "{tag} rbk keys n={n}");
+            assert_eq!(bits(&gv), bits(&wv), "{tag} rbk vals n={n}");
+        }
+    }
+}
+
+#[test]
+fn segment_plans_identical_and_reduce_bitwise() {
+    for n in SIZES {
+        let keys64: Vec<u64> = rand_u32(n, 0x2F0 + n as u64, 53)
+            .into_iter()
+            .map(u64::from)
+            .collect();
+        let keys32: Vec<u32> =
+            keys64.iter().map(|&k| k as u32).collect();
+        let vals = rand_f32(n, 0x2F7 + n as u64);
+        let want_plan = SegmentPlan::build(&SerialDevice, &keys64);
+        let want_sums = want_plan.reduce_segments(&SerialDevice, &vals,
+                                                  0.0f32, |a, b| a + b);
+        for (tag, dev) in devices() {
+            let dev = &*dev;
+            // The plan itself — permutation, segment keys, offsets —
+            // must be identical on every device...
+            let plan = SegmentPlan::build(dev, &keys64);
+            assert_eq!(plan, want_plan, "{tag} plan n={n}");
+            assert_eq!(
+                SegmentPlan::build_u32(dev, &keys32),
+                want_plan,
+                "{tag} plan(u32) n={n}"
+            );
+            // ...and every segmented float reduction bitwise so.
+            let sums =
+                plan.reduce_segments(dev, &vals, 0.0f32, |a, b| a + b);
+            assert_eq!(bits(&sums), bits(&want_sums),
+                       "{tag} seg-reduce n={n}");
+        }
+    }
+    // CSR-offset plans (the empty-segment constructor) reduce the
+    // same everywhere too.
+    let plan = SegmentPlan::from_csr_offsets(&[0, 0, 2, 2, 5, 5]);
+    let vals = [1.5f32, -2.25, 4.0, 0.5, 8.0];
+    let want = plan.reduce_segments(&SerialDevice, &vals, 0.0f32,
+                                    |a, b| a + b);
+    for (tag, dev) in devices() {
+        let got = plan.reduce_segments(&*dev, &vals, 0.0f32, |a, b| a + b);
+        assert_eq!(bits(&got), bits(&want), "{tag} csr seg-reduce");
+    }
+}
+
+#[test]
+fn pipelines_match_serial_bitwise() {
+    for n in SIZES {
+        let xs = rand_f32(n, 0x3F0 + n as u64);
+        let run_on = |dev: &dyn Device| -> (Vec<u32>, u64) {
+            let mut doubled = vec![0.0f32; n];
+            let mut flags = vec![0u8; n];
+            let mut total = vec![0u64; 1];
+            {
+                let wd = SharedSlice::new(&mut doubled);
+                let wf = SharedSlice::new(&mut flags);
+                let wt = SharedSlice::new(&mut total);
+                let xs_ref = &xs;
+                Pipeline::new()
+                    // Stage 1 (Map): arithmetic on the raw input.
+                    .stage("Map", n, |s, e| {
+                        for i in s..e {
+                            unsafe { wd.write(i, xs_ref[i] * 2.0 + 1.0) };
+                        }
+                    })
+                    // Stage 2 (Map): reads stage 1 through the barrier.
+                    .stage("Map", n, |s, e| {
+                        for i in s..e {
+                            let v = unsafe { wd.read(i) };
+                            unsafe { wf.write(i, u8::from(v > 0.0)) };
+                        }
+                    })
+                    // Stage 3 (Reduce, serial tail): exact fold.
+                    .serial_stage("Reduce", || {
+                        let mut acc = 0u64;
+                        for i in 0..n {
+                            acc += u64::from(unsafe { wf.read(i) });
+                        }
+                        unsafe { wt.write(0, acc) };
+                    })
+                    .run(dev);
+            }
+            (bits(&doubled), total[0])
+        };
+        let (want_bits, want_total) = run_on(&SerialDevice);
+        for (tag, dev) in devices() {
+            let (got_bits, got_total) = run_on(&*dev);
+            assert_eq!(got_bits, want_bits, "{tag} pipeline stage n={n}");
+            assert_eq!(got_total, want_total, "{tag} pipeline total n={n}");
+        }
+    }
+}
