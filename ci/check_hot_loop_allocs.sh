@@ -1,0 +1,55 @@
+#!/usr/bin/env bash
+# Hot-loop allocation allowlist (ISSUE 5, DESIGN.md §10).
+#
+# Modules that opt in with a `deny(hot-loop-alloc)` marker comment
+# must justify every allocation-constructor call with an
+# `alloc-ok: <reason>` comment on the same line (or the line above).
+# This keeps the zero-allocation steady state from rotting: a new
+# `vec![...]` / `Vec::with_capacity` / `.collect()` in a marked module
+# fails CI until its author states why it is not on the steady-state
+# path (once-per-run setup, legacy allocating spelling, ...).
+#
+# Test modules (`#[cfg(test)]` onward) and doc-comment lines are
+# exempt. Runs with no toolchain — plain awk over the sources.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+fail=0
+files=$(grep -rl "deny(hot-loop-alloc)" rust/src --include="*.rs" || true)
+
+if [ -z "$files" ]; then
+    echo "error: no modules carry the deny(hot-loop-alloc) marker" >&2
+    exit 1
+fi
+
+for f in $files; do
+    hits=$(awk '
+        /^#\[cfg\(test\)\]/ { exit }          # test code is exempt
+        /alloc-ok:/ { prev_ok = 2 }           # covers this + next line
+        {
+            line = $0
+            sub(/^[ \t]+/, "", line)
+            is_doc = (line ~ /^\/\//)         # comments and doc lines
+            if (!is_doc && prev_ok == 0 &&
+                (line ~ /vec!/ || line ~ /Vec::with_capacity/ ||
+                 line ~ /Vec::new\(\)/ || line ~ /\.to_vec\(\)/ ||
+                 line ~ /\.collect\(\)/ || line ~ /Box::new/)) {
+                printf "%s:%d: %s\n", FILENAME, FNR, $0
+            }
+            if (prev_ok > 0) { prev_ok -= 1 }
+        }
+    ' "$f")
+    if [ -n "$hits" ]; then
+        echo "unjustified allocation(s) in hot-loop module (add"
+        echo "  an \`// alloc-ok: <reason>\` comment or move them"
+        echo "  off the steady-state path):"
+        echo "$hits"
+        fail=1
+    fi
+done
+
+if [ "$fail" -eq 0 ]; then
+    echo "hot-loop alloc allowlist: OK ($(echo "$files" | wc -l) modules)"
+fi
+exit $fail

@@ -1,0 +1,237 @@
+//! Allocation churn before/after the workspace layer (ISSUE 5): a
+//! counting global allocator measures bytes allocated per EM/MAP
+//! iteration for the legacy allocating primitive paths ("before") and
+//! the workspace `_into`/`_ws` paths ("after"), plus whole-engine
+//! runs for every [`PairMode`].
+//!
+//! Hard assertions (run on [`SerialDevice`], whose primitive calls
+//! have no pool-dispatch allocations):
+//!
+//! * a warmed workspace iteration allocates **zero** bytes;
+//! * a warmed Paper/Fused engine run's allocation volume does not
+//!   depend on the MAP-iteration count — i.e. steady-state MAP
+//!   iterations are allocation-free. (Planned mode re-boxes its
+//!   pipeline stages each iteration — a few hundred bytes, reported
+//!   but not asserted; see DESIGN.md §10.)
+//!
+//! Output: a table on stdout and machine-readable `BENCH_5.json` at
+//! the repo root (the perf-trajectory data point).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use dpp_pmrf::config::{MrfConfig, OversegConfig};
+use dpp_pmrf::dpp::{self, SerialDevice, Workspace};
+use dpp_pmrf::json::Value;
+use dpp_pmrf::mrf::dpp::{DppEngine, PairMode};
+use dpp_pmrf::mrf::{self, Engine, MrfModel};
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+/// (allocation calls, bytes) performed by `f`.
+fn alloc_delta(f: impl FnOnce()) -> (u64, u64) {
+    let c0 = ALLOC_CALLS.load(Ordering::Relaxed);
+    let b0 = ALLOC_BYTES.load(Ordering::Relaxed);
+    f();
+    (
+        ALLOC_CALLS.load(Ordering::Relaxed) - c0,
+        ALLOC_BYTES.load(Ordering::Relaxed) - b0,
+    )
+}
+
+/// One §3.2.2-shaped iteration through the legacy allocating
+/// primitives — the pre-workspace hot loop ("before").
+fn legacy_iteration(n: usize, y: &[f32], idx: &[u32]) {
+    let bk = &SerialDevice;
+    let lbl: Vec<f32> = dpp::map_indexed(bk, n, |i| (i % 2) as f32);
+    let gathered = dpp::gather(bk, y, idx);
+    let e_rep: Vec<f32> = dpp::map_indexed(bk, 2 * n, |i| {
+        gathered[i % n] + lbl[i % n]
+    });
+    let mut keys: Vec<u64> = dpp::map_indexed(bk, 2 * n, |i| (i % n) as u64);
+    let mut vals: Vec<u32> = dpp::iota(bk, 2 * n);
+    dpp::sort_by_key(bk, &mut keys, &mut vals);
+    let (_, win) = dpp::reduce_by_key(bk, &keys, &vals, u32::MAX, |a, b| {
+        if a == u32::MAX { b } else if b == u32::MAX { a } else { a.min(b) }
+    });
+    let emin: Vec<f32> = dpp::map(bk, &win, |&i| e_rep[i as usize]);
+    std::hint::black_box(emin);
+}
+
+/// The same iteration through the workspace paths ("after") — zero
+/// allocations once the pool is warm.
+fn ws_iteration(ws: &Workspace, n: usize, y: &[f32], idx: &[u32]) {
+    let bk = &SerialDevice;
+    let mut lbl = ws.take_spare::<f32>(n);
+    dpp::map_indexed_into(bk, n, |i| (i % 2) as f32, &mut lbl);
+    let mut gathered = ws.take_spare::<f32>(n);
+    dpp::gather_into(bk, y, idx, &mut gathered);
+    let mut e_rep = ws.take_spare::<f32>(2 * n);
+    let g_ref = &gathered;
+    let l_ref = &lbl;
+    dpp::map_indexed_into(bk, 2 * n, |i| g_ref[i % n] + l_ref[i % n],
+                          &mut e_rep);
+    let mut keys = ws.take_spare::<u64>(2 * n);
+    dpp::map_indexed_into(bk, 2 * n, |i| (i % n) as u64, &mut keys);
+    let mut vals = ws.take_spare::<u32>(2 * n);
+    dpp::iota_into(bk, 2 * n, &mut vals);
+    dpp::sort_by_key_ws(bk, ws, &mut keys, &mut vals);
+    let mut win_keys = ws.take_spare::<u64>(n);
+    let mut win = ws.take_spare::<u32>(n);
+    dpp::reduce_by_key_into(
+        bk, ws, &keys[..], &vals[..], u32::MAX,
+        |a, b| {
+            if a == u32::MAX { b } else if b == u32::MAX { a } else { a.min(b) }
+        },
+        &mut win_keys, &mut win,
+    );
+    let mut emin = ws.take_spare::<f32>(n);
+    let e_ref = &e_rep;
+    dpp::map_into(bk, &win[..], |&i| e_ref[i as usize], &mut emin);
+    std::hint::black_box(&emin[..]);
+}
+
+fn small_model(seed: u64) -> MrfModel {
+    let v = dpp_pmrf::image::synth::porous_ground_truth(96, 96, 1, 0.42,
+                                                        seed);
+    let mut input = v.clone();
+    dpp_pmrf::image::noise::additive_gaussian(&mut input, 60.0, seed);
+    let seg = dpp_pmrf::overseg::oversegment(
+        &SerialDevice,
+        &input.slice(0),
+        &OversegConfig { scale: 64.0, min_region: 4 },
+    );
+    mrf::build_model_serial(&seg)
+}
+
+fn mode_name(mode: PairMode) -> &'static str {
+    match mode {
+        PairMode::Paper => "paper",
+        PairMode::Planned => "planned",
+        PairMode::Fused => "fused",
+    }
+}
+
+fn main() {
+    let mut rows: Vec<Value> = Vec::new();
+
+    // ---- primitive-level before/after ----
+    let n = 50_000usize;
+    let y: Vec<f32> = (0..n).map(|i| (i as f32) * 0.01 - 17.0).collect();
+    let idx: Vec<u32> = (0..n as u32).rev().collect();
+
+    let (legacy_calls, legacy_bytes) =
+        alloc_delta(|| legacy_iteration(n, &y, &idx));
+
+    let ws = Workspace::new();
+    ws_iteration(&ws, n, &y, &idx); // warm-up pass (pool misses)
+    ws_iteration(&ws, n, &y, &idx); // growth-convergence pass
+    let (ws_calls, ws_bytes) =
+        alloc_delta(|| ws_iteration(&ws, n, &y, &idx));
+    assert_eq!(
+        (ws_calls, ws_bytes),
+        (0, 0),
+        "steady-state workspace iteration must not allocate"
+    );
+    println!(
+        "primitive iteration (n={n}): legacy {legacy_bytes} B in \
+         {legacy_calls} allocs -> workspace {ws_bytes} B in {ws_calls} \
+         allocs (steady state)"
+    );
+    rows.push(Value::object(vec![
+        ("level", Value::str("primitives")),
+        ("n", n.into()),
+        ("legacy_bytes_per_iter", (legacy_bytes as usize).into()),
+        ("legacy_allocs_per_iter", (legacy_calls as usize).into()),
+        ("workspace_bytes_per_iter", (ws_bytes as usize).into()),
+        ("workspace_allocs_per_iter", (ws_calls as usize).into()),
+    ]));
+
+    // ---- engine-level: marginal bytes per extra MAP iteration ----
+    let model = small_model(5);
+    let cfg_short = MrfConfig { fixed_iters: true, em_iters: 2,
+                                map_iters: 2, ..Default::default() };
+    let cfg_long = MrfConfig { fixed_iters: true, em_iters: 2,
+                               map_iters: 8, ..Default::default() };
+
+    for mode in [PairMode::Paper, PairMode::Planned, PairMode::Fused] {
+        let engine = DppEngine::with_mode(SerialDevice, mode);
+        let (_, cold_bytes) =
+            alloc_delta(|| { engine.run(&model, &cfg_long); });
+        // Converge the pool fully before the warm measurements.
+        engine.run(&model, &cfg_long);
+        let (_, warm_short) =
+            alloc_delta(|| { engine.run(&model, &cfg_short); });
+        let (_, warm_long) =
+            alloc_delta(|| { engine.run(&model, &cfg_long); });
+        let extra_iters = (cfg_long.map_iters - cfg_short.map_iters)
+            * cfg_long.em_iters;
+        let per_iter = warm_long.saturating_sub(warm_short) as f64
+            / extra_iters as f64;
+        if matches!(mode, PairMode::Paper | PairMode::Fused) {
+            assert_eq!(
+                warm_long, warm_short,
+                "{:?}: steady-state MAP iterations must not allocate",
+                mode
+            );
+        }
+        println!(
+            "engine {:<8} cold run {cold_bytes:>12} B | warm runs: \
+             {warm_short} B ({}x{} iters) vs {warm_long} B ({}x{} \
+             iters) -> {per_iter:.1} B per extra MAP iteration",
+            mode_name(mode),
+            cfg_short.em_iters, cfg_short.map_iters,
+            cfg_long.em_iters, cfg_long.map_iters,
+        );
+        let stats = engine.workspace_stats();
+        rows.push(Value::object(vec![
+            ("level", Value::str("engine")),
+            ("mode", Value::str(mode_name(mode))),
+            ("cold_run_bytes", (cold_bytes as usize).into()),
+            ("warm_run_bytes_short", (warm_short as usize).into()),
+            ("warm_run_bytes_long", (warm_long as usize).into()),
+            ("bytes_per_extra_map_iter", per_iter.into()),
+            ("workspace_hit_rate", stats.hit_rate().into()),
+            ("workspace_high_water_bytes",
+             stats.high_water_bytes.into()),
+        ]));
+    }
+
+    let doc = Value::object(vec![
+        ("bench", Value::str("alloc_churn")),
+        ("issue", 5usize.into()),
+        ("rows", Value::Array(rows)),
+    ]);
+    std::fs::write("BENCH_5.json", doc.to_pretty())
+        .expect("write BENCH_5.json");
+    println!("wrote BENCH_5.json");
+}

@@ -13,7 +13,8 @@
 use std::sync::Arc;
 
 use crate::config::MrfConfig;
-use crate::dpp::{Device, DeviceExt, IntoDevice};
+use crate::dpp::{Device, DeviceExt, IntoDevice, Workspace,
+                 WorkspaceStats};
 use crate::mrf::{self, params, ConvergenceWindow, Engine, EmResult,
                  MrfModel};
 
@@ -24,18 +25,38 @@ use super::{BpConfig, BpSchedule};
 pub struct BpEngine {
     device: Arc<dyn Device>,
     pub bp: BpConfig,
+    /// Scratch pool for per-EM-iteration tensors (unaries, scoring
+    /// buffers); one per engine, so each scheduler lane's BP engine
+    /// amortizes buffers across its slices (DESIGN.md §10).
+    ws: Workspace,
 }
 
 impl BpEngine {
     /// Engine on any device — accepts a concrete device, an
     /// `Arc<dyn Device>`, or the deprecated `Backend` spelling.
     pub fn new(device: impl IntoDevice, bp: BpConfig) -> Self {
-        BpEngine { device: device.into_device(), bp }
+        BpEngine { device: device.into_device(), bp,
+                   ws: Workspace::new() }
     }
 
     /// The device every sweep of this engine executes on.
     pub fn device(&self) -> &Arc<dyn Device> {
         &self.device
+    }
+
+    /// Counters of the engine-held scratch pool (see
+    /// [`crate::dpp::Workspace::stats`]).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::bp::{BpConfig, BpEngine};
+    /// use dpp_pmrf::dpp::SerialDevice;
+    /// let engine = BpEngine::new(SerialDevice, BpConfig::default());
+    /// assert_eq!(engine.workspace_stats().misses, 0);
+    /// ```
+    pub fn workspace_stats(&self) -> WorkspaceStats {
+        self.ws.stats()
     }
 }
 
@@ -63,11 +84,14 @@ impl Engine for BpEngine {
         let mut em_window = ConvergenceWindow::new(cfg.window, cfg.threshold);
         let mut total_sweeps = 0usize;
         let mut em_iters = 0usize;
+        // One unary buffer for the whole run: refreshed in place per
+        // EM iteration (allocation-free after the first).
+        let mut unary = self.ws.take_spare::<f32>(2 * nv);
 
         for _em in 0..cfg.em_iters {
             em_iters += 1;
 
-            let unary = sweep::unaries(bk, model, &prm);
+            sweep::unaries_into(bk, model, &prm, &mut unary);
             let bp_run = sweep::run(
                 bk, model, &g, &unary, &mut st, &self.bp, cfg.fixed_iters,
             );
@@ -76,9 +100,11 @@ impl Engine for BpEngine {
 
             // Score with the shared hood energy (histories directly
             // comparable to the MAP engines') and collect the M-step
-            // statistics, both in one parallel pass.
-            let (total, stats) =
-                score_and_stats(bk, model, &labels, &prm, &y_elem);
+            // statistics, both in one parallel pass over workspace
+            // scratch.
+            let (total, stats) = score_and_stats(
+                bk, &self.ws, model, &labels, &prm, &y_elem,
+            );
             prm = params::update(&stats, cfg.beta as f32);
 
             em_window.push(total);
@@ -86,6 +112,7 @@ impl Engine for BpEngine {
                 break;
             }
         }
+        self.ws.publish_timing();
 
         EmResult {
             labels,
@@ -106,6 +133,7 @@ impl Engine for BpEngine {
 /// cross-hood merges run serially in hood order.
 fn score_and_stats(
     bk: &dyn Device,
+    ws: &Workspace,
     model: &MrfModel,
     labels: &[u8],
     prm: &mrf::Params,
@@ -120,11 +148,11 @@ fn score_and_stats(
     // Hood-unit grain scaled from the element grain (as in mrf::dpp).
     let hood_grain = (bk.grain() / (n / nh.max(1)).max(1)).max(1);
 
-    let mut hood_energy = vec![0.0f64; nh];
-    let mut hood_stats = vec![params::Stats::default(); nh];
+    let mut hood_energy = ws.take::<f64>(nh);
+    let mut hood_stats = ws.take::<params::Stats>(nh);
     {
-        let we = SharedSlice::new(&mut hood_energy);
-        let ws = SharedSlice::new(&mut hood_stats);
+        let we = SharedSlice::new(&mut hood_energy[..]);
+        let wst = SharedSlice::new(&mut hood_stats[..]);
         bk.for_chunks_with(nh, hood_grain, |hs, he| {
             for hd in hs..he {
                 let (s, e) =
@@ -138,14 +166,14 @@ fn score_and_stats(
                 }
                 unsafe {
                     we.write(hd, sum);
-                    ws.write(hd, st);
+                    wst.write(hd, st);
                 }
             }
         });
     }
     let total = hood_energy.iter().sum();
     let mut stats = params::Stats::default();
-    for st in &hood_stats {
+    for st in hood_stats.iter() {
         stats.merge(st);
     }
     (total, stats)
@@ -223,12 +251,13 @@ mod tests {
             (0..model.num_vertices()).map(|v| (v % 2) as u8).collect();
         let y_elem = model.y_elems();
         let (_, want) = mrf::config_energy(&model, &labels, &prm);
+        let ws = Workspace::new();
         for bk in [
             Backend::Serial,
             Backend::threaded_with_grain(Pool::new(4), 64),
         ] {
             let (total, stats) =
-                score_and_stats(&bk, &model, &labels, &prm, &y_elem);
+                score_and_stats(&bk, &ws, &model, &labels, &prm, &y_elem);
             assert_eq!(total, want, "bitwise-equal energy ({bk:?})");
             let n: f64 = stats.acc[0][0] + stats.acc[1][0];
             assert_eq!(n, model.hoods.num_elements() as f64);

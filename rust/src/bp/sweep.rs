@@ -13,6 +13,15 @@
 //! only cross-chunk reduction is `max` (exact, association-free). The
 //! serial oracle in [`super::serial`] reproduces every pass bitwise.
 
+//! Allocation discipline — deny(hot-loop-alloc): a steady-state sweep
+//! allocates nothing. Every per-sweep tensor (candidates, residuals,
+//! chunk partials, the fold scalars) lives in [`BpState`], allocated
+//! once per run and resized within capacity thereafter; remaining
+//! allocations are annotated `alloc-ok` and checked by
+//! `ci/check_hot_loop_allocs.sh`. (The `Pipeline` stage boxing is the
+//! one known per-sweep residue — a few hundred bytes, see DESIGN.md
+//! §10.)
+
 use crate::dpp::core::SharedSlice;
 use crate::dpp::{Device, DeviceExt, Pipeline};
 use crate::mrf::{energy, MrfModel, Params};
@@ -20,24 +29,37 @@ use crate::mrf::{energy, MrfModel, Params};
 use super::messages::BpGraph;
 use super::{BpConfig, BpSchedule};
 
-/// Message buffers, reused across sweeps and EM iterations.
-/// `msg` holds two f32 per directed edge: `[2e]` = label 0, `[2e+1]` =
-/// label 1, normalized so the smaller entry is 0.
+/// Message buffers plus per-sweep scratch, reused across sweeps and
+/// EM iterations. `msg` holds two f32 per directed edge: `[2e]` =
+/// label 0, `[2e+1]` = label 1, normalized so the smaller entry is 0.
+/// The chunk-partial and scalar buffers the sweep's reduction stages
+/// write are part of the state too, so a steady-state sweep performs
+/// zero heap allocations (DESIGN.md §10).
 #[derive(Debug, Clone)]
 pub struct BpState {
     pub msg: Vec<f32>,
     cand: Vec<f32>,
     resid: Vec<f32>,
     belief: Vec<f32>,
+    /// Per-chunk residual maxima of stage 2 (one slot per grain-sized
+    /// chunk; sized lazily per sweep, within capacity once warm).
+    partial_max: Vec<f32>,
+    /// Per-chunk commit counts of stage 4.
+    partial_cnt: Vec<usize>,
+    /// `[max_residual, tau]`, published by the serial fold stage.
+    scalars: Vec<f32>,
 }
 
 impl BpState {
     pub fn new(num_edges: usize, num_vertices: usize) -> BpState {
         BpState {
-            msg: vec![0.0; 2 * num_edges],
-            cand: vec![0.0; 2 * num_edges],
-            resid: vec![0.0; num_edges],
-            belief: vec![0.0; 2 * num_vertices],
+            msg: vec![0.0; 2 * num_edges],      // alloc-ok: once per run
+            cand: vec![0.0; 2 * num_edges],     // alloc-ok: once per run
+            resid: vec![0.0; num_edges],        // alloc-ok: once per run
+            belief: vec![0.0; 2 * num_vertices], // alloc-ok: once per run
+            partial_max: Vec::new(), // alloc-ok: empty, sized on use
+            partial_cnt: Vec::new(), // alloc-ok: empty, sized on use
+            scalars: Vec::new(),     // alloc-ok: empty, sized on use
         }
     }
 
@@ -69,13 +91,49 @@ pub struct BpRun {
 /// hood energy's data term (each element instance counts once).
 pub fn unaries(bk: &dyn Device, model: &MrfModel, prm: &Params)
     -> Vec<f32> {
+    let mut out = Vec::new(); // alloc-ok: legacy allocating spelling
+    unaries_into(bk, model, prm, &mut out);
+    out
+}
+
+/// Allocation-free [`unaries`]: writes the `2 * num_vertices` unary
+/// energies into `out` (cleared and resized, within capacity once the
+/// engine's buffer is warm) — the BP engine reuses one buffer across
+/// all EM iterations.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::bp::sweep;
+/// use dpp_pmrf::config::OversegConfig;
+/// use dpp_pmrf::dpp::SerialDevice;
+/// use dpp_pmrf::image::synth;
+/// use dpp_pmrf::mrf::{self, Params};
+/// let v = synth::porous_ground_truth(16, 16, 1, 0.4, 1);
+/// let seg = dpp_pmrf::overseg::oversegment(
+///     &SerialDevice, &v.slice(0),
+///     &OversegConfig { scale: 64.0, min_region: 2 });
+/// let model = mrf::build_model_serial(&seg);
+/// let prm = Params { mu: [60.0, 180.0], sigma: [25.0, 25.0],
+///                    beta: 0.5 };
+/// let mut out = Vec::new();
+/// sweep::unaries_into(&SerialDevice, &model, &prm, &mut out);
+/// assert_eq!(out, sweep::unaries(&SerialDevice, &model, &prm));
+/// ```
+pub fn unaries_into(
+    bk: &dyn Device,
+    model: &MrfModel,
+    prm: &Params,
+    out: &mut Vec<f32>,
+) {
     let pp = energy::Prepared::from_params(prm);
     let h = &model.hoods;
     let y = &model.y;
     let nv = model.num_vertices();
-    let mut out = vec![0.0f32; 2 * nv];
+    out.clear();
+    out.resize(2 * nv, 0.0);
     {
-        let win = SharedSlice::new(&mut out);
+        let win = SharedSlice::new(out);
         bk.for_chunks(nv, |s, e| {
             for v in s..e {
                 // Vertices outside every hood still get their plain
@@ -94,7 +152,6 @@ pub fn unaries(bk: &dyn Device, model: &MrfModel, prm: &Params)
             }
         });
     }
-    out
 }
 
 /// Beliefs stage body over vertices `s..e`: unary + sum of incoming
@@ -152,18 +209,22 @@ pub fn sweep(
     let ne = g.num_edges();
     let grain = edge_grain(bk, ne);
     let slots = ne.div_ceil(grain).max(1);
-    let mut partial_max = vec![0.0f32; slots];
-    let mut partial_cnt = vec![0usize; slots];
-    // [max_residual, tau], published by the serial fold stage.
-    let mut scalars = vec![0.0f32; 2];
+    // Per-sweep scratch lives in the state: resized within capacity
+    // after the first sweep, so the steady state allocates nothing.
+    st.partial_max.clear();
+    st.partial_max.resize(slots, 0.0);
+    st.partial_cnt.clear();
+    st.partial_cnt.resize(slots, 0);
+    st.scalars.clear();
+    st.scalars.resize(2, 0.0);
     {
         let w_msg = SharedSlice::new(&mut st.msg);
         let w_cand = SharedSlice::new(&mut st.cand);
         let w_resid = SharedSlice::new(&mut st.resid);
         let w_belief = SharedSlice::new(&mut st.belief);
-        let w_pmax = SharedSlice::new(&mut partial_max);
-        let w_pcnt = SharedSlice::new(&mut partial_cnt);
-        let w_scal = SharedSlice::new(&mut scalars);
+        let w_pmax = SharedSlice::new(&mut st.partial_max);
+        let w_pcnt = SharedSlice::new(&mut st.partial_cnt);
+        let w_scal = SharedSlice::new(&mut st.scalars);
         let damping = cfg.damping;
         let schedule = cfg.schedule;
         let frontier = cfg.frontier;
@@ -243,8 +304,8 @@ pub fn sweep(
             .run(bk);
     }
     SweepStats {
-        max_residual: scalars[0],
-        updated: partial_cnt.iter().sum(),
+        max_residual: st.scalars[0],
+        updated: st.partial_cnt.iter().sum(),
     }
 }
 

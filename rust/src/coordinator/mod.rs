@@ -254,7 +254,13 @@ impl Coordinator {
     /// Build the per-slice MRF model (initialization phase).
     pub fn build_slice_model(&self, input: &Volume, z: usize)
         -> (Overseg, MrfModel) {
-        crate::sched::build_slice_model(&*self.device, &self.cfg, input, z)
+        crate::sched::build_slice_model(
+            &*self.device,
+            &crate::dpp::Workspace::new(),
+            &self.cfg,
+            input,
+            z,
+        )
     }
 
     /// Run the full pipeline over every slice of the dataset, through

@@ -7,10 +7,19 @@
 //! so this is benign — and it mirrors the paper's situation exactly
 //! (TBB reductions are unordered too).
 
+//! Every output-producing primitive has two spellings: the original
+//! allocating form (`map`, `gather`, `scan_exclusive`, ...) and an
+//! `_into` form writing into a caller-owned `Vec` — typically a
+//! [`crate::dpp::ScratchVec`] drawn from a [`Workspace`] — so hot
+//! loops can run allocation-free (DESIGN.md §10). The allocating
+//! forms are thin wrappers over the `_into` paths: one
+//! implementation, bitwise-identical results.
+
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::device::{Device, DeviceExt};
 use super::timing::timed;
+use super::workspace::{ScratchElem, Workspace};
 
 /// Shared mutable window over a slice for disjoint parallel writes —
 /// the raw building block every primitive (and every
@@ -132,15 +141,41 @@ where
     U: Copy + Default + Send,
     F: Fn(&T) -> U + Sync,
 {
+    let mut out = Vec::new();
+    map_into(bk, input, f, &mut out);
+    out
+}
+
+/// Allocation-free [`map`]: `out` is cleared and resized to
+/// `input.len()` (within capacity once warm), then written exactly as
+/// the allocating form would — bitwise-identical results.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend, Workspace};
+/// let ws = Workspace::new();
+/// let mut out = ws.take_spare::<u32>(3);
+/// dpp::map_into(&Backend::Serial, &[1u32, 2, 3], |x| x * 10,
+///               &mut out);
+/// assert_eq!(&out[..], &[10, 20, 30]);
+/// ```
+pub fn map_into<D, T, U, F>(bk: &D, input: &[T], f: F, out: &mut Vec<U>)
+where
+    D: Device + ?Sized,
+    T: Sync,
+    U: Copy + Default + Send,
+    F: Fn(&T) -> U + Sync,
+{
     timed("Map", || {
-        let mut out = vec![U::default(); input.len()];
-        let win = SharedSlice::new(&mut out);
+        out.clear();
+        out.resize(input.len(), U::default());
+        let win = SharedSlice::new(out);
         bk.for_chunks(input.len(), |s, e| {
             for i in s..e {
                 unsafe { win.write(i, f(&input[i])) };
             }
         });
-        out
     })
 }
 
@@ -159,15 +194,38 @@ where
     U: Copy + Default + Send,
     F: Fn(usize) -> U + Sync,
 {
+    let mut out = Vec::new();
+    map_indexed_into(bk, n, f, &mut out);
+    out
+}
+
+/// Allocation-free [`map_indexed`] (see [`map_into`] for the
+/// `out`-buffer contract).
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend};
+/// let mut out = Vec::new();
+/// dpp::map_indexed_into(&Backend::Serial, 4, |i| i as u32 * 2,
+///                       &mut out);
+/// assert_eq!(out, vec![0, 2, 4, 6]);
+/// ```
+pub fn map_indexed_into<D, U, F>(bk: &D, n: usize, f: F, out: &mut Vec<U>)
+where
+    D: Device + ?Sized,
+    U: Copy + Default + Send,
+    F: Fn(usize) -> U + Sync,
+{
     timed("Map", || {
-        let mut out = vec![U::default(); n];
-        let win = SharedSlice::new(&mut out);
+        out.clear();
+        out.resize(n, U::default());
+        let win = SharedSlice::new(out);
         bk.for_chunks(n, |s, e| {
             for i in s..e {
                 unsafe { win.write(i, f(i)) };
             }
         });
-        out
     })
 }
 
@@ -230,16 +288,46 @@ where
     U: Copy + Default + Send,
     F: Fn(&A, &B) -> U + Sync,
 {
+    let mut out = Vec::new();
+    zip_map_into(bk, a, b, f, &mut out);
+    out
+}
+
+/// Allocation-free [`zip_map`] (see [`map_into`] for the `out`-buffer
+/// contract).
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend};
+/// let mut s = Vec::new();
+/// dpp::zip_map_into(&Backend::Serial, &[1u32, 2], &[10u32, 20],
+///                   |a, b| a + b, &mut s);
+/// assert_eq!(s, vec![11, 22]);
+/// ```
+pub fn zip_map_into<D, A, B, U, F>(
+    bk: &D,
+    a: &[A],
+    b: &[B],
+    f: F,
+    out: &mut Vec<U>,
+) where
+    D: Device + ?Sized,
+    A: Sync,
+    B: Sync,
+    U: Copy + Default + Send,
+    F: Fn(&A, &B) -> U + Sync,
+{
     assert_eq!(a.len(), b.len(), "zip_map length mismatch");
     timed("Map", || {
-        let mut out = vec![U::default(); a.len()];
-        let win = SharedSlice::new(&mut out);
+        out.clear();
+        out.resize(a.len(), U::default());
+        let win = SharedSlice::new(out);
         bk.for_chunks(a.len(), |s, e| {
             for i in s..e {
                 unsafe { win.write(i, f(&a[i], &b[i])) };
             }
         });
-        out
     })
 }
 
@@ -253,6 +341,21 @@ where
 /// ```
 pub fn iota<D: Device + ?Sized>(bk: &D, n: usize) -> Vec<u32> {
     map_indexed(bk, n, |i| i as u32)
+}
+
+/// Allocation-free [`iota`] (see [`map_into`] for the `out`-buffer
+/// contract).
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend};
+/// let mut out = Vec::new();
+/// dpp::iota_into(&Backend::Serial, 3, &mut out);
+/// assert_eq!(out, vec![0, 1, 2]);
+/// ```
+pub fn iota_into<D: Device + ?Sized>(bk: &D, n: usize, out: &mut Vec<u32>) {
+    map_indexed_into(bk, n, |i| i as u32, out);
 }
 
 /// Reduce with an associative operation and its identity.
@@ -276,21 +379,74 @@ where
 {
     timed("Reduce", || {
         let bounds = bk.chunk_bounds(input.len());
-        let mut partials = vec![identity; bounds.len()];
-        {
-            let win = SharedSlice::new(&mut partials);
-            let bounds_ref = &bounds;
-            bk.for_chunk_ids(bounds_ref.len(), |c| {
-                let (s, e) = bounds_ref[c];
-                let mut acc = identity;
-                for v in &input[s..e] {
-                    acc = op(acc, *v);
-                }
-                unsafe { win.write(c, acc) };
-            });
-        }
-        partials.into_iter().fold(identity, &op)
+        let mut partials = Vec::new();
+        reduce_core(bk, input, identity, &op, &bounds, &mut partials)
     })
+}
+
+/// Allocation-free [`reduce`]: chunk bounds and partials come from
+/// the workspace, the fold order is unchanged — same result bitwise
+/// for a given device configuration.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend, Workspace};
+/// let ws = Workspace::new();
+/// let xs: Vec<u64> = (1..=100).collect();
+/// let s = dpp::reduce_ws(&Backend::Serial, &ws, &xs, 0, |a, b| a + b);
+/// assert_eq!(s, 5050);
+/// ```
+pub fn reduce_ws<D, T, F>(
+    bk: &D,
+    ws: &Workspace,
+    input: &[T],
+    identity: T,
+    op: F,
+) -> T
+where
+    D: Device + ?Sized,
+    T: ScratchElem + Sync,
+    F: Fn(T, T) -> T + Sync,
+{
+    timed("Reduce", || {
+        let mut bounds = ws.take_spare::<(usize, usize)>(16);
+        bk.chunk_bounds_into(input.len(), &mut bounds);
+        let mut partials = ws.take_spare::<T>(bounds.len());
+        reduce_core(bk, input, identity, &op, &bounds, &mut partials)
+    })
+}
+
+/// The one chunked-reduce body behind [`reduce`] and [`reduce_ws`]:
+/// per-chunk serial accumulation, then a serial fold of the partials
+/// in chunk order.
+fn reduce_core<D, T, F>(
+    bk: &D,
+    input: &[T],
+    identity: T,
+    op: &F,
+    bounds: &[(usize, usize)],
+    partials: &mut Vec<T>,
+) -> T
+where
+    D: Device + ?Sized,
+    T: Copy + Send + Sync,
+    F: Fn(T, T) -> T + Sync,
+{
+    partials.clear();
+    partials.resize(bounds.len(), identity);
+    {
+        let win = SharedSlice::new(partials);
+        bk.for_chunk_ids(bounds.len(), |c| {
+            let (s, e) = bounds[c];
+            let mut acc = identity;
+            for v in &input[s..e] {
+                acc = op(acc, *v);
+            }
+            unsafe { win.write(c, acc) };
+        });
+    }
+    partials.iter().fold(identity, |a, b| op(a, *b))
 }
 
 /// Exclusive scan (prefix "sum" with `op`); returns (scanned, total).
@@ -317,47 +473,122 @@ where
     F: Fn(T, T) -> T + Sync,
 {
     timed("Scan", || {
-        let n = input.len();
-        let bounds = bk.chunk_bounds(n);
-        // Pass 1: per-chunk totals.
-        let mut partials = vec![identity; bounds.len()];
-        {
-            let win = SharedSlice::new(&mut partials);
-            let bounds_ref = &bounds;
-            bk.for_chunk_ids(bounds_ref.len(), |c| {
-                let (s, e) = bounds_ref[c];
-                let mut acc = identity;
-                for v in &input[s..e] {
-                    acc = op(acc, *v);
+        let bounds = bk.chunk_bounds(input.len());
+        let (mut partials, mut offsets, mut out) =
+            (Vec::new(), Vec::new(), Vec::new());
+        let total = scan_core(bk, input, identity, &op, false, &bounds,
+                              &mut partials, &mut offsets, &mut out);
+        (out, total)
+    })
+}
+
+/// Allocation-free [`scan_exclusive`]: the scanned array lands in
+/// `out` (cleared and resized), the per-chunk partial/offset scratch
+/// comes from the workspace, and the total is returned. Identical
+/// chunking and op order to the allocating form — bitwise-identical
+/// results for a given device configuration.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend, Workspace};
+/// let ws = Workspace::new();
+/// let mut ex = Vec::new();
+/// let total = dpp::scan_exclusive_into(
+///     &Backend::Serial, &ws, &[1u32, 2, 3], 0, |a, b| a + b, &mut ex);
+/// assert_eq!(ex, vec![0, 1, 3]);
+/// assert_eq!(total, 6);
+/// ```
+pub fn scan_exclusive_into<D, T, F>(
+    bk: &D,
+    ws: &Workspace,
+    input: &[T],
+    identity: T,
+    op: F,
+    out: &mut Vec<T>,
+) -> T
+where
+    D: Device + ?Sized,
+    T: ScratchElem + Sync,
+    F: Fn(T, T) -> T + Sync,
+{
+    timed("Scan", || {
+        let mut bounds = ws.take_spare::<(usize, usize)>(16);
+        bk.chunk_bounds_into(input.len(), &mut bounds);
+        let mut partials = ws.take_spare::<T>(bounds.len());
+        let mut offsets = ws.take_spare::<T>(bounds.len());
+        scan_core(bk, input, identity, &op, false, &bounds,
+                  &mut partials, &mut offsets, out)
+    })
+}
+
+/// The one three-pass scan body behind every exclusive/inclusive
+/// spelling: per-chunk totals, serial scan of the totals, local scan
+/// plus chunk offset. Returns the grand total.
+#[allow(clippy::too_many_arguments)]
+fn scan_core<D, T, F>(
+    bk: &D,
+    input: &[T],
+    identity: T,
+    op: &F,
+    inclusive: bool,
+    bounds: &[(usize, usize)],
+    partials: &mut Vec<T>,
+    offsets: &mut Vec<T>,
+    out: &mut Vec<T>,
+) -> T
+where
+    D: Device + ?Sized,
+    T: Copy + Send + Sync,
+    F: Fn(T, T) -> T + Sync,
+{
+    let n = input.len();
+    // Pass 1: per-chunk totals.
+    partials.clear();
+    partials.resize(bounds.len(), identity);
+    {
+        let win = SharedSlice::new(partials);
+        bk.for_chunk_ids(bounds.len(), |c| {
+            let (s, e) = bounds[c];
+            let mut acc = identity;
+            for v in &input[s..e] {
+                acc = op(acc, *v);
+            }
+            unsafe { win.write(c, acc) };
+        });
+    }
+    // Serial scan of chunk totals.
+    offsets.clear();
+    offsets.resize(bounds.len(), identity);
+    let mut acc = identity;
+    for (c, p) in partials.iter().enumerate() {
+        offsets[c] = acc;
+        acc = op(acc, *p);
+    }
+    let total = acc;
+    // Pass 2: local scan + chunk offset.
+    out.clear();
+    out.resize(n, identity);
+    {
+        let win = SharedSlice::new(out);
+        let offsets_ref = &*offsets;
+        bk.for_chunk_ids(bounds.len(), |c| {
+            let (s, e) = bounds[c];
+            let mut acc = offsets_ref[c];
+            if inclusive {
+                for i in s..e {
+                    acc = op(acc, input[i]);
+                    unsafe { win.write(i, acc) };
                 }
-                unsafe { win.write(c, acc) };
-            });
-        }
-        // Serial scan of chunk totals.
-        let mut offsets = vec![identity; bounds.len()];
-        let mut acc = identity;
-        for (c, p) in partials.iter().enumerate() {
-            offsets[c] = acc;
-            acc = op(acc, *p);
-        }
-        let total = acc;
-        // Pass 2: local exclusive scan + chunk offset.
-        let mut out = vec![identity; n];
-        {
-            let win = SharedSlice::new(&mut out);
-            let bounds_ref = &bounds;
-            let offsets_ref = &offsets;
-            bk.for_chunk_ids(bounds_ref.len(), |c| {
-                let (s, e) = bounds_ref[c];
-                let mut acc = offsets_ref[c];
+            } else {
                 for i in s..e {
                     unsafe { win.write(i, acc) };
                     acc = op(acc, input[i]);
                 }
-            });
-        }
-        (out, total)
-    })
+            }
+        });
+    }
+    total
 }
 
 /// Inclusive scan; returns the scanned array (last element = total).
@@ -378,42 +609,50 @@ where
     F: Fn(T, T) -> T + Sync,
 {
     timed("Scan", || {
-        let n = input.len();
-        let bounds = bk.chunk_bounds(n);
-        let mut partials = vec![identity; bounds.len()];
-        {
-            let win = SharedSlice::new(&mut partials);
-            let bounds_ref = &bounds;
-            bk.for_chunk_ids(bounds_ref.len(), |c| {
-                let (s, e) = bounds_ref[c];
-                let mut acc = identity;
-                for v in &input[s..e] {
-                    acc = op(acc, *v);
-                }
-                unsafe { win.write(c, acc) };
-            });
-        }
-        let mut offsets = vec![identity; bounds.len()];
-        let mut acc = identity;
-        for (c, p) in partials.iter().enumerate() {
-            offsets[c] = acc;
-            acc = op(acc, *p);
-        }
-        let mut out = vec![identity; n];
-        {
-            let win = SharedSlice::new(&mut out);
-            let bounds_ref = &bounds;
-            let offsets_ref = &offsets;
-            bk.for_chunk_ids(bounds_ref.len(), |c| {
-                let (s, e) = bounds_ref[c];
-                let mut acc = offsets_ref[c];
-                for i in s..e {
-                    acc = op(acc, input[i]);
-                    unsafe { win.write(i, acc) };
-                }
-            });
-        }
+        let bounds = bk.chunk_bounds(input.len());
+        let (mut partials, mut offsets, mut out) =
+            (Vec::new(), Vec::new(), Vec::new());
+        scan_core(bk, input, identity, &op, true, &bounds,
+                  &mut partials, &mut offsets, &mut out);
         out
+    })
+}
+
+/// Allocation-free [`scan_inclusive`] (see [`scan_exclusive_into`]
+/// for the buffer contract); returns the total.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend, Workspace};
+/// let ws = Workspace::new();
+/// let mut inc = Vec::new();
+/// let total = dpp::scan_inclusive_into(
+///     &Backend::Serial, &ws, &[1u32, 2, 3], 0, |a, b| a + b,
+///     &mut inc);
+/// assert_eq!(inc, vec![1, 3, 6]);
+/// assert_eq!(total, 6);
+/// ```
+pub fn scan_inclusive_into<D, T, F>(
+    bk: &D,
+    ws: &Workspace,
+    input: &[T],
+    identity: T,
+    op: F,
+    out: &mut Vec<T>,
+) -> T
+where
+    D: Device + ?Sized,
+    T: ScratchElem + Sync,
+    F: Fn(T, T) -> T + Sync,
+{
+    timed("Scan", || {
+        let mut bounds = ws.take_spare::<(usize, usize)>(16);
+        bk.chunk_bounds_into(input.len(), &mut bounds);
+        let mut partials = ws.take_spare::<T>(bounds.len());
+        let mut offsets = ws.take_spare::<T>(bounds.len());
+        scan_core(bk, input, identity, &op, true, &bounds,
+                  &mut partials, &mut offsets, out)
     })
 }
 
@@ -457,9 +696,33 @@ where
     D: Device + ?Sized,
     T: Copy + Default + Send + Sync,
 {
+    let mut out = Vec::new();
+    gather_into(bk, src, idx, &mut out);
+    out
+}
+
+/// Allocation-free [`gather`]: same out-of-range contract, writes
+/// into `out` (cleared and resized to `idx.len()`).
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend, Workspace};
+/// let ws = Workspace::new();
+/// let mut g = ws.take_spare::<u32>(2);
+/// dpp::gather_into(&Backend::Serial, &[10u32, 20, 30], &[2, 0],
+///                  &mut g);
+/// assert_eq!(&g[..], &[30, 10]);
+/// ```
+pub fn gather_into<D, T>(bk: &D, src: &[T], idx: &[u32], out: &mut Vec<T>)
+where
+    D: Device + ?Sized,
+    T: Copy + Default + Send + Sync,
+{
     timed("Gather", || {
-        let mut out = vec![T::default(); idx.len()];
-        let win = SharedSlice::new(&mut out);
+        out.clear();
+        out.resize(idx.len(), T::default());
+        let win = SharedSlice::new(out);
         let bad = AtomicU64::new(NO_BAD_INDEX);
         bk.for_chunks(idx.len(), |s, e| {
             for i in s..e {
@@ -472,7 +735,6 @@ where
             }
         });
         check_bad_index(&bad, "gather", "src", src.len());
-        out
     })
 }
 
@@ -601,6 +863,80 @@ mod tests {
     fn iota_counts() {
         for bk in backends() {
             assert_eq!(iota(&bk, 5), vec![0, 1, 2, 3, 4]);
+        }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_forms() {
+        for bk in backends() {
+            let ws = Workspace::new();
+            let xs: Vec<u32> = (0..9_999).map(|i| i % 321).collect();
+            let idx: Vec<u32> = (0..9_999).rev().collect();
+            for _round in 0..2 {
+                let mut m = ws.take_spare::<u32>(xs.len());
+                map_into(&bk, &xs, |x| x.wrapping_mul(7), &mut m);
+                assert_eq!(&m[..], &map(&bk, &xs, |x| x.wrapping_mul(7))[..]);
+
+                let mut mi = ws.take_spare::<u32>(xs.len());
+                map_indexed_into(&bk, xs.len(), |i| i as u32 ^ 5, &mut mi);
+                assert_eq!(&mi[..],
+                           &map_indexed(&bk, xs.len(), |i| i as u32 ^ 5)[..]);
+
+                let mut z = ws.take_spare::<u32>(xs.len());
+                zip_map_into(&bk, &xs, &idx, |a, b| a + b, &mut z);
+                assert_eq!(&z[..], &zip_map(&bk, &xs, &idx, |a, b| a + b)[..]);
+
+                let mut io = ws.take_spare::<u32>(xs.len());
+                iota_into(&bk, xs.len(), &mut io);
+                assert_eq!(&io[..], &iota(&bk, xs.len())[..]);
+
+                let mut g = ws.take_spare::<u32>(idx.len());
+                gather_into(&bk, &xs, &idx, &mut g);
+                assert_eq!(&g[..], &gather(&bk, &xs, &idx)[..]);
+
+                let mut ex = ws.take_spare::<u32>(xs.len());
+                let t = scan_exclusive_into(&bk, &ws, &xs, 0,
+                                            |a, b| a + b, &mut ex);
+                let (want_ex, want_t) =
+                    scan_exclusive(&bk, &xs, 0, |a, b| a + b);
+                assert_eq!((&ex[..], t), (&want_ex[..], want_t));
+
+                let mut inc = ws.take_spare::<u32>(xs.len());
+                scan_inclusive_into(&bk, &ws, &xs, 0, |a, b| a + b,
+                                    &mut inc);
+                assert_eq!(&inc[..],
+                           &scan_inclusive(&bk, &xs, 0, |a, b| a + b)[..]);
+
+                assert_eq!(
+                    reduce_ws(&bk, &ws, &xs, 0u32, |a, b| a.wrapping_add(b)),
+                    reduce(&bk, &xs, 0u32, |a, b| a.wrapping_add(b))
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn into_variants_reach_steady_state_reuse() {
+        for bk in backends() {
+            let ws = Workspace::new();
+            let xs: Vec<u32> = (0..5_000).collect();
+            let one_round = || {
+                let mut m = ws.take_spare::<u32>(xs.len());
+                map_into(&bk, &xs, |x| x + 1, &mut m);
+                let mut ex = ws.take_spare::<u32>(xs.len());
+                scan_exclusive_into(&bk, &ws, &xs, 0, |a, b| a + b,
+                                    &mut ex);
+                reduce_ws(&bk, &ws, &xs, 0u32, |a, b| a.wrapping_add(b));
+            };
+            one_round();
+            let warm = ws.stats();
+            for _ in 0..5 {
+                one_round();
+            }
+            let now = ws.stats();
+            assert_eq!(now.misses, warm.misses,
+                       "steady state allocates nothing ({bk:?})");
+            assert!(now.hits > warm.hits);
         }
     }
 

@@ -145,6 +145,30 @@ pub trait Device: Send + Sync + std::fmt::Debug {
     /// reductions.
     fn chunk_bounds(&self, n: usize) -> Vec<(usize, usize)>;
 
+    /// Allocation-free [`Device::chunk_bounds`]: write the same
+    /// boundaries into `out` (cleared first; within capacity once the
+    /// caller's scratch buffer is warm). The workspace-backed `_into`
+    /// primitives route through this so their steady state allocates
+    /// nothing; implementations must keep it exactly equal to
+    /// `chunk_bounds` (pinned by a unit test below). The default
+    /// collects via `chunk_bounds` (one transient allocation) so
+    /// out-of-tree devices stay correct unmodified; every in-tree
+    /// device overrides it with the shared `split_bounds_into`.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::{Device, SerialDevice};
+    /// let mut out = Vec::new();
+    /// SerialDevice.chunk_bounds_into(7, &mut out);
+    /// assert_eq!(out, SerialDevice.chunk_bounds(7));
+    /// ```
+    fn chunk_bounds_into(&self, n: usize, out: &mut Vec<(usize, usize)>) {
+        let bounds = self.chunk_bounds(n);
+        out.clear();
+        out.extend_from_slice(&bounds);
+    }
+
     /// Run `f(chunk_idx)` for each chunk id in parallel.
     fn chunk_ids_dyn(&self, nchunks: usize, f: &(dyn Fn(usize) + Sync));
 
@@ -213,11 +237,25 @@ impl<D: Device + ?Sized> DeviceExt for D {}
 /// the ONE boundary formula every device (and the legacy [`Backend`])
 /// shares, so chunked association orders can never drift apart.
 pub(crate) fn split_bounds(n: usize, pieces: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    split_bounds_into(n, pieces, &mut out);
+    out
+}
+
+/// [`split_bounds`] into a caller-owned buffer — the allocation-free
+/// body behind every in-tree [`Device::chunk_bounds_into`] override.
+pub(crate) fn split_bounds_into(
+    n: usize,
+    pieces: usize,
+    out: &mut Vec<(usize, usize)>,
+) {
+    out.clear();
     let per = n.div_ceil(pieces.max(1));
-    (0..pieces.max(1))
-        .map(|i| (i * per, ((i + 1) * per).min(n)))
-        .filter(|(s, e)| s < e)
-        .collect()
+    out.extend(
+        (0..pieces.max(1))
+            .map(|i| (i * per, ((i + 1) * per).min(n)))
+            .filter(|(s, e)| s < e),
+    );
 }
 
 /// Piece count for a pool device: enough chunks to load every worker,
@@ -277,6 +315,10 @@ impl Device for SerialDevice {
 
     fn chunk_bounds(&self, n: usize) -> Vec<(usize, usize)> {
         split_bounds(n, 1)
+    }
+
+    fn chunk_bounds_into(&self, n: usize, out: &mut Vec<(usize, usize)>) {
+        split_bounds_into(n, 1, out);
     }
 
     fn chunk_ids_dyn(&self, nchunks: usize, f: &(dyn Fn(usize) + Sync)) {
@@ -365,6 +407,14 @@ impl Device for PoolDevice {
 
     fn chunk_bounds(&self, n: usize) -> Vec<(usize, usize)> {
         split_bounds(n, pool_pieces(self.pool.threads(), self.grain, n))
+    }
+
+    fn chunk_bounds_into(&self, n: usize, out: &mut Vec<(usize, usize)>) {
+        split_bounds_into(
+            n,
+            pool_pieces(self.pool.threads(), self.grain, n),
+            out,
+        );
     }
 
     fn chunk_ids_dyn(&self, nchunks: usize, f: &(dyn Fn(usize) + Sync)) {
@@ -463,6 +513,10 @@ impl Device for OfflineAcceleratorDevice {
         SerialDevice.chunk_bounds(n)
     }
 
+    fn chunk_bounds_into(&self, n: usize, out: &mut Vec<(usize, usize)>) {
+        SerialDevice.chunk_bounds_into(n, out);
+    }
+
     fn chunk_ids_dyn(&self, nchunks: usize, f: &(dyn Fn(usize) + Sync)) {
         SerialDevice.chunk_ids_dyn(nchunks, f);
     }
@@ -516,6 +570,16 @@ impl Device for Backend {
 
     fn chunk_bounds(&self, n: usize) -> Vec<(usize, usize)> {
         Backend::chunk_bounds(self, n)
+    }
+
+    fn chunk_bounds_into(&self, n: usize, out: &mut Vec<(usize, usize)>) {
+        let pieces = match self {
+            Backend::Serial => 1,
+            Backend::Threaded { pool, grain } => {
+                pool_pieces(pool.threads(), *grain, n)
+            }
+        };
+        split_bounds_into(n, pieces, out);
     }
 
     fn chunk_ids_dyn(&self, nchunks: usize, f: &(dyn Fn(usize) + Sync)) {
@@ -718,6 +782,25 @@ mod tests {
         SerialDevice.chunks_dyn(0, &|_, _| panic!("no work expected"));
         assert_eq!(SerialDevice.chunk_bounds(7), vec![(0, 7)]);
         assert!(SerialDevice.chunk_bounds(0).is_empty());
+    }
+
+    #[test]
+    fn chunk_bounds_into_matches_chunk_bounds_on_every_device() {
+        let devices: Vec<Box<dyn Device>> = vec![
+            Box::new(SerialDevice),
+            Box::new(PoolDevice::new(3, 64)),
+            Box::new(OfflineAcceleratorDevice::load(Path::new("nope"))),
+            Box::new(Backend::Serial),
+            Box::new(Backend::threaded_with_grain(Pool::new(2), 1021)),
+        ];
+        let mut out = Vec::new();
+        for dev in &devices {
+            for n in [0usize, 1, 7, 1000, 10_000] {
+                dev.chunk_bounds_into(n, &mut out);
+                assert_eq!(out, dev.chunk_bounds(n),
+                           "{} n={n}", dev.name());
+            }
+        }
     }
 
     #[test]

@@ -40,6 +40,11 @@
 //!   barrier**: a whole iteration's stages execute inside one
 //!   persistent pool region ([`crate::pool::Pool::region`]) with a
 //!   lightweight phase barrier between stages.
+//! * [`Workspace`] (in [`workspace`]) — amortizes the **allocator**:
+//!   a typed, size-bucketed scratch pool held one-per-engine/lane;
+//!   the `_into`/`_ws` primitive variants draw every intermediate
+//!   buffer from it, so steady-state EM/MAP iterations perform zero
+//!   heap allocations (DESIGN.md §10, `benches/alloc_churn.rs`).
 //!
 //! Every primitive and pipeline stage is instrumented through
 //! [`timing`] so benches can reproduce the paper's per-DPP breakdown
@@ -53,12 +58,14 @@ pub mod pipeline;
 pub mod segmented;
 pub mod sort;
 pub mod timing;
+pub mod workspace;
 
 pub use self::core::*;
 pub use device::*;
 pub use pipeline::*;
 pub use segmented::*;
 pub use sort::*;
+pub use workspace::*;
 
 use std::sync::Arc;
 

@@ -16,10 +16,20 @@
 //! comparison, bitwise-identical to `sort_by_key` + `reduce_by_key` on
 //! the same input.
 
-use super::core::{map, map_indexed, scan_exclusive, SharedSlice};
+//! Like the core primitives, the output-producing functions here have
+//! allocation-free `_into` spellings drawing scratch from a
+//! [`Workspace`] (`copy_if_into`, `select_indices_into`,
+//! `unique_into`, `reduce_by_key_into`); [`SegmentPlan`] already has
+//! [`SegmentPlan::reduce_segments_into`]. `segment_offsets` stays
+//! allocating-only on purpose: it runs once per plan build, never in
+//! a steady-state loop.
+
+use super::core::{map, map_indexed, map_indexed_into, scan_exclusive,
+                  scan_exclusive_into, SharedSlice};
 use super::device::{Device, DeviceExt};
 use super::sort::sort_by_key;
 use super::timing::timed;
+use super::workspace::{ScratchElem, Workspace};
 
 /// CopyIf (stream compaction): keep `input[i]` where `keep(i)`.
 ///
@@ -55,6 +65,55 @@ where
     })
 }
 
+/// Allocation-free [`copy_if_indexed`]: flag and position scratch
+/// come from `ws`, the kept elements land in `out` (cleared and
+/// resized to the survivor count). Same flag/scan/compact structure
+/// as the allocating form — bitwise-identical output.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend, Workspace};
+/// let ws = Workspace::new();
+/// let xs = [5u32, 6, 7, 8];
+/// let mut kept = Vec::new();
+/// dpp::copy_if_into(&Backend::Serial, &ws, &xs, |i| xs[i] % 2 == 0,
+///                   &mut kept);
+/// assert_eq!(kept, vec![6, 8]);
+/// ```
+pub fn copy_if_into<D, T, F>(
+    bk: &D,
+    ws: &Workspace,
+    input: &[T],
+    keep: F,
+    out: &mut Vec<T>,
+) where
+    D: Device + ?Sized,
+    T: ScratchElem + Sync,
+    F: Fn(usize) -> bool + Sync,
+{
+    timed("CopyIf", || {
+        let mut flags = ws.take_spare::<u32>(input.len());
+        map_indexed_into(bk, input.len(), |i| u32::from(keep(i)),
+                         &mut flags);
+        let mut pos = ws.take_spare::<u32>(input.len());
+        let total = scan_exclusive_into(bk, ws, &flags[..], 0u32,
+                                        |a, b| a + b, &mut pos);
+        out.clear();
+        out.resize(total as usize, T::default());
+        let win = SharedSlice::new(out);
+        let flags_ref = &flags;
+        let pos_ref = &pos;
+        bk.for_chunks(input.len(), |s, e| {
+            for i in s..e {
+                if flags_ref[i] == 1 {
+                    unsafe { win.write(pos_ref[i] as usize, input[i]) };
+                }
+            }
+        });
+    })
+}
+
 /// Indices `i in 0..n` where `keep(i)` holds (compact of a counting
 /// array) — the workhorse for segment-start detection.
 ///
@@ -86,6 +145,50 @@ where
     })
 }
 
+/// Allocation-free [`select_indices`] (see [`copy_if_into`] for the
+/// scratch/`out` contract).
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend, Workspace};
+/// let ws = Workspace::new();
+/// let mut idx = Vec::new();
+/// dpp::select_indices_into(&Backend::Serial, &ws, 10,
+///                          |i| i % 4 == 0, &mut idx);
+/// assert_eq!(idx, vec![0, 4, 8]);
+/// ```
+pub fn select_indices_into<D, F>(
+    bk: &D,
+    ws: &Workspace,
+    n: usize,
+    keep: F,
+    out: &mut Vec<u32>,
+) where
+    D: Device + ?Sized,
+    F: Fn(usize) -> bool + Sync,
+{
+    timed("CopyIf", || {
+        let mut flags = ws.take_spare::<u32>(n);
+        map_indexed_into(bk, n, |i| u32::from(keep(i)), &mut flags);
+        let mut pos = ws.take_spare::<u32>(n);
+        let total = scan_exclusive_into(bk, ws, &flags[..], 0u32,
+                                        |a, b| a + b, &mut pos);
+        out.clear();
+        out.resize(total as usize, 0);
+        let win = SharedSlice::new(out);
+        let flags_ref = &flags;
+        let pos_ref = &pos;
+        bk.for_chunks(n, |s, e| {
+            for i in s..e {
+                if flags_ref[i] == 1 {
+                    unsafe { win.write(pos_ref[i] as usize, i as u32) };
+                }
+            }
+        });
+    })
+}
+
 /// Unique: drop adjacent duplicates (input usually sorted first).
 ///
 /// # Examples
@@ -102,6 +205,33 @@ where
 {
     timed("Unique", || {
         copy_if_indexed(bk, input, |i| i == 0 || input[i] != input[i - 1])
+    })
+}
+
+/// Allocation-free [`unique`] (see [`copy_if_into`]).
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend, Workspace};
+/// let ws = Workspace::new();
+/// let mut u = Vec::new();
+/// dpp::unique_into(&Backend::Serial, &ws, &[1u32, 1, 2, 2, 1],
+///                  &mut u);
+/// assert_eq!(u, vec![1, 2, 1]); // adjacent dups only
+/// ```
+pub fn unique_into<D, T>(
+    bk: &D,
+    ws: &Workspace,
+    input: &[T],
+    out: &mut Vec<T>,
+) where
+    D: Device + ?Sized,
+    T: ScratchElem + PartialEq + Sync,
+{
+    timed("Unique", || {
+        copy_if_into(bk, ws, input,
+                     |i| i == 0 || input[i] != input[i - 1], out)
     })
 }
 
@@ -172,6 +302,84 @@ where
             });
         }
         (out_keys, out_vals)
+    })
+}
+
+/// Allocation-free [`reduce_by_key`]: the segment-start scratch comes
+/// from `ws`, the reduced keys/values land in `out_keys`/`out_vals`
+/// (cleared and resized to the segment count). Same segment
+/// detection, chunking, and per-segment op order as the allocating
+/// form — bitwise-identical, floats included.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend, Workspace};
+/// let ws = Workspace::new();
+/// let (mut k, mut v) = (Vec::new(), Vec::new());
+/// dpp::reduce_by_key_into(
+///     &Backend::Serial, &ws, &[0u32, 0, 3], &[1u64, 2, 4], 0,
+///     |a, b| a + b, &mut k, &mut v);
+/// assert_eq!(k, vec![0, 3]);
+/// assert_eq!(v, vec![3, 4]);
+/// ```
+#[allow(clippy::too_many_arguments)]
+pub fn reduce_by_key_into<D, K, V, F>(
+    bk: &D,
+    ws: &Workspace,
+    keys: &[K],
+    vals: &[V],
+    identity: V,
+    op: F,
+    out_keys: &mut Vec<K>,
+    out_vals: &mut Vec<V>,
+) where
+    D: Device + ?Sized,
+    K: ScratchElem + PartialEq + Sync,
+    V: ScratchElem + Sync,
+    F: Fn(V, V) -> V + Sync,
+{
+    assert_eq!(keys.len(), vals.len(), "reduce_by_key length mismatch");
+    timed("ReduceByKey", || {
+        let n = keys.len();
+        if n == 0 {
+            out_keys.clear();
+            out_vals.clear();
+            return;
+        }
+        debug_assert!(is_key_sorted_grouped(keys), "keys must be grouped");
+        let mut starts = ws.take_spare::<u32>(64);
+        select_indices_into(bk, ws, n,
+                            |i| i == 0 || keys[i] != keys[i - 1],
+                            &mut starts);
+        let nseg = starts.len();
+        out_keys.clear();
+        out_keys.resize(nseg, K::default());
+        out_vals.clear();
+        out_vals.resize(nseg, identity);
+        {
+            let wk = SharedSlice::new(out_keys);
+            let wv = SharedSlice::new(out_vals);
+            let starts_ref = &starts;
+            bk.for_chunks(nseg, |cs, ce| {
+                for j in cs..ce {
+                    let s = starts_ref[j] as usize;
+                    let e = if j + 1 < nseg {
+                        starts_ref[j + 1] as usize
+                    } else {
+                        n
+                    };
+                    let mut acc = identity;
+                    for v in &vals[s..e] {
+                        acc = op(acc, *v);
+                    }
+                    unsafe {
+                        wk.write(j, keys[s]);
+                        wv.write(j, acc);
+                    }
+                }
+            });
+        }
     })
 }
 
@@ -829,6 +1037,65 @@ mod tests {
             assert_eq!(k.len(), n / 10);
             assert!(v.iter().all(|&m| m == 0));
         }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_forms_bitwise() {
+        for bk in backends() {
+            let ws = Workspace::new();
+            let n = 8_000usize;
+            let xs: Vec<u32> = (0..n as u32).map(|i| i % 113).collect();
+            let mut keys: Vec<u32> =
+                (0..n).map(|i| (i / 9) as u32).collect();
+            keys.sort_unstable();
+            let vals: Vec<f32> =
+                (0..n).map(|i| (i as f32) * 0.31 - 7.5).collect();
+            for _round in 0..2 {
+                let mut kept = ws.take_spare::<u32>(n);
+                copy_if_into(&bk, &ws, &xs, |i| xs[i] % 3 == 0, &mut kept);
+                assert_eq!(&kept[..],
+                           &copy_if_indexed(&bk, &xs, |i| xs[i] % 3 == 0)[..]);
+
+                let mut sel = ws.take_spare::<u32>(n);
+                select_indices_into(&bk, &ws, n, |i| xs[i] > 56, &mut sel);
+                assert_eq!(&sel[..],
+                           &select_indices(&bk, n, |i| xs[i] > 56)[..]);
+
+                let mut uniq = ws.take_spare::<u32>(n);
+                unique_into(&bk, &ws, &xs, &mut uniq);
+                assert_eq!(&uniq[..], &unique(&bk, &xs)[..]);
+
+                let (mut rk, mut rv) =
+                    (ws.take_spare::<u32>(n), ws.take_spare::<f32>(n));
+                reduce_by_key_into(&bk, &ws, &keys, &vals, 0.0f32,
+                                   |a, b| a + b, &mut rk, &mut rv);
+                let (wk, wv) = reduce_by_key(&bk, &keys, &vals, 0.0f32,
+                                             |a, b| a + b);
+                assert_eq!(&rk[..], &wk[..]);
+                let got: Vec<u32> = rv.iter().map(|v| v.to_bits()).collect();
+                let want: Vec<u32> = wv.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(got, want, "float segments bitwise");
+            }
+            // Steady state: one more full round adds no misses.
+            let warm = ws.stats().misses;
+            let mut kept = ws.take_spare::<u32>(n);
+            copy_if_into(&bk, &ws, &xs, |i| xs[i] % 3 == 0, &mut kept);
+            let (mut rk, mut rv) =
+                (ws.take_spare::<u32>(n), ws.take_spare::<f32>(n));
+            reduce_by_key_into(&bk, &ws, &keys, &vals, 0.0f32,
+                               |a, b| a + b, &mut rk, &mut rv);
+            drop((kept, rk, rv));
+            assert_eq!(ws.stats().misses, warm, "{bk:?}");
+        }
+    }
+
+    #[test]
+    fn reduce_by_key_into_empty_clears_outputs() {
+        let ws = Workspace::new();
+        let (mut k, mut v) = (vec![9u32], vec![9u64]);
+        reduce_by_key_into(&Backend::Serial, &ws, &[] as &[u32], &[],
+                           0u64, |a, b| a + b, &mut k, &mut v);
+        assert!(k.is_empty() && v.is_empty());
     }
 
     #[test]

@@ -12,15 +12,40 @@
 //! small-domain keys costs proportionally less — this mirrors Thrust's
 //! optimization and matters for the per-DPP breakdown bench.
 //!
+//! Two spellings per sort (DESIGN.md §10): the legacy allocating one
+//! (`sort_by_key`, `sort_keys`) and the workspace one (`sort_by_key_ws`,
+//! `sort_keys_ws`) whose ping-pong key/payload buffers and digit
+//! histogram persist across passes *and* — through the
+//! [`Workspace`] — across iterations. Both lower to the same cores
+//! (`radix_pairs_core` / `radix_keys_core`), so results are
+//! bitwise-identical. The keys-only core carries no payload at all:
+//! `sort_keys` no longer allocates (or moves) a dummy zero payload.
+//!
 //! A comparison sort (`sort_pairs_comparison`) is kept as the ablation
 //! baseline (`benches/ablation_sort.rs`).
+//!
+// deny(hot-loop-alloc): every allocation below carries an alloc-ok
+// justification; the steady-state `_ws` paths must not allocate
+// (enforced by ci/check_hot_loop_allocs.sh and benches/alloc_churn.rs).
 
-use super::core::SharedSlice;
+use super::core::{scan_exclusive, scan_exclusive_into, SharedSlice};
 use super::device::{Device, DeviceExt};
 use super::timing::timed;
+use super::workspace::Workspace;
 
 const RADIX_BITS: usize = 8;
 const BUCKETS: usize = 1 << RADIX_BITS;
+
+/// Counter-array length (`BUCKETS * nchunks`) at which step 2 of the
+/// radix sort — the exclusive scan over per-chunk digit counters —
+/// runs as a device [`scan_exclusive`] instead of one serial sweep.
+/// Below this the serial sweep stays cache-resident and beats the
+/// fork-join it would replace (`pool_pieces` caps `nchunks` at
+/// `4 * threads`, so the device scan only engages on very wide
+/// machines). Integer addition is exact, so both paths produce
+/// identical counters — the threshold is pure policy, never
+/// observable in results.
+pub const RADIX_PAR_SCAN_MIN: usize = 32 * 1024;
 
 /// Pack a pair into a lexicographic u64 key.
 ///
@@ -53,7 +78,8 @@ pub fn unpack_pair(key: u64) -> (u32, u32) {
 ///
 /// When the keys are *static* across iterations, do not re-sort them:
 /// build a [`crate::dpp::SegmentPlan`] once instead and reduce
-/// sort-free every iteration.
+/// sort-free every iteration. When the sort itself recurs (the Paper
+/// pairing mode), use [`sort_by_key_ws`] so the scratch recurs too.
 ///
 /// # Examples
 ///
@@ -72,11 +98,59 @@ pub fn sort_by_key<D: Device + ?Sized>(
 ) {
     assert_eq!(keys.len(), vals.len(), "sort_by_key length mismatch");
     timed("SortByKey", || {
-        radix_sort(bk, keys, vals);
+        // alloc-ok: the legacy allocating spelling by contract.
+        let bounds = bk.chunk_bounds(keys.len());
+        let (mut tk, mut tv, mut hist) =
+            (Vec::new(), Vec::new(), Vec::new()); // alloc-ok: legacy
+        radix_pairs_core(bk, keys, vals, &mut tk, &mut tv, &mut hist,
+                         &bounds, None);
+    })
+}
+
+/// Allocation-free [`sort_by_key`]: the ping-pong buffers and the
+/// digit histogram come from `ws`, so repeated sorts (one per MAP
+/// iteration in Paper mode) reuse the same storage run-long.
+/// Bitwise-identical ordering to the allocating form.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend, Workspace};
+/// let ws = Workspace::new();
+/// let mut keys = vec![3u64, 1, 3, 2];
+/// let mut vals = vec![0u32, 1, 2, 3];
+/// dpp::sort_by_key_ws(&Backend::Serial, &ws, &mut keys, &mut vals);
+/// assert_eq!(keys, vec![1, 2, 3, 3]);
+/// assert_eq!(vals, vec![1, 3, 0, 2]);
+/// // A second same-shape sort is served entirely from the pool.
+/// let mut k2 = vec![9u64, 7, 8, 6];
+/// let mut v2 = vec![0u32, 1, 2, 3];
+/// let misses = ws.stats().misses;
+/// dpp::sort_by_key_ws(&Backend::Serial, &ws, &mut k2, &mut v2);
+/// assert_eq!(ws.stats().misses, misses);
+/// ```
+pub fn sort_by_key_ws<D: Device + ?Sized>(
+    bk: &D,
+    ws: &Workspace,
+    keys: &mut Vec<u64>,
+    vals: &mut Vec<u32>,
+) {
+    assert_eq!(keys.len(), vals.len(), "sort_by_key length mismatch");
+    timed("SortByKey", || {
+        let n = keys.len();
+        let mut bounds = ws.take_spare::<(usize, usize)>(16);
+        bk.chunk_bounds_into(n, &mut bounds);
+        let mut tk = ws.take_spare::<u64>(n);
+        let mut tv = ws.take_spare::<u32>(n);
+        let mut hist = ws.take_spare::<u32>(bounds.len() * BUCKETS);
+        radix_pairs_core(bk, keys, vals, &mut tk, &mut tv, &mut hist,
+                         &bounds, Some(ws));
     })
 }
 
 /// Sort keys only (payload-free variant used by Unique pipelines).
+/// Runs the keys-only radix core — no dummy payload is allocated or
+/// moved, halving the memory traffic of the old spelling.
 ///
 /// # Examples
 ///
@@ -88,78 +162,156 @@ pub fn sort_by_key<D: Device + ?Sized>(
 /// ```
 pub fn sort_keys<D: Device + ?Sized>(bk: &D, keys: &mut Vec<u64>) {
     timed("SortByKey", || {
-        let mut vals = vec![0u32; keys.len()];
-        radix_sort(bk, keys, &mut vals);
+        // alloc-ok: the legacy allocating spelling by contract.
+        let bounds = bk.chunk_bounds(keys.len());
+        let (mut tk, mut hist) = (Vec::new(), Vec::new()); // alloc-ok: legacy
+        radix_keys_core(bk, keys, &mut tk, &mut hist, &bounds, None);
     })
 }
 
-fn radix_sort<D: Device + ?Sized>(
+/// Allocation-free [`sort_keys`] (see [`sort_by_key_ws`]).
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::{self, Backend, Workspace};
+/// let ws = Workspace::new();
+/// let mut keys = vec![9u64, 4, 7];
+/// dpp::sort_keys_ws(&Backend::Serial, &ws, &mut keys);
+/// assert_eq!(keys, vec![4, 7, 9]);
+/// ```
+pub fn sort_keys_ws<D: Device + ?Sized>(
     bk: &D,
+    ws: &Workspace,
     keys: &mut Vec<u64>,
-    vals: &mut Vec<u32>,
 ) {
-    let n = keys.len();
-    if n <= 1 {
-        return;
-    }
-    // Which digit positions actually vary? (OR of key diffs vs key[0]).
-    // NB: computed with a plain loop — `reduce` would need a separate
-    // combine step since `acc | (k ^ first)` is not associative over
-    // partial accumulators.
-    let first = keys[0];
+    timed("SortByKey", || {
+        let n = keys.len();
+        let mut bounds = ws.take_spare::<(usize, usize)>(16);
+        bk.chunk_bounds_into(n, &mut bounds);
+        let mut tk = ws.take_spare::<u64>(n);
+        let mut hist = ws.take_spare::<u32>(bounds.len() * BUCKETS);
+        radix_keys_core(bk, keys, &mut tk, &mut hist, &bounds, Some(ws));
+    })
+}
+
+/// Which digit positions actually vary (OR of key diffs vs key[0])?
+/// NB: computed with a plain loop — `reduce` would need a separate
+/// combine step since `acc | (k ^ first)` is not associative over
+/// partial accumulators.
+fn varying_digits(keys: &[u64]) -> u64 {
+    let first = keys.first().copied().unwrap_or(0);
     let mut varying = 0u64;
-    for k in keys.iter() {
+    for k in keys {
         varying |= k ^ first;
     }
+    varying
+}
 
-    let mut src_k = std::mem::take(keys);
-    let mut src_v = std::mem::take(vals);
-    let mut dst_k = vec![0u64; n];
-    let mut dst_v = vec![0u32; n];
-
-    let bounds = bk.chunk_bounds(n);
+/// Step 1: per-chunk digit histograms in digit-major layout
+/// (`hist[b * nchunks + c]`), built into the persistent `hist` buffer.
+fn build_histogram<D: Device + ?Sized>(
+    bk: &D,
+    keys: &[u64],
+    shift: usize,
+    bounds: &[(usize, usize)],
+    hist: &mut Vec<u32>,
+) {
     let nchunks = bounds.len();
+    hist.clear();
+    hist.resize(nchunks * BUCKETS, 0);
+    let win = SharedSlice::new(hist);
+    bk.for_chunk_ids(nchunks, |c| {
+        let (s, e) = bounds[c];
+        let mut local = [0u32; BUCKETS];
+        for k in &keys[s..e] {
+            local[((k >> shift) as usize) & (BUCKETS - 1)] += 1;
+        }
+        for (b, &cnt) in local.iter().enumerate() {
+            unsafe { win.write(b * nchunks + c, cnt) };
+        }
+    });
+}
 
-    for pass in 0..(64 / RADIX_BITS) {
-        let shift = pass * RADIX_BITS;
-        if (varying >> shift) & (BUCKETS as u64 - 1) == 0 {
-            continue; // digit constant across all keys — skip pass
+/// Step 2: exclusive scan over the `BUCKETS * nchunks` counters —
+/// serial below [`RADIX_PAR_SCAN_MIN`], a device scan above it
+/// (identical integers either way; see the constant's docs).
+fn scan_counters<D: Device + ?Sized>(
+    bk: &D,
+    hist: &mut Vec<u32>,
+    ws: Option<&Workspace>,
+) {
+    if hist.len() >= RADIX_PAR_SCAN_MIN {
+        match ws {
+            Some(ws) => {
+                let mut scanned = ws.take_spare::<u32>(hist.len());
+                scan_exclusive_into(bk, ws, &hist[..], 0u32,
+                                    |a, b| a + b, &mut scanned);
+                std::mem::swap(hist, &mut *scanned);
+            }
+            None => {
+                // alloc-ok: legacy allocating spelling by contract.
+                let (scanned, _) =
+                    scan_exclusive(bk, &hist[..], 0u32, |a, b| a + b);
+                *hist = scanned;
+            }
         }
-        // 1. per-chunk digit histograms
-        let mut hist = vec![0u32; nchunks * BUCKETS];
-        {
-            let win = SharedSlice::new(&mut hist);
-            let bounds_ref = &bounds;
-            let keys_ref = &src_k;
-            bk.for_chunk_ids(nchunks, |c| {
-                let (s, e) = bounds_ref[c];
-                let mut local = [0u32; BUCKETS];
-                for k in &keys_ref[s..e] {
-                    local[((k >> shift) as usize) & (BUCKETS - 1)] += 1;
-                }
-                for (b, &cnt) in local.iter().enumerate() {
-                    // digit-major layout: hist[b * nchunks + c]
-                    unsafe { win.write(b * nchunks + c, cnt) };
-                }
-            });
-        }
-        // 2. serial exclusive scan over (digit, chunk) — 256*nchunks ints
+    } else {
         let mut acc = 0u32;
         for slot in hist.iter_mut() {
             let v = *slot;
             *slot = acc;
             acc += v;
         }
-        // 3. stable scatter per chunk
+    }
+}
+
+/// The pair-sorting radix core both [`sort_by_key`] spellings lower
+/// to: skip constant digits, histogram → scan → stable scatter per
+/// pass, ping-ponging between the caller's arrays and the `tmp_*`
+/// scratch (a `Vec`-level swap per pass, so the sorted data always
+/// ends in `keys`/`vals`).
+#[allow(clippy::too_many_arguments)]
+fn radix_pairs_core<D: Device + ?Sized>(
+    bk: &D,
+    keys: &mut Vec<u64>,
+    vals: &mut Vec<u32>,
+    tmp_k: &mut Vec<u64>,
+    tmp_v: &mut Vec<u32>,
+    hist: &mut Vec<u32>,
+    bounds: &[(usize, usize)],
+    ws: Option<&Workspace>,
+) {
+    let n = keys.len();
+    if n <= 1 {
+        return;
+    }
+    let varying = varying_digits(keys);
+    if varying == 0 {
+        return; // all keys equal: already sorted, stability trivial
+    }
+    tmp_k.clear();
+    tmp_k.resize(n, 0);
+    tmp_v.clear();
+    tmp_v.resize(n, 0);
+    let nchunks = bounds.len();
+    let mut flips = 0usize;
+    for pass in 0..(64 / RADIX_BITS) {
+        let shift = pass * RADIX_BITS;
+        if (varying >> shift) & (BUCKETS as u64 - 1) == 0 {
+            continue; // digit constant across all keys — skip pass
+        }
+        build_histogram(bk, keys, shift, bounds, hist);
+        scan_counters(bk, hist, ws);
+        // Step 3: stable scatter per chunk.
         {
-            let wk = SharedSlice::new(&mut dst_k);
-            let wv = SharedSlice::new(&mut dst_v);
-            let bounds_ref = &bounds;
-            let keys_ref = &src_k;
-            let vals_ref = &src_v;
-            let hist_ref = &hist;
+            let wk = SharedSlice::new(tmp_k);
+            let wv = SharedSlice::new(tmp_v);
+            let keys_ref = &*keys;
+            let vals_ref = &*vals;
+            let hist_ref = &*hist;
             bk.for_chunk_ids(nchunks, |c| {
-                let (s, e) = bounds_ref[c];
+                let (s, e) = bounds[c];
                 let mut offsets = [0u32; BUCKETS];
                 for b in 0..BUCKETS {
                     offsets[b] = hist_ref[b * nchunks + c];
@@ -176,11 +328,90 @@ fn radix_sort<D: Device + ?Sized>(
                 }
             });
         }
-        std::mem::swap(&mut src_k, &mut dst_k);
-        std::mem::swap(&mut src_v, &mut dst_v);
+        std::mem::swap(keys, tmp_k);
+        std::mem::swap(vals, tmp_v);
+        flips += 1;
     }
-    *keys = src_k;
-    *vals = src_v;
+    if ws.is_some() && flips % 2 == 1 {
+        unswap_after_odd_passes(keys, tmp_k);
+        unswap_after_odd_passes(vals, tmp_v);
+    }
+}
+
+/// After an odd number of ping-pong passes the caller's `Vec` and the
+/// scratch `Vec` have exchanged allocations. On the workspace path
+/// that exchange must not leak a *sub-power-of-two* capacity into the
+/// pool: such a buffer parks on a shelf the upward scan (which starts
+/// at the request's rounded-up shelf) never reaches for same-size
+/// requests, so every later sort would miss and the pool would grow
+/// without bound. One memcpy of the sorted data restores the
+/// identities in that case; pow2-capacity exchanges (the pool-backed
+/// hot path — all `ScratchVec`s carry pow2 capacities) are harmless
+/// and stay zero-copy, as do even pass counts. The legacy allocating
+/// wrappers skip this entirely (their scratch is dropped, and
+/// pre-workspace `sort_by_key` also returned a swapped allocation).
+fn unswap_after_odd_passes<T: Copy>(caller: &mut Vec<T>, tmp: &mut Vec<T>) {
+    if tmp.capacity().is_power_of_two() {
+        return; // interchangeable with the pool's own buffers
+    }
+    tmp.copy_from_slice(caller);
+    std::mem::swap(caller, tmp);
+}
+
+/// The keys-only radix core (`sort_keys*`): identical passes to
+/// [`radix_pairs_core`] with no payload array touched at all.
+fn radix_keys_core<D: Device + ?Sized>(
+    bk: &D,
+    keys: &mut Vec<u64>,
+    tmp_k: &mut Vec<u64>,
+    hist: &mut Vec<u32>,
+    bounds: &[(usize, usize)],
+    ws: Option<&Workspace>,
+) {
+    let n = keys.len();
+    if n <= 1 {
+        return;
+    }
+    let varying = varying_digits(keys);
+    if varying == 0 {
+        return;
+    }
+    tmp_k.clear();
+    tmp_k.resize(n, 0);
+    let nchunks = bounds.len();
+    let mut flips = 0usize;
+    for pass in 0..(64 / RADIX_BITS) {
+        let shift = pass * RADIX_BITS;
+        if (varying >> shift) & (BUCKETS as u64 - 1) == 0 {
+            continue;
+        }
+        build_histogram(bk, keys, shift, bounds, hist);
+        scan_counters(bk, hist, ws);
+        {
+            let wk = SharedSlice::new(tmp_k);
+            let keys_ref = &*keys;
+            let hist_ref = &*hist;
+            bk.for_chunk_ids(nchunks, |c| {
+                let (s, e) = bounds[c];
+                let mut offsets = [0u32; BUCKETS];
+                for b in 0..BUCKETS {
+                    offsets[b] = hist_ref[b * nchunks + c];
+                }
+                for i in s..e {
+                    let k = keys_ref[i];
+                    let b = ((k >> shift) as usize) & (BUCKETS - 1);
+                    let pos = offsets[b] as usize;
+                    offsets[b] += 1;
+                    unsafe { wk.write(pos, k) };
+                }
+            });
+        }
+        std::mem::swap(keys, tmp_k);
+        flips += 1;
+    }
+    if ws.is_some() && flips % 2 == 1 {
+        unswap_after_odd_passes(keys, tmp_k);
+    }
 }
 
 /// Comparison-sort baseline for the ablation bench: pack into tuples,
@@ -198,8 +429,11 @@ fn radix_sort<D: Device + ?Sized>(
 /// ```
 pub fn sort_pairs_comparison(keys: &mut [u64], vals: &mut [u32]) {
     timed("SortByKey(cmp)", || {
-        let mut zipped: Vec<(u64, u32)> =
-            keys.iter().copied().zip(vals.iter().copied()).collect();
+        let mut zipped: Vec<(u64, u32)> = keys
+            .iter()
+            .copied()
+            .zip(vals.iter().copied())
+            .collect(); // alloc-ok: ablation baseline, not a hot path
         zipped.sort_by_key(|&(k, _)| k);
         for (i, (k, v)) in zipped.into_iter().enumerate() {
             keys[i] = k;
@@ -266,6 +500,126 @@ mod tests {
     }
 
     #[test]
+    fn ws_variants_match_legacy_bitwise_and_reuse_scratch() {
+        for bk in backends() {
+            let ws = Workspace::new();
+            for round in 0..3u64 {
+                for bits in [8, 40, 64] {
+                    let (keys, vals) =
+                        random_pairs(4096, bits, 100 + round + bits as u64);
+                    let (mut lk, mut lv) = (keys.clone(), vals.clone());
+                    sort_by_key(&bk, &mut lk, &mut lv);
+                    let (mut wk, mut wv) = (keys.clone(), vals.clone());
+                    sort_by_key_ws(&bk, &ws, &mut wk, &mut wv);
+                    assert_eq!(wk, lk, "keys bits={bits}");
+                    assert_eq!(wv, lv, "vals bits={bits}");
+
+                    let mut lo = keys.clone();
+                    sort_keys(&bk, &mut lo);
+                    let mut wo = keys.clone();
+                    sort_keys_ws(&bk, &ws, &mut wo);
+                    assert_eq!(wo, lo, "keys-only bits={bits}");
+                }
+                if round == 0 {
+                    // Everything the sorts need is parked now.
+                    let warm = ws.stats().misses;
+                    let (mut k, mut v) = random_pairs(4096, 64, 7);
+                    sort_by_key_ws(&bk, &ws, &mut k, &mut v);
+                    assert_eq!(ws.stats().misses, warm,
+                               "steady-state sort allocates nothing");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ws_sort_with_non_pow2_caller_vecs_reaches_steady_state() {
+        // Regression: an odd number of radix passes used to swap the
+        // caller's allocation into the pool; a non-power-of-two caller
+        // capacity then parked on a shelf the upward scan never
+        // reaches for same-size requests, so every later sort missed
+        // and the pool grew without bound.
+        let bk = Backend::Serial;
+        let ws = Workspace::new();
+        // 1-byte key domain -> exactly one (odd) performed pass.
+        let make = |seed: u64| -> (Vec<u64>, Vec<u32>) {
+            let mut rng = Pcg32::seeded(seed);
+            // collect() sizes the Vecs at exactly 3000 (not pow2).
+            let keys: Vec<u64> =
+                (0..3000).map(|_| rng.next_u64() & 0xFF).collect();
+            let vals: Vec<u32> = (0..3000).collect();
+            (keys, vals)
+        };
+        let (mut k, mut v) = make(1);
+        sort_by_key_ws(&bk, &ws, &mut k, &mut v);
+        let k_cap = k.capacity();
+        let warm = ws.stats();
+        for seed in 2..12 {
+            let (mut k, mut v) = make(seed);
+            sort_by_key_ws(&bk, &ws, &mut k, &mut v);
+            assert!(k.windows(2).all(|w| w[0] <= w[1]));
+            let mut ko = make(seed).0;
+            sort_keys_ws(&bk, &ws, &mut ko);
+            assert_eq!(ko, k);
+        }
+        let now = ws.stats();
+        assert_eq!(now.misses, warm.misses,
+                   "fresh non-pow2 caller vecs must not strand buffers");
+        assert_eq!(now.resident_bytes, warm.resident_bytes,
+                   "pool footprint stable across caller-owned sorts");
+        // And the caller kept its own (non-pow2) allocation.
+        assert_eq!(k_cap, 3000);
+    }
+
+    #[test]
+    fn keys_only_path_matches_pair_sort_keys() {
+        for bk in backends() {
+            let (keys, _) = random_pairs(5000, 64, 11);
+            let mut with_payload = keys.clone();
+            let mut payload: Vec<u32> = (0..5000).collect();
+            sort_by_key(&bk, &mut with_payload, &mut payload);
+            let mut keys_only = keys.clone();
+            sort_keys(&bk, &mut keys_only);
+            assert_eq!(keys_only, with_payload);
+        }
+    }
+
+    #[test]
+    fn parallel_counter_scan_matches_serial_sweep() {
+        // Force both sides of the RADIX_PAR_SCAN_MIN policy on the
+        // same counters: results must be identical integers.
+        let bk = Backend::threaded_with_grain(Pool::new(4), 64);
+        let mut rng = Pcg32::seeded(99);
+        let mut hist: Vec<u32> = (0..RADIX_PAR_SCAN_MIN + 123)
+            .map(|_| (rng.next_u64() % 7) as u32)
+            .collect();
+        let mut serial = hist.clone();
+        let mut acc = 0u32;
+        for slot in serial.iter_mut() {
+            let v = *slot;
+            *slot = acc;
+            acc += v;
+        }
+        // Above the threshold with no workspace: device-scan path.
+        scan_counters(&bk, &mut hist, None);
+        assert_eq!(hist, serial);
+        // Same again through a workspace.
+        let ws = Workspace::new();
+        let mut hist2: Vec<u32> = (0..RADIX_PAR_SCAN_MIN + 123)
+            .map(|i| serial.get(i + 1).map_or(0, |_| 1))
+            .collect();
+        let mut serial2 = hist2.clone();
+        let mut acc = 0u32;
+        for slot in serial2.iter_mut() {
+            let v = *slot;
+            *slot = acc;
+            acc += v;
+        }
+        scan_counters(&bk, &mut hist2, Some(&ws));
+        assert_eq!(hist2, serial2);
+    }
+
+    #[test]
     fn payload_follows_key() {
         for bk in backends() {
             let (mut keys, mut vals) = random_pairs(2048, 64, 7);
@@ -287,14 +641,21 @@ mod tests {
     #[test]
     fn empty_and_single() {
         for bk in backends() {
+            let ws = Workspace::new();
             let mut k: Vec<u64> = vec![];
             let mut v: Vec<u32> = vec![];
             sort_by_key(&bk, &mut k, &mut v);
+            sort_by_key_ws(&bk, &ws, &mut k, &mut v);
             let mut k = vec![5u64];
             let mut v = vec![1u32];
             sort_by_key(&bk, &mut k, &mut v);
+            sort_by_key_ws(&bk, &ws, &mut k, &mut v);
             assert_eq!(k, vec![5]);
             assert_eq!(v, vec![1]);
+            let mut k: Vec<u64> = vec![];
+            sort_keys(&bk, &mut k);
+            sort_keys_ws(&bk, &ws, &mut k);
+            assert!(k.is_empty());
         }
     }
 

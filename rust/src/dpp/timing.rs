@@ -71,23 +71,49 @@ pub fn test_lock() -> std::sync::MutexGuard<'static, ()> {
     LOCK.lock().unwrap_or_else(|e| e.into_inner())
 }
 
+/// Rows under this prefix are **counters, not timings**: the
+/// [`crate::dpp::Workspace`] records its reuse events with byte
+/// volume in the value column. [`report`] renders them separately and
+/// excludes them from the time total, so the per-DPP breakdown's
+/// `share` column stays a pure compute-time ratio.
+pub const COUNTER_PREFIX: &str = "Workspace::";
+
 /// Render the registry as an aligned text table sorted by total time.
+/// Counter rows (see [`COUNTER_PREFIX`]) are listed beneath the
+/// timed primitives with their value shown as bytes and no share.
 pub fn report() -> String {
     let snap = snapshot();
-    let total: u64 = snap.values().map(|s| s.nanos).sum();
+    let total: u64 = snap
+        .iter()
+        .filter(|(name, _)| !name.starts_with(COUNTER_PREFIX))
+        .map(|(_, s)| s.nanos)
+        .sum();
     let mut rows: Vec<_> = snap.into_iter().collect();
     rows.sort_by_key(|(_, s)| std::cmp::Reverse(s.nanos));
     let mut out = String::from(
         "primitive            calls        total(ms)    share\n");
+    let mut counters = String::new();
     for (name, s) in rows {
-        out.push_str(&format!(
-            "{:<20} {:>8} {:>15.3} {:>8.1}%\n",
-            name,
-            s.calls,
-            s.nanos as f64 / 1e6,
-            if total > 0 { 100.0 * s.nanos as f64 / total as f64 } else { 0.0 }
-        ));
+        if name.starts_with(COUNTER_PREFIX) {
+            counters.push_str(&format!(
+                "{:<20} {:>8} {:>13} B        -\n",
+                name, s.calls, s.nanos,
+            ));
+        } else {
+            out.push_str(&format!(
+                "{:<20} {:>8} {:>15.3} {:>8.1}%\n",
+                name,
+                s.calls,
+                s.nanos as f64 / 1e6,
+                if total > 0 {
+                    100.0 * s.nanos as f64 / total as f64
+                } else {
+                    0.0
+                }
+            ));
+        }
     }
+    out.push_str(&counters);
     out
 }
 
@@ -129,5 +155,24 @@ mod tests {
         assert!(rep.contains("alpha"));
         set_enabled(false);
         reset();
+    }
+
+    #[test]
+    fn counter_rows_do_not_pollute_the_time_shares() {
+        let _guard = test_lock();
+        reset();
+        set_enabled(true);
+        timed("alpha", || std::thread::sleep(
+            std::time::Duration::from_millis(2)));
+        // A huge byte-volume counter row must not absorb alpha's
+        // share: alpha remains 100% of the TIME total.
+        record("Workspace::hit", 50_000_000_000);
+        let rep = report();
+        set_enabled(false);
+        reset();
+        assert!(rep.contains("alpha"));
+        assert!(rep.contains("Workspace::hit"));
+        assert!(rep.contains("100.0%"), "time share unpolluted: {rep}");
+        assert!(rep.contains("50000000000 B"), "bytes rendered: {rep}");
     }
 }

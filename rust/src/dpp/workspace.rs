@@ -1,0 +1,601 @@
+//! The workspace layer: a typed, size-bucketed scratch-buffer pool
+//! that makes the steady-state hot loops allocation-free (DESIGN.md
+//! §10).
+//!
+//! The paper's per-DPP breakdown (§4.3.2) already shows SortByKey and
+//! ReduceByKey dominating at scale; on top of them this port used to
+//! pay a hidden tax: every primitive call returned a fresh `Vec`, so
+//! each EM/MAP iteration churned large short-lived heap blocks. GPU BP
+//! implementations avoid exactly this by preallocating message and
+//! workspace buffers once per run — the [`Workspace`] is the host-side
+//! equivalent, and the shape the ROADMAP's GPU `Device` slot will
+//! need (device buffer reuse is not optional there).
+//!
+//! Model:
+//!
+//! * A [`Workspace`] owns shelves of parked buffers, bucketed by
+//!   `(element type, power-of-two capacity)`. [`Workspace::take`]
+//!   pops a buffer whose capacity covers the request (scanning larger
+//!   shelves before allocating) and hands it out as a
+//!   [`ScratchVec<T>`] guard; dropping the guard parks the storage
+//!   back on its shelf. After one warm-up pass every take is a
+//!   **reuse hit** — the steady state allocates nothing.
+//! * One workspace per engine/lane. The pool is internally
+//!   synchronized (a small uncontended mutex), so a `Workspace` is
+//!   `Send + Sync`, but the intended topology is one per optimize
+//!   lane / engine — sharded runs then never contend
+//!   ([`crate::sched`]).
+//! * Counters — reuse hits, misses, and the high-water byte mark —
+//!   are exported through [`crate::dpp::timing`] when profiling is
+//!   enabled (`Workspace::hit` / `Workspace::miss` rows, byte volume
+//!   in the value column; [`Workspace::publish_timing`] records the
+//!   high-water mark), and are always available via
+//!   [`Workspace::stats`]. Rows under the `Workspace::` prefix are
+//!   counters, not timings: [`crate::dpp::timing::report`] lists them
+//!   separately as bytes and excludes them from the time total, so
+//!   the per-DPP breakdown's share column stays a pure compute-time
+//!   ratio.
+//!
+//! Bitwise identity: a taken buffer is length-set and value-filled
+//! exactly like the `vec![fill; n]` the allocating primitives build,
+//! so the `_into` code paths in [`crate::dpp`] produce byte-identical
+//! results to their allocating wrappers (pinned by
+//! `tests/workspace_reuse.rs` and `tests/device_conformance.rs`).
+
+use std::any::{Any, TypeId};
+use std::collections::HashMap;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::timing;
+
+/// Element types a [`Workspace`] can pool: plain copyable data with a
+/// default fill value. Blanket-implemented — every scalar and small
+/// POD struct in this crate (u8..u64, f32/f64, `(usize, usize)`
+/// chunk bounds, parameter `Stats`) qualifies automatically.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::Workspace;
+/// // (usize, usize) chunk-bound pairs pool like any scalar.
+/// let ws = Workspace::new();
+/// let b = ws.take::<(usize, usize)>(4);
+/// assert_eq!(b.len(), 4);
+/// ```
+pub trait ScratchElem: Copy + Default + Send + 'static {}
+
+impl<T: Copy + Default + Send + 'static> ScratchElem for T {}
+
+/// Shelf index a request of `n` elements draws from (capacity
+/// `2^shelf >= n`).
+fn shelf_up(n: usize) -> u32 {
+    n.max(1).next_power_of_two().trailing_zeros()
+}
+
+/// Shelf index a buffer of capacity `cap` parks on (`2^shelf <= cap`,
+/// so every buffer on shelf `s` serves any request with
+/// `shelf_up(n) <= s`).
+fn shelf_down(cap: usize) -> u32 {
+    usize::BITS - 1 - cap.max(1).leading_zeros()
+}
+
+/// The shared pool state behind a [`Workspace`] and every guard it
+/// hands out.
+struct Shelves {
+    /// Parked buffers by `(element type, log2 capacity)`. Boxed as
+    /// `dyn Any` so one map holds every element type; the `TypeId`
+    /// key makes the downcast on take infallible.
+    racks: Mutex<HashMap<(TypeId, u32), Vec<Box<dyn Any + Send>>>>,
+    /// Highest shelf index any buffer ever parked on — bounds the
+    /// take-side scan.
+    max_shelf: AtomicU32,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    /// Bytes currently parked on shelves.
+    resident_bytes: AtomicUsize,
+    /// Bytes currently out with live guards.
+    outstanding_bytes: AtomicUsize,
+    /// Max of resident + outstanding ever observed.
+    high_water_bytes: AtomicUsize,
+}
+
+impl Shelves {
+    fn lock(
+        &self,
+    ) -> std::sync::MutexGuard<'_, HashMap<(TypeId, u32), Vec<Box<dyn Any + Send>>>>
+    {
+        // A panic while parked buffers were mid-push cannot corrupt
+        // the map (push is the last step), so poisoned locks recover.
+        self.racks.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn note_high_water(&self) {
+        let total = self.resident_bytes.load(Ordering::Relaxed)
+            + self.outstanding_bytes.load(Ordering::Relaxed);
+        self.high_water_bytes.fetch_max(total, Ordering::Relaxed);
+    }
+
+    /// Park `buf` back on its capacity shelf (guard drop path).
+    fn park<T: ScratchElem>(&self, mut buf: Box<Vec<T>>, charged: usize) {
+        buf.clear();
+        let bytes = buf.capacity() * std::mem::size_of::<T>();
+        let shelf = shelf_down(buf.capacity());
+        self.outstanding_bytes.fetch_sub(charged, Ordering::Relaxed);
+        self.resident_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.max_shelf.fetch_max(shelf, Ordering::Relaxed);
+        let mut racks = self.lock();
+        racks
+            .entry((TypeId::of::<T>(), shelf))
+            .or_default()
+            // Unsizing coercion Box<Vec<T>> -> Box<dyn Any>: no
+            // reallocation, so the steady-state park is free.
+            .push(buf as Box<dyn Any + Send>);
+    }
+}
+
+/// Counter snapshot of a [`Workspace`] ([`Workspace::stats`]).
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::Workspace;
+/// let ws = Workspace::new();
+/// drop(ws.take::<u64>(10));
+/// drop(ws.take::<u64>(10)); // second take reuses the first buffer
+/// let s = ws.stats();
+/// assert_eq!((s.misses, s.hits), (1, 1));
+/// assert_eq!(s.hit_rate(), 0.5);
+/// assert!(s.high_water_bytes >= 10 * 8);
+/// ```
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkspaceStats {
+    /// Takes served from a parked buffer (no allocation).
+    pub hits: u64,
+    /// Takes that had to allocate a fresh buffer.
+    pub misses: u64,
+    /// Max bytes ever held (parked + handed out) at once.
+    pub high_water_bytes: usize,
+    /// Bytes currently parked on shelves.
+    pub resident_bytes: usize,
+    /// Bytes currently out with live [`ScratchVec`] guards.
+    pub outstanding_bytes: usize,
+}
+
+impl WorkspaceStats {
+    /// Fraction of takes served without allocating (1.0 once warm).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::WorkspaceStats;
+    /// let s = WorkspaceStats { hits: 3, misses: 1,
+    ///                          ..Default::default() };
+    /// assert_eq!(s.hit_rate(), 0.75);
+    /// assert_eq!(WorkspaceStats::default().hit_rate(), 0.0);
+    /// ```
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Typed, size-bucketed scratch-buffer pool (see the module docs).
+/// Hold one per engine / scheduler lane for the whole run; every
+/// steady-state [`Workspace::take`] is then a reuse hit and the hot
+/// loops allocate nothing.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::Workspace;
+///
+/// let ws = Workspace::new();
+/// {
+///     let mut buf = ws.take::<u32>(100); // miss: fresh allocation
+///     buf[0] = 7;
+/// } // guard drop parks the storage back on its shelf
+/// let again = ws.take::<u32>(100); // hit: same storage, re-zeroed
+/// assert_eq!(again.len(), 100);
+/// assert_eq!(again[0], 0);
+/// assert_eq!(ws.stats().hits, 1);
+/// assert_eq!(ws.stats().misses, 1);
+/// ```
+pub struct Workspace {
+    inner: Arc<Shelves>,
+}
+
+impl Default for Workspace {
+    fn default() -> Self {
+        Workspace::new()
+    }
+}
+
+impl std::fmt::Debug for Workspace {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        write!(
+            f,
+            "Workspace(hits={}, misses={}, high_water={}B)",
+            s.hits, s.misses, s.high_water_bytes
+        )
+    }
+}
+
+impl Workspace {
+    /// Empty pool; buffers accrete on first use (the warm-up pass).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::Workspace;
+    /// let ws = Workspace::new();
+    /// assert_eq!(ws.stats().hits + ws.stats().misses, 0);
+    /// ```
+    pub fn new() -> Workspace {
+        Workspace {
+            inner: Arc::new(Shelves {
+                racks: Mutex::new(HashMap::new()),
+                max_shelf: AtomicU32::new(0),
+                hits: AtomicU64::new(0),
+                misses: AtomicU64::new(0),
+                resident_bytes: AtomicUsize::new(0),
+                outstanding_bytes: AtomicUsize::new(0),
+                high_water_bytes: AtomicUsize::new(0),
+            }),
+        }
+    }
+
+    /// A buffer of length `n`, every slot set to `T::default()` —
+    /// byte-identical to `vec![T::default(); n]`, served from the
+    /// pool when a large-enough buffer is parked.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::Workspace;
+    /// let ws = Workspace::new();
+    /// let zs = ws.take::<f32>(5);
+    /// assert_eq!(&zs[..], &[0.0; 5]);
+    /// ```
+    pub fn take<T: ScratchElem>(&self, n: usize) -> ScratchVec<T> {
+        self.take_filled(n, T::default())
+    }
+
+    /// [`Workspace::take`] with an explicit fill value — the pooled
+    /// spelling of `vec![fill; n]` (reductions seed with their
+    /// identity this way).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::Workspace;
+    /// let ws = Workspace::new();
+    /// let ones = ws.take_filled::<u32>(3, u32::MAX);
+    /// assert_eq!(&ones[..], &[u32::MAX; 3]);
+    /// ```
+    pub fn take_filled<T: ScratchElem>(&self, n: usize, fill: T)
+        -> ScratchVec<T> {
+        let mut sv = self.take_spare::<T>(n);
+        sv.resize(n, fill);
+        sv
+    }
+
+    /// An **empty** buffer (`len == 0`) with capacity at least `cap`
+    /// — for callers that size the buffer themselves (`_into`
+    /// primitives resize it; `extend`/`push` fills stay within
+    /// capacity once warm).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::Workspace;
+    /// let ws = Workspace::new();
+    /// let mut sp = ws.take_spare::<u8>(16);
+    /// assert!(sp.is_empty() && sp.capacity() >= 16);
+    /// sp.extend_from_slice(b"abc");
+    /// assert_eq!(&sp[..], b"abc");
+    /// ```
+    pub fn take_spare<T: ScratchElem>(&self, cap: usize) -> ScratchVec<T> {
+        let (buf, hit) = self.acquire::<T>(cap);
+        let charged = buf.capacity() * std::mem::size_of::<T>();
+        if timing::enabled() {
+            timing::record(
+                if hit { "Workspace::hit" } else { "Workspace::miss" },
+                charged as u64,
+            );
+        }
+        ScratchVec { buf: Some(buf), charged, home: Arc::clone(&self.inner) }
+    }
+
+    /// Pop a parked buffer with capacity >= `min_cap` (scanning the
+    /// exact shelf and then every larger one), or allocate fresh at
+    /// the next power of two. Returns (buffer, was-a-hit).
+    fn acquire<T: ScratchElem>(&self, min_cap: usize)
+        -> (Box<Vec<T>>, bool) {
+        let want = shelf_up(min_cap);
+        let top = self.inner.max_shelf.load(Ordering::Relaxed).max(want);
+        {
+            let mut racks = self.inner.lock();
+            for shelf in want..=top {
+                let Some(stack) =
+                    racks.get_mut(&(TypeId::of::<T>(), shelf))
+                else {
+                    continue;
+                };
+                let Some(parked) = stack.pop() else { continue };
+                drop(racks);
+                let buf = parked
+                    .downcast::<Vec<T>>()
+                    .expect("shelf keyed by TypeId holds only Vec<T>");
+                let bytes = buf.capacity() * std::mem::size_of::<T>();
+                self.inner.hits.fetch_add(1, Ordering::Relaxed);
+                self.inner
+                    .resident_bytes
+                    .fetch_sub(bytes, Ordering::Relaxed);
+                self.inner
+                    .outstanding_bytes
+                    .fetch_add(bytes, Ordering::Relaxed);
+                self.inner.note_high_water();
+                return (buf, true);
+            }
+        }
+        let cap = min_cap.max(1).next_power_of_two();
+        let buf = Box::new(Vec::with_capacity(cap));
+        let bytes = cap * std::mem::size_of::<T>();
+        self.inner.misses.fetch_add(1, Ordering::Relaxed);
+        self.inner.outstanding_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.inner.note_high_water();
+        (buf, false)
+    }
+
+    /// Snapshot the pool counters.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::Workspace;
+    /// let ws = Workspace::new();
+    /// let g = ws.take::<u16>(8);
+    /// assert_eq!(ws.stats().outstanding_bytes, 16);
+    /// drop(g);
+    /// assert_eq!(ws.stats().outstanding_bytes, 0);
+    /// assert_eq!(ws.stats().resident_bytes, 16);
+    /// ```
+    pub fn stats(&self) -> WorkspaceStats {
+        WorkspaceStats {
+            hits: self.inner.hits.load(Ordering::Relaxed),
+            misses: self.inner.misses.load(Ordering::Relaxed),
+            high_water_bytes: self
+                .inner
+                .high_water_bytes
+                .load(Ordering::Relaxed),
+            resident_bytes: self
+                .inner
+                .resident_bytes
+                .load(Ordering::Relaxed),
+            outstanding_bytes: self
+                .inner
+                .outstanding_bytes
+                .load(Ordering::Relaxed),
+        }
+    }
+
+    /// Record the pool's high-water byte mark into the
+    /// [`crate::dpp::timing`] registry (one
+    /// `Workspace::high_water_bytes` row whose "nanos" column carries
+    /// bytes) — engines call this at the end of a profiled run so the
+    /// per-DPP breakdown also shows scratch memory footprint. No-op
+    /// when profiling is disabled.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::{timing, Workspace};
+    /// let ws = Workspace::new();
+    /// ws.publish_timing(); // profiling off: records nothing
+    /// assert!(timing::snapshot()
+    ///     .get("Workspace::high_water_bytes")
+    ///     .is_none());
+    /// ```
+    pub fn publish_timing(&self) {
+        if timing::enabled() {
+            timing::record(
+                "Workspace::high_water_bytes",
+                self.stats().high_water_bytes as u64,
+            );
+        }
+    }
+}
+
+/// A pooled buffer on loan from a [`Workspace`]: behaves as a
+/// `Vec<T>` (through `Deref`/`DerefMut`) and parks its storage back
+/// on the pool's shelf when dropped. Growing past the granted
+/// capacity is allowed — the enlarged storage simply parks on a
+/// higher shelf.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::dpp::Workspace;
+/// let ws = Workspace::new();
+/// let mut v = ws.take::<u64>(4);
+/// v[1] = 9;
+/// v.push(10); // full Vec API via DerefMut
+/// assert_eq!(&v[..], &[0, 9, 0, 0, 10]);
+/// ```
+pub struct ScratchVec<T: ScratchElem> {
+    /// `Some` until the drop path takes it; boxed so the round trip
+    /// through the shelf's `Box<dyn Any>` never reallocates.
+    buf: Option<Box<Vec<T>>>,
+    /// Bytes charged to `outstanding` at take time (credited back on
+    /// park even if the buffer was grown meanwhile).
+    charged: usize,
+    home: Arc<Shelves>,
+}
+
+impl<T: ScratchElem> Deref for ScratchVec<T> {
+    type Target = Vec<T>;
+
+    fn deref(&self) -> &Vec<T> {
+        self.buf.as_ref().expect("buffer present until drop")
+    }
+}
+
+impl<T: ScratchElem> DerefMut for ScratchVec<T> {
+    fn deref_mut(&mut self) -> &mut Vec<T> {
+        self.buf.as_mut().expect("buffer present until drop")
+    }
+}
+
+impl<T: ScratchElem> Drop for ScratchVec<T> {
+    fn drop(&mut self) {
+        if let Some(buf) = self.buf.take() {
+            self.home.park(buf, self.charged);
+        }
+    }
+}
+
+impl<T: ScratchElem + std::fmt::Debug> std::fmt::Debug for ScratchVec<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ScratchVec({:?})", &self[..])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_fills_like_vec_macro() {
+        let ws = Workspace::new();
+        let a = ws.take::<u32>(1000);
+        assert_eq!(&a[..], &vec![0u32; 1000][..]);
+        let b = ws.take_filled::<f32>(7, -1.5);
+        assert_eq!(&b[..], &vec![-1.5f32; 7][..]);
+    }
+
+    #[test]
+    fn reuse_hits_after_warmup_across_types_and_sizes() {
+        let ws = Workspace::new();
+        // Warm-up: one take per (type, size class).
+        drop(ws.take::<u32>(100));
+        drop(ws.take::<u64>(100));
+        drop(ws.take::<f32>(1000));
+        let warm = ws.stats();
+        assert_eq!(warm.misses, 3);
+        // Steady state: every take (same or smaller size) hits.
+        for _ in 0..10 {
+            drop(ws.take::<u32>(100));
+            drop(ws.take::<u64>(64)); // smaller: served by same shelf
+            drop(ws.take::<f32>(777));
+        }
+        let s = ws.stats();
+        assert_eq!(s.misses, warm.misses, "no steady-state allocations");
+        assert_eq!(s.hits, warm.hits + 30);
+    }
+
+    #[test]
+    fn larger_shelves_serve_smaller_requests() {
+        let ws = Workspace::new();
+        drop(ws.take::<u8>(4096));
+        let g = ws.take::<u8>(3); // 4096-cap buffer covers it
+        assert_eq!(ws.stats().misses, 1);
+        assert_eq!(ws.stats().hits, 1);
+        assert!(g.capacity() >= 4096);
+    }
+
+    #[test]
+    fn grown_buffers_park_on_higher_shelf_and_still_hit() {
+        let ws = Workspace::new();
+        {
+            let mut sp = ws.take_spare::<u32>(8);
+            sp.resize(5000, 0); // grows well past the granted 8
+        }
+        // The grown storage is found by the upward shelf scan.
+        let g = ws.take::<u32>(8);
+        assert!(g.capacity() >= 5000);
+        assert_eq!(ws.stats().hits, 1);
+        assert_eq!(ws.stats().misses, 1);
+    }
+
+    #[test]
+    fn byte_accounting_balances() {
+        let ws = Workspace::new();
+        let a = ws.take::<u64>(100); // cap rounds to 128 -> 1024 B
+        let s = ws.stats();
+        assert_eq!(s.outstanding_bytes, 1024);
+        assert_eq!(s.resident_bytes, 0);
+        drop(a);
+        let s = ws.stats();
+        assert_eq!(s.outstanding_bytes, 0);
+        assert_eq!(s.resident_bytes, 1024);
+        assert_eq!(s.high_water_bytes, 1024);
+        // Two live guards push the high-water mark up.
+        let _a = ws.take::<u64>(100);
+        let _b = ws.take::<u64>(100);
+        assert_eq!(ws.stats().high_water_bytes, 2048);
+    }
+
+    #[test]
+    fn distinct_types_never_share_buffers() {
+        let ws = Workspace::new();
+        drop(ws.take::<u32>(64));
+        drop(ws.take::<f32>(64)); // same size, different TypeId: miss
+        assert_eq!(ws.stats().misses, 2);
+    }
+
+    #[test]
+    fn workspace_is_send_sync_and_guards_follow_element() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Workspace>();
+        assert_send_sync::<ScratchVec<u32>>();
+        // Concurrent takes from one pool stay consistent.
+        let ws = Workspace::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let ws = &ws;
+                s.spawn(move || {
+                    for _ in 0..100 {
+                        let mut b = ws.take::<u64>(256);
+                        b[0] = 1;
+                    }
+                });
+            }
+        });
+        let st = ws.stats();
+        assert_eq!(st.hits + st.misses, 400);
+        assert_eq!(st.outstanding_bytes, 0);
+    }
+
+    #[test]
+    fn zero_length_takes_work() {
+        let ws = Workspace::new();
+        let a = ws.take::<u32>(0);
+        assert!(a.is_empty());
+        drop(a);
+        assert_eq!(ws.stats().misses, 1);
+        drop(ws.take::<u32>(0));
+        assert_eq!(ws.stats().hits, 1);
+    }
+
+    #[test]
+    fn shelf_indices_bracket_capacity() {
+        assert_eq!(shelf_up(0), 0);
+        assert_eq!(shelf_up(1), 0);
+        assert_eq!(shelf_up(2), 1);
+        assert_eq!(shelf_up(1000), 10);
+        assert_eq!(shelf_down(1), 0);
+        assert_eq!(shelf_down(1024), 10);
+        assert_eq!(shelf_down(1500), 10);
+        for n in [1usize, 2, 3, 100, 1024, 4097] {
+            assert!(1usize << shelf_up(n) >= n);
+            assert!(1usize << shelf_down(n) <= n);
+        }
+    }
+}

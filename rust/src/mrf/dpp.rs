@@ -25,10 +25,18 @@
 //!    convergence windows; **Scatter** labels back.
 //! 7. Per-label parameter statistics via chunked **Reduce**.
 
+//! Allocation discipline — deny(hot-loop-alloc): every `map_iter` is
+//! steady-state allocation-free. Per-iteration tensors are drawn from
+//! the engine's [`Workspace`] (one per engine, and therefore one per
+//! scheduler lane) through the `_into`/`_ws` primitives; allocations
+//! below are annotated `alloc-ok` (once-per-run setup) and checked by
+//! `ci/check_hot_loop_allocs.sh` + `benches/alloc_churn.rs`.
+
 use std::sync::Arc;
 
 use crate::config::MrfConfig;
-use crate::dpp::{self, Device, DeviceExt, IntoDevice};
+use crate::dpp::{self, Device, DeviceExt, IntoDevice, Workspace,
+                 WorkspaceStats};
 
 use super::energy::{self, Params};
 use super::params::{self, Stats};
@@ -64,22 +72,48 @@ pub enum PairMode {
 pub struct DppEngine {
     device: Arc<dyn Device>,
     pub mode: PairMode,
+    /// Scratch pool shared by every run of this engine: per-iteration
+    /// tensors and primitive internals are drawn from it, so steady
+    /// state allocates nothing and — under [`crate::sched`] — each
+    /// optimize lane's engine amortizes buffers across its slices.
+    ws: Workspace,
 }
 
 impl DppEngine {
     /// Engine on any device — accepts a concrete device, an
     /// `Arc<dyn Device>`, or the deprecated `Backend` spelling.
     pub fn new(device: impl IntoDevice) -> Self {
-        DppEngine { device: device.into_device(), mode: PairMode::default() }
+        DppEngine {
+            device: device.into_device(),
+            mode: PairMode::default(),
+            ws: Workspace::new(),
+        }
     }
 
     pub fn with_mode(device: impl IntoDevice, mode: PairMode) -> Self {
-        DppEngine { device: device.into_device(), mode }
+        DppEngine { device: device.into_device(), mode,
+                    ws: Workspace::new() }
     }
 
     /// The device every primitive of this engine executes on.
     pub fn device(&self) -> &Arc<dyn Device> {
         &self.device
+    }
+
+    /// Counters of the engine-held scratch pool — after one warm-up
+    /// iteration the hit rate stays at 100% for the rest of the run
+    /// (pinned by `tests/workspace_reuse.rs`).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dpp::SerialDevice;
+    /// use dpp_pmrf::mrf::dpp::DppEngine;
+    /// let engine = DppEngine::new(SerialDevice);
+    /// assert_eq!(engine.workspace_stats().hits, 0); // nothing run yet
+    /// ```
+    pub fn workspace_stats(&self) -> WorkspaceStats {
+        self.ws.stats()
     }
 }
 
@@ -95,20 +129,25 @@ impl Engine for DppEngine {
     fn run(&self, model: &MrfModel, cfg: &MrfConfig) -> EmResult {
         let nh = model.hoods.num_hoods();
         let bk: &dyn Device = &*self.device;
-        match self.mode {
+        let res = match self.mode {
             PairMode::Paper => {
-                let (mut step, prm) = PaperStep::new(bk, model, cfg);
+                let (mut step, prm) =
+                    PaperStep::new(bk, &self.ws, model, cfg);
                 drive_em(&mut step, nh, prm, cfg)
             }
             PairMode::Planned => {
-                let (mut step, prm) = PlannedStep::new(bk, model, cfg);
+                let (mut step, prm) =
+                    PlannedStep::new(bk, &self.ws, model, cfg);
                 drive_em(&mut step, nh, prm, cfg)
             }
             PairMode::Fused => {
-                let (mut step, prm) = FusedStep::new(bk, model, cfg);
+                let (mut step, prm) =
+                    FusedStep::new(bk, &self.ws, model, cfg);
                 drive_em(&mut step, nh, prm, cfg)
             }
-        }
+        };
+        self.ws.publish_timing();
+        res
     }
 }
 
@@ -139,14 +178,17 @@ fn drive_em(
     mut prm: Params,
     cfg: &MrfConfig,
 ) -> EmResult {
-    let mut hood_energy = vec![0.0f64; nh];
+    let mut hood_energy = vec![0.0f64; nh]; // alloc-ok: once per run
     let mut em_window = ConvergenceWindow::new(cfg.window, cfg.threshold);
     let mut total_map = 0usize;
     let mut em_iters = 0usize;
+    // Hoisted out of the EM loop (reset per iteration) so EM
+    // iterations allocate nothing after the first.
+    let mut hw = HoodWindows::new(nh, cfg.window, cfg.threshold);
 
     for _em in 0..cfg.em_iters {
         em_iters += 1;
-        let mut hw = HoodWindows::new(nh, cfg.window, cfg.threshold);
+        hw.reset();
         for _map in 0..cfg.map_iters {
             total_map += 1;
             step.map_iter(&prm, &mut hood_energy);
@@ -171,15 +213,20 @@ fn drive_em(
         em_iters,
         map_iters: total_map,
         energy: *em_window.history().last().unwrap_or(&0.0),
-        history: em_window.history().to_vec(),
+        history: em_window.history().to_vec(), // alloc-ok: once per run
         params: prm,
     }
 }
 
 /// Paper-literal pipeline built from the generic primitives (one
 /// fork-join and one full sort per iteration — the unfused baseline).
+/// Since ISSUE 5 every per-iteration tensor is drawn from the
+/// engine's [`Workspace`] through the `_into`/`_ws` primitives, so a
+/// steady-state iteration allocates nothing while computing exactly
+/// the values (and float op orders) the allocating spelling did.
 struct PaperStep<'a> {
     bk: &'a dyn Device,
+    ws: &'a Workspace,
     model: &'a MrfModel,
     n: usize,
     // ---- static arrays (built once; Alg. 2 lines 1–5) ----
@@ -187,18 +234,27 @@ struct PaperStep<'a> {
     size_e: Vec<f32>,
     /// Vertex grouping for step 5: keys (grouped by construction).
     vert_keys: Vec<u32>,
+    /// Distinct vertices appearing in hoods (scatter targets of step
+    /// 5) — static, computed once; the old code re-derived it every
+    /// iteration from the equally static `vert_keys`.
+    touched: Vec<u32>,
     labels: Vec<f32>,
     amin: Vec<u8>,
 }
 
 impl<'a> PaperStep<'a> {
-    fn new(bk: &'a dyn Device, model: &'a MrfModel, cfg: &MrfConfig)
-        -> (PaperStep<'a>, Params) {
+    fn new(
+        bk: &'a dyn Device,
+        ws: &'a Workspace,
+        model: &'a MrfModel,
+        cfg: &MrfConfig,
+    ) -> (PaperStep<'a>, Params) {
         let h = &model.hoods;
         let n = h.num_elements();
         let nh = h.num_hoods();
         let nv = model.num_vertices();
 
+        // alloc-ok: once-per-run static arrays (Alg. 2 lines 1–5).
         let y_elem: Vec<f32> = dpp::gather(bk, &model.y, &h.members);
         let size_h: Vec<f32> =
             dpp::map_indexed(bk, nh, |i| h.hood_size(i) as f32);
@@ -206,6 +262,7 @@ impl<'a> PaperStep<'a> {
         let vert_keys: Vec<u32> = dpp::map_indexed(bk, n, |i| {
             h.members[h.vert_elems[i] as usize]
         });
+        let touched = dpp::unique(bk, &vert_keys); // alloc-ok: once
 
         let (prm, labels_u8) =
             params::init_random(nv, cfg.beta as f32, cfg.seed);
@@ -214,13 +271,15 @@ impl<'a> PaperStep<'a> {
         (
             PaperStep {
                 bk,
+                ws,
                 model,
                 n,
                 y_elem,
                 size_e,
                 vert_keys,
+                touched,
                 labels,
-                amin: Vec::new(),
+                amin: vec![0u8; n], // alloc-ok: once per run
             },
             prm,
         )
@@ -230,92 +289,118 @@ impl<'a> PaperStep<'a> {
 impl EmStep for PaperStep<'_> {
     fn map_iter(&mut self, prm: &Params, hood_energy: &mut [f64]) {
         let bk = self.bk;
+        let ws = self.ws;
         let h = &self.model.hoods;
         let n = self.n;
 
         // (1) Gather labels to elements.
-        let lbl_e: Vec<f32> = dpp::gather(bk, &self.labels, &h.members);
+        let mut lbl_e = ws.take_spare::<f32>(n);
+        dpp::gather_into(bk, &self.labels, &h.members, &mut lbl_e);
         // (2) Per-hood label-1 counts; gather back to elements.
-        let (_, ones_h) = dpp::reduce_by_key(
-            bk, &h.hood_id, &lbl_e, 0.0f32, |a, b| a + b,
+        let nh = h.num_hoods();
+        let mut ones_keys = ws.take_spare::<u32>(nh);
+        let mut ones_h = ws.take_spare::<f32>(nh);
+        dpp::reduce_by_key_into(
+            bk, ws, &h.hood_id, &lbl_e[..], 0.0f32, |a, b| a + b,
+            &mut ones_keys, &mut ones_h,
         );
-        let ones_e: Vec<f32> = dpp::gather(bk, &ones_h, &h.hood_id);
+        let mut ones_e = ws.take_spare::<f32>(n);
+        dpp::gather_into(bk, &ones_h[..], &h.hood_id, &mut ones_e);
 
         // (3)+(4) energies and per-instance minima.
-        let (e_min, a_min) = pair_paper(
-            bk, n, &self.y_elem, &lbl_e, &ones_e, &self.size_e, prm,
+        let mut e_min = ws.take_spare::<f32>(n);
+        pair_paper(
+            bk, ws, n, &self.y_elem, &lbl_e[..], &ones_e[..],
+            &self.size_e, prm, &mut e_min, &mut self.amin,
         );
 
         // (5) Per-vertex resolution over the static grouping.
-        let packed: Vec<u64> = dpp::zip_map(
-            bk, &e_min, &a_min,
-            |&e, &a| energy::pack_energy_label(e, a),
+        let mut packed = ws.take_spare::<u64>(n);
+        dpp::zip_map_into(
+            bk, &e_min[..], &self.amin,
+            |&e, &a| energy::pack_energy_label(e, a), &mut packed,
         );
-        let packed_by_vert: Vec<u64> =
-            dpp::gather(bk, &packed, &h.vert_elems);
-        let (_, best) = dpp::reduce_by_key(
-            bk, &self.vert_keys, &packed_by_vert, u64::MAX,
-            |a, b| a.min(b),
+        let mut packed_by_vert = ws.take_spare::<u64>(h.vert_elems.len());
+        dpp::gather_into(bk, &packed[..], &h.vert_elems,
+                         &mut packed_by_vert);
+        let mut best_keys = ws.take_spare::<u32>(self.touched.len());
+        let mut best = ws.take_spare::<u64>(self.touched.len());
+        dpp::reduce_by_key_into(
+            bk, ws, &self.vert_keys, &packed_by_vert[..], u64::MAX,
+            |a, b| a.min(b), &mut best_keys, &mut best,
         );
         // Scatter resolved labels back to the vertex array.
         // (vert_keys is ascending-grouped and covers exactly the
-        // vertices that appear in hoods.)
-        let resolved: Vec<f32> =
-            dpp::map(bk, &best, |&p| energy::unpack_label(p) as f32);
-        let touched = dpp::unique(bk, &self.vert_keys);
-        dpp::scatter(bk, &resolved, &touched, &mut self.labels);
+        // vertices that appear in hoods — self.touched.)
+        let mut resolved = ws.take_spare::<f32>(best.len());
+        dpp::map_into(bk, &best[..],
+                      |&p| energy::unpack_label(p) as f32, &mut resolved);
+        dpp::scatter(bk, &resolved[..], &self.touched, &mut self.labels);
 
         // (6) Per-hood energy sums.
-        let emin_f64: Vec<f64> = dpp::map(bk, &e_min, |&e| e as f64);
-        let (_, he) = dpp::reduce_by_key(
-            bk, &h.hood_id, &emin_f64, 0.0f64, |a, b| a + b,
+        let mut emin_f64 = ws.take_spare::<f64>(n);
+        dpp::map_into(bk, &e_min[..], |&e| e as f64, &mut emin_f64);
+        let mut he_keys = ws.take_spare::<u32>(nh);
+        let mut he = ws.take_spare::<f64>(nh);
+        dpp::reduce_by_key_into(
+            bk, ws, &h.hood_id, &emin_f64[..], 0.0f64, |a, b| a + b,
+            &mut he_keys, &mut he,
         );
         hood_energy.copy_from_slice(&he);
-        self.amin = a_min;
     }
 
     /// (7) Parameter statistics (chunked Reduce in chunk order).
     fn stats(&mut self) -> Stats {
-        stats_reduce(self.bk, &self.amin, &self.y_elem)
+        stats_reduce(self.bk, self.ws, &self.amin, &self.y_elem)
     }
 
     fn take_labels(&mut self) -> Vec<u8> {
-        dpp::map(self.bk, &self.labels, |&l| l as u8)
+        dpp::map(self.bk, &self.labels, |&l| l as u8) // alloc-ok: once
     }
 }
 
 /// Paper-mode pairing: replicated energy Map over 2n, SortByKey by
-/// element id, `ReduceByKey<Min>` (§3.2.2 steps 2–3).
+/// element id, `ReduceByKey<Min>` (§3.2.2 steps 2–3) — all scratch
+/// (including the sort's ping-pong buffers) from the workspace,
+/// results written into `emin`/`amin`.
+#[allow(clippy::too_many_arguments)]
 fn pair_paper(
     bk: &dyn Device,
+    ws: &Workspace,
     n: usize,
     y: &[f32],
     lbl: &[f32],
     ones: &[f32],
     size: &[f32],
     prm: &Params,
-) -> (Vec<f32>, Vec<u8>) {
+    emin: &mut Vec<f32>,
+    amin: &mut Vec<u8>,
+) {
     // Replicated energies: i < n -> label 0 copy; i >= n -> label 1.
     // The oldIndex back-gather is index arithmetic (i % n) — the
     // paper's memory-free Gather.
     let pp = energy::Prepared::from_params(prm);
-    let e_rep: Vec<f32> = dpp::map_indexed(bk, 2 * n, |i| {
+    let mut e_rep = ws.take_spare::<f32>(2 * n);
+    dpp::map_indexed_into(bk, 2 * n, |i| {
         let e = i % n;
         let (e0, e1) =
             energy::energy_pair_p(y[e], lbl[e], ones[e], size[e], &pp);
         if i < n { e0 } else { e1 }
-    });
+    }, &mut e_rep);
     // SortByKey: key = element id, payload = replicated index. The
     // radix sort is stable, so the label-0 copy stays first per key.
-    let mut keys: Vec<u64> =
-        dpp::map_indexed(bk, 2 * n, |i| (i % n) as u64);
-    let mut vals: Vec<u32> = dpp::iota(bk, 2 * n);
-    dpp::sort_by_key(bk, &mut keys, &mut vals);
+    let mut keys = ws.take_spare::<u64>(2 * n);
+    dpp::map_indexed_into(bk, 2 * n, |i| (i % n) as u64, &mut keys);
+    let mut vals = ws.take_spare::<u32>(2 * n);
+    dpp::iota_into(bk, 2 * n, &mut vals);
+    dpp::sort_by_key_ws(bk, ws, &mut keys, &mut vals);
     // ReduceByKey<Min-by-energy>: strict '<' keeps the first (label 0)
     // copy on ties, matching the kernel's tie-break.
     let e_rep_ref = &e_rep;
-    let (_, win) = dpp::reduce_by_key(
-        bk, &keys, &vals, u32::MAX,
+    let mut win_keys = ws.take_spare::<u64>(n);
+    let mut win = ws.take_spare::<u32>(n);
+    dpp::reduce_by_key_into(
+        bk, ws, &keys[..], &vals[..], u32::MAX,
         |a, b| {
             if a == u32::MAX {
                 return b;
@@ -325,11 +410,10 @@ fn pair_paper(
             }
             if e_rep_ref[b as usize] < e_rep_ref[a as usize] { b } else { a }
         },
+        &mut win_keys, &mut win,
     );
-    let emin: Vec<f32> = dpp::map(bk, &win, |&i| e_rep[i as usize]);
-    let amin: Vec<u8> =
-        dpp::map(bk, &win, |&i| u8::from(i as usize >= n));
-    (emin, amin)
+    dpp::map_into(bk, &win[..], |&i| e_rep[i as usize], emin);
+    dpp::map_into(bk, &win[..], |&i| u8::from(i as usize >= n), amin);
 }
 
 /// Plan-cached pipeline mode (see [`PairMode::Planned`]): the
@@ -355,6 +439,7 @@ fn pair_paper(
 /// the order the per-iteration sort would have produced.
 struct PlannedStep<'a> {
     bk: &'a dyn Device,
+    ws: &'a Workspace,
     model: &'a MrfModel,
     n: usize,
     nh: usize,
@@ -365,7 +450,8 @@ struct PlannedStep<'a> {
     vert_plan: crate::dpp::SegmentPlan,
     pair_plan: crate::dpp::SegmentPlan,
     labels: Vec<u8>,
-    // Workspace (allocated once; zero per-iteration allocation).
+    // Persistent iteration tensors (allocated once per run; the
+    // engine's `Workspace` additionally serves the M-step scratch).
     lbl_e: Vec<f32>,
     ones_h: Vec<f32>,
     ones_e: Vec<f32>,
@@ -376,8 +462,12 @@ struct PlannedStep<'a> {
 }
 
 impl<'a> PlannedStep<'a> {
-    fn new(bk: &'a dyn Device, model: &'a MrfModel, cfg: &MrfConfig)
-        -> (PlannedStep<'a>, Params) {
+    fn new(
+        bk: &'a dyn Device,
+        ws: &'a Workspace,
+        model: &'a MrfModel,
+        cfg: &MrfConfig,
+    ) -> (PlannedStep<'a>, Params) {
         use crate::dpp::SegmentPlan;
 
         let h = &model.hoods;
@@ -411,6 +501,7 @@ impl<'a> PlannedStep<'a> {
         (
             PlannedStep {
                 bk,
+                ws,
                 model,
                 n,
                 nh,
@@ -421,13 +512,14 @@ impl<'a> PlannedStep<'a> {
                 vert_plan,
                 pair_plan,
                 labels,
-                lbl_e: vec![0.0f32; n],
-                ones_h: vec![0.0f32; nh],
-                ones_e: vec![0.0f32; n],
-                e_rep: vec![0.0f32; 2 * n],
-                emin: vec![0.0f32; n],
-                amin: vec![0u8; n],
-                packed: vec![0u64; n],
+                // Once-per-run workspace tensors.
+                lbl_e: vec![0.0f32; n],     // alloc-ok: once per run
+                ones_h: vec![0.0f32; nh],   // alloc-ok: once per run
+                ones_e: vec![0.0f32; n],    // alloc-ok: once per run
+                e_rep: vec![0.0f32; 2 * n], // alloc-ok: once per run
+                emin: vec![0.0f32; n],      // alloc-ok: once per run
+                amin: vec![0u8; n],         // alloc-ok: once per run
+                packed: vec![0u64; n],      // alloc-ok: once per run
             },
             prm,
         )
@@ -598,7 +690,7 @@ impl EmStep for PlannedStep<'_> {
     fn stats(&mut self) -> Stats {
         use crate::dpp::timing::timed;
         timed("Reduce", || {
-            stats_reduce(self.bk, &self.amin, &self.y_elem)
+            stats_reduce(self.bk, self.ws, &self.amin, &self.y_elem)
         })
     }
 
@@ -624,6 +716,7 @@ impl EmStep for PlannedStep<'_> {
 /// f32 op order within hoods/vertices).
 struct FusedStep<'a> {
     bk: &'a dyn Device,
+    ws: &'a Workspace,
     model: &'a MrfModel,
     y_elem: Vec<f32>,
     /// Grains in hood/vertex units scaled from the element grain.
@@ -637,8 +730,12 @@ struct FusedStep<'a> {
 }
 
 impl<'a> FusedStep<'a> {
-    fn new(bk: &'a dyn Device, model: &'a MrfModel, cfg: &MrfConfig)
-        -> (FusedStep<'a>, Params) {
+    fn new(
+        bk: &'a dyn Device,
+        ws: &'a Workspace,
+        model: &'a MrfModel,
+        cfg: &MrfConfig,
+    ) -> (FusedStep<'a>, Params) {
         let h = &model.hoods;
         let n = h.num_elements();
         let nh = h.num_hoods();
@@ -657,14 +754,16 @@ impl<'a> FusedStep<'a> {
         (
             FusedStep {
                 bk,
+                ws,
                 model,
                 y_elem,
                 hood_grain,
                 vert_grain,
                 labels,
-                emin: vec![0.0f32; n],
-                amin: vec![0u8; n],
-                ones_h: vec![0.0f32; nh],
+                // Once-per-run workspace tensors.
+                emin: vec![0.0f32; n],    // alloc-ok: once per run
+                amin: vec![0u8; n],       // alloc-ok: once per run
+                ones_h: vec![0.0f32; nh], // alloc-ok: once per run
             },
             prm,
         )
@@ -757,7 +856,7 @@ impl EmStep for FusedStep<'_> {
     fn stats(&mut self) -> Stats {
         use crate::dpp::timing::timed;
         timed("Reduce", || {
-            stats_reduce(self.bk, &self.amin, &self.y_elem)
+            stats_reduce(self.bk, self.ws, &self.amin, &self.y_elem)
         })
     }
 
@@ -767,12 +866,21 @@ impl EmStep for FusedStep<'_> {
 }
 
 /// Per-label (count, sum, sumsq) via per-chunk accumulation merged in
-/// chunk order (deterministic for a fixed backend).
-fn stats_reduce(bk: &dyn Device, amin: &[u8], y: &[f32]) -> Stats {
-    let bounds = bk.chunk_bounds(amin.len());
-    let mut partials = vec![Stats::default(); bounds.len()];
+/// chunk order (deterministic for a fixed backend); chunk bounds and
+/// partials come from the workspace, so the per-EM-iteration M-step
+/// allocates nothing once warm.
+fn stats_reduce(
+    bk: &dyn Device,
+    ws: &Workspace,
+    amin: &[u8],
+    y: &[f32],
+) -> Stats {
+    let mut bounds = ws.take_spare::<(usize, usize)>(16);
+    bk.chunk_bounds_into(amin.len(), &mut bounds);
+    let mut partials = ws.take_filled::<Stats>(bounds.len(),
+                                               Stats::default());
     {
-        let win = crate::dpp::core::SharedSlice::new(&mut partials);
+        let win = crate::dpp::core::SharedSlice::new(&mut partials[..]);
         let bounds_ref = &bounds;
         bk.for_chunk_ids(bounds_ref.len(), |c| {
             let (s, e) = bounds_ref[c];
@@ -784,7 +892,7 @@ fn stats_reduce(bk: &dyn Device, amin: &[u8], y: &[f32]) -> Stats {
         });
     }
     let mut total = Stats::default();
-    for p in &partials {
+    for p in partials.iter() {
         total.merge(p);
     }
     total

@@ -268,6 +268,27 @@ impl HoodWindows {
         }
     }
 
+    /// Forget all recorded history — equivalent to a freshly
+    /// constructed instance with the same shape. Lets the EM driver
+    /// hoist the one ring allocation out of the EM loop and reuse it
+    /// every iteration (the zero-allocation steady state, DESIGN.md
+    /// §10).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::mrf::HoodWindows;
+    /// let mut hw = HoodWindows::new(1, 1, 1e-3);
+    /// hw.push_all(&[5.0]);
+    /// assert!(hw.push_all(&[5.0])); // converged
+    /// hw.reset();
+    /// assert!(!hw.push_all(&[5.0])); // history gone: not converged
+    /// ```
+    pub fn reset(&mut self) {
+        self.ring.fill(0.0);
+        self.iter = 0;
+    }
+
     /// Record this iteration's hood energies; returns true when EVERY
     /// hood satisfies the windowed convergence criterion.
     pub fn push_all(&mut self, energies: &[f64]) -> bool {

@@ -6,18 +6,24 @@
 //! weight order; two components merge when the edge weight is within
 //! each component's internal difference plus a size-scaled tolerance
 //! (`scale / |C|`). A final pass absorbs regions smaller than
-//! `min_region`. Edge ordering builds a [`crate::dpp::SegmentPlan`]
-//! over the weight keys — one DPP radix sort, cached — and both merge
-//! passes walk the plan's [`crate::dpp::SegmentPlan::ordered_indices`]
-//! (sort paid once, served twice), so the oversegmentation is itself a
-//! DPP client, as in the paper.
+//! `min_region`. Edge ordering is one stable DPP radix argsort of the
+//! weight keys; both merge passes walk the cached permutation (sort
+//! paid once, served twice), so the oversegmentation is itself a DPP
+//! client, as in the paper.
+//!
+//! Scratch reuse: [`oversegment_ws`] draws the argsort arrays and the
+//! union-find side tables from a caller-held
+//! [`crate::dpp::Workspace`]. The scheduler's init lanes hold one
+//! workspace per lane ([`crate::sched`]), so a many-slice stack pays
+//! the oversegmentation's buffer allocations once per lane instead of
+//! once per slice (DESIGN.md §10).
 
 mod unionfind;
 
 pub use unionfind::UnionFind;
 
 use crate::config::OversegConfig;
-use crate::dpp::{self, Device};
+use crate::dpp::{self, Device, Workspace};
 use crate::image::ImageSlice;
 
 /// Result of oversegmenting one slice: a compact region labeling plus
@@ -65,8 +71,37 @@ fn build_edges(img: &ImageSlice) -> (Vec<u32>, Vec<u32>, Vec<u8>) {
 /// Oversegment one image slice.
 pub fn oversegment(bk: &dyn Device, img: &ImageSlice, cfg: &OversegConfig)
     -> Overseg {
+    oversegment_ws(bk, &Workspace::new(), img, cfg)
+}
+
+/// [`oversegment`] drawing its scratch (edge-order argsort arrays,
+/// union-find side tables) from a caller-held workspace — bitwise
+/// the same regions; a lane that segments many slices through one
+/// workspace allocates the scratch once instead of per slice.
+///
+/// # Examples
+///
+/// ```
+/// use dpp_pmrf::config::OversegConfig;
+/// use dpp_pmrf::dpp::{SerialDevice, Workspace};
+/// use dpp_pmrf::image::synth;
+/// use dpp_pmrf::overseg::{oversegment, oversegment_ws};
+/// let v = synth::porous_ground_truth(16, 16, 1, 0.4, 7);
+/// let cfg = OversegConfig { scale: 64.0, min_region: 2 };
+/// let ws = Workspace::new();
+/// let a = oversegment_ws(&SerialDevice, &ws, &v.slice(0), &cfg);
+/// let b = oversegment(&SerialDevice, &v.slice(0), &cfg);
+/// assert_eq!(a.labels, b.labels);
+/// ```
+pub fn oversegment_ws(
+    bk: &dyn Device,
+    ws: &Workspace,
+    img: &ImageSlice,
+    cfg: &OversegConfig,
+) -> Overseg {
     let (ea, eb, ew) = build_edges(img);
-    segment_core(bk, img.pixels, &ea, &eb, &ew, img.width, img.height, cfg)
+    segment_core(bk, ws, img.pixels, &ea, &eb, &ew, img.width,
+                 img.height, cfg)
 }
 
 /// Oversegment a full 3D volume directly (the paper's §5 future-work
@@ -105,13 +140,15 @@ pub fn oversegment_3d(bk: &dyn Device, vol: &crate::image::Volume,
             }
         }
     }
-    segment_core(bk, &vol.data, &a, &b, &wt, w, h * d, cfg)
+    segment_core(bk, &Workspace::new(), &vol.data, &a, &b, &wt, w,
+                 h * d, cfg)
 }
 
 /// Shared Felzenszwalb merging core over an explicit edge list.
 #[allow(clippy::too_many_arguments)]
 fn segment_core(
     bk: &dyn Device,
+    ws: &Workspace,
     intensity: &[u8],
     ea: &[u32],
     eb: &[u32],
@@ -121,22 +158,28 @@ fn segment_core(
     cfg: &OversegConfig,
 ) -> Overseg {
     let n = intensity.len();
+    let m = ew.len();
 
-    // Edge ordering: one SegmentPlan over the weight keys caches the
-    // stable radix-sort permutation; both merge passes below replay
-    // it with no further sort (SortByKey paid once, served twice).
-    // The plan's segment detection is unused here (only the order
-    // is walked) — a few extra O(m) init-phase passes, accepted to
-    // keep every cached ordering behind the one plan abstraction.
-    let keys: Vec<u64> = dpp::map(bk, ew, |&w| w as u64);
-    let order_plan = dpp::SegmentPlan::build(bk, &keys);
+    // Edge ordering: one stable radix argsort of the weight keys
+    // through the workspace (SortByKey paid once); both merge passes
+    // below walk the cached permutation with no further sort. A
+    // stable sort with an iota payload yields exactly the order the
+    // old SegmentPlan::ordered_indices produced, minus the plan's
+    // unused segment-detection passes.
+    let mut keys = ws.take_spare::<u64>(m);
+    dpp::map_into(bk, ew, |&w| w as u64, &mut keys);
+    let mut order = ws.take_spare::<u32>(m);
+    dpp::iota_into(bk, m, &mut order);
+    dpp::sort_by_key_ws(bk, ws, &mut keys, &mut order);
 
     // Sequential merging (union-find is inherently sequential; the
     // paper's pipeline also builds the graph once per slice).
     let mut uf = UnionFind::new(n);
-    let mut internal = vec![0.0f64; n]; // max internal edge weight
+    // Max internal edge weight per component root.
+    let mut internal = ws.take::<f64>(n);
     let scale = cfg.scale.max(0.0);
-    for ei in order_plan.ordered_indices() {
+    for &ei in order.iter() {
+        let ei = ei as usize;
         let (pa, pb, w) =
             (ea[ei] as usize, eb[ei] as usize, ew[ei] as f64);
         let ra = uf.find(pa);
@@ -155,7 +198,8 @@ fn segment_core(
     // Absorb small regions into an arbitrary neighbor (ascending edge
     // order keeps this deterministic and edge-contrast-aware).
     if cfg.min_region > 1 {
-        for ei in order_plan.ordered_indices() {
+        for &ei in order.iter() {
+            let ei = ei as usize;
             let ra = uf.find(ea[ei] as usize);
             let rb = uf.find(eb[ei] as usize);
             if ra != rb
@@ -168,7 +212,7 @@ fn segment_core(
     }
 
     // Compact labels 0..R-1 (first-appearance order: deterministic).
-    let mut remap = vec![u32::MAX; n];
+    let mut remap = ws.take_filled::<u32>(n, u32::MAX);
     let mut labels = vec![0u32; n];
     let mut num_regions = 0u32;
     for p in 0..n {
@@ -184,7 +228,7 @@ fn segment_core(
     // the labels would work too, but it is read exactly once here, so
     // its sort could never amortize — the plan layer is for the keys
     // the hot loops reduce over every iteration.)
-    let mut sum = vec![0u64; num_regions as usize];
+    let mut sum = ws.take::<u64>(num_regions as usize);
     let mut size = vec![0u32; num_regions as usize];
     for (p, &l) in labels.iter().enumerate() {
         sum[l as usize] += intensity[p] as u64;
@@ -192,7 +236,7 @@ fn segment_core(
     }
     let mean = sum
         .iter()
-        .zip(&size)
+        .zip(&size[..])
         .map(|(&s, &c)| s as f32 / c.max(1) as f32)
         .collect();
 

@@ -19,11 +19,12 @@
 //!
 //! * **Lanes** — `cfg.sched.lanes` pairs of init/optimize workers.
 //!   Each optimize lane constructs its [`crate::mrf::Engine`] once and
-//!   reuses it for every slice the lane claims. (Today's engines keep
-//!   no cross-run state — plans and workspaces are per-model, and
-//!   models differ per slice — so this buys engine-construction reuse
-//!   and a seam where future engine-level caches, e.g. bucketed
-//!   workspace pools, would automatically amortize per lane.)
+//!   reuses it for every slice the lane claims; since ISSUE 5 the DPP
+//!   and BP engines each hold a bucketed [`crate::dpp::Workspace`],
+//!   so the lane's scratch buffers amortize across its slices, and
+//!   each init worker holds its own workspace for the overseg
+//!   scratch — one pool per lane, never contended across lanes
+//!   (DESIGN.md §10).
 //! * **In-flight cap** — `cfg.sched.inflight` bounds how many
 //!   initialized-but-unoptimized slice models wait between the stages;
 //!   producers block at the cap (bounded memory), and the observed
@@ -64,11 +65,11 @@ use anyhow::Result;
 use crate::config::{EngineKind, RunConfig};
 use crate::coordinator::{RunReport, SliceReport};
 use crate::dpp::{device_descriptor, device_for, device_is_pool_free,
-                 timing, Device, SharedSlice};
+                 timing, Device, SharedSlice, Workspace};
 use crate::image::{Dataset, Volume};
 use crate::metrics::Confusion;
 use crate::mrf::{self, Engine, EngineResources, MrfModel};
-use crate::overseg::{oversegment, Overseg};
+use crate::overseg::{oversegment_ws, Overseg};
 use crate::pool::Pool;
 use crate::util::Timer;
 
@@ -117,14 +118,18 @@ impl SchedStats {
 
 /// Build the per-slice MRF model (the init stage): oversegment, region
 /// graph, maximal cliques, 1-neighborhoods. Shared by the serial path,
-/// the init workers, and [`crate::coordinator::Coordinator`].
+/// the init workers, and [`crate::coordinator::Coordinator`]. The
+/// workspace carries the oversegmentation's scratch — the serial path
+/// holds one per run, the sharded path one per init lane, so a
+/// many-slice stack pays those buffers once per lane, not per slice.
 pub(crate) fn build_slice_model(
     bk: &dyn Device,
+    ws: &Workspace,
     cfg: &RunConfig,
     input: &Volume,
     z: usize,
 ) -> (Overseg, MrfModel) {
-    let seg = oversegment(bk, &input.slice(z), &cfg.overseg);
+    let seg = oversegment_ws(bk, ws, &input.slice(z), &cfg.overseg);
     let model = if cfg.engine == EngineKind::Serial {
         mrf::build_model_serial(&seg)
     } else {
@@ -302,10 +307,12 @@ fn run_serial(
     let mut output = Volume::new(input.width, input.height, input.depth);
     let mut reports = Vec::with_capacity(input.depth);
     let (mut init_total, mut opt_total) = (0.0f64, 0.0f64);
+    // One init-stage workspace for the whole run (cross-slice reuse).
+    let ws = Workspace::new();
 
     for z in 0..input.depth {
         let t_init = Timer::start();
-        let (seg, model) = build_slice_model(&**dev, cfg, input, z);
+        let (seg, model) = build_slice_model(&**dev, &ws, cfg, input, z);
         let init_secs = t_init.elapsed_secs();
         init_total += init_secs;
         if timing::enabled() {
@@ -430,11 +437,15 @@ where
                 let dev = shared_device
                     .clone()
                     .unwrap_or_else(|| worker_device(cfg));
+                // One workspace per init lane: overseg scratch is
+                // paid once per lane, reused for every slice the
+                // lane claims, and never contended across lanes.
+                let ws = Workspace::new();
                 let mut busy = 0.0f64;
                 while let Some(z) = shard.claim(lane) {
                     let t = Timer::start();
                     let (seg, model) =
-                        build_slice_model(&*dev, cfg, input, z);
+                        build_slice_model(&*dev, &ws, cfg, input, z);
                     let secs = t.elapsed_secs();
                     busy += secs;
                     if timing::enabled() {

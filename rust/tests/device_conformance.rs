@@ -20,7 +20,7 @@ use std::sync::Arc;
 
 use dpp_pmrf::dpp::{self, Backend, Device, DeviceKind, IntoDevice,
                     OfflineAcceleratorDevice, Pipeline, PoolDevice,
-                    SegmentPlan, SerialDevice, SharedSlice};
+                    SegmentPlan, SerialDevice, SharedSlice, Workspace};
 use dpp_pmrf::pool::Pool;
 use dpp_pmrf::util::Pcg32;
 
@@ -329,6 +329,71 @@ fn segment_plans_identical_and_reduce_bitwise() {
     for (tag, dev) in devices() {
         let got = plan.reduce_segments(&*dev, &vals, 0.0f32, |a, b| a + b);
         assert_eq!(bits(&got), bits(&want), "{tag} csr seg-reduce");
+    }
+}
+
+#[test]
+fn workspace_paths_match_legacy_allocating_paths_on_every_device() {
+    // ISSUE 5 acceptance: the `_into`/`_ws` spellings are part of the
+    // device contract — on every registered device they must equal
+    // the legacy allocating paths bitwise (and `chunk_bounds_into`
+    // must equal `chunk_bounds`, since every float association order
+    // hangs off it).
+    for n in SIZES {
+        let xs = rand_u32(n, 0x4F0 + n as u64, 1 << 16);
+        let fs = rand_f32(n, 0x4F7 + n as u64);
+        let mut grouped = rand_u32(n, 0x4FA + n as u64, 29);
+        grouped.sort_unstable();
+        for (tag, dev) in devices() {
+            let dev = &*dev;
+            let ws = Workspace::new();
+
+            let mut bounds = Vec::new();
+            dev.chunk_bounds_into(n, &mut bounds);
+            assert_eq!(bounds, dev.chunk_bounds(n), "{tag} bounds n={n}");
+
+            let mut m = Vec::new();
+            dpp::map_into(dev, &fs, |x| x * 2.0 - 0.5, &mut m);
+            assert_eq!(bits(&m),
+                       bits(&dpp::map(dev, &fs, |x| x * 2.0 - 0.5)),
+                       "{tag} map_into n={n}");
+
+            let idx: Vec<u32> = (0..n as u32).rev().collect();
+            let mut g = Vec::new();
+            dpp::gather_into(dev, &fs, &idx, &mut g);
+            assert_eq!(bits(&g), bits(&dpp::gather(dev, &fs, &idx)),
+                       "{tag} gather_into n={n}");
+
+            let mut ex = Vec::new();
+            let total = dpp::scan_exclusive_into(
+                dev, &ws, &xs, 0u32, |a, b| a.wrapping_add(b), &mut ex);
+            let (wex, wtotal) = dpp::scan_exclusive(
+                dev, &xs, 0u32, |a, b| a.wrapping_add(b));
+            assert_eq!((ex, total), (wex, wtotal),
+                       "{tag} scan_into n={n}");
+
+            let (mut rk, mut rv) = (Vec::new(), Vec::new());
+            dpp::reduce_by_key_into(dev, &ws, &grouped, &fs, 0.0f32,
+                                    |a, b| a + b, &mut rk, &mut rv);
+            let (wk, wv) = dpp::reduce_by_key(dev, &grouped, &fs, 0.0f32,
+                                              |a, b| a + b);
+            assert_eq!(rk, wk, "{tag} rbk_into keys n={n}");
+            assert_eq!(bits(&rv), bits(&wv), "{tag} rbk_into vals n={n}");
+
+            let keys: Vec<u64> = xs.iter().map(|&k| k as u64).collect();
+            let vals: Vec<u32> = (0..n as u32).collect();
+            let (mut sk, mut sv) = (keys.clone(), vals.clone());
+            dpp::sort_by_key_ws(dev, &ws, &mut sk, &mut sv);
+            let (mut lk, mut lv) = (keys.clone(), vals);
+            dpp::sort_by_key(dev, &mut lk, &mut lv);
+            assert_eq!((sk, sv), (lk, lv), "{tag} sort_ws n={n}");
+
+            let mut ko = keys.clone();
+            dpp::sort_keys_ws(dev, &ws, &mut ko);
+            let mut lo = keys;
+            dpp::sort_keys(dev, &mut lo);
+            assert_eq!(ko, lo, "{tag} sort_keys_ws n={n}");
+        }
     }
 }
 

@@ -1,0 +1,238 @@
+//! ISSUE 5 acceptance: the workspace layer is a pure perf refactor.
+//!
+//! * Every `_into`/`_ws` primitive produces **bitwise-identical**
+//!   output to its legacy allocating spelling, on every device and
+//!   thread count {1, 2, 4} — warm or cold pool.
+//! * Engine-level determinism: a warm workspace never changes
+//!   results (second run of one engine == first run, bitwise).
+//! * The reuse-hit property: after the first EM iteration warms the
+//!   pool, the engine's workspace hit rate is 100% — further
+//!   iterations (and further same-shape runs) add **zero** misses,
+//!   i.e. the steady state performs no allocations through the pool
+//!   (`benches/alloc_churn.rs` asserts the same via a counting global
+//!   allocator).
+
+use std::sync::Arc;
+
+use dpp_pmrf::config::{MrfConfig, OversegConfig};
+use dpp_pmrf::dpp::{self, Device, PoolDevice, SerialDevice, Workspace};
+use dpp_pmrf::mrf::dpp::{DppEngine, PairMode};
+use dpp_pmrf::mrf::{self, Engine, MrfModel};
+use dpp_pmrf::overseg::{oversegment, oversegment_ws};
+use dpp_pmrf::util::Pcg32;
+
+/// Devices the contract names: serial oracle + pools at 1/2/4 threads
+/// (plus an odd grain so chunk boundaries land mid-everything).
+fn devices() -> Vec<(String, Arc<dyn Device>)> {
+    let mut out: Vec<(String, Arc<dyn Device>)> =
+        vec![("serial".into(), Arc::new(SerialDevice))];
+    for threads in [1, 2, 4] {
+        out.push((
+            format!("pool-t{threads}-g64"),
+            Arc::new(PoolDevice::new(threads, 64)),
+        ));
+    }
+    out.push(("pool-t4-g1021".into(), Arc::new(PoolDevice::new(4, 1021))));
+    out
+}
+
+fn rand_u32(n: usize, seed: u64, modulo: u32) -> Vec<u32> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n).map(|_| (rng.next_u64() as u32) % modulo.max(1)).collect()
+}
+
+fn rand_f32(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n).map(|_| (rng.next_u64() % 10_000) as f32 * 0.37 - 1850.0)
+        .collect()
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+fn small_model(seed: u64) -> MrfModel {
+    let v = dpp_pmrf::image::synth::porous_ground_truth(48, 48, 1, 0.42,
+                                                        seed);
+    let mut input = v.clone();
+    dpp_pmrf::image::noise::additive_gaussian(&mut input, 60.0, seed);
+    let seg = oversegment(
+        &SerialDevice,
+        &input.slice(0),
+        &OversegConfig { scale: 64.0, min_region: 4 },
+    );
+    mrf::build_model_serial(&seg)
+}
+
+#[test]
+fn workspace_primitives_bitwise_match_allocating_paths() {
+    for n in [0usize, 1, 7, 1_000, 10_000] {
+        let xs = rand_u32(n, 0x50 + n as u64, 1 << 20);
+        let fs = rand_f32(n, 0x60 + n as u64);
+        let idx: Vec<u32> = (0..n as u32).rev().collect();
+        let mut grouped = rand_u32(n, 0x70 + n as u64, 37);
+        grouped.sort_unstable();
+        for (tag, dev) in devices() {
+            let dev = &*dev;
+            let ws = Workspace::new();
+            // Two rounds: cold pool, then warm pool — identical both
+            // times.
+            for round in 0..2 {
+                let t = format!("{tag} n={n} round={round}");
+
+                let mut m = Vec::new();
+                dpp::map_into(dev, &fs, |x| x * 1.5 + 0.25, &mut m);
+                assert_eq!(bits(&m),
+                           bits(&dpp::map(dev, &fs, |x| x * 1.5 + 0.25)),
+                           "{t} map");
+
+                let mut g = Vec::new();
+                dpp::gather_into(dev, &fs, &idx, &mut g);
+                assert_eq!(bits(&g), bits(&dpp::gather(dev, &fs, &idx)),
+                           "{t} gather");
+
+                let mut ex = Vec::new();
+                let total = dpp::scan_exclusive_into(
+                    dev, &ws, &xs, 0u32, |a, b| a.wrapping_add(b),
+                    &mut ex);
+                let (wex, wtotal) = dpp::scan_exclusive(
+                    dev, &xs, 0u32, |a, b| a.wrapping_add(b));
+                assert_eq!((ex, total), (wex, wtotal), "{t} scan");
+
+                assert_eq!(
+                    dpp::reduce_ws(dev, &ws, &xs, 0u32,
+                                   |a, b| a.wrapping_add(b)),
+                    dpp::reduce(dev, &xs, 0u32,
+                                |a, b| a.wrapping_add(b)),
+                    "{t} reduce"
+                );
+
+                let mut sel = Vec::new();
+                dpp::select_indices_into(dev, &ws, n, |i| xs[i] % 3 == 0,
+                                         &mut sel);
+                assert_eq!(sel,
+                           dpp::select_indices(dev, n, |i| xs[i] % 3 == 0),
+                           "{t} select");
+
+                let mut uniq = Vec::new();
+                dpp::unique_into(dev, &ws, &grouped, &mut uniq);
+                assert_eq!(uniq, dpp::unique(dev, &grouped), "{t} unique");
+
+                let (mut rk, mut rv) = (Vec::new(), Vec::new());
+                dpp::reduce_by_key_into(dev, &ws, &grouped, &fs, 0.0f32,
+                                        |a, b| a + b, &mut rk, &mut rv);
+                let (wk, wv) = dpp::reduce_by_key(dev, &grouped, &fs,
+                                                  0.0f32, |a, b| a + b);
+                assert_eq!(rk, wk, "{t} rbk keys");
+                assert_eq!(bits(&rv), bits(&wv), "{t} rbk vals (float)");
+
+                let keys64: Vec<u64> =
+                    xs.iter().map(|&k| k as u64).collect();
+                let (mut sk, mut sv) =
+                    (keys64.clone(), idx.clone());
+                dpp::sort_by_key_ws(dev, &ws, &mut sk, &mut sv);
+                let (mut lk, mut lv) = (keys64.clone(), idx.clone());
+                dpp::sort_by_key(dev, &mut lk, &mut lv);
+                assert_eq!((sk, sv), (lk, lv), "{t} sort_by_key");
+
+                let mut ko = keys64.clone();
+                dpp::sort_keys_ws(dev, &ws, &mut ko);
+                let mut lo = keys64;
+                dpp::sort_keys(dev, &mut lo);
+                assert_eq!(ko, lo, "{t} sort_keys");
+            }
+        }
+    }
+}
+
+#[test]
+fn overseg_ws_matches_plain_oversegment_across_slices() {
+    let cfg = OversegConfig { scale: 64.0, min_region: 4 };
+    for (tag, dev) in devices() {
+        let ws = Workspace::new();
+        for seed in 0..3u64 {
+            let v = dpp_pmrf::image::synth::porous_ground_truth(
+                40, 40, 1, 0.42, seed);
+            let a = oversegment_ws(&*dev, &ws, &v.slice(0), &cfg);
+            let b = oversegment(&*dev, &v.slice(0), &cfg);
+            assert_eq!(a.labels, b.labels, "{tag} seed={seed}");
+            assert_eq!(a.mean, b.mean, "{tag} seed={seed}");
+            assert_eq!(a.size, b.size, "{tag} seed={seed}");
+        }
+        // Cross-slice reuse: re-segmenting a slice the pool has seen
+        // adds no misses (same shapes -> pure hits).
+        let v = dpp_pmrf::image::synth::porous_ground_truth(
+            40, 40, 1, 0.42, 2);
+        oversegment_ws(&*dev, &ws, &v.slice(0), &cfg);
+        let warm = ws.stats().misses;
+        oversegment_ws(&*dev, &ws, &v.slice(0), &cfg);
+        assert_eq!(ws.stats().misses, warm, "{tag} overseg steady state");
+    }
+}
+
+#[test]
+fn engine_results_identical_with_warm_and_cold_workspace() {
+    let model = small_model(77);
+    let cfg = MrfConfig { fixed_iters: true, em_iters: 3, map_iters: 3,
+                          ..Default::default() };
+    for (tag, dev) in devices() {
+        for mode in [PairMode::Paper, PairMode::Planned, PairMode::Fused] {
+            let engine = DppEngine::with_mode(Arc::clone(&dev), mode);
+            let cold = engine.run(&model, &cfg); // warms the pool
+            let warm = engine.run(&model, &cfg); // runs entirely warm
+            assert_eq!(cold, warm, "{tag} {mode:?}");
+            // A fresh engine (fresh pool) agrees too.
+            let fresh = DppEngine::with_mode(Arc::clone(&dev), mode)
+                .run(&model, &cfg);
+            assert_eq!(cold, fresh, "{tag} {mode:?} fresh engine");
+        }
+    }
+}
+
+#[test]
+fn paper_mode_hit_rate_is_total_after_first_em_iteration() {
+    let model = small_model(78);
+    let engine = DppEngine::with_mode(SerialDevice, PairMode::Paper);
+    // Warm-up: exactly one EM iteration of one MAP iteration.
+    let warm_cfg = MrfConfig { fixed_iters: true, em_iters: 1,
+                               map_iters: 1, ..Default::default() };
+    engine.run(&model, &warm_cfg);
+    let warm = engine.workspace_stats();
+    assert!(warm.misses > 0, "paper mode draws from the pool");
+    // Steady state: a 4x3-iteration run on the same model adds many
+    // hits and ZERO misses — the 100%-reuse property.
+    let long_cfg = MrfConfig { fixed_iters: true, em_iters: 4,
+                               map_iters: 3, ..Default::default() };
+    engine.run(&model, &long_cfg);
+    let after = engine.workspace_stats();
+    assert_eq!(after.misses, warm.misses,
+               "no allocations after the first EM iteration");
+    assert!(after.hits > warm.hits, "steady state served from the pool");
+    assert_eq!(after.outstanding_bytes, 0,
+               "every guard returned its storage");
+    // The pool's footprint is bounded by what one iteration needs:
+    // once converged, more iterating never moves the high-water mark.
+    engine.run(&model, &long_cfg);
+    let again = engine.workspace_stats();
+    assert_eq!(again.misses, after.misses);
+    assert_eq!(again.high_water_bytes, after.high_water_bytes,
+               "iterating does not grow the pool");
+}
+
+#[test]
+fn bp_engine_workspace_reuses_across_em_iterations() {
+    let model = small_model(79);
+    let engine = dpp_pmrf::bp::BpEngine::new(
+        SerialDevice, dpp_pmrf::bp::BpConfig::default());
+    let warm_cfg = MrfConfig { fixed_iters: true, em_iters: 1,
+                               ..Default::default() };
+    engine.run(&model, &warm_cfg);
+    let warm = engine.workspace_stats();
+    let long_cfg = MrfConfig { fixed_iters: true, em_iters: 4,
+                               ..Default::default() };
+    engine.run(&model, &long_cfg);
+    let after = engine.workspace_stats();
+    assert_eq!(after.misses, warm.misses,
+               "bp steady state allocates nothing through the pool");
+    assert!(after.hits > warm.hits);
+}
