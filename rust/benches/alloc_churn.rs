@@ -13,6 +13,11 @@
 //!   iterations are allocation-free. (Planned mode re-boxes its
 //!   pipeline stages each iteration — a few hundred bytes, reported
 //!   but not asserted; see DESIGN.md §10.)
+//! * disabled telemetry spans are free: the EM/MAP loops now open a
+//!   span per iteration, so a disarmed `telemetry::span` must neither
+//!   allocate nor read the clock (DESIGN.md §11 overhead contract) —
+//!   the engine assertions above would catch a regression too, since
+//!   every warmed run drops thousands of inert span guards.
 //!
 //! Output: a table on stdout and machine-readable `BENCH_5.json` at
 //! the repo root (the perf-trajectory data point).
@@ -174,6 +179,29 @@ fn main() {
         ("legacy_allocs_per_iter", (legacy_calls as usize).into()),
         ("workspace_bytes_per_iter", (ws_bytes as usize).into()),
         ("workspace_allocs_per_iter", (ws_calls as usize).into()),
+    ]));
+
+    // ---- telemetry off: inert spans allocate nothing ----
+    assert!(!dpp_pmrf::telemetry::tracing());
+    let (span_calls, span_bytes) = alloc_delta(|| {
+        for i in 0..1000u64 {
+            let _s = dpp_pmrf::telemetry::span("prim", "Map");
+            let _a = dpp_pmrf::telemetry::span_arg("map", "map_iter",
+                                                   "iter", i);
+            dpp_pmrf::telemetry::name_thread(format_args!("lane-{i}"));
+        }
+    });
+    assert_eq!(
+        (span_calls, span_bytes),
+        (0, 0),
+        "disarmed spans must not allocate"
+    );
+    println!("telemetry off: 1000 span/span_arg/name_thread triples -> \
+              {span_bytes} B in {span_calls} allocs");
+    rows.push(Value::object(vec![
+        ("level", Value::str("telemetry_off")),
+        ("span_bytes_per_1000", (span_bytes as usize).into()),
+        ("span_allocs_per_1000", (span_calls as usize).into()),
     ]));
 
     // ---- engine-level: marginal bytes per extra MAP iteration ----

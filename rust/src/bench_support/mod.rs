@@ -101,6 +101,22 @@ pub fn prepare_models(ds: &Dataset, cfg: &RunConfig)
         .collect()
 }
 
+/// Run `f` under a freshly installed scoped telemetry
+/// [`crate::telemetry::Recorder`] and return its result together with
+/// the metrics captured while it ran. Benches (and tests) get a
+/// per-measurement primitive breakdown without touching the global
+/// registry — no `timing::test_lock()`, no cross-bench interference.
+pub fn with_recorder<R>(
+    f: impl FnOnce() -> R,
+) -> (R, crate::telemetry::MetricsSnapshot) {
+    let rec = crate::telemetry::Recorder::new();
+    let out = {
+        let _scope = rec.install();
+        f()
+    };
+    (out, rec.snapshot())
+}
+
 /// Thread counts for sweep benches: 1, 2, 4, ... up to the machine.
 pub fn thread_sweep() -> Vec<usize> {
     let max = crate::pool::available_threads();

@@ -89,6 +89,10 @@ impl Engine for BpEngine {
         let mut unary = self.ws.take_spare::<f32>(2 * nv);
 
         for _em in 0..cfg.em_iters {
+            // Inert unless a tracer is armed (see telemetry::span).
+            let _em_span = crate::telemetry::span_arg(
+                "em", "em_iter", "iter", em_iters as u64,
+            );
             em_iters += 1;
 
             sweep::unaries_into(bk, model, &prm, &mut unary);

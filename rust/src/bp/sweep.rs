@@ -323,6 +323,12 @@ pub fn run(
     let max_sweeps = cfg.max_sweeps.max(1);
     let mut last = 0.0f32;
     for s in 0..max_sweeps {
+        // Sweep-level trace span (the BP analogue of a MAP iteration);
+        // inert — no clock read, no allocation — unless a tracer is
+        // armed, so the hot loop's zero-alloc contract holds.
+        let _sweep_span = crate::telemetry::span_arg(
+            "map", "bp_sweep", "sweep", s as u64,
+        );
         let stats = sweep(bk, model, g, unary, st, cfg);
         last = stats.max_residual;
         if last < cfg.tol && !fixed {

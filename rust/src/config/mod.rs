@@ -207,6 +207,20 @@ impl Default for SchedConfig {
     }
 }
 
+/// Observability switches (DESIGN.md §11): both default off, so the
+/// hot path stays bitwise-identical and allocation-free unless a run
+/// opts in.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct TelemetryConfig {
+    /// Enable the global metric registry (`--profile`): primitive
+    /// wall-time rows, workspace counters, and the `timing::report`
+    /// table at the end of the run.
+    pub profile: bool,
+    /// Write a Chrome trace-event JSON file of the run's span tree
+    /// (`--trace-out <file>`); `None` disables tracing entirely.
+    pub trace_out: Option<PathBuf>,
+}
+
 /// Everything one run needs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
@@ -217,6 +231,8 @@ pub struct RunConfig {
     pub bp: BpConfig,
     /// Slice-scheduler shape (`--lanes` / `--inflight`).
     pub sched: SchedConfig,
+    /// Observability switches (`--profile` / `--trace-out`).
+    pub telemetry: TelemetryConfig,
     pub engine: EngineKind,
     /// Which [`crate::dpp::Device`] the primitives execute on
     /// (`--device`): `auto` keeps the historical serial-for-one-thread
@@ -235,6 +251,7 @@ impl Default for RunConfig {
             mrf: MrfConfig::default(),
             bp: BpConfig::default(),
             sched: SchedConfig::default(),
+            telemetry: TelemetryConfig::default(),
             engine: EngineKind::Dpp,
             device: DeviceKind::Auto,
             threads: crate::pool::available_threads(),
@@ -314,6 +331,17 @@ impl RunConfig {
             cfg.sched.lanes = get_usize(s, "lanes", cfg.sched.lanes);
             cfg.sched.inflight =
                 get_usize(s, "inflight", cfg.sched.inflight);
+        }
+        if let Some(t) = v.get("telemetry") {
+            cfg.telemetry.profile = t
+                .get("profile")
+                .and_then(Value::as_bool)
+                .unwrap_or(cfg.telemetry.profile);
+            // `"trace_out": null` (and a missing key) both mean off.
+            cfg.telemetry.trace_out = t
+                .get("trace_out")
+                .and_then(Value::as_str)
+                .map(PathBuf::from);
         }
         if let Some(e) = v.get("engine").and_then(Value::as_str) {
             cfg.engine = EngineKind::parse(e)?;
@@ -396,6 +424,13 @@ impl RunConfig {
             ("sched", Value::object(vec![
                 ("lanes", self.sched.lanes.into()),
                 ("inflight", self.sched.inflight.into()),
+            ])),
+            ("telemetry", Value::object(vec![
+                ("profile", self.telemetry.profile.into()),
+                ("trace_out", match &self.telemetry.trace_out {
+                    Some(p) => p.to_string_lossy().as_ref().into(),
+                    None => Value::Null,
+                }),
             ])),
             ("engine", self.engine.name().into()),
             ("device", self.device.name().into()),
@@ -496,6 +531,25 @@ mod tests {
         assert_eq!(cfg.bp.frontier, 0.75);
         // unspecified keys keep defaults
         assert_eq!(cfg.bp.tol, BpConfig::default().tol);
+    }
+
+    #[test]
+    fn telemetry_section_parses_and_round_trips() {
+        let v = json::parse(
+            r#"{"telemetry": {"profile": true, "trace_out": "t.json"}}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert!(cfg.telemetry.profile);
+        assert_eq!(cfg.telemetry.trace_out,
+                   Some(PathBuf::from("t.json")));
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+        // Explicit null and a missing section both mean off.
+        let v = json::parse(r#"{"telemetry": {"trace_out": null}}"#)
+            .unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.telemetry, TelemetryConfig::default());
     }
 
     #[test]

@@ -41,6 +41,12 @@ pub struct SliceReport {
     pub init_secs: f64,
     /// Seconds spent in EM optimization (the paper's reported time).
     pub opt_secs: f64,
+    /// Optimize lane that ran this slice (0 on the serial path).
+    pub lane: usize,
+    /// Seconds this slice sat initialized-but-unclaimed in the slice
+    /// queue before an optimize lane picked it up (0 on the serial
+    /// path, where slices never queue).
+    pub queue_wait_secs: f64,
     pub final_energy: f64,
 }
 
@@ -137,6 +143,45 @@ impl RunReport {
             fields.push(("recall", c.recall().into()));
             fields.push(("accuracy", c.accuracy().into()));
         }
+        // Serving latency (telemetry tentpole): treat each slice as a
+        // job — queue wait + optimize time — and report p50/p90/p99 so
+        // sharded tail latency is visible without a trace file. Always
+        // present: the timestamps feeding it are recorded even with
+        // profiling off.
+        let waits: Vec<f64> =
+            self.slices.iter().map(|s| s.queue_wait_secs).collect();
+        let opts: Vec<f64> =
+            self.slices.iter().map(|s| s.opt_secs).collect();
+        let jobs: Vec<f64> = self
+            .slices
+            .iter()
+            .map(|s| s.queue_wait_secs + s.opt_secs)
+            .collect();
+        fields.push(("job_latency",
+                     crate::telemetry::percentiles(&jobs).to_json()));
+        fields.push(("queue_wait",
+                     crate::telemetry::percentiles(&waits).to_json()));
+        fields.push(("exec",
+                     crate::telemetry::percentiles(&opts).to_json()));
+        // Lane-occupancy timeline: per optimize lane, the (from, to)
+        // run-relative intervals (seconds) it spent executing slices —
+        // enough to reconstruct the utilization picture a trace viewer
+        // would draw, straight from the report JSON.
+        let timeline: Vec<Value> = self
+            .sched
+            .lane_timeline
+            .iter()
+            .map(|lane| {
+                Value::Array(
+                    lane.iter()
+                        .map(|&(from, to)| {
+                            Value::Array(vec![from.into(), to.into()])
+                        })
+                        .collect(),
+                )
+            })
+            .collect();
+        fields.push(("lane_timeline", Value::Array(timeline)));
         // Per-slice detail: iteration counts were collected in
         // SliceReport all along but dropped from the JSON, which made
         // BP-vs-MAP iteration comparisons impossible in bench reports.
@@ -153,6 +198,8 @@ impl RunReport {
                     ("map_iters", s.map_iters.into()),
                     ("init_secs", s.init_secs.into()),
                     ("opt_secs", s.opt_secs.into()),
+                    ("lane", s.lane.into()),
+                    ("queue_wait_secs", s.queue_wait_secs.into()),
                     ("final_energy", s.final_energy.into()),
                 ])
             })
@@ -369,6 +416,8 @@ impl Coordinator {
                 map_iters: res.map_iters,
                 init_secs,
                 opt_secs,
+                lane: 0,
+                queue_wait_secs: 0.0,
                 final_energy: res.energy,
             }],
             confusion,
@@ -502,6 +551,27 @@ mod tests {
         let occ =
             j.get("lane_occupancy").and_then(|v| v.as_f64()).unwrap();
         assert!((0.0..=1.0).contains(&occ));
+        // Serving latency percentiles (telemetry tentpole): always in
+        // the report, profiling on or off.
+        let lat = j.get("job_latency").expect("job_latency object");
+        for q in ["p50", "p90", "p99"] {
+            let v = lat.get(q).and_then(|v| v.as_f64()).unwrap();
+            assert!(v > 0.0, "job_latency.{q} = {v}");
+        }
+        assert!(lat.get("p50").unwrap().as_f64()
+                <= lat.get("p99").unwrap().as_f64());
+        assert!(j.get("queue_wait").and_then(|v| v.get("p50")).is_some());
+        assert!(j.get("exec").and_then(|v| v.get("p99")).is_some());
+        // One timeline per lane; the serial run records every slice's
+        // optimize interval on its single lane.
+        match j.get("lane_timeline") {
+            Some(crate::json::Value::Array(lanes)) => {
+                assert_eq!(lanes.len(), 1, "serial run has one lane");
+                let spans = lanes[0].as_array().unwrap();
+                assert_eq!(spans.len(), report.slices.len());
+            }
+            other => panic!("lane_timeline missing/not array: {other:?}"),
+        }
         // Iteration counts must survive into the JSON, per slice and
         // in total, so engines' inner-loop costs are comparable.
         assert!(j.get("em_iters").and_then(|v| v.as_f64()).unwrap() >= 1.0);

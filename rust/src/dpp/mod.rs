@@ -51,6 +51,15 @@
 //! (SortByKey + ReduceByKey dominating at scale, §4.3.2–4.3.3);
 //! `benches/ablation_fusion.rs` quantifies what the plan + pipeline
 //! layer saves.
+//!
+//! [`timing`] is the global sink of the telemetry layer
+//! ([`crate::telemetry`], DESIGN.md §11): scoped
+//! [`crate::telemetry::Recorder`]s capture the same rows per
+//! engine/lane without the global registry, and an armed
+//! [`crate::telemetry::Tracer`] additionally emits one `prim` span per
+//! timed call into the run's Chrome trace. With every sink off, a
+//! timed call costs two relaxed atomic loads — no clock read, no
+//! allocation.
 
 pub mod core;
 pub mod device;

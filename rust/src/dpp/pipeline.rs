@@ -310,12 +310,21 @@ pub(crate) fn run_stages_region(
         .collect();
     let cursors: Vec<AtomicUsize> =
         stages.iter().map(|_| AtomicUsize::new(0)).collect();
-    let profile = timing::enabled();
+    // `recording()` (not `enabled()`): a scoped telemetry recorder on
+    // the calling thread must capture stage rows too — the records
+    // below happen after the region, on the caller.
+    let profile = timing::recording();
+    let tracing = crate::telemetry::tracing();
     let nanos: Vec<AtomicU64> =
         stages.iter().map(|_| AtomicU64::new(0)).collect();
+    // Stage start offsets from `t_region`, for trace spans. Worker 0
+    // measures; the caller reconstructs the `Instant` afterwards.
+    let starts: Vec<AtomicU64> =
+        stages.iter().map(|_| AtomicU64::new(0)).collect();
+    let t_region = Instant::now();
     pool.region(|w, barrier| {
         for (si, st) in stages.iter().enumerate() {
-            let t0 = if profile && w == 0 {
+            let t0 = if (profile || tracing) && w == 0 {
                 Some(Instant::now())
             } else {
                 None
@@ -334,12 +343,30 @@ pub(crate) fn run_stages_region(
                     t.elapsed().as_nanos() as u64,
                     Ordering::Relaxed,
                 );
+                starts[si].store(
+                    t.duration_since(t_region).as_nanos() as u64,
+                    Ordering::Relaxed,
+                );
             }
         }
     });
     if profile {
         for (si, st) in stages.iter().enumerate() {
             timing::record(st.name, nanos[si].load(Ordering::Relaxed));
+        }
+    }
+    if tracing {
+        for (si, st) in stages.iter().enumerate() {
+            let start = t_region
+                + std::time::Duration::from_nanos(
+                    starts[si].load(Ordering::Relaxed),
+                );
+            crate::telemetry::emit_span(
+                "stage",
+                st.name,
+                start,
+                nanos[si].load(Ordering::Relaxed),
+            );
         }
     }
 }
@@ -469,26 +496,26 @@ mod tests {
 
     #[test]
     fn records_stage_timing_under_primitive_names() {
-        use crate::dpp::timing;
-        // Timing registry is global: serialize with other timing tests.
-        let _guard = timing::test_lock();
-        timing::reset();
-        timing::set_enabled(true);
+        // Scoped recorder instead of the global registry: no
+        // timing::test_lock(), no cross-test interference — the
+        // region records stage rows on the calling thread.
+        let rec = crate::telemetry::Recorder::new();
         let bk = Backend::threaded_with_grain(Pool::new(2), 32);
         let mut out = vec![0u32; 64];
         let w = SharedSlice::new(&mut out);
-        Pipeline::new()
-            .stage("Map", 64, |s, e| {
-                for i in s..e {
-                    unsafe { w.write(i, 1) };
-                }
-            })
-            .stage("ReduceByKey", 64, |_, _| {})
-            .run(&bk);
-        let snap = timing::snapshot();
-        timing::set_enabled(false);
-        timing::reset();
-        assert!(snap.contains_key("Map"));
-        assert!(snap.contains_key("ReduceByKey"));
+        {
+            let _scope = rec.install();
+            Pipeline::new()
+                .stage("Map", 64, |s, e| {
+                    for i in s..e {
+                        unsafe { w.write(i, 1) };
+                    }
+                })
+                .stage("ReduceByKey", 64, |_, _| {})
+                .run(&bk);
+        }
+        let snap = rec.snapshot();
+        assert!(snap.time_rows.contains_key("Map"));
+        assert!(snap.time_rows.contains_key("ReduceByKey"));
     }
 }

@@ -8,6 +8,16 @@
 //!
 //! Disabled by default — the check is a single relaxed atomic load, so
 //! the hot path pays nothing measurable.
+//!
+//! This global registry is the **default sink**, kept for backward
+//! compatibility (the CLI's `--profile` report and legacy tests).
+//! Scoped sinks layer on top: while a
+//! [`crate::telemetry::Recorder`] scope is installed on a thread,
+//! [`record`] routes that thread's rows into it instead — per-lane
+//! attribution with no global lock — and [`timed`] additionally
+//! emits a `"prim"` span when a [`crate::telemetry::Tracer`] is
+//! armed. New tests should install a scoped recorder rather than
+//! `set_enabled` + [`test_lock`].
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -32,6 +42,16 @@ pub fn enabled() -> bool {
     ENABLED.load(Ordering::Relaxed)
 }
 
+/// True when any metric sink would consume a [`record`] call from
+/// this thread: global profiling enabled **or** a scoped
+/// [`crate::telemetry::Recorder`] installed here. Instrumentation
+/// sites that precompute values before recording should gate on this,
+/// not on [`enabled`] alone.
+#[inline]
+pub fn recording() -> bool {
+    enabled() || crate::telemetry::metrics_scope_active()
+}
+
 pub fn reset() {
     REGISTRY.lock().unwrap().clear();
 }
@@ -42,29 +62,47 @@ pub fn snapshot() -> BTreeMap<&'static str, PrimStat> {
 }
 
 /// Record `nanos` against `name` unconditionally (used by the runtime
-/// to report executable dispatch under the same table).
+/// to report executable dispatch under the same table). If the
+/// calling thread has a scoped [`crate::telemetry::Recorder`]
+/// installed, the row lands there and the global registry is
+/// untouched.
 pub fn record(name: &'static str, nanos: u64) {
+    if crate::telemetry::metrics::sink_time(name, nanos) {
+        return;
+    }
     let mut reg = REGISTRY.lock().unwrap();
     let st = reg.entry(name).or_default();
     st.calls += 1;
     st.nanos += nanos;
 }
 
-/// Time `f` under `name` if profiling is enabled.
+/// Time `f` under `name` if any sink is listening ([`recording`]),
+/// and emit a `"prim"` trace span if a tracer is armed — one clock
+/// read serves both. Fully off: two relaxed loads, no clock read.
 #[inline]
 pub fn timed<R>(name: &'static str, f: impl FnOnce() -> R) -> R {
-    if !enabled() {
+    let rec = recording();
+    let trace = crate::telemetry::tracing();
+    if !rec && !trace {
         return f();
     }
     let t = Instant::now();
     let r = f();
-    record(name, t.elapsed().as_nanos() as u64);
+    let nanos = t.elapsed().as_nanos() as u64;
+    if rec {
+        record(name, nanos);
+    }
+    if trace {
+        crate::telemetry::emit_span("prim", name, t, nanos);
+    }
     r
 }
 
-/// Serializes tests that enable the global registry: the registry is
-/// process-wide, so concurrent test threads that both `set_enabled`
-/// would bleed counts into each other. Not part of the public API.
+/// Serializes **legacy** tests that enable the global registry: the
+/// registry is process-wide, so concurrent test threads that both
+/// `set_enabled` would bleed counts into each other. New tests should
+/// install a scoped [`crate::telemetry::Recorder`] instead and skip
+/// this lock entirely. Not part of the public API.
 #[doc(hidden)]
 pub fn test_lock() -> std::sync::MutexGuard<'static, ()> {
     static LOCK: Mutex<()> = Mutex::new(());

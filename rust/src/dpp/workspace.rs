@@ -26,15 +26,19 @@
 //!   lane / engine — sharded runs then never contend
 //!   ([`crate::sched`]).
 //! * Counters — reuse hits, misses, and the high-water byte mark —
-//!   are exported through [`crate::dpp::timing`] when profiling is
-//!   enabled (`Workspace::hit` / `Workspace::miss` rows, byte volume
-//!   in the value column; [`Workspace::publish_timing`] records the
-//!   high-water mark), and are always available via
-//!   [`Workspace::stats`]. Rows under the `Workspace::` prefix are
-//!   counters, not timings: [`crate::dpp::timing::report`] lists them
-//!   separately as bytes and excludes them from the time total, so
-//!   the per-DPP breakdown's share column stays a pure compute-time
-//!   ratio.
+//!   are **first-class telemetry counters**: each take routes its
+//!   byte volume through [`crate::telemetry::counter`]
+//!   (`Workspace::hit` / `Workspace::miss`) and
+//!   [`Workspace::publish_timing`] publishes the high-water and
+//!   resident marks through [`crate::telemetry::gauge_max`]. With a
+//!   scoped [`crate::telemetry::Recorder`] installed they land in its
+//!   counter/gauge tables; with only global profiling enabled they
+//!   fall back to the legacy `dpp::timing` rows, which
+//!   [`crate::dpp::timing::report`] still lists separately as bytes,
+//!   excluded from the time total, so the per-DPP breakdown's share
+//!   column stays a pure compute-time ratio. They are always
+//!   available via [`Workspace::stats`] regardless of telemetry
+//!   state.
 //!
 //! Bitwise identity: a taken buffer is length-set and value-filled
 //! exactly like the `vec![fill; n]` the allocating primitives build,
@@ -304,8 +308,8 @@ impl Workspace {
     pub fn take_spare<T: ScratchElem>(&self, cap: usize) -> ScratchVec<T> {
         let (buf, hit) = self.acquire::<T>(cap);
         let charged = buf.capacity() * std::mem::size_of::<T>();
-        if timing::enabled() {
-            timing::record(
+        if timing::recording() {
+            crate::telemetry::counter(
                 if hit { "Workspace::hit" } else { "Workspace::miss" },
                 charged as u64,
             );
@@ -386,28 +390,35 @@ impl Workspace {
         }
     }
 
-    /// Record the pool's high-water byte mark into the
-    /// [`crate::dpp::timing`] registry (one
-    /// `Workspace::high_water_bytes` row whose "nanos" column carries
-    /// bytes) — engines call this at the end of a profiled run so the
-    /// per-DPP breakdown also shows scratch memory footprint. No-op
-    /// when profiling is disabled.
+    /// Publish the pool's high-water and resident byte marks as
+    /// telemetry gauges (`Workspace::high_water_bytes` /
+    /// `Workspace::resident_bytes`) — engines call this at the end of
+    /// a profiled run so the per-DPP breakdown also shows scratch
+    /// memory footprint. Routed through
+    /// [`crate::telemetry::gauge_max`]: a scoped recorder takes them
+    /// as gauges; plain global profiling gets the legacy byte rows.
+    /// No-op when no telemetry sink is active.
     ///
     /// # Examples
     ///
     /// ```
     /// use dpp_pmrf::dpp::{timing, Workspace};
     /// let ws = Workspace::new();
-    /// ws.publish_timing(); // profiling off: records nothing
+    /// ws.publish_timing(); // telemetry off: records nothing
     /// assert!(timing::snapshot()
     ///     .get("Workspace::high_water_bytes")
     ///     .is_none());
     /// ```
     pub fn publish_timing(&self) {
-        if timing::enabled() {
-            timing::record(
+        if timing::recording() {
+            let s = self.stats();
+            crate::telemetry::gauge_max(
                 "Workspace::high_water_bytes",
-                self.stats().high_water_bytes as u64,
+                s.high_water_bytes as u64,
+            );
+            crate::telemetry::gauge_max(
+                "Workspace::resident_bytes",
+                s.resident_bytes as u64,
             );
         }
     }

@@ -10,7 +10,9 @@
 //! data-parallel loopy belief propagation engine ([`bp`]) with
 //! residual message scheduling. Above the engines, a sharded slice
 //! scheduler and batch serving front end ([`sched`]) turn the
-//! per-slice pipeline into a throughput system.
+//! per-slice pipeline into a throughput system, observed end to end
+//! by the [`telemetry`] layer (scoped metric recorders, span tracing,
+//! latency percentiles).
 //!
 //! See `README.md` for the front door (quickstart + the bench ->
 //! paper-figure map) and `DESIGN.md` for the architecture.
@@ -31,6 +33,7 @@ pub mod overseg;
 pub mod pool;
 pub mod runtime;
 pub mod sched;
+pub mod telemetry;
 pub mod util;
 
 /// Convenient re-exports for examples and benches.
@@ -47,5 +50,7 @@ pub mod prelude {
                          SerialDevice};
     pub use crate::pool::Pool;
     pub use crate::sched::{Job, Service};
+    pub use crate::telemetry::{LatencySummary, MetricsSnapshot, Recorder,
+                               Tracer};
     pub use crate::util::{Pcg32, Timer};
 }

@@ -159,6 +159,13 @@ fn cmd_segment(args: &[String]) -> Result<()> {
         .opt("bp-tol", "bp engine: residual convergence threshold", None)
         .opt("bp-frontier",
              "bp engine: commit messages with residual >= ratio * max",
+             None)
+        .flag("profile",
+              "record primitive wall time + workspace counters and \
+               print the timing table")
+        .opt("trace-out",
+             "write a Chrome trace-event JSON file of the run \
+              (open in Perfetto / chrome://tracing)",
              None);
     let m = spec.parse(args)?;
     let mut cfg = load_cfg(&m)?;
@@ -191,7 +198,24 @@ fn cmd_segment(args: &[String]) -> Result<()> {
     if let Some(f) = m.get_parse::<f32>("bp-frontier")? {
         cfg.bp.frontier = f;
     }
+    if m.flag("profile") {
+        cfg.telemetry.profile = true;
+    }
+    if let Some(p) = m.get("trace-out") {
+        cfg.telemetry.trace_out = Some(PathBuf::from(p));
+    }
     cfg.validate()?;
+
+    // Arm telemetry before the run so init-phase spans are captured;
+    // both default off, keeping the hot path bitwise-identical.
+    if cfg.telemetry.profile {
+        dpp_pmrf::dpp::timing::set_enabled(true);
+    }
+    let tracer = cfg
+        .telemetry
+        .trace_out
+        .as_ref()
+        .map(|_| dpp_pmrf::telemetry::Tracer::start());
 
     let ds = load_or_generate(&m, &cfg)?;
     let coord = Coordinator::new(cfg.clone())?;
@@ -200,6 +224,17 @@ fn cmd_segment(args: &[String]) -> Result<()> {
               cfg.engine.name(), cfg.device.name(), cfg.threads,
               cfg.sched.lanes, cfg.sched.inflight);
     let report = coord.run(&ds)?;
+
+    if let (Some(tracer), Some(path)) =
+        (tracer, cfg.telemetry.trace_out.as_ref()) {
+        let trace = tracer.finish();
+        std::fs::write(path, trace.to_chrome_json().to_pretty())?;
+        log_info!("wrote trace ({} events) to {}", trace.num_events(),
+                  path.display());
+    }
+    if cfg.telemetry.profile {
+        println!("{}", dpp_pmrf::dpp::timing::report());
+    }
 
     log_info!(
         "mean per-slice: init {:.3}s, optimization {:.3}s",

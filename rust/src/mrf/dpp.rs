@@ -187,9 +187,17 @@ fn drive_em(
     let mut hw = HoodWindows::new(nh, cfg.window, cfg.threshold);
 
     for _em in 0..cfg.em_iters {
+        // Inert (no clock read, no allocation) unless a tracer is
+        // armed — the telemetry-off MAP loop stays zero-alloc.
+        let _em_span = crate::telemetry::span_arg(
+            "em", "em_iter", "iter", em_iters as u64,
+        );
         em_iters += 1;
         hw.reset();
         for _map in 0..cfg.map_iters {
+            let _map_span = crate::telemetry::span_arg(
+                "map", "map_iter", "iter", total_map as u64,
+            );
             total_map += 1;
             step.map_iter(&prm, &mut hood_energy);
             let done = hw.push_all(&hood_energy);
@@ -1000,37 +1008,27 @@ mod tests {
 
     #[test]
     fn planned_mode_sorts_once_per_run() {
-        use crate::dpp::timing;
         let model = small_model(27);
         let cfg = cfg_fixed(); // 4 EM x 3 MAP iterations
-        let _guard = timing::test_lock();
         // The pairing keys are sorted exactly once at plan build — not
-        // once per MAP iteration (12 here) as in Paper mode. The
-        // registry is process-global and tests in other modules may
-        // record sorts concurrently while profiling is enabled
-        // (test_lock only serializes the tests that take it) — but
-        // interference can only INFLATE the count, so the minimum
-        // over a few attempts is a sound upper bound on the engine's
-        // own sorts.
-        let mut min_sorts = u64::MAX;
-        let mut snap = timing::snapshot();
-        for _attempt in 0..3 {
-            timing::reset();
-            timing::set_enabled(true);
+        // once per MAP iteration (12 here) as in Paper mode. A scoped
+        // recorder captures exactly this thread's rows (the serial
+        // engine records on the calling thread), so no test_lock, no
+        // retry loop, no cross-test interference.
+        let rec = crate::telemetry::Recorder::new();
+        {
+            let _scope = rec.install();
             DppEngine::with_mode(Backend::Serial, PairMode::Planned)
                 .run(&model, &cfg);
-            snap = timing::snapshot();
-            timing::set_enabled(false);
-            min_sorts = min_sorts.min(snap["SortByKey"].calls);
-            if min_sorts == 1 {
-                break;
-            }
         }
-        timing::reset();
-        assert_eq!(min_sorts, 1, "sort amortized to one per run");
-        assert!(snap.contains_key("ReduceByKey"));
-        assert!(snap.contains_key("Gather"));
-        assert!(snap.contains_key("Map"));
+        let snap = rec.snapshot();
+        assert_eq!(
+            snap.time_rows["SortByKey"].calls, 1,
+            "sort amortized to one per run"
+        );
+        assert!(snap.time_rows.contains_key("ReduceByKey"));
+        assert!(snap.time_rows.contains_key("Gather"));
+        assert!(snap.time_rows.contains_key("Map"));
     }
 
     #[test]
@@ -1044,21 +1042,30 @@ mod tests {
 
     #[test]
     fn per_dpp_timing_records_sort_in_paper_mode() {
-        use crate::dpp::timing;
         let model = small_model(25);
         let cfg = cfg_fixed();
-        let _guard = timing::test_lock();
-        timing::reset();
-        timing::set_enabled(true);
-        DppEngine::with_mode(Backend::Serial, PairMode::Paper)
-            .run(&model, &cfg);
-        let snap = timing::snapshot();
-        timing::set_enabled(false);
-        timing::reset();
-        assert!(snap.contains_key("SortByKey"));
-        assert!(snap.contains_key("ReduceByKey"));
-        assert!(snap.contains_key("Map"));
-        assert!(snap.contains_key("Gather"));
-        assert!(snap.contains_key("Scatter"));
+        // Scoped recorder: no global registry, no test_lock.
+        let rec = crate::telemetry::Recorder::new();
+        {
+            let _scope = rec.install();
+            DppEngine::with_mode(Backend::Serial, PairMode::Paper)
+                .run(&model, &cfg);
+        }
+        let snap = rec.snapshot();
+        assert!(snap.time_rows.contains_key("SortByKey"));
+        assert!(snap.time_rows.contains_key("ReduceByKey"));
+        assert!(snap.time_rows.contains_key("Map"));
+        assert!(snap.time_rows.contains_key("Gather"));
+        assert!(snap.time_rows.contains_key("Scatter"));
+        // The Workspace counters migrated to first-class telemetry
+        // counters land in the same snapshot, outside the time rows.
+        assert!(snap.counters.contains_key("Workspace::miss"));
+        assert!(snap.gauges.contains_key("Workspace::high_water_bytes"));
+        assert_eq!(
+            snap.time_rows.keys().filter(|k| k.starts_with("Workspace::"))
+                .count(),
+            0,
+            "counters no longer pollute time rows"
+        );
     }
 }

@@ -45,9 +45,19 @@
 //! deterministically-ordered [`RunReport`]s back, with backpressure
 //! via a bounded in-flight job cap (`service.rs`). Stage and job times
 //! flow into [`crate::dpp::timing`] under `Sched::init`, `Sched::opt`,
-//! and `Service::job` when profiling is enabled;
+//! and `Service::job` when any metric sink is listening;
 //! `benches/throughput.rs` sweeps lanes × engines and reports
 //! slices/sec.
+//!
+//! Telemetry (DESIGN.md §11): every slice records its queue wait and
+//! execute time in its [`SliceReport`] (`p50/p90/p99` surface in
+//! `RunReport::to_json`), each optimize lane contributes a busy-
+//! interval timeline to [`SchedStats::lane_timeline`], and with a
+//! [`crate::telemetry::Tracer`] armed the workers emit `run → slice`
+//! spans on threads named `init-lane-N` / `opt-lane-N` — the per-lane
+//! attribution in the exported Chrome trace. [`Service`] additionally
+//! keeps always-on per-job latency histograms
+//! ([`service::ServiceLatency`]).
 
 pub mod queue;
 pub mod service;
@@ -91,10 +101,16 @@ pub struct SchedStats {
     pub init_busy_secs: Vec<f64>,
     /// Seconds each optimize lane spent inside EM runs.
     pub lane_busy_secs: Vec<f64>,
+    /// Per-lane busy intervals `(start, end)` in seconds since run
+    /// start — the lane-occupancy timeline `RunReport::to_json`
+    /// exports (one entry per optimized slice, in the order the lane
+    /// executed them).
+    pub lane_timeline: Vec<Vec<(f64, f64)>>,
 }
 
 impl SchedStats {
-    /// Stats for the single-lane serial path.
+    /// Stats for the single-lane serial path (no per-interval
+    /// timeline; [`run_slices`]' own serial loop records one).
     pub fn serial(init_secs: f64, opt_secs: f64) -> SchedStats {
         SchedStats {
             lanes: 1,
@@ -102,6 +118,7 @@ impl SchedStats {
             peak_inflight: 0,
             init_busy_secs: vec![init_secs],
             lane_busy_secs: vec![opt_secs],
+            lane_timeline: vec![Vec::new()],
         }
     }
 
@@ -278,6 +295,11 @@ struct InitJob {
     seg: Overseg,
     model: MrfModel,
     init_secs: f64,
+    /// When the init worker enqueued this job — the consuming lane
+    /// derives queue wait from it. Always stamped (one `Instant::now`
+    /// per slice, exempt from the zero-alloc contract like the stage
+    /// timers around it).
+    queued_at: std::time::Instant,
 }
 
 /// Poison guard: if a stage worker unwinds, close the hand-off queue
@@ -303,27 +325,43 @@ fn run_serial(
     engine: Box<dyn Engine>,
 ) -> Result<RunReport> {
     let input = &dataset.input;
+    // Root of the span hierarchy: run -> slice -> EM iter -> MAP iter
+    // -> primitive/stage. Inert unless a tracer is armed.
+    let _run_span = crate::telemetry::span("run", "run");
     let t_total = Timer::start();
     let mut output = Volume::new(input.width, input.height, input.depth);
     let mut reports = Vec::with_capacity(input.depth);
     let (mut init_total, mut opt_total) = (0.0f64, 0.0f64);
+    let mut timeline: Vec<(f64, f64)> = Vec::new();
     // One init-stage workspace for the whole run (cross-slice reuse).
     let ws = Workspace::new();
 
     for z in 0..input.depth {
         let t_init = Timer::start();
-        let (seg, model) = build_slice_model(&**dev, &ws, cfg, input, z);
+        let (seg, model) = {
+            let _s = crate::telemetry::span_arg(
+                "slice", "init", "z", z as u64,
+            );
+            build_slice_model(&**dev, &ws, cfg, input, z)
+        };
         let init_secs = t_init.elapsed_secs();
         init_total += init_secs;
-        if timing::enabled() {
+        if timing::recording() {
             timing::record("Sched::init", t_init.elapsed().as_nanos() as u64);
         }
 
+        let opt_from = t_total.elapsed_secs();
         let t_opt = Timer::start();
-        let res = engine.run(&model, &cfg.mrf);
+        let res = {
+            let _s = crate::telemetry::span_arg(
+                "slice", "opt", "z", z as u64,
+            );
+            engine.run(&model, &cfg.mrf)
+        };
         let opt_secs = t_opt.elapsed_secs();
         opt_total += opt_secs;
-        if timing::enabled() {
+        timeline.push((opt_from, t_total.elapsed_secs()));
+        if timing::recording() {
             timing::record("Sched::opt", t_opt.elapsed().as_nanos() as u64);
         }
 
@@ -331,12 +369,16 @@ fn run_serial(
 
         reports.push(SliceReport {
             z,
+            lane: 0,
             regions: seg.num_regions,
             hoods: model.hoods.num_hoods(),
             elements: model.hoods.num_elements(),
             em_iters: res.em_iters,
             map_iters: res.map_iters,
             init_secs,
+            // The serial loop optimizes each slice as soon as it is
+            // built: nothing ever waits in a hand-off queue.
+            queue_wait_secs: 0.0,
             opt_secs,
             final_energy: res.energy,
         });
@@ -357,7 +399,10 @@ fn run_serial(
         reports,
         dataset,
         t_total.elapsed_secs(),
-        SchedStats::serial(init_total, opt_total),
+        SchedStats {
+            lane_timeline: vec![timeline],
+            ..SchedStats::serial(init_total, opt_total)
+        },
     ))
 }
 
@@ -375,6 +420,9 @@ where
     let input = &dataset.input;
     let depth = input.depth;
     let slice_len = input.slice_len();
+    // Root span: closes after the lanes join, so every slice/iter/
+    // primitive span nests inside it. Inert unless a tracer is armed.
+    let _run_span = crate::telemetry::span("run", "run");
     let t_total = Timer::start();
 
     if cfg.threads > 1 {
@@ -426,7 +474,7 @@ where
     let mut output = Volume::new(input.width, input.height, depth);
     let out_win = SharedSlice::new(&mut output.data);
 
-    let (init_busy, lane_busy) = std::thread::scope(|s| {
+    let (init_busy, opt_lanes) = std::thread::scope(|s| {
         let mut init_handles = Vec::with_capacity(lanes);
         let mut opt_handles = Vec::with_capacity(lanes);
         for lane in 0..lanes {
@@ -434,6 +482,9 @@ where
             let shared_device = &shared_device;
             init_handles.push(s.spawn(move || {
                 let _poison = PoisonOnPanic(queue);
+                crate::telemetry::name_thread(
+                    format_args!("init-lane-{lane}"),
+                );
                 let dev = shared_device
                     .clone()
                     .unwrap_or_else(|| worker_device(cfg));
@@ -444,11 +495,15 @@ where
                 let mut busy = 0.0f64;
                 while let Some(z) = shard.claim(lane) {
                     let t = Timer::start();
-                    let (seg, model) =
-                        build_slice_model(&*dev, &ws, cfg, input, z);
+                    let (seg, model) = {
+                        let _s = crate::telemetry::span_arg(
+                            "slice", "init", "z", z as u64,
+                        );
+                        build_slice_model(&*dev, &ws, cfg, input, z)
+                    };
                     let secs = t.elapsed_secs();
                     busy += secs;
-                    if timing::enabled() {
+                    if timing::recording() {
                         timing::record("Sched::init",
                                        t.elapsed().as_nanos() as u64);
                     }
@@ -456,8 +511,13 @@ where
                         "init lane {lane}: slice {z}, {} regions, {:.3}s",
                         seg.num_regions, secs
                     );
-                    let queued = queue
-                        .push(InitJob { z, seg, model, init_secs: secs });
+                    let queued = queue.push(InitJob {
+                        z,
+                        seg,
+                        model,
+                        init_secs: secs,
+                        queued_at: std::time::Instant::now(),
+                    });
                     if !queued {
                         break; // consumer side poisoned the queue
                     }
@@ -471,22 +531,39 @@ where
         for lane in 0..lanes {
             let (queue, reports, out_win) = (&queue, &reports, &out_win);
             let shared_device = &shared_device;
+            let t_total = &t_total;
             opt_handles.push(s.spawn(move || {
                 let _poison = PoisonOnPanic(queue);
+                crate::telemetry::name_thread(
+                    format_args!("opt-lane-{lane}"),
+                );
                 let dev = shared_device
                     .clone()
                     .unwrap_or_else(|| worker_device(cfg));
                 let engine = factory(lane, &dev);
                 let mut busy = 0.0f64;
+                let mut timeline: Vec<(f64, f64)> = Vec::new();
                 // Paint scratch, reused across the lane's slices
                 // (paint_pixels overwrites every pixel).
                 let mut px = vec![0u8; slice_len];
                 while let Some(job) = queue.pop() {
+                    // Queue wait = enqueue to dequeue, the serving
+                    // half of the job's latency (the other half is
+                    // opt_secs below).
+                    let wait_secs =
+                        job.queued_at.elapsed().as_secs_f64();
+                    let from = t_total.elapsed_secs();
                     let t = Timer::start();
-                    let res = engine.run(&job.model, &cfg.mrf);
+                    let res = {
+                        let _s = crate::telemetry::span_arg(
+                            "slice", "opt", "z", job.z as u64,
+                        );
+                        engine.run(&job.model, &cfg.mrf)
+                    };
                     let secs = t.elapsed_secs();
                     busy += secs;
-                    if timing::enabled() {
+                    timeline.push((from, t_total.elapsed_secs()));
+                    if timing::recording() {
                         timing::record("Sched::opt",
                                        t.elapsed().as_nanos() as u64);
                     }
@@ -507,17 +584,19 @@ where
                     );
                     reports.lock().unwrap()[job.z] = Some(SliceReport {
                         z: job.z,
+                        lane,
                         regions: job.seg.num_regions,
                         hoods: job.model.hoods.num_hoods(),
                         elements: job.model.hoods.num_elements(),
                         em_iters: res.em_iters,
                         map_iters: res.map_iters,
                         init_secs: job.init_secs,
+                        queue_wait_secs: wait_secs,
                         opt_secs: secs,
                         final_energy: res.energy,
                     });
                 }
-                busy
+                (busy, timeline)
             }));
         }
         (
@@ -528,9 +607,11 @@ where
             opt_handles
                 .into_iter()
                 .map(|h| h.join().expect("optimize lane panicked"))
-                .collect::<Vec<f64>>(),
+                .collect::<Vec<(f64, Vec<(f64, f64)>)>>(),
         )
     });
+    let (lane_busy, lane_timeline): (Vec<f64>, Vec<Vec<(f64, f64)>>) =
+        opt_lanes.into_iter().unzip();
 
     let slices: Vec<SliceReport> = reports
         .into_inner()
@@ -556,6 +637,7 @@ where
             peak_inflight: queue.peak(),
             init_busy_secs: init_busy,
             lane_busy_secs: lane_busy,
+            lane_timeline,
         },
     ))
 }

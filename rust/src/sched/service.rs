@@ -13,11 +13,20 @@
 //! returns reports in **submission order** regardless of completion
 //! order — the determinism contract callers script against. Per-job
 //! wall clock is recorded under `Service::job` in
-//! [`crate::dpp::timing`] when profiling is enabled.
+//! [`crate::dpp::timing`] when a metric sink is listening.
+//!
+//! Independent of profiling, the service **always** measures each
+//! job's queue wait (submit → dequeue) and execute time (dequeue →
+//! finish): two `Instant::now` calls per job, explicitly exempt from
+//! the zero-alloc contract (DESIGN.md §11 — serving jobs are seconds
+//! long; two clock reads are noise). Per-job numbers ride back on the
+//! ticket ([`Ticket::wait_stats`]); service-lifetime aggregates live
+//! in log2 histograms, summarized by [`Service::latency`].
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use anyhow::Result;
 
@@ -25,6 +34,7 @@ use crate::config::RunConfig;
 use crate::coordinator::{Coordinator, RunReport};
 use crate::dpp::timing;
 use crate::image::Dataset;
+use crate::telemetry::{LatencySummary, Log2Histogram};
 use crate::util::Timer;
 
 /// One unit of serving work: segment `dataset` under `cfg`.
@@ -33,9 +43,19 @@ pub struct Job {
     pub cfg: RunConfig,
 }
 
+/// Per-job serving latency, measured for **every** job — profiling
+/// on or off (see the module docs for the zero-alloc exemption).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JobStats {
+    /// Submit → dequeue: time spent waiting for a worker.
+    pub queue_wait_secs: f64,
+    /// Dequeue → finish: time inside the coordinator run.
+    pub exec_secs: f64,
+}
+
 /// Completion slot one job's result is published through.
 struct Slot {
-    cell: Mutex<Option<Result<RunReport>>>,
+    cell: Mutex<Option<(Result<RunReport>, JobStats)>>,
     done: Condvar,
 }
 
@@ -48,6 +68,12 @@ pub struct Ticket {
 impl Ticket {
     /// Block until the job completes and take its result.
     pub fn wait(self) -> Result<RunReport> {
+        self.wait_stats().0
+    }
+
+    /// [`Ticket::wait`] plus the job's serving latency (recorded even
+    /// for failed jobs — a panicked run still waited and executed).
+    pub fn wait_stats(self) -> (Result<RunReport>, JobStats) {
         let mut cell = self.slot.cell.lock().unwrap();
         loop {
             if let Some(res) = cell.take() {
@@ -61,6 +87,27 @@ impl Ticket {
 struct Queued {
     job: Job,
     slot: Arc<Slot>,
+    /// Stamped at submit; the worker derives queue wait from it.
+    submitted: Instant,
+}
+
+/// Service-lifetime latency aggregates (nanosecond histograms).
+#[derive(Debug, Default)]
+struct LatencyAgg {
+    wait: Log2Histogram,
+    exec: Log2Histogram,
+}
+
+/// Snapshot of the service's job-latency distributions
+/// ([`Service::latency`]); percentiles are in seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServiceLatency {
+    /// Jobs completed (success or failure) since the service started.
+    pub jobs: u64,
+    /// Queue-wait percentiles (submit → dequeue), seconds.
+    pub wait: LatencySummary,
+    /// Execute percentiles (dequeue → finish), seconds.
+    pub exec: LatencySummary,
 }
 
 struct ServiceState {
@@ -77,6 +124,9 @@ struct Shared {
     /// Submitters wait here for in-flight capacity.
     space: Condvar,
     inflight_cap: usize,
+    /// Always-on per-job latency aggregates (locked once per job
+    /// completion — uncontended next to a seconds-long run).
+    latency: Mutex<LatencyAgg>,
 }
 
 /// Multi-job segmentation service (see module docs).
@@ -99,13 +149,14 @@ impl Service {
             jobs: Condvar::new(),
             space: Condvar::new(),
             inflight_cap: inflight_cap.max(1),
+            latency: Mutex::new(LatencyAgg::default()),
         });
         let workers = (0..workers.max(1))
             .map(|w| {
                 let sh = Arc::clone(&shared);
                 std::thread::Builder::new()
                     .name(format!("sched-serve-{w}"))
-                    .spawn(move || worker_loop(&sh))
+                    .spawn(move || worker_loop(&sh, w))
                     .expect("spawn service worker")
             })
             .collect();
@@ -114,6 +165,18 @@ impl Service {
 
     pub fn inflight_cap(&self) -> usize {
         self.shared.inflight_cap
+    }
+
+    /// p50/p90/p99 of queue wait and execute time over every job this
+    /// service has completed, in seconds. Available with telemetry
+    /// off — the underlying timestamps are always recorded.
+    pub fn latency(&self) -> ServiceLatency {
+        let agg = self.shared.latency.lock().unwrap();
+        ServiceLatency {
+            jobs: agg.exec.total(),
+            wait: agg.wait.summary().scaled(1e9),
+            exec: agg.exec.summary().scaled(1e9),
+        }
     }
 
     /// Submit one job, blocking while `inflight_cap` jobs are already
@@ -128,7 +191,14 @@ impl Service {
             st = self.shared.space.wait(st).unwrap();
         }
         st.inflight += 1;
-        st.queue.push_back(Queued { job, slot: Arc::clone(&slot) });
+        st.queue.push_back(Queued {
+            job,
+            slot: Arc::clone(&slot),
+            // Stamped after backpressure admission: queue wait
+            // measures time in OUR queue, not time blocked at the cap
+            // (the submitter observes that directly).
+            submitted: Instant::now(),
+        });
         drop(st);
         self.shared.jobs.notify_one();
         Ticket { slot }
@@ -158,7 +228,7 @@ impl Drop for Service {
     }
 }
 
-fn worker_loop(shared: &Shared) {
+fn worker_loop(shared: &Shared, w: usize) {
     loop {
         let queued = {
             let mut st = shared.state.lock().unwrap();
@@ -172,21 +242,41 @@ fn worker_loop(shared: &Shared) {
                 st = shared.jobs.wait(st).unwrap();
             }
         };
+        // The two always-on clock reads of the per-job timing bugfix:
+        // `started` closes the queue-wait interval, `elapsed` below
+        // closes the execute interval. Exempt from the zero-alloc
+        // contract (module docs).
+        let started = Instant::now();
+        let wait = started.duration_since(queued.submitted);
         let t = Timer::start();
         // Contain panics to the job: an unwinding run would otherwise
         // leave the ticket's condvar waiting forever and leak one unit
         // of in-flight capacity — per-job failures must never be fatal
         // to the service.
-        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-            || run_job(&queued.job),
-        ))
-        .unwrap_or_else(|p| Err(anyhow::anyhow!(
-            "job panicked: {}", panic_message(p.as_ref())
-        )));
-        if timing::enabled() {
-            timing::record("Service::job", t.elapsed().as_nanos() as u64);
+        let res = {
+            let _span = crate::telemetry::span("job", "Service::job");
+            crate::telemetry::name_thread(format_args!("serve-{w}"));
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || run_job(&queued.job),
+            ))
+            .unwrap_or_else(|p| Err(anyhow::anyhow!(
+                "job panicked: {}", panic_message(p.as_ref())
+            )))
+        };
+        let exec = t.elapsed();
+        if timing::recording() {
+            timing::record("Service::job", exec.as_nanos() as u64);
         }
-        *queued.slot.cell.lock().unwrap() = Some(res);
+        let stats = JobStats {
+            queue_wait_secs: wait.as_secs_f64(),
+            exec_secs: exec.as_secs_f64(),
+        };
+        {
+            let mut agg = shared.latency.lock().unwrap();
+            agg.wait.record(wait.as_nanos() as u64);
+            agg.exec.record(exec.as_nanos() as u64);
+        }
+        *queued.slot.cell.lock().unwrap() = Some((res, stats));
         queued.slot.done.notify_all();
         {
             let mut st = shared.state.lock().unwrap();
@@ -261,6 +351,26 @@ mod tests {
             service.run_batch(vec![job(1, 1), job(2, 1), job(3, 1)]);
         assert_eq!(reports.len(), 3);
         assert!(reports.iter().all(|r| r.is_ok()));
+    }
+
+    #[test]
+    fn service_records_job_latency_without_profiling() {
+        // The bugfix under test: per-job timing exists even with every
+        // telemetry sink off (no profiling, no tracer, no recorder).
+        let service = Service::new(1, 2);
+        let tickets: Vec<Ticket> =
+            (0..3).map(|i| service.submit(job(40 + i, 1))).collect();
+        for t in tickets {
+            let (res, stats) = t.wait_stats();
+            assert!(res.is_ok());
+            assert!(stats.exec_secs > 0.0, "job executed for nonzero time");
+            assert!(stats.queue_wait_secs >= 0.0);
+        }
+        let lat = service.latency();
+        assert_eq!(lat.jobs, 3);
+        assert!(lat.exec.p50 > 0.0, "exec p50 {:?}", lat.exec);
+        assert!(lat.exec.p50 <= lat.exec.p99);
+        assert!(lat.wait.p50 >= 0.0);
     }
 
     #[test]

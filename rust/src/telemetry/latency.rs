@@ -1,0 +1,248 @@
+//! Latency aggregation: log2-bucketed histograms for unbounded
+//! streams (serving jobs) and exact percentiles for small sample sets
+//! (per-slice reports).
+//!
+//! The histogram is fixed-size — 65 buckets, one per power of two of
+//! a `u64` nanosecond value — so recording never allocates and the
+//! serving layer can aggregate per-job latency forever without
+//! growing. Quantiles interpolate linearly inside the winning bucket,
+//! which bounds the relative error by 2x; for the per-slice case,
+//! where every sample is already in memory, [`percentiles`] sorts and
+//! reads exact ranks instead.
+
+use crate::json::Value;
+
+/// Number of buckets: one per possible `leading_zeros` outcome of a
+/// `u64`, plus a dedicated zero bucket.
+const BUCKETS: usize = 65;
+
+/// Fixed-size log2-bucketed histogram over `u64` samples
+/// (conventionally nanoseconds). Bucket 0 holds exact zeros; bucket
+/// `b >= 1` holds values in `[2^(b-1), 2^b - 1]`.
+#[derive(Debug, Clone)]
+pub struct Log2Histogram {
+    counts: [u64; BUCKETS],
+    total: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Log2Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Log2Histogram {
+    pub const fn new() -> Log2Histogram {
+        Log2Histogram {
+            counts: [0; BUCKETS],
+            total: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    fn bucket(v: u64) -> usize {
+        (64 - v.leading_zeros()) as usize
+    }
+
+    /// Record one sample. No allocation, O(1).
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket(v)] += 1;
+        self.total += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Fold `other` into `self`.
+    pub fn merge(&mut self, other: &Log2Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// Approximate quantile `q` in `[0, 1]`: nearest-rank bucket walk
+    /// with linear interpolation across the bucket's value range. The
+    /// result is clamped to the observed `[min, max]`, so degenerate
+    /// histograms (one sample) return that sample exactly.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= target {
+                let (lo, hi) = if b == 0 {
+                    (0.0, 0.0)
+                } else {
+                    (2f64.powi(b as i32 - 1), 2f64.powi(b as i32))
+                };
+                let frac = (target - seen) as f64 / c as f64;
+                let est = lo + frac * (hi - lo);
+                return est.clamp(self.min as f64, self.max as f64);
+            }
+            seen += c;
+        }
+        self.max as f64
+    }
+
+    /// p50/p90/p99 in the recorded unit.
+    pub fn summary(&self) -> LatencySummary {
+        LatencySummary {
+            p50: self.quantile(0.50),
+            p90: self.quantile(0.90),
+            p99: self.quantile(0.99),
+        }
+    }
+}
+
+/// The three serving percentiles every report surfaces. Unit follows
+/// whatever was recorded (seconds for report JSON, nanoseconds inside
+/// [`Log2Histogram`]).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct LatencySummary {
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl LatencySummary {
+    /// Divide all three percentiles by `d` (e.g. 1e9 for ns -> s).
+    pub fn scaled(self, d: f64) -> LatencySummary {
+        LatencySummary {
+            p50: self.p50 / d,
+            p90: self.p90 / d,
+            p99: self.p99 / d,
+        }
+    }
+
+    pub fn to_json(self) -> Value {
+        Value::object(vec![
+            ("p50", self.p50.into()),
+            ("p90", self.p90.into()),
+            ("p99", self.p99.into()),
+        ])
+    }
+}
+
+/// Exact nearest-rank percentiles over an in-memory sample set (the
+/// per-slice path — a run has few enough slices to sort). Empty input
+/// yields all-zero percentiles.
+pub fn percentiles(samples: &[f64]) -> LatencySummary {
+    if samples.is_empty() {
+        return LatencySummary::default();
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = |q: f64| -> f64 {
+        let n = s.len() as f64;
+        let idx = ((q * n).ceil() as usize).max(1) - 1;
+        s[idx.min(s.len() - 1)]
+    };
+    LatencySummary { p50: rank(0.50), p90: rank(0.90), p99: rank(0.99) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_track_exact_ranks_within_a_bucket_factor() {
+        let mut h = Log2Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.total(), 1000);
+        let p50 = h.quantile(0.5);
+        assert!(p50 >= 250.0 && p50 <= 1000.0, "p50 = {p50}");
+        let p99 = h.quantile(0.99);
+        assert!(p99 >= 500.0 && p99 <= 1024.0, "p99 = {p99}");
+        assert!(h.quantile(1.0) <= h.quantile(1.0).max(1000.0));
+    }
+
+    #[test]
+    fn histogram_single_sample_is_exact() {
+        let mut h = Log2Histogram::new();
+        h.record(777);
+        assert_eq!(h.quantile(0.5), 777.0);
+        assert_eq!(h.quantile(0.99), 777.0);
+        assert_eq!(h.mean(), 777.0);
+    }
+
+    #[test]
+    fn histogram_empty_and_zero() {
+        let h = Log2Histogram::new();
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        let mut h = Log2Histogram::new();
+        h.record(0);
+        assert_eq!(h.quantile(0.9), 0.0);
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let mut a = Log2Histogram::new();
+        let mut b = Log2Histogram::new();
+        let mut both = Log2Histogram::new();
+        for v in [1u64, 5, 9, 100, 1000] {
+            a.record(v);
+            both.record(v);
+        }
+        for v in [2u64, 8, 64, 5000] {
+            b.record(v);
+            both.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.total(), both.total());
+        assert_eq!(a.quantile(0.5), both.quantile(0.5));
+        assert_eq!(a.mean(), both.mean());
+    }
+
+    #[test]
+    fn exact_percentiles_nearest_rank() {
+        let s: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        let p = percentiles(&s);
+        assert_eq!(p.p50, 50.0);
+        assert_eq!(p.p90, 90.0);
+        assert_eq!(p.p99, 99.0);
+        assert_eq!(percentiles(&[]).p50, 0.0);
+        let one = percentiles(&[3.5]);
+        assert_eq!((one.p50, one.p90, one.p99), (3.5, 3.5, 3.5));
+    }
+
+    #[test]
+    fn summary_scales_and_serializes() {
+        let mut h = Log2Histogram::new();
+        h.record(2_000_000_000);
+        let s = h.summary().scaled(1e9);
+        assert_eq!(s.p50, 2.0);
+        let j = s.to_json();
+        assert_eq!(j.get("p50").and_then(Value::as_f64), Some(2.0));
+        assert!(j.get("p99").is_some());
+    }
+}

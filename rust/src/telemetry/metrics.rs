@@ -1,0 +1,307 @@
+//! Scoped metric recorders: per-engine / per-lane registries that
+//! replace reaching for the global [`crate::dpp::timing`] map.
+//!
+//! A [`Recorder`] is a cheap `Arc`-shared bundle of metric tables
+//! (wall-time rows, counters, gauges, log2 histograms). Installing it
+//! with [`Recorder::install`] pushes it onto a **thread-local** sink
+//! stack: every `timing::record` / [`crate::telemetry::counter`] call
+//! made on that thread while the returned [`RecorderScope`] guard is
+//! alive lands in the recorder instead of the global registry. Lanes
+//! install their own recorder, record with a plain uncontended mutex
+//! (never the global lock), and the driver merges snapshots into one
+//! run-level [`MetricsSnapshot`] afterwards.
+//!
+//! Overhead contract: when no scope is installed anywhere in the
+//! process, the sink check is a single relaxed atomic load — the
+//! telemetry-off hot path stays allocation-free and branch-predictable
+//! (asserted by `benches/alloc_churn.rs`).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::Log2Histogram;
+
+/// One wall-time row: same shape as `timing::PrimStat`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TimeRow {
+    pub calls: u64,
+    pub nanos: u64,
+}
+
+impl TimeRow {
+    pub fn secs(&self) -> f64 {
+        self.nanos as f64 / 1e9
+    }
+}
+
+/// Point-in-time copy of a recorder's tables; merge several (one per
+/// lane) into a run-level view with [`MetricsSnapshot::merge`].
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    /// Wall-time rows keyed by primitive name (`"SortByKey"`, ...).
+    pub time_rows: BTreeMap<&'static str, TimeRow>,
+    /// Monotonic counters (e.g. `"Workspace::hit"` bytes served).
+    pub counters: BTreeMap<&'static str, u64>,
+    /// Gauges with max-merge semantics (e.g. high-water bytes).
+    pub gauges: BTreeMap<&'static str, u64>,
+    /// Log2-bucketed sample distributions.
+    pub hists: BTreeMap<&'static str, Log2Histogram>,
+}
+
+impl MetricsSnapshot {
+    /// Fold `other` into `self`: time rows and counters add, gauges
+    /// take the max, histograms merge bucket-wise.
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        for (name, row) in &other.time_rows {
+            let e = self.time_rows.entry(name).or_default();
+            e.calls += row.calls;
+            e.nanos += row.nanos;
+        }
+        for (name, v) in &other.counters {
+            *self.counters.entry(name).or_insert(0) += v;
+        }
+        for (name, v) in &other.gauges {
+            let e = self.gauges.entry(name).or_insert(0);
+            *e = (*e).max(*v);
+        }
+        for (name, h) in &other.hists {
+            self.hists.entry(name).or_insert_with(Log2Histogram::new)
+                .merge(h);
+        }
+    }
+
+    /// Sum of all time-row nanos (counters and gauges excluded — they
+    /// are not time).
+    pub fn total_nanos(&self) -> u64 {
+        self.time_rows.values().map(|r| r.nanos).sum()
+    }
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    time_rows: Mutex<BTreeMap<&'static str, TimeRow>>,
+    counters: Mutex<BTreeMap<&'static str, u64>>,
+    gauges: Mutex<BTreeMap<&'static str, u64>>,
+    hists: Mutex<BTreeMap<&'static str, Log2Histogram>>,
+}
+
+/// Scoped metric registry (see module docs). Clones share storage, so
+/// a lane can keep a handle while the driver holds another.
+#[derive(Debug, Clone, Default)]
+pub struct Recorder {
+    inner: Arc<Inner>,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    /// Add one wall-time observation to `name`'s row.
+    pub fn record_time(&self, name: &'static str, nanos: u64) {
+        let mut rows = self.inner.time_rows.lock().unwrap();
+        let e = rows.entry(name).or_default();
+        e.calls += 1;
+        e.nanos += nanos;
+    }
+
+    /// Bump counter `name` by `delta`.
+    pub fn add_counter(&self, name: &'static str, delta: u64) {
+        *self.inner.counters.lock().unwrap().entry(name).or_insert(0) +=
+            delta;
+    }
+
+    /// Raise gauge `name` to at least `value` (max semantics — gauges
+    /// here track high-water marks).
+    pub fn gauge_max(&self, name: &'static str, value: u64) {
+        let mut g = self.inner.gauges.lock().unwrap();
+        let e = g.entry(name).or_insert(0);
+        *e = (*e).max(value);
+    }
+
+    /// Record one sample into histogram `name`.
+    pub fn record_hist(&self, name: &'static str, value: u64) {
+        self.inner.hists.lock().unwrap()
+            .entry(name).or_insert_with(Log2Histogram::new)
+            .record(value);
+    }
+
+    /// Copy the current tables out.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            time_rows: self.inner.time_rows.lock().unwrap().clone(),
+            counters: self.inner.counters.lock().unwrap().clone(),
+            gauges: self.inner.gauges.lock().unwrap().clone(),
+            hists: self.inner.hists.lock().unwrap().clone(),
+        }
+    }
+
+    /// Install this recorder as the metric sink for the **current
+    /// thread** until the returned guard drops. Scopes nest; the
+    /// innermost wins. The guard is `!Send` — it must drop on the
+    /// thread that created it.
+    #[must_use = "metrics only route here while the scope guard lives"]
+    pub fn install(&self) -> RecorderScope {
+        SCOPES_LIVE.fetch_add(1, Ordering::Relaxed);
+        STACK.with(|s| s.borrow_mut().push(self.clone()));
+        RecorderScope { _not_send: PhantomData }
+    }
+}
+
+/// RAII guard from [`Recorder::install`]; pops the thread's sink
+/// stack on drop.
+pub struct RecorderScope {
+    _not_send: PhantomData<*const ()>,
+}
+
+impl Drop for RecorderScope {
+    fn drop(&mut self) {
+        STACK.with(|s| {
+            s.borrow_mut().pop();
+        });
+        SCOPES_LIVE.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Process-wide count of live scopes: the fast-path filter that keeps
+/// the telemetry-off cost to one relaxed load before any TLS access.
+static SCOPES_LIVE: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static STACK: RefCell<Vec<Recorder>> = const { RefCell::new(Vec::new()) };
+}
+
+/// True when a recorder scope is installed on **this** thread.
+#[inline]
+pub fn scope_active() -> bool {
+    SCOPES_LIVE.load(Ordering::Relaxed) > 0
+        && STACK.with(|s| !s.borrow().is_empty())
+}
+
+/// Offer a time row to the innermost scoped recorder. Returns `true`
+/// if consumed (callers then skip the global registry).
+#[inline]
+pub(crate) fn sink_time(name: &'static str, nanos: u64) -> bool {
+    if SCOPES_LIVE.load(Ordering::Relaxed) == 0 {
+        return false;
+    }
+    STACK.with(|s| {
+        let st = s.borrow();
+        match st.last() {
+            Some(r) => {
+                r.record_time(name, nanos);
+                true
+            }
+            None => false,
+        }
+    })
+}
+
+/// Offer a counter bump to the innermost scoped recorder.
+#[inline]
+pub(crate) fn sink_counter(name: &'static str, delta: u64) -> bool {
+    if SCOPES_LIVE.load(Ordering::Relaxed) == 0 {
+        return false;
+    }
+    STACK.with(|s| {
+        let st = s.borrow();
+        match st.last() {
+            Some(r) => {
+                r.add_counter(name, delta);
+                true
+            }
+            None => false,
+        }
+    })
+}
+
+/// Offer a gauge max-update to the innermost scoped recorder.
+#[inline]
+pub(crate) fn sink_gauge(name: &'static str, value: u64) -> bool {
+    if SCOPES_LIVE.load(Ordering::Relaxed) == 0 {
+        return false;
+    }
+    STACK.with(|s| {
+        let st = s.borrow();
+        match st.last() {
+            Some(r) => {
+                r.gauge_max(name, value);
+                true
+            }
+            None => false,
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpp::timing;
+
+    #[test]
+    fn scoped_recorder_captures_without_global_registry() {
+        let rec = Recorder::new();
+        {
+            let _scope = rec.install();
+            assert!(scope_active());
+            timing::record("Map", 1_000);
+            timing::record("Map", 2_000);
+            timing::timed("Gather", || std::hint::black_box(7));
+        }
+        assert!(!scope_active());
+        let snap = rec.snapshot();
+        assert_eq!(snap.time_rows["Map"], TimeRow { calls: 2, nanos: 3_000 });
+        assert_eq!(snap.time_rows["Gather"].calls, 1);
+        assert_eq!(snap.total_nanos(), 3_000 + snap.time_rows["Gather"].nanos);
+    }
+
+    #[test]
+    fn scopes_nest_innermost_wins() {
+        let outer = Recorder::new();
+        let inner = Recorder::new();
+        let _o = outer.install();
+        {
+            let _i = inner.install();
+            timing::record("Scan", 5);
+        }
+        timing::record("Scan", 7);
+        assert_eq!(inner.snapshot().time_rows["Scan"].nanos, 5);
+        assert_eq!(outer.snapshot().time_rows["Scan"].nanos, 7);
+    }
+
+    #[test]
+    fn counters_gauges_hists_and_merge() {
+        let a = Recorder::new();
+        a.add_counter("Workspace::hit", 100);
+        a.add_counter("Workspace::hit", 50);
+        a.gauge_max("Workspace::high_water_bytes", 10);
+        a.gauge_max("Workspace::high_water_bytes", 4);
+        a.record_hist("wait", 8);
+        let b = Recorder::new();
+        b.add_counter("Workspace::hit", 1);
+        b.gauge_max("Workspace::high_water_bytes", 99);
+        b.record_hist("wait", 32);
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+        assert_eq!(merged.counters["Workspace::hit"], 151);
+        assert_eq!(merged.gauges["Workspace::high_water_bytes"], 99);
+        assert_eq!(merged.hists["wait"].total(), 2);
+        assert_eq!(merged.total_nanos(), 0, "non-time metrics are not time");
+    }
+
+    #[test]
+    fn sink_is_per_thread() {
+        let rec = Recorder::new();
+        let _scope = rec.install();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                assert!(!scope_active(), "scope must not leak across threads");
+            });
+        });
+        timing::record("Reduce", 9);
+        assert_eq!(rec.snapshot().time_rows["Reduce"].calls, 1);
+    }
+}

@@ -1,0 +1,78 @@
+//! Unified telemetry: scoped metric recorders, hierarchical span
+//! tracing, and latency histograms (DESIGN.md §11).
+//!
+//! Three pillars, all off by default and all routed through the same
+//! cheap gates so the disabled hot path stays bitwise-identical and
+//! allocation-free:
+//!
+//! - **[`Recorder`]** — per-engine / per-lane metric registries
+//!   (wall-time rows, counters, gauges, log2 histograms). Install one
+//!   on a thread and every `timing::record` / [`counter`] call there
+//!   lands in it instead of the global `dpp::timing` map; merge lane
+//!   snapshots with [`MetricsSnapshot::merge`]. The global registry
+//!   remains the default sink for backward compatibility.
+//! - **[`span`] / [`Tracer`]** — RAII spans (run → slice → EM iter →
+//!   MAP iter → primitive/stage) recorded into per-thread buffers and
+//!   exported as Chrome trace-event JSON via `--trace-out` (load in
+//!   Perfetto).
+//! - **[`Log2Histogram`] / [`percentiles`]** — the p50/p90/p99 job
+//!   latency numbers `sched::Service` and `RunReport::to_json`
+//!   surface.
+//!
+//! ```
+//! use dpp_pmrf::telemetry::Recorder;
+//! let rec = Recorder::new();
+//! {
+//!     let _scope = rec.install();
+//!     dpp_pmrf::dpp::timing::timed("Map", || ());
+//! }
+//! assert_eq!(rec.snapshot().time_rows["Map"].calls, 1);
+//! ```
+
+pub mod latency;
+pub mod metrics;
+pub mod span;
+
+pub use latency::{percentiles, LatencySummary, Log2Histogram};
+pub use metrics::{MetricsSnapshot, Recorder, RecorderScope, TimeRow};
+pub use span::{
+    emit_span, name_thread, span, span_arg, tracing, Span, Trace, Tracer,
+};
+
+#[doc(hidden)]
+pub use span::trace_test_lock;
+
+/// True when a scoped recorder is installed on this thread (fast
+/// path: one relaxed atomic load when none is installed anywhere).
+#[inline]
+pub fn metrics_scope_active() -> bool {
+    metrics::scope_active()
+}
+
+/// Bump counter `name` by `delta` (bytes, hits...). Routing order:
+/// the thread's scoped recorder if one is installed; otherwise, when
+/// global profiling is enabled, a legacy `dpp::timing` counter row
+/// (value accumulated in the nanos column, calls = bump count) so
+/// `timing::report` keeps rendering it outside the time total;
+/// otherwise nothing.
+#[inline]
+pub fn counter(name: &'static str, delta: u64) {
+    if metrics::sink_counter(name, delta) {
+        return;
+    }
+    if crate::dpp::timing::enabled() {
+        crate::dpp::timing::record(name, delta);
+    }
+}
+
+/// Raise gauge `name` to at least `value` (high-water marks). Same
+/// routing as [`counter`].
+#[inline]
+pub fn gauge_max(name: &'static str, value: u64) {
+    if metrics::sink_gauge(name, value) {
+        return;
+    }
+    if crate::dpp::timing::enabled() {
+        crate::dpp::timing::record(name, value);
+    }
+}

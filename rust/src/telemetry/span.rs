@@ -1,0 +1,394 @@
+//! Hierarchical span tracing with Chrome trace-event export.
+//!
+//! [`Tracer::start`] arms a process-global tracer; while armed,
+//! [`span`] returns a cheap RAII guard that records `(name, category,
+//! start, duration)` on drop into a **per-thread** event buffer — the
+//! hot path never touches a shared lock, so lanes trace independently
+//! and the run nests cleanly: run → slice → EM iter → MAP iter →
+//! primitive / pipeline stage.
+//!
+//! While the tracer is off, `span` is two relaxed atomic loads and
+//! returns an inert guard: no clock read, no allocation — the
+//! telemetry-off path stays bitwise-identical and zero-alloc
+//! (asserted by `benches/alloc_churn.rs`).
+//!
+//! [`Tracer::finish`] disarms the tracer and drains every thread's
+//! buffer into a [`Trace`], exported as Chrome trace-event JSON
+//! (`{"traceEvents": [...]}` with `"ph": "X"` complete events and
+//! `"ph": "M"` thread-name metadata) — load the file in Perfetto or
+//! `chrome://tracing`.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
+
+use crate::json::Value;
+
+/// One completed span, recorded at guard drop.
+#[derive(Debug, Clone)]
+pub struct SpanEvent {
+    pub name: &'static str,
+    pub cat: &'static str,
+    pub start: Instant,
+    pub dur_nanos: u64,
+    /// Optional single integer argument (slice z, iteration index...).
+    pub arg: Option<(&'static str, u64)>,
+}
+
+/// Per-thread event buffer. Only its owning thread pushes, so the
+/// mutexes are uncontended until [`Tracer::finish`] drains them.
+#[derive(Debug)]
+struct ThreadBuf {
+    tid: u64,
+    label: Mutex<Option<String>>,
+    events: Mutex<Vec<SpanEvent>>,
+}
+
+#[derive(Debug)]
+struct TracerShared {
+    epoch: u64,
+    t0: Instant,
+    bufs: Mutex<Vec<Arc<ThreadBuf>>>,
+    next_tid: AtomicU64,
+}
+
+/// Fast-path switch: checked (relaxed) before any other tracing work.
+static TRACING: AtomicBool = AtomicBool::new(false);
+/// Bumped per [`Tracer::start`]; thread-local buffer caches carry the
+/// epoch they registered under and re-register when it moves on.
+static EPOCH: AtomicU64 = AtomicU64::new(0);
+static CURRENT: Mutex<Option<Arc<TracerShared>>> = Mutex::new(None);
+
+thread_local! {
+    static TBUF: RefCell<Option<(u64, Arc<ThreadBuf>)>> =
+        const { RefCell::new(None) };
+}
+
+/// True while a tracer is armed.
+#[inline]
+pub fn tracing() -> bool {
+    TRACING.load(Ordering::Relaxed)
+}
+
+/// Armed tracing session; [`Tracer::finish`] yields the [`Trace`].
+/// One session at a time: starting a second one while the first is
+/// armed replaces it (the first then finishes empty-handed).
+#[must_use = "finish() the tracer to export the trace"]
+pub struct Tracer {
+    shared: Arc<TracerShared>,
+}
+
+impl Tracer {
+    /// Arm the process-global tracer.
+    pub fn start() -> Tracer {
+        let epoch = EPOCH.fetch_add(1, Ordering::AcqRel) + 1;
+        let shared = Arc::new(TracerShared {
+            epoch,
+            t0: Instant::now(),
+            bufs: Mutex::new(Vec::new()),
+            next_tid: AtomicU64::new(1),
+        });
+        *CURRENT.lock().unwrap() = Some(Arc::clone(&shared));
+        TRACING.store(true, Ordering::Release);
+        Tracer { shared }
+    }
+
+    /// Disarm and drain all thread buffers into a [`Trace`].
+    pub fn finish(self) -> Trace {
+        {
+            let mut cur = CURRENT.lock().unwrap();
+            if cur.as_ref().is_some_and(|c| Arc::ptr_eq(c, &self.shared)) {
+                *cur = None;
+                TRACING.store(false, Ordering::Release);
+            }
+        }
+        let bufs = std::mem::take(&mut *self.shared.bufs.lock().unwrap());
+        let mut threads: Vec<ThreadTrace> = bufs
+            .iter()
+            .map(|b| ThreadTrace {
+                tid: b.tid,
+                label: b.label.lock().unwrap().clone(),
+                events: std::mem::take(&mut *b.events.lock().unwrap()),
+            })
+            .collect();
+        threads.sort_by_key(|t| t.tid);
+        Trace { t0: self.shared.t0, threads }
+    }
+}
+
+/// One thread's worth of drained trace data.
+#[derive(Debug)]
+pub struct ThreadTrace {
+    pub tid: u64,
+    pub label: Option<String>,
+    pub events: Vec<SpanEvent>,
+}
+
+/// Drained trace, ready for export.
+#[derive(Debug)]
+pub struct Trace {
+    t0: Instant,
+    pub threads: Vec<ThreadTrace>,
+}
+
+impl Trace {
+    pub fn num_events(&self) -> usize {
+        self.threads.iter().map(|t| t.events.len()).sum()
+    }
+
+    /// Chrome trace-event JSON (object form). Timestamps are
+    /// microseconds relative to [`Tracer::start`].
+    pub fn to_chrome_json(&self) -> Value {
+        let mut events = Vec::new();
+        for th in &self.threads {
+            let tid = th.tid as usize;
+            if let Some(lbl) = &th.label {
+                events.push(Value::object(vec![
+                    ("name", "thread_name".into()),
+                    ("ph", "M".into()),
+                    ("pid", 1usize.into()),
+                    ("tid", tid.into()),
+                    ("args",
+                     Value::object(vec![("name", lbl.as_str().into())])),
+                ]));
+            }
+            for ev in &th.events {
+                let ts =
+                    ev.start.saturating_duration_since(self.t0).as_nanos()
+                        as f64
+                        / 1e3;
+                let mut fields = vec![
+                    ("name", ev.name.into()),
+                    ("cat", ev.cat.into()),
+                    ("ph", "X".into()),
+                    ("ts", ts.into()),
+                    ("dur", (ev.dur_nanos as f64 / 1e3).into()),
+                    ("pid", 1usize.into()),
+                    ("tid", tid.into()),
+                ];
+                if let Some((k, v)) = ev.arg {
+                    fields.push((
+                        "args",
+                        Value::object(vec![(k, (v as f64).into())]),
+                    ));
+                }
+                events.push(Value::object(fields));
+            }
+        }
+        Value::object(vec![("traceEvents", Value::Array(events))])
+    }
+}
+
+/// RAII span guard; inert (`None`) while tracing is off.
+pub struct Span(Option<SpanStart>);
+
+struct SpanStart {
+    cat: &'static str,
+    name: &'static str,
+    arg: Option<(&'static str, u64)>,
+    start: Instant,
+}
+
+/// Open a span under `cat`/`name`; closes (and records) on drop.
+#[inline]
+pub fn span(cat: &'static str, name: &'static str) -> Span {
+    if !tracing() {
+        return Span(None);
+    }
+    Span(Some(SpanStart { cat, name, arg: None, start: Instant::now() }))
+}
+
+/// [`span`] with one integer argument (slice index, iteration...).
+#[inline]
+pub fn span_arg(
+    cat: &'static str,
+    name: &'static str,
+    key: &'static str,
+    val: u64,
+) -> Span {
+    if !tracing() {
+        return Span(None);
+    }
+    Span(Some(SpanStart {
+        cat,
+        name,
+        arg: Some((key, val)),
+        start: Instant::now(),
+    }))
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(s) = self.0.take() {
+            let dur = s.start.elapsed().as_nanos() as u64;
+            push_event(SpanEvent {
+                name: s.name,
+                cat: s.cat,
+                start: s.start,
+                dur_nanos: dur,
+                arg: s.arg,
+            });
+        }
+    }
+}
+
+/// Record an already-measured interval as a span (used by
+/// `timing::timed` and the pipeline region so one clock read serves
+/// both the metric row and the trace).
+#[inline]
+pub fn emit_span(
+    cat: &'static str,
+    name: &'static str,
+    start: Instant,
+    dur_nanos: u64,
+) {
+    if !tracing() {
+        return;
+    }
+    push_event(SpanEvent { name, cat, start, dur_nanos, arg: None });
+}
+
+/// Label the current thread in the exported trace (`"opt-lane-1"`...).
+/// Free when tracing is off — the arguments are only formatted after
+/// the armed check.
+pub fn name_thread(label: std::fmt::Arguments<'_>) {
+    if !tracing() {
+        return;
+    }
+    let text = std::fmt::format(label);
+    with_thread_buf(|buf| {
+        *buf.label.lock().unwrap() = Some(text);
+    });
+}
+
+fn push_event(ev: SpanEvent) {
+    with_thread_buf(|buf| buf.events.lock().unwrap().push(ev));
+}
+
+/// Run `f` on this thread's registered buffer for the current epoch,
+/// registering a fresh buffer with the armed tracer if needed. No-op
+/// when the tracer disarmed since the caller's check.
+fn with_thread_buf(f: impl FnOnce(&ThreadBuf)) {
+    TBUF.with(|tb| {
+        let mut tb = tb.borrow_mut();
+        let epoch = EPOCH.load(Ordering::Acquire);
+        let stale = !matches!(&*tb, Some((e, _)) if *e == epoch);
+        if stale {
+            let Some(tr) = CURRENT.lock().unwrap().clone() else {
+                *tb = None;
+                return;
+            };
+            let buf = Arc::new(ThreadBuf {
+                tid: tr.next_tid.fetch_add(1, Ordering::Relaxed),
+                label: Mutex::new(None),
+                events: Mutex::new(Vec::new()),
+            });
+            tr.bufs.lock().unwrap().push(Arc::clone(&buf));
+            *tb = Some((tr.epoch, buf));
+        }
+        if let Some((_, buf)) = &*tb {
+            f(buf);
+        }
+    });
+}
+
+/// Serialize tests (and anything else) that arm the process-global
+/// tracer — the span half of telemetry is inherently global, unlike
+/// the scoped metric recorders.
+#[doc(hidden)]
+pub fn trace_test_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spans_are_inert() {
+        let _guard = trace_test_lock();
+        assert!(!tracing());
+        let s = span("prim", "Map");
+        assert!(s.0.is_none(), "no clock read while disarmed");
+        drop(s);
+    }
+
+    #[test]
+    fn spans_nest_and_export_chrome_events() {
+        let _guard = trace_test_lock();
+        let tracer = Tracer::start();
+        {
+            let _run = span("run", "run");
+            {
+                let _slice = span_arg("slice", "opt", "z", 3);
+                let _prim = span("prim", "Map");
+            }
+            std::thread::scope(|s| {
+                s.spawn(|| {
+                    name_thread(format_args!("opt-lane-{}", 1));
+                    let _sp = span_arg("slice", "opt", "z", 4);
+                });
+            });
+        }
+        let trace = tracer.finish();
+        assert!(!tracing());
+        assert_eq!(trace.num_events(), 4);
+        assert_eq!(trace.threads.len(), 2);
+
+        let j = trace.to_chrome_json();
+        let events = j.get("traceEvents").and_then(Value::as_array).unwrap();
+        // 4 X events + 1 thread_name metadata record.
+        assert_eq!(events.len(), 5);
+        let xs: Vec<&Value> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Value::as_str) == Some("X"))
+            .collect();
+        assert_eq!(xs.len(), 4);
+        for e in &xs {
+            assert!(e.get("ts").and_then(Value::as_f64).unwrap() >= 0.0);
+            assert!(e.get("dur").and_then(Value::as_f64).unwrap() >= 0.0);
+            assert!(e.get("name").is_some() && e.get("cat").is_some());
+        }
+        // The run span encloses the same-thread children.
+        let run = xs
+            .iter()
+            .find(|e| e.get("name").and_then(Value::as_str) == Some("run"))
+            .unwrap();
+        let run_end = run.get("ts").and_then(Value::as_f64).unwrap()
+            + run.get("dur").and_then(Value::as_f64).unwrap();
+        let run_tid = run.get("tid").and_then(Value::as_f64).unwrap();
+        for e in &xs {
+            if e.get("tid").and_then(Value::as_f64) == Some(run_tid) {
+                let end = e.get("ts").and_then(Value::as_f64).unwrap()
+                    + e.get("dur").and_then(Value::as_f64).unwrap();
+                assert!(end <= run_end + 1e-3);
+            }
+        }
+        // Lane attribution: the named lane thread owns the z=4 span.
+        let meta = events
+            .iter()
+            .find(|e| e.get("ph").and_then(Value::as_str) == Some("M"))
+            .unwrap();
+        assert_eq!(
+            meta.get("args").and_then(|a| a.get("name"))
+                .and_then(Value::as_str),
+            Some("opt-lane-1")
+        );
+    }
+
+    #[test]
+    fn events_after_finish_are_dropped() {
+        let _guard = trace_test_lock();
+        let tracer = Tracer::start();
+        drop(span("prim", "Map"));
+        let trace = tracer.finish();
+        assert_eq!(trace.num_events(), 1);
+        drop(span("prim", "Map"));
+        let tracer2 = Tracer::start();
+        drop(span("prim", "Scan"));
+        let t2 = tracer2.finish();
+        assert_eq!(t2.num_events(), 1, "old-epoch events must not bleed in");
+    }
+}

@@ -1,0 +1,235 @@
+//! Telemetry acceptance suite (DESIGN.md §11):
+//!
+//! * scoped recorders attribute primitive time per run without the
+//!   global registry (and capture the migrated workspace counters);
+//! * profiling + tracing must not perturb results — telemetry-on runs
+//!   are bitwise-identical to telemetry-off runs across devices and
+//!   lane counts;
+//! * a 2-lane sharded traced run exports Chrome trace-event JSON with
+//!   per-lane span attribution (`opt-lane-N` thread names own the
+//!   slice spans);
+//! * `RunReport::to_json` carries `p50/p90/p99` job latency and the
+//!   lane-occupancy timeline, profiling on or off.
+
+use dpp_pmrf::config::{DatasetConfig, DeviceKind, EngineKind, RunConfig};
+use dpp_pmrf::coordinator::{Coordinator, RunReport};
+use dpp_pmrf::dpp::timing;
+use dpp_pmrf::image::{self, Dataset};
+use dpp_pmrf::json::Value;
+use dpp_pmrf::telemetry::{self, Recorder, Tracer};
+
+fn cfg(device: DeviceKind, lanes: usize, slices: usize) -> RunConfig {
+    let mut cfg = RunConfig {
+        dataset: DatasetConfig {
+            width: 48,
+            height: 48,
+            slices,
+            ..Default::default()
+        },
+        engine: EngineKind::Dpp,
+        device,
+        threads: 2,
+        ..Default::default()
+    };
+    cfg.sched.lanes = lanes;
+    cfg
+}
+
+fn run(c: RunConfig, ds: &Dataset) -> RunReport {
+    Coordinator::new(c).unwrap().run(ds).unwrap()
+}
+
+fn assert_identical(a: &RunReport, b: &RunReport, tag: &str) {
+    assert_eq!(a.output.data, b.output.data, "{tag}: output volume");
+    assert_eq!(a.slices.len(), b.slices.len(), "{tag}: slice count");
+    for (x, y) in a.slices.iter().zip(&b.slices) {
+        assert_eq!(x.z, y.z, "{tag}: slice order");
+        assert_eq!(
+            x.final_energy.to_bits(),
+            y.final_energy.to_bits(),
+            "{tag}: slice {} energy",
+            x.z
+        );
+        assert_eq!(x.em_iters, y.em_iters, "{tag}: slice {}", x.z);
+        assert_eq!(x.map_iters, y.map_iters, "{tag}: slice {}", x.z);
+    }
+}
+
+#[test]
+fn scoped_recorder_attributes_a_full_run() {
+    // The recorder itself is thread-scoped and needs no lock; the
+    // trace lock only keeps this run's spans out of a tracer armed by
+    // a concurrently running test in this binary.
+    let _sg = telemetry::trace_test_lock();
+    let c = cfg(DeviceKind::Auto, 1, 2);
+    let ds = image::generate(&c.dataset);
+    let coord = Coordinator::new(c).unwrap();
+    let rec = Recorder::new();
+    let report = {
+        let _scope = rec.install();
+        coord.run(&ds).unwrap()
+    };
+    assert_eq!(report.slices.len(), 2);
+    let snap = rec.snapshot();
+    // Primitive rows from both pipeline phases land in the scope.
+    for name in ["Map", "ReduceByKey", "Gather", "SortByKey"] {
+        assert!(
+            snap.time_rows.get(name).is_some_and(|r| r.calls > 0),
+            "missing primitive row {name}: {:?}",
+            snap.time_rows.keys().collect::<Vec<_>>()
+        );
+    }
+    // Stage-level rows from the scheduler.
+    assert!(snap.time_rows.contains_key("Sched::init"));
+    assert!(snap.time_rows.contains_key("Sched::opt"));
+    // Workspace counters migrated off COUNTER_PREFIX timing rows:
+    // first-class counters/gauges, never time rows.
+    assert!(snap.counters.contains_key("Workspace::miss"));
+    assert!(snap.gauges.contains_key("Workspace::high_water_bytes"));
+    assert!(snap.gauges.contains_key("Workspace::resident_bytes"));
+    assert!(
+        !snap.time_rows.keys().any(|k| k.starts_with("Workspace::")),
+        "counters must not appear as time rows"
+    );
+    assert!(snap.total_nanos() > 0);
+}
+
+#[test]
+fn telemetry_on_is_bitwise_identical_to_off() {
+    // The acceptance bar: enabling the global registry AND an armed
+    // tracer must change nothing about the computation, on every
+    // device x lane shape. Held for the whole test (off runs included)
+    // so concurrent tests never observe our armed tracer and we never
+    // pollute theirs.
+    let _sg = telemetry::trace_test_lock();
+    let _tg = timing::test_lock();
+    for device in [DeviceKind::Serial, DeviceKind::Pool] {
+        let base = cfg(device, 1, 4);
+        let ds = image::generate(&base.dataset);
+        for lanes in [1, 2, 4] {
+            let mut c = base.clone();
+            c.sched.lanes = lanes;
+            let off = run(c.clone(), &ds);
+            let on = {
+                timing::set_enabled(true);
+                let tracer = Tracer::start();
+                let r = run(c, &ds);
+                let trace = tracer.finish();
+                timing::set_enabled(false);
+                timing::reset();
+                assert!(trace.num_events() > 0, "tracer captured spans");
+                r
+            };
+            assert_identical(
+                &on,
+                &off,
+                &format!("{} lanes={lanes}", device.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn traced_two_lane_run_attributes_spans_per_lane() {
+    let _sg = telemetry::trace_test_lock();
+    let c = cfg(DeviceKind::Auto, 2, 6);
+    let ds = image::generate(&c.dataset);
+    let tracer = Tracer::start();
+    let report = run(c, &ds);
+    let trace = tracer.finish();
+
+    let j = trace.to_chrome_json();
+    let events = j
+        .get("traceEvents")
+        .and_then(Value::as_array)
+        .expect("traceEvents array");
+    assert!(!events.is_empty());
+
+    // Both optimize lanes registered a thread-name metadata record;
+    // remember which tids they own.
+    let mut lane_tids = Vec::new();
+    let mut lane_names = Vec::new();
+    for e in events {
+        if e.get("ph").and_then(Value::as_str) != Some("M") {
+            continue;
+        }
+        let name = e
+            .get("args")
+            .and_then(|a| a.get("name"))
+            .and_then(Value::as_str)
+            .unwrap()
+            .to_string();
+        if name.starts_with("opt-lane-") {
+            lane_tids.push(e.get("tid").and_then(Value::as_f64).unwrap());
+            lane_names.push(name);
+        }
+    }
+    lane_names.sort();
+    assert_eq!(lane_names, ["opt-lane-0", "opt-lane-1"]);
+
+    // Every X event is well-formed, and per-lane attribution holds:
+    // each of the 6 slice-optimize spans sits on a thread named
+    // opt-lane-N.
+    let mut opt_spans = 0usize;
+    let mut zs = Vec::new();
+    let mut cats = std::collections::BTreeSet::new();
+    for e in events {
+        if e.get("ph").and_then(Value::as_str) != Some("X") {
+            continue;
+        }
+        assert!(e.get("ts").and_then(Value::as_f64).unwrap() >= 0.0);
+        assert!(e.get("dur").and_then(Value::as_f64).unwrap() >= 0.0);
+        let cat = e.get("cat").and_then(Value::as_str).unwrap();
+        cats.insert(cat.to_string());
+        let name = e.get("name").and_then(Value::as_str).unwrap();
+        if cat == "slice" && name == "opt" {
+            opt_spans += 1;
+            let tid = e.get("tid").and_then(Value::as_f64).unwrap();
+            assert!(
+                lane_tids.contains(&tid),
+                "slice/opt span on unnamed thread tid={tid}"
+            );
+            zs.push(
+                e.get("args")
+                    .and_then(|a| a.get("z"))
+                    .and_then(Value::as_f64)
+                    .unwrap() as usize,
+            );
+        }
+    }
+    assert_eq!(opt_spans, 6, "one optimize span per slice");
+    zs.sort_unstable();
+    assert_eq!(zs, [0, 1, 2, 3, 4, 5]);
+    // The full hierarchy is present: run + slice roots, the EM/MAP
+    // iteration levels, and leaf primitive/pipeline-stage spans.
+    for want in ["run", "slice", "em", "map", "prim", "stage"] {
+        assert!(cats.contains(want), "missing span category {want}: {cats:?}");
+    }
+
+    // Report side of the telemetry bar (profiling was OFF here): the
+    // JSON still carries job latency percentiles and the lane timeline.
+    let rj = report.to_json();
+    for q in ["p50", "p90", "p99"] {
+        let v = rj
+            .get("job_latency")
+            .and_then(|l| l.get(q))
+            .and_then(Value::as_f64)
+            .unwrap();
+        assert!(v > 0.0, "job_latency.{q}");
+    }
+    match rj.get("lane_timeline") {
+        Some(Value::Array(lanes)) => {
+            assert_eq!(lanes.len(), 2, "one timeline per optimize lane");
+            let spans: usize = lanes
+                .iter()
+                .map(|l| l.as_array().unwrap().len())
+                .sum();
+            assert_eq!(spans, 6, "every slice on some lane's timeline");
+        }
+        other => panic!("lane_timeline missing/not array: {other:?}"),
+    }
+    for s in &report.slices {
+        assert!(s.lane < 2, "slice {} lane {}", s.z, s.lane);
+        assert!(s.queue_wait_secs >= 0.0);
+    }
+}
