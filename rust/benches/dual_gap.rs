@@ -1,0 +1,87 @@
+//! Dual-ascent certificates vs the MAP engines: wall-clock to a
+//! certified bound, iterations spent, and — the number no other engine
+//! can report — the optimality gap the certificate proves for the
+//! decoded labeling. Runs the DPP-MAP engine (no certificate) next to
+//! the dual engine so the cost of certification is explicit.
+//!
+//! Output: `bench_results/dual_gap.json` — one row per
+//! (dataset, engine) with median seconds plus iteration, energy,
+//! lower-bound, and gap labels.
+
+use dpp_pmrf::bench_support::{prepare_models, workload, Report, Scale};
+use dpp_pmrf::config::DatasetKind;
+use dpp_pmrf::dpp::Backend;
+use dpp_pmrf::dual::{DualConfig, DualEngine};
+use dpp_pmrf::mrf::{dpp::DppEngine, Engine};
+use dpp_pmrf::pool::Pool;
+use dpp_pmrf::util::measure;
+
+fn main() {
+    let scale = Scale::from_env();
+    let mut report = Report::new("dual_gap");
+
+    for kind in [DatasetKind::Synthetic, DatasetKind::Experimental] {
+        let (ds, mut cfg) = workload(kind, scale);
+        // Convergence race: each engine stops at its own fixpoint /
+        // bound stall.
+        cfg.mrf.fixed_iters = false;
+        let models = prepare_models(&ds, &cfg);
+
+        let pool = Pool::with_default_threads();
+        let bk = Backend::threaded(pool);
+        let engines: Vec<Box<dyn Engine>> = vec![
+            Box::new(DppEngine::new(bk.clone())),
+            Box::new(DualEngine::new(bk.clone(), DualConfig::default())),
+        ];
+
+        for engine in engines {
+            let stats = measure(scale.warmup, scale.reps, || {
+                for m in &models {
+                    engine.run(m, &cfg.mrf);
+                }
+            });
+            // One scored pass for the quality/certificate labels.
+            let (mut inner, mut em, mut energy) = (0usize, 0usize, 0.0f64);
+            let mut lower: Option<f64> = Some(0.0);
+            for m in &models {
+                let r = engine.run(m, &cfg.mrf);
+                inner += r.map_iters;
+                em += r.em_iters;
+                energy += r.energy;
+                lower = match (lower, r.lower_bound) {
+                    (Some(acc), Some(lb)) => Some(acc + lb),
+                    _ => None,
+                };
+            }
+            let (bound_label, gap_label) = match lower {
+                Some(lb) => (format!("{lb:.1}"),
+                             format!("{:.3e}", (energy - lb).max(0.0))),
+                None => ("null".to_string(), "null".to_string()),
+            };
+            report.add(
+                vec![
+                    ("dataset", kind.name().to_string()),
+                    ("engine", engine.name().to_string()),
+                    ("em_iters", em.to_string()),
+                    ("inner_iters", inner.to_string()),
+                    ("final_energy", format!("{energy:.1}")),
+                    ("lower_bound", bound_label),
+                    ("optimality_gap", gap_label),
+                ],
+                stats,
+            );
+        }
+    }
+    report.finish();
+
+    println!("certification overhead (T_dual / T_map; 1.0 = free):");
+    for kind in [DatasetKind::Synthetic, DatasetKind::Experimental] {
+        let map = report.median(&[("dataset", kind.name()),
+                                  ("engine", "dpp")]);
+        let dual = report.median(&[("dataset", kind.name()),
+                                   ("engine", "dual")]);
+        if let (Some(map), Some(dual)) = (map, dual) {
+            println!("  {:<13} {:.2}x", kind.name(), dual / map);
+        }
+    }
+}

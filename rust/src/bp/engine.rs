@@ -125,6 +125,7 @@ impl Engine for BpEngine {
             energy: *em_window.history().last().unwrap_or(&0.0),
             history: em_window.history().to_vec(),
             params: prm,
+            lower_bound: None,
         }
     }
 }

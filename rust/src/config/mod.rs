@@ -10,6 +10,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use crate::bp::{BpConfig, BpSchedule};
+use crate::dual::DualConfig;
 use crate::json::{self, Value};
 
 pub use crate::dpp::DeviceKind;
@@ -55,19 +56,23 @@ pub enum EngineKind {
     /// Max-product loopy belief propagation on DPP sweeps with
     /// residual message scheduling (DESIGN.md §6).
     Bp,
+    /// Dual block-coordinate ascent (MPLP-style) with certified
+    /// lower bounds and optimality gaps (DESIGN.md §12).
+    Dual,
 }
 
 impl EngineKind {
     /// Accepted `--engine` values, for help text and error messages.
-    pub const USAGE: &'static str = "serial|reference|dpp|xla|bp";
+    pub const USAGE: &'static str = "serial|reference|dpp|xla|bp|dual";
 
-    pub fn all() -> [EngineKind; 5] {
+    pub fn all() -> [EngineKind; 6] {
         [
             EngineKind::Serial,
             EngineKind::Reference,
             EngineKind::Dpp,
             EngineKind::Xla,
             EngineKind::Bp,
+            EngineKind::Dual,
         ]
     }
 
@@ -78,6 +83,7 @@ impl EngineKind {
             "dpp" => Ok(EngineKind::Dpp),
             "xla" => Ok(EngineKind::Xla),
             "bp" => Ok(EngineKind::Bp),
+            "dual" => Ok(EngineKind::Dual),
             _ => bail!("unknown engine `{s}` ({})", Self::USAGE),
         }
     }
@@ -89,6 +95,7 @@ impl EngineKind {
             EngineKind::Dpp => "dpp",
             EngineKind::Xla => "xla",
             EngineKind::Bp => "bp",
+            EngineKind::Dual => "dual",
         }
     }
 
@@ -101,6 +108,9 @@ impl EngineKind {
             EngineKind::Xla => "AOT XLA/PJRT accelerator path",
             EngineKind::Bp => {
                 "loopy belief propagation, residual-scheduled DPP sweeps"
+            }
+            EngineKind::Dual => {
+                "MPLP-style dual ascent with certified lower bounds"
             }
         }
     }
@@ -229,6 +239,9 @@ pub struct RunConfig {
     pub mrf: MrfConfig,
     /// BP engine parameters (used when `engine` is [`EngineKind::Bp`]).
     pub bp: BpConfig,
+    /// Dual engine parameters (used when `engine` is
+    /// [`EngineKind::Dual`]).
+    pub dual: DualConfig,
     /// Slice-scheduler shape (`--lanes` / `--inflight`).
     pub sched: SchedConfig,
     /// Observability switches (`--profile` / `--trace-out`).
@@ -250,6 +263,7 @@ impl Default for RunConfig {
             overseg: OversegConfig::default(),
             mrf: MrfConfig::default(),
             bp: BpConfig::default(),
+            dual: DualConfig::default(),
             sched: SchedConfig::default(),
             telemetry: TelemetryConfig::default(),
             engine: EngineKind::Dpp,
@@ -327,6 +341,10 @@ impl RunConfig {
             cfg.bp.frontier =
                 get_f64(b, "frontier", cfg.bp.frontier as f64) as f32;
         }
+        if let Some(d) = v.get("dual") {
+            cfg.dual.iters = get_usize(d, "iters", cfg.dual.iters);
+            cfg.dual.tol = get_f64(d, "tol", cfg.dual.tol);
+        }
         if let Some(s) = v.get("sched") {
             cfg.sched.lanes = get_usize(s, "lanes", cfg.sched.lanes);
             cfg.sched.inflight =
@@ -379,6 +397,12 @@ impl RunConfig {
         if self.bp.tol <= 0.0 {
             bail!("bp.tol must be > 0");
         }
+        if self.dual.iters == 0 {
+            bail!("dual.iters must be >= 1");
+        }
+        if !self.dual.tol.is_finite() || self.dual.tol < 0.0 {
+            bail!("dual.tol must be finite and >= 0");
+        }
         if self.sched.lanes == 0 {
             bail!("sched.lanes must be >= 1");
         }
@@ -420,6 +444,10 @@ impl RunConfig {
                 ("tol", (self.bp.tol as f64).into()),
                 ("schedule", self.bp.schedule.name().into()),
                 ("frontier", (self.bp.frontier as f64).into()),
+            ])),
+            ("dual", Value::object(vec![
+                ("iters", self.dual.iters.into()),
+                ("tol", self.dual.tol.into()),
             ])),
             ("sched", Value::object(vec![
                 ("lanes", self.sched.lanes.into()),
@@ -482,6 +510,10 @@ mod tests {
         assert!(RunConfig::from_json(&v).is_err());
         let v = json::parse(r#"{"bp": {"tol": -1.0}}"#).unwrap();
         assert!(RunConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"dual": {"iters": 0}}"#).unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"dual": {"tol": -1.0}}"#).unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
         let v = json::parse(r#"{"sched": {"lanes": 0}}"#).unwrap();
         assert!(RunConfig::from_json(&v).is_err());
         let v = json::parse(r#"{"sched": {"inflight": 0}}"#).unwrap();
@@ -490,10 +522,10 @@ mod tests {
 
     #[test]
     fn kinds_parse_and_name() {
-        for k in ["serial", "reference", "dpp", "xla", "bp"] {
+        for k in ["serial", "reference", "dpp", "xla", "bp", "dual"] {
             assert_eq!(EngineKind::parse(k).unwrap().name(), k);
         }
-        assert_eq!(EngineKind::all().len(), 5);
+        assert_eq!(EngineKind::all().len(), 6);
         for d in ["synthetic", "experimental"] {
             assert_eq!(DatasetKind::parse(d).unwrap().name(), d);
         }
@@ -531,6 +563,26 @@ mod tests {
         assert_eq!(cfg.bp.frontier, 0.75);
         // unspecified keys keep defaults
         assert_eq!(cfg.bp.tol, BpConfig::default().tol);
+    }
+
+    #[test]
+    fn dual_section_parses() {
+        let v = json::parse(
+            r#"{"engine": "dual", "dual": {"iters": 33, "tol": 1e-7}}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.engine, EngineKind::Dual);
+        assert_eq!(cfg.dual.iters, 33);
+        assert_eq!(cfg.dual.tol, 1e-7);
+        // unspecified keys keep defaults
+        let v = json::parse(r#"{"dual": {"iters": 5}}"#).unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.dual.iters, 5);
+        assert_eq!(cfg.dual.tol, DualConfig::default().tol);
+        // and the section round-trips through to_json
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
     }
 
     #[test]

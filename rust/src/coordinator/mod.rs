@@ -48,6 +48,14 @@ pub struct SliceReport {
     /// path, where slices never queue).
     pub queue_wait_secs: f64,
     pub final_energy: f64,
+    /// Certified lower bound on the slice's final energy, when the
+    /// engine can produce one (the dual engine's ascent objective minus
+    /// scorer slack; `None` for engines without certificates).
+    pub lower_bound: Option<f64>,
+    /// `final_energy - lower_bound`, clamped at zero — the per-slice
+    /// optimality gap the certificate guarantees. `None` whenever
+    /// `lower_bound` is.
+    pub optimality_gap: Option<f64>,
 }
 
 /// Aggregated result of a full run.
@@ -109,9 +117,37 @@ impl RunReport {
         self.slices.iter().map(|s| s.map_iters).sum()
     }
 
+    /// Run-level certified lower bound: the sum of per-slice bounds,
+    /// present only when *every* slice carries one (energies are
+    /// additive across slices, so the sum bounds the summed energy).
+    pub fn lower_bound(&self) -> Option<f64> {
+        self.slices
+            .iter()
+            .map(|s| s.lower_bound)
+            .sum::<Option<f64>>()
+    }
+
+    /// Run-level optimality gap: summed final energy minus the summed
+    /// lower bound, clamped at zero. `None` whenever
+    /// [`Self::lower_bound`] is.
+    pub fn optimality_gap(&self) -> Option<f64> {
+        self.lower_bound().map(|lb| {
+            let energy: f64 =
+                self.slices.iter().map(|s| s.final_energy).sum();
+            (energy - lb).max(0.0)
+        })
+    }
+
     /// JSON rendering for the README's tables / bench reports.
     pub fn to_json(&self) -> crate::json::Value {
         use crate::json::Value;
+        // Certificate fields are part of the report contract for every
+        // engine: present-but-null when the engine cannot certify, so
+        // consumers can probe one stable schema (tests/report_schema.rs).
+        let opt_f64 = |o: Option<f64>| match o {
+            Some(x) => x.into(),
+            None => Value::Null,
+        };
         let mut fields = vec![
             ("engine", Value::str(self.engine)),
             // Device identity + capability flags: results are only
@@ -137,6 +173,8 @@ impl RunReport {
             ("slices", self.slices.len().into()),
             ("em_iters", self.total_em_iters().into()),
             ("map_iters", self.total_map_iters().into()),
+            ("lower_bound", opt_f64(self.lower_bound())),
+            ("optimality_gap", opt_f64(self.optimality_gap())),
         ];
         if let Some(c) = &self.confusion {
             fields.push(("precision", c.precision().into()));
@@ -201,6 +239,8 @@ impl RunReport {
                     ("lane", s.lane.into()),
                     ("queue_wait_secs", s.queue_wait_secs.into()),
                     ("final_energy", s.final_energy.into()),
+                    ("lower_bound", opt_f64(s.lower_bound)),
+                    ("optimality_gap", opt_f64(s.optimality_gap)),
                 ])
             })
             .collect();
@@ -288,6 +328,7 @@ impl Coordinator {
             device: Arc::clone(&self.device),
             runtime: self.runtime.clone(),
             bp: self.cfg.bp,
+            dual: self.cfg.dual,
         }
     }
 
@@ -419,6 +460,10 @@ impl Coordinator {
                 lane: 0,
                 queue_wait_secs: 0.0,
                 final_energy: res.energy,
+                lower_bound: res.lower_bound,
+                optimality_gap: res
+                    .lower_bound
+                    .map(|lb| (res.energy - lb).max(0.0)),
             }],
             confusion,
             porosity,

@@ -1,0 +1,297 @@
+//! MPLP-style block-coordinate ascent over the pairwise dual.
+//!
+//! One ascent iteration (all f64):
+//!
+//! 1. **Belief refresh** — `bel[v] = unary[v] + sum of messages into
+//!    v`, a map over vertices whose per-vertex segment comes from the
+//!    cached CSR [`crate::dpp::SegmentPlan`] in [`PairGraph`].
+//! 2. **Edge-colored Gauss-Seidel** — color classes run sequentially;
+//!    within a class every edge updates both of its messages and
+//!    incrementally patches both endpoint beliefs. Classes are
+//!    node-disjoint ([`PairGraph`]), so the parallel sweep touches
+//!    disjoint memory and is exactly the sequential update.
+//! 3. **Bound** — per-vertex min-belief and per-edge slack terms are
+//!    materialized by parallel maps into workspace scratch, then
+//!    folded serially in index order, so the f64 association order is
+//!    fixed for every device and thread count.
+//!
+//! Every per-item formula lives in a shared `#[inline]` function that
+//! the serial oracle ([`super::serial`]) calls too — the bitwise
+//! DPP/serial contract is structural, not coincidental (the same rule
+//! BP's sweeps follow, DESIGN.md §9/§12).
+//!
+//! Why the bound is a lower bound (weak duality): for any messages,
+//! regrouping terms gives `E(x) = sum_v bel_v(x_v) + sum_e
+//! (w_e [x_u != x_v] - m_u(x_u) - m_v(x_v))` for every labeling `x`,
+//! so minimizing each vertex term and each edge term independently
+//! can only decrease the value. The update is the standard MPLP
+//! half-split reparameterization, which never decreases the bound.
+
+use crate::dpp::{Device, DeviceExt, SharedSlice, Workspace};
+use crate::mrf::energy::Prepared;
+use crate::mrf::{MrfModel, Params};
+
+use super::graph::PairGraph;
+use super::DualConfig;
+
+/// Dual unaries: `mult_v * data_v(label)`. The f32 data term is
+/// computed with exactly the operations of
+/// [`crate::mrf::energy::energy_pair_p`] (same bits), then promoted
+/// to f64 and scaled by the hood-instance multiplicity.
+pub(crate) fn unaries_into(
+    bk: &dyn Device,
+    model: &MrfModel,
+    g: &PairGraph,
+    prm: &Params,
+    out: &mut [f64],
+) {
+    let pp = Prepared::from_params(prm);
+    let win = SharedSlice::new(out);
+    bk.for_chunks(g.num_vertices, |s, e| {
+        for v in s..e {
+            let y = model.y[v];
+            let d0 = y - pp.mu[0];
+            let d1 = y - pp.mu[1];
+            let e0 = d0 * d0 * pp.inv2s[0] + pp.lns[0];
+            let e1 = d1 * d1 * pp.inv2s[1] + pp.lns[1];
+            let m = g.mult[v] as f64;
+            unsafe {
+                win.write(2 * v, m * e0 as f64);
+                win.write(2 * v + 1, m * e1 as f64);
+            }
+        }
+    });
+}
+
+/// Belief of one vertex: unary plus the slot-ordered sum of messages
+/// into it (the vertex's segment of the cached plan).
+#[inline]
+pub(crate) fn refresh_one(
+    g: &PairGraph,
+    unary: &[f64],
+    msg: &[f64],
+    v: usize,
+) -> [f64; 2] {
+    let (s, e) = g.plan.segment_bounds(v);
+    let mut b0 = unary[2 * v];
+    let mut b1 = unary[2 * v + 1];
+    for slot in s..e {
+        b0 += msg[2 * slot];
+        b1 += msg[2 * slot + 1];
+    }
+    [b0, b1]
+}
+
+/// One MPLP edge update on plain values: given both endpoint beliefs
+/// and current messages, return `(new bel_u, new bel_v, new msg into
+/// u, new msg into v)`. `A = bel - msg` is the belief with this
+/// edge's contribution removed; each new message gives the endpoint
+/// half of the edge-restricted min-marginal.
+#[inline]
+pub(crate) fn edge_apply(
+    bu: [f64; 2],
+    bv: [f64; 2],
+    mu: [f64; 2],
+    mv: [f64; 2],
+    w: f64,
+) -> ([f64; 2], [f64; 2], [f64; 2], [f64; 2]) {
+    let au = [bu[0] - mu[0], bu[1] - mu[1]];
+    let av = [bv[0] - mv[0], bv[1] - mv[1]];
+    let nu = [
+        0.5 * (av[0].min(av[1] + w) - au[0]),
+        0.5 * (av[1].min(av[0] + w) - au[1]),
+    ];
+    let nv = [
+        0.5 * (au[0].min(au[1] + w) - av[0]),
+        0.5 * (au[1].min(au[0] + w) - av[1]),
+    ];
+    (
+        [bu[0] + (nu[0] - mu[0]), bu[1] + (nu[1] - mu[1])],
+        [bv[0] + (nv[0] - mv[0]), bv[1] + (nv[1] - mv[1])],
+        nu,
+        nv,
+    )
+}
+
+/// The edge term of the dual bound: min over the four label pairs of
+/// the reparameterized pairwise energy.
+#[inline]
+pub(crate) fn edge_slack(mu: [f64; 2], mv: [f64; 2], w: f64) -> f64 {
+    (-mu[0] - mv[0])
+        .min(w - mu[0] - mv[1])
+        .min(w - mu[1] - mv[0])
+        .min(-mu[1] - mv[1])
+}
+
+/// Serial index-order fold of the materialized bound terms — the ONE
+/// association order both the DPP path and the serial oracle use.
+#[inline]
+pub(crate) fn fold_bound(vmin: &[f64], eslack: &[f64]) -> f64 {
+    let mut b = 0.0f64;
+    for &x in vmin {
+        b += x;
+    }
+    for &x in eslack {
+        b += x;
+    }
+    b
+}
+
+/// Relative-improvement early stop shared by both paths.
+#[inline]
+pub(crate) fn stop(prev: f64, cur: f64, tol: f64) -> bool {
+    (cur - prev) <= tol * prev.abs().max(1.0)
+}
+
+/// Outcome of one ascent run.
+pub(crate) struct AscentRun {
+    /// Iterations actually executed.
+    pub iters: usize,
+    /// Best (maximum) bound reached — the certified lower bound on
+    /// the pairwise objective.
+    pub best: f64,
+    /// Bound after each iteration.
+    pub history: Vec<f64>,
+}
+
+/// Run block-coordinate ascent on this device. `msg` carries the dual
+/// state (2 entries per directed slot) and may be warm-started from a
+/// previous run — the bound is valid at ANY messages, so reusing them
+/// across EM iterations is sound and saves iterations. `bel` is
+/// overwritten. `fixed` disables the early stop (the crate-wide
+/// `fixed_iters` contract: exact iteration counts for tests).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run(
+    bk: &dyn Device,
+    ws: &Workspace,
+    g: &PairGraph,
+    unary: &[f64],
+    msg: &mut [f64],
+    bel: &mut [f64],
+    cfg: &DualConfig,
+    fixed: bool,
+) -> AscentRun {
+    let nv = g.num_vertices;
+    let ne = g.num_edges();
+    debug_assert_eq!(msg.len(), 2 * g.num_slots());
+    debug_assert_eq!(bel.len(), 2 * nv);
+
+    let mut vmin = ws.take::<f64>(nv);
+    let mut eslack = ws.take::<f64>(ne);
+    let mut history = Vec::with_capacity(cfg.iters);
+    let mut best = f64::NEG_INFINITY;
+    let mut iters = 0usize;
+
+    for it in 0..cfg.iters {
+        // Inert unless a tracer is armed (telemetry span taxonomy:
+        // one `dual_iter` level between `em` and `prim`).
+        let _span = crate::telemetry::span_arg(
+            "map", "dual_iter", "iter", it as u64,
+        );
+        iters = it + 1;
+
+        // 1. Belief refresh (map over the plan's vertex segments).
+        {
+            let wb = SharedSlice::new(&mut bel[..]);
+            let msg_r: &[f64] = msg;
+            bk.for_chunks(nv, |s, e| {
+                for v in s..e {
+                    let b = refresh_one(g, unary, msg_r, v);
+                    unsafe {
+                        wb.write(2 * v, b[0]);
+                        wb.write(2 * v + 1, b[1]);
+                    }
+                }
+            });
+        }
+
+        // 2. Edge-colored Gauss-Seidel: classes sequential, edges
+        // within a class parallel (node-disjoint, so every chunk
+        // touches disjoint bel/msg entries).
+        for c in 0..g.num_colors() {
+            let (cs, ce) = (
+                g.color_offsets[c] as usize,
+                g.color_offsets[c + 1] as usize,
+            );
+            let wb = SharedSlice::new(&mut bel[..]);
+            let wm = SharedSlice::new(&mut msg[..]);
+            bk.for_chunks(ce - cs, |s, e| {
+                for i in s..e {
+                    let k = g.color_edges[cs + i] as usize;
+                    let u = g.eu[k] as usize;
+                    let v = g.ev[k] as usize;
+                    let su = g.epos_u[k] as usize;
+                    let sv = g.epos_v[k] as usize;
+                    unsafe {
+                        let bu = [wb.read(2 * u), wb.read(2 * u + 1)];
+                        let bv = [wb.read(2 * v), wb.read(2 * v + 1)];
+                        let mu = [wm.read(2 * su), wm.read(2 * su + 1)];
+                        let mv = [wm.read(2 * sv), wm.read(2 * sv + 1)];
+                        let (nbu, nbv, nu, nvv) =
+                            edge_apply(bu, bv, mu, mv, g.ew[k]);
+                        wb.write(2 * u, nbu[0]);
+                        wb.write(2 * u + 1, nbu[1]);
+                        wb.write(2 * v, nbv[0]);
+                        wb.write(2 * v + 1, nbv[1]);
+                        wm.write(2 * su, nu[0]);
+                        wm.write(2 * su + 1, nu[1]);
+                        wm.write(2 * sv, nvv[0]);
+                        wm.write(2 * sv + 1, nvv[1]);
+                    }
+                }
+            });
+        }
+
+        // 3. Bound: materialize per-item terms in parallel, fold
+        // serially in index order (fixed association).
+        {
+            let wv = SharedSlice::new(&mut vmin[..]);
+            let bel_r: &[f64] = bel;
+            bk.for_chunks(nv, |s, e| {
+                for v in s..e {
+                    let b = bel_r[2 * v].min(bel_r[2 * v + 1]);
+                    unsafe { wv.write(v, b) };
+                }
+            });
+            let we = SharedSlice::new(&mut eslack[..]);
+            let msg_r: &[f64] = msg;
+            bk.for_chunks(ne, |s, e| {
+                for k in s..e {
+                    let su = g.epos_u[k] as usize;
+                    let sv = g.epos_v[k] as usize;
+                    let mu = [msg_r[2 * su], msg_r[2 * su + 1]];
+                    let mv = [msg_r[2 * sv], msg_r[2 * sv + 1]];
+                    unsafe {
+                        we.write(k, edge_slack(mu, mv, g.ew[k]))
+                    };
+                }
+            });
+        }
+        let b = fold_bound(&vmin, &eslack);
+        let prev = history.last().copied();
+        history.push(b);
+        if b > best {
+            best = b;
+        }
+        if let Some(prev) = prev {
+            if !fixed && stop(prev, b, cfg.tol) {
+                break;
+            }
+        }
+    }
+
+    AscentRun { iters, best, history }
+}
+
+/// Primal decode: per-vertex argmin of the final beliefs (strict `<`,
+/// ties -> label 0 — the crate-wide tie rule).
+pub(crate) fn decode(bk: &dyn Device, bel: &[f64], labels: &mut [u8]) {
+    let nv = labels.len();
+    let win = SharedSlice::new(labels);
+    bk.for_chunks(nv, |s, e| {
+        for v in s..e {
+            let l = u8::from(bel[2 * v + 1] < bel[2 * v]);
+            unsafe { win.write(v, l) };
+        }
+    });
+}

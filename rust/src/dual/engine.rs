@@ -1,0 +1,220 @@
+//! [`DualEngine`] — the dual ascent as a drop-in [`Engine`] in the
+//! shared EM outer loop, mirroring the BP engine's shape.
+//!
+//! Per EM iteration: refresh the dual unaries from the current
+//! (mu, sigma), ascend the dual (messages warm-start from the
+//! previous EM iteration — the bound is valid at any messages, so
+//! this is sound), decode per-vertex labels from the beliefs, score
+//! the labeling with the shared hood energy
+//! ([`crate::mrf::config_energy`]) so histories are directly
+//! comparable to the MAP/BP engines, and re-estimate (mu, sigma)
+//! from the hood-member instances exactly as they do.
+//!
+//! The extra deliverable over every other engine:
+//! `EmResult::lower_bound` = the final EM iteration's best dual
+//! bound minus [`super::scorer_slack`] under the SAME parameters the
+//! reported energy was scored with — so `energy - lower_bound` is a
+//! certified non-negative optimality gap.
+
+use std::sync::Arc;
+
+use crate::config::MrfConfig;
+use crate::dpp::{Device, IntoDevice, Workspace, WorkspaceStats};
+use crate::mrf::{self, params, ConvergenceWindow, Engine, EmResult,
+                 MrfModel};
+
+use super::graph::PairGraph;
+use super::{ascent, scorer_slack, DualConfig};
+
+pub struct DualEngine {
+    device: Arc<dyn Device>,
+    pub dual: DualConfig,
+    /// Scratch pool for per-iteration tensors (messages, beliefs,
+    /// unaries, bound terms); one per engine, so each scheduler
+    /// lane's dual engine amortizes buffers across its slices
+    /// (DESIGN.md §10).
+    ws: Workspace,
+}
+
+impl DualEngine {
+    /// Engine on any device — accepts a concrete device, an
+    /// `Arc<dyn Device>`, or the deprecated `Backend` spelling.
+    pub fn new(device: impl IntoDevice, dual: DualConfig) -> Self {
+        DualEngine { device: device.into_device(), dual,
+                     ws: Workspace::new() }
+    }
+
+    /// The device every ascent sweep of this engine executes on.
+    pub fn device(&self) -> &Arc<dyn Device> {
+        &self.device
+    }
+
+    /// Counters of the engine-held scratch pool (see
+    /// [`crate::dpp::Workspace::stats`]).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::dual::{DualConfig, DualEngine};
+    /// use dpp_pmrf::dpp::SerialDevice;
+    /// let engine = DualEngine::new(SerialDevice, DualConfig::default());
+    /// assert_eq!(engine.workspace_stats().misses, 0);
+    /// ```
+    pub fn workspace_stats(&self) -> WorkspaceStats {
+        self.ws.stats()
+    }
+}
+
+impl Engine for DualEngine {
+    fn name(&self) -> &'static str {
+        "dual"
+    }
+
+    fn run(&self, model: &MrfModel, cfg: &MrfConfig) -> EmResult {
+        let bk: &dyn Device = &*self.device;
+        let nv = model.num_vertices();
+        let g = PairGraph::build(bk, model, cfg.beta as f32);
+        let y_elem = model.y_elems();
+
+        // Same seeded init as every other engine; the dual ignores
+        // the initial labels (messages start at zero) but shares the
+        // initial parameters, so class polarity matches.
+        let (mut prm, mut labels) =
+            params::init_random(nv, cfg.beta as f32, cfg.seed);
+
+        let mut em_window =
+            ConvergenceWindow::new(cfg.window, cfg.threshold);
+        let mut total_iters = 0usize;
+        let mut em_iters = 0usize;
+        let mut lower = f64::NEG_INFINITY;
+
+        // Persistent per-run buffers: messages carry the dual state
+        // across EM iterations (warm start), beliefs and unaries are
+        // overwritten each iteration.
+        let mut msg = self.ws.take::<f64>(2 * g.num_slots());
+        msg.fill(0.0);
+        let mut bel = self.ws.take::<f64>(2 * nv);
+        let mut unary = self.ws.take::<f64>(2 * nv);
+
+        for _em in 0..cfg.em_iters {
+            // Inert unless a tracer is armed (see telemetry::span).
+            let _em_span = crate::telemetry::span_arg(
+                "em", "em_iter", "iter", em_iters as u64,
+            );
+            em_iters += 1;
+
+            ascent::unaries_into(bk, model, &g, &prm, &mut unary);
+            let run = ascent::run(
+                bk, &self.ws, &g, &unary, &mut msg, &mut bel,
+                &self.dual, cfg.fixed_iters,
+            );
+            total_iters += run.iters;
+            ascent::decode(bk, &bel, &mut labels);
+
+            // Score with the shared hood energy and certify under the
+            // SAME pre-update parameters: the bound was computed from
+            // `prm`'s unaries, so `lower <= total` by weak duality
+            // plus the scorer's rounding allowance.
+            let (_, total) =
+                mrf::config_energy(model, &labels, &prm);
+            lower = run.best - scorer_slack(model, &prm);
+
+            let mut stats = params::Stats::default();
+            for (e, &v) in model.hoods.members.iter().enumerate() {
+                stats.add(labels[v as usize], y_elem[e]);
+            }
+            prm = params::update(&stats, cfg.beta as f32);
+
+            em_window.push(total);
+            if em_window.converged() && !cfg.fixed_iters {
+                break;
+            }
+        }
+        self.ws.publish_timing();
+
+        EmResult {
+            labels,
+            em_iters,
+            map_iters: total_iters,
+            energy: *em_window.history().last().unwrap_or(&0.0),
+            history: em_window.history().to_vec(),
+            params: prm,
+            lower_bound: Some(lower),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpp::Backend;
+    use crate::pool::Pool;
+
+    #[test]
+    fn dual_engine_deterministic_across_backends_and_runs() {
+        let model = crate::bp::test_model(81);
+        let cfg = MrfConfig::default();
+        let dual = DualConfig::default();
+        let a = DualEngine::new(Backend::Serial, dual)
+            .run(&model, &cfg);
+        let b = DualEngine::new(Backend::Serial, dual)
+            .run(&model, &cfg);
+        assert_eq!(a, b, "rerun identical");
+        let c = DualEngine::new(
+            Backend::threaded_with_grain(Pool::new(4), 64),
+            dual,
+        )
+        .run(&model, &cfg);
+        assert_eq!(a, c, "backend independent");
+    }
+
+    #[test]
+    fn certifies_a_nonnegative_gap() {
+        let model = crate::bp::test_model(82);
+        let cfg = MrfConfig::default();
+        let res = DualEngine::new(Backend::Serial, DualConfig::default())
+            .run(&model, &cfg);
+        let lb = res.lower_bound.expect("dual engine certifies");
+        assert!(lb.is_finite());
+        assert!(
+            lb <= res.energy,
+            "lower bound {lb} vs energy {}",
+            res.energy
+        );
+        assert!(res.labels.iter().all(|&l| l <= 1));
+    }
+
+    #[test]
+    fn energy_close_to_serial_map_engine() {
+        let model = crate::bp::test_model(83);
+        let cfg = MrfConfig::default();
+        let map = crate::mrf::serial::SerialEngine.run(&model, &cfg);
+        let dual =
+            DualEngine::new(Backend::Serial, DualConfig::default())
+                .run(&model, &cfg);
+        let rel = (dual.energy - map.energy).abs()
+            / map.energy.abs().max(1.0);
+        assert!(rel < 0.05, "dual {} vs map {} (rel {rel})",
+                dual.energy, map.energy);
+        // And the certificate bounds the MAP engine's energy too,
+        // under the dual's own final-iteration parameters semantics:
+        // both energies sit above the certified bound.
+        let lb = dual.lower_bound.unwrap();
+        assert!(lb <= dual.energy);
+    }
+
+    #[test]
+    fn fixed_iters_runs_exact_em_count() {
+        let model = crate::bp::test_model(84);
+        let cfg = MrfConfig {
+            em_iters: 3,
+            fixed_iters: true,
+            ..Default::default()
+        };
+        let dual = DualConfig { iters: 7, ..Default::default() };
+        let res =
+            DualEngine::new(Backend::Serial, dual).run(&model, &cfg);
+        assert_eq!(res.em_iters, 3);
+        assert_eq!(res.map_iters, 21, "3 EM x 7 ascent iterations");
+    }
+}

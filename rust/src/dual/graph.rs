@@ -1,0 +1,320 @@
+//! Pairwise co-membership graph for the dual engine.
+//!
+//! The hood energy (DESIGN.md §5) decomposes exactly (in real
+//! arithmetic) into a pairwise binary Potts model:
+//!
+//! ```text
+//! E(x) = sum_v mult_v * data_v(x_v)
+//!      + sum_{u<v} 2 * beta * cooc(u, v) * [x_u != x_v]
+//! ```
+//!
+//! where `mult_v` is the number of hood-member instances of vertex `v`
+//! and `cooc(u, v)` counts the hoods containing both endpoints: each
+//! hood contributes `beta * disagree` per member instance, and a
+//! disagreeing pair `{u, v}` inside one hood is counted once from each
+//! side, hence the factor 2. This is the form the MPLP-style dual
+//! ascent ([`super::ascent`]) operates on.
+//!
+//! [`PairGraph::build`] derives the structure from [`Hoods`] with the
+//! usual two-pass DPP recipe (map degrees, scan offsets, map fill);
+//! every pass writes by vertex index, so the result is
+//! bitwise-identical on every [`Device`] at any thread count. On top
+//! of the CSR it caches:
+//!
+//! * a [`SegmentPlan`] over the per-vertex message slots, driving the
+//!   belief-refresh segmented reductions;
+//! * the canonical (`u < v`) edge list with both directed slot
+//!   positions, so an edge update can address "the message into `u`"
+//!   and "the message into `v`" directly;
+//! * a greedy edge coloring (smallest color unused at either
+//!   endpoint, in canonical edge order): color classes are
+//!   node-disjoint, which is what makes the parallel Gauss-Seidel
+//!   sweep in [`super::ascent`] exact and deterministic.
+
+use crate::dpp::{Device, DeviceExt, SegmentPlan, SharedSlice};
+use crate::mrf::{Hoods, MrfModel};
+
+/// Static pairwise structure + edge coloring, built once per model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PairGraph {
+    pub num_vertices: usize,
+    /// Directed message-slot ranges per vertex (`nv + 1` entries).
+    pub offsets: Vec<u32>,
+    /// Slot -> neighbor vertex, ascending within each row.
+    pub neighbors: Vec<u32>,
+    /// Slot -> number of hoods containing both endpoints (symmetric).
+    pub cooc: Vec<u32>,
+    /// Vertex -> number of hood-member instances (unary multiplicity;
+    /// genuinely 0 for vertices outside every hood).
+    pub mult: Vec<u32>,
+    /// Cached segmented-reduction plan over the slot CSR: segment `v`
+    /// is exactly the messages into vertex `v`.
+    pub plan: SegmentPlan,
+    /// Canonical edges (`eu[k] < ev[k]`), in row-major slot order.
+    pub eu: Vec<u32>,
+    pub ev: Vec<u32>,
+    /// Directed slot of edge `k` in `eu[k]`'s row (message into `u`).
+    pub epos_u: Vec<u32>,
+    /// Directed slot of edge `k` in `ev[k]`'s row (message into `v`).
+    pub epos_v: Vec<u32>,
+    /// Edge weight `2 * beta * cooc`, promoted to f64 once.
+    pub ew: Vec<f64>,
+    /// Edge ranges per color class (`num_colors + 1` entries).
+    pub color_offsets: Vec<u32>,
+    /// Canonical edge ids grouped by color, stable in edge order.
+    pub color_edges: Vec<u32>,
+}
+
+/// Sorted (with repeats) co-members of `v`: every other vertex of
+/// every hood that contains an instance of `v`. Runs of equal ids
+/// encode the co-occurrence count.
+fn gather_comembers(h: &Hoods, v: usize, buf: &mut Vec<u32>) {
+    buf.clear();
+    let (s, e) =
+        (h.vert_offsets[v] as usize, h.vert_offsets[v + 1] as usize);
+    for &el in &h.vert_elems[s..e] {
+        let hd = h.hood_id[el as usize] as usize;
+        for &w in h.hood_members(hd) {
+            if w != v as u32 {
+                buf.push(w);
+            }
+        }
+    }
+    buf.sort_unstable();
+}
+
+impl PairGraph {
+    /// Build from a model's hoods. Deterministic across devices and
+    /// thread counts: both parallel passes write only by vertex index.
+    pub fn build(bk: &dyn Device, model: &MrfModel, beta: f32)
+        -> PairGraph {
+        let h = &model.hoods;
+        let nv = model.num_vertices();
+
+        let mult: Vec<u32> = (0..nv)
+            .map(|v| h.vert_offsets[v + 1] - h.vert_offsets[v])
+            .collect();
+
+        // Pass 1 (map): distinct co-member count per vertex.
+        let mut degree = vec![0u32; nv];
+        {
+            let wd = SharedSlice::new(&mut degree[..]);
+            bk.for_chunks(nv, |s, e| {
+                let mut buf = Vec::new();
+                for v in s..e {
+                    gather_comembers(h, v, &mut buf);
+                    let mut deg = 0u32;
+                    let mut i = 0;
+                    while i < buf.len() {
+                        let mut j = i + 1;
+                        while j < buf.len() && buf[j] == buf[i] {
+                            j += 1;
+                        }
+                        deg += 1;
+                        i = j;
+                    }
+                    unsafe { wd.write(v, deg) };
+                }
+            });
+        }
+
+        // Scan: slot offsets.
+        let mut offsets = vec![0u32; nv + 1];
+        for v in 0..nv {
+            offsets[v + 1] = offsets[v] + degree[v];
+        }
+        let slots = offsets[nv] as usize;
+
+        // Pass 2 (map): fill neighbor ids + co-occurrence counts.
+        let mut neighbors = vec![0u32; slots];
+        let mut cooc = vec![0u32; slots];
+        {
+            let wn = SharedSlice::new(&mut neighbors[..]);
+            let wc = SharedSlice::new(&mut cooc[..]);
+            bk.for_chunks(nv, |s, e| {
+                let mut buf = Vec::new();
+                for v in s..e {
+                    gather_comembers(h, v, &mut buf);
+                    let mut cursor = offsets[v] as usize;
+                    let mut i = 0;
+                    while i < buf.len() {
+                        let mut j = i + 1;
+                        while j < buf.len() && buf[j] == buf[i] {
+                            j += 1;
+                        }
+                        unsafe {
+                            wn.write(cursor, buf[i]);
+                            wc.write(cursor, (j - i) as u32);
+                        }
+                        cursor += 1;
+                        i = j;
+                    }
+                }
+            });
+        }
+
+        // Canonical edge extraction (serial, row-major slot order).
+        // Rows are sorted, so the reverse slot is a binary search.
+        let two_beta = 2.0 * beta as f64;
+        let mut eu = Vec::new();
+        let mut ev = Vec::new();
+        let mut epos_u = Vec::new();
+        let mut epos_v = Vec::new();
+        let mut ew = Vec::new();
+        for u in 0..nv {
+            for s in offsets[u] as usize..offsets[u + 1] as usize {
+                let v = neighbors[s] as usize;
+                if u < v {
+                    let row = &neighbors[offsets[v] as usize
+                        ..offsets[v + 1] as usize];
+                    let p = row
+                        .binary_search(&(u as u32))
+                        .expect("co-membership is symmetric");
+                    eu.push(u as u32);
+                    ev.push(v as u32);
+                    epos_u.push(s as u32);
+                    epos_v.push(offsets[v] + p as u32);
+                    ew.push(two_beta * cooc[s] as f64);
+                }
+            }
+        }
+
+        // Greedy edge coloring: smallest color unused at either
+        // endpoint, canonical edge order. Classes are node-disjoint.
+        let nce = eu.len();
+        let mut vert_used: Vec<Vec<u32>> = vec![Vec::new(); nv];
+        let mut color = vec![0u32; nce];
+        let mut ncolors = 0u32;
+        for k in 0..nce {
+            let (u, v) = (eu[k] as usize, ev[k] as usize);
+            let mut c = 0u32;
+            while vert_used[u].contains(&c) || vert_used[v].contains(&c)
+            {
+                c += 1;
+            }
+            color[k] = c;
+            vert_used[u].push(c);
+            vert_used[v].push(c);
+            ncolors = ncolors.max(c + 1);
+        }
+        let nc = ncolors as usize;
+        let mut color_offsets = vec![0u32; nc + 1];
+        for &c in &color {
+            color_offsets[c as usize + 1] += 1;
+        }
+        for c in 0..nc {
+            color_offsets[c + 1] += color_offsets[c];
+        }
+        let mut cursor = color_offsets.clone();
+        let mut color_edges = vec![0u32; nce];
+        for (k, &c) in color.iter().enumerate() {
+            color_edges[cursor[c as usize] as usize] = k as u32;
+            cursor[c as usize] += 1;
+        }
+
+        let plan = SegmentPlan::from_csr_offsets(&offsets);
+        PairGraph {
+            num_vertices: nv,
+            offsets,
+            neighbors,
+            cooc,
+            mult,
+            plan,
+            eu,
+            ev,
+            epos_u,
+            epos_v,
+            ew,
+            color_offsets,
+            color_edges,
+        }
+    }
+
+    /// Directed message-slot count (2 per canonical edge).
+    pub fn num_slots(&self) -> usize {
+        self.neighbors.len()
+    }
+
+    /// Canonical (undirected) edge count.
+    pub fn num_edges(&self) -> usize {
+        self.eu.len()
+    }
+
+    /// Color-class count of the cached edge coloring.
+    pub fn num_colors(&self) -> usize {
+        self.color_offsets.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpp::{PoolDevice, SerialDevice};
+
+    fn model() -> MrfModel {
+        crate::bp::test_model(91)
+    }
+
+    #[test]
+    fn slots_are_symmetric_and_canonical_edges_consistent() {
+        let m = model();
+        let g = PairGraph::build(&SerialDevice, &m, 0.5);
+        assert_eq!(g.num_slots(), 2 * g.num_edges());
+        for k in 0..g.num_edges() {
+            let (u, v) = (g.eu[k], g.ev[k]);
+            assert!(u < v);
+            let (su, sv) =
+                (g.epos_u[k] as usize, g.epos_v[k] as usize);
+            assert_eq!(g.neighbors[su], v, "slot into u names v");
+            assert_eq!(g.neighbors[sv], u, "slot into v names u");
+            assert_eq!(g.cooc[su], g.cooc[sv], "cooc symmetric");
+            assert!(g.ew[k] > 0.0);
+        }
+    }
+
+    #[test]
+    fn color_classes_are_node_disjoint_and_cover_all_edges() {
+        let m = model();
+        let g = PairGraph::build(&SerialDevice, &m, 0.5);
+        let mut seen = vec![false; g.num_edges()];
+        for c in 0..g.num_colors() {
+            let (s, e) = (
+                g.color_offsets[c] as usize,
+                g.color_offsets[c + 1] as usize,
+            );
+            let mut touched = vec![false; g.num_vertices];
+            for &k in &g.color_edges[s..e] {
+                let k = k as usize;
+                assert!(!seen[k], "edge in one class only");
+                seen[k] = true;
+                for v in [g.eu[k] as usize, g.ev[k] as usize] {
+                    assert!(!touched[v], "class is node-disjoint");
+                    touched[v] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "coloring covers every edge");
+    }
+
+    #[test]
+    fn build_is_device_independent() {
+        let m = model();
+        let a = PairGraph::build(&SerialDevice, &m, 0.5);
+        for threads in [2, 4] {
+            let b = PairGraph::build(
+                &PoolDevice::new(threads, 64),
+                &m,
+                0.5,
+            );
+            assert_eq!(a, b, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn multiplicity_counts_hood_instances() {
+        let m = model();
+        let g = PairGraph::build(&SerialDevice, &m, 0.5);
+        let total: u32 = g.mult.iter().sum();
+        assert_eq!(total as usize, m.hoods.num_elements());
+    }
+}

@@ -1,0 +1,235 @@
+//! Dual decomposition engine — MPLP-style block-coordinate ascent
+//! with **certified optimality gaps** (DESIGN.md §12).
+//!
+//! Every other engine reports a primal energy with no statement of
+//! how far from optimal it is. This module optimizes the *dual* of
+//! the pairwise relaxation instead: the hood energy decomposes
+//! exactly into a binary Potts model ([`graph`]), whose LP dual is
+//! ascended by per-edge reparameterization updates ([`ascent`]). By
+//! weak duality the bound after ANY number of iterations — at ANY
+//! message values — is a true lower bound on every labeling's
+//! energy, so the engine can report `lower_bound` alongside the
+//! usual primal energy and the coordinator can derive a certified
+//! `optimality_gap` per slice ([`crate::coordinator::SliceReport`]).
+//!
+//! Layout mirrors the BP engine: [`DualEngine`] is generic over
+//! `&dyn Device`, draws every per-iteration tensor from its
+//! [`crate::dpp::Workspace`], and must match the plain-loop oracle
+//! ([`serial`]) bitwise on every device at any thread count.
+//!
+//! The reported bound is `best dual bound - scorer_slack`: the dual
+//! operates in f64 on the exact pairwise decomposition, while
+//! [`crate::mrf::config_energy`] rounds per-instance in f32, so a
+//! per-instance rounding allowance ([`scorer_slack`]) is subtracted
+//! once to keep `lower_bound <= config_energy(x)` for every labeling
+//! `x`. The slack is labeling-independent and ~1e-6 relative — far
+//! below any energy difference the engines care about.
+
+pub mod ascent;
+pub mod graph;
+pub mod serial;
+
+mod engine;
+
+pub use engine::DualEngine;
+pub use graph::PairGraph;
+
+use crate::dpp::{Device, Workspace};
+use crate::mrf::energy::Prepared;
+use crate::mrf::{MrfModel, Params};
+
+/// Dual-ascent parameters (`--dual-iters`, `--dual-tol`; JSON
+/// section `"dual"`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DualConfig {
+    /// Max ascent iterations per EM iteration.
+    pub iters: usize,
+    /// Early stop when one iteration improves the bound by less than
+    /// `tol * max(1, |bound|)` (relative). 0 stops at exact stall.
+    pub tol: f64,
+}
+
+impl Default for DualConfig {
+    fn default() -> Self {
+        DualConfig { iters: 100, tol: 1e-9 }
+    }
+}
+
+/// Outcome of one dual solve under fixed parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DualRun {
+    /// Primal decode: per-vertex argmin of the final beliefs.
+    pub labels: Vec<u8>,
+    /// Best dual bound reached — a lower bound on the pairwise
+    /// objective ([`pair_energy`]) of EVERY labeling.
+    pub bound: f64,
+    /// Bound after each iteration (monotone non-decreasing up to f64
+    /// noise).
+    pub history: Vec<f64>,
+    /// Iterations actually executed.
+    pub iters: usize,
+}
+
+/// One-shot dual solve on any device. The serial oracle
+/// ([`serial::solve`]) must match this bitwise — pinned by
+/// `tests/device_conformance.rs`.
+pub fn solve(
+    bk: &dyn Device,
+    model: &MrfModel,
+    prm: &Params,
+    cfg: &DualConfig,
+) -> DualRun {
+    let ws = Workspace::new();
+    let g = PairGraph::build(bk, model, prm.beta);
+    let nv = g.num_vertices;
+    let mut unary = vec![0.0f64; 2 * nv];
+    ascent::unaries_into(bk, model, &g, prm, &mut unary);
+    let mut msg = vec![0.0f64; 2 * g.num_slots()];
+    let mut bel = vec![0.0f64; 2 * nv];
+    let run =
+        ascent::run(bk, &ws, &g, &unary, &mut msg, &mut bel, cfg, false);
+    let mut labels = vec![0u8; nv];
+    ascent::decode(bk, &bel, &mut labels);
+    DualRun {
+        labels,
+        bound: run.best,
+        history: run.history,
+        iters: run.iters,
+    }
+}
+
+/// Dual unaries for a model under `prm` (the `mult_v * data_v` terms
+/// of the pairwise decomposition), for callers that evaluate
+/// [`pair_energy`] directly (tests, benches).
+pub fn unaries(
+    bk: &dyn Device,
+    model: &MrfModel,
+    g: &PairGraph,
+    prm: &Params,
+) -> Vec<f64> {
+    let mut out = vec![0.0f64; 2 * g.num_vertices];
+    ascent::unaries_into(bk, model, g, prm, &mut out);
+    out
+}
+
+/// The pairwise objective the dual bounds: unaries at the assigned
+/// labels plus `2 beta cooc` per disagreeing canonical edge, folded
+/// serially in index order. Equals the hood energy
+/// ([`crate::mrf::config_energy`]) in exact arithmetic; the two
+/// computed values differ by at most [`scorer_slack`].
+pub fn pair_energy(g: &PairGraph, unary: &[f64], labels: &[u8]) -> f64 {
+    let mut e = 0.0f64;
+    for (v, &l) in labels.iter().enumerate() {
+        e += unary[2 * v + l as usize];
+    }
+    for k in 0..g.num_edges() {
+        if labels[g.eu[k] as usize] != labels[g.ev[k] as usize] {
+            e += g.ew[k];
+        }
+    }
+    e
+}
+
+/// Labeling-independent allowance for the f32 rounding inside
+/// [`crate::mrf::config_energy`]: per hood-member instance, the
+/// scorer computes `fl(fl(data) + fl(beta * disagree))` in f32, so
+/// its value can sit below the exact pairwise term by a few ulps.
+/// Budgeting `1e-6 * (|e0| + |e1| + 2 beta size_h)` per instance
+/// (1e-6 > several f32 ulps of each addend, for either label) makes
+/// `bound - scorer_slack <= config_energy(x)` hold for every
+/// labeling `x`, which is the contract `lower_bound` ships with.
+pub fn scorer_slack(model: &MrfModel, prm: &Params) -> f64 {
+    const EPS: f64 = 1e-6;
+    let pp = Prepared::from_params(prm);
+    let beta = prm.beta as f64;
+    let h = &model.hoods;
+    let mut slack = 0.0f64;
+    for hd in 0..h.num_hoods() {
+        let size = h.hood_size(hd) as f64;
+        for &v in h.hood_members(hd) {
+            let y = model.y[v as usize];
+            let d0 = y - pp.mu[0];
+            let d1 = y - pp.mu[1];
+            let e0 = (d0 * d0 * pp.inv2s[0] + pp.lns[0]) as f64;
+            let e1 = (d1 * d1 * pp.inv2s[1] + pp.lns[1]) as f64;
+            slack += EPS * (e0.abs() + e1.abs() + 2.0 * beta * size);
+        }
+    }
+    slack
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpp::SerialDevice;
+    use crate::util::Pcg32;
+
+    fn fixed_params() -> Params {
+        Params { mu: [60.0, 180.0], sigma: [25.0, 25.0], beta: 0.5 }
+    }
+
+    #[test]
+    fn pair_energy_matches_hood_energy_within_slack() {
+        let model = crate::bp::test_model(71);
+        let prm = fixed_params();
+        let g = PairGraph::build(&SerialDevice, &model, prm.beta);
+        let un = unaries(&SerialDevice, &model, &g, &prm);
+        let slack = scorer_slack(&model, &prm);
+        assert!(slack > 0.0 && slack.is_finite());
+        let mut rng = Pcg32::seeded(9);
+        for _ in 0..8 {
+            let labels: Vec<u8> = (0..model.num_vertices())
+                .map(|_| (rng.next_u32() & 1) as u8)
+                .collect();
+            let pair = pair_energy(&g, &un, &labels);
+            let (_, hood) =
+                crate::mrf::config_energy(&model, &labels, &prm);
+            assert!(
+                (pair - hood).abs() <= slack,
+                "pair {pair} vs hood {hood} (slack {slack})"
+            );
+        }
+    }
+
+    #[test]
+    fn bound_monotone_and_below_decoded_primal() {
+        let model = crate::bp::test_model(72);
+        let prm = fixed_params();
+        let cfg = DualConfig::default();
+        let run = solve(&SerialDevice, &model, &prm, &cfg);
+        assert!(run.iters >= 1 && run.iters <= cfg.iters);
+        for w in run.history.windows(2) {
+            assert!(
+                w[1] >= w[0] - 1e-9 * w[0].abs().max(1.0),
+                "bound not monotone: {} -> {}",
+                w[0],
+                w[1]
+            );
+        }
+        let g = PairGraph::build(&SerialDevice, &model, prm.beta);
+        let un = unaries(&SerialDevice, &model, &g, &prm);
+        let primal = pair_energy(&g, &un, &run.labels);
+        assert!(
+            run.bound <= primal + 1e-9 * primal.abs().max(1.0),
+            "weak duality: bound {} vs primal {primal}",
+            run.bound
+        );
+    }
+
+    #[test]
+    fn serial_oracle_is_bitwise_identical() {
+        let model = crate::bp::test_model(73);
+        let prm = fixed_params();
+        let cfg = DualConfig { iters: 40, ..Default::default() };
+        let dpp = solve(&SerialDevice, &model, &prm, &cfg);
+        let oracle = serial::solve(&model, &prm, &cfg);
+        assert_eq!(dpp, oracle);
+    }
+
+    #[test]
+    fn default_config_sane() {
+        let cfg = DualConfig::default();
+        assert!(cfg.iters >= 1);
+        assert!(cfg.tol >= 0.0 && cfg.tol.is_finite());
+    }
+}

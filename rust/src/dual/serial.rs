@@ -1,0 +1,115 @@
+//! Serial oracle for the dual ascent — plain nested loops, no device,
+//! no workspace.
+//!
+//! Every per-item formula is the shared `#[inline]` function from
+//! [`super::ascent`] (`refresh_one`, `edge_apply`, `edge_slack`,
+//! `fold_bound`, `stop`), and the loops visit vertices, color
+//! classes, class edges, and bound terms in exactly the order the DPP
+//! path does — so DPP/serial bitwise equality at any thread count is
+//! structural (the conformance contract of DESIGN.md §9, pinned by
+//! `tests/device_conformance.rs`).
+
+use crate::dpp::SerialDevice;
+use crate::mrf::{MrfModel, Params};
+
+use super::ascent;
+use super::graph::PairGraph;
+use super::{DualConfig, DualRun};
+
+/// One-shot dual solve with straight loops. The graph build itself is
+/// device-independent, so sharing [`PairGraph::build`] keeps the
+/// structure identical by construction.
+pub fn solve(model: &MrfModel, prm: &Params, cfg: &DualConfig)
+    -> DualRun {
+    let g = PairGraph::build(&SerialDevice, model, prm.beta);
+    let nv = g.num_vertices;
+
+    let mut unary = vec![0.0f64; 2 * nv];
+    {
+        let pp = crate::mrf::energy::Prepared::from_params(prm);
+        for (v, u) in unary.chunks_exact_mut(2).enumerate() {
+            let y = model.y[v];
+            let d0 = y - pp.mu[0];
+            let d1 = y - pp.mu[1];
+            let e0 = d0 * d0 * pp.inv2s[0] + pp.lns[0];
+            let e1 = d1 * d1 * pp.inv2s[1] + pp.lns[1];
+            let m = g.mult[v] as f64;
+            u[0] = m * e0 as f64;
+            u[1] = m * e1 as f64;
+        }
+    }
+
+    let mut msg = vec![0.0f64; 2 * g.num_slots()];
+    let mut bel = vec![0.0f64; 2 * nv];
+    let ne = g.num_edges();
+    let mut vmin = vec![0.0f64; nv];
+    let mut eslack = vec![0.0f64; ne];
+    let mut history = Vec::with_capacity(cfg.iters);
+    let mut best = f64::NEG_INFINITY;
+    let mut iters = 0usize;
+
+    for it in 0..cfg.iters {
+        iters = it + 1;
+        // 1. Belief refresh.
+        for v in 0..nv {
+            let b = ascent::refresh_one(&g, &unary, &msg, v);
+            bel[2 * v] = b[0];
+            bel[2 * v + 1] = b[1];
+        }
+        // 2. Edge-colored Gauss-Seidel, class order then edge order.
+        for c in 0..g.num_colors() {
+            let (cs, ce) = (
+                g.color_offsets[c] as usize,
+                g.color_offsets[c + 1] as usize,
+            );
+            for &k in &g.color_edges[cs..ce] {
+                let k = k as usize;
+                let u = g.eu[k] as usize;
+                let v = g.ev[k] as usize;
+                let su = g.epos_u[k] as usize;
+                let sv = g.epos_v[k] as usize;
+                let bu = [bel[2 * u], bel[2 * u + 1]];
+                let bv = [bel[2 * v], bel[2 * v + 1]];
+                let mu = [msg[2 * su], msg[2 * su + 1]];
+                let mv = [msg[2 * sv], msg[2 * sv + 1]];
+                let (nbu, nbv, nu, nvv) =
+                    ascent::edge_apply(bu, bv, mu, mv, g.ew[k]);
+                bel[2 * u] = nbu[0];
+                bel[2 * u + 1] = nbu[1];
+                bel[2 * v] = nbv[0];
+                bel[2 * v + 1] = nbv[1];
+                msg[2 * su] = nu[0];
+                msg[2 * su + 1] = nu[1];
+                msg[2 * sv] = nvv[0];
+                msg[2 * sv + 1] = nvv[1];
+            }
+        }
+        // 3. Bound terms + the shared index-order fold.
+        for (v, out) in vmin.iter_mut().enumerate() {
+            *out = bel[2 * v].min(bel[2 * v + 1]);
+        }
+        for (k, out) in eslack.iter_mut().enumerate() {
+            let su = g.epos_u[k] as usize;
+            let sv = g.epos_v[k] as usize;
+            let mu = [msg[2 * su], msg[2 * su + 1]];
+            let mv = [msg[2 * sv], msg[2 * sv + 1]];
+            *out = ascent::edge_slack(mu, mv, g.ew[k]);
+        }
+        let b = ascent::fold_bound(&vmin, &eslack);
+        let prev = history.last().copied();
+        history.push(b);
+        if b > best {
+            best = b;
+        }
+        if let Some(prev) = prev {
+            if ascent::stop(prev, b, cfg.tol) {
+                break;
+            }
+        }
+    }
+
+    let labels: Vec<u8> = (0..nv)
+        .map(|v| u8::from(bel[2 * v + 1] < bel[2 * v]))
+        .collect();
+    DualRun { labels, bound: best, history, iters }
+}

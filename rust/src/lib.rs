@@ -8,7 +8,9 @@
 //! fine-grained DPP engine, an AOT-compiled XLA/PJRT accelerator
 //! path (JAX + Pallas at build time, rust-only at run time), and a
 //! data-parallel loopy belief propagation engine ([`bp`]) with
-//! residual message scheduling. Above the engines, a sharded slice
+//! residual message scheduling, and a dual-decomposition engine
+//! ([`dual`]) whose MPLP-style ascent certifies per-run optimality
+//! gaps. Above the engines, a sharded slice
 //! scheduler and batch serving front end ([`sched`]) turn the
 //! per-slice pipeline into a throughput system, observed end to end
 //! by the [`telemetry`] layer (scoped metric recorders, span tracing,
@@ -23,6 +25,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod dpp;
+pub mod dual;
 pub mod graph;
 pub mod image;
 pub mod json;

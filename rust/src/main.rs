@@ -160,6 +160,11 @@ fn cmd_segment(args: &[String]) -> Result<()> {
         .opt("bp-frontier",
              "bp engine: commit messages with residual >= ratio * max",
              None)
+        .opt("dual-iters",
+             "dual engine: max ascent iterations per EM iteration", None)
+        .opt("dual-tol",
+             "dual engine: relative bound-improvement stop threshold",
+             None)
         .flag("profile",
               "record primitive wall time + workspace counters and \
                print the timing table")
@@ -197,6 +202,12 @@ fn cmd_segment(args: &[String]) -> Result<()> {
     }
     if let Some(f) = m.get_parse::<f32>("bp-frontier")? {
         cfg.bp.frontier = f;
+    }
+    if let Some(i) = m.get_parse::<usize>("dual-iters")? {
+        cfg.dual.iters = i;
+    }
+    if let Some(t) = m.get_parse::<f64>("dual-tol")? {
+        cfg.dual.tol = t;
     }
     if m.flag("profile") {
         cfg.telemetry.profile = true;
@@ -251,6 +262,10 @@ fn cmd_segment(args: &[String]) -> Result<()> {
         log_info!("{}", metrics::summary(c));
     }
     log_info!("porosity {:.3}", report.porosity);
+    if let (Some(lb), Some(gap)) =
+        (report.lower_bound(), report.optimality_gap()) {
+        log_info!("certified lower bound {lb:.3} (optimality gap {gap:.3e})");
+    }
 
     if let Some(out) = m.get("out") {
         report.output.write_raw(Path::new(out))?;

@@ -223,6 +223,7 @@ fn drive_em(
         energy: *em_window.history().last().unwrap_or(&0.0),
         history: em_window.history().to_vec(), // alloc-ok: once per run
         params: prm,
+        lower_bound: None,
     }
 }
 

@@ -20,8 +20,10 @@
 //! Engines: [`serial::SerialEngine`] (baseline),
 //! [`reference::ReferenceEngine`] (coarse-parallel OpenMP analog),
 //! [`dpp::DppEngine`] (the paper's contribution),
-//! [`xla::XlaEngine`] (AOT accelerator path), and
-//! [`crate::bp::BpEngine`] (loopy belief propagation, DESIGN.md §6).
+//! [`xla::XlaEngine`] (AOT accelerator path),
+//! [`crate::bp::BpEngine`] (loopy belief propagation, DESIGN.md §6),
+//! and [`crate::dual::DualEngine`] (dual block-coordinate ascent with
+//! certified lower bounds, DESIGN.md §12).
 //! Construct by kind through [`make_engine`].
 
 pub mod dpp;
@@ -100,6 +102,11 @@ pub struct EmResult {
     pub history: Vec<f64>,
     /// Final estimated parameters.
     pub params: Params,
+    /// Certified lower bound on the final labeling energy (same
+    /// parameters as `energy`), from engines that can prove one via
+    /// weak duality ([`crate::dual`]); `None` for engines that
+    /// cannot certify.
+    pub lower_bound: Option<f64>,
 }
 
 /// An EM/MAP optimization engine.
@@ -118,6 +125,7 @@ pub struct EngineResources {
     pub device: Arc<dyn Device>,
     pub runtime: Option<Arc<EmRuntime>>,
     pub bp: crate::bp::BpConfig,
+    pub dual: crate::dual::DualConfig,
 }
 
 impl EngineResources {
@@ -131,6 +139,7 @@ impl EngineResources {
             device: device.into_device(),
             runtime: None,
             bp: crate::bp::BpConfig::default(),
+            dual: crate::dual::DualConfig::default(),
         }
     }
 }
@@ -158,6 +167,10 @@ pub fn make_engine(kind: EngineKind, res: &EngineResources)
         EngineKind::Bp => Box::new(crate::bp::BpEngine::new(
             Arc::clone(&res.device),
             res.bp,
+        )),
+        EngineKind::Dual => Box::new(crate::dual::DualEngine::new(
+            Arc::clone(&res.device),
+            res.dual,
         )),
     })
 }
@@ -379,6 +392,7 @@ mod tests {
             (EngineKind::Reference, "reference"),
             (EngineKind::Dpp, "dpp"),
             (EngineKind::Bp, "bp"),
+            (EngineKind::Dual, "dual"),
         ] {
             let e = make_engine(kind, &res).unwrap();
             assert_eq!(e.name(), name);

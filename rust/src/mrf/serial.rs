@@ -76,6 +76,7 @@ impl Engine for SerialEngine {
             energy: *em_window.history().last().unwrap_or(&0.0),
             history: em_window.history().to_vec(),
             params: prm,
+            lower_bound: None,
         }
     }
 }

@@ -120,6 +120,7 @@ impl Engine for XlaEngine {
             energy: *em_window.history().last().unwrap_or(&0.0),
             history: em_window.history().to_vec(),
             params: prm,
+            lower_bound: None,
         }
     }
 }
@@ -185,6 +186,7 @@ impl XlaEngine {
             energy: *em_window.history().last().unwrap_or(&0.0),
             history: em_window.history().to_vec(),
             params: prm,
+            lower_bound: None,
         }
     }
 }

@@ -229,6 +229,7 @@ pub fn run_slices(
     let kind = cfg.engine;
     let runtime = res.runtime.clone();
     let bp = res.bp;
+    let dual = res.dual;
     let threads = cfg.threads;
     // Hand the coordinator's own device down so a pool-free device
     // (notably accel with loaded artifacts) is reused instead of
@@ -242,6 +243,7 @@ pub fn run_slices(
             device: Arc::clone(dev),
             runtime: runtime.clone(),
             bp,
+            dual,
         };
         mrf::make_engine(kind, &lane_res)
             .expect("engine construction already succeeded in the probe")
@@ -381,6 +383,10 @@ fn run_serial(
             queue_wait_secs: 0.0,
             opt_secs,
             final_energy: res.energy,
+            lower_bound: res.lower_bound,
+            optimality_gap: res
+                .lower_bound
+                .map(|lb| (res.energy - lb).max(0.0)),
         });
         crate::log_debug!(
             "slice {z}: {} regions, {} hoods, init {:.3}s opt {:.3}s",
@@ -594,6 +600,10 @@ where
                         queue_wait_secs: wait_secs,
                         opt_secs: secs,
                         final_energy: res.energy,
+                        lower_bound: res.lower_bound,
+                        optimality_gap: res
+                            .lower_bound
+                            .map(|lb| (res.energy - lb).max(0.0)),
                     });
                 }
                 (busy, timeline)

@@ -1,0 +1,116 @@
+//! Shared fixtures for the oracle/certificate integration tests:
+//! tiny grid models small enough for exhaustive enumeration, a
+//! production-shaped porous model built through the public pipeline,
+//! and the brute-force optima the dual certificates are gated against.
+#![allow(dead_code)] // each test binary uses a subset
+
+use dpp_pmrf::config::OversegConfig;
+use dpp_pmrf::dpp::Backend;
+use dpp_pmrf::dual::{self, PairGraph};
+use dpp_pmrf::graph::Csr;
+use dpp_pmrf::image::{noise, synth};
+use dpp_pmrf::mce;
+use dpp_pmrf::mrf::{self, hoods, MrfModel, Params};
+use dpp_pmrf::overseg::oversegment;
+use dpp_pmrf::util::Pcg32;
+
+/// 4-connected `w x h` grid in CSR form, vertices row-major. Neighbor
+/// lists come out sorted (up < left < right < down in linear ids).
+pub fn grid_csr(w: usize, h: usize) -> Csr {
+    let nv = w * h;
+    let mut offsets = vec![0u32; nv + 1];
+    let mut neighbors = Vec::new();
+    for y in 0..h {
+        for x in 0..w {
+            let v = y * w + x;
+            let before = neighbors.len();
+            if y > 0 {
+                neighbors.push((v - w) as u32);
+            }
+            if x > 0 {
+                neighbors.push((v - 1) as u32);
+            }
+            if x + 1 < w {
+                neighbors.push((v + 1) as u32);
+            }
+            if y + 1 < h {
+                neighbors.push((v + w) as u32);
+            }
+            offsets[v + 1] =
+                offsets[v] + (neighbors.len() - before) as u32;
+        }
+    }
+    Csr { offsets, neighbors }
+}
+
+/// Tiny random Potts model on a 4-connected grid: observations drawn
+/// uniformly from 0..256, neighborhoods built through the real
+/// MCE + hoods pipeline so engines see production structure.
+pub fn grid_model(w: usize, h: usize, seed: u64) -> MrfModel {
+    let graph = grid_csr(w, h);
+    let cliques = mce::enumerate_serial(&graph);
+    let hoods = hoods::build_serial(&graph, &cliques, w * h);
+    let mut rng = Pcg32::seeded(seed);
+    let y: Vec<f32> =
+        (0..w * h).map(|_| (rng.next_u32() % 256) as f32).collect();
+    MrfModel { graph, y, hoods }
+}
+
+/// Fixed scoring parameters for cross-engine comparisons: engines
+/// estimate their own (mu, sigma) per run, so quality gates score
+/// every engine's final labels under one shared parameter set.
+pub fn fixed_params() -> Params {
+    Params { mu: [60.0, 180.0], sigma: [25.0, 25.0], beta: 0.5 }
+}
+
+/// Production-shaped model through the public pipeline (the crate's
+/// unit tests use `bp::test_model`, which is `pub(crate)`-only).
+pub fn porous_model(seed: u64) -> MrfModel {
+    let v = synth::porous_ground_truth(48, 48, 1, 0.42, seed);
+    let mut input = v.clone();
+    noise::additive_gaussian(&mut input, 60.0, seed);
+    let seg = oversegment(
+        &Backend::Serial,
+        &input.slice(0),
+        &OversegConfig { scale: 64.0, min_region: 4 },
+    );
+    mrf::build_model_serial(&seg)
+}
+
+/// Exhaustive MAP under the shared hood energy
+/// ([`mrf::config_energy`]): the exact optimum every engine's primal
+/// energy is gated against. Enumerates all `2^nv` labelings, so the
+/// model must stay at 12 vertices or fewer.
+pub fn brute_force_config(model: &MrfModel, prm: &Params)
+    -> (Vec<u8>, f64) {
+    let nv = model.num_vertices();
+    assert!(nv <= 12, "exhaustive oracle is for tiny grids (nv = {nv})");
+    let mut best = f64::INFINITY;
+    let mut best_labels = vec![0u8; nv];
+    for mask in 0u32..(1u32 << nv) {
+        let labels: Vec<u8> =
+            (0..nv).map(|v| ((mask >> v) & 1) as u8).collect();
+        let (_, e) = mrf::config_energy(model, &labels, prm);
+        if e < best {
+            best = e;
+            best_labels = labels;
+        }
+    }
+    (best_labels, best)
+}
+
+/// Exhaustive optimum of the dual engine's own pairwise objective
+/// ([`dual::pair_energy`]) — the f64 quantity its bound certifies,
+/// free of the per-instance f32 rounding `config_energy` carries
+/// (the two differ by at most [`dual::scorer_slack`]).
+pub fn brute_force_pair(g: &PairGraph, unary: &[f64]) -> f64 {
+    let nv = g.num_vertices;
+    assert!(nv <= 12, "exhaustive oracle is for tiny grids (nv = {nv})");
+    let mut best = f64::INFINITY;
+    for mask in 0u32..(1u32 << nv) {
+        let labels: Vec<u8> =
+            (0..nv).map(|v| ((mask >> v) & 1) as u8).collect();
+        best = best.min(dual::pair_energy(g, unary, &labels));
+    }
+    best
+}

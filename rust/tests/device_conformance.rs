@@ -15,12 +15,15 @@
 //! chunk-ordered per device configuration — those are exercised here
 //! with exact integer ops only.
 
+mod common;
+
 use std::path::Path;
 use std::sync::Arc;
 
 use dpp_pmrf::dpp::{self, Backend, Device, DeviceKind, IntoDevice,
                     OfflineAcceleratorDevice, Pipeline, PoolDevice,
                     SegmentPlan, SerialDevice, SharedSlice, Workspace};
+use dpp_pmrf::dual;
 use dpp_pmrf::pool::Pool;
 use dpp_pmrf::util::Pcg32;
 
@@ -441,6 +444,28 @@ fn pipelines_match_serial_bitwise() {
             let (got_bits, got_total) = run_on(&*dev);
             assert_eq!(got_bits, want_bits, "{tag} pipeline stage n={n}");
             assert_eq!(got_total, want_total, "{tag} pipeline total n={n}");
+        }
+    }
+}
+
+#[test]
+fn dual_ascent_matches_its_serial_oracle_bitwise() {
+    // ISSUE 7 acceptance: the dual engine's DPP path — graph build,
+    // belief refresh, colored edge updates, bound fold, decode — must
+    // match the plain-loop serial oracle ([`dual::serial::solve`])
+    // bitwise on every registered device, labels, bound, AND history.
+    let prm = common::fixed_params();
+    let cfg = dual::DualConfig::default();
+    for seed in [17u64, 18] {
+        let model = common::porous_model(seed);
+        let want = dual::serial::solve(&model, &prm, &cfg);
+        let on_serial = dual::solve(&SerialDevice, &model, &prm, &cfg);
+        assert_eq!(on_serial, want, "seed {seed}: SerialDevice");
+        for (tag, dev) in devices() {
+            let got = dual::solve(&*dev, &model, &prm, &cfg);
+            assert_eq!(got.bound.to_bits(), want.bound.to_bits(),
+                       "{tag} seed {seed}: bound drifted");
+            assert_eq!(got, want, "{tag} seed {seed}");
         }
     }
 }

@@ -1,0 +1,180 @@
+//! Weak-duality property suite (ISSUE 7): the dual ascent's bound must
+//! be monotone non-decreasing across iterations, sit at or below the
+//! exhaustive optimum on tiny grids (and be tight there against its
+//! own f64 pairwise objective — binary Potts with non-negative edge
+//! weights is submodular, where MPLP closes the gap), lower-bound
+//! every engine's primal energy on production-sized models, and come
+//! out bitwise identical across devices and scheduler lane counts.
+
+mod common;
+
+use dpp_pmrf::config::{DatasetConfig, EngineKind, MrfConfig, RunConfig};
+use dpp_pmrf::coordinator::{Coordinator, RunReport};
+use dpp_pmrf::dpp::{PoolDevice, SerialDevice};
+use dpp_pmrf::dual::{self, DualConfig, PairGraph};
+use dpp_pmrf::image;
+use dpp_pmrf::mrf::{self, EngineResources};
+use dpp_pmrf::pool::Pool;
+
+const GRIDS: [(usize, usize); 3] = [(2, 3), (3, 3), (3, 4)];
+
+#[test]
+fn bound_is_monotone_and_tight_on_tiny_grids() {
+    let prm = common::fixed_params();
+    // Generous budget: tightness needs convergence, not just ascent.
+    let cfg = DualConfig { iters: 200, ..Default::default() };
+    for (w, h) in GRIDS {
+        for seed in [31u64, 32, 33] {
+            let model = common::grid_model(w, h, seed);
+            let run = dual::solve(&SerialDevice, &model, &prm, &cfg);
+
+            // Monotone non-decreasing across iterations (up to f64
+            // accumulation noise).
+            for (i, pair) in run.history.windows(2).enumerate() {
+                assert!(
+                    pair[1] >= pair[0] - 1e-9 * pair[0].abs().max(1.0),
+                    "{w}x{h} seed {seed}: bound fell at iter {}: \
+                     {} -> {}",
+                    i + 1,
+                    pair[0],
+                    pair[1]
+                );
+            }
+
+            // Weak duality + tightness against the dual's own f64
+            // pairwise objective: bound <= optimum always, and equal
+            // at convergence on these submodular instances.
+            let g = PairGraph::build(&SerialDevice, &model, prm.beta);
+            let unary = dual::unaries(&SerialDevice, &model, &g, &prm);
+            let pair_opt = common::brute_force_pair(&g, &unary);
+            let scale = pair_opt.abs().max(1.0);
+            assert!(
+                run.bound <= pair_opt + 1e-9 * scale,
+                "{w}x{h} seed {seed}: bound {} above optimum {pair_opt}",
+                run.bound
+            );
+            assert!(
+                run.bound >= pair_opt - 1e-9 * scale,
+                "{w}x{h} seed {seed}: bound {} not tight vs {pair_opt}",
+                run.bound
+            );
+
+            // The reported certificate (bound minus scorer slack) never
+            // exceeds the exhaustive optimum of the f32-scored hood
+            // energy — the acceptance inequality at its tightest.
+            let (_, opt) = common::brute_force_config(&model, &prm);
+            let lower = run.bound - dual::scorer_slack(&model, &prm);
+            assert!(
+                lower <= opt,
+                "{w}x{h} seed {seed}: certificate {lower} beat the \
+                 exhaustive optimum {opt}"
+            );
+        }
+    }
+}
+
+#[test]
+fn certificate_lower_bounds_every_engine_primal() {
+    let prm = common::fixed_params();
+    let model = common::porous_model(41);
+    let run =
+        dual::solve(&SerialDevice, &model, &prm, &DualConfig::default());
+    let lower = run.bound - dual::scorer_slack(&model, &prm);
+    assert!(lower.is_finite());
+
+    // The dual's own primal decode first...
+    let (_, own) = mrf::config_energy(&model, &run.labels, &prm);
+    assert!(lower <= own, "certificate {lower} above own decode {own}");
+
+    // ...then every engine's final labels, scored under the same
+    // fixed parameters the bound was computed for (weak duality holds
+    // for EVERY labeling of that objective).
+    let res = EngineResources::new(Pool::serial(), SerialDevice);
+    for kind in [EngineKind::Serial, EngineKind::Reference,
+                 EngineKind::Dpp, EngineKind::Bp, EngineKind::Dual] {
+        let engine = mrf::make_engine(kind, &res).unwrap();
+        let out = engine.run(&model, &MrfConfig::default());
+        let (_, e) = mrf::config_energy(&model, &out.labels, &prm);
+        assert!(
+            lower <= e,
+            "{}: certificate {lower} exceeds primal {e}",
+            engine.name()
+        );
+    }
+}
+
+#[test]
+fn solve_is_device_independent_bitwise() {
+    let prm = common::fixed_params();
+    let cfg = DualConfig::default();
+    for seed in [61u64, 62] {
+        let model = common::porous_model(seed);
+        let want = dual::solve(&SerialDevice, &model, &prm, &cfg);
+        for threads in [1usize, 2, 4] {
+            let dev = PoolDevice::new(threads, 64);
+            let got = dual::solve(&dev, &model, &prm, &cfg);
+            assert_eq!(
+                got.bound.to_bits(),
+                want.bound.to_bits(),
+                "seed {seed} t{threads}: bound drifted"
+            );
+            assert_eq!(got, want, "seed {seed} t{threads}");
+        }
+    }
+}
+
+#[test]
+fn coordinator_dual_runs_certify_across_lanes() {
+    let mut cfg = RunConfig {
+        dataset: DatasetConfig {
+            width: 64,
+            height: 64,
+            slices: 4,
+            ..Default::default()
+        },
+        engine: EngineKind::Dual,
+        threads: 2,
+        ..Default::default()
+    };
+    let ds = image::generate(&cfg.dataset);
+    let mut baseline: Option<RunReport> = None;
+    for lanes in [1usize, 2, 4] {
+        cfg.sched.lanes = lanes;
+        let report =
+            Coordinator::new(cfg.clone()).unwrap().run(&ds).unwrap();
+        assert_eq!(report.engine, "dual");
+
+        // Every slice certifies: finite bound, gap >= 0, bound below
+        // the slice's own final energy.
+        for s in &report.slices {
+            let lb = s.lower_bound.expect("dual engine certifies");
+            assert!(lb.is_finite(), "lanes {lanes} slice {}", s.z);
+            assert!(lb <= s.final_energy,
+                    "lanes {lanes} slice {}: {lb} > {}",
+                    s.z, s.final_energy);
+            let gap = s.optimality_gap.expect("gap present");
+            assert!(gap >= 0.0, "lanes {lanes} slice {}: gap {gap}", s.z);
+        }
+        let lb = report.lower_bound().expect("run-level bound");
+        assert!(lb.is_finite());
+        assert!(report.optimality_gap().unwrap() >= 0.0);
+
+        // Bitwise parity across lane counts — outputs, energies, AND
+        // certificates.
+        match &baseline {
+            None => baseline = Some(report),
+            Some(b) => {
+                assert_eq!(report.output.data, b.output.data,
+                           "lanes {lanes}: output drifted");
+                for (a, s) in report.slices.iter().zip(&b.slices) {
+                    assert_eq!(a.final_energy.to_bits(),
+                               s.final_energy.to_bits(),
+                               "lanes {lanes} slice {}", a.z);
+                    assert_eq!(a.lower_bound.unwrap().to_bits(),
+                               s.lower_bound.unwrap().to_bits(),
+                               "lanes {lanes} slice {}", a.z);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Report-contract regression (ISSUE 7): `RunReport::to_json` is the
+//! surface benches, the CI smoke checks, and downstream dashboards
+//! scrape — pin its key set at both the run and slice level, and pin
+//! that the certificate fields (`lower_bound`, `optimality_gap`) are
+//! present-but-null for non-certifying engines and finite/ordered for
+//! the dual engine.
+
+use dpp_pmrf::config::{DatasetConfig, EngineKind, RunConfig};
+use dpp_pmrf::coordinator::Coordinator;
+use dpp_pmrf::image;
+use dpp_pmrf::json::Value;
+
+fn report_json(engine: EngineKind) -> Value {
+    let cfg = RunConfig {
+        dataset: DatasetConfig {
+            width: 64,
+            height: 64,
+            slices: 2,
+            ..Default::default()
+        },
+        engine,
+        threads: 2,
+        ..Default::default()
+    };
+    let ds = image::generate(&cfg.dataset);
+    Coordinator::new(cfg).unwrap().run(&ds).unwrap().to_json()
+}
+
+fn keys(v: &Value) -> Vec<&str> {
+    v.as_object()
+        .expect("JSON object")
+        .keys()
+        .map(String::as_str)
+        .collect()
+}
+
+/// The run-level contract on a synthetic dataset (ground truth
+/// present, so the confusion metrics appear).
+const RUN_KEYS: [&str; 27] = [
+    "accuracy", "device", "device_fused_regions", "device_offload",
+    "device_threaded", "em_iters", "engine", "exec", "inflight_cap",
+    "job_latency", "lane_occupancy", "lane_timeline", "lanes",
+    "lower_bound", "map_iters", "mean_init_secs", "mean_opt_secs",
+    "optimality_gap", "peak_inflight", "porosity", "precision",
+    "queue_wait", "recall", "slice_reports", "slices", "slices_per_sec",
+    "total_secs",
+];
+
+/// The per-slice row contract.
+const SLICE_KEYS: [&str; 13] = [
+    "elements", "em_iters", "final_energy", "hoods", "init_secs",
+    "lane", "lower_bound", "map_iters", "opt_secs", "optimality_gap",
+    "queue_wait_secs", "regions", "z",
+];
+
+fn assert_schema(j: &Value) {
+    let mut want: Vec<&str> = RUN_KEYS.to_vec();
+    want.sort_unstable();
+    assert_eq!(keys(j), want, "run-level key set changed");
+    let rows = j.get("slice_reports").and_then(Value::as_array).unwrap();
+    assert!(!rows.is_empty());
+    let mut want: Vec<&str> = SLICE_KEYS.to_vec();
+    want.sort_unstable();
+    for row in rows {
+        assert_eq!(keys(row), want, "slice-row key set changed");
+    }
+}
+
+#[test]
+fn non_certifying_engine_reports_null_certificates() {
+    let j = report_json(EngineKind::Serial);
+    assert_schema(&j);
+    // Present-but-null: consumers probe one stable schema and need
+    // not special-case engines without certificates.
+    assert_eq!(j.get("lower_bound"), Some(&Value::Null));
+    assert_eq!(j.get("optimality_gap"), Some(&Value::Null));
+    for row in j.get("slice_reports").and_then(Value::as_array).unwrap() {
+        assert_eq!(row.get("lower_bound"), Some(&Value::Null));
+        assert_eq!(row.get("optimality_gap"), Some(&Value::Null));
+    }
+}
+
+#[test]
+fn dual_engine_reports_finite_ordered_certificates() {
+    let j = report_json(EngineKind::Dual);
+    assert_schema(&j);
+    let lb = j
+        .get("lower_bound")
+        .and_then(Value::as_f64)
+        .expect("dual run carries a numeric lower bound");
+    assert!(lb.is_finite());
+    let gap = j
+        .get("optimality_gap")
+        .and_then(Value::as_f64)
+        .expect("dual run carries a numeric gap");
+    assert!(gap >= 0.0, "gap {gap}");
+    let mut sum = 0.0f64;
+    for row in j.get("slice_reports").and_then(Value::as_array).unwrap() {
+        let slb = row
+            .get("lower_bound")
+            .and_then(Value::as_f64)
+            .expect("per-slice bound");
+        assert!(slb.is_finite());
+        let sgap = row
+            .get("optimality_gap")
+            .and_then(Value::as_f64)
+            .expect("per-slice gap");
+        assert!(sgap >= 0.0, "slice gap {sgap}");
+        let energy =
+            row.get("final_energy").and_then(Value::as_f64).unwrap();
+        assert!(slb <= energy, "slice bound {slb} above energy {energy}");
+        sum += slb;
+    }
+    // Run-level bound is the per-slice sum (energies are additive).
+    assert!((lb - sum).abs() <= 1e-9 * sum.abs().max(1.0),
+            "run bound {lb} vs slice sum {sum}");
+}
