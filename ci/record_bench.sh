@@ -1,0 +1,73 @@
+#!/usr/bin/env bash
+# Record the perf trajectory (ISSUE 8): run the bench suite and fold
+# every machine-readable result into BENCH_8.json (git sha + bench ->
+# metric -> value), the first point on the trajectory ROADMAP.md keeps
+# flagging as empty.
+#
+# Usage: ci/record_bench.sh [bench ...]
+#   DPP_PMRF_BENCH_SCALE=smoke|paper|WxHxS   workload size (default smoke)
+#   OUT=BENCH_8.json                         output path
+#
+# Needs: a cargo toolchain + jq. Each bench is a harness=false binary
+# that prints a table and writes bench_results/<bench>.json
+# (alloc_churn additionally writes BENCH_5.json, folded in too).
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+OUT="${OUT:-BENCH_8.json}"
+export DPP_PMRF_BENCH_SCALE="${DPP_PMRF_BENCH_SCALE:-smoke}"
+
+# Default suite: one bench per perf surface the repo makes claims
+# about — end-to-end throughput, the zero-allocation steady state
+# (which now also covers the disarmed obs hooks), certificate
+# tightness, and the engine comparison.
+benches=("$@")
+if [ "${#benches[@]}" -eq 0 ]; then
+    benches=(throughput alloc_churn dual_gap bp_vs_map)
+fi
+
+rm -rf bench_results
+for b in "${benches[@]}"; do
+    echo "== cargo bench --bench $b (scale $DPP_PMRF_BENCH_SCALE) =="
+    cargo bench --bench "$b"
+done
+
+sha="$(git rev-parse HEAD 2>/dev/null || echo unknown)"
+
+files=()
+for f in bench_results/*.json BENCH_5.json; do
+    [ -f "$f" ] && files+=("$f")
+done
+if [ "${#files[@]}" -eq 0 ]; then
+    echo "error: no bench wrote a machine-readable result" >&2
+    exit 1
+fi
+
+# Fold each result file's rows into {bench: {metric: value}}: a
+# metric name is the row's string-valued labels joined k=v with '/',
+# suffixed with the numeric field's name.
+jq -n --arg sha "$sha" --arg scale "$DPP_PMRF_BENCH_SCALE" '
+  def metric_rows:
+    (.rows // .) | map(
+      . as $row |
+      ( [ to_entries[]
+          | select(.value | type == "string")
+          | "\(.key)=\(.value)" ] | join("/") ) as $labels |
+      [ $row | to_entries[]
+        | select(.value | type == "number")
+        | { key: (if $labels == "" then .key
+                  else "\($labels)/\(.key)" end),
+            value: .value } ]
+    ) | add // [] | from_entries;
+  { git_sha: $sha,
+    scale: $scale,
+    benches:
+      [ inputs
+        | { key: (input_filename
+                  | sub(".*/"; "") | sub("\\.json$"; "")),
+            value: metric_rows } ]
+      | from_entries }
+' "${files[@]}" > "$OUT"
+
+echo "wrote $OUT ($(jq '.benches | length' "$OUT") benches, sha $sha)"

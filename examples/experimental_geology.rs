@@ -9,7 +9,7 @@
 use dpp_pmrf::config::{DatasetConfig, DatasetKind, EngineKind, RunConfig};
 use dpp_pmrf::coordinator::Coordinator;
 use dpp_pmrf::image;
-use dpp_pmrf::metrics::{self, Confusion};
+use dpp_pmrf::eval::{self as metrics, Confusion};
 
 fn main() -> anyhow::Result<()> {
     let dataset_cfg = DatasetConfig {

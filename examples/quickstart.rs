@@ -9,7 +9,7 @@ use dpp_pmrf::config::{DatasetConfig, EngineKind, MrfConfig, RunConfig};
 use dpp_pmrf::coordinator::Coordinator;
 use dpp_pmrf::dpp::{Backend, SegmentPlan};
 use dpp_pmrf::image;
-use dpp_pmrf::metrics;
+use dpp_pmrf::eval as metrics;
 use dpp_pmrf::mrf::dpp::{DppEngine, PairMode};
 use dpp_pmrf::mrf::Engine;
 use dpp_pmrf::pool::Pool;

@@ -11,7 +11,7 @@
 use dpp_pmrf::config::{DatasetConfig, EngineKind, RunConfig};
 use dpp_pmrf::coordinator::Coordinator;
 use dpp_pmrf::image::{self, threshold};
-use dpp_pmrf::metrics::{self, Confusion};
+use dpp_pmrf::eval::{self as metrics, Confusion};
 
 fn main() -> anyhow::Result<()> {
     let dims: Vec<usize> = std::env::args()

@@ -9,7 +9,7 @@
 use dpp_pmrf::config::{DatasetConfig, EngineKind, RunConfig};
 use dpp_pmrf::coordinator::Coordinator;
 use dpp_pmrf::image;
-use dpp_pmrf::metrics;
+use dpp_pmrf::eval as metrics;
 
 fn main() -> anyhow::Result<()> {
     let dims: Vec<usize> = std::env::args()

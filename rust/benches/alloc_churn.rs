@@ -204,6 +204,32 @@ fn main() {
         ("span_allocs_per_1000", (span_calls as usize).into()),
     ]));
 
+    // ---- observability off: disarmed hooks allocate nothing ----
+    {
+        let _g = dpp_pmrf::obs::obs_test_lock();
+        assert!(!dpp_pmrf::obs::live(), "nothing armed in this bench");
+        let (obs_calls, obs_bytes) = alloc_delta(|| {
+            for i in 0..1000u64 {
+                dpp_pmrf::obs::tick();
+                dpp_pmrf::obs::map_sample(0, i as usize, 0.0, 0);
+                dpp_pmrf::obs::bp_sample(0, i as usize, 0.0, 0.5, 0);
+                dpp_pmrf::obs::dual_sample(0, i as usize, 0.0, 0.0, 0.0);
+            }
+        });
+        assert_eq!(
+            (obs_calls, obs_bytes),
+            (0, 0),
+            "disarmed obs hooks must not allocate"
+        );
+        println!("obs off: 1000 tick/map/bp/dual hook quads -> \
+                  {obs_bytes} B in {obs_calls} allocs");
+        rows.push(Value::object(vec![
+            ("level", Value::str("obs_off")),
+            ("hook_bytes_per_1000", (obs_bytes as usize).into()),
+            ("hook_allocs_per_1000", (obs_calls as usize).into()),
+        ]));
+    }
+
     // ---- engine-level: marginal bytes per extra MAP iteration ----
     let model = small_model(5);
     let cfg_short = MrfConfig { fixed_iters: true, em_iters: 2,

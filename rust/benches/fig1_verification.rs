@@ -11,7 +11,7 @@ use dpp_pmrf::bench_support::{workload, Scale};
 use dpp_pmrf::config::{DatasetKind, EngineKind};
 use dpp_pmrf::coordinator::Coordinator;
 use dpp_pmrf::image::threshold;
-use dpp_pmrf::metrics::{self, Confusion};
+use dpp_pmrf::eval::{self as metrics, Confusion};
 
 fn main() {
     let scale = Scale::from_env();

@@ -98,6 +98,7 @@ impl Engine for BpEngine {
             sweep::unaries_into(bk, model, &prm, &mut unary);
             let bp_run = sweep::run(
                 bk, model, &g, &unary, &mut st, &self.bp, cfg.fixed_iters,
+                em_iters - 1,
             );
             total_sweeps += bp_run.sweeps;
             sweep::decode(bk, model, &g, &unary, &mut st, &mut labels);

@@ -117,7 +117,7 @@ pub fn solve(
     let g = BpGraph::build(bk, model, prm.beta);
     let unary = sweep::unaries(bk, model, prm);
     let mut st = BpState::new(g.num_edges(), model.num_vertices());
-    let run = sweep::run(bk, model, &g, &unary, &mut st, cfg, false);
+    let run = sweep::run(bk, model, &g, &unary, &mut st, cfg, false, 0);
     let mut labels = vec![0u8; model.num_vertices()];
     sweep::decode(bk, model, &g, &unary, &mut st, &mut labels);
     (labels, run)

@@ -140,7 +140,7 @@ mod tests {
                     model.num_vertices(),
                 );
                 let run = super::super::sweep::run(
-                    &bk, &model, &g, &unary, &mut st, &cfg, false,
+                    &bk, &model, &g, &unary, &mut st, &cfg, false, 0,
                 );
                 let mut labels = vec![0u8; model.num_vertices()];
                 super::super::sweep::decode(

@@ -311,6 +311,9 @@ pub fn sweep(
 
 /// Sweep until the max residual drops below `cfg.tol` (or
 /// `cfg.max_sweeps`; with `fixed` every run does the full count).
+/// `em` is the caller's EM iteration index, stamped onto the flight
+/// recorder's per-sweep samples (pass 0 outside an EM loop).
+#[allow(clippy::too_many_arguments)]
 pub fn run(
     bk: &dyn Device,
     model: &MrfModel,
@@ -319,6 +322,7 @@ pub fn run(
     st: &mut BpState,
     cfg: &BpConfig,
     fixed: bool,
+    em: usize,
 ) -> BpRun {
     let max_sweeps = cfg.max_sweeps.max(1);
     let mut last = 0.0f32;
@@ -331,6 +335,17 @@ pub fn run(
         );
         let stats = sweep(bk, model, g, unary, st, cfg);
         last = stats.max_residual;
+        // Flight-recorder hook (DESIGN.md §13): one relaxed load when
+        // off; sample fields are already computed by the sweep.
+        if crate::obs::live() {
+            crate::obs::bp_sample(
+                em,
+                s,
+                stats.max_residual as f64,
+                cfg.damping as f64,
+                stats.updated as u64,
+            );
+        }
         if last < cfg.tol && !fixed {
             return BpRun { sweeps: s + 1, max_residual: last,
                            converged: true };

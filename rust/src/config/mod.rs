@@ -231,6 +231,42 @@ pub struct TelemetryConfig {
     pub trace_out: Option<PathBuf>,
 }
 
+/// Observability shape (DESIGN.md §13): convergence flight recorder,
+/// serving SLOs, and Prometheus-style metrics exposition. Everything
+/// defaults off / permissive, so an unconfigured run stays
+/// bitwise-identical and allocation-free.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObsConfig {
+    /// Dump the full convergence journal as JSONL to this file
+    /// (`--convergence-out <file>`); `None` leaves the recorder
+    /// disarmed.
+    pub convergence_out: Option<PathBuf>,
+    /// Ring capacity of the flight recorder in samples (oldest
+    /// samples are overwritten past this; `dropped` counts them).
+    pub convergence_cap: usize,
+    /// Write the Prometheus text-format metrics exposition to this
+    /// file at the end of the run (`--metrics-out <file>`); implies
+    /// `telemetry.profile` so the timing registry has rows to export.
+    pub metrics_out: Option<PathBuf>,
+    /// Serving SLO thresholds (all `None` = no SLO accounting).
+    pub slo: crate::obs::SloConfig,
+    /// Busy-lane heartbeat silence, in seconds, before a service lane
+    /// is reported as stalled by [`crate::sched::Service::health`].
+    pub stall_window_secs: f64,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            convergence_out: None,
+            convergence_cap: crate::obs::DEFAULT_CAPACITY,
+            metrics_out: None,
+            slo: crate::obs::SloConfig::default(),
+            stall_window_secs: 30.0,
+        }
+    }
+}
+
 /// Everything one run needs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
@@ -246,6 +282,9 @@ pub struct RunConfig {
     pub sched: SchedConfig,
     /// Observability switches (`--profile` / `--trace-out`).
     pub telemetry: TelemetryConfig,
+    /// Flight recorder / SLO / metrics-exposition shape
+    /// (`--convergence-out` / `--metrics-out`).
+    pub obs: ObsConfig,
     pub engine: EngineKind,
     /// Which [`crate::dpp::Device`] the primitives execute on
     /// (`--device`): `auto` keeps the historical serial-for-one-thread
@@ -266,6 +305,7 @@ impl Default for RunConfig {
             dual: DualConfig::default(),
             sched: SchedConfig::default(),
             telemetry: TelemetryConfig::default(),
+            obs: ObsConfig::default(),
             engine: EngineKind::Dpp,
             device: DeviceKind::Auto,
             threads: crate::pool::available_threads(),
@@ -285,6 +325,10 @@ fn get_usize(v: &Value, key: &str, default: usize) -> usize {
 
 fn get_u64(v: &Value, key: &str, default: u64) -> u64 {
     v.get(key).and_then(Value::as_i64).map(|i| i as u64).unwrap_or(default)
+}
+
+fn opt_f64(v: Option<f64>) -> Value {
+    v.map_or(Value::Null, Value::from)
 }
 
 impl RunConfig {
@@ -361,6 +405,31 @@ impl RunConfig {
                 .and_then(Value::as_str)
                 .map(PathBuf::from);
         }
+        if let Some(o) = v.get("obs") {
+            // `null` and a missing key both mean off for the outputs
+            // and "no threshold" for the SLO knobs.
+            cfg.obs.convergence_out = o
+                .get("convergence_out")
+                .and_then(Value::as_str)
+                .map(PathBuf::from);
+            cfg.obs.convergence_cap =
+                get_usize(o, "convergence_cap", cfg.obs.convergence_cap);
+            cfg.obs.metrics_out = o
+                .get("metrics_out")
+                .and_then(Value::as_str)
+                .map(PathBuf::from);
+            if let Some(s) = o.get("slo") {
+                cfg.obs.slo.max_gap =
+                    s.get("max_gap").and_then(Value::as_f64);
+                cfg.obs.slo.max_queue_wait =
+                    s.get("max_queue_wait").and_then(Value::as_f64);
+                cfg.obs.slo.max_job_latency =
+                    s.get("max_job_latency").and_then(Value::as_f64);
+            }
+            cfg.obs.stall_window_secs = get_f64(
+                o, "stall_window_secs", cfg.obs.stall_window_secs,
+            );
+        }
         if let Some(e) = v.get("engine").and_then(Value::as_str) {
             cfg.engine = EngineKind::parse(e)?;
         }
@@ -408,6 +477,25 @@ impl RunConfig {
         }
         if self.sched.inflight == 0 {
             bail!("sched.inflight must be >= 1");
+        }
+        if self.obs.convergence_cap < 2 {
+            bail!("obs.convergence_cap must be >= 2");
+        }
+        if !(self.obs.stall_window_secs.is_finite()
+            && self.obs.stall_window_secs > 0.0)
+        {
+            bail!("obs.stall_window_secs must be finite and > 0");
+        }
+        for (name, v) in [
+            ("max_gap", self.obs.slo.max_gap),
+            ("max_queue_wait", self.obs.slo.max_queue_wait),
+            ("max_job_latency", self.obs.slo.max_job_latency),
+        ] {
+            if let Some(x) = v {
+                if !x.is_finite() || x < 0.0 {
+                    bail!("obs.slo.{name} must be finite and >= 0");
+                }
+            }
         }
         Ok(())
     }
@@ -459,6 +547,25 @@ impl RunConfig {
                     Some(p) => p.to_string_lossy().as_ref().into(),
                     None => Value::Null,
                 }),
+            ])),
+            ("obs", Value::object(vec![
+                ("convergence_out", match &self.obs.convergence_out {
+                    Some(p) => p.to_string_lossy().as_ref().into(),
+                    None => Value::Null,
+                }),
+                ("convergence_cap", self.obs.convergence_cap.into()),
+                ("metrics_out", match &self.obs.metrics_out {
+                    Some(p) => p.to_string_lossy().as_ref().into(),
+                    None => Value::Null,
+                }),
+                ("slo", Value::object(vec![
+                    ("max_gap", opt_f64(self.obs.slo.max_gap)),
+                    ("max_queue_wait",
+                     opt_f64(self.obs.slo.max_queue_wait)),
+                    ("max_job_latency",
+                     opt_f64(self.obs.slo.max_job_latency)),
+                ])),
+                ("stall_window_secs", self.obs.stall_window_secs.into()),
             ])),
             ("engine", self.engine.name().into()),
             ("device", self.device.name().into()),
@@ -602,6 +709,45 @@ mod tests {
             .unwrap();
         let cfg = RunConfig::from_json(&v).unwrap();
         assert_eq!(cfg.telemetry, TelemetryConfig::default());
+    }
+
+    #[test]
+    fn obs_section_parses_validates_and_round_trips() {
+        let v = json::parse(
+            r#"{"obs": {"convergence_out": "conv.jsonl",
+                "convergence_cap": 128, "metrics_out": "m.prom",
+                "slo": {"max_gap": 1.5, "max_job_latency": 0.25},
+                "stall_window_secs": 5.0}}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.obs.convergence_out,
+                   Some(PathBuf::from("conv.jsonl")));
+        assert_eq!(cfg.obs.convergence_cap, 128);
+        assert_eq!(cfg.obs.metrics_out, Some(PathBuf::from("m.prom")));
+        assert_eq!(cfg.obs.slo.max_gap, Some(1.5));
+        assert_eq!(cfg.obs.slo.max_queue_wait, None);
+        assert_eq!(cfg.obs.slo.max_job_latency, Some(0.25));
+        assert_eq!(cfg.obs.stall_window_secs, 5.0);
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+        // Missing section and explicit nulls both mean off.
+        let v = json::parse(
+            r#"{"obs": {"convergence_out": null, "metrics_out": null,
+                "slo": {"max_gap": null}}}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.obs, ObsConfig::default());
+        // Bad values are rejected.
+        let v = json::parse(r#"{"obs": {"convergence_cap": 1}}"#).unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"obs": {"stall_window_secs": 0}}"#)
+            .unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
+        let v =
+            json::parse(r#"{"obs": {"slo": {"max_gap": -1.0}}}"#).unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
     }
 
     #[test]

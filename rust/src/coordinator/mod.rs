@@ -20,7 +20,7 @@ use anyhow::{Context, Result};
 use crate::config::{DeviceKind, EngineKind, RunConfig};
 use crate::dpp::{device_for, Device, DeviceCaps, OfflineAcceleratorDevice};
 use crate::image::{Dataset, Volume};
-use crate::metrics::Confusion;
+use crate::eval::Confusion;
 use crate::mrf::{self, Engine, MrfModel};
 use crate::overseg::Overseg;
 use crate::pool::Pool;
@@ -78,6 +78,10 @@ pub struct RunReport {
     pub total_secs: f64,
     /// Scheduler shape + occupancy observed during the run.
     pub sched: SchedStats,
+    /// Convergence flight-recorder journal for this run: `Some` when
+    /// the recorder was armed ([`crate::obs::arm`]), drained by the
+    /// run driver. `None` on default-off runs.
+    pub convergence: Option<crate::obs::ConvergenceLog>,
 }
 
 impl RunReport {
@@ -175,6 +179,14 @@ impl RunReport {
             ("map_iters", self.total_map_iters().into()),
             ("lower_bound", opt_f64(self.lower_bound())),
             ("optimality_gap", opt_f64(self.optimality_gap())),
+            // Flight-recorder section (ISSUE 8): null when the
+            // recorder was not armed, else counts + <= 256 points with
+            // exact endpoints (full fidelity goes to --convergence-out).
+            ("convergence",
+             self.convergence
+                 .as_ref()
+                 .map(crate::obs::ConvergenceLog::to_json)
+                 .unwrap_or(Value::Null)),
         ];
         if let Some(c) = &self.confusion {
             fields.push(("precision", c.precision().into()));
@@ -442,7 +454,7 @@ impl Coordinator {
             .ground_truth
             .as_ref()
             .map(|t| Confusion::from_volumes(&output, t));
-        let porosity = crate::metrics::porosity(&output);
+        let porosity = crate::eval::porosity(&output);
         Ok(RunReport {
             engine: engine.name(),
             device: self.device.name().to_string(),
@@ -469,6 +481,7 @@ impl Coordinator {
             porosity,
             total_secs: t_total.elapsed_secs(),
             sched: SchedStats::serial(init_secs, opt_secs),
+            convergence: crate::obs::drain(),
         })
     }
 }

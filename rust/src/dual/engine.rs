@@ -119,6 +119,32 @@ impl Engine for DualEngine {
                 mrf::config_energy(model, &labels, &prm);
             lower = run.best - scorer_slack(model, &prm);
 
+            // Flight-recorder hook (DESIGN.md §13): replay this EM
+            // iteration's ascent trajectory into the journal. Samples
+            // carry the *running best* bound (minus the same scorer
+            // slack as the certificate) — the raw per-iteration bound
+            // is monotone only up to f64 accumulation noise, the
+            // certificate is monotone by construction.
+            if crate::obs::live() {
+                if crate::obs::armed() {
+                    let slack = run.best - lower;
+                    let mut best = f64::NEG_INFINITY;
+                    for (k, &b) in run.history.iter().enumerate() {
+                        best = best.max(b);
+                        let lb = best - slack;
+                        crate::obs::dual_sample(
+                            em_iters - 1,
+                            k,
+                            lb,
+                            total,
+                            (total - lb).max(0.0),
+                        );
+                    }
+                } else {
+                    crate::obs::tick();
+                }
+            }
+
             let mut stats = params::Stats::default();
             for (e, &v) in model.hoods.members.iter().enumerate() {
                 stats.add(labels[v as usize], y_elem[e]);

@@ -1,5 +1,11 @@
 //! Verification metrics (paper §4.2.1): precision, recall, accuracy
 //! from a voxel confusion matrix, plus porosity (void fraction).
+//!
+//! Named `eval` since ISSUE 8 — the old `crate::metrics` path was one
+//! keystroke away from the *performance* metrics in
+//! [`crate::telemetry`] and [`crate::obs`], and kept being confused
+//! with them. A deprecated `crate::metrics` re-export shim covers one
+//! release (see README release notes).
 
 use crate::image::Volume;
 

@@ -14,7 +14,9 @@
 //! scheduler and batch serving front end ([`sched`]) turn the
 //! per-slice pipeline into a throughput system, observed end to end
 //! by the [`telemetry`] layer (scoped metric recorders, span tracing,
-//! latency percentiles).
+//! latency percentiles) and the [`obs`] layer on top of it
+//! (convergence flight recorder, serving health + SLOs, Prometheus
+//! exposition).
 //!
 //! See `README.md` for the front door (quickstart + the bench ->
 //! paper-figure map) and `DESIGN.md` for the architecture.
@@ -26,18 +28,27 @@ pub mod config;
 pub mod coordinator;
 pub mod dpp;
 pub mod dual;
+pub mod eval;
 pub mod graph;
 pub mod image;
 pub mod json;
 pub mod mce;
-pub mod metrics;
 pub mod mrf;
+pub mod obs;
 pub mod overseg;
 pub mod pool;
 pub mod runtime;
 pub mod sched;
 pub mod telemetry;
 pub mod util;
+
+/// Deprecated spelling of [`eval`] (verification metrics), kept for
+/// one release so downstream `crate::metrics::Confusion` paths keep
+/// compiling. See the README release notes.
+#[deprecated(note = "renamed to `eval`; use `crate::eval::...`")]
+pub mod metrics {
+    pub use crate::eval::*;
+}
 
 /// Convenient re-exports for examples and benches.
 pub mod prelude {

@@ -20,7 +20,7 @@ use dpp_pmrf::config::{DatasetKind, DeviceKind, EngineKind, RunConfig};
 use dpp_pmrf::coordinator::Coordinator;
 use dpp_pmrf::image::{self, Dataset, Volume};
 use dpp_pmrf::util::logging::{self, Level};
-use dpp_pmrf::{log_info, metrics};
+use dpp_pmrf::{eval as metrics, log_info};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -171,6 +171,18 @@ fn cmd_segment(args: &[String]) -> Result<()> {
         .opt("trace-out",
              "write a Chrome trace-event JSON file of the run \
               (open in Perfetto / chrome://tracing)",
+             None)
+        .opt("convergence-out",
+             "arm the convergence flight recorder and write its full \
+              journal as JSONL here (the JSON report embeds a \
+              downsampled view)",
+             None)
+        .opt("convergence-cap",
+             "flight recorder ring capacity in samples (default 65536)",
+             None)
+        .opt("metrics-out",
+             "write a Prometheus text-format metrics exposition here \
+              at the end of the run (implies --profile)",
              None);
     let m = spec.parse(args)?;
     let mut cfg = load_cfg(&m)?;
@@ -215,12 +227,24 @@ fn cmd_segment(args: &[String]) -> Result<()> {
     if let Some(p) = m.get("trace-out") {
         cfg.telemetry.trace_out = Some(PathBuf::from(p));
     }
+    if let Some(p) = m.get("convergence-out") {
+        cfg.obs.convergence_out = Some(PathBuf::from(p));
+    }
+    if let Some(c) = m.get_parse::<usize>("convergence-cap")? {
+        cfg.obs.convergence_cap = c;
+    }
+    if let Some(p) = m.get("metrics-out") {
+        cfg.obs.metrics_out = Some(PathBuf::from(p));
+    }
     cfg.validate()?;
 
     // Arm telemetry before the run so init-phase spans are captured;
-    // both default off, keeping the hot path bitwise-identical.
-    if cfg.telemetry.profile {
+    // everything defaults off, keeping the hot path bitwise-identical.
+    if cfg.telemetry.profile || cfg.obs.metrics_out.is_some() {
         dpp_pmrf::dpp::timing::set_enabled(true);
+    }
+    if cfg.obs.convergence_out.is_some() {
+        dpp_pmrf::obs::arm(cfg.obs.convergence_cap);
     }
     let tracer = cfg
         .telemetry
@@ -245,6 +269,25 @@ fn cmd_segment(args: &[String]) -> Result<()> {
     }
     if cfg.telemetry.profile {
         println!("{}", dpp_pmrf::dpp::timing::report());
+    }
+    if let Some(path) = cfg.obs.convergence_out.as_ref() {
+        // The run driver drained the ring into the report; the file
+        // gets the full journal, the JSON report a ≤256-point view.
+        let log = report.convergence.clone().unwrap_or_default();
+        std::fs::write(path, log.to_jsonl())?;
+        log_info!("wrote convergence journal ({} samples, {} dropped) \
+                   to {}",
+                  log.samples.len(), log.dropped, path.display());
+        dpp_pmrf::obs::disarm();
+    }
+    if let Some(path) = cfg.obs.metrics_out.as_ref() {
+        let mut w = dpp_pmrf::obs::prometheus::TextWriter::new();
+        dpp_pmrf::obs::prometheus::render_snapshot(
+            &mut w,
+            &dpp_pmrf::obs::prometheus::timing_snapshot(),
+        );
+        std::fs::write(path, w.finish())?;
+        log_info!("wrote metrics exposition to {}", path.display());
     }
 
     log_info!(

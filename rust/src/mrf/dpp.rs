@@ -162,6 +162,11 @@ trait EmStep {
     /// Per-label statistics of the latest instance-argmin labels (the
     /// EM M-step input).
     fn stats(&mut self) -> Stats;
+    /// Count vertices whose label changed since the last call
+    /// (flight-recorder input; only called on armed runs — the first
+    /// call seeds `delta` and reports 0).
+    fn labels_changed(&mut self, delta: &mut crate::obs::LabelDelta)
+        -> u64;
     /// Final per-vertex labels (consumes the step's label state).
     fn take_labels(&mut self) -> Vec<u8>;
 }
@@ -185,6 +190,13 @@ fn drive_em(
     // Hoisted out of the EM loop (reset per iteration) so EM
     // iterations allocate nothing after the first.
     let mut hw = HoodWindows::new(nh, cfg.window, cfg.threshold);
+    // Flight-recorder state: armed runs seed the labels-changed
+    // counter once here so every in-loop sample reports a true delta;
+    // disarmed runs never touch it (zero-alloc contract intact).
+    let mut delta = crate::obs::LabelDelta::new();
+    if crate::obs::armed() {
+        step.labels_changed(&mut delta);
+    }
 
     for _em in 0..cfg.em_iters {
         // Inert (no clock read, no allocation) unless a tracer is
@@ -200,6 +212,20 @@ fn drive_em(
             );
             total_map += 1;
             step.map_iter(&prm, &mut hood_energy);
+            // Flight-recorder hook (DESIGN.md §13): one relaxed load
+            // when off; the energy sum and label diff are only paid
+            // on armed runs.
+            if crate::obs::live() {
+                if crate::obs::armed() {
+                    let changed = step.labels_changed(&mut delta);
+                    let energy: f64 = hood_energy.iter().sum();
+                    crate::obs::map_sample(
+                        em_iters - 1, total_map - 1, energy, changed,
+                    );
+                } else {
+                    crate::obs::tick();
+                }
+            }
             let done = hw.push_all(&hood_energy);
             if done && !cfg.fixed_iters {
                 break;
@@ -361,6 +387,11 @@ impl EmStep for PaperStep<'_> {
     /// (7) Parameter statistics (chunked Reduce in chunk order).
     fn stats(&mut self) -> Stats {
         stats_reduce(self.bk, self.ws, &self.amin, &self.y_elem)
+    }
+
+    fn labels_changed(&mut self, delta: &mut crate::obs::LabelDelta)
+        -> u64 {
+        delta.update_f32(&self.labels)
     }
 
     fn take_labels(&mut self) -> Vec<u8> {
@@ -703,6 +734,11 @@ impl EmStep for PlannedStep<'_> {
         })
     }
 
+    fn labels_changed(&mut self, delta: &mut crate::obs::LabelDelta)
+        -> u64 {
+        delta.update_u8(&self.labels)
+    }
+
     fn take_labels(&mut self) -> Vec<u8> {
         std::mem::take(&mut self.labels)
     }
@@ -867,6 +903,11 @@ impl EmStep for FusedStep<'_> {
         timed("Reduce", || {
             stats_reduce(self.bk, self.ws, &self.amin, &self.y_elem)
         })
+    }
+
+    fn labels_changed(&mut self, delta: &mut crate::obs::LabelDelta)
+        -> u64 {
+        delta.update_u8(&self.labels)
     }
 
     fn take_labels(&mut self) -> Vec<u8> {

@@ -71,6 +71,12 @@ impl Engine for ReferenceEngine {
         let mut total_map = 0usize;
         let mut em_iters = 0usize;
         let critical = Mutex::new(());
+        // Flight-recorder state (armed runs only): seed once so every
+        // in-loop sample reports a true delta.
+        let mut delta = crate::obs::LabelDelta::new();
+        if crate::obs::armed() {
+            delta.update_u8(&labels);
+        }
 
         for _em in 0..cfg.em_iters {
             em_iters += 1;
@@ -141,6 +147,19 @@ impl Engine for ReferenceEngine {
                 super::serial::resolve_vertices_serial(
                     model, &emin, &amin, &mut labels,
                 );
+                // Flight-recorder hook (DESIGN.md §13): one relaxed
+                // load when off.
+                if crate::obs::live() {
+                    if crate::obs::armed() {
+                        let changed = delta.update_u8(&labels);
+                        let energy: f64 = hood_energy.iter().sum();
+                        crate::obs::map_sample(
+                            em_iters - 1, total_map - 1, energy, changed,
+                        );
+                    } else {
+                        crate::obs::tick();
+                    }
+                }
                 let done = hw.push_all(&hood_energy);
                 if done && !cfg.fixed_iters {
                     break;

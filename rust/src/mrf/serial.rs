@@ -39,6 +39,13 @@ impl Engine for SerialEngine {
         let mut em_window = ConvergenceWindow::new(cfg.window, cfg.threshold);
         let mut total_map = 0usize;
         let mut em_iters = 0usize;
+        // Flight-recorder state (armed runs only): seed the
+        // labels-changed counter before the loop so every in-loop
+        // sample reports a true delta.
+        let mut delta = crate::obs::LabelDelta::new();
+        if crate::obs::armed() {
+            delta.update_u8(&labels);
+        }
 
         for _em in 0..cfg.em_iters {
             em_iters += 1;
@@ -50,6 +57,19 @@ impl Engine for SerialEngine {
                     &mut emin, &mut amin, &mut hood_energy,
                 );
                 resolve_vertices(model, &emin, &amin, &mut labels);
+                // Flight-recorder hook (DESIGN.md §13): one relaxed
+                // load when off.
+                if crate::obs::live() {
+                    if crate::obs::armed() {
+                        let changed = delta.update_u8(&labels);
+                        let energy: f64 = hood_energy.iter().sum();
+                        crate::obs::map_sample(
+                            em_iters - 1, total_map - 1, energy, changed,
+                        );
+                    } else {
+                        crate::obs::tick();
+                    }
+                }
                 let done = hw.push_all(&hood_energy);
                 if done && !cfg.fixed_iters {
                     break;

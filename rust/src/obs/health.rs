@@ -1,0 +1,195 @@
+//! Serving health: SLO thresholds and the stalled-lane watchdog.
+//!
+//! The watchdog is deliberately passive — no background thread. Every
+//! service worker owns a [`Heartbeat`] (shared atomics) that engine
+//! iteration hooks mark through a thread-local: [`install_heartbeat`]
+//! binds the current thread to a lane's heartbeat, and the scheduler
+//! propagates that binding into the lane threads it spawns (see
+//! `sched::run_slices`). `Service::health()` then *computes*
+//! stalledness on demand: a lane that is busy but has not marked
+//! progress within the stall window is reported stalled instead of
+//! hanging the caller.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Serving SLO thresholds (`None` = not enforced). Violations are
+/// marked on the job's `JobStats` and counted by `Service::health()`.
+///
+/// * `max_gap` — certified optimality gap (energy units) of the job's
+///   report. Only certifying engines (dual) produce a gap; jobs
+///   without one can never violate this SLO.
+/// * `max_queue_wait` — seconds between admission and execution start.
+/// * `max_job_latency` — seconds between admission and completion
+///   (queue wait + execution).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct SloConfig {
+    pub max_gap: Option<f64>,
+    pub max_queue_wait: Option<f64>,
+    pub max_job_latency: Option<f64>,
+}
+
+impl SloConfig {
+    /// True when no threshold is set (the default-off fast path).
+    pub fn is_disabled(&self) -> bool {
+        self.max_gap.is_none()
+            && self.max_queue_wait.is_none()
+            && self.max_job_latency.is_none()
+    }
+}
+
+/// Which SLOs a finished job violated (all false when no [`SloConfig`]
+/// threshold was set or none tripped).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SloFlags {
+    pub gap: bool,
+    pub queue_wait: bool,
+    pub job_latency: bool,
+}
+
+impl SloFlags {
+    pub fn any(&self) -> bool {
+        self.gap || self.queue_wait || self.job_latency
+    }
+}
+
+/// Lane progress clock: `mark` stamps "now", `secs_since` reads the
+/// age of the last stamp. Lock-free (one atomic each way); shared
+/// between a service worker, the lane threads the scheduler spawns on
+/// its behalf, and the `health()` reader.
+#[derive(Debug)]
+pub struct Heartbeat {
+    t0: Instant,
+    last_nanos: AtomicU64,
+}
+
+impl Default for Heartbeat {
+    fn default() -> Heartbeat {
+        Heartbeat::new()
+    }
+}
+
+impl Heartbeat {
+    pub fn new() -> Heartbeat {
+        Heartbeat { t0: Instant::now(), last_nanos: AtomicU64::new(0) }
+    }
+
+    /// Stamp a progress event.
+    pub fn mark(&self) {
+        self.last_nanos
+            .store(self.t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Seconds since the last [`mark`](Heartbeat::mark) (or since
+    /// creation, if never marked).
+    pub fn secs_since(&self) -> f64 {
+        let now = self.t0.elapsed().as_nanos() as u64;
+        let last = self.last_nanos.load(Ordering::Relaxed);
+        now.saturating_sub(last) as f64 / 1e9
+    }
+}
+
+thread_local! {
+    static CURRENT: RefCell<Vec<Arc<Heartbeat>>> =
+        const { RefCell::new(Vec::new()) };
+}
+
+/// Bind `hb` as the current thread's progress heartbeat until the
+/// returned guard drops. Engine hooks ([`super::tick`] and the sample
+/// functions) mark it on every iteration. Scopes nest; the innermost
+/// binding wins.
+#[must_use = "the heartbeat only receives marks while the scope lives"]
+pub fn install_heartbeat(hb: Arc<Heartbeat>) -> HeartbeatScope {
+    super::observer_added();
+    CURRENT.with(|c| c.borrow_mut().push(hb));
+    HeartbeatScope { _not_send: std::marker::PhantomData }
+}
+
+/// The current thread's heartbeat binding, if any — used by the
+/// scheduler to propagate a service worker's heartbeat into the lane
+/// threads it spawns.
+pub fn current_heartbeat() -> Option<Arc<Heartbeat>> {
+    CURRENT.with(|c| c.borrow().last().cloned())
+}
+
+/// RAII guard from [`install_heartbeat`]. `!Send`: must drop on the
+/// installing thread.
+pub struct HeartbeatScope {
+    _not_send: std::marker::PhantomData<*const ()>,
+}
+
+impl Drop for HeartbeatScope {
+    fn drop(&mut self) {
+        CURRENT.with(|c| {
+            c.borrow_mut().pop();
+        });
+        super::observer_removed();
+    }
+}
+
+/// Mark the current thread's heartbeat, if one is installed. Callers
+/// gate on [`super::live`] so unobserved threads never touch the TLS.
+pub(crate) fn beat() {
+    CURRENT.with(|c| {
+        if let Some(hb) = c.borrow().last() {
+            hb.mark();
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slo_config_default_is_disabled() {
+        assert!(SloConfig::default().is_disabled());
+        assert!(!SloConfig { max_gap: Some(1.0), ..Default::default() }
+            .is_disabled());
+        assert!(!SloFlags::default().any());
+        assert!(SloFlags { queue_wait: true, ..Default::default() }.any());
+    }
+
+    #[test]
+    fn heartbeat_mark_resets_age() {
+        let hb = Arc::new(Heartbeat::new());
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let before = hb.secs_since();
+        assert!(before >= 0.004, "unmarked age grows: {before}");
+        hb.mark();
+        assert!(hb.secs_since() < before);
+    }
+
+    #[test]
+    fn installed_heartbeat_receives_engine_ticks() {
+        let hb = Arc::new(Heartbeat::new());
+        {
+            let _scope = install_heartbeat(hb.clone());
+            assert!(super::super::live());
+            assert!(current_heartbeat().is_some());
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            super::super::tick();
+            assert!(hb.secs_since() < 0.004, "tick marked the heartbeat");
+        }
+        assert!(current_heartbeat().is_none());
+    }
+
+    #[test]
+    fn heartbeat_propagates_to_spawned_threads_by_hand() {
+        // The sched propagation pattern: capture on the parent,
+        // install inside the child.
+        let hb = Arc::new(Heartbeat::new());
+        let _scope = install_heartbeat(hb.clone());
+        let captured = current_heartbeat();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                assert!(current_heartbeat().is_none(), "TLS not inherited");
+                let _inner = captured.clone().map(install_heartbeat);
+                super::super::tick();
+            });
+        });
+        assert!(hb.secs_since() < 0.5, "child tick reached the heartbeat");
+    }
+}

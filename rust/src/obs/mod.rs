@@ -1,0 +1,187 @@
+//! Observability layer (DESIGN.md §13) — sits on top of
+//! [`crate::telemetry`] and makes engines and the serving front end
+//! inspectable *while running*. Three pillars:
+//!
+//! - **[`recorder`]** — the convergence flight recorder: a
+//!   fixed-capacity ring journal every engine feeds per iteration
+//!   (MAP: energy + labels changed; BP: max residual + damping; dual:
+//!   bound/primal/gap per ascent iteration). Armed explicitly with
+//!   [`arm`]; drained into [`ConvergenceLog`] by the scheduler and
+//!   surfaced as the `convergence` section of
+//!   [`crate::coordinator::RunReport::to_json`] (downsampled to ≤256
+//!   points) or in full via the CLI's `--convergence-out` JSONL dump.
+//! - **[`health`]** — serving health: [`SloConfig`] thresholds that
+//!   mark violating jobs and feed `Service::health()`, plus the
+//!   per-lane [`Heartbeat`] watchdog that reports stalled lanes
+//!   instead of hanging silently.
+//! - **[`prometheus`]** — text-format (exposition 0.0.4) rendering of
+//!   [`crate::telemetry::MetricsSnapshot`] tables and service
+//!   counters, reachable as `Service::metrics_text()` and the CLI's
+//!   `--metrics-out`.
+//!
+//! Overhead contract (same bar as telemetry, asserted by
+//! `benches/alloc_churn.rs`): with nothing armed every hook below is
+//! one relaxed atomic load — no clock read, no float work, no
+//! allocation — so default-off runs stay bitwise-identical. Armed
+//! runs reuse the `Instant` clock discipline of
+//! [`crate::telemetry::span`] / [`crate::dpp::timing`]; no second
+//! timing source is introduced.
+
+pub mod health;
+pub mod prometheus;
+pub mod recorder;
+
+pub use health::{
+    current_heartbeat, install_heartbeat, Heartbeat, HeartbeatScope,
+    SloConfig, SloFlags,
+};
+pub use recorder::{
+    arm, armed, disarm, drain, ConvPoint, ConvSample, ConvergenceLog,
+    LabelDelta, DEFAULT_CAPACITY,
+};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Count of live observers: an armed recorder contributes one, every
+/// installed [`HeartbeatScope`] contributes one. The engine hooks gate
+/// on this single relaxed load, so a fully-off process pays nothing
+/// else.
+static LIVE: AtomicUsize = AtomicUsize::new(0);
+
+/// True when any observer (recorder or heartbeat) is live — the only
+/// check a disarmed engine iteration performs.
+#[inline]
+pub fn live() -> bool {
+    LIVE.load(Ordering::Relaxed) != 0
+}
+
+pub(crate) fn observer_added() {
+    LIVE.fetch_add(1, Ordering::Relaxed);
+}
+
+pub(crate) fn observer_removed() {
+    LIVE.fetch_sub(1, Ordering::Relaxed);
+}
+
+/// Progress heartbeat without a sample: engines call this when the
+/// recorder is disarmed but a serving watchdog may be listening.
+/// No-op (one relaxed load) when nothing observes.
+#[inline]
+pub fn tick() {
+    if !live() {
+        return;
+    }
+    health::beat();
+}
+
+/// Record one MAP iteration: total energy and the number of vertices
+/// whose label changed. Callers gate on [`armed`] because both inputs
+/// cost work to compute.
+pub fn map_sample(em: usize, iter: usize, energy: f64, labels_changed: u64) {
+    if !live() {
+        return;
+    }
+    health::beat();
+    recorder::push(
+        em,
+        iter,
+        ConvPoint::Map { energy, labels_changed },
+    );
+}
+
+/// Record one BP sweep: the residual frontier's max residual, the
+/// damping in effect, and how many messages were updated.
+pub fn bp_sample(
+    em: usize,
+    sweep: usize,
+    max_residual: f64,
+    damping: f64,
+    updated: u64,
+) {
+    if !live() {
+        return;
+    }
+    health::beat();
+    recorder::push(
+        em,
+        sweep,
+        ConvPoint::Bp { max_residual, damping, updated },
+    );
+}
+
+/// Record one dual ascent iteration: certified lower bound, the primal
+/// energy of the decoded labeling, and the gap between them.
+pub fn dual_sample(
+    em: usize,
+    iter: usize,
+    lower_bound: f64,
+    primal: f64,
+    gap: f64,
+) {
+    if !live() {
+        return;
+    }
+    health::beat();
+    recorder::push(
+        em,
+        iter,
+        ConvPoint::Dual { lower_bound, primal, gap },
+    );
+}
+
+/// Serializes tests that arm the process-global recorder (same
+/// convention as [`crate::telemetry::trace_test_lock`] /
+/// `timing::test_lock`). Not part of the public API.
+#[doc(hidden)]
+pub fn obs_test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_hooks_are_inert() {
+        let _g = obs_test_lock();
+        assert!(!armed());
+        // None of these may panic, observe, or arm anything.
+        tick();
+        map_sample(0, 0, 1.0, 2);
+        bp_sample(0, 1, 0.5, 0.5, 3);
+        dual_sample(0, 2, 1.0, 2.0, 1.0);
+        assert!(drain().is_none());
+    }
+
+    #[test]
+    fn armed_recorder_collects_all_three_kinds() {
+        let _g = obs_test_lock();
+        arm(16);
+        assert!(armed() && live());
+        map_sample(0, 0, -10.0, 7);
+        bp_sample(1, 3, 0.25, 0.5, 11);
+        dual_sample(2, 5, -20.0, -18.5, 1.5);
+        let log = drain().expect("armed recorder drains Some");
+        assert_eq!(log.samples.len(), 3);
+        assert_eq!(log.dropped, 0);
+        match log.samples[0].point {
+            ConvPoint::Map { energy, labels_changed } => {
+                assert_eq!(energy, -10.0);
+                assert_eq!(labels_changed, 7);
+            }
+            ref p => panic!("expected Map point, got {p:?}"),
+        }
+        assert_eq!((log.samples[1].em, log.samples[1].iter), (1, 3));
+        match log.samples[2].point {
+            ConvPoint::Dual { lower_bound, primal, gap } => {
+                assert_eq!(lower_bound, -20.0);
+                assert_eq!(primal, -18.5);
+                assert_eq!(gap, 1.5);
+            }
+            ref p => panic!("expected Dual point, got {p:?}"),
+        }
+        disarm();
+        assert!(!armed());
+    }
+}

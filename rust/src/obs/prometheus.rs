@@ -1,0 +1,281 @@
+//! Prometheus text-format rendering (exposition format 0.0.4).
+//!
+//! A deliberately small writer: `# HELP` / `# TYPE` family headers
+//! plus `name{labels} value` sample lines, with label-value escaping
+//! per the spec. Metric *families* are fixed names; dynamic row names
+//! (primitive names, counter names, lane indices) go into labels, so
+//! every emitted name is a valid Prometheus identifier by
+//! construction.
+//!
+//! Log2-histogram translation (DESIGN.md §13): bucket `b >= 1` of a
+//! [`Log2Histogram`] holds values in `[2^(b-1), 2^b - 1]` of the
+//! recorded unit, so it maps to a cumulative Prometheus bucket with
+//! `le = (2^b - 1) * scale` (bucket 0, exact zeros, maps to
+//! `le = 0`). Buckets above the highest non-empty one collapse into
+//! `+Inf`, which always carries the total count; `_sum` is scaled the
+//! same way.
+
+use crate::telemetry::{Log2Histogram, MetricsSnapshot};
+
+/// Incremental exposition writer. Declare each family once with
+/// [`family`](TextWriter::family), then emit its samples.
+#[derive(Debug, Default)]
+pub struct TextWriter {
+    out: String,
+}
+
+/// Format a sample value: integers without a fraction, `+Inf`/`-Inf`
+/// spelled the Prometheus way.
+fn fmt_value(v: f64) -> String {
+    if v.is_infinite() {
+        return if v > 0.0 { "+Inf".into() } else { "-Inf".into() };
+    }
+    if v.fract() == 0.0 && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn push_label_value(out: &mut String, v: &str) {
+    out.push('"');
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl TextWriter {
+    pub fn new() -> TextWriter {
+        TextWriter::default()
+    }
+
+    /// Emit the `# HELP` / `# TYPE` header for a metric family.
+    /// `kind` is one of `counter`, `gauge`, `histogram`.
+    pub fn family(&mut self, name: &str, kind: &str, help: &str) {
+        self.out.push_str("# HELP ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(help);
+        self.out.push_str("\n# TYPE ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(kind);
+        self.out.push('\n');
+    }
+
+    /// Emit one `name{labels} value` sample line.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], v: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, val)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(k);
+                self.out.push('=');
+                push_label_value(&mut self.out, val);
+            }
+            self.out.push('}');
+        }
+        self.out.push(' ');
+        self.out.push_str(&fmt_value(v));
+        self.out.push('\n');
+    }
+
+    /// Emit a full histogram family body (`_bucket`/`_sum`/`_count`)
+    /// from a log2 histogram whose samples are in `1/scale` units
+    /// (e.g. `scale = 1e-9` renders nanosecond samples as seconds).
+    /// The `histogram`-typed family header must already be declared.
+    pub fn log2_hist(
+        &mut self,
+        name: &str,
+        labels: &[(&str, &str)],
+        h: &Log2Histogram,
+        scale: f64,
+    ) {
+        let bucket_name = format!("{name}_bucket");
+        let counts = h.bucket_counts();
+        let last = counts
+            .iter()
+            .rposition(|&c| c != 0)
+            .unwrap_or(0);
+        let mut cum = 0u64;
+        let with_le = |w: &mut TextWriter, le: &str, cum: u64| {
+            let mut ls: Vec<(&str, &str)> = labels.to_vec();
+            ls.push(("le", le));
+            w.sample(&bucket_name, &ls, cum as f64);
+        };
+        for (b, &c) in counts.iter().enumerate().take(last + 1) {
+            cum += c;
+            // Upper bound of log2 bucket b (inclusive): 0 for the
+            // zero bucket, 2^b - 1 otherwise.
+            let ub = if b == 0 {
+                0.0
+            } else {
+                (2f64.powi(b as i32) - 1.0) * scale
+            };
+            with_le(self, &fmt_value(ub), cum);
+        }
+        with_le(self, "+Inf", h.total());
+        self.sample(
+            &format!("{name}_sum"),
+            labels,
+            h.sum() as f64 * scale,
+        );
+        self.sample(&format!("{name}_count"), labels, h.total() as f64);
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// Render a [`MetricsSnapshot`]'s four tables as exposition families:
+/// time rows become `dpp_op_seconds_total` / `dpp_op_calls_total`
+/// (labelled by `op`), counters `dpp_counter_total`, gauges
+/// `dpp_gauge`, and histograms `dpp_hist_seconds` (nanosecond samples
+/// rendered as seconds).
+pub fn render_snapshot(w: &mut TextWriter, snap: &MetricsSnapshot) {
+    if !snap.time_rows.is_empty() {
+        w.family("dpp_op_seconds_total", "counter",
+                 "Cumulative wall time per primitive/stage.");
+        for (name, row) in &snap.time_rows {
+            w.sample("dpp_op_seconds_total", &[("op", name)], row.secs());
+        }
+        w.family("dpp_op_calls_total", "counter",
+                 "Cumulative invocations per primitive/stage.");
+        for (name, row) in &snap.time_rows {
+            w.sample("dpp_op_calls_total", &[("op", name)],
+                     row.calls as f64);
+        }
+    }
+    if !snap.counters.is_empty() {
+        w.family("dpp_counter_total", "counter",
+                 "Telemetry counters (bytes, hits...).");
+        for (name, v) in &snap.counters {
+            w.sample("dpp_counter_total", &[("name", name)], *v as f64);
+        }
+    }
+    if !snap.gauges.is_empty() {
+        w.family("dpp_gauge", "gauge",
+                 "Telemetry gauges (high-water marks).");
+        for (name, v) in &snap.gauges {
+            w.sample("dpp_gauge", &[("name", name)], *v as f64);
+        }
+    }
+    if !snap.hists.is_empty() {
+        w.family("dpp_hist_seconds", "histogram",
+                 "Telemetry latency distributions.");
+        for (name, h) in &snap.hists {
+            w.log2_hist("dpp_hist_seconds", &[("name", name)], h, 1e-9);
+        }
+    }
+}
+
+/// The global `dpp::timing` registry as a [`MetricsSnapshot`]: rows
+/// under [`crate::dpp::timing::COUNTER_PREFIX`] are counters (their
+/// value lives in the nanos column by the legacy convention), the rest
+/// are time rows. This is what the CLI's `--metrics-out` renders —
+/// the scoped [`crate::telemetry::Recorder`] is thread-local and
+/// cannot observe sharded lanes, the global registry can.
+pub fn timing_snapshot() -> MetricsSnapshot {
+    use crate::dpp::timing::COUNTER_PREFIX;
+    let mut snap = MetricsSnapshot::default();
+    for (name, st) in crate::dpp::timing::snapshot() {
+        if name.starts_with(COUNTER_PREFIX) {
+            snap.counters.insert(name, st.nanos);
+        } else {
+            snap.time_rows.insert(
+                name,
+                crate::telemetry::TimeRow { calls: st.calls,
+                                            nanos: st.nanos },
+            );
+        }
+    }
+    snap
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn families_and_samples_format() {
+        let mut w = TextWriter::new();
+        w.family("dpp_jobs_total", "counter", "Jobs by state.");
+        w.sample("dpp_jobs_total", &[("state", "completed")], 3.0);
+        w.sample("dpp_queue_depth", &[], 0.0);
+        let text = w.finish();
+        assert!(text.contains("# HELP dpp_jobs_total Jobs by state.\n"));
+        assert!(text.contains("# TYPE dpp_jobs_total counter\n"));
+        assert!(text.contains("dpp_jobs_total{state=\"completed\"} 3\n"));
+        assert!(text.contains("dpp_queue_depth 0\n"));
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let mut w = TextWriter::new();
+        w.sample("m", &[("name", "a\"b\\c\nd")], 1.0);
+        assert_eq!(w.finish(), "m{name=\"a\\\"b\\\\c\\nd\"} 1\n");
+    }
+
+    #[test]
+    fn value_formatting() {
+        assert_eq!(fmt_value(3.0), "3");
+        assert_eq!(fmt_value(3.5), "3.5");
+        assert_eq!(fmt_value(f64::INFINITY), "+Inf");
+        assert_eq!(fmt_value(f64::NEG_INFINITY), "-Inf");
+    }
+
+    #[test]
+    fn log2_hist_buckets_are_cumulative_and_end_at_inf() {
+        let mut h = Log2Histogram::new();
+        h.record(0); // bucket 0
+        h.record(1); // bucket 1: [1, 1]
+        h.record(3); // bucket 2: [2, 3]
+        h.record(3);
+        let mut w = TextWriter::new();
+        w.family("lat", "histogram", "test");
+        w.log2_hist("lat", &[], &h, 1.0);
+        let text = w.finish();
+        assert!(text.contains("lat_bucket{le=\"0\"} 1\n"), "{text}");
+        assert!(text.contains("lat_bucket{le=\"1\"} 2\n"), "{text}");
+        assert!(text.contains("lat_bucket{le=\"3\"} 4\n"), "{text}");
+        assert!(text.contains("lat_bucket{le=\"+Inf\"} 4\n"), "{text}");
+        assert!(text.contains("lat_sum 7\n"), "{text}");
+        assert!(text.contains("lat_count 4\n"), "{text}");
+    }
+
+    #[test]
+    fn snapshot_renders_all_tables() {
+        let mut snap = MetricsSnapshot::default();
+        snap.time_rows.insert(
+            "SortByKey",
+            crate::telemetry::TimeRow { calls: 4, nanos: 2_000_000_000 },
+        );
+        snap.counters.insert("Workspace::hit", 1024);
+        snap.gauges.insert("Workspace::high_water_bytes", 99);
+        let mut h = Log2Histogram::new();
+        h.record(1_000_000_000);
+        snap.hists.insert("wait", h);
+        let mut w = TextWriter::new();
+        render_snapshot(&mut w, &snap);
+        let text = w.finish();
+        assert!(text
+            .contains("dpp_op_seconds_total{op=\"SortByKey\"} 2\n"));
+        assert!(text.contains("dpp_op_calls_total{op=\"SortByKey\"} 4\n"));
+        assert!(text
+            .contains("dpp_counter_total{name=\"Workspace::hit\"} 1024\n"));
+        assert!(text.contains(
+            "dpp_gauge{name=\"Workspace::high_water_bytes\"} 99\n"
+        ));
+        assert!(text.contains("dpp_hist_seconds_count{name=\"wait\"} 1\n"));
+    }
+}

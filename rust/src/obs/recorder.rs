@@ -1,0 +1,418 @@
+//! Convergence flight recorder: a process-global, fixed-capacity ring
+//! journal of per-iteration engine samples.
+//!
+//! Design (DESIGN.md §13): the ring is preallocated at [`arm`] time,
+//! so pushing a sample in the steady state is one mutex lock and one
+//! slot write — no allocation ever after arming. When the ring fills,
+//! the oldest samples are overwritten (flight-recorder semantics: the
+//! tail of a long run is always retained) and `dropped` counts what
+//! was lost. [`drain`] empties the ring into a [`ConvergenceLog`]
+//! without disarming, so a serving process can journal run after run.
+//!
+//! The recorder is process-global on purpose — engines are driven
+//! deep inside scheduler lanes and cannot thread a handle through the
+//! `Engine` trait without changing every implementation's signature.
+//! The cost is that concurrent runs interleave their samples; callers
+//! that need per-run isolation run one job at a time while armed (the
+//! CLI does) or drain between jobs.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::json::Value;
+
+/// Default ring capacity in samples (~3 MB armed): enough for every
+/// iteration of a multi-slice run at the default iteration caps.
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+/// Per-kind payload of one journal sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ConvPoint {
+    /// One MAP (Jacobi) iteration of a primal engine.
+    Map { energy: f64, labels_changed: u64 },
+    /// One BP sweep over the residual frontier.
+    Bp { max_residual: f64, damping: f64, updated: u64 },
+    /// One dual block-coordinate ascent iteration.
+    Dual { lower_bound: f64, primal: f64, gap: f64 },
+}
+
+impl ConvPoint {
+    /// The `kind` discriminator used in JSON output.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ConvPoint::Map { .. } => "map",
+            ConvPoint::Bp { .. } => "bp",
+            ConvPoint::Dual { .. } => "dual",
+        }
+    }
+}
+
+/// One journal entry: when (nanos since arming), where in the run
+/// (EM iteration, inner iteration), and the kind-specific payload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ConvSample {
+    pub t_nanos: u64,
+    pub em: u32,
+    pub iter: u32,
+    pub point: ConvPoint,
+}
+
+impl ConvSample {
+    /// Flat JSON object — the JSONL line format of `--convergence-out`
+    /// and the element format of the report's `convergence.points`.
+    pub fn to_json(&self) -> Value {
+        let mut fields = vec![
+            ("kind", Value::str(self.point.kind())),
+            ("t_nanos", (self.t_nanos as usize).into()),
+            ("em", (self.em as usize).into()),
+            ("iter", (self.iter as usize).into()),
+        ];
+        match self.point {
+            ConvPoint::Map { energy, labels_changed } => {
+                fields.push(("energy", energy.into()));
+                fields.push(("labels_changed",
+                             (labels_changed as usize).into()));
+            }
+            ConvPoint::Bp { max_residual, damping, updated } => {
+                fields.push(("max_residual", max_residual.into()));
+                fields.push(("damping", damping.into()));
+                fields.push(("updated", (updated as usize).into()));
+            }
+            ConvPoint::Dual { lower_bound, primal, gap } => {
+                fields.push(("lower_bound", lower_bound.into()));
+                fields.push(("primal", primal.into()));
+                fields.push(("gap", gap.into()));
+            }
+        }
+        Value::object(fields)
+    }
+}
+
+/// A drained journal: samples in chronological order plus how many
+/// older samples the ring overwrote.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ConvergenceLog {
+    pub samples: Vec<ConvSample>,
+    pub dropped: u64,
+}
+
+/// Downsampling bound for the report's `convergence.points` section.
+const MAX_REPORT_POINTS: usize = 256;
+
+impl ConvergenceLog {
+    /// Total samples ever recorded into this journal window.
+    pub fn total(&self) -> u64 {
+        self.dropped + self.samples.len() as u64
+    }
+
+    /// Full-fidelity dump: one JSON object per line (`--convergence-out`).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for s in &self.samples {
+            out.push_str(&s.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Report section: retained/dropped counts plus at most 256
+    /// points. Downsampling is strided with the first and last sample
+    /// always kept exactly (DESIGN.md §13), so endpoints of the JSONL
+    /// dump and of the report agree.
+    pub fn to_json(&self) -> Value {
+        let n = self.samples.len();
+        let mut points = Vec::with_capacity(n.min(MAX_REPORT_POINTS));
+        if n <= MAX_REPORT_POINTS {
+            points.extend(self.samples.iter().map(ConvSample::to_json));
+        } else {
+            // Stride k covers indices 0, k, 2k, ... with at most 255
+            // strided picks; the exact last sample is appended.
+            let k = (n - 1).div_ceil(MAX_REPORT_POINTS - 1);
+            let mut i = 0;
+            while i < n - 1 {
+                points.push(self.samples[i].to_json());
+                i += k;
+            }
+            points.push(self.samples[n - 1].to_json());
+        }
+        Value::object(vec![
+            ("samples", self.samples.len().into()),
+            ("dropped", (self.dropped as usize).into()),
+            ("points", Value::Array(points)),
+        ])
+    }
+}
+
+/// The armed ring. Preallocated to capacity; circular once full.
+struct Ring {
+    t0: Instant,
+    buf: Vec<ConvSample>,
+    cap: usize,
+    /// Overwrite cursor, meaningful once `buf.len() == cap`.
+    next: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn new(capacity: usize) -> Ring {
+        let cap = capacity.max(2);
+        Ring {
+            t0: Instant::now(),
+            buf: Vec::with_capacity(cap),
+            cap,
+            next: 0,
+            dropped: 0,
+        }
+    }
+
+    fn push(&mut self, mut s: ConvSample) {
+        s.t_nanos = self.t0.elapsed().as_nanos() as u64;
+        if self.buf.len() < self.cap {
+            self.buf.push(s);
+        } else {
+            self.buf[self.next] = s;
+            self.next = (self.next + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    fn drain(&mut self) -> ConvergenceLog {
+        let mut samples = Vec::with_capacity(self.buf.len());
+        // Chronological order: the overwrite cursor points at the
+        // oldest retained sample once the ring has wrapped.
+        samples.extend_from_slice(&self.buf[self.next..]);
+        samples.extend_from_slice(&self.buf[..self.next]);
+        let dropped = self.dropped;
+        self.buf.clear();
+        self.next = 0;
+        self.dropped = 0;
+        ConvergenceLog { samples, dropped }
+    }
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static RING: Mutex<Option<Ring>> = Mutex::new(None);
+
+/// Arm the flight recorder with a ring of `capacity` samples
+/// (preallocated now; pushes never allocate). Re-arming while armed
+/// replaces the ring and discards its contents.
+pub fn arm(capacity: usize) {
+    let mut ring = RING.lock().unwrap();
+    if ring.is_none() {
+        super::observer_added();
+    }
+    *ring = Some(Ring::new(capacity));
+    ARMED.store(true, Ordering::Relaxed);
+}
+
+/// Disarm and discard any unread samples.
+pub fn disarm() {
+    let mut ring = RING.lock().unwrap();
+    ARMED.store(false, Ordering::Relaxed);
+    if ring.take().is_some() {
+        super::observer_removed();
+    }
+}
+
+/// True when the ring is armed — engines gate sample *computation*
+/// (energy sums, label diffs) on this.
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Empty the ring into a log without disarming. `None` when disarmed.
+pub fn drain() -> Option<ConvergenceLog> {
+    RING.lock().unwrap().as_mut().map(Ring::drain)
+}
+
+pub(crate) fn push(em: usize, iter: usize, point: ConvPoint) {
+    if !armed() {
+        return;
+    }
+    let mut ring = RING.lock().unwrap();
+    if let Some(r) = ring.as_mut() {
+        r.push(ConvSample {
+            t_nanos: 0, // stamped by Ring::push from the arm clock
+            em: em as u32,
+            iter: iter as u32,
+            point,
+        });
+    }
+}
+
+/// Cross-iteration state for the MAP engines' labels-changed counter:
+/// keeps the previous iteration's labels (as `u8`) and counts diffs.
+/// The first call after a size change only seeds the buffer and
+/// reports 0 — callers seed once before their iteration loop so every
+/// in-loop call reports a true delta. Only used on armed runs; the
+/// seed call is the single (warmup) allocation.
+#[derive(Debug, Default)]
+pub struct LabelDelta {
+    prev: Vec<u8>,
+}
+
+impl LabelDelta {
+    pub fn new() -> LabelDelta {
+        LabelDelta { prev: Vec::new() }
+    }
+
+    /// Count label changes vs. the previous call, then remember
+    /// `labels` for the next one.
+    pub fn update_u8(&mut self, labels: &[u8]) -> u64 {
+        if self.prev.len() != labels.len() {
+            self.prev.clear();
+            self.prev.extend_from_slice(labels);
+            return 0;
+        }
+        let mut changed = 0u64;
+        for (p, &l) in self.prev.iter_mut().zip(labels) {
+            changed += u64::from(*p != l);
+            *p = l;
+        }
+        changed
+    }
+
+    /// Same, for the Paper-mode step whose label state is `f32`
+    /// (binary values stored as floats).
+    pub fn update_f32(&mut self, labels: &[f32]) -> u64 {
+        if self.prev.len() != labels.len() {
+            self.prev.clear();
+            self.prev.extend(labels.iter().map(|&l| l as u8));
+            return 0;
+        }
+        let mut changed = 0u64;
+        for (p, &l) in self.prev.iter_mut().zip(labels) {
+            let l = l as u8;
+            changed += u64::from(*p != l);
+            *p = l;
+        }
+        changed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_overwrites_oldest_and_reports_drops() {
+        let mut r = Ring::new(4);
+        for i in 0..7u64 {
+            r.push(ConvSample {
+                t_nanos: 0,
+                em: 0,
+                iter: i as u32,
+                point: ConvPoint::Map { energy: i as f64,
+                                        labels_changed: 0 },
+            });
+        }
+        let log = r.drain();
+        assert_eq!(log.dropped, 3);
+        assert_eq!(log.total(), 7);
+        let iters: Vec<u32> =
+            log.samples.iter().map(|s| s.iter).collect();
+        assert_eq!(iters, [3, 4, 5, 6], "oldest retained first");
+        // Drained ring is empty but still usable.
+        let log2 = r.drain();
+        assert!(log2.samples.is_empty());
+        assert_eq!(log2.dropped, 0);
+    }
+
+    #[test]
+    fn timestamps_are_monotone() {
+        let mut r = Ring::new(8);
+        for i in 0..5 {
+            r.push(ConvSample {
+                t_nanos: 0,
+                em: 0,
+                iter: i,
+                point: ConvPoint::Dual { lower_bound: 0.0, primal: 0.0,
+                                         gap: 0.0 },
+            });
+        }
+        let log = r.drain();
+        for w in log.samples.windows(2) {
+            assert!(w[0].t_nanos <= w[1].t_nanos);
+        }
+    }
+
+    #[test]
+    fn downsampling_keeps_exact_endpoints_under_256_points() {
+        let samples: Vec<ConvSample> = (0..1000u32)
+            .map(|i| ConvSample {
+                t_nanos: i as u64,
+                em: 0,
+                iter: i,
+                point: ConvPoint::Map { energy: i as f64,
+                                        labels_changed: 0 },
+            })
+            .collect();
+        let log = ConvergenceLog { samples, dropped: 5 };
+        let j = log.to_json();
+        assert_eq!(j.get("samples").and_then(Value::as_usize), Some(1000));
+        assert_eq!(j.get("dropped").and_then(Value::as_usize), Some(5));
+        let points = j.get("points").and_then(Value::as_array).unwrap();
+        assert!(points.len() <= 256, "{} points", points.len());
+        assert_eq!(points[0].get("iter").and_then(Value::as_usize), Some(0));
+        assert_eq!(
+            points[points.len() - 1].get("iter").and_then(Value::as_usize),
+            Some(999)
+        );
+        // Small logs pass through exactly.
+        let small = ConvergenceLog {
+            samples: log.samples[..10].to_vec(),
+            dropped: 0,
+        };
+        let pj = small.to_json();
+        assert_eq!(
+            pj.get("points").and_then(Value::as_array).unwrap().len(),
+            10
+        );
+    }
+
+    #[test]
+    fn jsonl_lines_parse_and_carry_kind_fields() {
+        let log = ConvergenceLog {
+            samples: vec![
+                ConvSample {
+                    t_nanos: 1,
+                    em: 0,
+                    iter: 0,
+                    point: ConvPoint::Bp { max_residual: 0.5,
+                                           damping: 0.5, updated: 9 },
+                },
+                ConvSample {
+                    t_nanos: 2,
+                    em: 0,
+                    iter: 1,
+                    point: ConvPoint::Dual { lower_bound: -3.0,
+                                             primal: -1.0, gap: 2.0 },
+                },
+            ],
+            dropped: 0,
+        };
+        let text = log.to_jsonl();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let v0 = crate::json::parse(lines[0]).unwrap();
+        assert_eq!(v0.get("kind").and_then(Value::as_str), Some("bp"));
+        assert_eq!(v0.get("updated").and_then(Value::as_usize), Some(9));
+        let v1 = crate::json::parse(lines[1]).unwrap();
+        assert_eq!(v1.get("kind").and_then(Value::as_str), Some("dual"));
+        assert_eq!(v1.get("gap").and_then(Value::as_f64), Some(2.0));
+    }
+
+    #[test]
+    fn label_delta_counts_changes() {
+        let mut d = LabelDelta::new();
+        assert_eq!(d.update_u8(&[0, 1, 0, 1]), 0, "seed call");
+        assert_eq!(d.update_u8(&[0, 1, 1, 1]), 1);
+        assert_eq!(d.update_u8(&[1, 0, 0, 0]), 4);
+        assert_eq!(d.update_u8(&[1, 0, 0, 0]), 0);
+        let mut f = LabelDelta::new();
+        assert_eq!(f.update_f32(&[0.0, 1.0]), 0, "seed call");
+        assert_eq!(f.update_f32(&[1.0, 1.0]), 1);
+    }
+}

@@ -64,7 +64,8 @@ pub mod service;
 pub mod shard;
 
 pub use queue::BoundedQueue;
-pub use service::{Job, Service};
+pub use service::{Job, LaneHealth, Service, ServiceHealth,
+                  ServiceOptions};
 pub use shard::SliceShard;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -77,7 +78,7 @@ use crate::coordinator::{RunReport, SliceReport};
 use crate::dpp::{device_descriptor, device_for, device_is_pool_free,
                  timing, Device, SharedSlice, Workspace};
 use crate::image::{Dataset, Volume};
-use crate::metrics::Confusion;
+use crate::eval::Confusion;
 use crate::mrf::{self, Engine, EngineResources, MrfModel};
 use crate::overseg::{oversegment_ws, Overseg};
 use crate::pool::Pool;
@@ -471,6 +472,13 @@ where
         }
     };
 
+    // Watchdog propagation (DESIGN.md §13): a serving worker's
+    // heartbeat binding is thread-local, so capture it here and
+    // re-install it inside every stage thread — engine iteration
+    // hooks then keep marking lane progress from inside the shards.
+    // None (and zero cost) outside a service job.
+    let heartbeat = crate::obs::current_heartbeat();
+
     let shard = SliceShard::new(depth, lanes);
     let queue: BoundedQueue<InitJob> =
         BoundedQueue::new(cfg.sched.inflight);
@@ -486,8 +494,12 @@ where
         for lane in 0..lanes {
             let (shard, queue, producers) = (&shard, &queue, &producers);
             let shared_device = &shared_device;
+            let heartbeat = &heartbeat;
             init_handles.push(s.spawn(move || {
                 let _poison = PoisonOnPanic(queue);
+                let _hb = heartbeat
+                    .clone()
+                    .map(crate::obs::install_heartbeat);
                 crate::telemetry::name_thread(
                     format_args!("init-lane-{lane}"),
                 );
@@ -538,8 +550,12 @@ where
             let (queue, reports, out_win) = (&queue, &reports, &out_win);
             let shared_device = &shared_device;
             let t_total = &t_total;
+            let heartbeat = &heartbeat;
             opt_handles.push(s.spawn(move || {
                 let _poison = PoisonOnPanic(queue);
+                let _hb = heartbeat
+                    .clone()
+                    .map(crate::obs::install_heartbeat);
                 crate::telemetry::name_thread(
                     format_args!("opt-lane-{lane}"),
                 );
@@ -667,7 +683,7 @@ fn finalize(
         .ground_truth
         .as_ref()
         .map(|t| Confusion::from_volumes(&output, t));
-    let porosity = crate::metrics::porosity(&output);
+    let porosity = crate::eval::porosity(&output);
     RunReport {
         engine,
         device,
@@ -678,5 +694,8 @@ fn finalize(
         porosity,
         total_secs,
         sched,
+        // Armed flight recorder (ISSUE 8): hand this run's journal to
+        // the report. Disarmed runs get None for free.
+        convergence: crate::obs::drain(),
     }
 }

@@ -22,8 +22,23 @@
 //! long; two clock reads are noise). Per-job numbers ride back on the
 //! ticket ([`Ticket::wait_stats`]); service-lifetime aggregates live
 //! in log2 histograms, summarized by [`Service::latency`].
+//!
+//! Observability (ISSUE 8, DESIGN.md §13): [`Service::health`] is a
+//! lock-light live snapshot — queue depth and in-flight from one
+//! brief state lock, everything else (job/SLO counters, per-lane
+//! busy/progress) from relaxed atomics. A service built with
+//! [`Service::with_options`] additionally enforces
+//! [`SloConfig`](crate::obs::SloConfig) thresholds — violations are
+//! marked on the job's [`JobStats`] and counted in health — and arms
+//! the per-lane [`Heartbeat`](crate::obs::Heartbeat) watchdog: engine
+//! iteration hooks mark progress, so a busy lane that stops marking
+//! for longer than the stall window is *reported* stalled by
+//! `health()` instead of hanging its callers silently.
+//! [`Service::metrics_text`] renders the same state (plus the global
+//! timing registry) in Prometheus text format.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -34,6 +49,7 @@ use crate::config::RunConfig;
 use crate::coordinator::{Coordinator, RunReport};
 use crate::dpp::timing;
 use crate::image::Dataset;
+use crate::obs::{self, Heartbeat, SloConfig, SloFlags};
 use crate::telemetry::{LatencySummary, Log2Histogram};
 use crate::util::Timer;
 
@@ -51,6 +67,9 @@ pub struct JobStats {
     pub queue_wait_secs: f64,
     /// Dequeue → finish: time inside the coordinator run.
     pub exec_secs: f64,
+    /// Which serving SLOs this job violated (all false unless the
+    /// service was built with thresholds — [`Service::with_options`]).
+    pub slo: SloFlags,
 }
 
 /// Completion slot one job's result is published through.
@@ -110,11 +129,114 @@ pub struct ServiceLatency {
     pub exec: LatencySummary,
 }
 
+/// Construction-time observability knobs ([`Service::with_options`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServiceOptions {
+    /// Serving SLO thresholds; the default enforces none.
+    pub slo: SloConfig,
+    /// Seconds a **busy** lane may go without a heartbeat mark before
+    /// [`Service::health`] reports it stalled. Idle lanes never stall.
+    pub stall_window_secs: f64,
+}
+
+impl Default for ServiceOptions {
+    fn default() -> ServiceOptions {
+        ServiceOptions { slo: SloConfig::default(), stall_window_secs: 30.0 }
+    }
+}
+
+/// Live per-lane view inside [`ServiceHealth`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LaneHealth {
+    pub lane: usize,
+    /// Currently executing a job.
+    pub busy: bool,
+    /// Jobs this lane has finished (success, error, or panic).
+    pub jobs_done: u64,
+    /// Seconds since the lane last reported progress (job start/end or
+    /// an engine iteration hook).
+    pub idle_secs: f64,
+    /// Busy and silent past the stall window — the watchdog verdict.
+    pub stalled: bool,
+}
+
+/// Lock-light service snapshot ([`Service::health`]): queue depth and
+/// in-flight from one brief state lock, everything else from relaxed
+/// atomics. Safe to poll from a monitoring thread at any frequency.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceHealth {
+    /// Jobs admitted but not yet picked up by a worker.
+    pub queue_depth: usize,
+    /// Jobs admitted and not yet completed (queued + running).
+    pub inflight: usize,
+    pub inflight_cap: usize,
+    /// Jobs ever admitted past backpressure.
+    pub jobs_admitted: u64,
+    /// Jobs that finished and published a result (success or error,
+    /// panics included — a panicked job still completes its ticket).
+    pub jobs_completed: u64,
+    /// Subset of completed jobs that panicked inside the run.
+    pub jobs_panicked: u64,
+    /// Per-SLO violation totals (jobs may violate several at once).
+    pub slo_gap_violations: u64,
+    pub slo_queue_wait_violations: u64,
+    pub slo_job_latency_violations: u64,
+    pub lanes: Vec<LaneHealth>,
+}
+
+impl ServiceHealth {
+    /// Sum of all SLO violation counters.
+    pub fn slo_violations(&self) -> u64 {
+        self.slo_gap_violations
+            + self.slo_queue_wait_violations
+            + self.slo_job_latency_violations
+    }
+
+    /// Indices of lanes the watchdog considers stalled.
+    pub fn stalled_lanes(&self) -> Vec<usize> {
+        self.lanes
+            .iter()
+            .filter(|l| l.stalled)
+            .map(|l| l.lane)
+            .collect()
+    }
+}
+
 struct ServiceState {
     queue: VecDeque<Queued>,
     /// Jobs submitted and not yet completed (queued + running).
     inflight: usize,
     open: bool,
+}
+
+/// Per-worker-lane observability state (all relaxed atomics — read by
+/// `health()` without stopping the lane).
+struct LaneState {
+    busy: AtomicBool,
+    jobs_done: AtomicU64,
+    heartbeat: Arc<Heartbeat>,
+}
+
+impl LaneState {
+    fn new() -> LaneState {
+        LaneState {
+            busy: AtomicBool::new(false),
+            jobs_done: AtomicU64::new(0),
+            heartbeat: Arc::new(Heartbeat::new()),
+        }
+    }
+}
+
+/// Service-lifetime job/SLO counters (relaxed — monotone totals, no
+/// cross-counter consistency promised).
+#[derive(Default)]
+struct Counters {
+    admitted: AtomicU64,
+    completed: AtomicU64,
+    panicked: AtomicU64,
+    slo_gap: AtomicU64,
+    slo_queue_wait: AtomicU64,
+    slo_job_latency: AtomicU64,
 }
 
 struct Shared {
@@ -127,6 +249,10 @@ struct Shared {
     /// Always-on per-job latency aggregates (locked once per job
     /// completion — uncontended next to a seconds-long run).
     latency: Mutex<LatencyAgg>,
+    opts: ServiceOptions,
+    counters: Counters,
+    /// One entry per worker, indexed by worker id.
+    lanes: Vec<LaneState>,
 }
 
 /// Multi-job segmentation service (see module docs).
@@ -138,8 +264,20 @@ pub struct Service {
 impl Service {
     /// Service with `workers` job threads admitting at most
     /// `inflight_cap` concurrent jobs (both clamped to >= 1;
-    /// `inflight_cap` below `workers` leaves workers idle).
+    /// `inflight_cap` below `workers` leaves workers idle). No SLOs
+    /// enforced; see [`Service::with_options`].
     pub fn new(workers: usize, inflight_cap: usize) -> Service {
+        Service::with_options(workers, inflight_cap, ServiceOptions::default())
+    }
+
+    /// [`Service::new`] plus SLO thresholds and the watchdog stall
+    /// window ([`ServiceOptions`]).
+    pub fn with_options(
+        workers: usize,
+        inflight_cap: usize,
+        opts: ServiceOptions,
+    ) -> Service {
+        let workers = workers.max(1);
         let shared = Arc::new(Shared {
             state: Mutex::new(ServiceState {
                 queue: VecDeque::new(),
@@ -150,8 +288,11 @@ impl Service {
             space: Condvar::new(),
             inflight_cap: inflight_cap.max(1),
             latency: Mutex::new(LatencyAgg::default()),
+            opts,
+            counters: Counters::default(),
+            lanes: (0..workers).map(|_| LaneState::new()).collect(),
         });
-        let workers = (0..workers.max(1))
+        let workers = (0..workers)
             .map(|w| {
                 let sh = Arc::clone(&shared);
                 std::thread::Builder::new()
@@ -165,6 +306,111 @@ impl Service {
 
     pub fn inflight_cap(&self) -> usize {
         self.shared.inflight_cap
+    }
+
+    /// Live health snapshot (see [`ServiceHealth`]). One brief state
+    /// lock for queue depth / in-flight; counters and lane state are
+    /// relaxed atomic reads. A lane is `stalled` when it is busy and
+    /// its heartbeat has been silent longer than
+    /// [`ServiceOptions::stall_window_secs`] — the watchdog reports
+    /// the hang here instead of letting callers block blind.
+    pub fn health(&self) -> ServiceHealth {
+        let (queue_depth, inflight) = {
+            let st = self.shared.state.lock().unwrap();
+            (st.queue.len(), st.inflight)
+        };
+        let c = &self.shared.counters;
+        let stall = self.shared.opts.stall_window_secs;
+        let lanes = self
+            .shared
+            .lanes
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let busy = l.busy.load(Ordering::Relaxed);
+                let idle_secs = l.heartbeat.secs_since();
+                LaneHealth {
+                    lane: i,
+                    busy,
+                    jobs_done: l.jobs_done.load(Ordering::Relaxed),
+                    idle_secs,
+                    stalled: busy && idle_secs > stall,
+                }
+            })
+            .collect();
+        ServiceHealth {
+            queue_depth,
+            inflight,
+            inflight_cap: self.shared.inflight_cap,
+            jobs_admitted: c.admitted.load(Ordering::Relaxed),
+            jobs_completed: c.completed.load(Ordering::Relaxed),
+            jobs_panicked: c.panicked.load(Ordering::Relaxed),
+            slo_gap_violations: c.slo_gap.load(Ordering::Relaxed),
+            slo_queue_wait_violations: c.slo_queue_wait.load(Ordering::Relaxed),
+            slo_job_latency_violations: c
+                .slo_job_latency
+                .load(Ordering::Relaxed),
+            lanes,
+        }
+    }
+
+    /// Prometheus text-format (exposition 0.0.4) rendering of the
+    /// service's health counters, latency histograms, and the global
+    /// [`crate::dpp::timing`] registry. One page, scrape-ready; see
+    /// DESIGN.md §13 for the log2-bucket translation.
+    pub fn metrics_text(&self) -> String {
+        use crate::obs::prometheus::{
+            render_snapshot, timing_snapshot, TextWriter,
+        };
+        let h = self.health();
+        let mut w = TextWriter::new();
+        w.family("dpp_jobs_total", "counter",
+                 "Service jobs by lifecycle state.");
+        w.sample("dpp_jobs_total", &[("state", "admitted")],
+                 h.jobs_admitted as f64);
+        w.sample("dpp_jobs_total", &[("state", "completed")],
+                 h.jobs_completed as f64);
+        w.sample("dpp_jobs_total", &[("state", "panicked")],
+                 h.jobs_panicked as f64);
+        w.family("dpp_slo_violations_total", "counter",
+                 "Jobs that violated a serving SLO, by threshold.");
+        w.sample("dpp_slo_violations_total", &[("slo", "gap")],
+                 h.slo_gap_violations as f64);
+        w.sample("dpp_slo_violations_total", &[("slo", "queue_wait")],
+                 h.slo_queue_wait_violations as f64);
+        w.sample("dpp_slo_violations_total", &[("slo", "job_latency")],
+                 h.slo_job_latency_violations as f64);
+        w.family("dpp_queue_depth", "gauge",
+                 "Jobs admitted but not yet picked up.");
+        w.sample("dpp_queue_depth", &[], h.queue_depth as f64);
+        w.family("dpp_inflight", "gauge",
+                 "Jobs admitted and not yet completed.");
+        w.sample("dpp_inflight", &[], h.inflight as f64);
+        w.family("dpp_lane_busy", "gauge",
+                 "1 while the lane is executing a job.");
+        for l in &h.lanes {
+            let lane = l.lane.to_string();
+            w.sample("dpp_lane_busy", &[("lane", &lane)],
+                     if l.busy { 1.0 } else { 0.0 });
+        }
+        w.family("dpp_lane_jobs_total", "counter",
+                 "Jobs finished per lane.");
+        for l in &h.lanes {
+            let lane = l.lane.to_string();
+            w.sample("dpp_lane_jobs_total", &[("lane", &lane)],
+                     l.jobs_done as f64);
+        }
+        {
+            let agg = self.shared.latency.lock().unwrap();
+            w.family("dpp_job_queue_wait_seconds", "histogram",
+                     "Submit -> dequeue wait per job.");
+            w.log2_hist("dpp_job_queue_wait_seconds", &[], &agg.wait, 1e-9);
+            w.family("dpp_job_exec_seconds", "histogram",
+                     "Dequeue -> finish execution per job.");
+            w.log2_hist("dpp_job_exec_seconds", &[], &agg.exec, 1e-9);
+        }
+        render_snapshot(&mut w, &timing_snapshot());
+        w.finish()
     }
 
     /// p50/p90/p99 of queue wait and execute time over every job this
@@ -191,6 +437,7 @@ impl Service {
             st = self.shared.space.wait(st).unwrap();
         }
         st.inflight += 1;
+        self.shared.counters.admitted.fetch_add(1, Ordering::Relaxed);
         st.queue.push_back(Queued {
             job,
             slot: Arc::clone(&slot),
@@ -248,28 +495,63 @@ fn worker_loop(shared: &Shared, w: usize) {
         // contract (module docs).
         let started = Instant::now();
         let wait = started.duration_since(queued.submitted);
+        let lane = &shared.lanes[w];
+        lane.busy.store(true, Ordering::Relaxed);
+        lane.heartbeat.mark();
         let t = Timer::start();
         // Contain panics to the job: an unwinding run would otherwise
         // leave the ticket's condvar waiting forever and leak one unit
         // of in-flight capacity — per-job failures must never be fatal
         // to the service.
+        let mut panicked = false;
         let res = {
             let _span = crate::telemetry::span("job", "Service::job");
             crate::telemetry::name_thread(format_args!("serve-{w}"));
+            // Bound only for the job's duration: engine iteration
+            // hooks mark it, and the scheduler re-installs it inside
+            // the lane threads it spawns (watchdog progress signal).
+            let _hb = obs::install_heartbeat(Arc::clone(&lane.heartbeat));
             std::panic::catch_unwind(std::panic::AssertUnwindSafe(
                 || run_job(&queued.job),
             ))
-            .unwrap_or_else(|p| Err(anyhow::anyhow!(
-                "job panicked: {}", panic_message(p.as_ref())
-            )))
+            .unwrap_or_else(|p| {
+                panicked = true;
+                Err(anyhow::anyhow!(
+                    "job panicked: {}", panic_message(p.as_ref())
+                ))
+            })
         };
         let exec = t.elapsed();
         if timing::recording() {
             timing::record("Service::job", exec.as_nanos() as u64);
         }
+        let slo = slo_flags(
+            &shared.opts.slo,
+            &res,
+            wait.as_secs_f64(),
+            exec.as_secs_f64(),
+        );
+        let c = &shared.counters;
+        if slo.gap {
+            c.slo_gap.fetch_add(1, Ordering::Relaxed);
+        }
+        if slo.queue_wait {
+            c.slo_queue_wait.fetch_add(1, Ordering::Relaxed);
+        }
+        if slo.job_latency {
+            c.slo_job_latency.fetch_add(1, Ordering::Relaxed);
+        }
+        if panicked {
+            c.panicked.fetch_add(1, Ordering::Relaxed);
+        }
+        c.completed.fetch_add(1, Ordering::Relaxed);
+        lane.jobs_done.fetch_add(1, Ordering::Relaxed);
+        lane.heartbeat.mark();
+        lane.busy.store(false, Ordering::Relaxed);
         let stats = JobStats {
             queue_wait_secs: wait.as_secs_f64(),
             exec_secs: exec.as_secs_f64(),
+            slo,
         };
         {
             let mut agg = shared.latency.lock().unwrap();
@@ -283,6 +565,33 @@ fn worker_loop(shared: &Shared, w: usize) {
             st.inflight -= 1;
         }
         shared.space.notify_one();
+    }
+}
+
+/// Evaluate the configured SLO thresholds against one finished job.
+/// The gap SLO only applies to successful reports from certifying
+/// engines — a job without a certificate cannot violate it.
+fn slo_flags(
+    slo: &SloConfig,
+    res: &Result<RunReport>,
+    wait_secs: f64,
+    exec_secs: f64,
+) -> SloFlags {
+    if slo.is_disabled() {
+        return SloFlags::default();
+    }
+    let gap = match (slo.max_gap, res) {
+        (Some(max), Ok(report)) => {
+            report.optimality_gap().is_some_and(|g| g > max)
+        }
+        _ => false,
+    };
+    SloFlags {
+        gap,
+        queue_wait: slo.max_queue_wait.is_some_and(|m| wait_secs > m),
+        job_latency: slo
+            .max_job_latency
+            .is_some_and(|m| wait_secs + exec_secs > m),
     }
 }
 
@@ -381,5 +690,71 @@ mod tests {
         let reports = service.run_batch(vec![bad, job(6, 1)]);
         assert!(reports[0].is_err());
         assert!(reports[1].is_ok());
+    }
+
+    #[test]
+    fn health_counts_jobs_and_lanes() {
+        let service = Service::new(2, 2);
+        let fresh = service.health();
+        assert_eq!(fresh.jobs_admitted, 0);
+        assert_eq!(fresh.lanes.len(), 2);
+        assert!(fresh.lanes.iter().all(|l| !l.busy && !l.stalled));
+        let reports = service.run_batch(vec![job(7, 1), job(8, 1)]);
+        assert!(reports.iter().all(|r| r.is_ok()));
+        let h = service.health();
+        assert_eq!(h.jobs_admitted, 2);
+        assert_eq!(h.jobs_completed, 2);
+        assert_eq!(h.jobs_panicked, 0);
+        assert_eq!(h.inflight, 0);
+        assert_eq!(h.queue_depth, 0);
+        assert_eq!(h.inflight_cap, 2);
+        assert_eq!(h.slo_violations(), 0, "no SLOs configured");
+        assert_eq!(
+            h.lanes.iter().map(|l| l.jobs_done).sum::<u64>(),
+            2,
+            "every finished job lands on some lane"
+        );
+        assert!(h.stalled_lanes().is_empty());
+    }
+
+    #[test]
+    fn impossible_latency_slo_marks_jobs_and_counts_violations() {
+        // max_job_latency = 0 is unsatisfiable (every run takes > 0 s),
+        // so each job must come back flagged and counted.
+        let opts = ServiceOptions {
+            slo: SloConfig {
+                max_job_latency: Some(0.0),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let service = Service::with_options(1, 2, opts);
+        let (res, stats) = service.submit(job(9, 1)).wait_stats();
+        assert!(res.is_ok());
+        assert!(stats.slo.job_latency, "0-second latency SLO must trip");
+        assert!(!stats.slo.gap, "no gap threshold configured");
+        let h = service.health();
+        assert_eq!(h.slo_job_latency_violations, 1);
+        assert_eq!(h.slo_gap_violations, 0);
+        assert_eq!(h.slo_violations(), 1);
+    }
+
+    #[test]
+    fn metrics_text_exposes_service_families() {
+        let service = Service::new(1, 1);
+        let reports = service.run_batch(vec![job(10, 1)]);
+        assert!(reports[0].is_ok());
+        let text = service.metrics_text();
+        assert!(text.contains("# TYPE dpp_jobs_total counter"), "{text}");
+        assert!(
+            text.contains("dpp_jobs_total{state=\"completed\"} 1\n"),
+            "{text}"
+        );
+        assert!(text.contains("dpp_queue_depth 0\n"));
+        assert!(text.contains("dpp_lane_busy{lane=\"0\"} 0\n"));
+        assert!(text.contains("dpp_job_exec_seconds_count 1\n"));
+        assert!(
+            text.contains("dpp_job_exec_seconds_bucket{le=\"+Inf\"} 1\n")
+        );
     }
 }

@@ -117,18 +117,40 @@ impl Log2Histogram {
             p50: self.quantile(0.50),
             p90: self.quantile(0.90),
             p99: self.quantile(0.99),
+            samples: self.total,
         }
+    }
+
+    /// Raw per-bucket counts (65 entries — see the bucket layout in
+    /// the type docs). Exposed for the Prometheus translation in
+    /// [`crate::obs::prometheus`].
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Saturating sum of all recorded samples (recorded unit).
+    pub fn sum(&self) -> u64 {
+        self.sum
     }
 }
 
-/// The three serving percentiles every report surfaces. Unit follows
-/// whatever was recorded (seconds for report JSON, nanoseconds inside
-/// [`Log2Histogram`]).
+/// The three serving percentiles every report surfaces, plus the
+/// sample count they summarize. Unit follows whatever was recorded
+/// (seconds for report JSON, nanoseconds inside [`Log2Histogram`]).
+///
+/// `samples == 0` is meaningful, not degenerate: [`to_json`]
+/// serializes the percentiles as `null` so dashboards can distinguish
+/// "no traffic" from "instant jobs" (ISSUE 8; pinned by
+/// `tests/report_schema.rs`).
+///
+/// [`to_json`]: LatencySummary::to_json
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct LatencySummary {
     pub p50: f64,
     pub p90: f64,
     pub p99: f64,
+    /// How many samples the percentiles were computed from.
+    pub samples: u64,
 }
 
 impl LatencySummary {
@@ -138,10 +160,18 @@ impl LatencySummary {
             p50: self.p50 / d,
             p90: self.p90 / d,
             p99: self.p99 / d,
+            samples: self.samples,
         }
     }
 
     pub fn to_json(self) -> Value {
+        if self.samples == 0 {
+            return Value::object(vec![
+                ("p50", Value::Null),
+                ("p90", Value::Null),
+                ("p99", Value::Null),
+            ]);
+        }
         Value::object(vec![
             ("p50", self.p50.into()),
             ("p90", self.p90.into()),
@@ -152,7 +182,8 @@ impl LatencySummary {
 
 /// Exact nearest-rank percentiles over an in-memory sample set (the
 /// per-slice path — a run has few enough slices to sort). Empty input
-/// yields all-zero percentiles.
+/// yields the `samples == 0` summary, which serializes as `null`
+/// percentiles.
 pub fn percentiles(samples: &[f64]) -> LatencySummary {
     if samples.is_empty() {
         return LatencySummary::default();
@@ -164,7 +195,12 @@ pub fn percentiles(samples: &[f64]) -> LatencySummary {
         let idx = ((q * n).ceil() as usize).max(1) - 1;
         s[idx.min(s.len() - 1)]
     };
-    LatencySummary { p50: rank(0.50), p90: rank(0.90), p99: rank(0.99) }
+    LatencySummary {
+        p50: rank(0.50),
+        p90: rank(0.90),
+        p99: rank(0.99),
+        samples: samples.len() as u64,
+    }
 }
 
 #[cfg(test)]
@@ -230,9 +266,28 @@ mod tests {
         assert_eq!(p.p50, 50.0);
         assert_eq!(p.p90, 90.0);
         assert_eq!(p.p99, 99.0);
-        assert_eq!(percentiles(&[]).p50, 0.0);
+        assert_eq!(p.samples, 100);
         let one = percentiles(&[3.5]);
         assert_eq!((one.p50, one.p90, one.p99), (3.5, 3.5, 3.5));
+        assert_eq!(one.samples, 1);
+    }
+
+    #[test]
+    fn empty_percentiles_serialize_as_null() {
+        // "No traffic" must be distinguishable from "instant jobs"
+        // (ISSUE 8): zero samples -> null percentiles, a genuine
+        // 0-valued sample set -> numeric zeros.
+        let empty = percentiles(&[]);
+        assert_eq!(empty.samples, 0);
+        let j = empty.to_json();
+        for q in ["p50", "p90", "p99"] {
+            assert_eq!(j.get(q), Some(&Value::Null), "{q}");
+        }
+        assert_eq!(Log2Histogram::new().summary().to_json().get("p50"),
+                   Some(&Value::Null));
+        let zeros = percentiles(&[0.0, 0.0]);
+        assert_eq!(zeros.to_json().get("p50").and_then(Value::as_f64),
+                   Some(0.0));
     }
 
     #[test]

@@ -379,6 +379,91 @@ mod tests {
     }
 
     #[test]
+    fn empty_trace_exports_valid_chrome_json() {
+        let _guard = trace_test_lock();
+        let trace = Tracer::start().finish();
+        assert_eq!(trace.num_events(), 0);
+        assert!(trace.threads.is_empty());
+        let j = trace.to_chrome_json();
+        let events =
+            j.get("traceEvents").and_then(Value::as_array).unwrap();
+        assert!(events.is_empty());
+        // And the export round-trips through the JSON parser.
+        let back = crate::json::parse(&j.to_pretty()).unwrap();
+        assert!(back
+            .get("traceEvents")
+            .and_then(Value::as_array)
+            .unwrap()
+            .is_empty());
+    }
+
+    #[test]
+    fn spans_open_at_export_are_dropped_not_corrupted() {
+        let _guard = trace_test_lock();
+        let tracer = Tracer::start();
+        let closed = span("prim", "Map");
+        drop(closed);
+        let open = span("prim", "Scan"); // still open at finish()
+        let trace = tracer.finish();
+        // The open span's guard drops after disarm: its event is
+        // discarded, never half-recorded.
+        assert_eq!(trace.num_events(), 1);
+        drop(open);
+        assert_eq!(trace.num_events(), 1, "late drop adds nothing");
+        let j = trace.to_chrome_json();
+        let events =
+            j.get("traceEvents").and_then(Value::as_array).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(
+            events[0].get("name").and_then(Value::as_str),
+            Some("Map")
+        );
+    }
+
+    #[test]
+    fn two_threads_with_the_same_name_stay_distinct() {
+        let _guard = trace_test_lock();
+        let tracer = Tracer::start();
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                s.spawn(|| {
+                    name_thread(format_args!("opt-lane-{}", 7));
+                    drop(span("slice", "opt"));
+                });
+            }
+        });
+        let trace = tracer.finish();
+        assert_eq!(trace.threads.len(), 2);
+        let j = tracer_export(&trace);
+        let metas: Vec<&Value> = j
+            .iter()
+            .filter(|e| e.get("ph").and_then(Value::as_str) == Some("M"))
+            .collect();
+        assert_eq!(metas.len(), 2, "one metadata record per thread");
+        let tids: Vec<f64> = metas
+            .iter()
+            .map(|m| m.get("tid").and_then(Value::as_f64).unwrap())
+            .collect();
+        assert_ne!(tids[0], tids[1], "same label, distinct tids");
+        for m in &metas {
+            assert_eq!(
+                m.get("args")
+                    .and_then(|a| a.get("name"))
+                    .and_then(Value::as_str),
+                Some("opt-lane-7")
+            );
+        }
+    }
+
+    /// Export helper: the flat traceEvents array (owned clone).
+    fn tracer_export(trace: &Trace) -> Vec<Value> {
+        match trace.to_chrome_json().get("traceEvents") {
+            Some(Value::Array(v)) => v.clone(),
+            _ => panic!("missing traceEvents"),
+        }
+    }
+
+    #[test]
     fn events_after_finish_are_dropped() {
         let _guard = trace_test_lock();
         let tracer = Tracer::start();

@@ -58,7 +58,9 @@ fn sweep_parity_serial_oracle_vs_dpp_backends() {
             let unary = bp::sweep::unaries(&bk, &model, &prm);
             let mut st =
                 bp::BpState::new(g.num_edges(), model.num_vertices());
-            bp::sweep::run(&bk, &model, &g, &unary, &mut st, &cfg, false);
+            bp::sweep::run(
+                &bk, &model, &g, &unary, &mut st, &cfg, false, 0,
+            );
             assert_eq!(st.msg, want_msg, "{schedule:?} messages {bk:?}");
         }
     }

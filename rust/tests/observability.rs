@@ -1,0 +1,287 @@
+//! Observability integration contract (ISSUE 8): the convergence
+//! flight recorder journals monotone dual bounds into the run report,
+//! serving SLOs mark and count violating jobs, the Prometheus
+//! exposition parses line by line, and — the other half of the
+//! contract — arming none of it leaves run output bitwise identical.
+//!
+//! Every test serializes on `obs_test_lock`: the recorder is
+//! process-global, and even the SLO tests run engines whose iteration
+//! hooks would journal into a concurrently-armed ring.
+
+use dpp_pmrf::config::{DatasetConfig, EngineKind, RunConfig};
+use dpp_pmrf::coordinator::Coordinator;
+use dpp_pmrf::image;
+use dpp_pmrf::json::Value;
+use dpp_pmrf::obs::{self, ConvPoint, SloConfig};
+use dpp_pmrf::sched::{Service, ServiceOptions};
+
+fn dual_cfg(slices: usize) -> RunConfig {
+    RunConfig {
+        dataset: DatasetConfig {
+            width: 48,
+            height: 48,
+            slices,
+            ..Default::default()
+        },
+        engine: EngineKind::Dual,
+        threads: 1,
+        ..Default::default()
+    }
+}
+
+fn run(cfg: &RunConfig) -> dpp_pmrf::coordinator::RunReport {
+    let ds = image::generate(&cfg.dataset);
+    Coordinator::new(cfg.clone()).unwrap().run(&ds).unwrap()
+}
+
+// ---- Prometheus text-format line validator -------------------------
+
+fn is_name_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_' || c == ':'
+}
+
+fn is_name_char(c: char) -> bool {
+    is_name_start(c) || c.is_ascii_digit()
+}
+
+/// Split a leading metric/label name off `s`; `None` when `s` does not
+/// start with a valid name.
+fn split_name(s: &str) -> Option<(&str, &str)> {
+    let mut end = 0;
+    for (i, c) in s.char_indices() {
+        if i == 0 && !is_name_start(c) {
+            return None;
+        }
+        if i > 0 && !is_name_char(c) {
+            break;
+        }
+        end = i + c.len_utf8();
+    }
+    if end == 0 {
+        None
+    } else {
+        Some((&s[..end], &s[end..]))
+    }
+}
+
+/// Validate one non-comment exposition line: `name[{labels}] value`.
+/// `families` holds every name declared by a preceding `# TYPE` line;
+/// histogram series may append `_bucket`/`_sum`/`_count`.
+fn check_sample(
+    line: &str,
+    families: &std::collections::HashSet<String>,
+) -> Result<(), String> {
+    let (name, mut rest) =
+        split_name(line).ok_or_else(|| format!("bad name: {line}"))?;
+    let declared = families.contains(name)
+        || ["_bucket", "_sum", "_count"].iter().any(|suf| {
+            name.strip_suffix(suf)
+                .is_some_and(|base| families.contains(base))
+        });
+    if !declared {
+        return Err(format!("sample `{name}` has no preceding # TYPE"));
+    }
+    if let Some(mut r) = rest.strip_prefix('{') {
+        loop {
+            let (_label, r2) = split_name(r)
+                .ok_or_else(|| format!("bad label name in: {line}"))?;
+            let r2 = r2
+                .strip_prefix("=\"")
+                .ok_or_else(|| format!("label missing =\" in: {line}"))?;
+            // Scan to the closing quote, honoring backslash escapes.
+            let mut close = None;
+            let mut it = r2.char_indices();
+            while let Some((i, c)) = it.next() {
+                match c {
+                    '\\' => {
+                        it.next();
+                    }
+                    '"' => {
+                        close = Some(i);
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+            let close = close
+                .ok_or_else(|| format!("unterminated label in: {line}"))?;
+            let after = &r2[close + 1..];
+            if let Some(a) = after.strip_prefix(',') {
+                r = a;
+            } else if let Some(a) = after.strip_prefix('}') {
+                rest = a;
+                break;
+            } else {
+                return Err(format!("expected , or }} in: {line}"));
+            }
+        }
+    }
+    let value = rest
+        .strip_prefix(' ')
+        .ok_or_else(|| format!("missing space before value: {line}"))?;
+    value
+        .parse::<f64>()
+        .map_err(|_| format!("unparseable value `{value}` in: {line}"))?;
+    Ok(())
+}
+
+/// Full-page validator: every line is a well-formed `# HELP`, `# TYPE`,
+/// or sample line, and every sample belongs to a declared family.
+/// Returns the number of sample lines.
+fn validate_exposition(text: &str) -> usize {
+    let mut families = std::collections::HashSet::new();
+    let mut samples = 0;
+    for line in text.lines() {
+        assert!(!line.is_empty(), "blank line in exposition");
+        if let Some(c) = line.strip_prefix("# ") {
+            if let Some(h) = c.strip_prefix("HELP ") {
+                let (_, rest) = split_name(h).expect("HELP name");
+                assert!(rest.starts_with(' '), "HELP without text: {line}");
+            } else if let Some(t) = c.strip_prefix("TYPE ") {
+                let (name, rest) = split_name(t).expect("TYPE name");
+                let kind = rest.trim_start();
+                assert!(
+                    ["counter", "gauge", "histogram"].contains(&kind),
+                    "unknown TYPE `{kind}`: {line}"
+                );
+                families.insert(name.to_string());
+            } else {
+                panic!("unknown comment form: {line}");
+            }
+        } else {
+            check_sample(line, &families).unwrap();
+            samples += 1;
+        }
+    }
+    samples
+}
+
+// ---- tests ---------------------------------------------------------
+
+#[test]
+fn metrics_text_round_trips_the_line_format_validator() {
+    let _g = obs::obs_test_lock();
+    let cfg = dual_cfg(1);
+    let ds = image::generate(&cfg.dataset);
+    let service = Service::new(1, 1);
+    let reports = service
+        .run_batch(vec![dpp_pmrf::sched::Job { dataset: ds, cfg }]);
+    assert!(reports[0].is_ok());
+    let text = service.metrics_text();
+    let samples = validate_exposition(&text);
+    assert!(samples > 0, "exposition has sample lines");
+    // Histogram translation: cumulative buckets end at +Inf carrying
+    // the series count (DESIGN.md §13).
+    assert!(
+        text.contains("dpp_job_exec_seconds_bucket{le=\"+Inf\"} 1\n"),
+        "{text}"
+    );
+    assert!(text.contains("dpp_job_exec_seconds_count 1\n"));
+}
+
+#[test]
+fn forced_gap_slo_marks_the_job_and_shows_in_health() {
+    let _g = obs::obs_test_lock();
+    // max_gap = 0 is unsatisfiable for the dual engine: its certified
+    // gap includes the (strictly positive) scorer slack, so the SLO
+    // must trip deterministically.
+    let opts = ServiceOptions {
+        slo: SloConfig { max_gap: Some(0.0), ..Default::default() },
+        ..Default::default()
+    };
+    let service = Service::with_options(1, 1, opts);
+    let cfg = dual_cfg(1);
+    let ds = image::generate(&cfg.dataset);
+    let (res, stats) = service
+        .submit(dpp_pmrf::sched::Job { dataset: ds, cfg })
+        .wait_stats();
+    let report = res.unwrap();
+    assert!(report.optimality_gap().unwrap() > 0.0);
+    assert!(stats.slo.gap, "0-gap SLO must flag a certified dual run");
+    assert!(!stats.slo.job_latency, "no latency threshold configured");
+    let h = service.health();
+    assert_eq!(h.slo_gap_violations, 1);
+    assert_eq!(h.slo_violations(), 1);
+    // And the violation reaches the exposition.
+    assert!(service
+        .metrics_text()
+        .contains("dpp_slo_violations_total{slo=\"gap\"} 1\n"));
+}
+
+#[test]
+fn armed_dual_run_journals_monotone_bounds_into_the_report() {
+    let _g = obs::obs_test_lock();
+    obs::arm(obs::DEFAULT_CAPACITY);
+    let report = run(&dual_cfg(1));
+    obs::disarm();
+    let log = report
+        .convergence
+        .as_ref()
+        .expect("armed run embeds its journal");
+    assert!(!log.samples.is_empty());
+    assert_eq!(log.dropped, 0, "default capacity holds a small run");
+    // Every sample from a dual run is a dual point, and within one EM
+    // iteration the journaled lower bound is the running best of the
+    // ascent — non-decreasing by construction, with gap >= 0 and
+    // bound <= primal throughout.
+    let mut prev: Option<(u32, f64)> = None;
+    for s in &log.samples {
+        let ConvPoint::Dual { lower_bound, primal, gap } = s.point
+        else {
+            panic!("non-dual sample {:?}", s.point);
+        };
+        assert!(lower_bound.is_finite());
+        assert!(gap >= 0.0, "gap {gap}");
+        assert!(lower_bound <= primal + 1e-9 * primal.abs().max(1.0));
+        if let Some((em, lb)) = prev {
+            if em == s.em {
+                assert!(
+                    lower_bound >= lb,
+                    "bound regressed within em {em}: {lb} -> \
+                     {lower_bound}"
+                );
+            }
+        }
+        prev = Some((s.em, lower_bound));
+    }
+    // Report section: <= 256 points with the exact first and last
+    // samples retained.
+    let section = report.to_json();
+    let conv = section.get("convergence").expect("convergence key");
+    assert_eq!(
+        conv.get("samples").and_then(Value::as_usize),
+        Some(log.samples.len())
+    );
+    let points = conv.get("points").and_then(Value::as_array).unwrap();
+    assert!(points.len() <= 256, "{} points", points.len());
+    let first = &log.samples[0];
+    let last = &log.samples[log.samples.len() - 1];
+    assert_eq!(
+        points[0].get("t_nanos").and_then(Value::as_usize),
+        Some(first.t_nanos as usize)
+    );
+    assert_eq!(
+        points[points.len() - 1]
+            .get("t_nanos")
+            .and_then(Value::as_usize),
+        Some(last.t_nanos as usize)
+    );
+}
+
+#[test]
+fn armed_run_is_bitwise_identical_to_a_disarmed_run() {
+    let _g = obs::obs_test_lock();
+    let cfg = dual_cfg(2);
+    let off = run(&cfg);
+    assert!(off.convergence.is_none(), "disarmed run embeds nothing");
+    obs::arm(obs::DEFAULT_CAPACITY);
+    let on = run(&cfg);
+    obs::disarm();
+    assert!(on.convergence.is_some());
+    // The recorder only reads engine state — labels, energies, and
+    // certificates must match bit for bit.
+    assert_eq!(off.output.data, on.output.data);
+    assert_eq!(off.porosity, on.porosity);
+    assert_eq!(off.lower_bound(), on.lower_bound());
+    assert_eq!(off.optimality_gap(), on.optimality_gap());
+}

@@ -7,7 +7,7 @@ use dpp_pmrf::config::{DatasetConfig, DatasetKind, EngineKind, MrfConfig,
 use dpp_pmrf::coordinator::Coordinator;
 use dpp_pmrf::dpp::Backend;
 use dpp_pmrf::image;
-use dpp_pmrf::metrics::Confusion;
+use dpp_pmrf::eval::Confusion;
 use dpp_pmrf::mrf::{self, Engine};
 use dpp_pmrf::overseg::oversegment;
 use dpp_pmrf::pool::Pool;

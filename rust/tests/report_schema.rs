@@ -36,14 +36,14 @@ fn keys(v: &Value) -> Vec<&str> {
 
 /// The run-level contract on a synthetic dataset (ground truth
 /// present, so the confusion metrics appear).
-const RUN_KEYS: [&str; 27] = [
-    "accuracy", "device", "device_fused_regions", "device_offload",
-    "device_threaded", "em_iters", "engine", "exec", "inflight_cap",
-    "job_latency", "lane_occupancy", "lane_timeline", "lanes",
-    "lower_bound", "map_iters", "mean_init_secs", "mean_opt_secs",
-    "optimality_gap", "peak_inflight", "porosity", "precision",
-    "queue_wait", "recall", "slice_reports", "slices", "slices_per_sec",
-    "total_secs",
+const RUN_KEYS: [&str; 28] = [
+    "accuracy", "convergence", "device", "device_fused_regions",
+    "device_offload", "device_threaded", "em_iters", "engine", "exec",
+    "inflight_cap", "job_latency", "lane_occupancy", "lane_timeline",
+    "lanes", "lower_bound", "map_iters", "mean_init_secs",
+    "mean_opt_secs", "optimality_gap", "peak_inflight", "porosity",
+    "precision", "queue_wait", "recall", "slice_reports", "slices",
+    "slices_per_sec", "total_secs",
 ];
 
 /// The per-slice row contract.
@@ -74,6 +74,9 @@ fn non_certifying_engine_reports_null_certificates() {
     // not special-case engines without certificates.
     assert_eq!(j.get("lower_bound"), Some(&Value::Null));
     assert_eq!(j.get("optimality_gap"), Some(&Value::Null));
+    // Flight recorder off by default: the key is pinned, the value
+    // null (ISSUE 8).
+    assert_eq!(j.get("convergence"), Some(&Value::Null));
     for row in j.get("slice_reports").and_then(Value::as_array).unwrap() {
         assert_eq!(row.get("lower_bound"), Some(&Value::Null));
         assert_eq!(row.get("optimality_gap"), Some(&Value::Null));
@@ -114,4 +117,28 @@ fn dual_engine_reports_finite_ordered_certificates() {
     // Run-level bound is the per-slice sum (energies are additive).
     assert!((lb - sum).abs() <= 1e-9 * sum.abs().max(1.0),
             "run bound {lb} vs slice sum {sum}");
+}
+
+/// Empty-percentile semantics (ISSUE 8): zero completed jobs must
+/// serialize as `null` percentile objects — "no traffic" is
+/// distinguishable from "instant jobs" — at every surface a report
+/// consumer scrapes.
+#[test]
+fn zero_jobs_emit_null_percentile_objects() {
+    // The report path's exact-percentile summarizer.
+    let j = dpp_pmrf::telemetry::percentiles(&[]).to_json();
+    for q in ["p50", "p90", "p99"] {
+        assert_eq!(j.get(q), Some(&Value::Null), "percentiles.{q}");
+    }
+    // The serving path: a fresh service has completed nothing.
+    let svc = dpp_pmrf::sched::Service::new(1, 1);
+    let lat = svc.latency();
+    assert_eq!(lat.jobs, 0);
+    for (name, s) in [("wait", lat.wait), ("exec", lat.exec)] {
+        assert_eq!(s.samples, 0, "{name}");
+        let j = s.to_json();
+        for q in ["p50", "p90", "p99"] {
+            assert_eq!(j.get(q), Some(&Value::Null), "{name}.{q}");
+        }
+    }
 }
