@@ -24,7 +24,7 @@ export DPP_PMRF_BENCH_SCALE="${DPP_PMRF_BENCH_SCALE:-smoke}"
 # tightness, and the engine comparison.
 benches=("$@")
 if [ "${#benches[@]}" -eq 0 ]; then
-    benches=(throughput alloc_churn dual_gap bp_vs_map)
+    benches=(throughput alloc_churn dual_gap bp_vs_map pmp_denoise)
 fi
 
 rm -rf bench_results

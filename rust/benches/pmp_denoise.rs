@@ -1,0 +1,99 @@
+//! Particle max-product on the synthetic denoising workload: solver
+//! wall-clock across devices and particle budgets, with the decoded
+//! continuous energy, round count, and proposal acceptance as quality
+//! labels — the continuous-label analog of `dual_gap.rs`.
+//!
+//! The serial oracle (`pmp::serial`) runs beside every DPP device at
+//! the smallest particle budget, making the data-parallel overhead
+//! (or win) on particle-sized work explicit. All rows decode the
+//! same energies bitwise — the conformance gate
+//! (`tests/pmp_conformance.rs`) enforces it; this bench prices it.
+//!
+//! Output: `bench_results/pmp_denoise.json` — one row per
+//! (device, particles) with median seconds plus quality labels.
+
+use dpp_pmrf::bench_support::{Report, Scale};
+use dpp_pmrf::dpp::{Device, PoolDevice, SerialDevice, Workspace};
+use dpp_pmrf::mrf::continuous;
+use dpp_pmrf::pmp::{self, PmpConfig};
+use dpp_pmrf::pool::Pool;
+use dpp_pmrf::util::measure;
+
+fn main() {
+    let scale = Scale::from_env();
+    let mut report = Report::new("pmp_denoise");
+
+    // One noisy step image per bench run; every row solves the same
+    // instance so seconds are comparable across devices and budgets.
+    let (model, truth) = continuous::synthetic_denoise(
+        scale.width, scale.height, 20.0, 24414,
+    );
+
+    let devices: Vec<(&str, Box<dyn Device>)> = vec![
+        ("serial", Box::new(SerialDevice)),
+        ("pool-t2", Box::new(PoolDevice::new(2, 64))),
+        ("pool-max",
+         Box::new(PoolDevice::from_pool(Pool::with_default_threads(),
+                                        64))),
+    ];
+
+    for particles in [2usize, 4, 8] {
+        let cfg = PmpConfig {
+            particles,
+            iters: 8,
+            ..Default::default()
+        };
+
+        // The serial oracle prices the plain-loop baseline once per
+        // particle budget.
+        let stats = measure(scale.warmup, scale.reps, || {
+            pmp::serial::solve(&model, &cfg, None, false);
+        });
+        let run = pmp::serial::solve(&model, &cfg, None, false);
+        report.add(
+            vec![
+                ("device", "oracle".to_string()),
+                ("particles", particles.to_string()),
+                ("rounds", run.iters.to_string()),
+                ("energy", format!("{:.1}", run.energy)),
+                ("noise_energy", format!("{:.1}", model.energy(&model.y))),
+                ("truth_energy", format!("{:.1}", model.energy(&truth))),
+            ],
+            stats,
+        );
+
+        for (tag, dev) in &devices {
+            let ws = Workspace::new();
+            let stats = measure(scale.warmup, scale.reps, || {
+                pmp::solve(&**dev, &ws, &model, &cfg, None, false);
+            });
+            let run = pmp::solve(&**dev, &ws, &model, &cfg, None, false);
+            let denom =
+                (run.iters * model.num_vertices() * particles) as f64;
+            let acceptance =
+                run.accepted.iter().sum::<u64>() as f64 / denom.max(1.0);
+            report.add(
+                vec![
+                    ("device", tag.to_string()),
+                    ("particles", particles.to_string()),
+                    ("rounds", run.iters.to_string()),
+                    ("energy", format!("{:.1}", run.energy)),
+                    ("acceptance", format!("{acceptance:.3}")),
+                ],
+                stats,
+            );
+        }
+    }
+    report.finish();
+
+    println!("particle-parallel speedup (T_oracle / T_device):");
+    for particles in ["2", "4", "8"] {
+        let oracle = report.median(&[("device", "oracle"),
+                                     ("particles", particles)]);
+        let pool = report.median(&[("device", "pool-max"),
+                                   ("particles", particles)]);
+        if let (Some(o), Some(p)) = (oracle, pool) {
+            println!("  K={particles:<3} {:.2}x", o / p);
+        }
+    }
+}

@@ -127,6 +127,7 @@ impl Engine for BpEngine {
             history: em_window.history().to_vec(),
             params: prm,
             lower_bound: None,
+            pmp: None,
         }
     }
 }

@@ -12,6 +12,7 @@ use anyhow::{bail, Context, Result};
 use crate::bp::{BpConfig, BpSchedule};
 use crate::dual::DualConfig;
 use crate::json::{self, Value};
+use crate::pmp::PmpConfig;
 
 pub use crate::dpp::DeviceKind;
 
@@ -59,13 +60,18 @@ pub enum EngineKind {
     /// Dual block-coordinate ascent (MPLP-style) with certified
     /// lower bounds and optimality gaps (DESIGN.md §12).
     Dual,
+    /// Particle max-product over continuous label spaces: per-vertex
+    /// particle sets, seeded random-walk proposals, min-sum message
+    /// passing, select-and-prune (DESIGN.md §14).
+    Pmp,
 }
 
 impl EngineKind {
     /// Accepted `--engine` values, for help text and error messages.
-    pub const USAGE: &'static str = "serial|reference|dpp|xla|bp|dual";
+    pub const USAGE: &'static str =
+        "serial|reference|dpp|xla|bp|dual|pmp";
 
-    pub fn all() -> [EngineKind; 6] {
+    pub fn all() -> [EngineKind; 7] {
         [
             EngineKind::Serial,
             EngineKind::Reference,
@@ -73,6 +79,7 @@ impl EngineKind {
             EngineKind::Xla,
             EngineKind::Bp,
             EngineKind::Dual,
+            EngineKind::Pmp,
         ]
     }
 
@@ -84,6 +91,7 @@ impl EngineKind {
             "xla" => Ok(EngineKind::Xla),
             "bp" => Ok(EngineKind::Bp),
             "dual" => Ok(EngineKind::Dual),
+            "pmp" => Ok(EngineKind::Pmp),
             _ => bail!("unknown engine `{s}` ({})", Self::USAGE),
         }
     }
@@ -96,6 +104,7 @@ impl EngineKind {
             EngineKind::Xla => "xla",
             EngineKind::Bp => "bp",
             EngineKind::Dual => "dual",
+            EngineKind::Pmp => "pmp",
         }
     }
 
@@ -111,6 +120,9 @@ impl EngineKind {
             }
             EngineKind::Dual => {
                 "MPLP-style dual ascent with certified lower bounds"
+            }
+            EngineKind::Pmp => {
+                "particle max-product over continuous labels (D-PMP)"
             }
         }
     }
@@ -278,6 +290,9 @@ pub struct RunConfig {
     /// Dual engine parameters (used when `engine` is
     /// [`EngineKind::Dual`]).
     pub dual: DualConfig,
+    /// Particle max-product parameters (used when `engine` is
+    /// [`EngineKind::Pmp`]).
+    pub pmp: PmpConfig,
     /// Slice-scheduler shape (`--lanes` / `--inflight`).
     pub sched: SchedConfig,
     /// Observability switches (`--profile` / `--trace-out`).
@@ -303,6 +318,7 @@ impl Default for RunConfig {
             mrf: MrfConfig::default(),
             bp: BpConfig::default(),
             dual: DualConfig::default(),
+            pmp: PmpConfig::default(),
             sched: SchedConfig::default(),
             telemetry: TelemetryConfig::default(),
             obs: ObsConfig::default(),
@@ -389,6 +405,17 @@ impl RunConfig {
             cfg.dual.iters = get_usize(d, "iters", cfg.dual.iters);
             cfg.dual.tol = get_f64(d, "tol", cfg.dual.tol);
         }
+        if let Some(p) = v.get("pmp") {
+            cfg.pmp.particles =
+                get_usize(p, "particles", cfg.pmp.particles);
+            cfg.pmp.iters = get_usize(p, "iters", cfg.pmp.iters);
+            cfg.pmp.sweeps = get_usize(p, "sweeps", cfg.pmp.sweeps);
+            cfg.pmp.walk_sigma =
+                get_f64(p, "walk_sigma", cfg.pmp.walk_sigma as f64)
+                    as f32;
+            cfg.pmp.tol = get_f64(p, "tol", cfg.pmp.tol);
+            cfg.pmp.seed = get_u64(p, "seed", cfg.pmp.seed);
+        }
         if let Some(s) = v.get("sched") {
             cfg.sched.lanes = get_usize(s, "lanes", cfg.sched.lanes);
             cfg.sched.inflight =
@@ -472,6 +499,22 @@ impl RunConfig {
         if !self.dual.tol.is_finite() || self.dual.tol < 0.0 {
             bail!("dual.tol must be finite and >= 0");
         }
+        if self.pmp.particles == 0 {
+            bail!("pmp.particles must be >= 1");
+        }
+        if self.pmp.iters == 0 {
+            bail!("pmp.iters must be >= 1");
+        }
+        if self.pmp.sweeps == 0 {
+            bail!("pmp.sweeps must be >= 1");
+        }
+        if !self.pmp.walk_sigma.is_finite() || self.pmp.walk_sigma < 0.0
+        {
+            bail!("pmp.walk_sigma must be finite and >= 0");
+        }
+        if !self.pmp.tol.is_finite() || self.pmp.tol < 0.0 {
+            bail!("pmp.tol must be finite and >= 0");
+        }
         if self.sched.lanes == 0 {
             bail!("sched.lanes must be >= 1");
         }
@@ -536,6 +579,14 @@ impl RunConfig {
             ("dual", Value::object(vec![
                 ("iters", self.dual.iters.into()),
                 ("tol", self.dual.tol.into()),
+            ])),
+            ("pmp", Value::object(vec![
+                ("particles", self.pmp.particles.into()),
+                ("iters", self.pmp.iters.into()),
+                ("sweeps", self.pmp.sweeps.into()),
+                ("walk_sigma", (self.pmp.walk_sigma as f64).into()),
+                ("tol", self.pmp.tol.into()),
+                ("seed", (self.pmp.seed as usize).into()),
             ])),
             ("sched", Value::object(vec![
                 ("lanes", self.sched.lanes.into()),
@@ -621,6 +672,16 @@ mod tests {
         assert!(RunConfig::from_json(&v).is_err());
         let v = json::parse(r#"{"dual": {"tol": -1.0}}"#).unwrap();
         assert!(RunConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"pmp": {"particles": 0}}"#).unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"pmp": {"iters": 0}}"#).unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"pmp": {"sweeps": 0}}"#).unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"pmp": {"walk_sigma": -2.0}}"#).unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"pmp": {"tol": -1.0}}"#).unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
         let v = json::parse(r#"{"sched": {"lanes": 0}}"#).unwrap();
         assert!(RunConfig::from_json(&v).is_err());
         let v = json::parse(r#"{"sched": {"inflight": 0}}"#).unwrap();
@@ -629,10 +690,12 @@ mod tests {
 
     #[test]
     fn kinds_parse_and_name() {
-        for k in ["serial", "reference", "dpp", "xla", "bp", "dual"] {
+        for k in
+            ["serial", "reference", "dpp", "xla", "bp", "dual", "pmp"]
+        {
             assert_eq!(EngineKind::parse(k).unwrap().name(), k);
         }
-        assert_eq!(EngineKind::all().len(), 6);
+        assert_eq!(EngineKind::all().len(), 7);
         for d in ["synthetic", "experimental"] {
             assert_eq!(DatasetKind::parse(d).unwrap().name(), d);
         }
@@ -687,6 +750,27 @@ mod tests {
         let cfg = RunConfig::from_json(&v).unwrap();
         assert_eq!(cfg.dual.iters, 5);
         assert_eq!(cfg.dual.tol, DualConfig::default().tol);
+        // and the section round-trips through to_json
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn pmp_section_parses_and_round_trips() {
+        let v = json::parse(
+            r#"{"engine": "pmp", "pmp": {"particles": 4, "iters": 8,
+                "sweeps": 2, "walk_sigma": 6.5, "tol": 1e-5}}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.engine, EngineKind::Pmp);
+        assert_eq!(cfg.pmp.particles, 4);
+        assert_eq!(cfg.pmp.iters, 8);
+        assert_eq!(cfg.pmp.sweeps, 2);
+        assert_eq!(cfg.pmp.walk_sigma, 6.5);
+        assert_eq!(cfg.pmp.tol, 1e-5);
+        // unspecified keys keep defaults
+        assert_eq!(cfg.pmp.seed, PmpConfig::default().seed);
         // and the section round-trips through to_json
         let back = RunConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(cfg, back);

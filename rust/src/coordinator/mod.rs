@@ -56,6 +56,15 @@ pub struct SliceReport {
     /// optimality gap the certificate guarantees. `None` whenever
     /// `lower_bound` is.
     pub optimality_gap: Option<f64>,
+    /// Live particle count of the slice's final particle tensor
+    /// (`nv * K`); `None` for every engine but pmp.
+    pub pmp_particles: Option<usize>,
+    /// Mean fraction of random-walk proposals that survived
+    /// select-and-prune across the slice's rounds; `None` unless pmp.
+    pub pmp_acceptance: Option<f64>,
+    /// Best decoded continuous (max-marginal) energy the particle
+    /// solver reached on this slice; `None` unless pmp.
+    pub pmp_max_marginal_energy: Option<f64>,
 }
 
 /// Aggregated result of a full run.
@@ -142,6 +151,37 @@ impl RunReport {
         })
     }
 
+    /// Run-level particle count: the sum across slices, present only
+    /// when *every* slice carries one (same contract as
+    /// [`Self::lower_bound`] — a mixed-engine report stays null).
+    pub fn pmp_particles(&self) -> Option<usize> {
+        self.slices
+            .iter()
+            .map(|s| s.pmp_particles)
+            .sum::<Option<usize>>()
+    }
+
+    /// Run-level proposal acceptance: mean of the per-slice means,
+    /// `None` unless every slice reports one.
+    pub fn pmp_acceptance(&self) -> Option<f64> {
+        let sum = self
+            .slices
+            .iter()
+            .map(|s| s.pmp_acceptance)
+            .sum::<Option<f64>>()?;
+        Some(sum / self.slices.len().max(1) as f64)
+    }
+
+    /// Run-level continuous max-marginal energy: per-slice energies
+    /// are additive, so the sum plays the same role `lower_bound`'s
+    /// sum does. `None` unless every slice reports one.
+    pub fn pmp_max_marginal_energy(&self) -> Option<f64> {
+        self.slices
+            .iter()
+            .map(|s| s.pmp_max_marginal_energy)
+            .sum::<Option<f64>>()
+    }
+
     /// JSON rendering for the README's tables / bench reports.
     pub fn to_json(&self) -> crate::json::Value {
         use crate::json::Value;
@@ -179,6 +219,16 @@ impl RunReport {
             ("map_iters", self.total_map_iters().into()),
             ("lower_bound", opt_f64(self.lower_bound())),
             ("optimality_gap", opt_f64(self.optimality_gap())),
+            // Particle max-product deliverables (ISSUE 9): same
+            // present-but-null contract as the certificate fields.
+            ("pmp_particles",
+             match self.pmp_particles() {
+                 Some(p) => p.into(),
+                 None => Value::Null,
+             }),
+            ("pmp_acceptance", opt_f64(self.pmp_acceptance())),
+            ("pmp_max_marginal_energy",
+             opt_f64(self.pmp_max_marginal_energy())),
             // Flight-recorder section (ISSUE 8): null when the
             // recorder was not armed, else counts + <= 256 points with
             // exact endpoints (full fidelity goes to --convergence-out).
@@ -253,6 +303,14 @@ impl RunReport {
                     ("final_energy", s.final_energy.into()),
                     ("lower_bound", opt_f64(s.lower_bound)),
                     ("optimality_gap", opt_f64(s.optimality_gap)),
+                    ("pmp_particles",
+                     match s.pmp_particles {
+                         Some(p) => p.into(),
+                         None => Value::Null,
+                     }),
+                    ("pmp_acceptance", opt_f64(s.pmp_acceptance)),
+                    ("pmp_max_marginal_energy",
+                     opt_f64(s.pmp_max_marginal_energy)),
                 ])
             })
             .collect();
@@ -341,6 +399,7 @@ impl Coordinator {
             runtime: self.runtime.clone(),
             bp: self.cfg.bp,
             dual: self.cfg.dual,
+            pmp: self.cfg.pmp,
         }
     }
 
@@ -476,6 +535,11 @@ impl Coordinator {
                 optimality_gap: res
                     .lower_bound
                     .map(|lb| (res.energy - lb).max(0.0)),
+                pmp_particles: res.pmp.map(|p| p.particles),
+                pmp_acceptance: res.pmp.map(|p| p.acceptance),
+                pmp_max_marginal_energy: res
+                    .pmp
+                    .map(|p| p.max_marginal_energy),
             }],
             confusion,
             porosity,

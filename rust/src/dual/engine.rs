@@ -166,6 +166,7 @@ impl Engine for DualEngine {
             history: em_window.history().to_vec(),
             params: prm,
             lower_bound: Some(lower),
+            pmp: None,
         }
     }
 }

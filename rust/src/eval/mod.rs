@@ -4,8 +4,9 @@
 //! Named `eval` since ISSUE 8 — the old `crate::metrics` path was one
 //! keystroke away from the *performance* metrics in
 //! [`crate::telemetry`] and [`crate::obs`], and kept being confused
-//! with them. A deprecated `crate::metrics` re-export shim covers one
-//! release (see README release notes).
+//! with them. A deprecated `crate::metrics` re-export shim covered
+//! the rename for one release and was removed in ISSUE 9; spell it
+//! `crate::eval` (see README release notes).
 
 use crate::image::Volume;
 

@@ -8,9 +8,12 @@
 //! fine-grained DPP engine, an AOT-compiled XLA/PJRT accelerator
 //! path (JAX + Pallas at build time, rust-only at run time), and a
 //! data-parallel loopy belief propagation engine ([`bp`]) with
-//! residual message scheduling, and a dual-decomposition engine
+//! residual message scheduling, a dual-decomposition engine
 //! ([`dual`]) whose MPLP-style ascent certifies per-run optimality
-//! gaps. Above the engines, a sharded slice
+//! gaps, and a particle max-product engine ([`pmp`]) that carries
+//! the same DPP vocabulary into **continuous** label spaces
+//! (per-vertex particle sets, seeded random-walk proposals,
+//! select-and-prune). Above the engines, a sharded slice
 //! scheduler and batch serving front end ([`sched`]) turn the
 //! per-slice pipeline into a throughput system, observed end to end
 //! by the [`telemetry`] layer (scoped metric recorders, span tracing,
@@ -36,19 +39,12 @@ pub mod mce;
 pub mod mrf;
 pub mod obs;
 pub mod overseg;
+pub mod pmp;
 pub mod pool;
 pub mod runtime;
 pub mod sched;
 pub mod telemetry;
 pub mod util;
-
-/// Deprecated spelling of [`eval`] (verification metrics), kept for
-/// one release so downstream `crate::metrics::Confusion` paths keep
-/// compiling. See the README release notes.
-#[deprecated(note = "renamed to `eval`; use `crate::eval::...`")]
-pub mod metrics {
-    pub use crate::eval::*;
-}
 
 /// Convenient re-exports for examples and benches.
 pub mod prelude {

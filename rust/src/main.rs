@@ -165,6 +165,17 @@ fn cmd_segment(args: &[String]) -> Result<()> {
         .opt("dual-tol",
              "dual engine: relative bound-improvement stop threshold",
              None)
+        .opt("pmp-particles",
+             "pmp engine: particles kept per vertex after pruning",
+             None)
+        .opt("pmp-iters",
+             "pmp engine: max propose/prune rounds per EM iteration",
+             None)
+        .opt("pmp-sweeps",
+             "pmp engine: message-passing sweeps per round", None)
+        .opt("pmp-walk-sigma",
+             "pmp engine: random-walk proposal step (intensity units)",
+             None)
         .flag("profile",
               "record primitive wall time + workspace counters and \
                print the timing table")
@@ -216,10 +227,30 @@ fn cmd_segment(args: &[String]) -> Result<()> {
         cfg.bp.frontier = f;
     }
     if let Some(i) = m.get_parse::<usize>("dual-iters")? {
+        // Hard argument error, not a silent clamp: zero ascent
+        // iterations would leave every EM iteration uncertified.
+        if i == 0 {
+            bail!("--dual-iters 0 is invalid: the dual engine needs \
+                   at least one ascent iteration per EM iteration. \
+                   Pass --dual-iters 1 or higher, or drop the flag \
+                   for the default.");
+        }
         cfg.dual.iters = i;
     }
     if let Some(t) = m.get_parse::<f64>("dual-tol")? {
         cfg.dual.tol = t;
+    }
+    if let Some(p) = m.get_parse::<usize>("pmp-particles")? {
+        cfg.pmp.particles = p;
+    }
+    if let Some(i) = m.get_parse::<usize>("pmp-iters")? {
+        cfg.pmp.iters = i;
+    }
+    if let Some(s) = m.get_parse::<usize>("pmp-sweeps")? {
+        cfg.pmp.sweeps = s;
+    }
+    if let Some(w) = m.get_parse::<f32>("pmp-walk-sigma")? {
+        cfg.pmp.walk_sigma = w;
     }
     if m.flag("profile") {
         cfg.telemetry.profile = true;
@@ -231,6 +262,17 @@ fn cmd_segment(args: &[String]) -> Result<()> {
         cfg.obs.convergence_out = Some(PathBuf::from(p));
     }
     if let Some(c) = m.get_parse::<usize>("convergence-cap")? {
+        // The recorder would clamp this up to its minimum anyway;
+        // reject it here so the user learns the real capacity instead
+        // of silently journaling more samples than they asked for.
+        if c < dpp_pmrf::obs::MIN_CAPACITY {
+            bail!("--convergence-cap {c} is below the flight \
+                   recorder's minimum ring capacity of {}. Pass \
+                   --convergence-cap {} or higher, or drop the flag \
+                   for the default (65536).",
+                  dpp_pmrf::obs::MIN_CAPACITY,
+                  dpp_pmrf::obs::MIN_CAPACITY);
+        }
         cfg.obs.convergence_cap = c;
     }
     if let Some(p) = m.get("metrics-out") {
@@ -376,4 +418,42 @@ fn cmd_engines(args: &[String]) -> Result<()> {
     }
     let _ = Arc::new(());
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    fn args(list: &[&str]) -> Vec<String> {
+        list.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn segment_rejects_convergence_cap_below_minimum() {
+        // Both invalid values error out during argument handling —
+        // before any dataset is generated — with the flag named and
+        // the fix spelled out.
+        for bad in ["0", "1"] {
+            let e = super::cmd_segment(&args(&["--convergence-cap", bad]))
+                .expect_err("sub-minimum cap must be rejected");
+            let msg = e.to_string();
+            assert!(msg.contains("--convergence-cap"), "{msg}");
+            assert!(msg.contains("minimum"), "{msg}");
+        }
+        // The minimum itself is accepted past argument validation
+        // (the run then fails later only if the config is otherwise
+        // unusable — not the case here, so keep it cheap: 8x8x1).
+        super::cmd_segment(&args(&[
+            "--convergence-cap", "2", "--width", "8", "--height", "8",
+            "--slices", "1", "--engine", "serial",
+        ]))
+        .expect("minimum capacity is valid");
+    }
+
+    #[test]
+    fn segment_rejects_zero_dual_iters() {
+        let e = super::cmd_segment(&args(&["--dual-iters", "0"]))
+            .expect_err("zero ascent iterations must be rejected");
+        let msg = e.to_string();
+        assert!(msg.contains("--dual-iters"), "{msg}");
+        assert!(msg.contains("--dual-iters 1"), "{msg}");
+    }
 }

@@ -1,0 +1,219 @@
+//! Continuous-label MRF: Gaussian data term + truncated-quadratic
+//! smoothness (DESIGN.md §14).
+//!
+//! The discrete engines optimize a Potts model over a fixed label set;
+//! the particle max-product engine ([`crate::pmp`]) optimizes over
+//! **continuous** per-vertex labels `x_v ∈ ℝ`:
+//!
+//! ```text
+//! E(x) = Σ_v ((x_v − y_v) / σ)²/2
+//!      + Σ_{(u,v) ∈ E} λ · min(((x_u − x_v)/σ)², τ²)
+//! ```
+//!
+//! The data term pulls each vertex toward its observation; the
+//! truncated quadratic smooths neighbors while letting true
+//! discontinuities pay a bounded penalty (the classic
+//! discontinuity-preserving denoising prior). Both terms are exposed
+//! as `#[inline]` per-item kernels so the serial oracle and the DPP
+//! path of `pmp::solve` evaluate *the same* f32 expressions — the
+//! bitwise-identity discipline every engine family in this repo
+//! follows.
+
+use crate::graph::Csr;
+
+/// A continuous-label MRF instance over an undirected [`Csr`] graph.
+///
+/// Invariants: `y.len() == graph.num_vertices()`; neighbor lists are
+/// symmetric (every directed edge has its reverse), as produced by
+/// [`grid_graph`] or the RAG builders.
+#[derive(Debug, Clone)]
+pub struct ContinuousModel {
+    pub graph: Csr,
+    /// Observation per vertex (the noisy signal).
+    pub y: Vec<f32>,
+    /// Gaussian data/smoothness scale σ (> 0).
+    pub sigma: f32,
+    /// Smoothness weight λ (≥ 0).
+    pub lambda: f32,
+    /// Truncation point τ of the pair term, in units of σ.
+    pub trunc: f32,
+}
+
+impl ContinuousModel {
+    pub fn new(
+        graph: Csr,
+        y: Vec<f32>,
+        sigma: f32,
+        lambda: f32,
+        trunc: f32,
+    ) -> ContinuousModel {
+        assert_eq!(y.len(), graph.num_vertices(), "y per vertex");
+        assert!(sigma > 0.0 && sigma.is_finite(), "sigma {sigma}");
+        assert!(lambda >= 0.0 && lambda.is_finite(), "lambda {lambda}");
+        assert!(trunc >= 0.0 && trunc.is_finite(), "trunc {trunc}");
+        ContinuousModel { graph, y, sigma, lambda, trunc }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.graph.num_vertices()
+    }
+
+    /// Data energy of placing label `x` at vertex `v`:
+    /// `((x − y_v)/σ)² / 2`. Shared per-item kernel.
+    #[inline]
+    pub fn data_energy(&self, v: usize, x: f32) -> f32 {
+        let d = (x - self.y[v]) / self.sigma;
+        0.5 * d * d
+    }
+
+    /// Pair energy of neighboring labels `a`, `b`:
+    /// `λ · min(((a−b)/σ)², τ²)`. Shared per-item kernel.
+    #[inline]
+    pub fn pair_energy(&self, a: f32, b: f32) -> f32 {
+        let d = (a - b) / self.sigma;
+        let q = d * d;
+        let t = self.trunc * self.trunc;
+        self.lambda * if q < t { q } else { t }
+    }
+
+    /// Total energy of a full labeling, in f64, in a fixed serial
+    /// order (vertices ascending; each undirected edge once, from its
+    /// lower endpoint). Both `pmp` paths score candidates through this
+    /// one accumulation, so their energies agree bitwise.
+    pub fn energy(&self, x: &[f32]) -> f64 {
+        assert_eq!(x.len(), self.num_vertices());
+        let mut total = 0.0f64;
+        for v in 0..self.num_vertices() {
+            total += self.data_energy(v, x[v]) as f64;
+        }
+        for v in 0..self.num_vertices() {
+            let (s, e) = (
+                self.graph.offsets[v] as usize,
+                self.graph.offsets[v + 1] as usize,
+            );
+            for &u in &self.graph.neighbors[s..e] {
+                if (u as usize) > v {
+                    total +=
+                        self.pair_energy(x[v], x[u as usize]) as f64;
+                }
+            }
+        }
+        total
+    }
+}
+
+/// 4-connected `w × h` grid as a symmetric CSR — the denoising
+/// example's pixel graph (each pixel is a vertex; no
+/// oversegmentation).
+pub fn grid_graph(w: usize, h: usize) -> Csr {
+    let nv = w * h;
+    let mut offsets = Vec::with_capacity(nv + 1);
+    let mut neighbors = Vec::new();
+    offsets.push(0u32);
+    for r in 0..h {
+        for c in 0..w {
+            // Ascending vertex ids keep rows sorted.
+            if r > 0 {
+                neighbors.push(((r - 1) * w + c) as u32);
+            }
+            if c > 0 {
+                neighbors.push((r * w + c - 1) as u32);
+            }
+            if c + 1 < w {
+                neighbors.push((r * w + c + 1) as u32);
+            }
+            if r + 1 < h {
+                neighbors.push(((r + 1) * w + c) as u32);
+            }
+            offsets.push(neighbors.len() as u32);
+        }
+    }
+    Csr { offsets, neighbors }
+}
+
+/// Synthetic denoising instance: a piecewise-constant step image
+/// (two plateaus at 60 / 180, like the Potts fixtures) plus seeded
+/// Gaussian noise. Returns `(model, clean)` so callers can measure
+/// reconstruction error against ground truth.
+pub fn synthetic_denoise(
+    w: usize,
+    h: usize,
+    noise_sigma: f32,
+    seed: u64,
+) -> (ContinuousModel, Vec<f32>) {
+    let mut rng = crate::util::Pcg32::seeded(seed);
+    let nv = w * h;
+    let mut clean = Vec::with_capacity(nv);
+    for r in 0..h {
+        for c in 0..w {
+            // A step edge down the middle plus a bright block in one
+            // quadrant: plateaus with genuine discontinuities.
+            let base = if c < w / 2 { 60.0f32 } else { 180.0 };
+            let block = r < h / 2 && c >= w / 4 && c < w / 2;
+            clean.push(if block { 180.0 } else { base });
+        }
+    }
+    let y: Vec<f32> = clean
+        .iter()
+        .map(|&v| v + noise_sigma * rng.normal() as f32)
+        .collect();
+    let model = ContinuousModel::new(
+        grid_graph(w, h),
+        y,
+        noise_sigma.max(1.0),
+        0.5,
+        4.0,
+    );
+    (model, clean)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_graph_is_symmetric_and_sorted() {
+        let g = grid_graph(3, 2);
+        assert_eq!(g.num_vertices(), 6);
+        for v in 0..6u32 {
+            let row = g.neighbors_of(v);
+            assert!(row.windows(2).all(|w| w[0] < w[1]), "row sorted");
+            for &u in row {
+                assert!(g.neighbors_of(u).contains(&v), "symmetric");
+            }
+        }
+        // Interior corner checks: vertex 0 has right + down.
+        assert_eq!(g.neighbors_of(0), &[1, 3]);
+        assert_eq!(g.neighbors_of(4), &[1, 3, 5]);
+    }
+
+    #[test]
+    fn pair_term_truncates() {
+        let m = ContinuousModel::new(
+            grid_graph(2, 1),
+            vec![0.0, 0.0],
+            10.0,
+            2.0,
+            3.0,
+        );
+        // Below truncation: quadratic.
+        assert_eq!(m.pair_energy(0.0, 10.0), 2.0);
+        // Far above truncation: capped at λ·τ².
+        assert_eq!(m.pair_energy(0.0, 1000.0), 2.0 * 9.0);
+    }
+
+    #[test]
+    fn energy_counts_each_edge_once() {
+        let m = ContinuousModel::new(
+            grid_graph(2, 1),
+            vec![1.0, 5.0],
+            1.0,
+            1.0,
+            100.0,
+        );
+        let x = [1.0f32, 2.0];
+        // data: 0 + 0.5·9; pair: 1·1² once.
+        let want = 0.5 * 9.0 + 1.0;
+        assert!((m.energy(&x) - want).abs() < 1e-12);
+    }
+}

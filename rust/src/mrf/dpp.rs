@@ -250,6 +250,7 @@ fn drive_em(
         history: em_window.history().to_vec(), // alloc-ok: once per run
         params: prm,
         lower_bound: None,
+        pmp: None,
     }
 }
 

@@ -22,10 +22,13 @@
 //! [`dpp::DppEngine`] (the paper's contribution),
 //! [`xla::XlaEngine`] (AOT accelerator path),
 //! [`crate::bp::BpEngine`] (loopy belief propagation, DESIGN.md §6),
-//! and [`crate::dual::DualEngine`] (dual block-coordinate ascent with
-//! certified lower bounds, DESIGN.md §12).
+//! [`crate::dual::DualEngine`] (dual block-coordinate ascent with
+//! certified lower bounds, DESIGN.md §12), and
+//! [`crate::pmp::PmpEngine`] (particle max-product over the
+//! [`continuous`] label model, DESIGN.md §14).
 //! Construct by kind through [`make_engine`].
 
+pub mod continuous;
 pub mod dpp;
 pub mod energy;
 pub mod hoods;
@@ -107,6 +110,10 @@ pub struct EmResult {
     /// weak duality ([`crate::dual`]); `None` for engines that
     /// cannot certify.
     pub lower_bound: Option<f64>,
+    /// Particle statistics (counts, proposal acceptance, continuous
+    /// max-marginal energy) from the particle max-product engine
+    /// ([`crate::pmp`]); `None` for the discrete engines.
+    pub pmp: Option<crate::pmp::PmpStats>,
 }
 
 /// An EM/MAP optimization engine.
@@ -126,6 +133,7 @@ pub struct EngineResources {
     pub runtime: Option<Arc<EmRuntime>>,
     pub bp: crate::bp::BpConfig,
     pub dual: crate::dual::DualConfig,
+    pub pmp: crate::pmp::PmpConfig,
 }
 
 impl EngineResources {
@@ -140,6 +148,7 @@ impl EngineResources {
             runtime: None,
             bp: crate::bp::BpConfig::default(),
             dual: crate::dual::DualConfig::default(),
+            pmp: crate::pmp::PmpConfig::default(),
         }
     }
 }
@@ -171,6 +180,10 @@ pub fn make_engine(kind: EngineKind, res: &EngineResources)
         EngineKind::Dual => Box::new(crate::dual::DualEngine::new(
             Arc::clone(&res.device),
             res.dual,
+        )),
+        EngineKind::Pmp => Box::new(crate::pmp::PmpEngine::new(
+            Arc::clone(&res.device),
+            res.pmp,
         )),
     })
 }
@@ -393,6 +406,7 @@ mod tests {
             (EngineKind::Dpp, "dpp"),
             (EngineKind::Bp, "bp"),
             (EngineKind::Dual, "dual"),
+            (EngineKind::Pmp, "pmp"),
         ] {
             let e = make_engine(kind, &res).unwrap();
             assert_eq!(e.name(), name);

@@ -187,6 +187,7 @@ impl Engine for ReferenceEngine {
             history: em_window.history().to_vec(),
             params: prm,
             lower_bound: None,
+            pmp: None,
         }
     }
 }

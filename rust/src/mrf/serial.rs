@@ -97,6 +97,7 @@ impl Engine for SerialEngine {
             history: em_window.history().to_vec(),
             params: prm,
             lower_bound: None,
+            pmp: None,
         }
     }
 }

@@ -121,6 +121,7 @@ impl Engine for XlaEngine {
             history: em_window.history().to_vec(),
             params: prm,
             lower_bound: None,
+            pmp: None,
         }
     }
 }
@@ -187,6 +188,7 @@ impl XlaEngine {
             history: em_window.history().to_vec(),
             params: prm,
             lower_bound: None,
+            pmp: None,
         }
     }
 }

@@ -5,7 +5,8 @@
 //! - **[`recorder`]** — the convergence flight recorder: a
 //!   fixed-capacity ring journal every engine feeds per iteration
 //!   (MAP: energy + labels changed; BP: max residual + damping; dual:
-//!   bound/primal/gap per ascent iteration). Armed explicitly with
+//!   bound/primal/gap per ascent iteration; PMP: continuous energy +
+//!   particle/acceptance counts per round). Armed explicitly with
 //!   [`arm`]; drained into [`ConvergenceLog`] by the scheduler and
 //!   surfaced as the `convergence` section of
 //!   [`crate::coordinator::RunReport::to_json`] (downsampled to ≤256
@@ -37,7 +38,7 @@ pub use health::{
 };
 pub use recorder::{
     arm, armed, disarm, drain, ConvPoint, ConvSample, ConvergenceLog,
-    LabelDelta, DEFAULT_CAPACITY,
+    LabelDelta, DEFAULT_CAPACITY, MIN_CAPACITY,
 };
 
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -129,6 +130,27 @@ pub fn dual_sample(
     );
 }
 
+/// Record one particle max-product round: the decoded labeling's
+/// continuous energy, the live particle count, and how many fresh
+/// proposals survived the round's select-and-prune.
+pub fn pmp_sample(
+    em: usize,
+    round: usize,
+    energy: f64,
+    particles: u64,
+    accepted: u64,
+) {
+    if !live() {
+        return;
+    }
+    health::beat();
+    recorder::push(
+        em,
+        round,
+        ConvPoint::Pmp { energy, particles, accepted },
+    );
+}
+
 /// Serializes tests that arm the process-global recorder (same
 /// convention as [`crate::telemetry::trace_test_lock`] /
 /// `timing::test_lock`). Not part of the public API.
@@ -151,19 +173,21 @@ mod tests {
         map_sample(0, 0, 1.0, 2);
         bp_sample(0, 1, 0.5, 0.5, 3);
         dual_sample(0, 2, 1.0, 2.0, 1.0);
+        pmp_sample(0, 3, 1.0, 12, 4);
         assert!(drain().is_none());
     }
 
     #[test]
-    fn armed_recorder_collects_all_three_kinds() {
+    fn armed_recorder_collects_all_four_kinds() {
         let _g = obs_test_lock();
         arm(16);
         assert!(armed() && live());
         map_sample(0, 0, -10.0, 7);
         bp_sample(1, 3, 0.25, 0.5, 11);
         dual_sample(2, 5, -20.0, -18.5, 1.5);
+        pmp_sample(3, 7, -31.5, 24, 9);
         let log = drain().expect("armed recorder drains Some");
-        assert_eq!(log.samples.len(), 3);
+        assert_eq!(log.samples.len(), 4);
         assert_eq!(log.dropped, 0);
         match log.samples[0].point {
             ConvPoint::Map { energy, labels_changed } => {
@@ -181,6 +205,23 @@ mod tests {
             }
             ref p => panic!("expected Dual point, got {p:?}"),
         }
+        match log.samples[3].point {
+            ConvPoint::Pmp { energy, particles, accepted } => {
+                assert_eq!(energy, -31.5);
+                assert_eq!(particles, 24);
+                assert_eq!(accepted, 9);
+            }
+            ref p => panic!("expected Pmp point, got {p:?}"),
+        }
+        let j = log.samples[3].to_json();
+        assert_eq!(
+            j.get("kind").and_then(crate::json::Value::as_str),
+            Some("pmp")
+        );
+        assert_eq!(
+            j.get("accepted").and_then(crate::json::Value::as_usize),
+            Some(9)
+        );
         disarm();
         assert!(!armed());
     }

@@ -26,6 +26,12 @@ use crate::json::Value;
 /// iteration of a multi-slice run at the default iteration caps.
 pub const DEFAULT_CAPACITY: usize = 65_536;
 
+/// Smallest ring the recorder will arm. A 1-slot ring cannot retain
+/// both endpoints of a run, which the report downsampler relies on,
+/// so [`arm`] clamps to this and the CLI rejects `--convergence-cap`
+/// values below it outright.
+pub const MIN_CAPACITY: usize = 2;
+
 /// Per-kind payload of one journal sample.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ConvPoint {
@@ -35,6 +41,9 @@ pub enum ConvPoint {
     Bp { max_residual: f64, damping: f64, updated: u64 },
     /// One dual block-coordinate ascent iteration.
     Dual { lower_bound: f64, primal: f64, gap: f64 },
+    /// One particle max-product round: decoded continuous energy,
+    /// the live particle count, and proposals that survived pruning.
+    Pmp { energy: f64, particles: u64, accepted: u64 },
 }
 
 impl ConvPoint {
@@ -44,6 +53,7 @@ impl ConvPoint {
             ConvPoint::Map { .. } => "map",
             ConvPoint::Bp { .. } => "bp",
             ConvPoint::Dual { .. } => "dual",
+            ConvPoint::Pmp { .. } => "pmp",
         }
     }
 }
@@ -83,6 +93,11 @@ impl ConvSample {
                 fields.push(("lower_bound", lower_bound.into()));
                 fields.push(("primal", primal.into()));
                 fields.push(("gap", gap.into()));
+            }
+            ConvPoint::Pmp { energy, particles, accepted } => {
+                fields.push(("energy", energy.into()));
+                fields.push(("particles", (particles as usize).into()));
+                fields.push(("accepted", (accepted as usize).into()));
             }
         }
         Value::object(fields)
@@ -156,7 +171,7 @@ struct Ring {
 
 impl Ring {
     fn new(capacity: usize) -> Ring {
-        let cap = capacity.max(2);
+        let cap = capacity.max(MIN_CAPACITY);
         Ring {
             t0: Instant::now(),
             buf: Vec::with_capacity(cap),
@@ -318,6 +333,70 @@ mod tests {
         let log2 = r.drain();
         assert!(log2.samples.is_empty());
         assert_eq!(log2.dropped, 0);
+    }
+
+    fn map_sample_at(iter: u32) -> ConvSample {
+        ConvSample {
+            t_nanos: 0,
+            em: 0,
+            iter,
+            point: ConvPoint::Map { energy: iter as f64,
+                                    labels_changed: 0 },
+        }
+    }
+
+    #[test]
+    fn capacity_two_ring_keeps_newest_two_in_order() {
+        let mut r = Ring::new(2);
+        for i in 0..5 {
+            r.push(map_sample_at(i));
+        }
+        let log = r.drain();
+        assert_eq!(log.dropped, 3, "5 pushes into 2 slots drop 3");
+        assert_eq!(log.total(), 5);
+        let iters: Vec<u32> =
+            log.samples.iter().map(|s| s.iter).collect();
+        assert_eq!(iters, [3, 4], "oldest retained first");
+    }
+
+    #[test]
+    fn exactly_full_ring_drops_nothing() {
+        let mut r = Ring::new(2);
+        r.push(map_sample_at(0));
+        r.push(map_sample_at(1));
+        let log = r.drain();
+        assert_eq!(log.dropped, 0, "fill-to-capacity is lossless");
+        let iters: Vec<u32> =
+            log.samples.iter().map(|s| s.iter).collect();
+        assert_eq!(iters, [0, 1]);
+    }
+
+    #[test]
+    fn zero_capacity_arms_as_min_capacity() {
+        let mut r = Ring::new(0);
+        assert_eq!(r.cap, MIN_CAPACITY);
+        r.push(map_sample_at(0));
+        r.push(map_sample_at(1));
+        assert_eq!(r.drain().dropped, 0);
+    }
+
+    #[test]
+    fn drain_leaves_the_ring_armed_and_recording() {
+        let _g = crate::obs::obs_test_lock();
+        arm(4);
+        push(0, 0, ConvPoint::Map { energy: 1.0, labels_changed: 0 });
+        let first = drain().expect("armed recorder drains Some");
+        assert_eq!(first.samples.len(), 1);
+        // Still armed: the next push lands in the same ring and a
+        // second drain sees it with counters reset.
+        assert!(armed());
+        push(0, 1, ConvPoint::Pmp { energy: -2.0, particles: 8,
+                                    accepted: 3 });
+        let second = drain().expect("ring survives drain");
+        assert_eq!(second.samples.len(), 1);
+        assert_eq!(second.dropped, 0);
+        assert_eq!(second.samples[0].iter, 1);
+        disarm();
     }
 
     #[test]

@@ -1,0 +1,259 @@
+//! [`PmpEngine`] — particle max-product as a drop-in
+//! [`Engine`](crate::mrf::Engine) in the shared EM outer loop.
+//!
+//! The solver optimizes the continuous objective; the EM loop needs
+//! discrete Potts labels and hood energies. The bridge, per EM
+//! iteration:
+//!
+//! 1. Refresh the [`ContinuousModel`]'s scales from the current
+//!    (mu, sigma): `σ` = the class-sigma mean (floored like
+//!    [`params::SIGMA_FLOOR`]), truncation = the class separation in
+//!    σ units — so the continuous prior adapts as EM sharpens the
+//!    classes.
+//! 2. Run [`super::solve`], warm-starting the particle tensor from
+//!    the previous EM iteration (proposal streams are re-seeded per
+//!    EM iteration, so fresh candidates keep arriving).
+//! 3. Threshold the decoded continuous labels into classes by
+//!    per-class Gaussian energy (ties → class 0, like every engine),
+//!    score with the shared hood energy
+//!    ([`crate::mrf::config_energy`]) so histories are directly
+//!    comparable, and re-estimate (mu, sigma) from the hood-member
+//!    instances exactly as the discrete engines do.
+//!
+//! The extra deliverables over the discrete engines ride in
+//! [`EmResult::pmp`](crate::mrf::EmResult::pmp): total particle
+//! count, mean proposal acceptance, and the final continuous
+//! max-marginal energy.
+
+use std::sync::Arc;
+
+use crate::config::MrfConfig;
+use crate::dpp::{Device, IntoDevice, Workspace, WorkspaceStats};
+use crate::mrf::continuous::ContinuousModel;
+use crate::mrf::{self, params, ConvergenceWindow, Engine, EmResult,
+                 MrfModel};
+use crate::util::splitmix64;
+
+use super::{solve, PmpConfig, PmpStats};
+
+pub struct PmpEngine {
+    device: Arc<dyn Device>,
+    pub pmp: PmpConfig,
+    /// Scratch pool for the per-round particle tensors; one per
+    /// engine, so each scheduler lane amortizes the grown/pruned
+    /// buffers across its slices (DESIGN.md §10).
+    ws: Workspace,
+}
+
+impl PmpEngine {
+    /// Engine on any device — accepts a concrete device, an
+    /// `Arc<dyn Device>`, or the deprecated `Backend` spelling.
+    pub fn new(device: impl IntoDevice, pmp: PmpConfig) -> Self {
+        PmpEngine { device: device.into_device(), pmp,
+                    ws: Workspace::new() }
+    }
+
+    /// The device every solver round of this engine executes on.
+    pub fn device(&self) -> &Arc<dyn Device> {
+        &self.device
+    }
+
+    /// Counters of the engine-held scratch pool (see
+    /// [`crate::dpp::Workspace::stats`]).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dpp_pmrf::pmp::{PmpConfig, PmpEngine};
+    /// use dpp_pmrf::dpp::SerialDevice;
+    /// let engine = PmpEngine::new(SerialDevice, PmpConfig::default());
+    /// assert_eq!(engine.workspace_stats().misses, 0);
+    /// ```
+    pub fn workspace_stats(&self) -> WorkspaceStats {
+        self.ws.stats()
+    }
+}
+
+/// Class of a continuous label under (mu, sigma): per-class Gaussian
+/// energy `((x−μ_l)/σ_l)²/2 + ln σ_l`, ties → class 0 — the same
+/// deterministic tie rule every discrete engine uses.
+#[inline]
+pub(crate) fn classify(x: f32, prm: &crate::mrf::Params) -> u8 {
+    let e = |l: usize| {
+        let s = prm.sigma[l].max(params::SIGMA_FLOOR);
+        let d = (x - prm.mu[l]) / s;
+        0.5 * d * d + s.ln()
+    };
+    u8::from(e(1) < e(0))
+}
+
+impl Engine for PmpEngine {
+    fn name(&self) -> &'static str {
+        "pmp"
+    }
+
+    fn run(&self, model: &MrfModel, cfg: &MrfConfig) -> EmResult {
+        let bk: &dyn Device = &*self.device;
+        let nv = model.num_vertices();
+        let y_elem = model.y_elems();
+
+        // Same seeded init as every other engine, so class polarity
+        // and first-iteration parameters match across families.
+        let (mut prm, mut labels) =
+            params::init_random(nv, cfg.beta as f32, cfg.seed);
+
+        // One continuous model per run; only its scalar scales are
+        // refreshed per EM iteration (the graph clone happens once).
+        let mut cm = ContinuousModel::new(
+            model.graph.clone(),
+            model.y.clone(),
+            25.0,
+            (cfg.beta.max(0.0) as f32).max(1e-3),
+            4.0,
+        );
+
+        let mut em_window =
+            ConvergenceWindow::new(cfg.window, cfg.threshold);
+        let mut em_iters = 0usize;
+        let mut total_rounds = 0usize;
+        let k = self.pmp.particles.max(1);
+        let mut stats = PmpStats {
+            particles: nv * k,
+            acceptance: 0.0,
+            max_marginal_energy: f64::INFINITY,
+        };
+        let mut warm: Option<Vec<f32>> = None;
+
+        for em in 0..cfg.em_iters {
+            // Inert unless a tracer is armed (telemetry::span).
+            let _em_span = crate::telemetry::span_arg(
+                "em", "em_iter", "iter", em_iters as u64,
+            );
+            em_iters += 1;
+
+            cm.sigma = (0.5 * (prm.sigma[0] + prm.sigma[1]))
+                .max(params::SIGMA_FLOOR);
+            cm.trunc =
+                ((prm.mu[1] - prm.mu[0]).abs() / cm.sigma).max(1.0);
+            let mut pcfg = self.pmp;
+            // Fresh proposal streams each EM iteration; the tensor
+            // itself warm-starts from the previous survivors.
+            pcfg.seed =
+                splitmix64(self.pmp.seed ^ cfg.seed ^ em as u64);
+
+            let run = solve(
+                bk, &self.ws, &cm, &pcfg, warm.as_deref(),
+                cfg.fixed_iters,
+            );
+            total_rounds += run.iters;
+            for (v, l) in labels.iter_mut().enumerate() {
+                *l = classify(run.x_map[v], &prm);
+            }
+            let (_, total) =
+                mrf::config_energy(model, &labels, &prm);
+
+            // Flight-recorder hook (DESIGN.md §13): replay this EM
+            // iteration's rounds — decoded continuous energy plus
+            // the proposal-acceptance count per round.
+            if crate::obs::live() {
+                if crate::obs::armed() {
+                    for (r, &e) in run.history.iter().enumerate() {
+                        crate::obs::pmp_sample(
+                            em_iters - 1,
+                            r,
+                            e,
+                            (nv * k) as u64,
+                            run.accepted[r],
+                        );
+                    }
+                } else {
+                    crate::obs::tick();
+                }
+            }
+
+            let denom = (run.iters * nv * k) as f64;
+            stats.acceptance = if denom > 0.0 {
+                run.accepted.iter().sum::<u64>() as f64 / denom
+            } else {
+                0.0
+            };
+            stats.max_marginal_energy = run.energy;
+            warm = Some(run.particles);
+
+            let mut pstats = params::Stats::default();
+            for (e, &v) in model.hoods.members.iter().enumerate() {
+                pstats.add(labels[v as usize], y_elem[e]);
+            }
+            prm = params::update(&pstats, cfg.beta as f32);
+
+            em_window.push(total);
+            if em_window.converged() && !cfg.fixed_iters {
+                break;
+            }
+        }
+        self.ws.publish_timing();
+
+        EmResult {
+            labels,
+            em_iters,
+            map_iters: total_rounds,
+            energy: *em_window.history().last().unwrap_or(&0.0),
+            history: em_window.history().to_vec(),
+            params: prm,
+            lower_bound: None,
+            pmp: Some(stats),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpp::Backend;
+    use crate::pool::Pool;
+
+    #[test]
+    fn pmp_engine_deterministic_across_backends_and_runs() {
+        let model = crate::bp::test_model(91);
+        let cfg = MrfConfig { em_iters: 3, ..Default::default() };
+        let pmp = PmpConfig { iters: 4, ..Default::default() };
+        let a = PmpEngine::new(Backend::Serial, pmp).run(&model, &cfg);
+        let b = PmpEngine::new(Backend::Serial, pmp).run(&model, &cfg);
+        assert_eq!(a, b, "rerun identical");
+        let c = PmpEngine::new(
+            Backend::threaded_with_grain(Pool::new(4), 64),
+            pmp,
+        )
+        .run(&model, &cfg);
+        assert_eq!(a, c, "backend independent");
+    }
+
+    #[test]
+    fn reports_particle_stats_and_no_certificate() {
+        let model = crate::bp::test_model(92);
+        let cfg = MrfConfig { em_iters: 2, ..Default::default() };
+        let pmp = PmpConfig { iters: 3, ..Default::default() };
+        let res = PmpEngine::new(Backend::Serial, pmp).run(&model, &cfg);
+        assert_eq!(res.lower_bound, None, "pmp does not certify");
+        let s = res.pmp.expect("pmp engine reports particle stats");
+        assert_eq!(s.particles, model.num_vertices() * pmp.particles);
+        assert!((0.0..=1.0).contains(&s.acceptance), "{}", s.acceptance);
+        assert!(s.max_marginal_energy.is_finite());
+        assert!(res.labels.iter().all(|&l| l <= 1));
+        assert!(res.energy.is_finite());
+    }
+
+    #[test]
+    fn fixed_iters_runs_exact_round_count() {
+        let model = crate::bp::test_model(93);
+        let cfg = MrfConfig {
+            em_iters: 3,
+            fixed_iters: true,
+            ..Default::default()
+        };
+        let pmp = PmpConfig { iters: 5, ..Default::default() };
+        let res = PmpEngine::new(Backend::Serial, pmp).run(&model, &cfg);
+        assert_eq!(res.em_iters, 3);
+        assert_eq!(res.map_iters, 15, "3 EM x 5 pmp rounds");
+    }
+}

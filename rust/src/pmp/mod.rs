@@ -1,0 +1,526 @@
+//! Particle max-product (D-PMP) over continuous label spaces — the
+//! fourth optimizer family (DESIGN.md §14).
+//!
+//! The discrete engines (MAP / BP / dual) optimize Potts labels; this
+//! subsystem optimizes a [`ContinuousModel`]
+//! (`crate::mrf::continuous`) whose labels are real numbers, by
+//! maintaining a small **particle set** per vertex and running
+//! max-product (min-sum in energy form) message passing over the
+//! particle-indexed discretization, following the D-PMP loop
+//! (Pacheco et al.; pyDPMP):
+//!
+//! 1. **Propose/augment** — each of the `K` survivors spawns one
+//!    random-walk proposal, growing every vertex's set to `A = 2K`.
+//!    Proposals are seeded per `(round, vertex, slot)` through
+//!    dedicated [`Pcg32`] streams, so they are identical regardless
+//!    of execution order — the device and lane count can never change
+//!    the candidate sets.
+//! 2. **Message passing** — `sweeps` synchronous min-sum sweeps over
+//!    the augmented sets: belief accumulation is a segmented reduce
+//!    over the **cached CSR plan** (one fold per particle column),
+//!    message minimization is a DPP map over particle pairs.
+//! 3. **Decode** — per-vertex argmin of the beliefs via a segmented
+//!    min over the particle plan (keys pack the belief's
+//!    total-order bits with the slot index, so ties break to the
+//!    lowest slot on every device), scored in f64 by
+//!    [`ContinuousModel::energy`]; the best decoding over all rounds
+//!    is the answer.
+//! 4. **Select-and-prune** — keep each vertex's `K` best-belief
+//!    particles via [`select_indices`](crate::dpp::select_indices) +
+//!    `gather`, shrinking `A → K` for the next round.
+//!
+//! Per-round tensors repeatedly grow (`nv·A`) and shrink (`nv·K`), so
+//! every buffer is drawn from the engine's [`Workspace`] — after the
+//! first round the loop allocates nothing.
+//!
+//! [`serial`] holds the plain-loop oracle; [`solve`] is the DPP path.
+//! Both call the same `#[inline]` per-item kernels and fold in the
+//! same order from the same identities, so their outputs are
+//! **bitwise identical** on every registered device
+//! (`rust/tests/pmp_conformance.rs`). [`engine::PmpEngine`] adapts
+//! the solver to the discrete [`Engine`](crate::mrf::Engine) EM loop.
+
+pub mod engine;
+pub mod serial;
+
+pub use engine::PmpEngine;
+
+use crate::dpp::{self, Device, SegmentPlan, Workspace};
+use crate::graph::Csr;
+use crate::mrf::continuous::ContinuousModel;
+use crate::util::{splitmix64, Pcg32};
+
+/// Knobs of the particle max-product solver.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PmpConfig {
+    /// Particles kept per vertex after pruning (`K`); the augmented
+    /// sets hold `2K`.
+    pub particles: usize,
+    /// Maximum propose→pass→prune rounds per solve.
+    pub iters: usize,
+    /// Synchronous min-sum sweeps per round.
+    pub sweeps: usize,
+    /// Random-walk proposal step, in label units.
+    pub walk_sigma: f32,
+    /// Relative decoded-energy stall that ends the round loop.
+    pub tol: f64,
+    /// Proposal-stream seed.
+    pub seed: u64,
+}
+
+impl Default for PmpConfig {
+    fn default() -> PmpConfig {
+        PmpConfig {
+            particles: 6,
+            iters: 10,
+            sweeps: 3,
+            walk_sigma: 12.0,
+            tol: 1e-4,
+            seed: 0xD1F0_5EED,
+        }
+    }
+}
+
+/// Per-run statistics the PMP engine surfaces through
+/// [`EmResult`](crate::mrf::EmResult) and `RunReport`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PmpStats {
+    /// Total particles maintained after pruning (`nv · K`).
+    pub particles: usize,
+    /// Mean fraction of pruned slots won by fresh proposals.
+    pub acceptance: f64,
+    /// Final decoded max-marginal energy (continuous objective).
+    pub max_marginal_energy: f64,
+}
+
+/// Output of one [`solve`] / [`serial::solve`] call.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PmpRun {
+    /// Best decoded labeling over all rounds.
+    pub x_map: Vec<f32>,
+    /// Its continuous energy (min over `history`).
+    pub energy: f64,
+    /// Decoded energy per round.
+    pub history: Vec<f64>,
+    /// Per round: pruned slots won by fresh proposals (of `nv · K`).
+    pub accepted: Vec<u64>,
+    /// Final pruned particle tensor (`nv · K`), for warm starts.
+    pub particles: Vec<f32>,
+    /// Rounds executed.
+    pub iters: usize,
+}
+
+// ---------------------------------------------------------------
+// Shared per-item kernels. Every arithmetic expression both solver
+// paths evaluate lives here, `#[inline]`, parameterized only by
+// plain indices — the foundation of the bitwise-identity contract.
+// ---------------------------------------------------------------
+
+/// Random-walk proposal for `(round, vertex, slot)`. Stream-seeded:
+/// the draw depends only on the coordinates, never on execution
+/// order. `round` 0 is the cold-start init (slot 0 = the observation
+/// itself); proposals in round `t` use `round = t + 1`.
+#[inline]
+pub(crate) fn propose(
+    seed: u64,
+    round: usize,
+    v: usize,
+    slot: usize,
+    k: usize,
+    base: f32,
+    walk: f32,
+) -> f32 {
+    let mut rng = Pcg32::new(
+        splitmix64(seed ^ (round as u64).wrapping_mul(0x9E37_79B9)),
+        (v * k + slot) as u64,
+    );
+    base + walk * rng.normal() as f32
+}
+
+/// Min-sum message for directed edge `p` (from `src[p]` to
+/// `nbrs[p]`) at receiver slot `j`: minimize over the sender's `a`
+/// slots, subtracting the reverse message so the sender's belief
+/// becomes its "all-but-receiver" max-marginal. Strict `<` keeps the
+/// first minimum — deterministic on every device.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn message_kernel(
+    model: &ContinuousModel,
+    x_aug: &[f32],
+    msum: &[f32],
+    msg: &[f32],
+    src: &[u32],
+    nbrs: &[u32],
+    rev: &[u32],
+    a: usize,
+    t: usize,
+) -> f32 {
+    let (p, j) = (t / a, t % a);
+    let u = src[p] as usize;
+    let v = nbrs[p] as usize;
+    let xj = x_aug[v * a + j];
+    let rp = rev[p] as usize;
+    let mut best = f32::INFINITY;
+    for i in 0..a {
+        let c = model.pair_energy(x_aug[u * a + i], xj)
+            + (msum[u * a + i] - msg[rp * a + i]);
+        if c < best {
+            best = c;
+        }
+    }
+    best
+}
+
+/// Map a belief onto `u64` so integer `min` is an exact,
+/// tie-deterministic argmin: high 32 bits are the f32's total-order
+/// bits, low 32 bits the slot index (ties → lowest slot).
+#[inline]
+pub(crate) fn belief_key(val: f32, slot: usize) -> u64 {
+    let b = val.to_bits();
+    let ord = if b & 0x8000_0000 != 0 { !b } else { b ^ 0x8000_0000 };
+    ((ord as u64) << 32) | slot as u64
+}
+
+/// Rank of slot `slot` within vertex `v`'s `a` beliefs (0 = best);
+/// counted over the packed keys, so the ordering is total and
+/// device-independent.
+#[inline]
+pub(crate) fn rank_of(bel: &[f32], v: usize, a: usize, slot: usize)
+    -> usize {
+    let me = belief_key(bel[v * a + slot], slot);
+    let mut r = 0usize;
+    for b in 0..a {
+        if belief_key(bel[v * a + b], b) < me {
+            r += 1;
+        }
+    }
+    r
+}
+
+// ---------------------------------------------------------------
+// Graph preparation, shared by both paths.
+// ---------------------------------------------------------------
+
+/// Directed-edge index over a symmetric CSR: `src[p]` = owning
+/// vertex of slot `p`, `rev[p]` = slot of the reverse edge.
+#[derive(Debug, Clone)]
+pub(crate) struct EdgeIndex {
+    pub src: Vec<u32>,
+    pub rev: Vec<u32>,
+}
+
+pub(crate) fn build_edge_index(g: &Csr) -> EdgeIndex {
+    let nde = g.neighbors.len();
+    let mut src = vec![0u32; nde];
+    for v in 0..g.num_vertices() {
+        let (s, e) =
+            (g.offsets[v] as usize, g.offsets[v + 1] as usize);
+        for sp in &mut src[s..e] {
+            *sp = v as u32;
+        }
+    }
+    let mut rev = vec![0u32; nde];
+    for (p, rp) in rev.iter_mut().enumerate() {
+        let u = src[p];
+        let v = g.neighbors[p] as usize;
+        let (s, e) =
+            (g.offsets[v] as usize, g.offsets[v + 1] as usize);
+        *rp = (s..e)
+            .find(|&q| g.neighbors[q] == u)
+            .expect("pmp needs a symmetric CSR") as u32;
+    }
+    EdgeIndex { src, rev }
+}
+
+/// Uniform particle segments (one length-`a` segment per vertex) as
+/// CSR offsets — feeds the decode plan.
+pub(crate) fn particle_offsets(nv: usize, a: usize) -> Vec<u32> {
+    (0..=nv).map(|v| (v * a) as u32).collect()
+}
+
+// ---------------------------------------------------------------
+// The DPP path.
+// ---------------------------------------------------------------
+
+/// Run particle max-product on `model` with the DPP primitives on
+/// device `bk`, drawing every per-round tensor from `ws`.
+///
+/// `init` (length `nv · particles`) warm-starts the particle tensor;
+/// `None` seeds from the observations. With `fixed_iters` the round
+/// loop always runs `cfg.iters` rounds (tests compare paths exactly).
+///
+/// Bitwise identical to [`serial::solve`] on every registered device
+/// — see the module docs for why.
+pub fn solve(
+    bk: &dyn Device,
+    ws: &Workspace,
+    model: &ContinuousModel,
+    cfg: &PmpConfig,
+    init: Option<&[f32]>,
+    fixed_iters: bool,
+) -> PmpRun {
+    let nv = model.num_vertices();
+    let k = cfg.particles.max(1);
+    let a = 2 * k;
+    let nde = model.graph.neighbors.len();
+    assert!(
+        nv.checked_mul(a).is_some_and(|n| n < u32::MAX as usize),
+        "particle tensor must index in u32"
+    );
+    let edges = build_edge_index(&model.graph);
+    // The cached plans: CSR rows for belief accumulation, uniform
+    // particle segments for the decode argmin. Built once per solve,
+    // reused every sweep of every round.
+    let vertex_plan = SegmentPlan::from_csr_offsets(&model.graph.offsets);
+    let poffsets = particle_offsets(nv, a);
+    let particle_plan = SegmentPlan::from_csr_offsets(&poffsets);
+
+    let mut x = ws.take_spare::<f32>(nv * k);
+    match init {
+        Some(warm) => {
+            assert_eq!(warm.len(), nv * k, "init is nv x K");
+            x.extend_from_slice(warm);
+        }
+        None => {
+            for v in 0..nv {
+                for s in 0..k {
+                    x.push(if s == 0 {
+                        model.y[v]
+                    } else {
+                        propose(
+                            cfg.seed, 0, v, s, k, model.y[v],
+                            cfg.walk_sigma,
+                        )
+                    });
+                }
+            }
+        }
+    }
+
+    let mut x_best = vec![0.0f32; nv];
+    let mut e_best = f64::INFINITY;
+    let mut history = Vec::new();
+    let mut accepted = Vec::new();
+    let mut rounds = 0usize;
+
+    for round in 0..cfg.iters.max(1) {
+        rounds += 1;
+        let _span = crate::telemetry::span_arg(
+            "map", "pmp_round", "round", round as u64,
+        );
+        // Per-round scratch: augmented tensors (nv·A / nde·A) are
+        // taken here and returned at the end of the round, so the
+        // pool alternately serves the grown and pruned shapes.
+        let mut x_aug = ws.take_spare::<f32>(nv * a);
+        let mut d_aug = ws.take_spare::<f32>(nv * a);
+        let mut msum = ws.take_spare::<f32>(nv * a);
+        let mut inc = ws.take_filled::<f32>(nv * a, 0.0);
+        let mut msg = ws.take_filled::<f32>(nde * a, 0.0);
+        let mut msg_next = ws.take_spare::<f32>(nde * a);
+        let mut keys = ws.take_filled::<u64>(nv, 0);
+        let mut x_dec = ws.take_spare::<f32>(nv);
+        let mut kept = ws.take_spare::<u32>(nv * k);
+        let mut x_new = ws.take_spare::<f32>(nv * k);
+
+        // 1. Propose/augment: slots 0..K carry the survivors, slots
+        //    K..A one walk proposal each.
+        {
+            let xr: &[f32] = &x;
+            dpp::map_indexed_into(
+                bk,
+                nv * a,
+                |t| {
+                    let (v, s) = (t / a, t % a);
+                    if s < k {
+                        xr[v * k + s]
+                    } else {
+                        propose(
+                            cfg.seed,
+                            round + 1,
+                            v,
+                            s - k,
+                            k,
+                            xr[v * k + (s - k)],
+                            cfg.walk_sigma,
+                        )
+                    }
+                },
+                &mut x_aug,
+            );
+        }
+        dpp::map_indexed_into(
+            bk,
+            nv * a,
+            |t| model.data_energy(t / a, x_aug[t]),
+            &mut d_aug,
+        );
+
+        // 2. Min-sum sweeps. Beliefs: one segmented reduce over the
+        //    CSR plan per particle column (fold from 0.0 in slot
+        //    order); messages: a map over nde·A receiver slots, each
+        //    minimizing over the sender's A particles.
+        let beliefs = |msg: &[f32], inc: &mut [f32], msum: &mut Vec<f32>| {
+            for j in 0..a {
+                vertex_plan.reduce_segments_map_into(
+                    bk,
+                    |p| msg[edges.rev[p] as usize * a + j],
+                    0.0f32,
+                    |s, m| s + m,
+                    &mut inc[j * nv..(j + 1) * nv],
+                );
+            }
+            dpp::map_indexed_into(
+                bk,
+                nv * a,
+                |t| d_aug[t] + inc[(t % a) * nv + t / a],
+                msum,
+            );
+        };
+        for _ in 0..cfg.sweeps.max(1) {
+            beliefs(&msg, &mut inc, &mut msum);
+            dpp::map_indexed_into(
+                bk,
+                nde * a,
+                |t| {
+                    message_kernel(
+                        model, &x_aug, &msum, &msg, &edges.src,
+                        &model.graph.neighbors, &edges.rev, a, t,
+                    )
+                },
+                &mut msg_next,
+            );
+            std::mem::swap(&mut *msg, &mut *msg_next);
+        }
+        beliefs(&msg, &mut inc, &mut msum);
+
+        // 3. Decode: segmented argmin over the particle plan.
+        particle_plan.reduce_segments_map_into(
+            bk,
+            |t| belief_key(msum[t], t % a),
+            u64::MAX,
+            u64::min,
+            &mut keys,
+        );
+        dpp::map_indexed_into(
+            bk,
+            nv,
+            |v| x_aug[v * a + (keys[v] & 0xFFFF_FFFF) as usize],
+            &mut x_dec,
+        );
+        let e = model.energy(&x_dec);
+        history.push(e);
+        if e < e_best {
+            e_best = e;
+            x_best.copy_from_slice(&x_dec);
+        }
+
+        // 4. Select-and-prune: each vertex keeps its K best-ranked
+        //    slots (ranks are distinct, so exactly nv·K survive).
+        dpp::select_indices_into(
+            bk,
+            ws,
+            nv * a,
+            |t| rank_of(&msum, t / a, a, t % a) < k,
+            &mut kept,
+        );
+        debug_assert_eq!(kept.len(), nv * k);
+        dpp::gather_into(bk, &x_aug, &kept, &mut x_new);
+        std::mem::swap(&mut *x, &mut *x_new);
+        accepted.push(
+            kept.iter().filter(|&&g| (g as usize % a) >= k).count()
+                as u64,
+        );
+
+        if !fixed_iters && history.len() >= 2 {
+            let prev = history[history.len() - 2];
+            if (prev - e).abs() <= cfg.tol * e.abs().max(1.0) {
+                break;
+            }
+        }
+    }
+
+    PmpRun {
+        x_map: x_best,
+        energy: e_best,
+        history,
+        accepted,
+        particles: x.to_vec(),
+        iters: rounds,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpp::SerialDevice;
+    use crate::mrf::continuous::synthetic_denoise;
+
+    #[test]
+    fn edge_index_inverts_itself() {
+        let (m, _) = synthetic_denoise(4, 3, 5.0, 7);
+        let idx = build_edge_index(&m.graph);
+        for p in 0..m.graph.neighbors.len() {
+            let q = idx.rev[p] as usize;
+            assert_eq!(idx.rev[q] as usize, p, "rev is an involution");
+            assert_eq!(idx.src[q], m.graph.neighbors[p]);
+            assert_eq!(m.graph.neighbors[q], idx.src[p]);
+        }
+    }
+
+    #[test]
+    fn belief_key_orders_like_f32() {
+        let vals = [-3.5f32, -0.0, 0.0, 1.0, 7.25, f32::INFINITY];
+        for w in vals.windows(2) {
+            assert!(
+                belief_key(w[0], 0) < belief_key(w[1], 0)
+                    || w[0].to_bits() ^ w[1].to_bits()
+                        == 0x8000_0000,
+                "{} < {}",
+                w[0],
+                w[1]
+            );
+        }
+        // Equal values tie-break on slot.
+        assert!(belief_key(2.0, 1) < belief_key(2.0, 2));
+    }
+
+    #[test]
+    fn solve_reduces_energy_and_prunes_to_k() {
+        let (m, _) = synthetic_denoise(8, 6, 10.0, 11);
+        let cfg = PmpConfig { iters: 6, ..Default::default() };
+        let ws = Workspace::new();
+        let run =
+            solve(&SerialDevice, &ws, &m, &cfg, None, false);
+        assert_eq!(run.x_map.len(), m.num_vertices());
+        assert_eq!(
+            run.particles.len(),
+            m.num_vertices() * cfg.particles
+        );
+        assert_eq!(run.history.len(), run.iters);
+        assert_eq!(run.energy, run.history.iter().cloned()
+            .fold(f64::INFINITY, f64::min));
+        // Optimizing must beat the raw noisy observation.
+        assert!(run.energy <= m.energy(&m.y), "{} vs obs", run.energy);
+    }
+
+    #[test]
+    fn warm_start_resumes_from_given_particles() {
+        let (m, _) = synthetic_denoise(5, 4, 8.0, 3);
+        let cfg = PmpConfig {
+            iters: 1,
+            walk_sigma: 0.0,
+            ..Default::default()
+        };
+        let ws = Workspace::new();
+        let first =
+            solve(&SerialDevice, &ws, &m, &cfg, None, true);
+        let second = solve(
+            &SerialDevice, &ws, &m, &cfg,
+            Some(&first.particles), true,
+        );
+        // Zero walk: proposals duplicate survivors, so the particle
+        // set is a fixpoint and the decode can only stay or improve.
+        assert!(second.energy <= first.energy);
+        assert_eq!(second.particles, first.particles);
+    }
+}

@@ -1,0 +1,208 @@
+//! Plain-loop particle max-product oracle.
+//!
+//! Mirrors [`super::solve`] operation for operation: identical
+//! per-item kernels ([`super::propose`], [`super::message_kernel`],
+//! [`super::belief_key`], [`super::rank_of`]), identical fold orders
+//! (every accumulation starts from the same identity and walks the
+//! same ascending index order the `SegmentPlan` folds use), identical
+//! f64 scoring. The DPP path only changes *which thread* evaluates
+//! each item, never the arithmetic — so this oracle pins it bitwise
+//! on every device (`rust/tests/pmp_conformance.rs`).
+
+use crate::mrf::continuous::ContinuousModel;
+
+use super::{
+    belief_key, build_edge_index, message_kernel, propose, rank_of,
+    PmpConfig, PmpRun,
+};
+
+/// Serial reference of [`super::solve`] — same signature minus the
+/// device and workspace.
+pub fn solve(
+    model: &ContinuousModel,
+    cfg: &PmpConfig,
+    init: Option<&[f32]>,
+    fixed_iters: bool,
+) -> PmpRun {
+    let nv = model.num_vertices();
+    let k = cfg.particles.max(1);
+    let a = 2 * k;
+    let g = &model.graph;
+    let nde = g.neighbors.len();
+    let edges = build_edge_index(g);
+
+    let mut x = Vec::with_capacity(nv * k);
+    match init {
+        Some(warm) => {
+            assert_eq!(warm.len(), nv * k, "init is nv x K");
+            x.extend_from_slice(warm);
+        }
+        None => {
+            for v in 0..nv {
+                for s in 0..k {
+                    x.push(if s == 0 {
+                        model.y[v]
+                    } else {
+                        propose(
+                            cfg.seed, 0, v, s, k, model.y[v],
+                            cfg.walk_sigma,
+                        )
+                    });
+                }
+            }
+        }
+    }
+
+    let mut x_best = vec![0.0f32; nv];
+    let mut e_best = f64::INFINITY;
+    let mut history = Vec::new();
+    let mut accepted = Vec::new();
+    let mut rounds = 0usize;
+
+    let mut x_aug = vec![0.0f32; nv * a];
+    let mut d_aug = vec![0.0f32; nv * a];
+    let mut msum = vec![0.0f32; nv * a];
+    let mut inc = vec![0.0f32; nv * a];
+    let mut msg = vec![0.0f32; nde * a];
+    let mut msg_next = vec![0.0f32; nde * a];
+    let mut keys = vec![0u64; nv];
+    let mut x_dec = vec![0.0f32; nv];
+    let mut kept: Vec<u32> = Vec::with_capacity(nv * k);
+    let mut x_new = vec![0.0f32; nv * k];
+
+    for round in 0..cfg.iters.max(1) {
+        rounds += 1;
+        // 1. Propose/augment.
+        for t in 0..nv * a {
+            let (v, s) = (t / a, t % a);
+            x_aug[t] = if s < k {
+                x[v * k + s]
+            } else {
+                propose(
+                    cfg.seed,
+                    round + 1,
+                    v,
+                    s - k,
+                    k,
+                    x[v * k + (s - k)],
+                    cfg.walk_sigma,
+                )
+            };
+        }
+        for t in 0..nv * a {
+            d_aug[t] = model.data_energy(t / a, x_aug[t]);
+        }
+        msg.fill(0.0);
+
+        // 2. Min-sum sweeps. The belief accumulation walks each CSR
+        //    row ascending from 0.0 — the exact `SegmentPlan` fold.
+        let beliefs = |msg: &[f32],
+                       inc: &mut [f32],
+                       msum: &mut [f32]| {
+            for j in 0..a {
+                for v in 0..nv {
+                    let (s, e) = (
+                        g.offsets[v] as usize,
+                        g.offsets[v + 1] as usize,
+                    );
+                    let mut acc = 0.0f32;
+                    for p in s..e {
+                        acc += msg[edges.rev[p] as usize * a + j];
+                    }
+                    inc[j * nv + v] = acc;
+                }
+            }
+            for t in 0..nv * a {
+                msum[t] = d_aug[t] + inc[(t % a) * nv + t / a];
+            }
+        };
+        for _ in 0..cfg.sweeps.max(1) {
+            beliefs(&msg, &mut inc, &mut msum);
+            for (t, slot) in msg_next.iter_mut().enumerate() {
+                *slot = message_kernel(
+                    model, &x_aug, &msum, &msg, &edges.src,
+                    &g.neighbors, &edges.rev, a, t,
+                );
+            }
+            std::mem::swap(&mut msg, &mut msg_next);
+        }
+        beliefs(&msg, &mut inc, &mut msum);
+
+        // 3. Decode: per-vertex key min, ascending slots, from the
+        //    same u64::MAX identity as the particle-plan fold.
+        for v in 0..nv {
+            let mut acc = u64::MAX;
+            for t in v * a..(v + 1) * a {
+                acc = acc.min(belief_key(msum[t], t % a));
+            }
+            keys[v] = acc;
+        }
+        for v in 0..nv {
+            x_dec[v] = x_aug[v * a + (keys[v] & 0xFFFF_FFFF) as usize];
+        }
+        let e = model.energy(&x_dec);
+        history.push(e);
+        if e < e_best {
+            e_best = e;
+            x_best.copy_from_slice(&x_dec);
+        }
+
+        // 4. Select-and-prune, ascending index order like CopyIf.
+        kept.clear();
+        for t in 0..nv * a {
+            if rank_of(&msum, t / a, a, t % a) < k {
+                kept.push(t as u32);
+            }
+        }
+        debug_assert_eq!(kept.len(), nv * k);
+        for (t, &src) in kept.iter().enumerate() {
+            x_new[t] = x_aug[src as usize];
+        }
+        std::mem::swap(&mut x, &mut x_new);
+        accepted.push(
+            kept.iter().filter(|&&gg| (gg as usize % a) >= k).count()
+                as u64,
+        );
+
+        if !fixed_iters && history.len() >= 2 {
+            let prev = history[history.len() - 2];
+            if (prev - e).abs() <= cfg.tol * e.abs().max(1.0) {
+                break;
+            }
+        }
+    }
+
+    PmpRun {
+        x_map: x_best,
+        energy: e_best,
+        history,
+        accepted,
+        particles: x,
+        iters: rounds,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpp::{SerialDevice, Workspace};
+    use crate::mrf::continuous::synthetic_denoise;
+
+    #[test]
+    fn serial_matches_dpp_serial_device_bitwise() {
+        let (m, _) = synthetic_denoise(7, 5, 9.0, 21);
+        let cfg = PmpConfig { iters: 4, ..Default::default() };
+        let ws = Workspace::new();
+        let oracle = solve(&m, &cfg, None, true);
+        let dpp = super::super::solve(
+            &SerialDevice, &ws, &m, &cfg, None, true,
+        );
+        assert_eq!(oracle, dpp, "oracle vs DPP path on SerialDevice");
+        let bits_a: Vec<u32> =
+            oracle.x_map.iter().map(|f| f.to_bits()).collect();
+        let bits_b: Vec<u32> =
+            dpp.x_map.iter().map(|f| f.to_bits()).collect();
+        assert_eq!(bits_a, bits_b, "bit-exact labels");
+        assert_eq!(oracle.energy.to_bits(), dpp.energy.to_bits());
+    }
+}

@@ -231,6 +231,7 @@ pub fn run_slices(
     let runtime = res.runtime.clone();
     let bp = res.bp;
     let dual = res.dual;
+    let pmp = res.pmp;
     let threads = cfg.threads;
     // Hand the coordinator's own device down so a pool-free device
     // (notably accel with loaded artifacts) is reused instead of
@@ -245,6 +246,7 @@ pub fn run_slices(
             runtime: runtime.clone(),
             bp,
             dual,
+            pmp,
         };
         mrf::make_engine(kind, &lane_res)
             .expect("engine construction already succeeded in the probe")
@@ -388,6 +390,11 @@ fn run_serial(
             optimality_gap: res
                 .lower_bound
                 .map(|lb| (res.energy - lb).max(0.0)),
+            pmp_particles: res.pmp.map(|p| p.particles),
+            pmp_acceptance: res.pmp.map(|p| p.acceptance),
+            pmp_max_marginal_energy: res
+                .pmp
+                .map(|p| p.max_marginal_energy),
         });
         crate::log_debug!(
             "slice {z}: {} regions, {} hoods, init {:.3}s opt {:.3}s",
@@ -620,6 +627,11 @@ where
                         optimality_gap: res
                             .lower_bound
                             .map(|lb| (res.energy - lb).max(0.0)),
+                        pmp_particles: res.pmp.map(|p| p.particles),
+                        pmp_acceptance: res.pmp.map(|p| p.acceptance),
+                        pmp_max_marginal_energy: res
+                            .pmp
+                            .map(|p| p.max_marginal_energy),
                     });
                 }
                 (busy, timeline)

@@ -16,12 +16,13 @@ const GRIDS: [(usize, usize); 3] = [(2, 3), (3, 3), (3, 4)];
 const SEEDS: [u64; 3] = [11, 12, 13];
 
 /// Every engine that can run without accelerator artifacts.
-const ENGINES: [EngineKind; 5] = [
+const ENGINES: [EngineKind; 6] = [
     EngineKind::Serial,
     EngineKind::Reference,
     EngineKind::Dpp,
     EngineKind::Bp,
     EngineKind::Dual,
+    EngineKind::Pmp,
 ];
 
 #[test]

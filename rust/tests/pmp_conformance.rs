@@ -1,0 +1,241 @@
+//! PMP conformance gate (ISSUE 9 acceptance): the particle
+//! max-product solver must be **bitwise-identical** between the
+//! serial oracle ([`pmp::serial`]) and the DPP path on every
+//! registered device, and across scheduler lanes {1, 2, 4}; and on a
+//! particle set quantized to the discrete Potts label grid, its
+//! converged energy must match the exhaustive oracle on tree
+//! instances of ≤ 12 vertices (where synchronous min-sum is exact).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use dpp_pmrf::config::{DatasetConfig, EngineKind, RunConfig};
+use dpp_pmrf::coordinator::Coordinator;
+use dpp_pmrf::dpp::{Backend, Device, IntoDevice,
+                    OfflineAcceleratorDevice, PoolDevice, SerialDevice,
+                    Workspace};
+use dpp_pmrf::image;
+use dpp_pmrf::mrf::continuous::{self, ContinuousModel};
+use dpp_pmrf::pmp::{self, PmpConfig};
+use dpp_pmrf::pool::Pool;
+use dpp_pmrf::util::Pcg32;
+
+/// The device registry under test — the same roster the primitive
+/// conformance suite sweeps (`tests/device_conformance.rs`), so a
+/// future backend lands in both gates by construction.
+fn devices() -> Vec<(String, Arc<dyn Device>)> {
+    let mut out: Vec<(String, Arc<dyn Device>)> = Vec::new();
+    out.push(("serial".into(), Arc::new(SerialDevice)));
+    for threads in [1, 2, 4] {
+        out.push((
+            format!("pool-t{threads}-g64"),
+            Arc::new(PoolDevice::new(threads, 64)),
+        ));
+    }
+    // Odd grain: chunk boundaries land mid-particle-tensor.
+    out.push(("pool-t4-g1021".into(), Arc::new(PoolDevice::new(4, 1021))));
+    out.push((
+        "legacy-backend-t2-g64".into(),
+        Backend::threaded_with_grain(Pool::new(2), 64).into_device(),
+    ));
+    out.push((
+        "accel-no-artifacts".into(),
+        Arc::new(OfflineAcceleratorDevice::load(Path::new(
+            "no/such/artifacts",
+        ))),
+    ));
+    out
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn solve_matches_serial_oracle_bitwise_on_every_device() {
+    // Cold start and warm start, convergence-gated and fixed-round.
+    for (seed, fixed) in [(21u64, false), (22, true)] {
+        let (model, _) = continuous::synthetic_denoise(9, 6, 9.0, seed);
+        let cfg = PmpConfig { iters: 5, ..Default::default() };
+        let want = pmp::serial::solve(&model, &cfg, None, fixed);
+        let warm_want = pmp::serial::solve(
+            &model, &cfg, Some(&want.particles), fixed,
+        );
+        for (tag, dev) in devices() {
+            let ws = Workspace::new();
+            let got = pmp::solve(&*dev, &ws, &model, &cfg, None, fixed);
+            assert_eq!(
+                bits(&got.x_map),
+                bits(&want.x_map),
+                "{tag}: x_map bits (seed {seed}, fixed {fixed})"
+            );
+            assert_eq!(
+                got.energy.to_bits(),
+                want.energy.to_bits(),
+                "{tag}: energy bits"
+            );
+            assert_eq!(
+                bits(&got.particles),
+                bits(&want.particles),
+                "{tag}: surviving particle tensor bits"
+            );
+            assert_eq!(got, want, "{tag}: full run equality");
+            // Warm start resumes bitwise too: the pruned tensor of
+            // one run is a valid init for the next.
+            let got_warm = pmp::solve(
+                &*dev, &ws, &model, &cfg, Some(&got.particles), fixed,
+            );
+            assert_eq!(got_warm, warm_want, "{tag}: warm-start run");
+        }
+    }
+}
+
+#[test]
+fn sched_lanes_produce_bitwise_identical_pmp_runs() {
+    let cfg = RunConfig {
+        dataset: DatasetConfig {
+            width: 48,
+            height: 48,
+            slices: 4,
+            ..Default::default()
+        },
+        engine: EngineKind::Pmp,
+        threads: 2,
+        ..Default::default()
+    };
+    let ds = image::generate(&cfg.dataset);
+    let mut baseline = None;
+    for lanes in [1usize, 2, 4] {
+        let mut c = cfg.clone();
+        c.sched.lanes = lanes;
+        let report = Coordinator::new(c).unwrap().run(&ds).unwrap();
+        assert_eq!(report.sched.lanes, lanes);
+        assert_eq!(report.engine, "pmp");
+        let Some(base) = &baseline else {
+            baseline = Some(report);
+            continue;
+        };
+        let base: &dpp_pmrf::coordinator::RunReport = base;
+        assert_eq!(report.output.data, base.output.data,
+                   "{lanes} lanes: output voxels");
+        for (a, b) in report.slices.iter().zip(&base.slices) {
+            assert_eq!(a.z, b.z);
+            assert_eq!(a.final_energy.to_bits(), b.final_energy.to_bits(),
+                       "{lanes} lanes: slice {} energy", a.z);
+            assert_eq!(a.pmp_particles, b.pmp_particles);
+            assert_eq!(
+                a.pmp_acceptance.map(f64::to_bits),
+                b.pmp_acceptance.map(f64::to_bits),
+                "{lanes} lanes: slice {} acceptance", a.z
+            );
+            assert_eq!(
+                a.pmp_max_marginal_energy.map(f64::to_bits),
+                b.pmp_max_marginal_energy.map(f64::to_bits),
+                "{lanes} lanes: slice {} max-marginal", a.z
+            );
+        }
+    }
+}
+
+/// Potts-quantized model on a `w x h` grid: random observations, the
+/// two fixed class levels as the only admissible labels.
+const LEVELS: [f32; 2] = [60.0, 180.0];
+
+fn quantized_model(w: usize, h: usize, seed: u64) -> ContinuousModel {
+    let nv = w * h;
+    let mut rng = Pcg32::seeded(seed);
+    let y: Vec<f32> =
+        (0..nv).map(|_| (rng.next_u32() % 256) as f32).collect();
+    ContinuousModel::new(continuous::grid_graph(w, h), y, 25.0, 0.5, 4.0)
+}
+
+/// Exhaustive optimum over the quantized label grid `LEVELS^nv`
+/// under the continuous energy — the pmp analog of
+/// `common::brute_force_config` (tests/exact_oracle.rs).
+fn brute_force_quantized(model: &ContinuousModel) -> f64 {
+    let nv = model.num_vertices();
+    assert!(nv <= 12, "exhaustive oracle is for tiny instances");
+    let mut best = f64::INFINITY;
+    for mask in 0u32..(1u32 << nv) {
+        let x: Vec<f32> = (0..nv)
+            .map(|v| LEVELS[((mask >> v) & 1) as usize])
+            .collect();
+        best = best.min(model.energy(&x));
+    }
+    best
+}
+
+/// Zero-walk config: proposals duplicate their base particle, so a
+/// `LEVELS`-quantized init stays on the discrete grid for the whole
+/// solve and decode searches exactly the oracle's space.
+fn quantized_cfg() -> PmpConfig {
+    PmpConfig {
+        particles: LEVELS.len(),
+        iters: 1,
+        // Path instances below have diameter ≤ 11; synchronous
+        // min-sum is exact after ≥ diameter sweeps on a tree.
+        sweeps: 16,
+        walk_sigma: 0.0,
+        tol: 0.0,
+        seed: 99,
+    }
+}
+
+fn quantized_init(nv: usize) -> Vec<f32> {
+    (0..nv).flat_map(|_| LEVELS).collect()
+}
+
+#[test]
+fn quantized_particles_match_exhaustive_oracle_on_trees() {
+    // Path graphs (h = 1) are trees: min-sum is exact, so the decoded
+    // energy must equal the enumerated optimum.
+    for (w, h) in [(2usize, 1usize), (6, 1), (12, 1)] {
+        for seed in [11u64, 12, 13] {
+            let model = quantized_model(w, h, seed);
+            let best = brute_force_quantized(&model);
+            let cfg = quantized_cfg();
+            let init = quantized_init(w * h);
+            let run =
+                pmp::serial::solve(&model, &cfg, Some(&init), true);
+            // Decoded labels live on the quantized grid, so the
+            // energy can never beat the enumeration...
+            assert!(
+                run.energy >= best,
+                "{w}x{h} seed {seed}: pmp {} beat the oracle {best}",
+                run.energy
+            );
+            // ...and exact min-sum on a tree must attain it.
+            assert!(
+                (run.energy - best).abs()
+                    <= 1e-9 * best.abs().max(1.0),
+                "{w}x{h} seed {seed}: pmp {} != oracle {best}",
+                run.energy
+            );
+            // The DPP path agrees bitwise on the same instance.
+            let ws = Workspace::new();
+            let dpp_run = pmp::solve(
+                &PoolDevice::new(4, 64), &ws, &model, &cfg,
+                Some(&init), true,
+            );
+            assert_eq!(dpp_run, run, "{w}x{h} seed {seed}: dpp path");
+        }
+    }
+}
+
+#[test]
+fn quantized_particles_respect_the_oracle_on_loopy_grids() {
+    // 3x3 has cycles: min-sum is a heuristic there, so only the
+    // one-sided bound holds — decoded energy at or above the optimum.
+    for seed in [11u64, 12, 13] {
+        let model = quantized_model(3, 3, seed);
+        let best = brute_force_quantized(&model);
+        let run = pmp::serial::solve(
+            &model, &quantized_cfg(), Some(&quantized_init(9)), true,
+        );
+        assert!(
+            run.energy >= best,
+            "3x3 seed {seed}: pmp {} beat the oracle {best}",
+            run.energy
+        );
+    }
+}

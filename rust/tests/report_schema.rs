@@ -36,20 +36,22 @@ fn keys(v: &Value) -> Vec<&str> {
 
 /// The run-level contract on a synthetic dataset (ground truth
 /// present, so the confusion metrics appear).
-const RUN_KEYS: [&str; 28] = [
+const RUN_KEYS: [&str; 31] = [
     "accuracy", "convergence", "device", "device_fused_regions",
     "device_offload", "device_threaded", "em_iters", "engine", "exec",
     "inflight_cap", "job_latency", "lane_occupancy", "lane_timeline",
     "lanes", "lower_bound", "map_iters", "mean_init_secs",
-    "mean_opt_secs", "optimality_gap", "peak_inflight", "porosity",
-    "precision", "queue_wait", "recall", "slice_reports", "slices",
-    "slices_per_sec", "total_secs",
+    "mean_opt_secs", "optimality_gap", "peak_inflight",
+    "pmp_acceptance", "pmp_max_marginal_energy", "pmp_particles",
+    "porosity", "precision", "queue_wait", "recall", "slice_reports",
+    "slices", "slices_per_sec", "total_secs",
 ];
 
 /// The per-slice row contract.
-const SLICE_KEYS: [&str; 13] = [
+const SLICE_KEYS: [&str; 16] = [
     "elements", "em_iters", "final_energy", "hoods", "init_secs",
     "lane", "lower_bound", "map_iters", "opt_secs", "optimality_gap",
+    "pmp_acceptance", "pmp_max_marginal_energy", "pmp_particles",
     "queue_wait_secs", "regions", "z",
 ];
 
@@ -81,6 +83,63 @@ fn non_certifying_engine_reports_null_certificates() {
         assert_eq!(row.get("lower_bound"), Some(&Value::Null));
         assert_eq!(row.get("optimality_gap"), Some(&Value::Null));
     }
+    // Particle fields follow the same contract: pinned keys, null
+    // values for every engine but pmp (ISSUE 9).
+    for key in
+        ["pmp_particles", "pmp_acceptance", "pmp_max_marginal_energy"]
+    {
+        assert_eq!(j.get(key), Some(&Value::Null), "{key}");
+    }
+    for row in j.get("slice_reports").and_then(Value::as_array).unwrap() {
+        assert_eq!(row.get("pmp_particles"), Some(&Value::Null));
+        assert_eq!(row.get("pmp_acceptance"), Some(&Value::Null));
+        assert_eq!(row.get("pmp_max_marginal_energy"),
+                   Some(&Value::Null));
+    }
+}
+
+#[test]
+fn pmp_engine_reports_numeric_particle_stats() {
+    let j = report_json(EngineKind::Pmp);
+    assert_schema(&j);
+    // The certificate stays null (pmp does not certify) while the
+    // particle deliverables go numeric — both contracts at once.
+    assert_eq!(j.get("lower_bound"), Some(&Value::Null));
+    assert_eq!(j.get("optimality_gap"), Some(&Value::Null));
+    let particles = j
+        .get("pmp_particles")
+        .and_then(Value::as_f64)
+        .expect("pmp run carries a particle count");
+    assert!(particles >= 1.0);
+    let acc = j
+        .get("pmp_acceptance")
+        .and_then(Value::as_f64)
+        .expect("pmp run carries an acceptance rate");
+    assert!((0.0..=1.0).contains(&acc), "acceptance {acc}");
+    assert!(j
+        .get("pmp_max_marginal_energy")
+        .and_then(Value::as_f64)
+        .expect("pmp run carries a continuous energy")
+        .is_finite());
+    let mut sum = 0.0f64;
+    for row in j.get("slice_reports").and_then(Value::as_array).unwrap() {
+        let p = row
+            .get("pmp_particles")
+            .and_then(Value::as_f64)
+            .expect("per-slice particle count");
+        assert!(p >= 1.0);
+        sum += p;
+        assert!(row
+            .get("pmp_acceptance")
+            .and_then(Value::as_f64)
+            .is_some());
+        assert!(row
+            .get("pmp_max_marginal_energy")
+            .and_then(Value::as_f64)
+            .is_some());
+    }
+    // Run-level particle count is the per-slice sum.
+    assert_eq!(particles, sum, "run particles vs slice sum");
 }
 
 #[test]
