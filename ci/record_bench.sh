@@ -24,7 +24,8 @@ export DPP_PMRF_BENCH_SCALE="${DPP_PMRF_BENCH_SCALE:-smoke}"
 # tightness, and the engine comparison.
 benches=("$@")
 if [ "${#benches[@]}" -eq 0 ]; then
-    benches=(throughput alloc_churn dual_gap bp_vs_map pmp_denoise)
+    benches=(throughput alloc_churn dual_gap bp_vs_map
+             bp_schedule_ablation pmp_denoise)
 fi
 
 rm -rf bench_results

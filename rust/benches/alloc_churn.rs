@@ -212,7 +212,8 @@ fn main() {
             for i in 0..1000u64 {
                 dpp_pmrf::obs::tick();
                 dpp_pmrf::obs::map_sample(0, i as usize, 0.0, 0);
-                dpp_pmrf::obs::bp_sample(0, i as usize, 0.0, 0.5, 0);
+                dpp_pmrf::obs::bp_sample(0, i as usize, 0.0, 0.5, 0,
+                                         "residual", 0.0);
                 dpp_pmrf::obs::dual_sample(0, i as usize, 0.0, 0.0, 0.0);
             }
         });

@@ -1,0 +1,117 @@
+//! BP frontier-policy ablation (ISSUE 10): convergence wall-clock vs
+//! schedule for the whole policy family — synchronous flood, residual
+//! frontier, stale-residual (barrier-free), bucketed splash, and
+//! randomized subset — across thread counts and frontier parameters.
+//! Every configuration runs in convergence mode, so each row answers
+//! "how long until this policy's fixed point, over how many sweeps,
+//! committing what fraction of messages per sweep?" — the
+//! convergence-vs-wall-clock trade the relaxed policies exist to win.
+//!
+//! Output: `bench_results/bp_schedule_ablation.json` — one row per
+//! (policy, threads) with median seconds plus sweep-count,
+//! final-energy, and committed-fraction labels, and a printed speedup
+//! table normalized to the synchronous schedule at each thread count.
+
+use dpp_pmrf::bench_support::{prepare_models, workload, Report, Scale};
+use dpp_pmrf::bp::{BpConfig, BpEngine, BpSchedule};
+use dpp_pmrf::config::DatasetKind;
+use dpp_pmrf::dpp::Backend;
+use dpp_pmrf::mrf::Engine;
+use dpp_pmrf::pool::Pool;
+use dpp_pmrf::util::measure;
+
+/// The ablation grid: every policy family, plus a second frontier
+/// parameter for the families that take one.
+fn policies() -> Vec<(BpSchedule, f32)> {
+    vec![
+        (BpSchedule::Synchronous, 0.0),
+        (BpSchedule::Residual, 0.1),
+        (BpSchedule::Residual, 0.5),
+        (BpSchedule::StaleResidual, 0.1),
+        (BpSchedule::StaleResidual, 0.5),
+        (BpSchedule::Bucketed { bins: 4 }, 0.0),
+        (BpSchedule::Bucketed { bins: 8 }, 0.0),
+        (BpSchedule::RandomizedSubset { p: 0.25, seed: 7 }, 0.0),
+        (BpSchedule::RandomizedSubset { p: 0.5, seed: 7 }, 0.0),
+    ]
+}
+
+fn main() {
+    let scale = Scale::from_env();
+    let mut report = Report::new("bp_schedule_ablation");
+
+    let (ds, mut cfg) = workload(DatasetKind::Synthetic, scale);
+    // Convergence race: every policy stops at its own fixed point.
+    cfg.mrf.fixed_iters = false;
+    let models = prepare_models(&ds, &cfg);
+
+    for threads in [1usize, 2, 4] {
+        let bk = if threads == 1 {
+            Backend::Serial
+        } else {
+            Backend::threaded(Pool::new(threads))
+        };
+        for (schedule, frontier) in policies() {
+            let bp_cfg = BpConfig {
+                schedule,
+                frontier,
+                ..Default::default()
+            };
+            let engine = BpEngine::new(bk.clone(), bp_cfg);
+            let stats = measure(scale.warmup, scale.reps, || {
+                for m in &models {
+                    engine.run(m, &cfg.mrf);
+                }
+            });
+            // One scored pass for the quality/effort labels.
+            let (mut sweeps, mut energy) = (0usize, 0.0f64);
+            let (mut frac_sum, mut frac_n) = (0.0f64, 0usize);
+            for m in &models {
+                let r = engine.run(m, &cfg.mrf);
+                sweeps += r.map_iters;
+                energy += r.energy;
+                if let Some(b) = r.bp {
+                    frac_sum += b.committed_frac;
+                    frac_n += 1;
+                }
+            }
+            let frac = frac_sum / frac_n.max(1) as f64;
+            report.add(
+                vec![
+                    ("policy", schedule.spec()),
+                    ("frontier", format!("{frontier}")),
+                    ("threads", threads.to_string()),
+                    ("sweeps", sweeps.to_string()),
+                    ("final_energy", format!("{energy:.1}")),
+                    ("committed_frac", format!("{frac:.4}")),
+                ],
+                stats,
+            );
+        }
+    }
+    report.finish();
+
+    println!("BP schedule ablation (T_sync / T_policy; >1 means the \
+              relaxed frontier wins):");
+    for threads in [1usize, 2, 4] {
+        let t = threads.to_string();
+        let sync =
+            report.median(&[("policy", "sync"), ("threads", t.as_str())]);
+        for (schedule, frontier) in policies() {
+            let spec = schedule.spec();
+            let f = format!("{frontier}");
+            let row = report.median(&[
+                ("policy", spec.as_str()),
+                ("frontier", f.as_str()),
+                ("threads", t.as_str()),
+            ]);
+            if let (Some(sync), Some(row)) = (sync, row) {
+                println!(
+                    "  t{threads} {spec:<14} frontier {frontier:<4} \
+                     {:.2}x",
+                    sync / row
+                );
+            }
+        }
+    }
+}

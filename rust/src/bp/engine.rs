@@ -20,7 +20,7 @@ use crate::mrf::{self, params, ConvergenceWindow, Engine, EmResult,
 
 use super::messages::BpGraph;
 use super::sweep::{self, BpState};
-use super::{BpConfig, BpSchedule};
+use super::{BpConfig, BpSchedule, BpStats};
 
 pub struct BpEngine {
     device: Arc<dyn Device>,
@@ -65,6 +65,9 @@ impl Engine for BpEngine {
         match self.bp.schedule {
             BpSchedule::Synchronous => "bp-sync",
             BpSchedule::Residual => "bp",
+            BpSchedule::StaleResidual => "bp-stale",
+            BpSchedule::Bucketed { .. } => "bp-bucketed",
+            BpSchedule::RandomizedSubset { .. } => "bp-random",
         }
     }
 
@@ -83,6 +86,7 @@ impl Engine for BpEngine {
 
         let mut em_window = ConvergenceWindow::new(cfg.window, cfg.threshold);
         let mut total_sweeps = 0usize;
+        let mut total_updated = 0usize;
         let mut em_iters = 0usize;
         // One unary buffer for the whole run: refreshed in place per
         // EM iteration (allocation-free after the first).
@@ -101,6 +105,7 @@ impl Engine for BpEngine {
                 em_iters - 1,
             );
             total_sweeps += bp_run.sweeps;
+            total_updated += bp_run.updated_total;
             sweep::decode(bk, model, &g, &unary, &mut st, &mut labels);
 
             // Score with the shared hood energy (histories directly
@@ -119,6 +124,11 @@ impl Engine for BpEngine {
         }
         self.ws.publish_timing();
 
+        // Mean committed fraction across the whole run: how much the
+        // frontier policy actually relaxed (1.0 for Synchronous).
+        let committed_frac = total_updated as f64
+            / (total_sweeps.max(1) * g.num_edges().max(1)) as f64;
+
         EmResult {
             labels,
             em_iters,
@@ -128,6 +138,10 @@ impl Engine for BpEngine {
             params: prm,
             lower_bound: None,
             pmp: None,
+            bp: Some(BpStats {
+                schedule: self.bp.schedule,
+                committed_frac,
+            }),
         }
     }
 }
@@ -197,7 +211,7 @@ mod tests {
     fn bp_engine_deterministic_across_backends_and_runs() {
         let model = small_model(51);
         let cfg = MrfConfig::default();
-        for schedule in [BpSchedule::Synchronous, BpSchedule::Residual] {
+        for schedule in crate::bp::ALL_SCHEDULES {
             let bp = BpConfig { schedule, ..Default::default() };
             let a = BpEngine::new(Backend::Serial, bp).run(&model, &cfg);
             let b = BpEngine::new(Backend::Serial, bp).run(&model, &cfg);
@@ -269,6 +283,52 @@ mod tests {
             let n: f64 = stats.acc[0][0] + stats.acc[1][0];
             assert_eq!(n, model.hoods.num_elements() as f64);
         }
+    }
+
+    #[test]
+    fn engine_reports_schedule_and_committed_fraction() {
+        let model = small_model(56);
+        let cfg = MrfConfig::default();
+        let sync = BpEngine::new(
+            Backend::Serial,
+            BpConfig { schedule: BpSchedule::Synchronous,
+                       ..Default::default() },
+        )
+        .run(&model, &cfg);
+        let stats = sync.bp.expect("bp engine always reports BpStats");
+        assert_eq!(stats.schedule, BpSchedule::Synchronous);
+        assert_eq!(stats.committed_frac, 1.0,
+                   "synchronous commits everything by construction");
+        for schedule in [
+            BpSchedule::Residual,
+            BpSchedule::StaleResidual,
+            BpSchedule::Bucketed { bins: 8 },
+            BpSchedule::RandomizedSubset { p: 0.5, seed: 7 },
+        ] {
+            let res = BpEngine::new(
+                Backend::Serial,
+                BpConfig { schedule, ..Default::default() },
+            )
+            .run(&model, &cfg);
+            let stats = res.bp.expect("BpStats present");
+            assert_eq!(stats.schedule, schedule);
+            assert!(stats.committed_frac > 0.0
+                        && stats.committed_frac < 1.0,
+                    "{schedule:?} relaxes: {}", stats.committed_frac);
+        }
+    }
+
+    #[test]
+    fn engine_names_distinguish_every_policy_family() {
+        let mut names = std::collections::BTreeSet::new();
+        for schedule in crate::bp::ALL_SCHEDULES {
+            let e = BpEngine::new(
+                Backend::Serial,
+                BpConfig { schedule, ..Default::default() },
+            );
+            names.insert(e.name());
+        }
+        assert_eq!(names.len(), crate::bp::ALL_SCHEDULES.len());
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! Max-product loopy belief propagation over the region graph
-//! (DESIGN.md §6) — a second optimizer for [`crate::mrf::MrfModel`]
+//! (DESIGN.md §6, §15) — a second optimizer for [`crate::mrf::MrfModel`]
 //! beside the EM/MAP engines, expressed entirely in the DPP vocabulary
 //! of [`crate::dpp`].
 //!
@@ -15,10 +15,16 @@
 //!    vertex -> beliefs,
 //! 2. **Map** over directed edges -> damped candidate messages and
 //!    per-message residuals,
-//! 3. **Reduce⟨Max⟩** over residuals, then a **Map** commit of the
-//!    residual frontier (Van der Merwe et al. 2019: updating only the
-//!    high-residual messages each round converges in far fewer message
-//!    updates than the synchronous schedule).
+//! 3. a schedule-dependent commit rule (the **frontier policy**) that
+//!    picks which candidates replace their messages this round.
+//!
+//! The frontier policies are the [`BpSchedule`] family (DESIGN.md §15,
+//! after Van der Merwe et al. 2019, *Message Scheduling for
+//! Performant, Many-Core Belief Propagation*): the exact residual
+//! frontier keeps a serial `Reduce<Max>` fold between barriers every
+//! sweep, while the relaxed policies (stale threshold, log2 residual
+//! buckets, randomized subsets) either move that fold off the critical
+//! path or drop it entirely — same fixed points, less serialization.
 //!
 //! All of it fused: the vertex segments come from the
 //! [`crate::dpp::SegmentPlan`] cached in [`messages::BpGraph`] (CSR
@@ -27,15 +33,17 @@
 //! passes instead of one pool fork-join per pass.
 //!
 //! Modules: [`messages`] (edge layout + reverse index + Potts weights),
-//! [`sweep`] (synchronous and residual-scheduled sweeps on a
-//! [`crate::dpp::Device`]), [`serial`] (plain-loop oracle for tests),
-//! [`engine`] ([`BpEngine`], an [`crate::mrf::Engine`] running BP as
-//! the E-step inside the shared EM outer loop).
+//! [`sweep`] (schedule-dispatched sweeps on a [`crate::dpp::Device`]),
+//! [`serial`] (plain-loop oracle for tests), [`engine`] ([`BpEngine`],
+//! an [`crate::mrf::Engine`] running BP as the E-step inside the
+//! shared EM outer loop).
 //!
 //! Every pass is deterministic across backends and thread counts: the
-//! only floating-point reduction is an exact `max`, and per-vertex /
-//! per-edge arithmetic runs in a fixed order. BP with any backend is
-//! therefore bitwise-reproducible — stronger than the MAP engines'
+//! only floating-point reduction is an exact `max`, per-vertex /
+//! per-edge arithmetic runs in a fixed order, and every relaxed commit
+//! rule is a pure function of (position, sweep index) — never of
+//! execution order. BP with any schedule and any backend is therefore
+//! bitwise-reproducible — stronger than the MAP engines'
 //! chunk-order-dependent parameter reductions.
 
 pub mod engine;
@@ -49,33 +57,194 @@ pub use sweep::{BpRun, BpState, SweepStats};
 
 use anyhow::{bail, Result};
 
-/// Message-update schedule for one BP round.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+/// Bucket count when `--bp-schedule bucketed` gives none.
+pub const DEFAULT_BUCKET_BINS: u32 = 8;
+/// Keep probability when `--bp-schedule random` gives none.
+pub const DEFAULT_SUBSET_P: f32 = 0.5;
+/// Coin-flip stream seed when `--bp-schedule random` gives none.
+pub const DEFAULT_SUBSET_SEED: u64 = 0x5EED;
+/// Bin masks are one `u64` per chunk, so at most 63 usable bins.
+pub const MAX_BUCKET_BINS: u32 = 63;
+
+/// Message-commit schedule for one BP round — the frontier policy
+/// family (DESIGN.md §15). Every policy computes the same candidates;
+/// they differ only in which candidates commit each sweep, and in how
+/// much cross-worker coordination that decision costs.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub enum BpSchedule {
-    /// Jacobi: every message recomputed and committed each round.
+    /// Jacobi: every message recomputed and committed each round. No
+    /// fold stage — the commit rule is known before the sweep starts.
     Synchronous,
-    /// Residual frontier: every candidate is computed, but only
-    /// messages whose residual reaches `frontier * max_residual`
-    /// commit this round (the top of the residual distribution).
+    /// Exact residual frontier: only messages whose residual reaches
+    /// `frontier * max_residual` commit, with the max taken over
+    /// *this* sweep's residuals — which costs a serial `Reduce<Max>`
+    /// fold on one worker between barriers every sweep.
     #[default]
     Residual,
+    /// Relaxed residual frontier: threshold against the *previous*
+    /// sweep's max residual instead of this one's. The stale bound is
+    /// known before the sweep starts, so the steady-state region has
+    /// no serial fold stage and one fewer barrier than `Residual`;
+    /// the first sweep (no previous max) commits everything.
+    StaleResidual,
+    /// Splash-style priority approximation: residuals land in `bins`
+    /// log2 buckets relative to `tol` (bucket b covers
+    /// `[tol * 2^b, tol * 2^(b+1))`, the top bucket absorbs larger),
+    /// and only the highest non-empty bucket commits — a priority
+    /// queue to within 2x, with an O(bins) bitmask fold instead of a
+    /// global sort.
+    Bucketed {
+        /// Number of log2 residual buckets, in `[2, MAX_BUCKET_BINS]`.
+        bins: u32,
+    },
+    /// Relaxed randomized schedule: each directed message commits this
+    /// sweep with probability `p`, decided by a Pcg32 draw that is a
+    /// pure function of (seed, sweep index, message index) — the PR 9
+    /// proposal-stream construction — so the subset never depends on
+    /// execution order, chunking, device, or lane count. No fold
+    /// stage at all.
+    RandomizedSubset {
+        /// Per-(sweep, message) keep probability, in `(0, 1]`.
+        p: f32,
+        /// Stream seed; same seed = same subsets everywhere.
+        seed: u64,
+    },
 }
 
 impl BpSchedule {
+    /// Parse a schedule spec: `sync`, `residual`, `stale`,
+    /// `bucketed[:BINS]`, `random[:P[:SEED]]`. Parameterized specs
+    /// round-trip through [`BpSchedule::spec`].
     pub fn parse(s: &str) -> Result<Self> {
-        match s {
-            "sync" | "synchronous" => Ok(BpSchedule::Synchronous),
-            "residual" => Ok(BpSchedule::Residual),
-            _ => bail!("unknown bp schedule `{s}` (sync|residual)"),
-        }
+        let mut it = s.split(':');
+        let head = it.next().unwrap_or("");
+        let args: Vec<&str> = it.collect();
+        let at_most = |n: usize| -> Result<()> {
+            if args.len() > n {
+                bail!(
+                    "schedule `{head}` takes at most {n} parameter(s), \
+                     got `{s}`"
+                );
+            }
+            Ok(())
+        };
+        let out = match head {
+            "sync" | "synchronous" => {
+                at_most(0)?;
+                BpSchedule::Synchronous
+            }
+            "residual" => {
+                at_most(0)?;
+                BpSchedule::Residual
+            }
+            "stale" | "stale-residual" => {
+                at_most(0)?;
+                BpSchedule::StaleResidual
+            }
+            "bucketed" => {
+                at_most(1)?;
+                let bins = match args.first() {
+                    Some(b) => b.parse::<u32>().map_err(|_| {
+                        anyhow::anyhow!(
+                            "bucketed bin count `{b}` is not an integer"
+                        )
+                    })?,
+                    None => DEFAULT_BUCKET_BINS,
+                };
+                BpSchedule::Bucketed { bins }
+            }
+            "random" | "randomized" => {
+                at_most(2)?;
+                let p = match args.first() {
+                    Some(p) => p.parse::<f32>().map_err(|_| {
+                        anyhow::anyhow!(
+                            "randomized keep probability `{p}` is not \
+                             a number"
+                        )
+                    })?,
+                    None => DEFAULT_SUBSET_P,
+                };
+                let seed = match args.get(1) {
+                    Some(s) => s.parse::<u64>().map_err(|_| {
+                        anyhow::anyhow!(
+                            "randomized seed `{s}` is not an integer"
+                        )
+                    })?,
+                    None => DEFAULT_SUBSET_SEED,
+                };
+                BpSchedule::RandomizedSubset { p, seed }
+            }
+            _ => bail!(
+                "unknown bp schedule `{s}` \
+                 (sync|residual|stale|bucketed[:bins]|random[:p[:seed]])"
+            ),
+        };
+        out.validate()?;
+        Ok(out)
     }
 
+    /// Parameter bounds, shared by the CLI parse path and
+    /// `RunConfig::validate` (programmatic construction).
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            BpSchedule::Bucketed { bins } => {
+                if !(2..=MAX_BUCKET_BINS).contains(&bins) {
+                    bail!(
+                        "bucketed bin count must be in \
+                         [2, {MAX_BUCKET_BINS}], got {bins}: one bin \
+                         degenerates to the synchronous schedule"
+                    );
+                }
+            }
+            BpSchedule::RandomizedSubset { p, .. } => {
+                if !(p > 0.0 && p <= 1.0) {
+                    bail!(
+                        "randomized keep probability must be in \
+                         (0, 1], got {p}: 0 never commits anything"
+                    );
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// Policy family name (parameter-free): engine names and
+    /// flight-recorder samples.
     pub fn name(&self) -> &'static str {
         match self {
             BpSchedule::Synchronous => "sync",
             BpSchedule::Residual => "residual",
+            BpSchedule::StaleResidual => "stale",
+            BpSchedule::Bucketed { .. } => "bucketed",
+            BpSchedule::RandomizedSubset { .. } => "random",
         }
     }
+
+    /// Canonical spelling, parameters included: `parse(spec()) ==
+    /// *self`. This is what the JSON config and the run report carry.
+    pub fn spec(&self) -> String {
+        match *self {
+            BpSchedule::Bucketed { bins } => format!("bucketed:{bins}"),
+            BpSchedule::RandomizedSubset { p, seed } => {
+                format!("random:{p}:{seed}")
+            }
+            other => other.name().to_string(),
+        }
+    }
+}
+
+/// Scheduling statistics of one BP engine run, surfaced through
+/// `EmResult` into the run report (present-but-null for every other
+/// engine family — see `tests/report_schema.rs`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BpStats {
+    /// The frontier policy that produced the run.
+    pub schedule: BpSchedule,
+    /// Mean fraction of directed messages committed per sweep across
+    /// the run — 1.0 under `Synchronous` by construction, strictly
+    /// below 1.0 when a relaxed policy actually relaxes.
+    pub committed_frac: f64,
 }
 
 /// Belief-propagation hyperparameters (CLI: `--bp-*`; JSON: `"bp"`).
@@ -88,9 +257,10 @@ pub struct BpConfig {
     /// Convergence: stop sweeping when the max residual drops below.
     pub tol: f32,
     pub schedule: BpSchedule,
-    /// Residual schedule only: commit messages with
-    /// `residual >= frontier * max_residual`. 0 commits everything
-    /// (synchronous), 1 commits only the maximal-residual messages.
+    /// `Residual`/`StaleResidual` only: commit messages with
+    /// `residual >= frontier * max_residual` (exact or stale max
+    /// respectively). 0 commits everything (synchronous), 1 commits
+    /// only the maximal-residual messages.
     pub frontier: f32,
 }
 
@@ -123,6 +293,18 @@ pub fn solve(
     (labels, run)
 }
 
+/// The whole frontier-policy family with representative parameters —
+/// one list for the per-policy test batteries instead of per-file
+/// copies.
+#[cfg(test)]
+pub(crate) const ALL_SCHEDULES: [BpSchedule; 5] = [
+    BpSchedule::Synchronous,
+    BpSchedule::Residual,
+    BpSchedule::StaleResidual,
+    BpSchedule::Bucketed { bins: 8 },
+    BpSchedule::RandomizedSubset { p: 0.5, seed: 7 },
+];
+
 /// Shared small test fixture: a noisy porous slice, oversegmented and
 /// model-built serially. One definition for every bp submodule test
 /// (and `mrf`'s `config_energy` test) instead of per-file copies.
@@ -146,12 +328,60 @@ mod tests {
 
     #[test]
     fn schedule_parse_round_trip() {
-        for s in ["sync", "residual"] {
+        for s in ["sync", "residual", "stale"] {
             assert_eq!(BpSchedule::parse(s).unwrap().name(), s);
         }
         assert_eq!(BpSchedule::parse("synchronous").unwrap(),
                    BpSchedule::Synchronous);
+        assert_eq!(BpSchedule::parse("stale-residual").unwrap(),
+                   BpSchedule::StaleResidual);
         assert!(BpSchedule::parse("chaotic").is_err());
+    }
+
+    #[test]
+    fn parameterized_specs_round_trip() {
+        for s in ["sync", "residual", "stale", "bucketed:4",
+                  "bucketed:63", "random:0.25:9", "random:1:0"] {
+            let sched = BpSchedule::parse(s).unwrap();
+            assert_eq!(BpSchedule::parse(&sched.spec()).unwrap(), sched,
+                       "spec {s}");
+        }
+        // Defaults fill omitted parameters.
+        assert_eq!(
+            BpSchedule::parse("bucketed").unwrap(),
+            BpSchedule::Bucketed { bins: DEFAULT_BUCKET_BINS }
+        );
+        assert_eq!(
+            BpSchedule::parse("random").unwrap(),
+            BpSchedule::RandomizedSubset {
+                p: DEFAULT_SUBSET_P,
+                seed: DEFAULT_SUBSET_SEED,
+            }
+        );
+        assert_eq!(
+            BpSchedule::parse("random:0.75").unwrap(),
+            BpSchedule::RandomizedSubset {
+                p: 0.75,
+                seed: DEFAULT_SUBSET_SEED,
+            }
+        );
+    }
+
+    #[test]
+    fn invalid_schedule_parameters_are_rejected() {
+        for bad in ["bucketed:1", "bucketed:0", "bucketed:64",
+                    "bucketed:x", "random:0", "random:-0.5", "random:1.5",
+                    "random:nope", "random:0.5:notanint",
+                    "sync:extra", "stale:extra", "random:0.5:1:extra"] {
+            assert!(BpSchedule::parse(bad).is_err(), "should reject {bad}");
+        }
+        assert!(BpSchedule::Bucketed { bins: 1 }.validate().is_err());
+        assert!(BpSchedule::RandomizedSubset { p: 0.0, seed: 1 }
+            .validate()
+            .is_err());
+        assert!(BpSchedule::RandomizedSubset { p: f32::NAN, seed: 1 }
+            .validate()
+            .is_err());
     }
 
     #[test]
@@ -161,5 +391,8 @@ mod tests {
         assert!(c.frontier >= 0.0 && c.frontier <= 1.0);
         assert!(c.max_sweeps >= 1);
         assert!(c.tol > 0.0);
+        for sched in ALL_SCHEDULES {
+            sched.validate().unwrap();
+        }
     }
 }

@@ -1,14 +1,21 @@
 //! Serial BP oracle — straight loops, no primitives, no chunking.
 //!
 //! Implements exactly the math of [`super::sweep`] (same per-edge
-//! update, same normalization, damping, frontier rule and tie-breaks)
-//! so tests can require *bitwise* equality against the DPP sweeps on
-//! any backend: the only cross-chunk reduction in the DPP path is an
-//! exact `max`, so no floating-point slack is needed.
+//! update, same normalization, damping, frontier policies and
+//! tie-breaks) so tests can require *bitwise* equality against the DPP
+//! sweeps on any backend: the only cross-chunk reductions in the DPP
+//! path are an exact `max` and a bitmask `or`, and every relaxed
+//! commit rule ([`BpSchedule::StaleResidual`]'s previous-sweep
+//! threshold, [`BpSchedule::Bucketed`]'s log2 bucket compare,
+//! [`BpSchedule::RandomizedSubset`]'s position-keyed coin flips — the
+//! very same [`super::sweep`] helpers) is a pure function of
+//! (position, sweep index), so no floating-point slack is needed for
+//! any policy.
 
 use crate::mrf::{energy, MrfModel, Params};
 
 use super::messages::BpGraph;
+use super::sweep::{residual_bin, subset_keeps};
 use super::{BpConfig, BpSchedule};
 
 /// Full serial BP run: returns (messages, labels, sweeps executed).
@@ -29,6 +36,11 @@ pub fn run_serial(
 
     let max_sweeps = cfg.max_sweeps.max(1);
     let mut sweeps = 0usize;
+    // Schedule clocks, mirroring a fresh `BpState`: the stale
+    // threshold starts with no previous max (sweep 1 commits
+    // everything) and the randomized coin stream starts at round 0.
+    let mut stale_max: Option<f32> = None;
+    let mut round = 0u64;
     for _ in 0..max_sweeps {
         sweeps += 1;
         beliefs_serial(model, g, &unary, &msg, &mut belief);
@@ -55,16 +67,52 @@ pub fn run_serial(
             resid[ed] = rr;
             r_max = r_max.max(rr);
         }
-        let tau = match cfg.schedule {
-            BpSchedule::Synchronous => 0.0,
-            BpSchedule::Residual => cfg.frontier * r_max,
-        };
-        for ed in 0..ne {
-            if resid[ed] >= tau {
-                msg[2 * ed] = cand[2 * ed];
-                msg[2 * ed + 1] = cand[2 * ed + 1];
+        // The frontier policy, in plain loops (DESIGN.md §15).
+        match cfg.schedule {
+            BpSchedule::Synchronous => {
+                for ed in 0..ne {
+                    msg[2 * ed] = cand[2 * ed];
+                    msg[2 * ed + 1] = cand[2 * ed + 1];
+                }
+            }
+            BpSchedule::Residual => {
+                let tau = cfg.frontier * r_max;
+                commit_threshold(&mut msg, &cand, &resid, tau);
+            }
+            BpSchedule::StaleResidual => {
+                let tau = stale_max.map_or(0.0, |m| cfg.frontier * m);
+                commit_threshold(&mut msg, &cand, &resid, tau);
+            }
+            BpSchedule::Bucketed { bins } => {
+                let top = resid
+                    .iter()
+                    .filter_map(|&rr| residual_bin(rr, cfg.tol, bins))
+                    .max();
+                for ed in 0..ne {
+                    let keep = match top {
+                        // Everything below tol: commit all, exactly
+                        // like the DPP path's empty-mask sentinel.
+                        None => true,
+                        Some(t) => residual_bin(resid[ed], cfg.tol, bins)
+                            .is_some_and(|b| b >= t),
+                    };
+                    if keep {
+                        msg[2 * ed] = cand[2 * ed];
+                        msg[2 * ed + 1] = cand[2 * ed + 1];
+                    }
+                }
+            }
+            BpSchedule::RandomizedSubset { p, seed } => {
+                for ed in 0..ne {
+                    if subset_keeps(seed, round, ed, p) {
+                        msg[2 * ed] = cand[2 * ed];
+                        msg[2 * ed + 1] = cand[2 * ed + 1];
+                    }
+                }
             }
         }
+        stale_max = Some(r_max);
+        round += 1;
         if r_max < cfg.tol && !fixed {
             break;
         }
@@ -75,6 +123,20 @@ pub fn run_serial(
         .map(|v| u8::from(belief[2 * v + 1] < belief[2 * v]))
         .collect();
     (msg, labels, sweeps)
+}
+
+fn commit_threshold(
+    msg: &mut [f32],
+    cand: &[f32],
+    resid: &[f32],
+    tau: f32,
+) {
+    for (ed, &rr) in resid.iter().enumerate() {
+        if rr >= tau {
+            msg[2 * ed] = cand[2 * ed];
+            msg[2 * ed + 1] = cand[2 * ed + 1];
+        }
+    }
 }
 
 fn unaries_serial(model: &MrfModel, prm: &Params) -> Vec<f32> {
@@ -117,6 +179,7 @@ fn beliefs_serial(
 mod tests {
     use super::*;
     use crate::bp::test_model as small_model;
+    use crate::bp::ALL_SCHEDULES;
     use crate::dpp::Backend;
     use crate::pool::Pool;
 
@@ -125,7 +188,7 @@ mod tests {
         let model = small_model(41);
         let prm = Params { mu: [60.0, 180.0], sigma: [25.0, 25.0],
                            beta: 0.5 };
-        for schedule in [BpSchedule::Synchronous, BpSchedule::Residual] {
+        for schedule in ALL_SCHEDULES {
             let cfg = BpConfig { schedule, ..Default::default() };
             let g = BpGraph::build(&Backend::Serial, &model, prm.beta);
             let (want_msg, want_labels, want_sweeps) =

@@ -1,23 +1,36 @@
 //! BP sweeps on a [`Backend`]: beliefs (gather + segmented reduce over
 //! the cached [`crate::dpp::SegmentPlan`] in [`BpGraph`]), candidate
-//! messages (map), residual max (exact reduce), and the frontier
-//! commit (map) — see the module docs of [`crate::bp`].
+//! messages (map), and the schedule-dispatched frontier commit — see
+//! the module docs of [`crate::bp`] and DESIGN.md §15.
 //!
-//! One sweep executes as **one** [`Pipeline`] region: the four passes
-//! are stages separated by phase barriers instead of four pool
-//! fork-joins, with the serial residual fold as a one-invocation stage
-//! between them. Per-stage time still lands in [`crate::dpp::timing`].
+//! One sweep executes as **one** [`Pipeline`] region with phase
+//! barriers between stages instead of pool fork-joins. How many stages
+//! the region has is the whole point of the frontier-policy family:
+//!
+//! * `Residual` and `Bucketed` need *this* sweep's residuals to pick
+//!   the frontier, so they keep the serial one-invocation fold stage
+//!   between the candidate map and the commit — four stages, three
+//!   barriers.
+//! * `Synchronous`, `StaleResidual`, and `RandomizedSubset` know their
+//!   commit rule before the sweep starts (commit everything, threshold
+//!   against the previous sweep's max, position-keyed coin flips), so
+//!   the fold stage is **gone**: three stages, two barriers, and the
+//!   exact residual max folds on the host after the region returns —
+//!   off the barrier-to-barrier critical path (Van der Merwe et al.
+//!   2019). The stage list under `--profile` shows the difference.
 //!
 //! Deterministic by construction: per-vertex and per-edge loops run in
-//! index order inside each chunk, chunks write disjoint slots, and the
-//! only cross-chunk reduction is `max` (exact, association-free). The
-//! serial oracle in [`super::serial`] reproduces every pass bitwise.
+//! index order inside each chunk, chunks write disjoint slots, the
+//! only cross-chunk reductions are `max` and bitmask-`or` (exact,
+//! association-free), and every relaxed commit rule is a pure function
+//! of (position, sweep index). The serial oracle in [`super::serial`]
+//! reproduces every pass bitwise.
 
 //! Allocation discipline — deny(hot-loop-alloc): a steady-state sweep
 //! allocates nothing. Every per-sweep tensor (candidates, residuals,
-//! chunk partials, the fold scalars) lives in [`BpState`], allocated
-//! once per run and resized within capacity thereafter; remaining
-//! allocations are annotated `alloc-ok` and checked by
+//! chunk partials, bin masks, the fold scalars) lives in [`BpState`],
+//! allocated once per run and resized within capacity thereafter;
+//! remaining allocations are annotated `alloc-ok` and checked by
 //! `ci/check_hot_loop_allocs.sh`. (The `Pipeline` stage boxing is the
 //! one known per-sweep residue — a few hundred bytes, see DESIGN.md
 //! §10.)
@@ -25,6 +38,7 @@
 use crate::dpp::core::SharedSlice;
 use crate::dpp::{Device, DeviceExt, Pipeline};
 use crate::mrf::{energy, MrfModel, Params};
+use crate::util::{splitmix64, Pcg32};
 
 use super::messages::BpGraph;
 use super::{BpConfig, BpSchedule};
@@ -41,13 +55,27 @@ pub struct BpState {
     cand: Vec<f32>,
     resid: Vec<f32>,
     belief: Vec<f32>,
-    /// Per-chunk residual maxima of stage 2 (one slot per grain-sized
-    /// chunk; sized lazily per sweep, within capacity once warm).
+    /// Per-chunk residual maxima of the candidate map (one slot per
+    /// grain-sized chunk; sized lazily per sweep, within capacity once
+    /// warm).
     partial_max: Vec<f32>,
-    /// Per-chunk commit counts of stage 4.
+    /// Per-chunk commit counts of the frontier commit stage.
     partial_cnt: Vec<usize>,
-    /// `[max_residual, tau]`, published by the serial fold stage.
+    /// Per-chunk log2-bin occupancy bitmasks (`Bucketed` only: bit b
+    /// set when some residual in the chunk lands in bin b).
+    partial_bins: Vec<u64>,
+    /// `[max_residual, commit gate]` — written by the serial fold
+    /// stage for the fold-keeping schedules, by the host epilogue for
+    /// the fold-free ones.
     scalars: Vec<f32>,
+    /// Previous sweep's exact max residual (`StaleResidual` only):
+    /// `None` before the first sweep, which therefore commits
+    /// everything — the pinned first-sweep semantics.
+    stale_max: Option<f32>,
+    /// Sweeps executed on this state since construction/reset — the
+    /// `RandomizedSubset` coin-flip round coordinate. Advances
+    /// identically everywhere because sweep counts are deterministic.
+    round: u64,
 }
 
 impl BpState {
@@ -57,15 +85,22 @@ impl BpState {
             cand: vec![0.0; 2 * num_edges],     // alloc-ok: once per run
             resid: vec![0.0; num_edges],        // alloc-ok: once per run
             belief: vec![0.0; 2 * num_vertices], // alloc-ok: once per run
-            partial_max: Vec::new(), // alloc-ok: empty, sized on use
-            partial_cnt: Vec::new(), // alloc-ok: empty, sized on use
-            scalars: Vec::new(),     // alloc-ok: empty, sized on use
+            partial_max: Vec::new(),  // alloc-ok: empty, sized on use
+            partial_cnt: Vec::new(),  // alloc-ok: empty, sized on use
+            partial_bins: Vec::new(), // alloc-ok: empty, sized on use
+            scalars: Vec::new(),      // alloc-ok: empty, sized on use
+            stale_max: None,
+            round: 0,
         }
     }
 
-    /// Zero all messages (cold start).
+    /// Zero all messages and restart the schedule clocks (cold start):
+    /// the stale threshold forgets its previous max and the randomized
+    /// coin-flip stream rewinds to round 0.
     pub fn reset(&mut self) {
         self.msg.fill(0.0);
+        self.stale_max = None;
+        self.round = 0;
     }
 }
 
@@ -84,6 +119,71 @@ pub struct BpRun {
     pub sweeps: usize,
     pub max_residual: f32,
     pub converged: bool,
+    /// Total messages committed across all sweeps — the numerator of
+    /// the committed fraction the run report carries.
+    pub updated_total: usize,
+}
+
+impl BpRun {
+    /// Mean fraction of directed messages committed per sweep (1.0
+    /// under the synchronous schedule by construction).
+    pub fn committed_frac(&self, num_edges: usize) -> f64 {
+        self.updated_total as f64
+            / (self.sweeps.max(1) * num_edges.max(1)) as f64
+    }
+}
+
+/// Log2 bucket of a residual relative to `tol`, clamped to `bins`
+/// buckets: bucket b covers `[tol * 2^b, tol * 2^(b+1))` and the top
+/// bucket absorbs everything larger; residuals below `tol` (already
+/// converged — committing them cannot change the fixed point) occupy
+/// no bucket. Pure exponent arithmetic on the f32 bit pattern: no
+/// libm, bitwise identical on every device.
+#[inline]
+pub(super) fn residual_bin(rr: f32, tol: f32, bins: u32) -> Option<u32> {
+    if !(rr >= tol) {
+        return None; // below tol, or NaN-poisoned: never prioritized
+    }
+    let e = (((rr / tol).to_bits() >> 23) & 0xff) as i32 - 127;
+    Some((e.max(0) as u32).min(bins - 1))
+}
+
+/// `RandomizedSubset` coin flip for message `ed` on sweep `round`: a
+/// pure function of (seed, round, position) in the PR 9
+/// proposal-stream style, so the kept subset never depends on
+/// execution order, chunking, device, or lane count — the schedule
+/// stays bitwise identical everywhere.
+#[inline]
+pub(super) fn subset_keeps(
+    seed: u64,
+    round: u64,
+    ed: usize,
+    p: f32,
+) -> bool {
+    let mut rng = Pcg32::new(
+        splitmix64(seed ^ round.wrapping_mul(0x9E37_79B9)),
+        ed as u64,
+    );
+    rng.f32() < p
+}
+
+/// Commit gate known *before* the sweep runs, for the schedules whose
+/// rule does not depend on this sweep's residuals — exactly the
+/// schedules whose pipeline region carries no serial fold stage.
+/// `None` means the schedule folds mid-pipeline (`Residual`,
+/// `Bucketed`).
+#[inline]
+fn static_gate(cfg: &BpConfig, stale_max: Option<f32>) -> Option<f32> {
+    match cfg.schedule {
+        BpSchedule::Synchronous => Some(0.0),
+        // First sweep: no previous max, threshold 0, commit all.
+        BpSchedule::StaleResidual => {
+            Some(stale_max.map_or(0.0, |m| cfg.frontier * m))
+        }
+        // Coins gate the commit; the residual threshold is unused.
+        BpSchedule::RandomizedSubset { .. } => Some(0.0),
+        BpSchedule::Residual | BpSchedule::Bucketed { .. } => None,
+    }
 }
 
 /// Unary energies, two per vertex: the Gaussian data term weighted by
@@ -194,9 +294,10 @@ fn edge_grain(bk: &dyn Device, ne: usize) -> usize {
     bk.grain().min(ne.max(1)).max(1)
 }
 
-/// One BP round under the configured schedule, executed as a single
-/// fused pipeline region: beliefs -> candidates (+ per-chunk residual
-/// maxima) -> serial residual fold + frontier threshold -> commit.
+/// One BP round under the configured frontier policy, executed as a
+/// single fused pipeline region: beliefs -> candidates (+ per-chunk
+/// residual maxima and, for `Bucketed`, bin masks) -> [serial fold,
+/// only when the policy needs this sweep's residuals] -> commit.
 pub fn sweep(
     bk: &dyn Device,
     model: &MrfModel,
@@ -215,8 +316,12 @@ pub fn sweep(
     st.partial_max.resize(slots, 0.0);
     st.partial_cnt.clear();
     st.partial_cnt.resize(slots, 0);
+    st.partial_bins.clear();
+    st.partial_bins.resize(slots, 0);
     st.scalars.clear();
     st.scalars.resize(2, 0.0);
+    let round = st.round;
+    let gate = static_gate(cfg, st.stale_max);
     {
         let w_msg = SharedSlice::new(&mut st.msg);
         let w_cand = SharedSlice::new(&mut st.cand);
@@ -224,19 +329,33 @@ pub fn sweep(
         let w_belief = SharedSlice::new(&mut st.belief);
         let w_pmax = SharedSlice::new(&mut st.partial_max);
         let w_pcnt = SharedSlice::new(&mut st.partial_cnt);
+        let w_pbin = SharedSlice::new(&mut st.partial_bins);
         let w_scal = SharedSlice::new(&mut st.scalars);
         let damping = cfg.damping;
         let schedule = cfg.schedule;
         let frontier = cfg.frontier;
-        Pipeline::new()
+        let tol = cfg.tol;
+        // Policy parameters hoisted to block scope so the stage
+        // closures can borrow them for the pipeline's lifetime.
+        let bucket_bins = match schedule {
+            BpSchedule::Bucketed { bins } => bins,
+            _ => 0,
+        };
+        let (keep_p, keep_seed) = match schedule {
+            BpSchedule::RandomizedSubset { p, seed } => (p, seed),
+            _ => (1.0, 0),
+        };
+        let p = Pipeline::new()
             // (1) Beliefs: Gather(rev) + segmented reduce per vertex.
             .stage("Gather", nv, |s, e| {
                 beliefs_chunk(g, unary, &w_msg, &w_belief, s, e);
             })
             // (2) Candidates: min-sum Potts update, normalization,
-            // damping, per-message residuals + per-chunk max.
+            // damping, per-message residuals + per-chunk max (and
+            // per-chunk bin-occupancy masks under Bucketed).
             .stage_with_grain("Map", ne, grain, |s, e| {
                 let mut mx = 0.0f32;
+                let mut mask = 0u64;
                 for ed in s..e {
                     let u = g.src[ed] as usize;
                     let r = g.rev[ed] as usize;
@@ -261,31 +380,129 @@ pub fn sweep(
                         w_cand.write(2 * ed + 1, n1);
                         w_resid.write(ed, rr);
                     }
+                    if bucket_bins > 0 {
+                        if let Some(b) = residual_bin(rr, tol, bucket_bins)
+                        {
+                            mask |= 1 << b;
+                        }
+                    }
                     mx = mx.max(rr);
                 }
                 let slot = s / grain;
                 let old = unsafe { w_pmax.read(slot) };
                 unsafe { w_pmax.write(slot, old.max(mx)) };
-            })
-            // (3) Exact Reduce<Max> over the chunk maxima + the
-            // frontier threshold, on one worker between barriers.
-            .serial_stage("Reduce", || {
+                if bucket_bins > 0 {
+                    let old = unsafe { w_pbin.read(slot) };
+                    unsafe { w_pbin.write(slot, old | mask) };
+                }
+            });
+        // (3) The mid-pipeline serial fold — ONLY for the schedules
+        // whose commit rule depends on this sweep's residuals. The
+        // fold-free schedules skip the stage (and its barrier)
+        // entirely: this conditional is the headline perf change of
+        // the frontier-policy family (DESIGN.md §15).
+        let p = if gate.is_none() {
+            p.serial_stage("Reduce", || {
                 let mut mx = 0.0f32;
                 for i in 0..slots {
                     mx = mx.max(unsafe { w_pmax.read(i) });
                 }
-                let tau = match schedule {
-                    BpSchedule::Synchronous => 0.0,
+                let published = match schedule {
+                    // Exact frontier: a residual threshold.
                     BpSchedule::Residual => frontier * mx,
+                    // Splash approximation: the top non-empty bucket
+                    // index (commit-all sentinel -1 when every
+                    // residual is already below tol).
+                    BpSchedule::Bucketed { .. } => {
+                        let mut bins = 0u64;
+                        for i in 0..slots {
+                            bins |= unsafe { w_pbin.read(i) };
+                        }
+                        if bins == 0 {
+                            -1.0
+                        } else {
+                            (63 - bins.leading_zeros()) as f32
+                        }
+                    }
+                    // Fold-free schedules never build this stage.
+                    _ => 0.0,
                 };
                 unsafe {
                     w_scal.write(0, mx);
-                    w_scal.write(1, tau);
+                    w_scal.write(1, published);
                 }
             })
-            // (4) Commit the frontier (residual >= tau).
-            .stage_with_grain("Scatter", ne, grain, |s, e| {
-                let tau = unsafe { w_scal.read(1) };
+        } else {
+            p
+        };
+        // (4) Commit the frontier. A separate post-barrier stage for
+        // every policy: fusing it into the candidate map would let a
+        // chunk read messages a neighbor chunk already overwrote —
+        // Gauss-Seidel races that break bitwise determinism.
+        let p = match schedule {
+            BpSchedule::RandomizedSubset { .. } => {
+                p.stage_with_grain("Scatter", ne, grain, |s, e| {
+                    let mut cnt = 0usize;
+                    for ed in s..e {
+                        if subset_keeps(keep_seed, round, ed, keep_p) {
+                            unsafe {
+                                w_msg.write(2 * ed, w_cand.read(2 * ed));
+                                w_msg.write(
+                                    2 * ed + 1,
+                                    w_cand.read(2 * ed + 1),
+                                );
+                            }
+                            cnt += 1;
+                        }
+                    }
+                    let slot = s / grain;
+                    let old = unsafe { w_pcnt.read(slot) };
+                    unsafe { w_pcnt.write(slot, old + cnt) };
+                })
+            }
+            BpSchedule::Bucketed { .. } => {
+                p.stage_with_grain("Scatter", ne, grain, |s, e| {
+                    // Re-derive each residual's bucket and compare to
+                    // the published top — exactly consistent with the
+                    // fold's occupancy mask, so the commit set is
+                    // never empty while any residual reaches tol.
+                    let top = unsafe { w_scal.read(1) };
+                    let mut cnt = 0usize;
+                    for ed in s..e {
+                        let keep = if top < 0.0 {
+                            true
+                        } else {
+                            residual_bin(
+                                unsafe { w_resid.read(ed) },
+                                tol,
+                                bucket_bins,
+                            )
+                            .is_some_and(|b| b >= top as u32)
+                        };
+                        if keep {
+                            unsafe {
+                                w_msg.write(2 * ed, w_cand.read(2 * ed));
+                                w_msg.write(
+                                    2 * ed + 1,
+                                    w_cand.read(2 * ed + 1),
+                                );
+                            }
+                            cnt += 1;
+                        }
+                    }
+                    let slot = s / grain;
+                    let old = unsafe { w_pcnt.read(slot) };
+                    unsafe { w_pcnt.write(slot, old + cnt) };
+                })
+            }
+            // Threshold schedules: tau is either the static gate
+            // (Synchronous, StaleResidual) or the fold's output
+            // (Residual).
+            _ => p.stage_with_grain("Scatter", ne, grain, |s, e| {
+                let tau = match gate {
+                    Some(t) => t,
+                    None => unsafe { w_scal.read(1) },
+                };
                 let mut cnt = 0usize;
                 for ed in s..e {
                     if unsafe { w_resid.read(ed) } >= tau {
@@ -300,9 +517,26 @@ pub fn sweep(
                 let slot = s / grain;
                 let old = unsafe { w_pcnt.read(slot) };
                 unsafe { w_pcnt.write(slot, old + cnt) };
-            })
-            .run(bk);
+            }),
+        };
+        p.run(bk);
     }
+    // Host epilogue for the fold-free schedules: the exact max over
+    // the handful of chunk partials, off the barrier critical path.
+    // Bitwise equal to the in-pipeline fold — identical loop over
+    // identical slots — so `max_residual` (and therefore convergence)
+    // is schedule-placement-independent.
+    if gate.is_some() {
+        let mut mx = 0.0f32;
+        for &v in &st.partial_max {
+            mx = mx.max(v);
+        }
+        st.scalars[0] = mx;
+    }
+    if matches!(cfg.schedule, BpSchedule::StaleResidual) {
+        st.stale_max = Some(st.scalars[0]);
+    }
+    st.round += 1;
     SweepStats {
         max_residual: st.scalars[0],
         updated: st.partial_cnt.iter().sum(),
@@ -325,7 +559,9 @@ pub fn run(
     em: usize,
 ) -> BpRun {
     let max_sweeps = cfg.max_sweeps.max(1);
+    let ne = g.num_edges();
     let mut last = 0.0f32;
+    let mut updated_total = 0usize;
     for s in 0..max_sweeps {
         // Sweep-level trace span (the BP analogue of a MAP iteration);
         // inert — no clock read, no allocation — unless a tracer is
@@ -335,6 +571,7 @@ pub fn run(
         );
         let stats = sweep(bk, model, g, unary, st, cfg);
         last = stats.max_residual;
+        updated_total += stats.updated;
         // Flight-recorder hook (DESIGN.md §13): one relaxed load when
         // off; sample fields are already computed by the sweep.
         if crate::obs::live() {
@@ -344,15 +581,17 @@ pub fn run(
                 stats.max_residual as f64,
                 cfg.damping as f64,
                 stats.updated as u64,
+                cfg.schedule.name(),
+                stats.updated as f64 / ne.max(1) as f64,
             );
         }
         if last < cfg.tol && !fixed {
             return BpRun { sweeps: s + 1, max_residual: last,
-                           converged: true };
+                           converged: true, updated_total };
         }
     }
     BpRun { sweeps: max_sweeps, max_residual: last,
-            converged: last < cfg.tol }
+            converged: last < cfg.tol, updated_total }
 }
 
 /// Decode labels from the current messages: recompute beliefs, take
@@ -389,6 +628,7 @@ pub fn decode(
 mod tests {
     use super::*;
     use crate::bp::test_model as small_model;
+    use crate::bp::ALL_SCHEDULES;
     use crate::dpp::Backend;
     use crate::pool::Pool;
 
@@ -413,7 +653,7 @@ mod tests {
     }
 
     #[test]
-    fn residual_schedule_updates_fewer_messages_per_round() {
+    fn relaxed_schedules_update_fewer_messages_per_round() {
         let model = small_model(32);
         let prm = test_params();
         let g = BpGraph::build(&Backend::Serial, &model, prm.beta);
@@ -426,19 +666,124 @@ mod tests {
                        &sync);
         assert_eq!(s1.updated, g.num_edges(), "sync commits everything");
 
-        let res = BpConfig { schedule: BpSchedule::Residual,
-                             frontier: 0.5, ..Default::default() };
+        for schedule in [
+            BpSchedule::Residual,
+            BpSchedule::Bucketed { bins: 8 },
+            BpSchedule::RandomizedSubset { p: 0.5, seed: 7 },
+        ] {
+            let cfg = BpConfig { schedule, frontier: 0.5,
+                                 ..Default::default() };
+            let s = sweep(&Backend::Serial, &model, &g, &unary, &mut st,
+                          &cfg);
+            assert!(s.updated <= g.num_edges(), "{schedule:?}");
+            assert!(s.updated > 0,
+                    "{schedule:?}: frontier never empty while r_max > 0");
+        }
+    }
+
+    #[test]
+    fn stale_residual_first_sweep_commits_everything() {
+        // The pinned edge case (DESIGN.md §15): no previous max means
+        // threshold 0, so sweep 1 is synchronous; later sweeps relax.
+        let model = small_model(36);
+        let prm = test_params();
+        let g = BpGraph::build(&Backend::Serial, &model, prm.beta);
+        let unary = unaries(&Backend::Serial, &model, &prm);
+        let mut st = BpState::new(g.num_edges(), model.num_vertices());
+        let cfg = BpConfig { schedule: BpSchedule::StaleResidual,
+                             ..Default::default() };
+        let s1 = sweep(&Backend::Serial, &model, &g, &unary, &mut st,
+                       &cfg);
+        assert_eq!(s1.updated, g.num_edges(),
+                   "no previous max => commit everything");
         let s2 = sweep(&Backend::Serial, &model, &g, &unary, &mut st,
-                       &res);
-        assert!(s2.updated <= g.num_edges());
-        assert!(s2.updated > 0, "frontier is never empty while r_max > 0");
+                       &cfg);
+        assert!(s2.updated < g.num_edges(),
+                "second sweep thresholds against sweep 1's max");
+        // Reset restores the commit-everything first-sweep semantics.
+        st.reset();
+        let s3 = sweep(&Backend::Serial, &model, &g, &unary, &mut st,
+                       &cfg);
+        assert_eq!(s3.updated, g.num_edges(), "reset forgets the max");
+        assert_eq!(s3.max_residual.to_bits(), s1.max_residual.to_bits(),
+                   "reset reproduces sweep 1 bitwise");
+    }
+
+    #[test]
+    fn fold_free_schedules_have_no_reduce_stage() {
+        // The acceptance criterion of ISSUE 10 made mechanical: under
+        // the timing profiler, a Residual/Bucketed sweep records a
+        // serial "Reduce" stage and the fold-free schedules do not —
+        // one fewer stage, one fewer barrier.
+        let model = small_model(37);
+        let prm = test_params();
+        let g = BpGraph::build(&Backend::Serial, &model, prm.beta);
+        let unary = unaries(&Backend::Serial, &model, &prm);
+        let _guard = crate::dpp::timing::test_lock();
+        for (schedule, folds) in [
+            (BpSchedule::Residual, true),
+            (BpSchedule::Bucketed { bins: 8 }, true),
+            (BpSchedule::Synchronous, false),
+            (BpSchedule::StaleResidual, false),
+            (BpSchedule::RandomizedSubset { p: 0.5, seed: 7 }, false),
+        ] {
+            let cfg = BpConfig { schedule, ..Default::default() };
+            let mut st =
+                BpState::new(g.num_edges(), model.num_vertices());
+            crate::dpp::timing::set_enabled(true);
+            crate::dpp::timing::reset();
+            // Two sweeps: the steady state, not just the first round.
+            sweep(&Backend::Serial, &model, &g, &unary, &mut st, &cfg);
+            sweep(&Backend::Serial, &model, &g, &unary, &mut st, &cfg);
+            let snap = crate::dpp::timing::snapshot();
+            crate::dpp::timing::set_enabled(false);
+            assert_eq!(snap.contains_key("Reduce"), folds,
+                       "{schedule:?} stage list: {:?}",
+                       snap.keys().collect::<Vec<_>>());
+            assert!(snap.contains_key("Scatter"), "{schedule:?}");
+        }
+    }
+
+    #[test]
+    fn residual_bin_is_exact_log2_of_the_ratio() {
+        let tol = 1e-3f32;
+        assert_eq!(residual_bin(0.0, tol, 8), None);
+        assert_eq!(residual_bin(tol * 0.999, tol, 8), None);
+        assert_eq!(residual_bin(tol, tol, 8), Some(0));
+        assert_eq!(residual_bin(tol * 1.999, tol, 8), Some(0));
+        assert_eq!(residual_bin(tol * 2.0, tol, 8), Some(1));
+        assert_eq!(residual_bin(tol * 4.0, tol, 8), Some(2));
+        // The top bin absorbs everything larger.
+        assert_eq!(residual_bin(tol * 1e9, tol, 8), Some(7));
+        assert_eq!(residual_bin(f32::NAN, tol, 8), None);
+    }
+
+    #[test]
+    fn subset_coin_flips_are_position_keyed_and_seeded() {
+        // Pure function of (seed, round, position): recomputing gives
+        // the same answer, and both round and seed decorrelate.
+        let a: Vec<bool> =
+            (0..256).map(|ed| subset_keeps(9, 3, ed, 0.5)).collect();
+        let b: Vec<bool> =
+            (0..256).map(|ed| subset_keeps(9, 3, ed, 0.5)).collect();
+        assert_eq!(a, b);
+        let other_round: Vec<bool> =
+            (0..256).map(|ed| subset_keeps(9, 4, ed, 0.5)).collect();
+        assert_ne!(a, other_round);
+        let other_seed: Vec<bool> =
+            (0..256).map(|ed| subset_keeps(8, 3, ed, 0.5)).collect();
+        assert_ne!(a, other_seed);
+        // p = 1 keeps everything.
+        assert!((0..256).all(|ed| subset_keeps(9, 3, ed, 1.0)));
+        let kept = a.iter().filter(|&&k| k).count();
+        assert!((64..=192).contains(&kept), "p=0.5 kept {kept}/256");
     }
 
     #[test]
     fn backends_produce_bitwise_identical_messages() {
         let model = small_model(33);
         let prm = test_params();
-        for schedule in [BpSchedule::Synchronous, BpSchedule::Residual] {
+        for schedule in ALL_SCHEDULES {
             let cfg = BpConfig { schedule, ..Default::default() };
             let mut runs = Vec::new();
             for bk in [
@@ -449,7 +794,8 @@ mod tests {
                 let unary = unaries(&bk, &model, &prm);
                 let mut st = BpState::new(g.num_edges(),
                                           model.num_vertices());
-                let r = run(&bk, &model, &g, &unary, &mut st, &cfg, false);
+                let r = run(&bk, &model, &g, &unary, &mut st, &cfg,
+                            false, 0);
                 runs.push((st.msg.clone(), r));
             }
             assert_eq!(runs[0].0, runs[1].0, "{schedule:?} messages");
@@ -466,7 +812,9 @@ mod tests {
         let mut st = BpState::new(g.num_edges(), model.num_vertices());
         let cfg = BpConfig { max_sweeps: 7, ..Default::default() };
         let r = run(&Backend::Serial, &model, &g, &unary, &mut st, &cfg,
-                    true);
+                    true, 0);
         assert_eq!(r.sweeps, 7);
+        assert!(r.updated_total <= 7 * g.num_edges());
+        assert!(r.committed_frac(g.num_edges()) <= 1.0);
     }
 }

@@ -481,6 +481,7 @@ impl RunConfig {
         if self.mrf.window == 0 {
             bail!("mrf.window must be >= 1");
         }
+        self.bp.schedule.validate()?;
         if !(0.0..1.0).contains(&self.bp.damping) {
             bail!("bp.damping must be in [0, 1)");
         }
@@ -573,7 +574,7 @@ impl RunConfig {
                 ("damping", (self.bp.damping as f64).into()),
                 ("max_sweeps", self.bp.max_sweeps.into()),
                 ("tol", (self.bp.tol as f64).into()),
-                ("schedule", self.bp.schedule.name().into()),
+                ("schedule", Value::str(self.bp.schedule.spec())),
                 ("frontier", (self.bp.frontier as f64).into()),
             ])),
             ("dual", Value::object(vec![
@@ -664,6 +665,10 @@ mod tests {
         assert!(RunConfig::from_json(&v).is_err());
         let v = json::parse(r#"{"bp": {"schedule": "chaotic"}}"#).unwrap();
         assert!(RunConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"bp": {"schedule": "bucketed:1"}}"#).unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"bp": {"schedule": "random:1.5"}}"#).unwrap();
+        assert!(RunConfig::from_json(&v).is_err());
         let v = json::parse(r#"{"bp": {"max_sweeps": 0}}"#).unwrap();
         assert!(RunConfig::from_json(&v).is_err());
         let v = json::parse(r#"{"bp": {"tol": -1.0}}"#).unwrap();
@@ -733,6 +738,27 @@ mod tests {
         assert_eq!(cfg.bp.frontier, 0.75);
         // unspecified keys keep defaults
         assert_eq!(cfg.bp.tol, BpConfig::default().tol);
+    }
+
+    #[test]
+    fn parameterized_bp_schedules_round_trip_through_json() {
+        for (spec, want) in [
+            ("stale", BpSchedule::StaleResidual),
+            ("bucketed:4", BpSchedule::Bucketed { bins: 4 }),
+            (
+                "random:0.25:99",
+                BpSchedule::RandomizedSubset { p: 0.25, seed: 99 },
+            ),
+        ] {
+            let v = json::parse(&format!(
+                r#"{{"bp": {{"schedule": "{spec}"}}}}"#
+            ))
+            .unwrap();
+            let cfg = RunConfig::from_json(&v).unwrap();
+            assert_eq!(cfg.bp.schedule, want, "parse {spec}");
+            let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(back.bp.schedule, want, "round-trip {spec}");
+        }
     }
 
     #[test]

@@ -65,6 +65,13 @@ pub struct SliceReport {
     /// Best decoded continuous (max-marginal) energy the particle
     /// solver reached on this slice; `None` unless pmp.
     pub pmp_max_marginal_energy: Option<f64>,
+    /// Canonical `--bp-schedule` spec (parameters included) of the
+    /// frontier policy that optimized this slice; `None` for every
+    /// engine family but BP (DESIGN.md §15).
+    pub bp_schedule: Option<String>,
+    /// Mean fraction of directed messages the policy committed per
+    /// sweep on this slice; `None` unless the BP engine ran it.
+    pub bp_committed_frac: Option<f64>,
 }
 
 /// Aggregated result of a full run.
@@ -182,6 +189,30 @@ impl RunReport {
             .sum::<Option<f64>>()
     }
 
+    /// Run-level BP frontier policy: the canonical schedule spec when
+    /// every slice ran the same one, else `None` (same
+    /// present-only-when-homogeneous contract as
+    /// [`Self::lower_bound`]).
+    pub fn bp_schedule(&self) -> Option<&str> {
+        let first = self.slices.first()?.bp_schedule.as_deref()?;
+        self.slices
+            .iter()
+            .all(|s| s.bp_schedule.as_deref() == Some(first))
+            .then_some(first)
+    }
+
+    /// Run-level committed fraction: mean of the per-slice means,
+    /// `None` unless every slice reports one (same contract as
+    /// [`Self::pmp_acceptance`]).
+    pub fn bp_committed_frac(&self) -> Option<f64> {
+        let sum = self
+            .slices
+            .iter()
+            .map(|s| s.bp_committed_frac)
+            .sum::<Option<f64>>()?;
+        Some(sum / self.slices.len().max(1) as f64)
+    }
+
     /// JSON rendering for the README's tables / bench reports.
     pub fn to_json(&self) -> crate::json::Value {
         use crate::json::Value;
@@ -229,6 +260,14 @@ impl RunReport {
             ("pmp_acceptance", opt_f64(self.pmp_acceptance())),
             ("pmp_max_marginal_energy",
              opt_f64(self.pmp_max_marginal_energy())),
+            // BP frontier-policy deliverables (ISSUE 10, DESIGN.md
+            // §15): same present-but-null contract again.
+            ("bp_schedule",
+             match self.bp_schedule() {
+                 Some(s) => Value::str(s),
+                 None => Value::Null,
+             }),
+            ("bp_committed_frac", opt_f64(self.bp_committed_frac())),
             // Flight-recorder section (ISSUE 8): null when the
             // recorder was not armed, else counts + <= 256 points with
             // exact endpoints (full fidelity goes to --convergence-out).
@@ -311,6 +350,13 @@ impl RunReport {
                     ("pmp_acceptance", opt_f64(s.pmp_acceptance)),
                     ("pmp_max_marginal_energy",
                      opt_f64(s.pmp_max_marginal_energy)),
+                    ("bp_schedule",
+                     match &s.bp_schedule {
+                         Some(spec) => Value::str(spec.as_str()),
+                         None => Value::Null,
+                     }),
+                    ("bp_committed_frac",
+                     opt_f64(s.bp_committed_frac)),
                 ])
             })
             .collect();
@@ -540,6 +586,8 @@ impl Coordinator {
                 pmp_max_marginal_energy: res
                     .pmp
                     .map(|p| p.max_marginal_energy),
+                bp_schedule: res.bp.map(|b| b.schedule.spec()),
+                bp_committed_frac: res.bp.map(|b| b.committed_frac),
             }],
             confusion,
             porosity,

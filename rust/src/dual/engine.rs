@@ -167,6 +167,7 @@ impl Engine for DualEngine {
             params: prm,
             lower_bound: Some(lower),
             pmp: None,
+            bp: None,
         }
     }
 }

@@ -151,7 +151,9 @@ fn cmd_segment(args: &[String]) -> Result<()> {
         .opt("figures", "write PGM figure panels to this directory", None)
         .opt("report", "write a JSON run report here", None)
         .opt("artifacts", "XLA artifacts dir", Some("artifacts"))
-        .opt("bp-schedule", "bp engine: sync|residual message schedule",
+        .opt("bp-schedule",
+             "bp engine: message frontier policy \
+              (sync|residual|stale|bucketed[:bins]|random[:p[:seed]])",
              None)
         .opt("bp-damping", "bp engine: fraction of old message kept",
              None)
@@ -212,18 +214,44 @@ fn cmd_segment(args: &[String]) -> Result<()> {
     }
     cfg.artifacts_dir = PathBuf::from(m.get("artifacts").unwrap());
     if let Some(s) = m.get("bp-schedule") {
-        cfg.bp.schedule = BpSchedule::parse(s)?;
+        // Hard argument errors, not deferred config failures: a bad
+        // frontier policy should name the flag that carried it.
+        cfg.bp.schedule = BpSchedule::parse(s).map_err(|e| {
+            anyhow::anyhow!(
+                "--bp-schedule {s} is invalid: {e}. Valid forms: sync, \
+                 residual, stale, bucketed[:bins] (bins in [2, 63]), \
+                 random[:p[:seed]] (p in (0, 1])."
+            )
+        })?;
     }
     if let Some(d) = m.get_parse::<f32>("bp-damping")? {
+        if !(0.0..1.0).contains(&d) {
+            bail!("--bp-damping {d} is invalid: damping is the \
+                   fraction of the old message kept and must be in \
+                   [0, 1). Pass a value like 0.5, or drop the flag \
+                   for the default.");
+        }
         cfg.bp.damping = d;
     }
     if let Some(s) = m.get_parse::<usize>("bp-sweeps")? {
+        if s == 0 {
+            bail!("--bp-sweeps 0 is invalid: the bp engine needs at \
+                   least one sweep per EM iteration. Pass \
+                   --bp-sweeps 1 or higher, or drop the flag for the \
+                   default.");
+        }
         cfg.bp.max_sweeps = s;
     }
     if let Some(t) = m.get_parse::<f32>("bp-tol")? {
         cfg.bp.tol = t;
     }
     if let Some(f) = m.get_parse::<f32>("bp-frontier")? {
+        if !(0.0..=1.0).contains(&f) {
+            bail!("--bp-frontier {f} is invalid: the frontier ratio \
+                   scales the sweep's max residual and must be in \
+                   [0, 1]. Pass a value like 0.1, or drop the flag \
+                   for the default.");
+        }
         cfg.bp.frontier = f;
     }
     if let Some(i) = m.get_parse::<usize>("dual-iters")? {
@@ -455,5 +483,49 @@ mod tests {
         let msg = e.to_string();
         assert!(msg.contains("--dual-iters"), "{msg}");
         assert!(msg.contains("--dual-iters 1"), "{msg}");
+    }
+
+    #[test]
+    fn segment_rejects_invalid_bp_knobs() {
+        // Every bad BP knob dies during argument handling with the
+        // flag named — no dataset generation, no deferred config
+        // error that loses the flag's identity.
+        let table: &[(&str, &str, &str)] = &[
+            ("--bp-frontier", "-0.1", "--bp-frontier"),
+            ("--bp-frontier", "1.5", "--bp-frontier"),
+            ("--bp-damping", "1.0", "--bp-damping"),
+            ("--bp-damping", "-0.2", "--bp-damping"),
+            ("--bp-sweeps", "0", "--bp-sweeps"),
+            ("--bp-schedule", "bucketed:1", "--bp-schedule"),
+            ("--bp-schedule", "bucketed:64", "--bp-schedule"),
+            ("--bp-schedule", "random:1.5", "--bp-schedule"),
+            ("--bp-schedule", "random:0", "--bp-schedule"),
+            ("--bp-schedule", "chaotic", "--bp-schedule"),
+        ];
+        for (flag, value, needle) in table {
+            let e = super::cmd_segment(&args(&[flag, value]))
+                .expect_err("invalid bp knob must be rejected");
+            let msg = e.to_string();
+            assert!(
+                msg.contains(needle),
+                "{flag} {value}: error must name the flag: {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn segment_accepts_parameterized_bp_schedules() {
+        // Each relaxed frontier policy drives a real (tiny) run end
+        // to end through the CLI surface.
+        for spec in ["stale", "bucketed:4", "random:0.5:7"] {
+            super::cmd_segment(&args(&[
+                "--width", "16", "--height", "16", "--slices", "1",
+                "--engine", "bp", "--bp-schedule", spec,
+                "--bp-sweeps", "8",
+            ]))
+            .unwrap_or_else(|e| {
+                panic!("--bp-schedule {spec} should run: {e}")
+            });
+        }
     }
 }

@@ -251,6 +251,7 @@ fn drive_em(
         params: prm,
         lower_bound: None,
         pmp: None,
+        bp: None,
     }
 }
 

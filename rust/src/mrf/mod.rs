@@ -114,6 +114,10 @@ pub struct EmResult {
     /// max-marginal energy) from the particle max-product engine
     /// ([`crate::pmp`]); `None` for the discrete engines.
     pub pmp: Option<crate::pmp::PmpStats>,
+    /// Frontier-policy statistics (schedule + committed fraction)
+    /// from the BP engine ([`crate::bp`], DESIGN.md §15); `None` for
+    /// every other engine family.
+    pub bp: Option<crate::bp::BpStats>,
 }
 
 /// An EM/MAP optimization engine.

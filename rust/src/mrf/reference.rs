@@ -188,6 +188,7 @@ impl Engine for ReferenceEngine {
             params: prm,
             lower_bound: None,
             pmp: None,
+            bp: None,
         }
     }
 }

@@ -98,6 +98,7 @@ impl Engine for SerialEngine {
             params: prm,
             lower_bound: None,
             pmp: None,
+            bp: None,
         }
     }
 }

@@ -122,6 +122,7 @@ impl Engine for XlaEngine {
             params: prm,
             lower_bound: None,
             pmp: None,
+            bp: None,
         }
     }
 }
@@ -189,6 +190,7 @@ impl XlaEngine {
             params: prm,
             lower_bound: None,
             pmp: None,
+            bp: None,
         }
     }
 }

@@ -90,14 +90,19 @@ pub fn map_sample(em: usize, iter: usize, energy: f64, labels_changed: u64) {
     );
 }
 
-/// Record one BP sweep: the residual frontier's max residual, the
-/// damping in effect, and how many messages were updated.
+/// Record one BP sweep: the frontier's max residual, the damping in
+/// effect, how many messages were updated, which frontier policy ran
+/// the sweep (`BpSchedule::name`), and the fraction of directed
+/// messages it committed (DESIGN.md §15).
+#[allow(clippy::too_many_arguments)]
 pub fn bp_sample(
     em: usize,
     sweep: usize,
     max_residual: f64,
     damping: f64,
     updated: u64,
+    policy: &'static str,
+    committed_frac: f64,
 ) {
     if !live() {
         return;
@@ -106,7 +111,13 @@ pub fn bp_sample(
     recorder::push(
         em,
         sweep,
-        ConvPoint::Bp { max_residual, damping, updated },
+        ConvPoint::Bp {
+            max_residual,
+            damping,
+            updated,
+            policy,
+            committed_frac,
+        },
     );
 }
 
@@ -171,7 +182,7 @@ mod tests {
         // None of these may panic, observe, or arm anything.
         tick();
         map_sample(0, 0, 1.0, 2);
-        bp_sample(0, 1, 0.5, 0.5, 3);
+        bp_sample(0, 1, 0.5, 0.5, 3, "residual", 0.3);
         dual_sample(0, 2, 1.0, 2.0, 1.0);
         pmp_sample(0, 3, 1.0, 12, 4);
         assert!(drain().is_none());
@@ -183,7 +194,7 @@ mod tests {
         arm(16);
         assert!(armed() && live());
         map_sample(0, 0, -10.0, 7);
-        bp_sample(1, 3, 0.25, 0.5, 11);
+        bp_sample(1, 3, 0.25, 0.5, 11, "bucketed", 0.5);
         dual_sample(2, 5, -20.0, -18.5, 1.5);
         pmp_sample(3, 7, -31.5, 24, 9);
         let log = drain().expect("armed recorder drains Some");

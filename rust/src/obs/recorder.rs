@@ -37,8 +37,16 @@ pub const MIN_CAPACITY: usize = 2;
 pub enum ConvPoint {
     /// One MAP (Jacobi) iteration of a primal engine.
     Map { energy: f64, labels_changed: u64 },
-    /// One BP sweep over the residual frontier.
-    Bp { max_residual: f64, damping: f64, updated: u64 },
+    /// One BP sweep under a frontier policy (DESIGN.md §15): `policy`
+    /// is the schedule family name and `committed_frac` the fraction
+    /// of directed messages committed this sweep.
+    Bp {
+        max_residual: f64,
+        damping: f64,
+        updated: u64,
+        policy: &'static str,
+        committed_frac: f64,
+    },
     /// One dual block-coordinate ascent iteration.
     Dual { lower_bound: f64, primal: f64, gap: f64 },
     /// One particle max-product round: decoded continuous energy,
@@ -84,10 +92,18 @@ impl ConvSample {
                 fields.push(("labels_changed",
                              (labels_changed as usize).into()));
             }
-            ConvPoint::Bp { max_residual, damping, updated } => {
+            ConvPoint::Bp {
+                max_residual,
+                damping,
+                updated,
+                policy,
+                committed_frac,
+            } => {
                 fields.push(("max_residual", max_residual.into()));
                 fields.push(("damping", damping.into()));
                 fields.push(("updated", (updated as usize).into()));
+                fields.push(("policy", Value::str(policy)));
+                fields.push(("committed_frac", committed_frac.into()));
             }
             ConvPoint::Dual { lower_bound, primal, gap } => {
                 fields.push(("lower_bound", lower_bound.into()));
@@ -460,7 +476,9 @@ mod tests {
                     em: 0,
                     iter: 0,
                     point: ConvPoint::Bp { max_residual: 0.5,
-                                           damping: 0.5, updated: 9 },
+                                           damping: 0.5, updated: 9,
+                                           policy: "stale",
+                                           committed_frac: 0.75 },
                 },
                 ConvSample {
                     t_nanos: 2,
@@ -478,6 +496,10 @@ mod tests {
         let v0 = crate::json::parse(lines[0]).unwrap();
         assert_eq!(v0.get("kind").and_then(Value::as_str), Some("bp"));
         assert_eq!(v0.get("updated").and_then(Value::as_usize), Some(9));
+        assert_eq!(v0.get("policy").and_then(Value::as_str),
+                   Some("stale"));
+        assert_eq!(v0.get("committed_frac").and_then(Value::as_f64),
+                   Some(0.75));
         let v1 = crate::json::parse(lines[1]).unwrap();
         assert_eq!(v1.get("kind").and_then(Value::as_str), Some("dual"));
         assert_eq!(v1.get("gap").and_then(Value::as_f64), Some(2.0));

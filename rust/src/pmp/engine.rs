@@ -202,6 +202,7 @@ impl Engine for PmpEngine {
             params: prm,
             lower_bound: None,
             pmp: Some(stats),
+            bp: None,
         }
     }
 }

@@ -395,6 +395,8 @@ fn run_serial(
             pmp_max_marginal_energy: res
                 .pmp
                 .map(|p| p.max_marginal_energy),
+            bp_schedule: res.bp.map(|b| b.schedule.spec()),
+            bp_committed_frac: res.bp.map(|b| b.committed_frac),
         });
         crate::log_debug!(
             "slice {z}: {} regions, {} hoods, init {:.3}s opt {:.3}s",
@@ -632,6 +634,12 @@ where
                         pmp_max_marginal_energy: res
                             .pmp
                             .map(|p| p.max_marginal_energy),
+                        bp_schedule: res
+                            .bp
+                            .map(|b| b.schedule.spec()),
+                        bp_committed_frac: res
+                            .bp
+                            .map(|b| b.committed_frac),
                     });
                 }
                 (busy, timeline)

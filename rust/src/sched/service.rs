@@ -70,6 +70,11 @@ pub struct JobStats {
     /// Which serving SLOs this job violated (all false unless the
     /// service was built with thresholds — [`Service::with_options`]).
     pub slo: SloFlags,
+    /// The job ran to completion but the service withheld its report
+    /// because [`ServiceOptions::enforce_slo`] was set and the run's
+    /// certified optimality gap tripped `SloConfig.max_gap`. Distinct
+    /// from a run error: the engine succeeded, the certificate failed.
+    pub rejected: bool,
 }
 
 /// Completion slot one job's result is published through.
@@ -137,11 +142,23 @@ pub struct ServiceOptions {
     /// Seconds a **busy** lane may go without a heartbeat mark before
     /// [`Service::health`] reports it stalled. Idle lanes never stall.
     pub stall_window_secs: f64,
+    /// Act on the gap SLO instead of only counting it: a job whose
+    /// certified optimality gap exceeds `slo.max_gap` comes back as an
+    /// error (the report is withheld) and is counted under
+    /// `jobs_rejected` / `dpp_jobs_total{state="rejected"}`. Latency
+    /// SLOs stay observe-only — by the time they trip, the caller has
+    /// already paid the wall clock, so withholding the result would
+    /// only add insult.
+    pub enforce_slo: bool,
 }
 
 impl Default for ServiceOptions {
     fn default() -> ServiceOptions {
-        ServiceOptions { slo: SloConfig::default(), stall_window_secs: 30.0 }
+        ServiceOptions {
+            slo: SloConfig::default(),
+            stall_window_secs: 30.0,
+            enforce_slo: false,
+        }
     }
 }
 
@@ -177,6 +194,10 @@ pub struct ServiceHealth {
     pub jobs_completed: u64,
     /// Subset of completed jobs that panicked inside the run.
     pub jobs_panicked: u64,
+    /// Subset of completed jobs whose report was withheld because the
+    /// certified gap tripped an **enforced** SLO
+    /// ([`ServiceOptions::enforce_slo`]).
+    pub jobs_rejected: u64,
     /// Per-SLO violation totals (jobs may violate several at once).
     pub slo_gap_violations: u64,
     pub slo_queue_wait_violations: u64,
@@ -234,6 +255,7 @@ struct Counters {
     admitted: AtomicU64,
     completed: AtomicU64,
     panicked: AtomicU64,
+    rejected: AtomicU64,
     slo_gap: AtomicU64,
     slo_queue_wait: AtomicU64,
     slo_job_latency: AtomicU64,
@@ -345,6 +367,7 @@ impl Service {
             jobs_admitted: c.admitted.load(Ordering::Relaxed),
             jobs_completed: c.completed.load(Ordering::Relaxed),
             jobs_panicked: c.panicked.load(Ordering::Relaxed),
+            jobs_rejected: c.rejected.load(Ordering::Relaxed),
             slo_gap_violations: c.slo_gap.load(Ordering::Relaxed),
             slo_queue_wait_violations: c.slo_queue_wait.load(Ordering::Relaxed),
             slo_job_latency_violations: c
@@ -372,6 +395,8 @@ impl Service {
                  h.jobs_completed as f64);
         w.sample("dpp_jobs_total", &[("state", "panicked")],
                  h.jobs_panicked as f64);
+        w.sample("dpp_jobs_total", &[("state", "rejected")],
+                 h.jobs_rejected as f64);
         w.family("dpp_slo_violations_total", "counter",
                  "Jobs that violated a serving SLO, by threshold.");
         w.sample("dpp_slo_violations_total", &[("slo", "gap")],
@@ -531,7 +556,31 @@ fn worker_loop(shared: &Shared, w: usize) {
             wait.as_secs_f64(),
             exec.as_secs_f64(),
         );
+        // SLO follow-through (DESIGN.md §13): an enforcing service
+        // withholds reports whose certificate tripped max_gap. Only the
+        // gap SLO rejects — it judges answer quality, not elapsed time.
+        let rejected = shared.opts.enforce_slo && slo.gap;
+        let res = if rejected {
+            let gap = res
+                .as_ref()
+                .ok()
+                .and_then(RunReport::optimality_gap)
+                .unwrap_or(f64::NAN);
+            let max = shared.opts.slo.max_gap.unwrap_or(f64::NAN);
+            Err(anyhow::anyhow!(
+                "job rejected: certified optimality gap {gap:.6e} \
+                 exceeds the enforced SLO max_gap {max:.6e}; relax the \
+                 threshold, raise the engine's iteration budget, or \
+                 disable ServiceOptions::enforce_slo to receive \
+                 best-effort reports"
+            ))
+        } else {
+            res
+        };
         let c = &shared.counters;
+        if rejected {
+            c.rejected.fetch_add(1, Ordering::Relaxed);
+        }
         if slo.gap {
             c.slo_gap.fetch_add(1, Ordering::Relaxed);
         }
@@ -552,6 +601,7 @@ fn worker_loop(shared: &Shared, w: usize) {
             queue_wait_secs: wait.as_secs_f64(),
             exec_secs: exec.as_secs_f64(),
             slo,
+            rejected,
         };
         {
             let mut agg = shared.latency.lock().unwrap();
@@ -737,6 +787,50 @@ mod tests {
         assert_eq!(h.slo_job_latency_violations, 1);
         assert_eq!(h.slo_gap_violations, 0);
         assert_eq!(h.slo_violations(), 1);
+    }
+
+    #[test]
+    fn enforced_gap_slo_rejects_certified_jobs() {
+        // max_gap = -1 is unsatisfiable for the dual engine: its
+        // certified gap is always >= 0, so enforcement must withhold
+        // the report deterministically (no timing dependence).
+        let opts = ServiceOptions {
+            slo: SloConfig { max_gap: Some(-1.0), ..Default::default() },
+            enforce_slo: true,
+            ..Default::default()
+        };
+        let service = Service::with_options(1, 2, opts);
+        let mut j = job(12, 1);
+        j.cfg.engine = EngineKind::Dual;
+        let (res, stats) = service.submit(j).wait_stats();
+        let msg = res.expect_err("enforced gap SLO must reject").to_string();
+        assert!(msg.contains("rejected"), "{msg}");
+        assert!(msg.contains("max_gap"), "{msg}");
+        assert!(stats.rejected);
+        assert!(stats.slo.gap);
+        let h = service.health();
+        assert_eq!(h.jobs_rejected, 1);
+        assert_eq!(h.jobs_completed, 1);
+        assert_eq!(h.slo_gap_violations, 1);
+        let text = service.metrics_text();
+        assert!(
+            text.contains("dpp_jobs_total{state=\"rejected\"} 1\n"),
+            "{text}"
+        );
+        // Same thresholds without enforcement: the violation is
+        // counted but the report comes back — observe-only default.
+        let observe = ServiceOptions {
+            slo: SloConfig { max_gap: Some(-1.0), ..Default::default() },
+            enforce_slo: false,
+            ..Default::default()
+        };
+        let service = Service::with_options(1, 2, observe);
+        let mut j = job(12, 1);
+        j.cfg.engine = EngineKind::Dual;
+        let (res, stats) = service.submit(j).wait_stats();
+        assert!(res.is_ok(), "observe-only SLO must not withhold");
+        assert!(stats.slo.gap && !stats.rejected);
+        assert_eq!(service.health().jobs_rejected, 0);
     }
 
     #[test]

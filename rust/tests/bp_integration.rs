@@ -15,6 +15,18 @@ use dpp_pmrf::mrf::{self, Engine, MrfModel, Params};
 use dpp_pmrf::overseg::oversegment;
 use dpp_pmrf::pool::Pool;
 
+mod common;
+
+/// Every frontier policy the scheduler family exposes (ISSUE 10),
+/// with fixed parameters so runs are reproducible.
+const ALL_POLICIES: [BpSchedule; 5] = [
+    BpSchedule::Synchronous,
+    BpSchedule::Residual,
+    BpSchedule::StaleResidual,
+    BpSchedule::Bucketed { bins: 8 },
+    BpSchedule::RandomizedSubset { p: 0.5, seed: 7 },
+];
+
 fn small_cfg(kind: DatasetKind, engine: EngineKind) -> RunConfig {
     RunConfig {
         dataset: DatasetConfig {
@@ -43,7 +55,7 @@ fn fixture_model(kind: DatasetKind) -> MrfModel {
 fn sweep_parity_serial_oracle_vs_dpp_backends() {
     let model = fixture_model(DatasetKind::Synthetic);
     let prm = Params { mu: [50.0, 190.0], sigma: [30.0, 30.0], beta: 0.5 };
-    for schedule in [BpSchedule::Synchronous, BpSchedule::Residual] {
+    for schedule in ALL_POLICIES {
         let cfg = BpConfig { schedule, ..Default::default() };
         let g = BpGraph::build(&Backend::Serial, &model, prm.beta);
         let (want_msg, want_labels, _) =
@@ -89,7 +101,7 @@ fn bp_energy_within_tolerance_of_serial_engine_on_fixtures() {
         let model = fixture_model(kind);
         let cfg = MrfConfig::default();
         let map = mrf::serial::SerialEngine.run(&model, &cfg);
-        for schedule in [BpSchedule::Synchronous, BpSchedule::Residual] {
+        for schedule in ALL_POLICIES {
             let bp_cfg = BpConfig { schedule, ..Default::default() };
             let bp_res =
                 BpEngine::new(Backend::Serial, bp_cfg).run(&model, &cfg);
@@ -121,14 +133,81 @@ fn bp_engine_through_coordinator_on_synthetic() {
 
 #[test]
 fn bp_config_round_trips_through_json() {
-    let mut cfg = small_cfg(DatasetKind::Synthetic, EngineKind::Bp);
-    cfg.bp = BpConfig {
-        damping: 0.25,
-        max_sweeps: 17,
-        tol: 1e-2,
-        schedule: BpSchedule::Synchronous,
-        frontier: 0.75,
-    };
-    let back = RunConfig::from_json(&cfg.to_json()).unwrap();
-    assert_eq!(back, cfg);
+    for schedule in ALL_POLICIES {
+        let mut cfg = small_cfg(DatasetKind::Synthetic, EngineKind::Bp);
+        cfg.bp = BpConfig {
+            damping: 0.25,
+            max_sweeps: 17,
+            tol: 1e-2,
+            schedule,
+            frontier: 0.75,
+        };
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg, "{schedule:?}");
+    }
+}
+
+#[test]
+fn every_policy_decodes_the_synchronous_labels_on_chains() {
+    // Chains are trees, so max-product BP is exact: whatever subset
+    // of messages a relaxed frontier defers, at convergence every
+    // policy must decode the same labeling the synchronous flood
+    // does. Decisive observations (common::chain_model) rule out
+    // near-tie flips.
+    let prm = common::fixed_params();
+    for seed in [3, 17, 99] {
+        let model = common::chain_model(40, seed);
+        let base_cfg = BpConfig {
+            max_sweeps: 400,
+            tol: 1e-6,
+            schedule: BpSchedule::Synchronous,
+            ..Default::default()
+        };
+        let g = BpGraph::build(&Backend::Serial, &model, prm.beta);
+        let (want, sync_run) =
+            bp::solve(&Backend::Serial, &model, &prm, &base_cfg);
+        assert!(sync_run.converged, "seed {seed}: sync must converge");
+        for schedule in ALL_POLICIES {
+            let cfg = BpConfig { schedule, ..base_cfg };
+            let (labels, run) =
+                bp::solve(&Backend::Serial, &model, &prm, &cfg);
+            assert!(run.converged,
+                    "seed {seed}/{schedule:?}: converged in {} sweeps",
+                    run.sweeps);
+            assert_eq!(labels, want, "seed {seed}/{schedule:?}");
+            // and the serial oracle agrees for the same policy
+            let (_, oracle_labels, oracle_sweeps) =
+                run_serial(&model, &g, &prm, &cfg, false);
+            assert!(oracle_sweeps <= cfg.max_sweeps,
+                    "seed {seed}/{schedule:?}");
+            assert_eq!(oracle_labels, want,
+                       "seed {seed}/{schedule:?} oracle");
+        }
+    }
+}
+
+#[test]
+fn relaxed_policies_are_bitwise_stable_across_scheduler_lanes() {
+    // Acceptance criterion (ISSUE 10): `--lanes` must not perturb any
+    // frontier policy — lane sharding changes which thread runs a
+    // slice, never what the slice computes.
+    for schedule in ALL_POLICIES {
+        let mut outputs = Vec::new();
+        for lanes in [1usize, 2, 4] {
+            let mut cfg =
+                small_cfg(DatasetKind::Synthetic, EngineKind::Bp);
+            cfg.bp.schedule = schedule;
+            cfg.sched.lanes = lanes;
+            let ds = image::generate(&cfg.dataset);
+            let report = Coordinator::new(cfg).unwrap().run(&ds).unwrap();
+            assert_eq!(
+                report.bp_schedule(),
+                Some(schedule.spec().as_str()),
+                "{schedule:?} lanes {lanes}: report names the policy"
+            );
+            outputs.push(report.output.data);
+        }
+        assert_eq!(outputs[0], outputs[1], "{schedule:?}: 1 vs 2 lanes");
+        assert_eq!(outputs[0], outputs[2], "{schedule:?}: 1 vs 4 lanes");
+    }
 }

@@ -56,6 +56,23 @@ pub fn grid_model(w: usize, h: usize, seed: u64) -> MrfModel {
     MrfModel { graph, y, hoods }
 }
 
+/// Chain (path) model on `grid_csr(1, n)` — a tree, so max-product BP
+/// is exact and every frontier policy must land on the same optimum.
+/// Observations are drawn from widely separated clusters around the
+/// two class means so the optimum is decisive: no near-ties that
+/// could flip a label under f32 reassociation or schedule changes.
+pub fn chain_model(n: usize, seed: u64) -> MrfModel {
+    let graph = grid_csr(1, n);
+    let cliques = mce::enumerate_serial(&graph);
+    let hoods = hoods::build_serial(&graph, &cliques, n);
+    let mut rng = Pcg32::seeded(seed);
+    const LEVELS: [f32; 4] = [50.0, 70.0, 170.0, 190.0];
+    let y: Vec<f32> = (0..n)
+        .map(|_| LEVELS[(rng.next_u32() % 4) as usize])
+        .collect();
+    MrfModel { graph, y, hoods }
+}
+
 /// Fixed scoring parameters for cross-engine comparisons: engines
 /// estimate their own (mu, sigma) per run, so quality gates score
 /// every engine's final labels under one shared parameter set.

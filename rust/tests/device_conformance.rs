@@ -449,6 +449,50 @@ fn pipelines_match_serial_bitwise() {
 }
 
 #[test]
+fn bp_frontier_policies_match_serial_device_bitwise() {
+    // ISSUE 10 acceptance: every frontier policy — including the
+    // fold-free relaxed ones — is part of the device contract. For
+    // each policy, every registered device must reproduce the
+    // SerialDevice run exactly: message state by bit pattern, decoded
+    // labels, and the run counters (sweeps / updated_total), because
+    // relaxed commit rules are pure functions of (position, sweep)
+    // and may not see chunking.
+    use dpp_pmrf::bp::{self, BpConfig, BpGraph, BpSchedule, BpState};
+    let prm = common::fixed_params();
+    let policies = [
+        BpSchedule::Synchronous,
+        BpSchedule::Residual,
+        BpSchedule::StaleResidual,
+        BpSchedule::Bucketed { bins: 8 },
+        BpSchedule::RandomizedSubset { p: 0.5, seed: 7 },
+    ];
+    let model = common::porous_model(23);
+    for schedule in policies {
+        let cfg = BpConfig { schedule, ..Default::default() };
+        let run_on = |dev: &dyn Device| {
+            let g = BpGraph::build(dev, &model, prm.beta);
+            let unary = bp::sweep::unaries(dev, &model, &prm);
+            let mut st =
+                BpState::new(g.num_edges(), model.num_vertices());
+            let run = bp::sweep::run(
+                dev, &model, &g, &unary, &mut st, &cfg, false, 0,
+            );
+            let (labels, _) = bp::solve(dev, &model, &prm, &cfg);
+            (bits(&st.msg), labels, run)
+        };
+        let (want_bits, want_labels, want_run) = run_on(&SerialDevice);
+        for (tag, dev) in devices() {
+            let (got_bits, got_labels, got_run) = run_on(&*dev);
+            assert_eq!(got_bits, want_bits,
+                       "{tag} {schedule:?}: message bits drifted");
+            assert_eq!(got_labels, want_labels, "{tag} {schedule:?}");
+            assert_eq!(got_run, want_run,
+                       "{tag} {schedule:?}: run counters drifted");
+        }
+    }
+}
+
+#[test]
 fn dual_ascent_matches_its_serial_oracle_bitwise() {
     // ISSUE 7 acceptance: the dual engine's DPP path — graph build,
     // belief refresh, colored edge updates, bound fold, decode — must

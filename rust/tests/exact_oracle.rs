@@ -71,6 +71,48 @@ fn every_engine_respects_the_exact_optimum() {
 }
 
 #[test]
+fn every_bp_policy_is_exact_on_trees() {
+    // Chains are trees: max-product BP converges to the exact MAP, so
+    // every frontier policy (ISSUE 10) must decode the brute-force
+    // optimum labeling — not just match its energy. Decisive
+    // observations (common::chain_model) make the optimum unique in
+    // practice, so label equality is the stronger, fair check.
+    use dpp_pmrf::bp::{self, BpConfig, BpSchedule};
+    use dpp_pmrf::dpp::Backend;
+    let prm = common::fixed_params();
+    let policies = [
+        BpSchedule::Synchronous,
+        BpSchedule::Residual,
+        BpSchedule::StaleResidual,
+        BpSchedule::Bucketed { bins: 8 },
+        BpSchedule::RandomizedSubset { p: 0.5, seed: 7 },
+    ];
+    for n in [6usize, 10, 12] {
+        for seed in SEEDS {
+            let model = common::chain_model(n, seed);
+            let (want, opt) = common::brute_force_config(&model, &prm);
+            for schedule in policies {
+                let cfg = BpConfig {
+                    schedule,
+                    max_sweeps: 400,
+                    tol: 1e-6,
+                    ..Default::default()
+                };
+                let (labels, run) =
+                    bp::solve(&Backend::Serial, &model, &prm, &cfg);
+                assert!(run.converged,
+                        "chain {n} seed {seed} {schedule:?} converged");
+                assert_eq!(labels, want,
+                           "chain {n} seed {seed} {schedule:?}");
+                let (_, e) = mrf::config_energy(&model, &labels, &prm);
+                assert_eq!(e, opt,
+                           "chain {n} seed {seed} {schedule:?} energy");
+            }
+        }
+    }
+}
+
+#[test]
 fn xla_engine_without_artifacts_fails_cleanly() {
     // The sweep above skips the XLA engine (no AOT artifacts in the
     // test environment); pin that the factory refuses it with a clear

@@ -36,23 +36,25 @@ fn keys(v: &Value) -> Vec<&str> {
 
 /// The run-level contract on a synthetic dataset (ground truth
 /// present, so the confusion metrics appear).
-const RUN_KEYS: [&str; 31] = [
-    "accuracy", "convergence", "device", "device_fused_regions",
-    "device_offload", "device_threaded", "em_iters", "engine", "exec",
-    "inflight_cap", "job_latency", "lane_occupancy", "lane_timeline",
-    "lanes", "lower_bound", "map_iters", "mean_init_secs",
-    "mean_opt_secs", "optimality_gap", "peak_inflight",
-    "pmp_acceptance", "pmp_max_marginal_energy", "pmp_particles",
-    "porosity", "precision", "queue_wait", "recall", "slice_reports",
-    "slices", "slices_per_sec", "total_secs",
+const RUN_KEYS: [&str; 33] = [
+    "accuracy", "bp_committed_frac", "bp_schedule", "convergence",
+    "device", "device_fused_regions", "device_offload",
+    "device_threaded", "em_iters", "engine", "exec", "inflight_cap",
+    "job_latency", "lane_occupancy", "lane_timeline", "lanes",
+    "lower_bound", "map_iters", "mean_init_secs", "mean_opt_secs",
+    "optimality_gap", "peak_inflight", "pmp_acceptance",
+    "pmp_max_marginal_energy", "pmp_particles", "porosity",
+    "precision", "queue_wait", "recall", "slice_reports", "slices",
+    "slices_per_sec", "total_secs",
 ];
 
 /// The per-slice row contract.
-const SLICE_KEYS: [&str; 16] = [
-    "elements", "em_iters", "final_energy", "hoods", "init_secs",
-    "lane", "lower_bound", "map_iters", "opt_secs", "optimality_gap",
-    "pmp_acceptance", "pmp_max_marginal_energy", "pmp_particles",
-    "queue_wait_secs", "regions", "z",
+const SLICE_KEYS: [&str; 18] = [
+    "bp_committed_frac", "bp_schedule", "elements", "em_iters",
+    "final_energy", "hoods", "init_secs", "lane", "lower_bound",
+    "map_iters", "opt_secs", "optimality_gap", "pmp_acceptance",
+    "pmp_max_marginal_energy", "pmp_particles", "queue_wait_secs",
+    "regions", "z",
 ];
 
 fn assert_schema(j: &Value) {
@@ -95,6 +97,43 @@ fn non_certifying_engine_reports_null_certificates() {
         assert_eq!(row.get("pmp_acceptance"), Some(&Value::Null));
         assert_eq!(row.get("pmp_max_marginal_energy"),
                    Some(&Value::Null));
+    }
+    // BP frontier fields too: pinned keys, null for non-BP engines
+    // (ISSUE 10).
+    assert_eq!(j.get("bp_schedule"), Some(&Value::Null));
+    assert_eq!(j.get("bp_committed_frac"), Some(&Value::Null));
+    for row in j.get("slice_reports").and_then(Value::as_array).unwrap() {
+        assert_eq!(row.get("bp_schedule"), Some(&Value::Null));
+        assert_eq!(row.get("bp_committed_frac"), Some(&Value::Null));
+    }
+}
+
+#[test]
+fn bp_engine_reports_schedule_and_committed_fraction() {
+    let j = report_json(EngineKind::Bp);
+    assert_schema(&j);
+    // Default frontier policy, named by its spec string at the run
+    // level (all slices agree) and per slice.
+    assert_eq!(
+        j.get("bp_schedule").and_then(Value::as_str),
+        Some("residual")
+    );
+    let frac = j
+        .get("bp_committed_frac")
+        .and_then(Value::as_f64)
+        .expect("bp run carries a committed fraction");
+    assert!((0.0..=1.0).contains(&frac), "committed fraction {frac}");
+    assert!(frac > 0.0, "some messages must commit");
+    for row in j.get("slice_reports").and_then(Value::as_array).unwrap() {
+        assert_eq!(
+            row.get("bp_schedule").and_then(Value::as_str),
+            Some("residual")
+        );
+        let f = row
+            .get("bp_committed_frac")
+            .and_then(Value::as_f64)
+            .expect("per-slice committed fraction");
+        assert!((0.0..=1.0).contains(&f), "slice fraction {f}");
     }
 }
 
